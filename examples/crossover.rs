@@ -1,0 +1,44 @@
+//! COPSIM vs COPK crossover (paper §7): under the §2.2 execution-time
+//! model `α·T + β·L + γ·BW`, COPSIM wins for small n (smaller constants)
+//! and COPK for large n (better exponent). This example measures both
+//! on the simulator across n at P = 4 — the processor count where both
+//! schemes can run — and reports the crossover, plus what the hybrid
+//! dispatcher (`choose_algorithm`) would pick from the closed-form
+//! bounds alone.
+//!
+//! Run: `cargo run --release --example crossover`
+
+use copmul::algorithms::hybrid::choose_algorithm;
+use copmul::experiments::{run_algo, Algo};
+use copmul::theory::TimeModel;
+
+fn main() -> anyhow::Result<()> {
+    let tm = TimeModel::default();
+    println!("time model: α = {} ns/op, β = {} ns/msg, γ = {} ns/word", tm.alpha_ns, tm.beta_ns, tm.gamma_ns);
+    println!(
+        "\n{:>9} {:>14} {:>14} {:>10} {:>10} {:>9} {:>11}",
+        "n", "COPSIM T", "COPK T", "sim µs", "copk µs", "winner", "bound-pred"
+    );
+    let mut crossover = None;
+    for k in 6..=14 {
+        let n = 1usize << k;
+        let ss = run_algo(Algo::CopsimMi, n, 4, None, 3)?;
+        let sk = run_algo(Algo::CopkMi, n, 4, None, 3)?;
+        let ts = tm.time_ns(&ss.clock) / 1e3;
+        let tk = tm.time_ns(&sk.clock) / 1e3;
+        let winner = if tk < ts { "COPK" } else { "COPSIM" };
+        if winner == "COPK" && crossover.is_none() {
+            crossover = Some(n);
+        }
+        let pred = choose_algorithm(n as u64, 4, u64::MAX / 4, &tm)?;
+        println!(
+            "{:>9} {:>14} {:>14} {:>10.1} {:>10.1} {:>9} {:>11}",
+            n, ss.clock.ops, sk.clock.ops, ts, tk, winner, pred.to_string()
+        );
+    }
+    match crossover {
+        Some(n) => println!("\nmeasured crossover: COPK wins from n = {n} digits"),
+        None => println!("\nno crossover in the swept range"),
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Quickstart: multiply two big integers on a simulated 16-processor
+//! distributed-memory machine with COPSIM, inspect the critical-path
+//! costs, and check them against the paper's Theorem 11 bounds.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use copmul::algorithms::{copsim_mi, SlimLeaf};
+use copmul::bignum::convert::to_hex;
+use copmul::bignum::{mul, Base, Ops};
+use copmul::metrics::fmt_u64;
+use copmul::sim::{DistInt, Machine, Seq};
+use copmul::theory;
+use copmul::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A machine: P = 16 processors, each with a private memory big
+    // enough for the MI execution mode (Theorem 11 needs 12n/sqrt(P)).
+    let (n, p) = (4096usize, 16usize);
+    let base = Base::default(); // digits in base 2^16, one per word
+    let mem = theory::thm11_copsim_mi_mem(n as u64, p as u64);
+    let mut machine = Machine::new(p, mem, base);
+    let seq = Seq::range(p);
+
+    // Two random n-digit integers, partitioned across the processors in
+    // n/P-digit chunks (the paper's balanced input layout).
+    let mut rng = Rng::new(2024);
+    let a = rng.digits(n, base.log2);
+    let b = rng.digits(n, base.log2);
+    let da = DistInt::scatter(&mut machine, &seq, &a, n / p)?;
+    let db = DistInt::scatter(&mut machine, &seq, &b, n / p)?;
+
+    // Multiply with COPSIM in the memory-independent mode; the leaves
+    // run the paper's sequential SLIM.
+    let c = copsim_mi(&mut machine, &seq, da, db, &SlimLeaf)?;
+
+    // Verify against the sequential schoolbook oracle.
+    let mut ops = Ops::default();
+    let want = mul::mul_school(&a, &b, base, &mut ops);
+    assert_eq!(c.gather(&machine), want, "product mismatch");
+    let hex = to_hex(&want, base);
+    println!("n = {n} digits (base 2^16)  P = {p}  M = {mem} words/proc");
+    println!("product: {}…{} ({} hex digits)", &hex[..16], &hex[hex.len() - 16..], hex.len());
+
+    // The measured critical-path costs vs Theorem 11.
+    let crit = machine.critical();
+    let bound = theory::thm11_copsim_mi(n as u64, p as u64);
+    println!("\n                 measured       Theorem 11 bound   ratio");
+    println!(
+        "T (digit ops)    {:>12}   {:>12}       {:.3}",
+        fmt_u64(crit.ops),
+        fmt_u64(bound.ops),
+        crit.ops as f64 / bound.ops as f64
+    );
+    println!(
+        "BW (words)       {:>12}   {:>12}       {:.3}",
+        fmt_u64(crit.words),
+        fmt_u64(bound.words),
+        crit.words as f64 / bound.words as f64
+    );
+    println!(
+        "L (messages)     {:>12}   {:>12}       {:.3}",
+        fmt_u64(crit.msgs),
+        fmt_u64(bound.msgs),
+        crit.msgs as f64 / bound.msgs as f64
+    );
+    println!(
+        "M (words/proc)   {:>12}   {:>12}       {:.3}",
+        fmt_u64(machine.mem_peak_max()),
+        fmt_u64(mem),
+        machine.mem_peak_max() as f64 / mem as f64
+    );
+    println!(
+        "\nsequential SLIM would need ~{} ops; speedup on the critical path: {:.1}x",
+        fmt_u64(theory::fact10_slim_ops(n as u64) / 4), // measured constant ~2n^2
+        (2 * n as u64 * n as u64) as f64 / crit.ops as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Strong scaling study (paper claim: "perfect strong scaling" — both
+//! computation time and bandwidth scale with 1/P when the per-processor
+//! memory scales as Θ(n/P)).
+//!
+//! Sweeps P at fixed n for both COPSIM (main mode, M = 80n/P) and COPK
+//! (main mode, M = 40n/P) and prints the normalized columns that must
+//! stay flat, plus the baselines for contrast.
+//!
+//! Run: `cargo run --release --example strong_scaling`
+
+use copmul::experiments::{run_algo, Algo};
+use copmul::metrics::fmt_u64;
+
+fn main() -> anyhow::Result<()> {
+    let n = 1usize << 12;
+    println!("== COPSIM, n = {n}, M = 80n/P ==");
+    println!("{:>5} {:>9} {:>12} {:>10} {:>12} {:>10} {:>7}", "P", "M", "T", "T*P/n^2", "BW", "BW*MP/n^2", "L");
+    for &p in &[4usize, 16, 64, 256] {
+        let m = (80 * n / p) as u64;
+        let s = run_algo(Algo::CopsimMain, n, p, Some(m), 1)?;
+        println!(
+            "{:>5} {:>9} {:>12} {:>10.3} {:>12} {:>10.3} {:>7}",
+            p,
+            fmt_u64(m),
+            fmt_u64(s.clock.ops),
+            s.clock.ops as f64 * p as f64 / (n * n) as f64,
+            fmt_u64(s.clock.words),
+            s.clock.words as f64 * m as f64 * p as f64 / (n * n) as f64,
+            s.clock.msgs,
+        );
+    }
+
+    let n = 10368usize;
+    println!("\n== COPK, n = {n}, M = 40n/P ==");
+    println!("{:>5} {:>9} {:>12} {:>12} {:>12} {:>7}", "P", "M", "T", "T*P/n^lg3", "BW", "L");
+    for &p in &[4usize, 12, 36, 108] {
+        let m = (40 * n / p) as u64;
+        let s = run_algo(Algo::CopkMain, n, p, Some(m), 1)?;
+        println!(
+            "{:>5} {:>9} {:>12} {:>12.3} {:>12} {:>7}",
+            p,
+            fmt_u64(m),
+            fmt_u64(s.clock.ops),
+            s.clock.ops as f64 * p as f64 / copmul::util::pow_log2_3(n as f64),
+            fmt_u64(s.clock.words),
+            s.clock.msgs,
+        );
+    }
+
+    let n = 1usize << 12;
+    println!("\n== Baseline contrast at n = {n} (critical-path T: Cesari-Maeder plateaus) ==");
+    println!("{:>22} {:>5} {:>12} {:>12} {:>9}", "algorithm", "P", "T", "BW", "peak M");
+    for &p in &[4usize, 16, 64] {
+        let s = run_algo(Algo::CesariMaeder, n, p, None, 1)?;
+        println!(
+            "{:>22} {:>5} {:>12} {:>12} {:>9}",
+            "Cesari-Maeder",
+            p,
+            fmt_u64(s.clock.ops),
+            fmt_u64(s.clock.words),
+            fmt_u64(s.mem_peak)
+        );
+    }
+    for &p in &[4usize, 16, 64] {
+        let s = run_algo(Algo::CopsimMain, n, p, Some((80 * n / p) as u64), 1)?;
+        println!(
+            "{:>22} {:>5} {:>12} {:>12} {:>9}",
+            "COPSIM",
+            p,
+            fmt_u64(s.clock.ops),
+            fmt_u64(s.clock.words),
+            fmt_u64(s.mem_peak)
+        );
+    }
+    Ok(())
+}

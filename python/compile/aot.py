@@ -1,0 +1,104 @@
+"""AOT lowering: JAX models -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the
+published ``xla`` Rust crate) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``.hlo.txt`` per (entry, batch, K) in the artifact matrix plus
+``manifest.json`` describing them for ``runtime::artifacts`` on the Rust
+side.  Python never runs again after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (entry kind, batch, K-digits) matrix compiled into artifacts/.
+# K=256 base-256 digits = 2048-bit leaf operands; B=8 is the
+# coordinator's default dynamic-batching width.
+DEFAULT_MATRIX = [
+    ("school", 1, 64),
+    ("school", 8, 64),
+    ("school", 1, 128),
+    ("school", 8, 128),
+    ("school", 1, 256),
+    ("school", 8, 256),
+    ("school", 1, 1024),
+    ("karatsuba", 1, 256),
+    ("karatsuba", 8, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps with ``to_tuple1``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(kind: str, batch: int, k: int) -> str:
+    return f"mul_{kind}_b{batch}_k{k}.hlo.txt"
+
+
+def build(out_dir: str, matrix=None) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for kind, batch, k in matrix or DEFAULT_MATRIX:
+        lowered = model.lowered(kind, batch, k)
+        text = to_hlo_text(lowered)
+        name = artifact_name(kind, batch, k)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "file": name,
+                "entry": kind,
+                "batch": batch,
+                "k": k,
+                "base_log2": model.BASE_LOG2,
+                "bytes": len(text),
+            }
+        )
+        print(f"wrote {path} ({len(text)} bytes)")
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "int32",
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(entries)} artifacts)")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="only the smallest artifact (CI smoke)",
+    )
+    args = ap.parse_args()
+    matrix = [DEFAULT_MATRIX[0]] if args.quick else DEFAULT_MATRIX
+    build(args.out_dir, matrix)
+
+
+if __name__ == "__main__":
+    main()

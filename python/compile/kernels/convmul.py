@@ -1,0 +1,91 @@
+"""L1 — Pallas digit-convolution kernel.
+
+The compute hot-spot of the leaf schoolbook multiply is the digit
+convolution  ``c[k] = sum_{i+j=k} a[i] * b[j]``  over base-256 digit
+vectors (int32 lanes).  This kernel computes it blocked:
+
+* the grid ranges over output blocks of ``BK`` digits;
+* for each output block the kernel loops over the input blocks of ``a``
+  and gathers the matching window of ``b`` as a ``BK x BK`` Toeplitz
+  slice, reducing it with an einsum — i.e. each (output-block,
+  input-block) pair is one small mat-vec, which is exactly the schedule
+  an MXU systolic pass would execute for the Toeplitz-matrix formulation
+  of convolution (see DESIGN.md §Hardware-Adaptation).
+
+Digits are *signed* int32 on purpose: the L2 Karatsuba variant feeds the
+kernel digit-wise differences (a0-a1), whose convolution is still exact
+in int32 for K <= 2^15 (|conv| <= K * 255^2 < 2^31).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowering inlines the kernel into plain HLO,
+which is what the AOT artifact ships.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output-block width. 128 int32 lanes = one 512-byte VMEM row
+# per operand block; the BK x BK gather window is 64 KiB — comfortably
+# inside a TPU core's ~16 MiB VMEM with double buffering.
+DEFAULT_BLOCK = 128
+
+
+def _conv_block_kernel(a_ref, b_ref, o_ref, *, k: int, bk: int):
+    """Compute one BK-wide block of the full 2K-digit convolution."""
+    ob = pl.program_id(0)
+    t = ob * bk + jax.lax.iota(jnp.int32, bk)  # global output indices
+    acc = jnp.zeros((bk,), jnp.int32)
+
+    def body(ib, acc):
+        # a block [ib*bk, (ib+1)*bk)
+        a_blk = jax.lax.dynamic_slice(a_ref[...], (ib * bk,), (bk,))
+        i = ib * bk + jax.lax.iota(jnp.int32, bk)
+        # j[t_row, i_col] = t - i  (index into b), masked to [0, K)
+        j = t[:, None] - i[None, :]
+        valid = (j >= 0) & (j < k)
+        jc = jnp.clip(j, 0, k - 1)
+        b_win = jnp.where(valid, b_ref[...][jc], 0)
+        # One BK x BK mat-vec per (output, input) block pair.
+        return acc + jnp.einsum(
+            "ti,i->t", b_win, a_blk, preferred_element_type=jnp.int32
+        )
+
+    acc = jax.lax.fori_loop(0, k // bk, body, acc)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def conv_digits(a: jax.Array, b: jax.Array, *, block: int | None = None) -> jax.Array:
+    """Full convolution of two length-K int32 digit vectors -> length 2K.
+
+    (The true convolution has 2K-1 entries; entry 2K-1 is identically
+    zero and kept for power-of-two alignment.)
+    """
+    (k,) = a.shape
+    assert b.shape == (k,), f"shape mismatch {a.shape} vs {b.shape}"
+    bk = min(block or DEFAULT_BLOCK, k)
+    assert k % bk == 0, f"K={k} must be a multiple of the block {bk}"
+    kernel = functools.partial(_conv_block_kernel, k=k, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(2 * k // bk,),
+        in_specs=[
+            # Whole operands resident per grid step (K int32 = 4K bytes;
+            # the HBM->VMEM schedule is expressed by the output BlockSpec).
+            pl.BlockSpec((k,), lambda ob: (0,)),
+            pl.BlockSpec((k,), lambda ob: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bk,), lambda ob: (ob,)),
+        out_shape=jax.ShapeDtypeStruct((2 * k,), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def conv_digits_batched(a: jax.Array, b: jax.Array, *, block: int | None = None) -> jax.Array:
+    """vmap of :func:`conv_digits` over a leading batch axis."""
+    return jax.vmap(lambda x, y: conv_digits(x, y, block=block))(a, b)

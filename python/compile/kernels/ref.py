@@ -1,0 +1,61 @@
+"""Pure reference oracles for the L1 kernel and the L2 models.
+
+Two layers of truth:
+
+* :func:`ref_conv` — pure ``jnp.convolve`` digit convolution (the
+  "pure-jnp oracle" the Pallas kernel is tested against).
+* :func:`ref_mul_digits` / :func:`ref_mul_int` — exact big-integer
+  products via Python arbitrary-precision ints, independent of JAX
+  entirely (the oracle the whole model is tested against).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BASE = 256
+
+
+def ref_conv(a, b):
+    """Full digit convolution, padded to 2K entries (pure jnp)."""
+    c = jnp.convolve(jnp.asarray(a, jnp.int32), jnp.asarray(b, jnp.int32))
+    return jnp.pad(c, (0, 2 * len(a) - len(c))).astype(jnp.int32)
+
+
+def digits_to_int(digits, base: int = BASE) -> int:
+    """LSB-first digit vector -> Python int (exact)."""
+    v = 0
+    for d in reversed(list(np.asarray(digits, dtype=np.int64))):
+        v = v * base + int(d)
+    return v
+
+
+def int_to_digits(v: int, width: int, base: int = BASE) -> np.ndarray:
+    """Python int -> LSB-first digit vector of exactly ``width`` digits."""
+    out = np.zeros(width, dtype=np.int32)
+    for i in range(width):
+        out[i] = v % base
+        v //= base
+    assert v == 0, "value does not fit in the requested width"
+    return out
+
+
+def ref_mul_digits(a, b, base: int = BASE) -> np.ndarray:
+    """Exact product of two K-digit vectors as a 2K-digit vector."""
+    k = len(a)
+    prod = digits_to_int(a, base) * digits_to_int(b, base)
+    return int_to_digits(prod, 2 * k, base)
+
+
+def carry_normalize_ref(conv, base: int = BASE) -> np.ndarray:
+    """Exact carry propagation of raw convolution sums (python ints,
+    overflow-proof)."""
+    out = np.zeros(len(conv), dtype=np.int32)
+    carry = 0
+    for i, v in enumerate(np.asarray(conv, dtype=np.int64)):
+        t = int(v) + carry
+        out[i] = t % base
+        carry = t // base
+    assert carry == 0, f"residual carry {carry}"
+    return out

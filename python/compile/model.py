@@ -1,0 +1,106 @@
+"""L2 — JAX model: batched big-integer products over base-256 digits.
+
+Two compute graphs, both calling the L1 Pallas kernel
+(:mod:`compile.kernels.convmul`) and both AOT-lowered by
+:mod:`compile.aot` for the Rust runtime:
+
+* :func:`mul_school_batched` — one full-width digit convolution per
+  pair, then carry normalization (a ``lax.scan``): the leaf SLIM
+  product.
+* :func:`mul_karatsuba_batched` — one level of Karatsuba *inside the
+  graph*, mirroring the paper's recursion step: three half-width kernel
+  convolutions (on signed digit differences — no abs/sign bookkeeping
+  is needed at this layer because convolution is bilinear and int32
+  digits are signed), recombined and carry-normalized once.
+
+Shapes are static per artifact: ``int32[B, K] x int32[B, K] ->
+int32[B, 2K]`` with digits in ``[0, 256)`` (LSB first).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.convmul import conv_digits, conv_digits_batched
+
+BASE_LOG2 = 8
+BASE = 1 << BASE_LOG2
+
+
+def carry_normalize(conv: jax.Array) -> jax.Array:
+    """Propagate carries over raw convolution sums (batched, exact).
+
+    ``conv`` is int32[B, 2K] with entries < 2^31; the scan carries an
+    int32 per batch lane (carry <= max_conv / 255 stays well inside
+    int32).
+    """
+
+    def step(carry, col):
+        t = col + carry
+        return t >> BASE_LOG2, t & (BASE - 1)
+
+    # Scan over the digit axis; batch rides along in the carry/slice.
+    carry0 = jnp.zeros(conv.shape[0], jnp.int32)
+    _, digits = jax.lax.scan(step, carry0, conv.T)
+    return digits.T
+
+
+def mul_school(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Single-pair product: conv kernel + carry normalization."""
+    conv = conv_digits(a, b)
+    return carry_normalize(conv[None, :])[0]
+
+
+@jax.jit
+def mul_school_batched(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched leaf product via one full-width kernel convolution."""
+    conv = conv_digits_batched(a, b)
+    return carry_normalize(conv)
+
+
+@jax.jit
+def mul_karatsuba_batched(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched product with one in-graph Karatsuba level (paper §6).
+
+    ``c = c0 + s^(K/2)·(c0 + c2 + conv(a0-a1, b1-b0)) + s^K·c2``
+    assembled on the raw convolution sums (bilinearity keeps everything
+    exact in signed int32), then carry-normalized once.
+    """
+    batch, k = a.shape
+    assert k % 2 == 0, "Karatsuba level needs even K"
+    h = k // 2
+    a0, a1 = a[:, :h], a[:, h:]
+    b0, b1 = b[:, :h], b[:, h:]
+
+    c0 = conv_digits_batched(a0, b0)            # int32[B, K]
+    c2 = conv_digits_batched(a1, b1)
+    cx = conv_digits_batched(a0 - a1, b1 - b0)  # signed cross term
+    c1 = c0 + c2 + cx                           # = conv(a0,b1) + conv(a1,b0)
+
+    conv = jnp.zeros((batch, 2 * k), jnp.int32)
+    conv = conv.at[:, :k].add(c0)
+    conv = conv.at[:, h : h + k].add(c1)
+    conv = conv.at[:, k : 2 * k].add(c2)
+    return carry_normalize(conv)
+
+
+def entry(kind: str):
+    """AOT entry point by name (static shape specialization happens at
+    lowering time in :mod:`compile.aot`)."""
+    return {
+        "school": mul_school_batched,
+        "karatsuba": mul_karatsuba_batched,
+    }[kind]
+
+
+@functools.lru_cache(maxsize=None)
+def lowered(kind: str, batch: int, k: int):
+    """Lower an entry for static (batch, K); returns the jax Lowered."""
+    spec = jax.ShapeDtypeStruct((batch, k), jnp.int32)
+    fn = entry(kind)
+    # Tuple return for a stable rust-side unwrap (see aot.py).
+    wrapped = jax.jit(lambda x, y: (fn(x, y),))
+    return wrapped.lower(spec, spec)

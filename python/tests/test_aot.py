@@ -1,0 +1,35 @@
+"""AOT path: lowering to HLO text and the artifact manifest."""
+
+import json
+import os
+
+from compile import aot, model
+
+
+def test_lower_school_to_hlo_text():
+    lowered = model.lowered("school", 1, 64)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "s32[" in text  # int32 tensors present
+    # The kernel convolution must have been inlined (interpret mode):
+    # no Mosaic/custom-call the CPU client could not execute.
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+def test_lower_karatsuba_to_hlo_text():
+    lowered = model.lowered("karatsuba", 2, 64)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+
+
+def test_build_writes_manifest(tmp_path):
+    out = str(tmp_path / "artifacts")
+    entries = aot.build(out, matrix=[("school", 1, 32), ("karatsuba", 1, 32)])
+    assert len(entries) == 2
+    manifest = json.load(open(os.path.join(out, "manifest.json")))
+    assert manifest["format"] == "hlo-text"
+    for e in manifest["artifacts"]:
+        p = os.path.join(out, e["file"])
+        assert os.path.exists(p)
+        assert os.path.getsize(p) > 0
+        assert e["base_log2"] == 8

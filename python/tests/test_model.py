@@ -1,0 +1,68 @@
+"""L2 correctness: batched school/Karatsuba models vs exact oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ref_mul_digits
+
+
+def rand_pairs(seed, batch, k):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 256, size=(batch, k), dtype=np.int32)
+    b = rng.integers(0, 256, size=(batch, k), dtype=np.int32)
+    return a, b
+
+
+@pytest.mark.parametrize("batch,k", [(1, 64), (3, 128), (8, 256)])
+def test_school_exact(batch, k):
+    a, b = rand_pairs(batch * 1000 + k, batch, k)
+    got = np.asarray(model.mul_school_batched(a, b))
+    assert got.shape == (batch, 2 * k)
+    for i in range(batch):
+        np.testing.assert_array_equal(got[i], ref_mul_digits(a[i], b[i]))
+
+
+@pytest.mark.parametrize("batch,k", [(1, 64), (4, 256)])
+def test_karatsuba_exact(batch, k):
+    a, b = rand_pairs(batch * 7 + k, batch, k)
+    got = np.asarray(model.mul_karatsuba_batched(a, b))
+    for i in range(batch):
+        np.testing.assert_array_equal(got[i], ref_mul_digits(a[i], b[i]))
+
+
+def test_karatsuba_equals_school():
+    a, b = rand_pairs(42, 6, 128)
+    s = np.asarray(model.mul_school_batched(a, b))
+    kk = np.asarray(model.mul_karatsuba_batched(a, b))
+    np.testing.assert_array_equal(s, kk)
+
+
+def test_edge_values():
+    # all-max digits (worst-case carries) and tiny values.
+    k = 128
+    ff = np.full((1, k), 255, dtype=np.int32)
+    one = np.zeros((1, k), dtype=np.int32)
+    one[0, 0] = 1
+    got = np.asarray(model.mul_school_batched(ff, ff))[0]
+    np.testing.assert_array_equal(got, ref_mul_digits(ff[0], ff[0]))
+    got = np.asarray(model.mul_karatsuba_batched(ff, one))[0]
+    np.testing.assert_array_equal(got, ref_mul_digits(ff[0], one[0]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k_log=st.integers(min_value=4, max_value=8),
+    batch=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_model_hypothesis_sweep(k_log, batch, seed):
+    k = 1 << k_log
+    a, b = rand_pairs(seed, batch, k)
+    s = np.asarray(model.mul_school_batched(a, b))
+    kk = np.asarray(model.mul_karatsuba_batched(a, b))
+    for i in range(batch):
+        want = ref_mul_digits(a[i], b[i])
+        np.testing.assert_array_equal(s[i], want)
+        np.testing.assert_array_equal(kk[i], want)

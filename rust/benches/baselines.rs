@@ -1,0 +1,32 @@
+//! Bench: baselines vs the paper's algorithms at matched (n, P)
+//! (E12 wallclock side) — also prints the simulated-communication
+//! contrast that is the paper's core claim.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{report, time_it, ITERS, WARMUP};
+
+use copmul::experiments::{run_algo, Algo};
+
+fn main() {
+    println!("== baselines bench (E12) ==");
+    let (p, n) = (64usize, 1usize << 12);
+    for (name, algo) in [
+        ("copsim_mi", Algo::CopsimMi),
+        ("allgather", Algo::Allgather),
+        ("cesari_maeder", Algo::CesariMaeder),
+    ] {
+        let stats = run_algo(algo, n, p, None, 1).unwrap();
+        let (min, mean) = time_it(WARMUP, ITERS, || run_algo(algo, n, p, None, 1).unwrap());
+        report(
+            "baselines",
+            &format!("{name} p={p} n={n}"),
+            min,
+            mean,
+            &format!(
+                "(T={} BW={} L={} Mpeak={})",
+                stats.clock.ops, stats.clock.words, stats.clock.msgs, stats.mem_peak
+            ),
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! Shared micro-bench harness (criterion is not vendored offline).
+//!
+//! Included by each bench binary via `#[path] mod`. Reports min / mean
+//! wallclock over a fixed iteration count after warmup, in a stable
+//! one-line-per-case format that `make bench` tees into
+//! bench_output.txt.
+
+use std::time::{Duration, Instant};
+
+/// Time `f` with `warmup` + `iters` runs; returns (min, mean).
+pub fn time_it<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> (Duration, Duration) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut total = Duration::ZERO;
+    let mut min = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed();
+        total += dt;
+        min = min.min(dt);
+    }
+    (min, total / iters as u32)
+}
+
+/// Print a bench row: `bench-name  case  min  mean [extra]`.
+pub fn report(bench: &str, case: &str, min: Duration, mean: Duration, extra: &str) {
+    println!("{bench:28} {case:36} min={min:>12?} mean={mean:>12?} {extra}");
+}
+
+/// Standard iteration counts tuned so each bench binary finishes in a
+/// few seconds.
+pub const WARMUP: usize = 2;
+pub const ITERS: usize = 5;

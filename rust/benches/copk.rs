@@ -1,0 +1,48 @@
+//! Bench: COPK (E6/E7 wallclock side) — MI mode across (n, P) and the
+//! main (DFS) mode under the Theorem 15 memory floor, plus the
+//! COPK-vs-COPSIM critical-path ops ratio (the Karatsuba win).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{report, time_it, ITERS, WARMUP};
+
+use copmul::experiments::{run_algo, Algo};
+
+fn main() {
+    println!("== copk bench (E6: MI mode / E7: main mode) ==");
+    for &(p, n) in &[
+        (4usize, 1024usize),
+        (12, 3072),
+        (36, 4608),
+        (108, 10368),
+    ] {
+        let stats = run_algo(Algo::CopkMi, n, p, None, 1).unwrap();
+        let (min, mean) = time_it(WARMUP, ITERS, || {
+            run_algo(Algo::CopkMi, n, p, None, 1).unwrap()
+        });
+        report(
+            "copk_mi",
+            &format!("p={p} n={n}"),
+            min,
+            mean,
+            &format!("(T={})", stats.clock.ops),
+        );
+    }
+    for &(p, n) in &[(108usize, 5184usize)] {
+        let m = (40 * n / p) as u64;
+        let (min, mean) = time_it(WARMUP, ITERS, || {
+            run_algo(Algo::CopkMain, n, p, Some(m), 1).unwrap()
+        });
+        report("copk_main", &format!("p={p} n={n} M={m}"), min, mean, "");
+    }
+    // Karatsuba vs schoolbook critical-path ops at matched size.
+    let n = 4096;
+    let sk = run_algo(Algo::CopkMi, n, 4, None, 2).unwrap();
+    let ss = run_algo(Algo::CopsimMi, n, 4, None, 2).unwrap();
+    println!(
+        "copk vs copsim ops @ n={n}, P=4: {} vs {} ({:.2}x fewer)",
+        sk.clock.ops,
+        ss.clock.ops,
+        ss.clock.ops as f64 / sk.clock.ops as f64
+    );
+}

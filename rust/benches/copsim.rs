@@ -1,0 +1,40 @@
+//! Bench: COPSIM (E4/E5 wallclock side) — MI mode across (n, P) and the
+//! main (DFS) mode under the Theorem 12 memory floor. The reported
+//! `ns/simulated-op` column is the simulator-overhead figure tracked in
+//! EXPERIMENTS.md §Perf.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{report, time_it, ITERS, WARMUP};
+
+use copmul::experiments::{run_algo, Algo};
+
+fn main() {
+    println!("== copsim bench (E4: MI mode / E5: main mode) ==");
+    for &(p, n) in &[
+        (4usize, 1usize << 10),
+        (16, 1 << 12),
+        (64, 1 << 14),
+        (256, 1 << 14),
+    ] {
+        let stats = run_algo(Algo::CopsimMi, n, p, None, 1).unwrap();
+        let (min, mean) = time_it(WARMUP, ITERS, || {
+            run_algo(Algo::CopsimMi, n, p, None, 1).unwrap()
+        });
+        let per_op = mean.as_nanos() as f64 / stats.total_ops as f64;
+        report(
+            "copsim_mi",
+            &format!("p={p} n={n}"),
+            min,
+            mean,
+            &format!("({per_op:.1} ns/sim-op, T={})", stats.clock.ops),
+        );
+    }
+    for &(p, n) in &[(64usize, 1usize << 12), (256, 1 << 13)] {
+        let m = (80 * n / p) as u64;
+        let (min, mean) = time_it(WARMUP, ITERS, || {
+            run_algo(Algo::CopsimMain, n, p, Some(m), 1).unwrap()
+        });
+        report("copsim_main", &format!("p={p} n={n} M={m}"), min, mean, "");
+    }
+}

@@ -1,0 +1,90 @@
+//! Bench: coordinator serving throughput across leaf backends —
+//! pure-Rust SKIM vs the XLA artifact vs the dynamically batched XLA
+//! artifact (the §Perf headline table).
+
+#[path = "bench_util.rs"]
+#[allow(dead_code)]
+mod bench_util;
+use bench_util::report;
+
+use copmul::algorithms::leaf::{LeafMultiplier, SkimLeaf};
+use copmul::bignum::Base;
+use copmul::coordinator::{BatchingXlaLeaf, Coordinator, CoordinatorConfig, JobSpec};
+use copmul::runtime::{XlaLeaf, XlaRuntime};
+use copmul::util::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn serve(leaf: Arc<dyn LeafMultiplier + Send + Sync>, jobs: usize, n: usize) -> (f64, u64) {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 4,
+            base: Base::default(),
+            ..Default::default()
+        },
+        leaf,
+    );
+    let mut rng = Rng::new(0xBE);
+    let t0 = Instant::now();
+    let pending: Vec<_> = (0..jobs as u64)
+        .map(|id| {
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            coord.submit(spec)
+        })
+        .collect();
+    let mut p99 = Vec::with_capacity(jobs);
+    for rx in pending {
+        let r = rx.recv().unwrap().unwrap();
+        p99.push(r.wall.as_micros() as u64);
+    }
+    let wall = t0.elapsed();
+    p99.sort_unstable();
+    let p99v = p99[(0.99 * (p99.len() - 1) as f64) as usize];
+    coord.shutdown();
+    (jobs as f64 / wall.as_secs_f64(), p99v)
+}
+
+fn main() {
+    println!("== end-to-end coordinator bench (jobs/s, 2048-bit operands) ==");
+    let (jobs, n) = (96usize, 128usize);
+
+    let (tput, p99) = serve(Arc::new(SkimLeaf), jobs, n);
+    report(
+        "e2e",
+        "leaf=skim (pure rust)",
+        std::time::Duration::ZERO,
+        std::time::Duration::ZERO,
+        &format!("{tput:.1} jobs/s p99={p99}µs"),
+    );
+
+    match XlaRuntime::new("artifacts") {
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            rt.precompile("school").unwrap(); // hide compile latency
+            let (tput, p99) = serve(Arc::new(XlaLeaf::new(Arc::clone(&rt), "school")), jobs, n);
+            report(
+                "e2e",
+                "leaf=xla (unbatched)",
+                std::time::Duration::ZERO,
+                std::time::Duration::ZERO,
+                &format!("{tput:.1} jobs/s p99={p99}µs"),
+            );
+            let leaf = Arc::new(BatchingXlaLeaf::new(rt, "school"));
+            let (tput, p99) = serve(Arc::clone(&leaf) as _, jobs, n);
+            report(
+                "e2e",
+                "leaf=xla-batched",
+                std::time::Duration::ZERO,
+                std::time::Duration::ZERO,
+                &format!(
+                    "{tput:.1} jobs/s p99={p99}µs mean-batch={:.2}",
+                    leaf.stats.mean_batch()
+                ),
+            );
+        }
+        Err(e) => println!("xla benches skipped: {e}"),
+    }
+}

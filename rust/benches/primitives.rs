@@ -1,0 +1,48 @@
+//! Bench: §4 primitives (E1-E3 wallclock side) — simulator throughput
+//! of SUM / COMPARE / DIFF across processor counts.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+use bench_util::{report, time_it, ITERS, WARMUP};
+
+use copmul::bignum::Base;
+use copmul::primitives::{compare, diff, sum};
+use copmul::sim::{DistInt, Machine, Seq};
+use copmul::util::Rng;
+
+fn main() {
+    println!("== primitives bench (simulated SUM/COMPARE/DIFF; E1-E3) ==");
+    for &(p, n) in &[(4usize, 1usize << 14), (64, 1 << 16), (256, 1 << 18)] {
+        for which in ["sum", "compare", "diff"] {
+            let (min, mean) = time_it(WARMUP, ITERS, || {
+                let base = Base::new(16);
+                let mut rng = Rng::new(9);
+                let mut m = Machine::unbounded(p, base);
+                let seq = Seq::range(p);
+                let a = rng.digits(n, 16);
+                let b = rng.digits(n, 16);
+                let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+                let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+                match which {
+                    "sum" => {
+                        sum(&mut m, &seq, &da, &db).unwrap();
+                    }
+                    "compare" => {
+                        compare(&mut m, &seq, &da, &db).unwrap();
+                    }
+                    _ => {
+                        diff(&mut m, &seq, &da, &db).unwrap();
+                    }
+                }
+                m.critical()
+            });
+            report(
+                "primitives",
+                &format!("{which} p={p} n={n}"),
+                min,
+                mean,
+                "",
+            );
+        }
+    }
+}

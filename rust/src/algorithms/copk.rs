@@ -1,0 +1,439 @@
+//! COPK — Communication-Optimal Parallel Karatsuba (paper §6).
+//!
+//! Karatsuba's three-product scheme
+//! `C = C0 + s^(n/2)·C1 + s^n·C2` with `C0 = A0·B0`, `C2 = A1·B1`,
+//! `C1 = C0 + C2 + f_A·f_B·C'`, `C' = |A0−A1|·|B1−B0|`,
+//! where `f_A, f_B` are the sign flags produced by the parallel DIFF.
+//!
+//! * **MI mode** ([`copk_mi`], §6.1): `|P| = 4·3^i`. Each BFS level
+//!   computes the operand differences with DIFF on the two halves,
+//!   splits the processors into three groups (`seq.copk_groups()`), and
+//!   recurses in parallel; the `|P| = 4` base case runs the three
+//!   subproducts on single processors (`P[3]` assists only in the
+//!   recombination, exactly as the paper uses 3 of the 4 processors).
+//!   Theorem 14: `T ≤ 173·n^lg3/P`, `BW ≤ 174·n/P^(log₃2)`,
+//!   `L ≤ 25·log₂²P`, memory `10n/P^(log₃2)`.
+//! * **Main mode** ([`copk`], §6.2): while `n > M·P^(log₃2)/10`, a
+//!   depth-first step computes `C0`, `C2`, then the differences, then
+//!   `C'` — each sequentially on all `P` processors (interleaved
+//!   re-ranking, halved chunk width) — and recombines. Theorem 15:
+//!   `T ≤ 675·n^lg3/P`, `BW ≤ 1708·(n/M)^lg3·M/P`, requiring
+//!   `M ≥ 40n/P` and `M ≥ log₂P`.
+//!
+//! Recombination: the high `3n/2` digits of `C` are
+//! `C0≫n/2 + C0 + C2 + f_A·f_B·C' + C2≪n/2`, computed with four SUMs
+//! (or three SUMs and one DIFF when the cross term is negative) on
+//! `P* = seq[P/4..P]`, ordered so every partial sum stays in
+//! `[0, s^(3n/2))` (the paper's ⌈3/s⌉ top-digit bookkeeping is avoided
+//! by applying `±C'` before the `C2≪n/2` term).
+
+use super::leaf::LeafMultiplier;
+use super::leaf_multiply;
+use crate::primitives::{diff, sum};
+use crate::sim::{DistInt, Machine, Seq};
+use crate::util::{is_copk_procs, pow_log3_2};
+use anyhow::{ensure, Result};
+
+/// Karatsuba recombination (see module docs). Each of `c0`, `cp`, `c2`
+/// holds `n = |seq|·w` digits (any layout); result is `2n` digits on
+/// `seq` with chunk width `2w`. `sign = f_A·f_B ∈ {-1, 0, 1}`.
+pub(crate) fn recompose_karatsuba(
+    m: &mut Machine,
+    seq: &Seq,
+    c0: DistInt,
+    cp: DistInt,
+    sign: i32,
+    c2: DistInt,
+    w: usize,
+) -> Result<DistInt> {
+    let p = seq.len();
+    let w2 = 2 * w;
+    let lo_half = seq.lower_half();
+    let hi_half = seq.upper_half();
+    let mid = Seq(seq.ids()[p / 4..3 * p / 4].to_vec());
+    let pstar = Seq(seq.ids()[p / 4..].to_vec());
+
+    // Redistribute: C0 -> P', C2 -> P'', C' -> middle.
+    let c0 = c0.repartition(m, &lo_half, w2)?;
+    let c2 = c2.repartition(m, &hi_half, w2)?;
+    let cp = cp.repartition(m, &mid, w2)?;
+
+    // C0's low n/2 digits are final.
+    let (c0_lo, c0_hi) = c0.split_half();
+
+    // 3n/2-digit summands over P*:
+    //   X0  = C0 >> n/2          (high half of C0)
+    //   XC0 = C0                 (the C0 term inside C1; needs a copy —
+    //                             paper step 8: "P[0] sends P[1] a copy")
+    //   XC2 = C2                 (the C2 term inside C1; copy)
+    //   XCP = ±C'                (the cross term)
+    //   X3  = C2 << n/2
+    let x0 = c0_hi.extend_zero(m, &seq.ids()[p / 2..])?;
+    let xc0 = {
+        // The full C0 value currently lives on the lower half (c0_lo ++
+        // the low p/4 chunks of x0); copy it onto `mid` for the P* sums.
+        let view = DistInt {
+            chunk_width: c0_lo.chunk_width,
+            chunks: c0_lo
+                .chunks
+                .iter()
+                .chain(x0.chunks[..p / 4].iter())
+                .copied()
+                .collect(),
+        };
+        let moved = view.copy_to(m, &mid, w2)?;
+        moved.extend_zero(m, &seq.ids()[3 * p / 4..])?
+    };
+    let xc2 = {
+        let moved = c2.copy_to(m, &mid, w2)?;
+        moved.extend_zero(m, &seq.ids()[3 * p / 4..])?
+    };
+    let xcp = cp.extend_zero(m, &seq.ids()[3 * p / 4..])?;
+    let x3 = c2.prepend_zero(m, &seq.ids()[p / 4..p / 2])?;
+
+    // Ordered accumulation; every partial stays in [0, s^(3n/2)).
+    let (s1, v1) = sum(m, &pstar, &x0, &xc0)?;
+    ensure!(v1 == 0, "recompose_k: carry in X0+XC0");
+    let (s2, v2) = sum(m, &pstar, &s1, &xc2)?;
+    ensure!(v2 == 0, "recompose_k: carry in +XC2");
+    s1.free(m);
+    let s3 = match sign {
+        1 => {
+            let (s, v) = sum(m, &pstar, &s2, &xcp)?;
+            ensure!(v == 0, "recompose_k: carry in +C'");
+            s2.free(m);
+            s
+        }
+        -1 => {
+            let (s, f) = diff(m, &pstar, &s2, &xcp)?;
+            ensure!(f >= 0, "recompose_k: C1 partial went negative");
+            s2.free(m);
+            s
+        }
+        _ => s2, // C' = 0
+    };
+    let (s4, v4) = sum(m, &pstar, &s3, &x3)?;
+    ensure!(v4 == 0, "recompose_k: carry in +C2<<n/2");
+    s3.free(m);
+
+    // Release summand scaffolding (x0/xcp/x3 wrap the original
+    // c0_hi/cp/c2 chunks plus zero padding; xc0/xc2 are copies).
+    x0.free(m);
+    xc0.free(m);
+    xc2.free(m);
+    xcp.free(m);
+    x3.free(m);
+
+    Ok(DistInt::concat(c0_lo, s4))
+}
+
+/// COPK in the MI execution mode (§6.1). Consumes `a`, `b`
+/// (`n = |seq|·w` digits partitioned in `seq`, `|P| = 4·3^i` or 1);
+/// returns the `2n`-digit product on `seq` in `2w`-digit chunks.
+pub fn copk_mi(
+    m: &mut Machine,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &dyn LeafMultiplier,
+) -> Result<DistInt> {
+    let p = seq.len();
+    assert!(
+        p == 1 || is_copk_procs(p as u64),
+        "COPK_MI requires |P| = 4·3^i (got {p})"
+    );
+    assert_eq!(a.total_width(), b.total_width());
+    let w = a.chunk_width;
+
+    if p == 1 {
+        return leaf_multiply(m, seq.at(0), a, b, leaf);
+    }
+
+    let lo_half = seq.lower_half();
+    let hi_half = seq.upper_half();
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+
+    // --- Differences (phase 1a / base steps 1-3) ----------------------
+    // A' = |A0 - A1| with flag f_A on the lower half; B' = |B1 - B0|
+    // with f_B on the upper half (one replicated copy each).
+    let a1rep = a1.replicate(m, &lo_half)?;
+    let (adiff, fa) = diff(m, &lo_half, &a0, &a1rep)?;
+    a1rep.free(m);
+    let b0rep = b0.replicate(m, &hi_half)?;
+    let (bdiff, fb) = diff(m, &hi_half, &b1, &b0rep)?;
+    b0rep.free(m);
+    let sign = fa * fb;
+
+    if p == 4 {
+        // --- Base case: three single-processor products ----------------
+        let s0 = Seq(vec![seq.at(0)]);
+        let s1 = Seq(vec![seq.at(1)]);
+        let s2 = Seq(vec![seq.at(2)]);
+        let w2 = 2 * w;
+        // Consolidate operands (steps 4-6): P[0] gets A0,B0; P[1] gets
+        // A',B'; P[2] gets A1,B1; P[3] assists in recombination only.
+        let a0s = a0.repartition(m, &s0, w2)?;
+        let b0s = b0.repartition(m, &s0, w2)?;
+        let ads = adiff.repartition(m, &s1, w2)?;
+        let bds = bdiff.repartition(m, &s1, w2)?;
+        let a1s = a1.repartition(m, &s2, w2)?;
+        let b1s = b1.repartition(m, &s2, w2)?;
+        // Step 7: parallel sequential products.
+        let c0 = leaf_multiply(m, seq.at(0), a0s, b0s, leaf)?;
+        let cp = leaf_multiply(m, seq.at(1), ads, bds, leaf)?;
+        let c2 = leaf_multiply(m, seq.at(2), a1s, b1s, leaf)?;
+        // Steps 8-10 + SUM/DIFF chain.
+        return recompose_karatsuba(m, seq, c0, cp, sign, c2, w);
+    }
+
+    // --- Splitting (phase 1b-1e): three groups of |P|/3 ----------------
+    let [g0, g1, g2] = seq.copk_groups();
+    ensure!(
+        (3 * w) % 2 == 0,
+        "COPK_MI: chunk width {w} not divisible for |P| = {p} (pad n)"
+    );
+    let w3 = 3 * w / 2;
+    let a0g = a0.repartition(m, &g0, w3)?;
+    let b0g = b0.repartition(m, &g0, w3)?;
+    let adg = adiff.repartition(m, &g1, w3)?;
+    let bdg = bdiff.repartition(m, &g1, w3)?;
+    let a1g = a1.repartition(m, &g2, w3)?;
+    let b1g = b1.repartition(m, &g2, w3)?;
+
+    // --- Recursive multiplication (three groups in parallel) -----------
+    let c0 = copk_mi(m, &g0, a0g, b0g, leaf)?;
+    let cp = copk_mi(m, &g1, adg, bdg, leaf)?;
+    let c2 = copk_mi(m, &g2, a1g, b1g, leaf)?;
+
+    // --- Recomposition --------------------------------------------------
+    recompose_karatsuba(m, seq, c0, cp, sign, c2, w)
+}
+
+/// COPK in the main execution mode (§6.2): depth-first steps until
+/// `n ≤ M·P^(log₃2)/10`, then [`copk_mi`]. Theorem 15 requires
+/// `M ≥ max(40n/P, log₂P)`.
+pub fn copk(
+    m: &mut Machine,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &dyn LeafMultiplier,
+) -> Result<DistInt> {
+    let p = seq.len();
+    assert!(
+        p == 1 || is_copk_procs(p as u64),
+        "COPK requires |P| = 4·3^i (got {p})"
+    );
+    let n = a.total_width() as u64;
+    let mcap = m.mem_cap();
+
+    let mi_ok = (n as f64) <= mcap as f64 * pow_log3_2(p as f64) / 10.0;
+    if p == 1 || mi_ok {
+        return copk_mi(m, seq, a, b, leaf);
+    }
+
+    let w = a.chunk_width;
+    ensure!(
+        w >= 2 && w % 2 == 0,
+        "COPK DFS cannot halve chunk width {w}: memory constraints violated (n={n}, P={p}, M={mcap})"
+    );
+
+    // --- Depth-first step (steps 1-7): subproblems on ALL processors ---
+    let pt = seq.interleave_halves();
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+    let half_w = w / 2;
+    let lo_half = seq.lower_half();
+    let hi_half = seq.upper_half();
+    let mid = Seq(seq.ids()[p / 4..3 * p / 4].to_vec());
+
+    // Step 3: C0 = A0 x B0, stashed on the lower half.
+    let a0c = a0.copy_to(m, &pt, half_w)?;
+    let b0c = b0.copy_to(m, &pt, half_w)?;
+    let c0 = copk(m, &pt, a0c, b0c, leaf)?;
+    let c0 = c0.repartition(m, &lo_half, 2 * w)?;
+
+    // Step 4: C2 = A1 x B1, stashed on the upper half.
+    let a1c = a1.copy_to(m, &pt, half_w)?;
+    let b1c = b1.copy_to(m, &pt, half_w)?;
+    let c2 = copk(m, &pt, a1c, b1c, leaf)?;
+    let c2 = c2.repartition(m, &hi_half, 2 * w)?;
+
+    // Steps 5-6: A' = |A0 - A1|, B' = |B1 - B0| on the re-ranked
+    // sequence; inputs are deleted afterwards ("then each processor
+    // removes the digits ... from its local memory").
+    let a0c = a0.copy_to(m, &pt, half_w)?;
+    let a1c = a1.copy_to(m, &pt, half_w)?;
+    let (adiff, fa) = diff(m, &pt, &a0c, &a1c)?;
+    a0c.free(m);
+    a1c.free(m);
+    let b1c = b1.copy_to(m, &pt, half_w)?;
+    let b0c = b0.copy_to(m, &pt, half_w)?;
+    let (bdiff, fb) = diff(m, &pt, &b1c, &b0c)?;
+    b1c.free(m);
+    b0c.free(m);
+    a0.free(m);
+    a1.free(m);
+    b0.free(m);
+    b1.free(m);
+    let sign = fa * fb;
+
+    // Step 7: C' = A' x B' (zero operands multiply to zero and keep the
+    // uniform control flow; the paper short-circuits f_A·f_B = 0).
+    let cp = copk(m, &pt, adiff, bdiff, leaf)?;
+    let cp = cp.repartition(m, &mid, 2 * w)?;
+
+    // Steps 8-17: recombination.
+    recompose_karatsuba(m, seq, c0, cp, sign, c2, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::leaf::{SchoolLeaf, SkimLeaf};
+    use crate::bignum::{mul, Base, Ops};
+    use crate::theory;
+    use crate::util::Rng;
+
+    fn verify_product(a: &[u32], b: &[u32], c: &[u32]) {
+        let mut ops = Ops::default();
+        let want = mul::mul_school(a, b, Base::new(16), &mut ops);
+        assert_eq!(c, &want[..], "product mismatch");
+    }
+
+    fn run_mi(p: usize, n: usize, seed: u64) -> (Machine, Vec<u32>, Vec<u32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let mut m = Machine::unbounded(p, Base::new(16));
+        let seq = Seq::range(p);
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+        let c = copk_mi(&mut m, &seq, da, db, &SkimLeaf).unwrap();
+        let cd = c.gather(&m);
+        (m, a, b, cd)
+    }
+
+    #[test]
+    fn copk_mi_correct_base4() {
+        for &n in &[16usize, 64, 256] {
+            let (_, a, b, c) = run_mi(4, n, 0x4B + n as u64);
+            verify_product(&a, &b, &c);
+        }
+    }
+
+    #[test]
+    fn copk_mi_correct_deeper() {
+        // |P| = 12 (one BFS level), 36 (two), 108 (three).
+        for &(p, n) in &[(12usize, 96usize), (12, 384), (36, 1728), (108, 1728)] {
+            let (_, a, b, c) = run_mi(p, n, 0xC0 + p as u64);
+            verify_product(&a, &b, &c);
+        }
+    }
+
+    #[test]
+    fn copk_mi_cost_within_thm14() {
+        for &(p, n) in &[(4usize, 256usize), (12, 768), (36, 1728), (108, 5184)] {
+            let (m, ..) = run_mi(p, n, 0x714);
+            let c = m.critical();
+            let bound = theory::thm14_copk_mi(n as u64, p as u64);
+            assert!(c.ops <= bound.ops, "T p={p} n={n}: {} > {}", c.ops, bound.ops);
+            assert!(
+                c.words <= bound.words + bound.words / 4,
+                "BW p={p} n={n}: {} > 1.25x{}",
+                c.words,
+                bound.words
+            );
+            // Latency shape O(log^2 P) with an empirically safe constant
+            // (see copsim.rs for why the paper's 25·log2^2P constant is
+            // not self-consistent with its own per-level recurrence).
+            let lg = (p as f64).log2();
+            let l_shape = (30.0 * lg * lg + 40.0) as u64;
+            assert!(c.msgs <= l_shape, "L p={p} n={n}: {} > {}", c.msgs, l_shape);
+        }
+    }
+
+    #[test]
+    fn copk_main_mode_correct_under_memory_pressure() {
+        // Cap memory at 40n/P (Theorem 15's requirement) to force DFS.
+        // DFS engages only when 40n/P < 10n/P^(log3 2), i.e. P > 4^(1/0.369)
+        // ≈ 43, so P = 108 is the smallest COPK-shaped count that
+        // exercises it ((108, 10368) takes two DFS levels).
+        for &(p, n) in &[(108usize, 5184usize), (108, 10368)] {
+            let cap = (40 * n / p) as u64;
+            let mi_need = theory::thm14_copk_mi_mem(n as u64, p as u64);
+            assert!(
+                cap < mi_need,
+                "test must exercise the DFS path (cap {cap} >= {mi_need})"
+            );
+            let mut rng = Rng::new(0xD0);
+            let mut m = Machine::new(p, cap, Base::new(16));
+            let seq = Seq::range(p);
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+            let c = copk(&mut m, &seq, da, db, &SchoolLeaf)
+                .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
+            verify_product(&a, &b, &c.gather(&m));
+            let crit = m.critical();
+            let bound = theory::thm15_copk(n as u64, p as u64, cap);
+            assert!(crit.ops <= bound.ops, "T: {} > {}", crit.ops, bound.ops);
+            assert!(crit.words <= bound.words, "BW: {} > {}", crit.words, bound.words);
+            assert!(crit.msgs <= bound.msgs, "L: {} > {}", crit.msgs, bound.msgs);
+            assert!(m.mem_peak_max() <= cap);
+        }
+    }
+
+    #[test]
+    fn copk_randomized_vs_reference() {
+        crate::util::prop::check("copk-vs-ref", 20, |rng| {
+            let p = [4usize, 12][rng.below(2) as usize];
+            // chunk width: even, divisible by 2^levels.
+            let w = 4usize << rng.range(0, 3);
+            let n = p * w;
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut m = Machine::unbounded(p, Base::new(16));
+            let seq = Seq::range(p);
+            let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
+            let c = copk_mi(&mut m, &seq, da, db, &SkimLeaf).unwrap();
+            let mut ops = Ops::default();
+            let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
+            crate::prop_assert_eq!(c.gather(&m), want);
+            crate::prop_assert_eq!(m.mem_used_total(), 2 * n as u64);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn copk_beats_copsim_ops_at_scale() {
+        // The whole point of Karatsuba: fewer digit operations. Compare
+        // critical-path T at matching (n, P=4).
+        let n = 4096;
+        let (mk, ..) = run_mi(4, n, 5);
+        let mut rng = Rng::new(5);
+        let mut ms = Machine::unbounded(4, Base::new(16));
+        let seq = Seq::range(4);
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let da = DistInt::scatter(&mut ms, &seq, &a, n / 4).unwrap();
+        let db = DistInt::scatter(&mut ms, &seq, &b, n / 4).unwrap();
+        crate::algorithms::copsim::copsim_mi(
+            &mut ms,
+            &seq,
+            da,
+            db,
+            &crate::algorithms::leaf::SlimLeaf,
+        )
+        .unwrap();
+        assert!(
+            mk.critical().ops < ms.critical().ops,
+            "COPK {} !< COPSIM {}",
+            mk.critical().ops,
+            ms.critical().ops
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! §7 hybridization of COPSIM and COPK.
+//!
+//! The paper observes that, because of the constant factors in the cost
+//! bounds, "COPK allows for overall improved performance over COPSIM for
+//! large input size, while when multiplying integers with fewer digits,
+//! COPSIM may actually achieve lower execution time", and that the
+//! common BFS/DFS framework lets the two schemes combine seamlessly.
+//!
+//! Our hybridization operates at two levels:
+//!
+//! 1. **Machine level** ([`choose_algorithm`], [`hybrid_mul`]): given
+//!    `(n, P, M)` and a [`TimeModel`], evaluate the paper's closed-form
+//!    cost bounds under the model and dispatch the whole multiplication
+//!    to the cheaper scheme. Because COPSIM needs `P = 4^k` and COPK
+//!    needs `P = 4·3^i`, the dispatch also respects the processor-count
+//!    shape (both shapes intersect only at `P ∈ {1, 4}`).
+//! 2. **Leaf level** (`leaf::HybridLeaf`): inside either scheme, the
+//!    sequential leaves switch from Karatsuba to schoolbook below the
+//!    classical crossover width — the same trade at the bottom of the
+//!    recursion tree.
+
+use super::copk::copk;
+use super::copsim::{copsim, is_pow4};
+use super::leaf::LeafMultiplier;
+use crate::sim::{DistInt, Machine, Seq};
+use crate::theory::{self, TimeModel};
+use crate::util::is_copk_procs;
+use anyhow::{bail, Result};
+
+/// Which top-level scheme a multiplication is dispatched to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Copsim,
+    Copk,
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Algorithm::Copsim => write!(f, "COPSIM"),
+            Algorithm::Copk => write!(f, "COPK"),
+        }
+    }
+}
+
+/// Predict the modeled execution time of each scheme from the paper's
+/// upper bounds (Theorems 12/15, falling back to 11/14 when the MI mode
+/// applies) and return the cheaper one. `None` for a scheme whose
+/// processor-count shape `p` cannot run.
+pub fn predict_times(n: u64, p: u64, m: u64, tm: &TimeModel) -> (Option<f64>, Option<f64>) {
+    let copsim_t = if is_pow4(p as usize) {
+        let mi_ok = (n as f64) <= m as f64 * (p as f64).sqrt() / 12.0;
+        let c = if mi_ok {
+            theory::thm11_copsim_mi(n, p)
+        } else {
+            theory::thm12_copsim(n, p, m)
+        };
+        Some(tm.time_ns(&c))
+    } else {
+        None
+    };
+    let copk_t = if p == 1 || is_copk_procs(p) {
+        let mi_ok = (n as f64) <= m as f64 * crate::util::pow_log3_2(p as f64) / 10.0;
+        let c = if mi_ok {
+            theory::thm14_copk_mi(n, p)
+        } else {
+            theory::thm15_copk(n, p, m)
+        };
+        Some(tm.time_ns(&c))
+    } else {
+        None
+    };
+    (copsim_t, copk_t)
+}
+
+/// Pick the scheme with the lower predicted modeled time.
+pub fn choose_algorithm(n: u64, p: u64, m: u64, tm: &TimeModel) -> Result<Algorithm> {
+    match predict_times(n, p, m, tm) {
+        (Some(s), Some(k)) => Ok(if k < s { Algorithm::Copk } else { Algorithm::Copsim }),
+        (Some(_), None) => Ok(Algorithm::Copsim),
+        (None, Some(_)) => Ok(Algorithm::Copk),
+        (None, None) => bail!(
+            "P = {p} fits neither COPSIM (4^k) nor COPK (4·3^i); \
+             choose a compatible processor count"
+        ),
+    }
+}
+
+/// Multiply via the scheme selected by [`choose_algorithm`].
+/// Returns the product and the scheme used.
+pub fn hybrid_mul(
+    m: &mut Machine,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &dyn LeafMultiplier,
+    tm: &TimeModel,
+) -> Result<(DistInt, Algorithm)> {
+    let n = a.total_width() as u64;
+    let algo = choose_algorithm(n, seq.len() as u64, m.mem_cap(), tm)?;
+    let c = match algo {
+        Algorithm::Copsim => copsim(m, seq, a, b, leaf)?,
+        Algorithm::Copk => copk(m, seq, a, b, leaf)?,
+    };
+    Ok((c, algo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::leaf::HybridLeaf;
+    use crate::bignum::{mul, Base, Ops};
+    use crate::util::Rng;
+
+    #[test]
+    fn shape_dispatch() {
+        let tm = TimeModel::default();
+        // 16 = 4^2: only COPSIM fits.
+        assert_eq!(choose_algorithm(1 << 14, 16, 1 << 20, &tm).unwrap(), Algorithm::Copsim);
+        // 12 = 4·3: only COPK fits.
+        assert_eq!(choose_algorithm(1 << 14, 12, 1 << 20, &tm).unwrap(), Algorithm::Copk);
+        // 8 fits neither.
+        assert!(choose_algorithm(1 << 14, 8, 1 << 20, &tm).is_err());
+    }
+
+    #[test]
+    fn crossover_exists_at_p4() {
+        // At P = 4 both run; the bound-predicted times must cross:
+        // COPSIM cheaper for small n, COPK for large n.
+        let tm = TimeModel::default();
+        let m = u64::MAX / 4;
+        let small = choose_algorithm(1 << 4, 4, m, &tm).unwrap();
+        let large = choose_algorithm(1 << 22, 4, m, &tm).unwrap();
+        assert_eq!(small, Algorithm::Copsim);
+        assert_eq!(large, Algorithm::Copk);
+    }
+
+    #[test]
+    fn hybrid_mul_correct_both_ways() {
+        let tm = TimeModel::default();
+        for &(p, n) in &[(4usize, 64usize), (12, 384), (16, 256)] {
+            let mut rng = Rng::new(0x4B1D);
+            let mut m = Machine::unbounded(p, Base::new(16));
+            let seq = Seq::range(p);
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+            let leaf = HybridLeaf { threshold: 32 };
+            let (c, _algo) = hybrid_mul(&mut m, &seq, da, db, &leaf, &tm).unwrap();
+            let mut ops = Ops::default();
+            let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
+            assert_eq!(c.gather(&m), want, "p={p} n={n}");
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Pluggable sequential leaf multipliers.
+//!
+//! Once COPSIM/COPK assign a subproblem to a single processor it is
+//! solved locally "using the sequential algorithm SLIM [SKIM]. Clearly,
+//! any sequential algorithm can be used in place of it" (§5/§6). This
+//! trait is that plug-in point; besides the paper's SLIM/SKIM the
+//! coordinator installs an XLA-backed leaf (`runtime::XlaLeaf`) that
+//! executes the AOT-compiled JAX+Pallas digit-convolution kernel.
+
+use crate::bignum::{mul, Base, Ops};
+
+/// A sequential multiplier for equal-width power-of-two operands.
+pub trait LeafMultiplier: Sync {
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Multiply `a·b` (both `w` digits), returning `2w` digits and
+    /// charging digit operations to `ops`.
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32>;
+
+    /// Transient working space beyond inputs and output, in words.
+    /// Facts 10/13 allot `8n` words to SLIM/SKIM; inputs (2n) and output
+    /// (2n) are ledgered by the caller, so the default scratch is `4n`.
+    fn scratch_words(&self, w: usize) -> usize {
+        4 * w
+    }
+}
+
+/// The paper's recursive long multiplication (Fact 10: ≤ 8n² ops).
+pub struct SlimLeaf;
+
+impl LeafMultiplier for SlimLeaf {
+    fn name(&self) -> &'static str {
+        "slim"
+    }
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+        mul::slim(a, b, base, ops)
+    }
+}
+
+/// The paper's sequential Karatsuba (Fact 13: ≤ 16·n^lg3 ops).
+pub struct SkimLeaf;
+
+impl LeafMultiplier for SkimLeaf {
+    fn name(&self) -> &'static str {
+        "skim"
+    }
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+        mul::skim(a, b, base, ops)
+    }
+}
+
+/// Iterative schoolbook (operand scanning): same O(n²) op count as SLIM
+/// with a smaller constant; the fastest pure-Rust wallclock leaf.
+pub struct SchoolLeaf;
+
+impl LeafMultiplier for SchoolLeaf {
+    fn name(&self) -> &'static str {
+        "school"
+    }
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+        mul::mul_school(a, b, base, ops)
+    }
+    fn scratch_words(&self, _w: usize) -> usize {
+        0
+    }
+}
+
+/// §7-style sequential hybrid: Karatsuba above the threshold, schoolbook
+/// below (the classical crossover).
+pub struct HybridLeaf {
+    pub threshold: usize,
+}
+
+impl LeafMultiplier for HybridLeaf {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+        mul::mul_hybrid(a, b, self.threshold, base, ops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn all_leaves_agree() {
+        let base = Base::new(16);
+        let mut rng = Rng::new(0x1EAF);
+        let leaves: Vec<Box<dyn LeafMultiplier>> = vec![
+            Box::new(SlimLeaf),
+            Box::new(SkimLeaf),
+            Box::new(SchoolLeaf),
+            Box::new(HybridLeaf { threshold: 16 }),
+        ];
+        for &w in &[8usize, 32, 64] {
+            let a = rng.digits(w, 16);
+            let b = rng.digits(w, 16);
+            let mut want: Option<Vec<u32>> = None;
+            for leaf in &leaves {
+                let mut ops = Ops::default();
+                let got = leaf.mul(&a, &b, base, &mut ops);
+                assert!(ops.get() > 0, "{} charged no ops", leaf.name());
+                match &want {
+                    None => want = Some(got),
+                    Some(w0) => assert_eq!(&got, w0, "{} diverges", leaf.name()),
+                }
+            }
+        }
+    }
+}

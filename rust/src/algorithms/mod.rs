@@ -1,0 +1,75 @@
+//! The paper's parallel multiplication algorithms.
+//!
+//! * [`leaf`] — pluggable sequential leaf multipliers (SLIM/SKIM/hybrid/
+//!   XLA) used once the recursion reaches a single processor.
+//! * [`copsim`] — COPSIM (§5): MI mode (all-BFS over `P = 4^k`
+//!   processors) and the main mode (DFS steps until the subproblem fits
+//!   the MI memory requirement).
+//! * [`copk`] — COPK (§6): MI mode (BFS over `P = 4·3^i` processors with
+//!   the special `|P| = 4` base case) and the main DFS mode.
+//! * [`hybrid`] — §7 hybridization: cost-model-driven choice between the
+//!   two schemes (and the classical sequential crossover at the leaves).
+//!
+//! All entry points consume their [`DistInt`] inputs (the paper's
+//! processors delete input digits as soon as they are no longer needed)
+//! and return the full `2n`-digit product partitioned across the same
+//! processor sequence.
+
+pub mod copk;
+pub mod copsim;
+pub mod hybrid;
+pub mod leaf;
+
+pub use copk::{copk, copk_mi};
+pub use copsim::{copsim, copsim_mi};
+pub use hybrid::{choose_algorithm, hybrid_mul, Algorithm};
+pub use leaf::{LeafMultiplier, SchoolLeaf, SkimLeaf, SlimLeaf};
+
+use crate::sim::{DistInt, Machine, ProcId};
+use anyhow::Result;
+
+/// Multiply the single-processor leaf case: reads both operands, runs
+/// the sequential leaf multiplier (charging its exact digit ops and —
+/// per Facts 10/13 — a transient scratch allocation so the 8n-word
+/// sequential space requirement shows up in the memory ledger), and
+/// allocates the `2w`-digit product. Consumes the operands.
+pub(crate) fn leaf_multiply(
+    m: &mut Machine,
+    pid: ProcId,
+    a: DistInt,
+    b: DistInt,
+    leaf: &dyn leaf::LeafMultiplier,
+) -> Result<DistInt> {
+    debug_assert_eq!(a.chunks.len(), 1);
+    debug_assert_eq!(b.chunks.len(), 1);
+    let w = a.chunk_width;
+    let mut av = m.read(pid, a.chunks[0].1).to_vec();
+    let mut bv = m.read(pid, b.chunks[0].1).to_vec();
+    // COPK's 3/2 width scaling produces non-power-of-two leaf widths;
+    // SLIM/SKIM recurse on power-of-two operands, so pad (the product's
+    // digits beyond 2w are provably zero and are truncated below).
+    let wp = w.next_power_of_two();
+    av.resize(wp, 0);
+    bv.resize(wp, 0);
+    // Model the sequential algorithm's working space (Facts 10/13: 8n
+    // words total; inputs 2w + output 2w are ledgered explicitly, the
+    // recursion scratch is a transient block). Charged on the TRUE
+    // operand width w: the pow2 padding above is an artifact of reusing
+    // SLIM/SKIM's power-of-two recursion, not of the paper's algorithm.
+    let scratch = m.alloc(pid, vec![0u32; leaf.scratch_words(w)])?;
+    let prod = m.local(pid, |base, ops| leaf.mul(&av, &bv, *base, ops));
+    m.free(pid, scratch);
+    let mut prod = prod;
+    if prod.len() > 2 * w {
+        debug_assert!(prod[2 * w..].iter().all(|&d| d == 0));
+        prod.truncate(2 * w);
+    }
+    debug_assert_eq!(prod.len(), 2 * w);
+    a.free(m);
+    b.free(m);
+    let slot = m.alloc(pid, prod)?;
+    Ok(DistInt {
+        chunk_width: 2 * w,
+        chunks: vec![(pid, slot)],
+    })
+}

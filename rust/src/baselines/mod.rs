@@ -1,0 +1,423 @@
+//! Related-work baselines, implemented on the same simulator so E12 can
+//! compare them with COPSIM/COPK under identical accounting.
+//!
+//! * [`allgather_schoolbook`] — the folklore distributed schoolbook:
+//!   every processor all-gathers both operands (recursive doubling),
+//!   computes its slice of the output convolution locally, then a
+//!   sequential carry chain crosses the processors. Compute-balanced,
+//!   but per-processor memory is Θ(n) (vs the paper's Θ(n/P)), the
+//!   critical-path bandwidth is Θ(n) (vs Θ(n/√P)), and the carry chain
+//!   costs Θ(P) latency.
+//! * [`cesari_maeder`] — a master–slave parallel Karatsuba in the style
+//!   of Cesari & Maeder (1996), the closest prior distributed-memory
+//!   work the paper cites: a master holds the whole operands, performs
+//!   the O(n) additions/differences *sequentially*, and farms the three
+//!   subproducts out to slave sub-pools. Its computation time is
+//!   Ω(n) regardless of P (the paper's criticism: "long integer
+//!   additions and subtractions need to be computed by single
+//!   processors"), and the master's memory is Θ(n).
+
+use crate::bignum::mul::abs_diff;
+use crate::bignum::{mul, Ops};
+use crate::sim::{DistInt, Machine, Seq};
+use anyhow::{ensure, Result};
+use std::cmp::Ordering;
+
+/// All-gather both operands with recursive doubling, multiply slices
+/// locally, propagate carries sequentially. Inputs partitioned in `seq`
+/// (width `w = n/P`); output partitioned in `seq` (width `2w`).
+pub fn allgather_schoolbook(
+    m: &mut Machine,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+) -> Result<DistInt> {
+    let p = seq.len();
+    let w = a.chunk_width;
+    let n = a.total_width();
+    ensure!(p.is_power_of_two(), "allgather baseline wants |P| = 2^k");
+
+    if p == 1 {
+        let pid = seq.at(0);
+        let av = m.read(pid, a.chunks[0].1).to_vec();
+        let bv = m.read(pid, b.chunks[0].1).to_vec();
+        let c = m.local(pid, |base, ops| mul::mul_school(&av, &bv, *base, ops));
+        a.free(m);
+        b.free(m);
+        let slot = m.alloc(pid, c)?;
+        return Ok(DistInt {
+            chunk_width: 2 * w,
+            chunks: vec![(pid, slot)],
+        });
+    }
+
+    // --- All-gather of A and B (recursive doubling) --------------------
+    // After round r every processor holds the 2^(r+1)·w digits of the
+    // aligned block containing its own chunk; log2(P) rounds, with both
+    // partners exchanging (two serialized messages per pair, since a
+    // processor cannot send and receive simultaneously).
+    let full_a = allgather(m, seq, &a)?;
+    let full_b = allgather(m, seq, &b)?;
+    a.free(m);
+    b.free(m);
+
+    // --- Local slice products -------------------------------------------
+    // Processor j computes output digits [j·2w, (j+1)·2w) as raw
+    // convolution sums, kept as double-precision values (charged as a
+    // 4·2w-word scratch: one 64-bit accumulator = 4 base-2^16 words).
+    let mut conv_slices: Vec<Vec<u64>> = Vec::with_capacity(p);
+    let mut scratch_slots = Vec::with_capacity(p);
+    for j in 0..p {
+        let pid = seq.at(j);
+        let av = m.read(pid, full_a[j]).to_vec();
+        let bv = m.read(pid, full_b[j]).to_vec();
+        let lo = j * 2 * w;
+        let hi = lo + 2 * w;
+        let mut slice = vec![0u64; 2 * w];
+        let mut ops = Ops::default();
+        for k in lo..hi.min(2 * n - 1) {
+            let i_min = k.saturating_sub(n - 1);
+            let i_max = k.min(n - 1);
+            let mut acc = 0u64;
+            for i in i_min..=i_max {
+                acc += av[i] as u64 * bv[k - i] as u64;
+                ops.charge(2);
+            }
+            slice[k - lo] = acc;
+        }
+        m.compute(pid, ops.get());
+        conv_slices.push(slice);
+        scratch_slots.push(m.alloc(pid, vec![0u32; 8 * w])?);
+    }
+
+    // --- Sequential carry chain ----------------------------------------
+    // Processor j normalizes its slice given the carry from j-1 and
+    // forwards its own carry: P-1 strictly sequential messages.
+    let base = m.base;
+    let mut out_chunks = Vec::with_capacity(p);
+    let mut carry: u64 = 0;
+    for j in 0..p {
+        let pid = seq.at(j);
+        if j > 0 {
+            // Receive the (up to 64-bit) carry as 4 base-2^16 words.
+            let prev = seq.at(j - 1);
+            let payload = vec![
+                (carry & 0xFFFF) as u32,
+                ((carry >> 16) & 0xFFFF) as u32,
+                ((carry >> 32) & 0xFFFF) as u32,
+                ((carry >> 48) & 0xFFFF) as u32,
+            ];
+            let s = m.send(prev, pid, payload)?;
+            m.free(pid, s);
+        }
+        let mut digits = Vec::with_capacity(2 * w);
+        let mut ops = Ops::default();
+        for v in &conv_slices[j] {
+            let t = v + carry;
+            digits.push((t & base.mask()) as u32);
+            carry = t >> base.log2;
+            ops.charge(1);
+        }
+        m.compute(pid, ops.get());
+        out_chunks.push((pid, m.alloc(pid, digits)?));
+    }
+    ensure!(carry == 0, "allgather baseline: residual carry {carry}");
+
+    // Release gathered operands and scratch.
+    for j in 0..p {
+        let pid = seq.at(j);
+        m.free(pid, full_a[j]);
+        m.free(pid, full_b[j]);
+        m.free(pid, scratch_slots[j]);
+    }
+
+    Ok(DistInt {
+        chunk_width: 2 * w,
+        chunks: out_chunks,
+    })
+}
+
+/// Recursive-doubling all-gather: returns, for each sequence rank, a
+/// slot holding the FULL n-digit value.
+fn allgather(m: &mut Machine, seq: &Seq, x: &DistInt) -> Result<Vec<crate::sim::Slot>> {
+    let p = seq.len();
+    let w = x.chunk_width;
+    // blocks[j] = digits currently held by rank j (starts as own chunk).
+    let mut blocks: Vec<Vec<u32>> = (0..p)
+        .map(|j| m.read(x.chunks[j].0, x.chunks[j].1).to_vec())
+        .collect();
+    let mut owned: Vec<usize> = (0..p).collect(); // aligned block index
+    let mut size = 1usize; // chunks per block
+    while size < p {
+        for j in 0..p {
+            let partner = j ^ size;
+            if partner > j {
+                // Exchange blocks: two serialized messages (a processor
+                // either sends or receives in a step).
+                let (pj, pk) = (seq.at(j), seq.at(partner));
+                let s1 = m.send(pj, pk, blocks[j].clone())?;
+                let s2 = m.send(pk, pj, blocks[partner].clone())?;
+                m.free(pk, s1);
+                m.free(pj, s2);
+            }
+        }
+        let mut next = Vec::with_capacity(p);
+        for j in 0..p {
+            let partner = j ^ size;
+            let (lo, hi) = if owned[j] % (2 * size) == 0 {
+                (j, partner)
+            } else {
+                (partner, j)
+            };
+            let mut merged = blocks[lo].clone();
+            merged.extend_from_slice(&blocks[hi]);
+            next.push(merged);
+        }
+        for j in 0..p {
+            owned[j] -= owned[j] % (2 * size) / size * 0; // block start index bookkeeping
+            owned[j] = owned[j] / (2 * size) * (2 * size);
+        }
+        blocks = next;
+        size *= 2;
+    }
+    // Materialize the gathered value in each ledger.
+    let mut slots = Vec::with_capacity(p);
+    for j in 0..p {
+        debug_assert_eq!(blocks[j].len(), w * p);
+        slots.push(m.alloc(seq.at(j), blocks[j].clone())?);
+    }
+    Ok(slots)
+}
+
+/// Master–slave Karatsuba (Cesari–Maeder style). Inputs partitioned in
+/// `seq`; the master (`seq[0]`) first gathers both operands entirely,
+/// then recursion farms subproducts to slave sub-pools. Output ends up
+/// resident on the master and is finally re-partitioned across `seq`
+/// (width `2w`) for comparability.
+pub fn cesari_maeder(m: &mut Machine, seq: &Seq, a: DistInt, b: DistInt) -> Result<DistInt> {
+    let w = a.chunk_width;
+    let n = a.total_width();
+    let master = Seq(vec![seq.at(0)]);
+    // Gather to the master: Θ(n) words into one local memory.
+    let a_m = a.repartition(m, &master, n)?;
+    let b_m = b.repartition(m, &master, n)?;
+    let pool: Vec<usize> = seq.ids().to_vec();
+    let c_slot = ms_mul(m, &pool, a_m.chunks[0].1, b_m.chunks[0].1, n)?;
+    a_m.free(m);
+    b_m.free(m);
+    let c = DistInt {
+        chunk_width: 2 * n,
+        chunks: vec![(seq.at(0), c_slot)],
+    };
+    c.repartition(m, seq, 2 * w)
+}
+
+/// Recursive master-slave step. `pool[0]` is the master holding both
+/// `n`-digit operands; returns a slot on the master with the 2n-digit
+/// product.
+fn ms_mul(
+    m: &mut Machine,
+    pool: &[usize],
+    sa: crate::sim::Slot,
+    sb: crate::sim::Slot,
+    n: usize,
+) -> Result<crate::sim::Slot> {
+    let master = pool[0];
+    // A pool too small to farm out three subproblems computes locally —
+    // and small operands are not worth shipping either.
+    if pool.len() < 4 || n <= 64 {
+        let av = m.read(master, sa).to_vec();
+        let bv = m.read(master, sb).to_vec();
+        let scratch = m.alloc(master, vec![0u32; 4 * n])?;
+        let c = m.local(master, |base, ops| mul::skim(&av, &bv, *base, ops));
+        m.free(master, scratch);
+        return m.alloc(master, c);
+    }
+
+    let h = n / 2;
+    let (av, bv) = (m.read(master, sa).to_vec(), m.read(master, sb).to_vec());
+    let (a0, a1) = (av[..h].to_vec(), av[h..].to_vec());
+    let (b0, b1) = (bv[..h].to_vec(), bv[h..].to_vec());
+
+    // THE bottleneck the paper calls out: the master computes the long
+    // differences sequentially.
+    let ((fa, ad), (fb, bd)) = m.local(master, |base, ops| {
+        (abs_diff(&a0, &a1, *base, ops), abs_diff(&b1, &b0, *base, ops))
+    });
+    let sign = fa * fb;
+
+    // Farm out: three slaves pools led by slaves[i][0]; ship operands.
+    let slaves = &pool[1..];
+    let third = slaves.len() / 3;
+    let (p0, rest) = slaves.split_at(third);
+    let (p1, p2) = rest.split_at(third);
+    let l0 = p0[0];
+    let l1 = p1[0];
+    let l2 = p2[0];
+    let sa0 = m.send(master, l0, a0)?;
+    let sb0 = m.send(master, l0, b0)?;
+    let sad = m.send(master, l1, ad)?;
+    let sbd = m.send(master, l1, bd)?;
+    let sa1 = m.send(master, l2, a1)?;
+    let sb1 = m.send(master, l2, b1)?;
+
+    // Recurse (slave pools work in parallel — disjoint clocks).
+    let c0s = ms_mul(m, p0, sa0, sb0, h)?;
+    let cps = ms_mul(m, p1, sad, sbd, h)?;
+    let c2s = ms_mul(m, p2, sa1, sb1, h)?;
+    for (pid, s) in [(l0, sa0), (l0, sb0), (l1, sad), (l1, sbd), (l2, sa1), (l2, sb1)] {
+        m.free(pid, s);
+    }
+
+    // Results return to the master: 3 x n digits.
+    let rc0 = m.send_move(l0, master, c0s)?;
+    let rcp = m.send_move(l1, master, cps)?;
+    let rc2 = m.send_move(l2, master, c2s)?;
+
+    // Master combines sequentially: C = C0 + s^h(C0+C2±C') + s^n C2.
+    let (c0, cp, c2) = (
+        m.read(master, rc0).to_vec(),
+        m.read(master, rcp).to_vec(),
+        m.read(master, rc2).to_vec(),
+    );
+    let c = m.local(master, |base, ops| {
+        let mut out = vec![0u32; 2 * n];
+        out[..n].copy_from_slice(&c0);
+        crate::bignum::core::add_into_width(&mut out, &c0, h, *base, ops);
+        crate::bignum::core::add_into_width(&mut out, &c2, h, *base, ops);
+        crate::bignum::core::add_into_width(&mut out, &c2, n, *base, ops);
+        match sign.cmp(&0) {
+            Ordering::Greater => {
+                crate::bignum::core::add_into_width(&mut out, &cp, h, *base, ops)
+            }
+            Ordering::Less => sub_into(&mut out, &cp, h, *base, ops),
+            Ordering::Equal => {}
+        }
+        out
+    });
+    m.free(master, rc0);
+    m.free(master, rcp);
+    m.free(master, rc2);
+    m.alloc(master, c)
+}
+
+/// In-place borrow-propagating subtraction at an offset (master-side
+/// combine helper; the value stays non-negative by Karatsuba's algebra).
+fn sub_into(dst: &mut [u32], src: &[u32], off: usize, base: crate::bignum::Base, ops: &mut Ops) {
+    let mut borrow = 0i64;
+    let s = base.s() as i64;
+    let mut i = 0;
+    while i < src.len() || borrow != 0 {
+        let d = off + i;
+        let sub = if i < src.len() { src[i] as i64 } else { 0 };
+        let mut t = dst[d] as i64 - sub - borrow;
+        if t < 0 {
+            t += s;
+            borrow = 1;
+        } else {
+            borrow = 0;
+        }
+        dst[d] = t as u32;
+        ops.charge(1);
+        i += 1;
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::{mul, Base, Ops};
+    use crate::util::Rng;
+
+    fn setup(p: usize, n: usize, seed: u64) -> (Machine, Seq, Vec<u32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let m = Machine::unbounded(p, Base::new(16));
+        let seq = Seq::range(p);
+        (m, seq, rng.digits(n, 16), rng.digits(n, 16))
+    }
+
+    #[test]
+    fn allgather_correct() {
+        for &(p, n) in &[(1usize, 32usize), (4, 64), (8, 256), (16, 512)] {
+            let (mut m, seq, a, b) = setup(p, n, 0xA6 + p as u64);
+            let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+            let c = allgather_schoolbook(&mut m, &seq, da, db).unwrap();
+            let mut ops = Ops::default();
+            let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
+            assert_eq!(c.gather(&m), want, "p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn cesari_maeder_correct() {
+        for &(p, n) in &[(4usize, 128usize), (16, 512), (8, 512)] {
+            let (mut m, seq, a, b) = setup(p, n, 0xCE + p as u64);
+            let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+            let c = cesari_maeder(&mut m, &seq, da, db).unwrap();
+            let mut ops = Ops::default();
+            let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
+            assert_eq!(c.gather(&m), want, "p={p} n={n}");
+        }
+    }
+
+    #[test]
+    fn allgather_memory_is_theta_n_per_proc() {
+        // The headline weakness: every processor stores the full inputs.
+        let (mut m, seq, a, b) = setup(16, 1024, 0xA9);
+        let da = DistInt::scatter(&mut m, &seq, &a, 64).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, 64).unwrap();
+        allgather_schoolbook(&mut m, &seq, da, db).unwrap();
+        assert!(
+            m.mem_peak_max() >= 2 * 1024,
+            "expected >= 2n peak, got {}",
+            m.mem_peak_max()
+        );
+    }
+
+    #[test]
+    fn cesari_maeder_master_is_bottleneck() {
+        // Master computation time stays Ω(n) even as P grows: compare
+        // critical-path ops at P=4 vs P=16; the improvement must be far
+        // from the 4x of a strongly-scaling algorithm.
+        let n = 2048;
+        let mut crit = Vec::new();
+        for &p in &[4usize, 16, 64] {
+            let (mut m, seq, a, b) = setup(p, n, 7);
+            let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+            cesari_maeder(&mut m, &seq, da, db).unwrap();
+            crit.push(m.critical().ops);
+        }
+        // Sub-linear scaling: 16x the processors (P=4 -> P=64) must buy
+        // clearly less than 8x the speedup (a strongly scaling algorithm
+        // would buy ~16x).
+        assert!(
+            crit[2] * 16 > crit[0] * 2,
+            "master-slave scaled too well: {crit:?}"
+        );
+    }
+
+    #[test]
+    fn copsim_beats_allgather_bandwidth_at_scale() {
+        let (p, n) = (64usize, 4096usize);
+        let (mut m1, seq1, a, b) = setup(p, n, 0xBB);
+        let da = DistInt::scatter(&mut m1, &seq1, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m1, &seq1, &b, n / p).unwrap();
+        allgather_schoolbook(&mut m1, &seq1, da, db).unwrap();
+
+        let mut m2 = Machine::unbounded(p, Base::new(16));
+        let da = DistInt::scatter(&mut m2, &seq1, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m2, &seq1, &b, n / p).unwrap();
+        crate::algorithms::copsim_mi(&mut m2, &seq1, da, db, &crate::algorithms::SlimLeaf)
+            .unwrap();
+        assert!(
+            m2.critical().words < m1.critical().words,
+            "COPSIM BW {} !< allgather BW {}",
+            m2.critical().words,
+            m1.critical().words
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! Conversions: u128 ↔ digits, hex ↔ digits, base repacking, padding.
+//!
+//! Both the machine base (default 2^16) and the XLA-leaf base (2^8) are
+//! powers of two, so repacking is exact bit surgery.
+
+use super::Base;
+
+/// Encode `v` as exactly `width` digits (panics if it does not fit).
+pub fn from_u128(v: u128, width: usize, base: Base) -> Vec<u32> {
+    let mut out = Vec::with_capacity(width);
+    let mut x = v;
+    for _ in 0..width {
+        out.push((x & base.mask() as u128) as u32);
+        x >>= base.log2;
+    }
+    assert_eq!(x, 0, "value does not fit in {width} digits of base 2^{}", base.log2);
+    out
+}
+
+/// Decode digits to u128 (panics on overflow).
+pub fn to_u128(digits: &[u32], base: Base) -> u128 {
+    let mut v: u128 = 0;
+    for &d in digits.iter().rev() {
+        assert!(
+            v.leading_zeros() >= base.log2,
+            "to_u128 overflow: more than 128 bits"
+        );
+        v = (v << base.log2) | d as u128;
+    }
+    v
+}
+
+/// Repack an LSB-first digit vector from base `2^from.log2` to base
+/// `2^to.log2`, preserving the value exactly. Output is trimmed to the
+/// minimal width that holds the value (at least 1 digit).
+pub fn repack_base(digits: &[u32], from: Base, to: Base) -> Vec<u32> {
+    let total_bits = digits.len() * from.log2 as usize;
+    let out_len = std::cmp::max(1, (total_bits + to.log2 as usize - 1) / to.log2 as usize);
+    let mut out = vec![0u32; out_len];
+    // Bit-copy: digit i of `digits` occupies bits [i*f, (i+1)*f).
+    let f = from.log2 as usize;
+    let t = to.log2 as usize;
+    for (i, &d) in digits.iter().enumerate() {
+        let mut bit = i * f;
+        let mut rem = d as u64;
+        let mut left = f;
+        while left > 0 {
+            let slot = bit / t;
+            let off = bit % t;
+            let take = std::cmp::min(left, t - off);
+            let chunk = rem & ((1u64 << take) - 1);
+            out[slot] |= (chunk << off) as u32;
+            rem >>= take;
+            bit += take;
+            left -= take;
+        }
+    }
+    out
+}
+
+/// Pad (or keep) a digit vector to the next power-of-two width >= `min`.
+pub fn pad_pow2(digits: &[u32], min: usize) -> Vec<u32> {
+    let want = std::cmp::max(digits.len(), std::cmp::max(1, min));
+    let width = want.next_power_of_two();
+    let mut out = digits.to_vec();
+    out.resize(width, 0);
+    out
+}
+
+/// Parse a hex string (no prefix) into LSB-first digits of `base`.
+pub fn parse_hex(s: &str, base: Base) -> Result<Vec<u32>, String> {
+    let s = s.trim().trim_start_matches("0x").trim_start_matches("0X");
+    if s.is_empty() {
+        return Err("empty hex string".into());
+    }
+    // Parse to a bit vector via 4-bit nibbles (LSB-first).
+    let mut nibbles = Vec::with_capacity(s.len());
+    for c in s.chars().rev() {
+        let v = c
+            .to_digit(16)
+            .ok_or_else(|| format!("invalid hex character {c:?}"))?;
+        nibbles.push(v as u32);
+    }
+    let nib_base = Base::new(4);
+    Ok(repack_base(&nibbles, nib_base, base))
+}
+
+/// Render digits as a hex string (no prefix, no leading zeros).
+pub fn to_hex(digits: &[u32], base: Base) -> String {
+    let nibs = repack_base(digits, base, Base::new(4));
+    let mut top = nibs.len();
+    while top > 1 && nibs[top - 1] == 0 {
+        top -= 1;
+    }
+    nibs[..top]
+        .iter()
+        .rev()
+        .map(|&n| char::from_digit(n, 16).unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn u128_roundtrip() {
+        let b = Base::new(16);
+        let v = 0x1234_5678_9ABC_DEF0_1122u128;
+        let d = from_u128(v, 8, b);
+        assert_eq!(to_u128(&d, b), v);
+    }
+
+    #[test]
+    fn repack_16_to_8_roundtrip() {
+        let b16 = Base::new(16);
+        let b8 = Base::new(8);
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let d = rng.digits(7, 16);
+            let r = repack_base(&d, b16, b8);
+            assert!(r.iter().all(|&x| x < 256));
+            let back = repack_base(&r, b8, b16);
+            let v1 = to_u128(&d, b16);
+            let v2 = to_u128(&back, b16);
+            assert_eq!(v1, v2);
+        }
+    }
+
+    #[test]
+    fn repack_odd_bases() {
+        // 2^13 -> 2^5 and back: value-preserving even for non-nesting bases.
+        let a = Base::new(13);
+        let b = Base::new(5);
+        let mut rng = Rng::new(2);
+        let d = rng.digits(6, 13);
+        let r = repack_base(&d, a, b);
+        assert!(r.iter().all(|&x| x < 32));
+        assert_eq!(to_u128(&d, a), to_u128(&r, b));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let b = Base::new(16);
+        let d = parse_hex("deadbeefcafe1234", b).unwrap();
+        assert_eq!(to_hex(&d, b), "deadbeefcafe1234");
+        assert_eq!(to_u128(&d, b), 0xdeadbeefcafe1234u128);
+    }
+
+    #[test]
+    fn hex_rejects_garbage() {
+        assert!(parse_hex("xyz", Base::new(16)).is_err());
+        assert!(parse_hex("", Base::new(16)).is_err());
+    }
+
+    #[test]
+    fn pad_pow2_widths() {
+        assert_eq!(pad_pow2(&[1, 2, 3], 0).len(), 4);
+        assert_eq!(pad_pow2(&[1], 6).len(), 8);
+        assert_eq!(pad_pow2(&[1, 2, 3, 4], 0).len(), 4);
+    }
+}

@@ -1,0 +1,215 @@
+//! Fixed-width digit arithmetic: addition, subtraction, comparison.
+//!
+//! These are the *sequential* building blocks the paper's single-processor
+//! base cases use (e.g. the local computations of `SUMA`, `DIFFR`, and the
+//! leaf multipliers). All routines operate on LSB-first digit slices and
+//! count digit operations.
+
+use super::{Base, Ops};
+use std::cmp::Ordering;
+
+/// Strip trailing (most-significant) zero digits; never shrinks below 1
+/// digit for a zero value represented with `len >= 1`.
+pub fn trim(digits: &mut Vec<u32>) {
+    while digits.len() > 1 && *digits.last().unwrap() == 0 {
+        digits.pop();
+    }
+}
+
+/// Length of `digits` ignoring most-significant zeros (0 for all-zero).
+pub fn normalized_len(digits: &[u32]) -> usize {
+    let mut n = digits.len();
+    while n > 0 && digits[n - 1] == 0 {
+        n -= 1;
+    }
+    n
+}
+
+/// Fixed-width sum with incoming carry:
+/// returns `(A + B + carry_in) mod s^w` as a `w`-digit vector plus the
+/// outgoing carry (0 or 1). `A`, `B` must have exactly `w` digits.
+///
+/// This is the single-processor kernel of `SUMA` (§4.1): the two
+/// speculative results `C_0/u_0` and `C_1/u_1` are two calls with
+/// `carry_in` 0 and 1.
+pub fn add_with_carry(a: &[u32], b: &[u32], carry_in: u32, base: Base, ops: &mut Ops) -> (Vec<u32>, u32) {
+    assert_eq!(a.len(), b.len(), "fixed-width add requires equal widths");
+    let s = base.s();
+    let mut out = Vec::with_capacity(a.len());
+    let mut carry = carry_in as u64;
+    for i in 0..a.len() {
+        let t = a[i] as u64 + b[i] as u64 + carry;
+        carry = t >> base.log2;
+        debug_assert!(carry <= 1);
+        out.push((t & base.mask()) as u32);
+    }
+    // One digit-add (+ carry fold) per position.
+    ops.charge(a.len() as u64);
+    debug_assert!(carry < s);
+    (out, carry as u32)
+}
+
+/// Fixed-width difference with incoming borrow:
+/// returns `(A - B - borrow_in) mod s^w` as a `w`-digit vector plus the
+/// outgoing borrow (1 iff `A < B + borrow_in`).
+///
+/// Single-processor kernel of `DIFFR` (§4.3): speculative values
+/// `C_0/b_0` and `C_1/b_1` are the calls with `borrow_in` 0 and 1.
+pub fn sub_with_borrow(a: &[u32], b: &[u32], borrow_in: u32, base: Base, ops: &mut Ops) -> (Vec<u32>, u32) {
+    assert_eq!(a.len(), b.len(), "fixed-width sub requires equal widths");
+    let mut out = Vec::with_capacity(a.len());
+    let mut borrow = borrow_in as i64;
+    for i in 0..a.len() {
+        let mut t = a[i] as i64 - b[i] as i64 - borrow;
+        if t < 0 {
+            t += base.s() as i64;
+            borrow = 1;
+        } else {
+            borrow = 0;
+        }
+        out.push(t as u32);
+    }
+    ops.charge(a.len() as u64);
+    (out, borrow as u32)
+}
+
+/// Compare two equal-width digit vectors as integers.
+pub fn cmp_digits(a: &[u32], b: &[u32], ops: &mut Ops) -> Ordering {
+    assert_eq!(a.len(), b.len(), "fixed-width cmp requires equal widths");
+    // Scan from the most significant digit; each inspected pair is one
+    // digit comparison. (Worst case w comparisons, matching Lemma 8's
+    // n/|P| local term.)
+    for i in (0..a.len()).rev() {
+        ops.charge(1);
+        match a[i].cmp(&b[i]) {
+            Ordering::Equal => continue,
+            ord => return ord,
+        }
+    }
+    Ordering::Equal
+}
+
+/// Add `src` (any width) into `dst` starting at digit offset `off`,
+/// propagating carries through `dst`; `dst` must be wide enough that the
+/// final carry is absorbed (panics otherwise). Returns nothing; charges
+/// one op per touched digit.
+///
+/// Used by the sequential multipliers to accumulate partial products
+/// (`C = C0 + s^(n/2)(C1+C2) + s^n C3`).
+pub fn add_into_width(dst: &mut [u32], src: &[u32], off: usize, base: Base, ops: &mut Ops) {
+    let mut carry = 0u64;
+    let mut i = 0;
+    while i < src.len() || carry != 0 {
+        let d = off + i;
+        assert!(
+            d < dst.len(),
+            "add_into_width overflow: dst width {} offset {} src len {}",
+            dst.len(),
+            off,
+            src.len()
+        );
+        let add = if i < src.len() { src[i] as u64 } else { 0 };
+        let t = dst[d] as u64 + add + carry;
+        dst[d] = (t & base.mask()) as u32;
+        carry = t >> base.log2;
+        ops.charge(1);
+        i += 1;
+    }
+}
+
+/// Value of a short digit vector as u128 (panics if it doesn't fit).
+pub fn digits_value_u128(digits: &[u32], base: Base) -> u128 {
+    let mut v: u128 = 0;
+    for &d in digits.iter().rev() {
+        v = v
+            .checked_shl(base.log2)
+            .expect("digits_value_u128: value exceeds 128 bits");
+        v |= d as u128;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn b16() -> Base {
+        Base::new(16)
+    }
+
+    #[test]
+    fn add_basic() {
+        let mut ops = Ops::default();
+        // 0xFFFF + 1 = 0x1_0000 -> ([0, 1], carry 0) at width 2
+        let (c, carry) = add_with_carry(&[0xFFFF, 0], &[1, 0], 0, b16(), &mut ops);
+        assert_eq!(c, vec![0, 1]);
+        assert_eq!(carry, 0);
+        assert_eq!(ops.get(), 2);
+    }
+
+    #[test]
+    fn add_carry_out() {
+        let mut ops = Ops::default();
+        let (c, carry) = add_with_carry(&[0xFFFF], &[0xFFFF], 1, b16(), &mut ops);
+        // 0xFFFF + 0xFFFF + 1 = 0x1_FFFF -> digit 0xFFFF, carry 1
+        assert_eq!(c, vec![0xFFFF]);
+        assert_eq!(carry, 1);
+    }
+
+    #[test]
+    fn sub_basic() {
+        let mut ops = Ops::default();
+        let (c, borrow) = sub_with_borrow(&[0, 1], &[1, 0], 0, b16(), &mut ops);
+        // 0x1_0000 - 1 = 0xFFFF
+        assert_eq!(c, vec![0xFFFF, 0]);
+        assert_eq!(borrow, 0);
+    }
+
+    #[test]
+    fn sub_underflow_borrows() {
+        let mut ops = Ops::default();
+        let (c, borrow) = sub_with_borrow(&[0], &[1], 0, b16(), &mut ops);
+        assert_eq!(c, vec![0xFFFF]);
+        assert_eq!(borrow, 1);
+    }
+
+    #[test]
+    fn sub_with_incoming_borrow() {
+        let mut ops = Ops::default();
+        let (c, borrow) = sub_with_borrow(&[5], &[5], 1, b16(), &mut ops);
+        assert_eq!(c, vec![0xFFFF]);
+        assert_eq!(borrow, 1);
+    }
+
+    #[test]
+    fn cmp_works() {
+        let mut ops = Ops::default();
+        assert_eq!(cmp_digits(&[1, 2], &[1, 2], &mut ops), Ordering::Equal);
+        assert_eq!(cmp_digits(&[0, 3], &[9, 2], &mut ops), Ordering::Greater);
+        assert_eq!(cmp_digits(&[9, 2], &[0, 3], &mut ops), Ordering::Less);
+    }
+
+    #[test]
+    fn add_into_width_accumulates() {
+        let mut ops = Ops::default();
+        let mut dst = vec![0u32; 4];
+        add_into_width(&mut dst, &[0xFFFF, 0xFFFF], 1, b16(), &mut ops);
+        assert_eq!(dst, vec![0, 0xFFFF, 0xFFFF, 0]);
+        add_into_width(&mut dst, &[1], 1, b16(), &mut ops);
+        assert_eq!(dst, vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn trim_and_len() {
+        let mut v = vec![1, 0, 2, 0, 0];
+        trim(&mut v);
+        assert_eq!(v, vec![1, 0, 2]);
+        assert_eq!(normalized_len(&[0, 0]), 0);
+        assert_eq!(normalized_len(&[1, 0]), 1);
+    }
+
+    #[test]
+    fn value_u128() {
+        assert_eq!(digits_value_u128(&[0x34, 0x12], Base::new(8)), 0x1234);
+    }
+}

@@ -1,0 +1,112 @@
+//! Exact base-`s` big-integer arithmetic — the digit model of §2.1.
+//!
+//! Integers are LSB-first vectors of `u32` digits in base `s = 2^log2_base`
+//! with `1 <= log2_base <= 16` (so a digit-by-digit product plus carries
+//! fits comfortably in `u64`). One digit occupies one memory word of the
+//! simulated machine, exactly as the paper assumes ("each digit in the
+//! base-s expansion of a value to be stored in a different memory word").
+//!
+//! Every arithmetic routine counts the number of *digit-wise elementary
+//! operations* it performs (additions/subtractions/comparisons/products of
+//! single digits), which is the quantity the paper's computation-cost
+//! metric `T(n, P, M)` counts. The sequential multipliers [`mul::slim`]
+//! (Fact 10: ≤ 8n² ops) and [`mul::skim`] (Fact 13: ≤ 16·n^(log₂3) ops)
+//! are the recursion leaves of COPSIM/COPK.
+
+pub mod convert;
+pub mod core;
+pub mod mul;
+
+pub use self::core::{
+    add_into_width, add_with_carry, cmp_digits, normalized_len, sub_with_borrow, trim,
+};
+pub use self::mul::{mul_school, skim, slim};
+pub use convert::{from_u128, parse_hex, repack_base, to_hex, to_u128};
+
+/// Number base descriptor: `s = 2^log2`, one digit per memory word.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Base {
+    pub log2: u32,
+}
+
+impl Base {
+    pub fn new(log2: u32) -> Self {
+        assert!(
+            (1..=16).contains(&log2),
+            "base must be 2^k with 1 <= k <= 16 (got 2^{log2})"
+        );
+        Base { log2 }
+    }
+
+    /// The base value `s`.
+    #[inline]
+    pub fn s(&self) -> u64 {
+        1u64 << self.log2
+    }
+
+    /// Digit mask `s - 1`.
+    #[inline]
+    pub fn mask(&self) -> u64 {
+        self.s() - 1
+    }
+
+    /// Largest digit value.
+    #[inline]
+    pub fn max_digit(&self) -> u32 {
+        (self.s() - 1) as u32
+    }
+}
+
+impl Default for Base {
+    /// Default machine base: 2^16 (largest base whose digit products fit
+    /// in u64 with very wide margins).
+    fn default() -> Self {
+        Base { log2: 16 }
+    }
+}
+
+/// Operation counter threaded through all digit arithmetic.
+///
+/// `T(n, P, M)` in the paper counts digit-wise computations; every
+/// routine in this module adds its exact count here.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Ops(pub u64);
+
+impl Ops {
+    #[inline]
+    pub fn charge(&mut self, n: u64) {
+        self.0 += n;
+    }
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_values() {
+        let b = Base::new(8);
+        assert_eq!(b.s(), 256);
+        assert_eq!(b.mask(), 255);
+        assert_eq!(b.max_digit(), 255);
+        assert_eq!(Base::default().s(), 65536);
+    }
+
+    #[test]
+    #[should_panic(expected = "base must be")]
+    fn base_rejects_wide() {
+        Base::new(17);
+    }
+
+    #[test]
+    fn ops_counter() {
+        let mut o = Ops::default();
+        o.charge(5);
+        o.charge(7);
+        assert_eq!(o.get(), 12);
+    }
+}

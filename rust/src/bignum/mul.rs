@@ -1,0 +1,359 @@
+//! Sequential integer multiplication: the recursion leaves of COPSIM/COPK.
+//!
+//! * [`mul_school`] — iterative schoolbook; the correctness oracle and the
+//!   fastest pure-Rust leaf (operand-scanning with u64 accumulation).
+//! * [`slim`] — the paper's recursive long multiplication `SLIM` (§5):
+//!   four half-size subproducts combined by shifted additions. Fact 10
+//!   bounds it by `8n²` digit ops and `8n` words of space.
+//! * [`skim`] — the paper's Karatsuba `SKIM` (§6): three subproducts
+//!   `A0·B0`, `|A0−A1|·|B1−B0|` (with sign), `A1·B1`. Fact 13 bounds it by
+//!   `16·n^(log₂3)` digit ops and `8n` words of space.
+//!
+//! All functions return the full `len(a) + len(b)`-digit product
+//! (LSB-first, not trimmed) and charge exact digit-operation counts.
+
+use super::core::{add_into_width, add_with_carry, cmp_digits, sub_with_borrow};
+use super::{Base, Ops};
+use std::cmp::Ordering;
+
+/// Iterative schoolbook product (operand scanning). Exact for any widths.
+/// Charges one op per digit-multiply and one per digit-add of the
+/// accumulation, i.e. `2·|a|·|b|` ops.
+pub fn mul_school(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+    let (na, nb) = (a.len(), b.len());
+    let mut out = vec![0u32; na + nb];
+    if na == 0 || nb == 0 {
+        return out;
+    }
+    let mask = base.mask();
+    let log2 = base.log2;
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0 {
+            // Digit ops for scanning a zero row are still comparisons in
+            // the abstract model, but the paper's op count charges
+            // products; we skip for speed and charge the row anyway to
+            // stay faithful to the model's worst case.
+            ops.charge(2 * nb as u64);
+            continue;
+        }
+        let ai = ai as u64;
+        let mut carry = 0u64;
+        for (j, &bj) in b.iter().enumerate() {
+            let t = out[i + j] as u64 + ai * bj as u64 + carry;
+            out[i + j] = (t & mask) as u32;
+            carry = t >> log2;
+        }
+        let mut k = i + nb;
+        while carry != 0 {
+            let t = out[k] as u64 + (carry & mask);
+            out[k] = (t & mask) as u32;
+            carry = (carry >> log2) + (t >> log2);
+            k += 1;
+        }
+        ops.charge(2 * nb as u64);
+    }
+    out
+}
+
+/// Width below which the recursive algorithms multiply directly.
+/// 1 reproduces the paper's recursions exactly; the public entry points
+/// use a small threshold for speed without affecting the op bounds
+/// (direct multiply of w digits charges 2w² <= the recursion's cost).
+pub const LEAF_WIDTH: usize = 64;
+
+/// `SLIM` — recursive long multiplication (paper §5, Fact 10).
+///
+/// Requires `a.len() == b.len() == n` with `n` a power of two (the paper
+/// pads otherwise; callers pad via [`super::convert::pad_pow2`]).
+/// Returns the `2n`-digit product.
+pub fn slim(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+    let n = a.len();
+    assert_eq!(n, b.len(), "SLIM requires equal widths");
+    assert!(n.is_power_of_two(), "SLIM requires power-of-two width");
+    if n <= LEAF_WIDTH {
+        return mul_school(a, b, base, ops);
+    }
+    let h = n / 2;
+    let (a0, a1) = (&a[..h], &a[h..]);
+    let (b0, b1) = (&b[..h], &b[h..]);
+    // Four recursive subproducts (each n digits wide).
+    let c0 = slim(a0, b0, base, ops);
+    let c1 = slim(a0, b1, base, ops);
+    let c2 = slim(a1, b0, base, ops);
+    let c3 = slim(a1, b1, base, ops);
+    // C = C0 + s^h (C1 + C2) + s^n C3, assembled into 2n digits.
+    let mut out = vec![0u32; 2 * n];
+    out[..2 * h].copy_from_slice(&c0);
+    add_into_width(&mut out, &c1, h, base, ops);
+    add_into_width(&mut out, &c2, h, base, ops);
+    add_into_width(&mut out, &c3, n, base, ops);
+    out
+}
+
+/// `SKIM` — recursive Karatsuba multiplication (paper §6, Fact 13).
+///
+/// Same width requirements as [`slim`]. Returns the `2n`-digit product.
+///
+/// Recursion per the paper: `C0 = A0·B0`, `C' = |A0−A1|·|B1−B0|` with sign
+/// `f_A·f_B`, `C2 = A1·B1`; then `C1 = f_A·f_B·C' + C0 + C2` and
+/// `C = C0 + s^(n/2)·C1 + s^n·C2`.
+pub fn skim(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+    let n = a.len();
+    assert_eq!(n, b.len(), "SKIM requires equal widths");
+    assert!(n.is_power_of_two(), "SKIM requires power-of-two width");
+    if n <= LEAF_WIDTH {
+        return mul_school(a, b, base, ops);
+    }
+    let h = n / 2;
+    let (a0, a1) = (&a[..h], &a[h..]);
+    let (b0, b1) = (&b[..h], &b[h..]);
+
+    // |A0 - A1| with sign f_A, |B1 - B0| with sign f_B.
+    let (fa, ad) = abs_diff(a0, a1, base, ops);
+    let (fb, bd) = abs_diff(b1, b0, base, ops);
+
+    let c0 = skim(a0, b0, base, ops);
+    let c2 = skim(a1, b1, base, ops);
+    let cp = skim(&ad, &bd, base, ops);
+    let sign = fa * fb; // sign of (A0-A1)(B1-B0)
+
+    // C = C0 + s^h (C0 + C2 ± C') + s^n C2
+    let mut out = vec![0u32; 2 * n];
+    out[..2 * h].copy_from_slice(&c0);
+    add_into_width(&mut out, &c0, h, base, ops);
+    add_into_width(&mut out, &c2, h, base, ops);
+    add_into_width(&mut out, &c2, n, base, ops);
+    match sign.cmp(&0) {
+        Ordering::Greater => add_into_width(&mut out, &cp, h, base, ops),
+        Ordering::Less => sub_into_width(&mut out, &cp, h, base, ops),
+        Ordering::Equal => {}
+    }
+    out
+}
+
+/// `|x - y|` plus a sign flag in {-1, 0, 1} (1 if x > y).
+/// Both operands must share a width; the result has that width.
+pub fn abs_diff(x: &[u32], y: &[u32], base: Base, ops: &mut Ops) -> (i32, Vec<u32>) {
+    match cmp_digits(x, y, ops) {
+        Ordering::Equal => (0, vec![0u32; x.len()]),
+        Ordering::Greater => {
+            let (d, bo) = sub_with_borrow(x, y, 0, base, ops);
+            debug_assert_eq!(bo, 0);
+            (1, d)
+        }
+        Ordering::Less => {
+            let (d, bo) = sub_with_borrow(y, x, 0, base, ops);
+            debug_assert_eq!(bo, 0);
+            (-1, d)
+        }
+    }
+}
+
+/// Subtract `src` from `dst` at digit offset `off`, borrowing through
+/// `dst`. The overall value must stay non-negative (guaranteed when
+/// subtracting C' in Karatsuba). Charges one op per touched digit.
+fn sub_into_width(dst: &mut [u32], src: &[u32], off: usize, base: Base, ops: &mut Ops) {
+    let mut borrow = 0i64;
+    let mut i = 0;
+    let s = base.s() as i64;
+    while i < src.len() || borrow != 0 {
+        let d = off + i;
+        assert!(d < dst.len(), "sub_into_width underflow past top digit");
+        let sub = if i < src.len() { src[i] as i64 } else { 0 };
+        let mut t = dst[d] as i64 - sub - borrow;
+        if t < 0 {
+            t += s;
+            borrow = 1;
+        } else {
+            borrow = 0;
+        }
+        dst[d] = t as u32;
+        ops.charge(1);
+        i += 1;
+    }
+}
+
+/// Hybrid leaf multiplier (§7): Karatsuba above `threshold` digits,
+/// schoolbook below — the classical crossover mirroring the paper's
+/// COPSIM/COPK hybridization at the sequential level.
+pub fn mul_hybrid(a: &[u32], b: &[u32], threshold: usize, base: Base, ops: &mut Ops) -> Vec<u32> {
+    let n = a.len();
+    assert_eq!(n, b.len());
+    assert!(n.is_power_of_two());
+    if n <= threshold || n <= LEAF_WIDTH {
+        return mul_school(a, b, base, ops);
+    }
+    // One Karatsuba level, then recurse hybrid.
+    let h = n / 2;
+    let (a0, a1) = (&a[..h], &a[h..]);
+    let (b0, b1) = (&b[..h], &b[h..]);
+    let (fa, ad) = abs_diff(a0, a1, base, ops);
+    let (fb, bd) = abs_diff(b1, b0, base, ops);
+    let c0 = mul_hybrid(a0, b0, threshold, base, ops);
+    let c2 = mul_hybrid(a1, b1, threshold, base, ops);
+    let cp = mul_hybrid(&ad, &bd, threshold, base, ops);
+    let sign = fa * fb;
+    let mut out = vec![0u32; 2 * n];
+    out[..2 * h].copy_from_slice(&c0);
+    add_into_width(&mut out, &c0, h, base, ops);
+    add_into_width(&mut out, &c2, h, base, ops);
+    add_into_width(&mut out, &c2, n, base, ops);
+    match sign.cmp(&0) {
+        Ordering::Greater => add_into_width(&mut out, &cp, h, base, ops),
+        Ordering::Less => sub_into_width(&mut out, &cp, h, base, ops),
+        Ordering::Equal => {}
+    }
+    out
+}
+
+/// Fixed-width addition used by tests: `(a + b) mod s^w` with carry out.
+pub fn checked_add(a: &[u32], b: &[u32], base: Base) -> (Vec<u32>, u32) {
+    let mut ops = Ops::default();
+    add_with_carry(a, b, 0, base, &mut ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::convert::{from_u128, to_u128};
+    use crate::util::Rng;
+
+    fn b16() -> Base {
+        Base::new(16)
+    }
+
+    #[test]
+    fn school_small() {
+        let mut ops = Ops::default();
+        let a = from_u128(0x1234_5678, 4, b16());
+        let b = from_u128(0x9ABC_DEF0, 4, b16());
+        let c = mul_school(&a, &b, b16(), &mut ops);
+        assert_eq!(to_u128(&c, b16()), 0x1234_5678u128 * 0x9ABC_DEF0u128);
+        assert_eq!(ops.get(), 2 * 4 * 4);
+    }
+
+    #[test]
+    fn slim_matches_school() {
+        let mut rng = Rng::new(0xC0DE);
+        for &n in &[1usize, 2, 4, 8, 16, 32, 64] {
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut o1 = Ops::default();
+            let mut o2 = Ops::default();
+            let c1 = mul_school(&a, &b, b16(), &mut o1);
+            let c2 = slim(&a, &b, b16(), &mut o2);
+            assert_eq!(c1, c2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn skim_matches_school() {
+        let mut rng = Rng::new(0xBEEF);
+        for &n in &[1usize, 2, 4, 8, 16, 32, 64, 128] {
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut o1 = Ops::default();
+            let mut o2 = Ops::default();
+            let c1 = mul_school(&a, &b, b16(), &mut o1);
+            let c2 = skim(&a, &b, b16(), &mut o2);
+            assert_eq!(c1, c2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn hybrid_matches_school() {
+        let mut rng = Rng::new(0xFACE);
+        for &n in &[16usize, 32, 64, 128] {
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut o1 = Ops::default();
+            let mut o2 = Ops::default();
+            let c1 = mul_school(&a, &b, b16(), &mut o1);
+            let c2 = mul_hybrid(&a, &b, 32, b16(), &mut o2);
+            assert_eq!(c1, c2, "n={n}");
+        }
+    }
+
+    /// Fact 10: SLIM uses at most 8n² digit ops.
+    #[test]
+    fn slim_op_bound_fact10() {
+        let mut rng = Rng::new(0x510);
+        for &n in &[16usize, 64, 256] {
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut ops = Ops::default();
+            slim(&a, &b, b16(), &mut ops);
+            let bound = 8 * (n as u64) * (n as u64);
+            assert!(
+                ops.get() <= bound,
+                "SLIM n={n}: {} > 8n² = {bound}",
+                ops.get()
+            );
+        }
+    }
+
+    /// Fact 13: SKIM uses at most 16·n^(log₂3) digit ops.
+    #[test]
+    fn skim_op_bound_fact13() {
+        let mut rng = Rng::new(0x513);
+        for &n in &[16usize, 64, 256, 1024] {
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut ops = Ops::default();
+            skim(&a, &b, b16(), &mut ops);
+            let bound = (16.0 * crate::util::pow_log2_3(n as f64)).ceil() as u64;
+            assert!(
+                ops.get() <= bound,
+                "SKIM n={n}: {} > 16·n^lg3 = {bound}",
+                ops.get()
+            );
+        }
+    }
+
+    /// SKIM asymptotically beats SLIM in ops (the motivation for COPK).
+    #[test]
+    fn skim_cheaper_than_slim_at_scale() {
+        let mut rng = Rng::new(0x333);
+        let n = 1024;
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let mut o_slim = Ops::default();
+        let mut o_skim = Ops::default();
+        slim(&a, &b, b16(), &mut o_slim);
+        skim(&a, &b, b16(), &mut o_skim);
+        assert!(
+            o_skim.get() < o_slim.get(),
+            "karatsuba {} !< schoolbook {}",
+            o_skim.get(),
+            o_slim.get()
+        );
+    }
+
+    #[test]
+    fn abs_diff_signs() {
+        let mut ops = Ops::default();
+        let (f, d) = abs_diff(&[5, 0], &[3, 0], b16(), &mut ops);
+        assert_eq!((f, d), (1, vec![2, 0]));
+        let (f, d) = abs_diff(&[3, 0], &[5, 0], b16(), &mut ops);
+        assert_eq!((f, d), (-1, vec![2, 0]));
+        let (f, d) = abs_diff(&[7, 7], &[7, 7], b16(), &mut ops);
+        assert_eq!((f, d), (0, vec![0, 0]));
+    }
+
+    #[test]
+    fn base256_products() {
+        // Exactness in the XLA-leaf base (2^8).
+        let b8 = Base::new(8);
+        let mut rng = Rng::new(0x888);
+        for &n in &[8usize, 32] {
+            let a = rng.digits(n, 8);
+            let b = rng.digits(n, 8);
+            let mut o1 = Ops::default();
+            let mut o2 = Ops::default();
+            assert_eq!(
+                mul_school(&a, &b, b8, &mut o1),
+                skim(&a, &b, b8, &mut o2)
+            );
+        }
+    }
+}

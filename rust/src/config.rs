@@ -1,0 +1,216 @@
+//! Run configuration: defaults, `key=value` overrides (CLI), and a
+//! minimal config-file format (same `key = value` lines, `#` comments)
+//! — serde/toml are not available in this offline build.
+
+use crate::algorithms::Algorithm;
+use crate::bignum::Base;
+use crate::theory::TimeModel;
+use anyhow::{bail, Context, Result};
+
+/// Which sequential leaf backend the recursion bottoms out on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafKind {
+    Slim,
+    Skim,
+    School,
+    Hybrid,
+    /// AOT-compiled JAX+Pallas artifact via PJRT.
+    Xla,
+    /// XLA with coordinator-level dynamic batching.
+    XlaBatched,
+}
+
+impl std::str::FromStr for LeafKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "slim" => LeafKind::Slim,
+            "skim" => LeafKind::Skim,
+            "school" => LeafKind::School,
+            "hybrid" => LeafKind::Hybrid,
+            "xla" => LeafKind::Xla,
+            "xla-batched" => LeafKind::XlaBatched,
+            _ => bail!("unknown leaf backend `{s}` (slim|skim|school|hybrid|xla|xla-batched)"),
+        })
+    }
+}
+
+/// Top-level run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Input size in machine-base digits.
+    pub n: usize,
+    /// Simulated processors.
+    pub procs: usize,
+    /// Per-processor memory cap (words); None = unbounded.
+    pub mem_cap: Option<u64>,
+    /// Digit base = 2^base_log2.
+    pub base_log2: u32,
+    /// Forced algorithm; None = hybrid dispatch.
+    pub algo: Option<Algorithm>,
+    pub leaf: LeafKind,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub time_model: TimeModel,
+    /// Coordinator worker threads.
+    pub workers: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n: 4096,
+            procs: 16,
+            mem_cap: None,
+            base_log2: 16,
+            algo: None,
+            leaf: LeafKind::Skim,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            time_model: TimeModel::default(),
+            workers: 4,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn base(&self) -> Base {
+        Base::new(self.base_log2)
+    }
+
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "n" => self.n = value.parse().context("n")?,
+            "procs" | "p" => self.procs = value.parse().context("procs")?,
+            "mem" | "mem_cap" => {
+                self.mem_cap = if value == "unbounded" {
+                    None
+                } else {
+                    Some(value.parse().context("mem_cap")?)
+                }
+            }
+            "base_log2" => self.base_log2 = value.parse().context("base_log2")?,
+            "algo" => {
+                self.algo = match value {
+                    "copsim" => Some(Algorithm::Copsim),
+                    "copk" => Some(Algorithm::Copk),
+                    "hybrid" | "auto" => None,
+                    _ => bail!("unknown algo `{value}` (copsim|copk|hybrid)"),
+                }
+            }
+            "leaf" => self.leaf = value.parse()?,
+            "seed" => self.seed = value.parse().context("seed")?,
+            "artifacts" | "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "workers" => self.workers = value.parse().context("workers")?,
+            "alpha_ns" => self.time_model.alpha_ns = value.parse().context("alpha_ns")?,
+            "beta_ns" => self.time_model.beta_ns = value.parse().context("beta_ns")?,
+            "gamma_ns" => self.time_model.gamma_ns = value.parse().context("gamma_ns")?,
+            _ => bail!("unknown config key `{key}`"),
+        }
+        Ok(())
+    }
+
+    /// Apply a list of `key=value` strings (CLI tail arguments).
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        for arg in args {
+            let (k, v) = arg
+                .split_once('=')
+                .with_context(|| format!("expected key=value, got `{arg}`"))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines from a file (`#` comments allowed).
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        for (lineno, line) in src.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("{path}:{}: expected key = value", lineno + 1))?;
+            self.set(k.trim(), v.trim())
+                .with_context(|| format!("{path}:{}", lineno + 1))?;
+        }
+        Ok(())
+    }
+
+    /// Validate the (n, P, M) shape against the paper's requirements.
+    pub fn validate(&self) -> Result<()> {
+        use crate::algorithms::copsim::is_pow4;
+        use crate::util::is_copk_procs;
+        let p = self.procs as u64;
+        match self.algo {
+            Some(Algorithm::Copsim) if !is_pow4(self.procs) => {
+                bail!("COPSIM needs procs = 4^k, got {p}")
+            }
+            Some(Algorithm::Copk) if !(p == 1 || is_copk_procs(p)) => {
+                bail!("COPK needs procs = 4·3^i, got {p}")
+            }
+            None if !is_pow4(self.procs) && !is_copk_procs(p) && p != 1 => {
+                bail!("procs = {p} fits neither COPSIM (4^k) nor COPK (4·3^i)")
+            }
+            _ => {}
+        }
+        if let Some(m) = self.mem_cap {
+            if m < (self.n as u64) * 2 / (self.procs as u64).max(1) {
+                bail!(
+                    "mem_cap {m} cannot even hold the input chunks \
+                     (need >= 2n/P = {})",
+                    2 * self.n as u64 / self.procs as u64
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overrides_parse() {
+        let mut c = RunConfig::default();
+        c.apply_args(&[
+            "n=1024".into(),
+            "procs=64".into(),
+            "algo=copsim".into(),
+            "leaf=school".into(),
+            "mem=4096".into(),
+        ])
+        .unwrap();
+        assert_eq!(c.n, 1024);
+        assert_eq!(c.procs, 64);
+        assert_eq!(c.algo, Some(Algorithm::Copsim));
+        assert_eq!(c.leaf, LeafKind::School);
+        assert_eq!(c.mem_cap, Some(4096));
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_keys_and_shapes() {
+        let mut c = RunConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("algo", "toomcook").is_err());
+        c.procs = 8;
+        c.algo = Some(Algorithm::Copsim);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn loads_file() {
+        let path = std::env::temp_dir().join("copmul-config-test.conf");
+        std::fs::write(&path, "# comment\nn = 2048\nprocs = 12\nalgo = copk\n").unwrap();
+        let mut c = RunConfig::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.n, 2048);
+        assert_eq!(c.procs, 12);
+        assert_eq!(c.algo, Some(Algorithm::Copk));
+        c.validate().unwrap();
+    }
+}

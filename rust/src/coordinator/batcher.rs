@@ -1,0 +1,315 @@
+//! Dynamic batching of leaf products onto the XLA runtime.
+//!
+//! Multiple coordinator workers reach their recursion leaves
+//! concurrently; instead of dispatching one PJRT execution per product,
+//! requests that fit the batched artifact (e.g. `B = 8, K = 256`) are
+//! coalesced: the request that fills the batch — or the first whose
+//! linger timer expires — becomes the *flusher*, executes one batched
+//! artifact call (padding missing rows with zeros), and distributes the
+//! output rows. This is the vLLM-style continuous-batching idea applied
+//! to the leaf kernel.
+
+use crate::algorithms::leaf::LeafMultiplier;
+use crate::bignum::{Base, Ops};
+use crate::runtime::artifacts::ArtifactInfo;
+use crate::runtime::leaf::{repacked_mul, split_mul8};
+use crate::runtime::XlaRuntime;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Result slot a waiting request parks on.
+struct Cell {
+    out: Mutex<Option<Vec<u32>>>,
+    cv: Condvar,
+}
+
+struct Pending {
+    a: Vec<u32>, // exactly K base-256 digits
+    b: Vec<u32>,
+    cell: Arc<Cell>,
+}
+
+/// Batching statistics (observability for the e2e example / benches).
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub requests: AtomicU64,
+    pub executions: AtomicU64,
+    pub batched_rows: AtomicU64,
+}
+
+impl BatcherStats {
+    /// Mean rows per artifact execution (1.0 = no batching win).
+    pub fn mean_batch(&self) -> f64 {
+        let ex = self.executions.load(Ordering::Relaxed);
+        if ex == 0 {
+            return 0.0;
+        }
+        self.batched_rows.load(Ordering::Relaxed) as f64 / ex as f64
+    }
+}
+
+/// One batch bucket: a batched artifact shape plus its pending queue.
+/// Requests are routed to the smallest-K bucket they fit, so narrow
+/// leaves don't pay for wide kernels.
+struct Bucket {
+    info: ArtifactInfo,
+    queue: Mutex<VecDeque<Pending>>,
+}
+
+/// A [`LeafMultiplier`] that coalesces concurrent leaf products into
+/// batched artifact executions.
+pub struct BatchingXlaLeaf {
+    rt: Arc<XlaRuntime>,
+    buckets: Vec<Bucket>,
+    max_k: usize,
+    /// How long a lone request lingers for company before flushing.
+    pub linger: Duration,
+    pub stats: BatcherStats,
+}
+
+impl BatchingXlaLeaf {
+    /// Build one bucket per batched (`batch > 1`) artifact of `entry`,
+    /// sorted by K ascending.
+    pub fn new(rt: Arc<XlaRuntime>, entry: &str) -> Self {
+        let mut infos: Vec<ArtifactInfo> = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.batch > 1)
+            .cloned()
+            .collect();
+        if infos.is_empty() {
+            // Fall back to whatever exists (degenerates to batch = 1).
+            infos = rt
+                .manifest()
+                .artifacts
+                .iter()
+                .filter(|a| a.entry == entry)
+                .cloned()
+                .collect();
+        }
+        assert!(!infos.is_empty(), "no `{entry}` artifacts for batching");
+        infos.sort_by_key(|a| a.k);
+        let max_k = infos.last().unwrap().k;
+        BatchingXlaLeaf {
+            rt,
+            buckets: infos
+                .into_iter()
+                .map(|info| Bucket {
+                    info,
+                    queue: Mutex::new(VecDeque::new()),
+                })
+                .collect(),
+            max_k,
+            linger: Duration::from_micros(60),
+            stats: BatcherStats::default(),
+        }
+    }
+
+    /// Enqueue one pair into its K bucket and wait for the product row.
+    fn mul_fit(&self, a: &[u32], b: &[u32]) -> Vec<u32> {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let bucket = self
+            .buckets
+            .iter()
+            .find(|bk| bk.info.k >= a.len())
+            .expect("operand exceeds every bucket (split_mul8 should have split it)");
+        let k = bucket.info.k;
+        let mut pa = a.to_vec();
+        let mut pb = b.to_vec();
+        pa.resize(k, 0);
+        pb.resize(k, 0);
+        let cell = Arc::new(Cell {
+            out: Mutex::new(None),
+            cv: Condvar::new(),
+        });
+        {
+            let mut q = bucket.queue.lock().unwrap();
+            q.push_back(Pending {
+                a: pa,
+                b: pb,
+                cell: Arc::clone(&cell),
+            });
+            if q.len() >= bucket.info.batch {
+                let batch: Vec<Pending> = q.drain(..bucket.info.batch).collect();
+                drop(q);
+                self.flush(bucket, batch);
+            }
+        }
+        let deadline = Instant::now() + self.linger;
+        loop {
+            // Parked until filled, with linger timeout for the flusher role.
+            {
+                let guard = cell.out.lock().unwrap();
+                if guard.is_some() {
+                    return guard.clone().unwrap();
+                }
+                let wait = deadline.saturating_duration_since(Instant::now());
+                if !wait.is_zero() {
+                    let (guard, _timeout) = cell.cv.wait_timeout(guard, wait).unwrap();
+                    if guard.is_some() {
+                        return guard.clone().unwrap();
+                    }
+                    continue;
+                }
+            }
+            // Linger expired: flush whatever is queued (including us,
+            // unless someone else already took it).
+            let batch: Vec<Pending> = {
+                let mut q = bucket.queue.lock().unwrap();
+                let take = q.len().min(bucket.info.batch);
+                q.drain(..take).collect()
+            };
+            if !batch.is_empty() {
+                self.flush(bucket, batch);
+            }
+            // Either we were in that batch (cell now filled) or another
+            // flusher has us; loop re-checks the cell.
+            let guard = cell.out.lock().unwrap();
+            if let Some(v) = guard.clone() {
+                return v;
+            }
+            let (guard, _timeout) = cell
+                .cv
+                .wait_timeout(guard, Duration::from_millis(5))
+                .unwrap();
+            if let Some(v) = guard.clone() {
+                return v;
+            }
+        }
+    }
+
+    /// Execute one batched artifact call and distribute the rows.
+    fn flush(&self, bucket: &Bucket, batch: Vec<Pending>) {
+        let (bsz, k) = (bucket.info.batch, bucket.info.k);
+        let mut fa = vec![0i32; bsz * k];
+        let mut fb = vec![0i32; bsz * k];
+        for (row, p) in batch.iter().enumerate() {
+            for (i, &d) in p.a.iter().enumerate() {
+                fa[row * k + i] = d as i32;
+            }
+            for (i, &d) in p.b.iter().enumerate() {
+                fb[row * k + i] = d as i32;
+            }
+        }
+        let out = self
+            .rt
+            .execute(&bucket.info, &fa, &fb)
+            .expect("batched XLA execution failed");
+        self.stats.executions.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .batched_rows
+            .fetch_add(batch.len() as u64, Ordering::Relaxed);
+        for (row, p) in batch.into_iter().enumerate() {
+            let digits: Vec<u32> = out[row * 2 * k..(row + 1) * 2 * k]
+                .iter()
+                .map(|&d| d as u32)
+                .collect();
+            *p.cell.out.lock().unwrap() = Some(digits);
+            p.cell.cv.notify_all();
+        }
+    }
+
+    /// Precompile every bucket artifact (hide compile from serving).
+    pub fn warmup(&self) -> anyhow::Result<()> {
+        for b in &self.buckets {
+            let za = vec![0i32; b.info.batch * b.info.k];
+            let zb = vec![0i32; b.info.batch * b.info.k];
+            self.rt.execute(&b.info, &za, &zb)?;
+        }
+        Ok(())
+    }
+}
+
+impl LeafMultiplier for BatchingXlaLeaf {
+    fn name(&self) -> &'static str {
+        "xla-batched"
+    }
+
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+        let mut fit = |x: &[u32], y: &[u32], ops: &mut Ops| -> Vec<u32> {
+            let k = x.len();
+            ops.charge(2 * (k as u64) * (k as u64));
+            let mut row = self.mul_fit(x, y);
+            row.truncate(2 * k);
+            row
+        };
+        let max_k = self.max_k;
+        repacked_mul(
+            &mut |a8, b8, ops| split_mul8(&mut fit, max_k, a8, b8, ops),
+            a,
+            b,
+            base,
+            ops,
+        )
+    }
+
+    fn scratch_words(&self, w: usize) -> usize {
+        4 * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::mul;
+    use crate::runtime::DEFAULT_ARTIFACTS_DIR;
+    use crate::util::Rng;
+
+    fn batcher() -> Option<Arc<BatchingXlaLeaf>> {
+        let rt = XlaRuntime::new(DEFAULT_ARTIFACTS_DIR).ok()?;
+        Some(Arc::new(BatchingXlaLeaf::new(Arc::new(rt), "school")))
+    }
+
+    #[test]
+    fn single_request_flushes_after_linger() {
+        let Some(b) = batcher() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let base = Base::new(16);
+        let mut rng = Rng::new(1);
+        let x = rng.digits(32, 16);
+        let y = rng.digits(32, 16);
+        let mut o1 = Ops::default();
+        let mut o2 = Ops::default();
+        let got = b.mul(&x, &y, base, &mut o1);
+        assert_eq!(got, mul::mul_school(&x, &y, base, &mut o2));
+        assert_eq!(b.stats.executions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let Some(b) = batcher() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let base = Base::new(16);
+        let n_threads = 8;
+        let mut handles = Vec::new();
+        for t in 0..n_threads {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t as u64);
+                let x = rng.digits(64, 16);
+                let y = rng.digits(64, 16);
+                let mut o1 = Ops::default();
+                let mut o2 = Ops::default();
+                let got = b.mul(&x, &y, base, &mut o1);
+                let want = mul::mul_school(&x, &y, base, &mut o2);
+                assert_eq!(got, want, "thread {t}");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // 8 concurrent requests into a B=8 artifact: strictly fewer
+        // executions than requests proves coalescing happened.
+        let ex = b.stats.executions.load(Ordering::Relaxed);
+        let rq = b.stats.requests.load(Ordering::Relaxed);
+        assert_eq!(rq, 8);
+        assert!(ex < rq, "no batching: {ex} executions for {rq} requests");
+    }
+}

@@ -1,0 +1,100 @@
+//! Job types and input normalization.
+
+use crate::algorithms::Algorithm;
+use crate::sim::Clock;
+use crate::util::{copk_bfs_levels, is_copk_procs, next_pow2};
+use std::time::Duration;
+
+/// A multiplication request. Operand digits are LSB-first in the
+/// machine base (2^16 by default); widths may be arbitrary — the
+/// coordinator pads to the algorithm's layout requirements.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub id: u64,
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+    /// Simulated processors (4^k for COPSIM, 4·3^i for COPK; 4 fits
+    /// both). Defaults to 4.
+    pub procs: usize,
+    /// Per-processor memory cap in words (None = unbounded → MI mode).
+    pub mem_cap: Option<u64>,
+    /// Force a scheme; None lets the §7 hybrid dispatcher choose.
+    pub algo: Option<Algorithm>,
+}
+
+impl JobSpec {
+    pub fn new(id: u64, a: Vec<u32>, b: Vec<u32>) -> Self {
+        JobSpec {
+            id,
+            a,
+            b,
+            procs: 4,
+            mem_cap: None,
+            algo: None,
+        }
+    }
+
+    /// Padded working width: `n = w·P` with `w` a power of two large
+    /// enough for both operands, so every divisibility constraint of
+    /// both schemes (halving in DFS, 3/2-scaling in COPK's BFS — powers
+    /// of two are divisible by `2^levels` whenever `w >= 2^levels`)
+    /// holds.
+    pub fn padded_width(&self) -> usize {
+        let p = self.procs;
+        let len = self.a.len().max(self.b.len()).max(1);
+        let mut w = next_pow2(len.div_ceil(p) as u64) as usize;
+        if is_copk_procs(p as u64) {
+            let lv = copk_bfs_levels(p as u64);
+            while (w as u64) < (1u64 << lv) {
+                w *= 2;
+            }
+        }
+        w * p
+    }
+}
+
+/// A completed multiplication.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: u64,
+    /// Product digits, LSB-first, trimmed of leading zeros.
+    pub product: Vec<u32>,
+    /// Scheme that ran.
+    pub algo: Algorithm,
+    /// Simulated critical-path cost.
+    pub cost: Clock,
+    /// Peak per-processor memory words.
+    pub mem_peak: u64,
+    /// Host wallclock for the whole job.
+    pub wall: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_rules() {
+        let j = JobSpec {
+            id: 0,
+            a: vec![1; 100],
+            b: vec![1; 90],
+            procs: 16,
+            mem_cap: None,
+            algo: None,
+        };
+        let n = j.padded_width();
+        assert_eq!(n % 16, 0);
+        assert!(n >= 100);
+        assert!((n / 16).is_power_of_two());
+
+        // COPK shape: w must also cover 2^levels.
+        let j = JobSpec {
+            procs: 108, // 4·3^3 -> levels = 3
+            ..JobSpec::new(1, vec![1; 10], vec![1; 10])
+        };
+        let n = j.padded_width();
+        assert_eq!(n % 108, 0);
+        assert!((n / 108) >= 8);
+    }
+}

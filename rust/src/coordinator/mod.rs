@@ -1,0 +1,25 @@
+//! Coordinator — the serving layer: a multi-threaded job router that
+//! executes multiplication requests over simulated machines, with leaf
+//! products optionally dispatched (and dynamically batched) onto the
+//! XLA runtime.
+//!
+//! Layering (paper terms): the *coordination contribution* of the paper
+//! is COPSIM/COPK themselves; this module is the production harness a
+//! downstream user drives them with — request intake, per-job machine
+//! construction, scheme selection (§7 hybrid), leaf batching, and
+//! metrics.
+//!
+//! * [`job`] — request/response types and input padding rules.
+//! * [`router`] — worker pool (std::thread; tokio is not available in
+//!   this offline build) with a shared work queue.
+//! * [`batcher`] — dynamic batcher: concurrent leaf products from
+//!   different workers are coalesced into one batched artifact
+//!   execution (padding the batch dimension), amortizing PJRT dispatch.
+
+pub mod batcher;
+pub mod job;
+pub mod router;
+
+pub use batcher::BatchingXlaLeaf;
+pub use job::{JobResult, JobSpec};
+pub use router::{Coordinator, CoordinatorConfig, CoordinatorStats};

@@ -1,0 +1,276 @@
+//! Worker pool and request routing.
+
+use super::job::{JobResult, JobSpec};
+use crate::algorithms::leaf::LeafMultiplier;
+use crate::algorithms::{copk, copsim, hybrid, Algorithm};
+use crate::bignum::core::normalized_len;
+use crate::bignum::Base;
+use crate::sim::{DistInt, Machine, Seq};
+use crate::theory::TimeModel;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads (each runs one simulated machine at a time).
+    pub workers: usize,
+    /// Machine digit base.
+    pub base: Base,
+    /// Time model used by the hybrid dispatcher.
+    pub time_model: TimeModel,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+            base: Base::default(),
+            time_model: TimeModel::default(),
+        }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default)]
+pub struct CoordinatorStats {
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub total_wall_us: AtomicU64,
+}
+
+impl CoordinatorStats {
+    pub fn throughput_jobs_per_s(&self) -> f64 {
+        let jobs = self.jobs_completed.load(Ordering::Relaxed) as f64;
+        let us = self.total_wall_us.load(Ordering::Relaxed) as f64;
+        if us == 0.0 {
+            0.0
+        } else {
+            jobs / (us / 1e6)
+        }
+    }
+}
+
+type Reply = Sender<Result<JobResult>>;
+
+/// The coordinator: accepts [`JobSpec`]s, runs them on a worker pool,
+/// returns [`JobResult`]s through per-job channels.
+pub struct Coordinator {
+    tx: Option<Sender<(JobSpec, Reply)>>,
+    workers: Vec<JoinHandle<()>>,
+    pub stats: Arc<CoordinatorStats>,
+}
+
+impl Coordinator {
+    /// Start the worker pool. `leaf` is shared by all workers (the
+    /// batching XLA leaf coalesces across workers — that is the point).
+    pub fn start(cfg: CoordinatorConfig, leaf: Arc<dyn LeafMultiplier + Send + Sync>) -> Self {
+        let (tx, rx) = channel::<(JobSpec, Reply)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(CoordinatorStats::default());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let leaf = Arc::clone(&leaf);
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok((spec, reply)) = msg else { break };
+                let t0 = Instant::now();
+                let res = run_job(&cfg, &spec, leaf.as_ref());
+                match &res {
+                    Ok(_) => {
+                        stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                        stats
+                            .total_wall_us
+                            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let _ = reply.send(res);
+            }));
+        }
+        Coordinator {
+            tx: Some(tx),
+            workers,
+            stats,
+        }
+    }
+
+    /// Submit a job; the result arrives on the returned channel.
+    pub fn submit(&self, spec: JobSpec) -> Receiver<Result<JobResult>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("coordinator already shut down")
+            .send((spec, reply_tx))
+            .expect("worker pool gone");
+        reply_rx
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, spec: JobSpec) -> Result<JobResult> {
+        self.submit(spec).recv().context("coordinator dropped reply")?
+    }
+
+    /// Drain and join the pool.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the queue
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one job on a fresh simulated machine.
+fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &dyn LeafMultiplier) -> Result<JobResult> {
+    let t0 = Instant::now();
+    let p = spec.procs;
+    let n = spec.padded_width();
+    let w = n / p;
+    let mem_cap = spec.mem_cap.unwrap_or(u64::MAX / 2);
+    let mut machine = Machine::new(p, mem_cap, cfg.base);
+    let seq = Seq::range(p);
+
+    let mut a = spec.a.clone();
+    let mut b = spec.b.clone();
+    a.resize(n, 0);
+    b.resize(n, 0);
+    let da = DistInt::scatter(&mut machine, &seq, &a, w)?;
+    let db = DistInt::scatter(&mut machine, &seq, &b, w)?;
+
+    let (c, algo) = match spec.algo {
+        Some(Algorithm::Copsim) => (copsim(&mut machine, &seq, da, db, leaf)?, Algorithm::Copsim),
+        Some(Algorithm::Copk) => (copk(&mut machine, &seq, da, db, leaf)?, Algorithm::Copk),
+        None => hybrid::hybrid_mul(&mut machine, &seq, da, db, leaf, &cfg.time_model)?,
+    };
+
+    let mut product = c.gather(&machine);
+    let keep = normalized_len(&product).max(1);
+    product.truncate(keep);
+    Ok(JobResult {
+        id: spec.id,
+        product,
+        algo,
+        cost: machine.critical(),
+        mem_peak: machine.mem_peak_max(),
+        wall: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::leaf::SkimLeaf;
+    use crate::bignum::convert::{parse_hex, to_hex};
+    use crate::bignum::{mul, Ops};
+    use crate::util::Rng;
+
+    fn start_default() -> Coordinator {
+        Coordinator::start(
+            CoordinatorConfig {
+                workers: 4,
+                ..Default::default()
+            },
+            Arc::new(SkimLeaf),
+        )
+    }
+
+    #[test]
+    fn serves_single_job() {
+        let coord = start_default();
+        let base = Base::default();
+        let a = parse_hex("deadbeef12345678", base).unwrap();
+        let b = parse_hex("cafebabe87654321", base).unwrap();
+        let res = coord
+            .submit_blocking(JobSpec::new(1, a.clone(), b.clone()))
+            .unwrap();
+        let mut ops = Ops::default();
+        let mut a4 = a.clone();
+        let mut b4 = b.clone();
+        a4.resize(4, 0);
+        b4.resize(4, 0);
+        let want = mul::mul_school(&a4, &b4, base, &mut ops);
+        let want_hex = to_hex(&want, base);
+        assert_eq!(to_hex(&res.product, base), want_hex);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn serves_many_jobs_concurrently() {
+        let coord = start_default();
+        let base = Base::default();
+        let mut rng = Rng::new(0x10B);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for id in 0..24u64 {
+            let n = 1usize << rng.range(3, 7);
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut ops = Ops::default();
+            let prod = mul::mul_school(&a, &b, base, &mut ops);
+            want.push(to_hex(&prod, base));
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = [4usize, 12, 16][id as usize % 3];
+            pending.push(coord.submit(spec));
+        }
+        for (i, rx) in pending.into_iter().enumerate() {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(to_hex(&res.product, base), want[i], "job {i}");
+        }
+        assert_eq!(
+            coord.stats.jobs_completed.load(Ordering::Relaxed),
+            24
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn respects_forced_algorithm() {
+        let coord = start_default();
+        let mut spec = JobSpec::new(9, vec![7; 64], vec![9; 64]);
+        spec.procs = 16;
+        spec.algo = Some(Algorithm::Copsim);
+        let res = coord.submit_blocking(spec).unwrap();
+        assert_eq!(res.algo, Algorithm::Copsim);
+        let mut spec = JobSpec::new(10, vec![7; 64], vec![9; 64]);
+        spec.procs = 12;
+        spec.algo = Some(Algorithm::Copk);
+        let res = coord.submit_blocking(spec).unwrap();
+        assert_eq!(res.algo, Algorithm::Copk);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reports_simulated_cost_and_memory() {
+        let coord = start_default();
+        let mut spec = JobSpec::new(2, vec![1; 256], vec![2; 256], );
+        spec.procs = 16;
+        let res = coord.submit_blocking(spec).unwrap();
+        assert!(res.cost.ops > 0);
+        assert!(res.cost.words > 0);
+        assert!(res.mem_peak > 0);
+        coord.shutdown();
+    }
+}

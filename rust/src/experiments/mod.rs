@@ -1,0 +1,216 @@
+//! Experiment harness: one entry per paper result (see DESIGN.md's
+//! experiment index). Every experiment prints
+//! `paper bound | measured | ratio` tables; EXPERIMENTS.md records the
+//! outputs.
+//!
+//! The paper has no empirical section — its "tables and figures" are
+//! the cost theorems. Reproducing it therefore means *measuring* the
+//! quantities the theorems bound on the instrumented machine model and
+//! checking (a) measured ≤ paper constant × bound for the upper bounds
+//! and (b) measured / lower-bound stays flat over sweeps for the
+//! optimality claims (Theorems 1 and 2).
+
+pub mod algorithms;
+pub mod primitives;
+pub mod systems;
+
+use crate::algorithms::leaf::{SchoolLeaf, SkimLeaf, SlimLeaf};
+use crate::algorithms::{copk, copk_mi, copsim, copsim_mi};
+use crate::bignum::Base;
+use crate::metrics::Table;
+use crate::sim::{Clock, DistInt, Machine, Seq};
+use crate::util::Rng;
+use anyhow::Result;
+
+/// Outcome of one simulated run.
+#[derive(Clone, Copy, Debug)]
+pub struct RunStats {
+    pub clock: Clock,
+    pub mem_peak: u64,
+    pub mem_total: u64,
+    pub total_ops: u64,
+}
+
+/// Which algorithm a helper run executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    CopsimMi,
+    CopsimMain,
+    CopkMi,
+    CopkMain,
+    Allgather,
+    CesariMaeder,
+}
+
+/// Run one multiplication and return its simulated statistics.
+/// `mem` of `None` = unbounded machine (MI setting).
+pub fn run_algo(algo: Algo, n: usize, p: usize, mem: Option<u64>, seed: u64) -> Result<RunStats> {
+    let base = Base::new(16);
+    let mut rng = Rng::new(seed);
+    let mut m = match mem {
+        Some(cap) => Machine::new(p, cap, base),
+        None => Machine::unbounded(p, base),
+    };
+    let seq = Seq::range(p);
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let da = DistInt::scatter(&mut m, &seq, &a, n / p)?;
+    let db = DistInt::scatter(&mut m, &seq, &b, n / p)?;
+    let c = match algo {
+        Algo::CopsimMi => copsim_mi(&mut m, &seq, da, db, &SlimLeaf)?,
+        Algo::CopsimMain => copsim(&mut m, &seq, da, db, &SchoolLeaf)?,
+        Algo::CopkMi => copk_mi(&mut m, &seq, da, db, &SkimLeaf)?,
+        Algo::CopkMain => copk(&mut m, &seq, da, db, &SchoolLeaf)?,
+        Algo::Allgather => crate::baselines::allgather_schoolbook(&mut m, &seq, da, db)?,
+        Algo::CesariMaeder => crate::baselines::cesari_maeder(&mut m, &seq, da, db)?,
+    };
+    // Sanity: verify against the sequential oracle on every run.
+    let mut ops = crate::bignum::Ops::default();
+    let want = crate::bignum::mul::mul_school(&a, &b, base, &mut ops);
+    anyhow::ensure!(c.gather(&m) == want, "product mismatch in {algo:?}");
+    Ok(RunStats {
+        clock: m.critical(),
+        mem_peak: m.mem_peak_max(),
+        mem_total: m.mem_peak_total(),
+        total_ops: m.stats.total_ops,
+    })
+}
+
+/// An experiment: id, description, and a runner producing tables.
+pub struct Experiment {
+    pub id: &'static str,
+    pub paper_ref: &'static str,
+    pub title: &'static str,
+    pub run: fn() -> Result<Vec<Table>>,
+}
+
+/// The registry, in DESIGN.md order.
+pub fn registry() -> Vec<Experiment> {
+    vec![
+        Experiment {
+            id: "E1",
+            paper_ref: "Lemma 7",
+            title: "parallel SUM cost vs bounds",
+            run: primitives::e01_sum,
+        },
+        Experiment {
+            id: "E2",
+            paper_ref: "Lemma 8",
+            title: "parallel COMPARE cost vs bounds",
+            run: primitives::e02_compare,
+        },
+        Experiment {
+            id: "E3",
+            paper_ref: "Lemma 9",
+            title: "parallel DIFF cost vs bounds",
+            run: primitives::e03_diff,
+        },
+        Experiment {
+            id: "E4",
+            paper_ref: "Theorem 11",
+            title: "COPSIM_MI cost vs bounds",
+            run: algorithms::e04_copsim_mi,
+        },
+        Experiment {
+            id: "E5",
+            paper_ref: "Theorem 12",
+            title: "COPSIM main mode cost vs bounds (memory sweep)",
+            run: algorithms::e05_copsim_main,
+        },
+        Experiment {
+            id: "E6",
+            paper_ref: "Theorem 14",
+            title: "COPK_MI cost vs bounds",
+            run: algorithms::e06_copk_mi,
+        },
+        Experiment {
+            id: "E7",
+            paper_ref: "Theorem 15",
+            title: "COPK main mode cost vs bounds (memory sweep)",
+            run: algorithms::e07_copk_main,
+        },
+        Experiment {
+            id: "E8",
+            paper_ref: "Theorem 1 (vs Thms 3-4)",
+            title: "COPSIM bandwidth/latency optimality ratios",
+            run: algorithms::e08_copsim_optimality,
+        },
+        Experiment {
+            id: "E9",
+            paper_ref: "Theorem 2 (vs Thms 5-6)",
+            title: "COPK bandwidth/latency optimality ratios",
+            run: algorithms::e09_copk_optimality,
+        },
+        Experiment {
+            id: "E10",
+            paper_ref: "§1/Related work claim",
+            title: "perfect strong scaling (T, BW ∝ 1/P at M = Θ(n/P))",
+            run: systems::e10_strong_scaling,
+        },
+        Experiment {
+            id: "E11",
+            paper_ref: "§7 hybridization",
+            title: "COPSIM/COPK modeled-time crossover",
+            run: systems::e11_crossover,
+        },
+        Experiment {
+            id: "E12",
+            paper_ref: "Related work",
+            title: "baseline comparison (allgather, Cesari-Maeder)",
+            run: systems::e12_baselines,
+        },
+        Experiment {
+            id: "E13",
+            paper_ref: "O(n) total memory claim",
+            title: "total memory across processors / n",
+            run: systems::e13_memory,
+        },
+        Experiment {
+            id: "E14",
+            paper_ref: "§2.2 execution-time model",
+            title: "modeled execution time α·T + β·L + γ·BW",
+            run: systems::e14_time_model,
+        },
+    ]
+}
+
+/// Run one experiment by id (case-insensitive), or all with "all".
+pub fn run_by_id(id: &str) -> Result<Vec<(String, Vec<Table>)>> {
+    let reg = registry();
+    let mut out = Vec::new();
+    for e in &reg {
+        if id.eq_ignore_ascii_case("all") || e.id.eq_ignore_ascii_case(id) {
+            let tables = (e.run)()?;
+            out.push((format!("{} — {} ({})", e.id, e.title, e.paper_ref), tables));
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "no experiment matches `{id}`");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique_and_complete() {
+        let reg = registry();
+        assert_eq!(reg.len(), 14);
+        let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 14);
+    }
+
+    #[test]
+    fn run_algo_verifies_product() {
+        let s = run_algo(Algo::CopsimMi, 256, 16, None, 1).unwrap();
+        assert!(s.clock.ops > 0);
+        let s = run_algo(Algo::CopkMi, 384, 12, None, 1).unwrap();
+        assert!(s.clock.ops > 0);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run_by_id("E99").is_err());
+    }
+}

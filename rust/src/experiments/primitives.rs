@@ -1,0 +1,144 @@
+//! E1-E3: the §4 primitives vs Lemmas 7-9.
+
+use crate::bignum::Base;
+use crate::metrics::{fmt_ratio, fmt_u64, Table};
+use crate::primitives::{compare, diff, sum};
+use crate::sim::{Clock, DistInt, Machine, Seq};
+use crate::theory;
+use crate::util::Rng;
+use anyhow::Result;
+
+const SWEEP: &[(usize, usize)] = &[
+    (2, 1 << 10),
+    (4, 1 << 12),
+    (8, 1 << 12),
+    (16, 1 << 14),
+    (32, 1 << 14),
+    (64, 1 << 16),
+    (128, 1 << 16),
+    (256, 1 << 18),
+];
+
+fn run_primitive(
+    which: &str,
+    p: usize,
+    n: usize,
+) -> Result<(Clock, u64)> {
+    let base = Base::new(16);
+    let mut rng = Rng::new(0xE0 + p as u64);
+    let mut m = Machine::unbounded(p, base);
+    let seq = Seq::range(p);
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let da = DistInt::scatter(&mut m, &seq, &a, n / p)?;
+    let db = DistInt::scatter(&mut m, &seq, &b, n / p)?;
+    match which {
+        "sum" => {
+            sum(&mut m, &seq, &da, &db)?;
+        }
+        "compare" => {
+            compare(&mut m, &seq, &da, &db)?;
+        }
+        "diff" => {
+            diff(&mut m, &seq, &da, &db)?;
+        }
+        _ => unreachable!(),
+    }
+    Ok((m.critical(), m.mem_peak_max()))
+}
+
+fn bound_table(
+    title: &str,
+    which: &str,
+    bound_fn: fn(u64, u64) -> Clock,
+    mem_bound: fn(u64, u64) -> u64,
+) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        title,
+        &[
+            "P", "n", "T meas", "T bound", "T r", "BW meas", "BW bound", "BW r", "L meas",
+            "L bound", "L r", "M meas", "M bound", "M r",
+        ],
+    );
+    for &(p, n) in SWEEP {
+        let (c, mem) = run_primitive(which, p, n)?;
+        let b = bound_fn(n as u64, p as u64);
+        let mb = mem_bound(n as u64, p as u64);
+        t.row(vec![
+            p.to_string(),
+            fmt_u64(n as u64),
+            fmt_u64(c.ops),
+            fmt_u64(b.ops),
+            fmt_ratio(c.ops as f64, b.ops as f64),
+            fmt_u64(c.words),
+            fmt_u64(b.words),
+            fmt_ratio(c.words as f64, b.words as f64),
+            fmt_u64(c.msgs),
+            fmt_u64(b.msgs),
+            fmt_ratio(c.msgs as f64, b.msgs as f64),
+            fmt_u64(mem),
+            fmt_u64(mb),
+            fmt_ratio(mem as f64, mb as f64),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+/// E1 — Lemma 7 (SUM).
+pub fn e01_sum() -> Result<Vec<Table>> {
+    bound_table(
+        "E1: SUM vs Lemma 7 (T <= 6n/P + 4lgP, BW <= 4lgP, L <= 2lgP, M <= 4(n/P+1))",
+        "sum",
+        theory::lemma7_sum,
+        theory::lemma7_sum_mem,
+    )
+}
+
+/// E2 — Lemma 8 (COMPARE). Ratios above 1.0 for BW/L reflect the
+/// return-broadcast step the lemma's stated constant omits (see
+/// primitives::compare docs); the corrected constant is 2·log₂P.
+pub fn e02_compare() -> Result<Vec<Table>> {
+    bound_table(
+        "E2: COMPARE vs Lemma 8 (T <= n/P + lgP, BW,L <= lgP [paper]; impl sends the flag back: 2lgP)",
+        "compare",
+        theory::lemma8_compare,
+        |n, p| 2 * (n / p) + 2,
+    )
+}
+
+/// E3 — Lemma 9 (DIFF). Same BW/L caveat as E2, inherited via COMPARE.
+pub fn e03_diff() -> Result<Vec<Table>> {
+    bound_table(
+        "E3: DIFF vs Lemma 9 (T <= 7n/P + 5lgP, BW <= 5lgP, L <= 3lgP [paper]; impl: <= 8lgP / 6lgP)",
+        "diff",
+        theory::lemma9_diff,
+        |n, p| 4 * (n / p) + 5,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_experiments_produce_rows() {
+        for f in [e01_sum, e02_compare, e03_diff] {
+            let tables = f().unwrap();
+            assert_eq!(tables.len(), 1);
+            assert_eq!(tables[0].rows.len(), SWEEP.len());
+        }
+    }
+
+    #[test]
+    fn sum_ratios_below_one() {
+        // The SUM lemma's constants are self-consistent: every measured
+        // metric must be under the paper bound.
+        let t = &e01_sum().unwrap()[0];
+        for row in &t.rows {
+            for idx in [4usize, 7, 10, 13] {
+                let r: f64 = row[idx].parse().unwrap();
+                assert!(r <= 1.0, "ratio {} at col {idx} exceeds 1", row[idx]);
+            }
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! E10-E14: system-level claims — strong scaling, hybridization
+//! crossover, baseline comparison, total-memory optimality, and the
+//! §2.2 execution-time model.
+
+use super::{run_algo, Algo};
+use crate::metrics::{fmt_f64, fmt_ratio, fmt_u64, Table};
+use crate::theory::TimeModel;
+use anyhow::Result;
+
+/// E10 — strong scaling: fixed n, growing P, M = Θ(n/P).
+/// Perfect strong scaling ⇒ `T·P/n²` and `BW·M·P/n²` stay flat.
+pub fn e10_strong_scaling() -> Result<Vec<Table>> {
+    let n = 1usize << 12;
+    let mut ts = Table::new(
+        format!("E10a: COPSIM strong scaling at n={n} (M = 80n/P)"),
+        &["P", "M", "T", "T·P/n²", "BW", "BW·M·P/n²", "L"],
+    );
+    for &p in &[4usize, 16, 64, 256] {
+        let m = (80 * n / p) as u64;
+        let s = run_algo(Algo::CopsimMain, n, p, Some(m), 0x10)?;
+        ts.row(vec![
+            p.to_string(),
+            fmt_u64(m),
+            fmt_u64(s.clock.ops),
+            fmt_f64(s.clock.ops as f64 * p as f64 / (n * n) as f64),
+            fmt_u64(s.clock.words),
+            fmt_f64(s.clock.words as f64 * m as f64 * p as f64 / (n * n) as f64),
+            fmt_u64(s.clock.msgs),
+        ]);
+    }
+    let nk = 10368usize;
+    let mut tk = Table::new(
+        format!("E10b: COPK strong scaling at n={nk} (M = 40n/P)"),
+        &["P", "M", "T", "T·P/n^lg3", "BW", "BW·P/(n/M)^lg3·M", "L"],
+    );
+    for &p in &[4usize, 12, 36, 108] {
+        let m = (40 * nk / p) as u64;
+        let s = run_algo(Algo::CopkMain, nk, p, Some(m), 0x10)?;
+        let nlg3 = crate::util::pow_log2_3(nk as f64);
+        let bw_scale = crate::util::pow_log2_3(nk as f64 / m as f64) * m as f64 / p as f64;
+        tk.row(vec![
+            p.to_string(),
+            fmt_u64(m),
+            fmt_u64(s.clock.ops),
+            fmt_f64(s.clock.ops as f64 * p as f64 / nlg3),
+            fmt_u64(s.clock.words),
+            fmt_ratio(s.clock.words as f64, bw_scale),
+            fmt_u64(s.clock.msgs),
+        ]);
+    }
+    Ok(vec![ts, tk])
+}
+
+/// E11 — §7 crossover: modeled time of COPSIM vs COPK at P = 4 across
+/// n; the crossover point is where COPK wins.
+pub fn e11_crossover() -> Result<Vec<Table>> {
+    let tm = TimeModel::default();
+    let mut t = Table::new(
+        "E11: COPSIM vs COPK modeled execution time at P=4 (α=1ns/op, β=1µs/msg, γ=10ns/word)",
+        &[
+            "n", "COPSIM T", "COPK T", "COPSIM time(µs)", "COPK time(µs)", "winner",
+        ],
+    );
+    let mut crossover: Option<usize> = None;
+    for k in 6..=13 {
+        let n = 1usize << k;
+        let ss = run_algo(Algo::CopsimMi, n, 4, None, 0x11)?;
+        let sk = run_algo(Algo::CopkMi, n, 4, None, 0x11)?;
+        let t_s = tm.time_ns(&ss.clock) / 1000.0;
+        let t_k = tm.time_ns(&sk.clock) / 1000.0;
+        let winner = if t_k < t_s { "COPK" } else { "COPSIM" };
+        if t_k < t_s && crossover.is_none() {
+            crossover = Some(n);
+        }
+        t.row(vec![
+            fmt_u64(n as u64),
+            fmt_u64(ss.clock.ops),
+            fmt_u64(sk.clock.ops),
+            fmt_f64(t_s),
+            fmt_f64(t_k),
+            winner.into(),
+        ]);
+    }
+    let mut note = Table::new(
+        format!(
+            "E11 note: measured crossover at n = {} (paper §7: COPK wins for large n, COPSIM for small)",
+            crossover.map(|c| c.to_string()).unwrap_or("not reached".into())
+        ),
+        &["-"],
+    );
+    note.row(vec!["-".into()]);
+    Ok(vec![t, note])
+}
+
+/// E12 — baseline comparison at matched (n, P).
+pub fn e12_baselines() -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "E12: COPSIM/COPK vs baselines (n=4096, P=64 | COPK at P=108, n=5184)",
+        &[
+            "algorithm", "P", "n", "T", "BW", "L", "peak M/proc", "total M", "total M / n",
+        ],
+    );
+    let (p, n) = (64usize, 4096usize);
+    for (name, algo) in [
+        ("COPSIM_MI", Algo::CopsimMi),
+        ("allgather-schoolbook", Algo::Allgather),
+        ("Cesari-Maeder", Algo::CesariMaeder),
+    ] {
+        let s = run_algo(algo, n, p, None, 0x12)?;
+        t.row(vec![
+            name.into(),
+            p.to_string(),
+            fmt_u64(n as u64),
+            fmt_u64(s.clock.ops),
+            fmt_u64(s.clock.words),
+            fmt_u64(s.clock.msgs),
+            fmt_u64(s.mem_peak),
+            fmt_u64(s.mem_total),
+            fmt_ratio(s.mem_total as f64, n as f64),
+        ]);
+    }
+    let (p, n) = (108usize, 5184usize);
+    let s = run_algo(Algo::CopkMi, n, p, None, 0x12)?;
+    t.row(vec![
+        "COPK_MI".into(),
+        p.to_string(),
+        fmt_u64(n as u64),
+        fmt_u64(s.clock.ops),
+        fmt_u64(s.clock.words),
+        fmt_u64(s.clock.msgs),
+        fmt_u64(s.mem_peak),
+        fmt_u64(s.mem_total),
+        fmt_ratio(s.mem_total as f64, n as f64),
+    ]);
+    Ok(vec![t])
+}
+
+/// E13 — total memory across processors stays O(n) for the paper's
+/// algorithms in the LIMITED-memory (main) mode, and Θ(nP) for the
+/// all-gather baseline.
+pub fn e13_memory() -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "E13: total peak memory / n (O(1) = the paper's O(n) total-space claim; main mode, M set to the theorem minimum)",
+        &["algorithm", "P", "n", "M cap", "total peak", "total/n"],
+    );
+    for &(name, algo, p, n) in &[
+        ("COPSIM", Algo::CopsimMain, 64usize, 4096usize),
+        ("COPSIM", Algo::CopsimMain, 256, 8192),
+        ("COPK", Algo::CopkMain, 108, 5184),
+        ("COPK", Algo::CopkMain, 108, 10368),
+    ] {
+        let m = match algo {
+            Algo::CopsimMain => (80 * n / p) as u64,
+            _ => (40 * n / p) as u64,
+        };
+        let s = run_algo(algo, n, p, Some(m), 0x13)?;
+        t.row(vec![
+            name.into(),
+            p.to_string(),
+            fmt_u64(n as u64),
+            fmt_u64(m),
+            fmt_u64(s.mem_total),
+            fmt_ratio(s.mem_total as f64, n as f64),
+        ]);
+    }
+    // Baseline contrast.
+    let (p, n) = (64usize, 4096usize);
+    let s = run_algo(Algo::Allgather, n, p, None, 0x13)?;
+    t.row(vec![
+        "allgather (baseline)".into(),
+        p.to_string(),
+        fmt_u64(n as u64),
+        "inf".into(),
+        fmt_u64(s.mem_total),
+        fmt_ratio(s.mem_total as f64, n as f64),
+    ]);
+    Ok(vec![t])
+}
+
+/// E14 — §2.2 model: α·T + β·L + γ·BW for all algorithms at matched
+/// sizes, under three hardware-like parameter sets.
+pub fn e14_time_model() -> Result<Vec<Table>> {
+    let models = [
+        ("cluster (1ns,1µs,10ns)", TimeModel::default()),
+        (
+            "fast-net (1ns,100ns,2ns)",
+            TimeModel {
+                alpha_ns: 1.0,
+                beta_ns: 100.0,
+                gamma_ns: 2.0,
+            },
+        ),
+        (
+            "wan (1ns,100µs,100ns)",
+            TimeModel {
+                alpha_ns: 1.0,
+                beta_ns: 100_000.0,
+                gamma_ns: 100.0,
+            },
+        ),
+    ];
+    let mut t = Table::new(
+        "E14: modeled execution time (ms) at n=4096, P=64 (COPK: P=108, n=5184)",
+        &["algorithm", "model", "T", "BW", "L", "time (ms)"],
+    );
+    let runs = [
+        ("COPSIM_MI", run_algo(Algo::CopsimMi, 4096, 64, None, 0x14)?),
+        ("COPK_MI", run_algo(Algo::CopkMi, 5184, 108, None, 0x14)?),
+        ("allgather", run_algo(Algo::Allgather, 4096, 64, None, 0x14)?),
+        (
+            "Cesari-Maeder",
+            run_algo(Algo::CesariMaeder, 4096, 64, None, 0x14)?,
+        ),
+    ];
+    for (name, s) in &runs {
+        for (mname, tm) in &models {
+            t.row(vec![
+                (*name).into(),
+                (*mname).into(),
+                fmt_u64(s.clock.ops),
+                fmt_u64(s.clock.words),
+                fmt_u64(s.clock.msgs),
+                fmt_f64(tm.time_ns(&s.clock) / 1e6),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strong_scaling_flat() {
+        let tables = e10_strong_scaling().unwrap();
+        // COPSIM: T·P/n² across P must vary by < 4x (constant-ish).
+        let vals: Vec<f64> = tables[0]
+            .rows
+            .iter()
+            .map(|r| r[3].parse().unwrap())
+            .collect();
+        let (mn, mx) = vals
+            .iter()
+            .fold((f64::MAX, 0f64), |(a, b), &v| (a.min(v), b.max(v)));
+        assert!(mx / mn < 4.0, "T·P/n² not flat: {vals:?}");
+    }
+
+    #[test]
+    fn crossover_found() {
+        let tables = e11_crossover().unwrap();
+        // COPK must win by the largest n in the sweep.
+        let last = tables[0].rows.last().unwrap();
+        assert_eq!(last[5], "COPK");
+        // And COPSIM must win at the smallest.
+        assert_eq!(tables[0].rows[0][5], "COPSIM");
+    }
+
+    #[test]
+    fn memory_claim_holds() {
+        let t = &e13_memory().unwrap()[0];
+        for row in &t.rows {
+            let ratio: f64 = row[5].parse().unwrap();
+            if row[0].starts_with("COPSIM") || row[0].starts_with("COPK") {
+                assert!(ratio <= 60.0, "{}: total/n = {ratio}", row[0]);
+            } else {
+                // The baseline really is Θ(nP): ratio ~ 2P.
+                assert!(ratio > 60.0, "baseline unexpectedly frugal: {ratio}");
+            }
+        }
+    }
+}

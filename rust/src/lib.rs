@@ -1,0 +1,56 @@
+//! # copmul — Communication-Optimal Parallel Integer Multiplication
+//!
+//! Reproduction of *"Communication-Optimal Parallel Standard and Karatsuba
+//! Integer Multiplication in the Distributed Memory Model"*
+//! (Lorenzo De Stefani, 2020).
+//!
+//! The paper's machine model is an abstract distributed-memory parallel
+//! computer: `P` processors, each with a private memory of `M` words,
+//! exchanging point-to-point messages. Its contributions — the `COPSIM`
+//! and `COPK` algorithms plus the parallel `SUM`/`COMPARE`/`DIFF`
+//! subroutines — are *coordination* algorithms, so the bulk of this
+//! reproduction lives in the Rust layer:
+//!
+//! * [`bignum`] — exact base-`s` big-integer arithmetic (the digit model of
+//!   §2.1) including the sequential `SLIM` (Fact 10) and `SKIM` (Fact 13)
+//!   leaf multipliers, with per-call digit-operation counting.
+//! * [`sim`] — a deterministic simulator of the paper's machine model with
+//!   critical-path cost accounting (§2.2, Yang–Miller) and per-processor
+//!   memory ledgers.
+//! * [`primitives`] — parallel `SUM`, `COMPARE`, `DIFF` (§4), including the
+//!   speculative carry/borrow pre-calculation the paper uses to break the
+//!   sequential carry chain.
+//! * [`algorithms`] — `COPSIM` (§5) and `COPK` (§6) in both the
+//!   memory-independent (all-BFS) and main (DFS→MI) execution modes, plus
+//!   the §7 hybrid.
+//! * [`baselines`] — the related-work comparison points (naive all-gather
+//!   schoolbook; Cesari–Maeder-style master–slave Karatsuba).
+//! * [`theory`] — the paper's closed-form upper bounds (Lemmas 7–9,
+//!   Theorems 11/12/14/15) and lower bounds (Theorems 3–6) used by the
+//!   experiment harness.
+//! * [`runtime`] — PJRT/XLA client: loads the AOT-compiled JAX+Pallas leaf
+//!   multiplier (`artifacts/*.hlo.txt`) and executes it from the hot path.
+//! * [`coordinator`] — a multi-threaded job router + dynamic batcher that
+//!   serves multiplication requests over simulated machines, dispatching
+//!   leaf products to the XLA runtime.
+//! * [`experiments`] — one module per paper result (E1–E14), each printing
+//!   a `paper bound | measured | ratio` table.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! recorded results.
+
+pub mod algorithms;
+pub mod baselines;
+pub mod bignum;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod metrics;
+pub mod primitives;
+pub mod runtime;
+pub mod sim;
+pub mod theory;
+pub mod util;
+
+pub use config::RunConfig;
+pub use sim::{Clock, Machine, Seq};

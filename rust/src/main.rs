@@ -1,0 +1,265 @@
+//! `copmul` — CLI for the COPSIM/COPK reproduction.
+//!
+//! Subcommands (hand-rolled parsing; clap is not vendored offline):
+//!
+//! ```text
+//! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E14
+//! copmul serve [key=value ...]                 coordinator demo workload
+//! copmul info [artifacts=DIR]                  runtime + artifact info
+//! copmul selftest                              quick end-to-end check
+//! ```
+//!
+//! Common `key=value` options: `n`, `procs`, `mem`, `algo`
+//! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
+//! `seed`, `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
+
+use anyhow::{bail, Context, Result};
+use copmul::algorithms::leaf::{HybridLeaf, LeafMultiplier, SchoolLeaf, SkimLeaf, SlimLeaf};
+use copmul::bignum::convert::{parse_hex, to_hex};
+use copmul::config::{LeafKind, RunConfig};
+use copmul::coordinator::{BatchingXlaLeaf, Coordinator, CoordinatorConfig, JobSpec};
+use copmul::experiments;
+use copmul::metrics::fmt_u64;
+use copmul::runtime::{XlaLeaf, XlaRuntime};
+use copmul::util::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("mul") => cmd_mul(&args[1..]),
+        Some("experiment") => cmd_experiment(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("selftest") => cmd_selftest(),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand `{other}` (try `copmul help`)"),
+    }
+}
+
+const HELP: &str = "\
+copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
+
+USAGE:
+  copmul mul <a_hex> <b_hex> [key=value ...]
+  copmul experiment <E1..E14|all> [--csv] [key=value ...]
+  copmul serve [jobs=N] [key=value ...]
+  copmul info [artifacts=DIR]
+  copmul selftest
+
+KEYS: n procs mem algo(copsim|copk|hybrid) leaf(slim|skim|school|hybrid|xla|xla-batched)
+      seed workers artifacts alpha_ns beta_ns gamma_ns
+";
+
+/// Build the leaf backend the config names.
+fn make_leaf(cfg: &RunConfig) -> Result<Arc<dyn LeafMultiplier + Send + Sync>> {
+    Ok(match cfg.leaf {
+        LeafKind::Slim => Arc::new(SlimLeaf),
+        LeafKind::Skim => Arc::new(SkimLeaf),
+        LeafKind::School => Arc::new(SchoolLeaf),
+        LeafKind::Hybrid => Arc::new(HybridLeaf { threshold: 32 }),
+        LeafKind::Xla => {
+            let rt = Arc::new(XlaRuntime::new(&cfg.artifacts_dir)?);
+            Arc::new(XlaLeaf::new(rt, "school"))
+        }
+        LeafKind::XlaBatched => {
+            let rt = Arc::new(XlaRuntime::new(&cfg.artifacts_dir)?);
+            Arc::new(BatchingXlaLeaf::new(rt, "school"))
+        }
+    })
+}
+
+fn cmd_mul(args: &[String]) -> Result<()> {
+    let (pos, kv): (Vec<&String>, Vec<&String>) = args.iter().partition(|a| !a.contains('='));
+    let [a_hex, b_hex] = pos.as_slice() else {
+        bail!("usage: copmul mul <a_hex> <b_hex> [key=value ...]");
+    };
+    let mut cfg = RunConfig::default();
+    cfg.apply_args(&kv.iter().map(|s| s.to_string()).collect::<Vec<_>>())?;
+    cfg.validate()?;
+    let base = cfg.base();
+    let a = parse_hex(a_hex, base).map_err(|e| anyhow::anyhow!(e))?;
+    let b = parse_hex(b_hex, base).map_err(|e| anyhow::anyhow!(e))?;
+    let leaf = make_leaf(&cfg)?;
+
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 1,
+            base,
+            time_model: cfg.time_model,
+        },
+        leaf,
+    );
+    let mut spec = JobSpec::new(0, a, b);
+    spec.procs = cfg.procs;
+    spec.mem_cap = cfg.mem_cap;
+    spec.algo = cfg.algo;
+    let res = coord.submit_blocking(spec)?;
+    println!("product  = {}", to_hex(&res.product, base));
+    println!("scheme   = {}", res.algo);
+    println!(
+        "cost     = T={} BW={} L={} (critical path)",
+        fmt_u64(res.cost.ops),
+        fmt_u64(res.cost.words),
+        fmt_u64(res.cost.msgs)
+    );
+    println!("mem/proc = {} words peak", fmt_u64(res.mem_peak));
+    println!("wall     = {:?}", res.wall);
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_experiment(args: &[String]) -> Result<()> {
+    let id = args.first().context("usage: copmul experiment <id|all>")?;
+    let csv = args.iter().any(|a| a == "--csv");
+    let results = experiments::run_by_id(id)?;
+    for (header, tables) in results {
+        println!("\n## {header}\n");
+        for t in tables {
+            if csv {
+                println!("{}", t.csv());
+            } else {
+                println!("{}", t.markdown());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let mut jobs = 64usize;
+    let mut rest = Vec::new();
+    for a in args {
+        if let Some(v) = a.strip_prefix("jobs=") {
+            jobs = v.parse().context("jobs")?;
+        } else {
+            rest.push(a.clone());
+        }
+    }
+    cfg.apply_args(&rest)?;
+    let base = cfg.base();
+    let leaf = make_leaf(&cfg)?;
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: cfg.workers,
+            base,
+            time_model: cfg.time_model,
+        },
+        leaf,
+    );
+    println!(
+        "serving {jobs} jobs (n={}, procs={}, leaf={:?}, workers={})",
+        cfg.n, cfg.procs, cfg.leaf, cfg.workers
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for id in 0..jobs as u64 {
+        let a = rng.digits(cfg.n, 16);
+        let b = rng.digits(cfg.n, 16);
+        let mut spec = JobSpec::new(id, a, b);
+        spec.procs = cfg.procs;
+        spec.mem_cap = cfg.mem_cap;
+        spec.algo = cfg.algo;
+        pending.push(coord.submit(spec));
+    }
+    let mut lat_us: Vec<u64> = Vec::with_capacity(jobs);
+    for rx in pending {
+        let res = rx.recv().context("worker hung up")??;
+        lat_us.push(res.wall.as_micros() as u64);
+    }
+    let wall = t0.elapsed();
+    lat_us.sort_unstable();
+    let pct = |q: f64| lat_us[(q * (lat_us.len() - 1) as f64) as usize];
+    println!(
+        "done: {:.1} jobs/s over {:?} | job latency p50={}µs p95={}µs p99={}µs",
+        jobs as f64 / wall.as_secs_f64(),
+        wall,
+        fmt_u64(pct(0.50)),
+        fmt_u64(pct(0.95)),
+        fmt_u64(pct(0.99)),
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let mut dir = "artifacts".to_string();
+    for a in args {
+        if let Some(v) = a.strip_prefix("artifacts=") {
+            dir = v.to_string();
+        }
+    }
+    match XlaRuntime::new(&dir) {
+        Ok(rt) => {
+            println!("PJRT platform: {}", rt.platform());
+            println!("artifacts ({}):", dir);
+            for a in &rt.manifest().artifacts {
+                println!(
+                    "  {:40} entry={:9} batch={} k={}",
+                    a.file.file_name().unwrap().to_string_lossy(),
+                    a.entry,
+                    a.batch,
+                    a.k
+                );
+            }
+        }
+        Err(e) => println!("no artifacts loaded ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    // A quick end-to-end pass across schemes and leaf backends.
+    let base = copmul::bignum::Base::default();
+    let mut rng = Rng::new(7);
+    let a = rng.digits(512, 16);
+    let b = rng.digits(512, 16);
+    let mut ops = copmul::bignum::Ops::default();
+    let want = to_hex(
+        &copmul::bignum::mul::mul_school(&a, &b, base, &mut ops),
+        base,
+    );
+    for (procs, algo) in [
+        (16usize, Some(copmul::algorithms::Algorithm::Copsim)),
+        (12, Some(copmul::algorithms::Algorithm::Copk)),
+        (4, None),
+    ] {
+        let coord = Coordinator::start(CoordinatorConfig::default(), Arc::new(SkimLeaf));
+        let mut spec = JobSpec::new(0, a.clone(), b.clone());
+        spec.procs = procs;
+        spec.algo = algo;
+        let res = coord.submit_blocking(spec)?;
+        anyhow::ensure!(
+            to_hex(&res.product, base) == want,
+            "selftest mismatch at procs={procs}"
+        );
+        coord.shutdown();
+    }
+    // XLA path, if artifacts are present.
+    if let Ok(rt) = XlaRuntime::new("artifacts") {
+        let leaf = Arc::new(XlaLeaf::new(Arc::new(rt), "school"));
+        let coord = Coordinator::start(CoordinatorConfig::default(), leaf);
+        let mut spec = JobSpec::new(1, a.clone(), b.clone());
+        spec.procs = 4;
+        let res = coord.submit_blocking(spec)?;
+        anyhow::ensure!(to_hex(&res.product, base) == want, "xla selftest mismatch");
+        coord.shutdown();
+        println!("selftest OK (incl. XLA leaf)");
+    } else {
+        println!("selftest OK (artifacts not built; XLA leaf skipped)");
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Parallel algorithmic components (paper §4): distributed-memory
+//! big-integer SUM, COMPARE and DIFF over processor sequences.
+//!
+//! All three follow the same recursive pattern: split the processor
+//! sequence into the lower half `P'` (least-significant digits) and the
+//! upper half `P''`; recurse in parallel; the upper half *speculatively
+//! pre-computes* every possible continuation (both carry values for SUM,
+//! both borrow values for DIFF) so that the only cross-half dependency
+//! is a single flag exchange per level. This is the paper's key device
+//! for breaking the apparently sequential carry/borrow chain, and it is
+//! what bounds the critical-path communication by `O(log P)` words
+//! (Lemmas 7-9).
+//!
+//! Layout conventions: operands are [`DistInt`]s whose chunk owners are
+//! exactly the processors of the sequence, in order (chunk `j` on
+//! `seq[j]`). Results come back in the same layout.
+
+pub mod compare;
+pub mod diff;
+pub mod sum;
+
+pub use compare::compare;
+pub use diff::diff;
+pub use sum::{sum, sum_many};
+
+use crate::sim::{DistInt, Machine, Seq};
+
+/// Deliver a small payload (flags/carries) held by every processor of
+/// `src_seq` to every processor of `dst_seq`.
+///
+/// When the sequences have equal length this is the paper's single
+/// parallel pairwise exchange (`P'[j] sends to P''[j]`): one message
+/// round. With uneven halves (COPSIM recomposes on `3P/4` processors,
+/// so one recursion level splits unevenly) the uncovered tail of
+/// `dst_seq` is filled by doubling rounds among the receivers —
+/// `O(log)` extra latency only at the uneven levels.
+pub(crate) fn fanout(
+    m: &mut Machine,
+    src_seq: &Seq,
+    dst_seq: &Seq,
+    payload: &[u32],
+) -> anyhow::Result<()> {
+    let f = src_seq.len().min(dst_seq.len());
+    // Round 0: pairwise.
+    for j in 0..f {
+        let s = m.send(src_seq.at(j), dst_seq.at(j), payload.to_vec())?;
+        m.free(dst_seq.at(j), s);
+    }
+    // Doubling rounds among dst for the uncovered tail.
+    let mut have = f;
+    while have < dst_seq.len() {
+        let take = have.min(dst_seq.len() - have);
+        for j in 0..take {
+            let s = m.send(dst_seq.at(j), dst_seq.at(have + j), payload.to_vec())?;
+            m.free(dst_seq.at(have + j), s);
+        }
+        have += take;
+    }
+    Ok(())
+}
+
+/// Check the operand layout invariant shared by all primitives.
+pub(crate) fn check_layout(seq: &Seq, x: &DistInt, what: &str) {
+    assert_eq!(
+        x.chunks.len(),
+        seq.len(),
+        "{what}: operand has {} chunks for |P| = {}",
+        x.chunks.len(),
+        seq.len()
+    );
+    for (j, &(p, _)) in x.chunks.iter().enumerate() {
+        assert_eq!(
+            p,
+            seq.at(j),
+            "{what}: chunk {j} owned by {p}, expected {}",
+            seq.at(j)
+        );
+    }
+}
+
+/// Duplicate a distributed value chunk-by-chunk on the same owners
+/// (memory charged; no communication, no digit ops — an in-memory copy).
+pub(crate) fn dup_dist(
+    m: &mut crate::sim::Machine,
+    x: &DistInt,
+) -> anyhow::Result<DistInt> {
+    let mut chunks = Vec::with_capacity(x.chunks.len());
+    for &(p, slot) in &x.chunks {
+        let data = m.read(p, slot).to_vec();
+        let s = m.alloc(p, data)?;
+        chunks.push((p, s));
+    }
+    Ok(DistInt {
+        chunk_width: x.chunk_width,
+        chunks,
+    })
+}
+
+/// Select between two speculative distributed values: keep `c1` if
+/// `take_one`, else `c0`; free the other. If both outputs of a caller
+/// need the *same* branch, use [`dup_dist`] first.
+pub(crate) fn select_consume(
+    m: &mut crate::sim::Machine,
+    take_one: bool,
+    c0: DistInt,
+    c1: DistInt,
+) -> DistInt {
+    if take_one {
+        c0.free(m);
+        c1
+    } else {
+        c1.free(m);
+        c0
+    }
+}

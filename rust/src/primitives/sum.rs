@@ -1,0 +1,253 @@
+//! Parallel SUM with distributed memory (paper §4.1).
+//!
+//! `SUM(P, A, B)` computes `C = A + B` with `C mod s^n` partitioned in
+//! `P` like the inputs and the final carry `v ∈ {0,1}` known to every
+//! processor. The auxiliary `SUMA` run by the upper half speculatively
+//! computes both `(A'+B'+i) mod s^(n/2)` and carries `u_i` for
+//! `i ∈ {0,1}`, so each recursion level only exchanges the pair
+//! `(u_0, u_1)` (and the resolved carry on the way back).
+//!
+//! Lemma 7: with chunk width `w = n/|P|`,
+//! `T ≤ 6n/|P| + 4·log₂|P|`, `BW ≤ 4·log₂|P|`, `L ≤ 2·log₂|P|`,
+//! memory per processor ≤ `4(n/|P| + 1)`.
+
+use super::{check_layout, dup_dist, fanout, select_consume};
+use crate::bignum::core::add_with_carry;
+use crate::sim::{DistInt, Machine, Seq};
+use anyhow::Result;
+
+/// Output of the speculative branch: both possible sums and carries.
+struct SumaOut {
+    c0: DistInt,
+    c1: DistInt,
+    u0: u32,
+    u1: u32,
+}
+
+/// `SUMA(P, A, B)` (see module docs). Both inputs partitioned in `seq`.
+fn suma(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<SumaOut> {
+    let p = seq.len();
+    if p == 1 {
+        let pid = seq.at(0);
+        let (&(_, sa), &(_, sb)) = (&a.chunks[0], &b.chunks[0]);
+        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
+        let ((d0, u0), (d1, u1)) = m.local(pid, |base, ops| {
+            (
+                add_with_carry(&av, &bv, 0, *base, ops),
+                add_with_carry(&av, &bv, 1, *base, ops),
+            )
+        });
+        let c0 = DistInt {
+            chunk_width: a.chunk_width,
+            chunks: vec![(pid, m.alloc(pid, d0)?)],
+        };
+        let c1 = DistInt {
+            chunk_width: a.chunk_width,
+            chunks: vec![(pid, m.alloc(pid, d1)?)],
+        };
+        return Ok(SumaOut { c0, c1, u0, u1 });
+    }
+
+    let (lo_seq, hi_seq) = (seq.lower_half(), seq.upper_half());
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+    // Parallel recursion on disjoint processor halves (costs land on
+    // disjoint clocks; see sim module docs).
+    let lo = suma(m, &lo_seq, &a0, &b0)?;
+    let hi = suma(m, &hi_seq, &a1, &b1)?;
+
+    // Step 3: each P'[j] sends (u0', u1') to P''[j] (transient storage
+    // charged inside fanout), then selects (≤ 4 comparisons each).
+    fanout(m, &lo_seq, &hi_seq, &[lo.u0, lo.u1])?;
+    for j in 0..hi_seq.len() {
+        m.compute(hi_seq.at(j), 4);
+    }
+    // C0 continues with carry u0' into the high half; C1 with u1'.
+    let (c0_hi, c1_hi, u0, u1);
+    if lo.u0 == lo.u1 {
+        // Both continuations select the same speculative branch.
+        let chosen = select_consume(m, lo.u0 == 1, hi.c0, hi.c1);
+        let dup = dup_dist(m, &chosen)?;
+        c0_hi = chosen;
+        c1_hi = dup;
+        u0 = if lo.u0 == 1 { hi.u1 } else { hi.u0 };
+        u1 = u0;
+    } else {
+        // u0' = 0, u1' = 1 (carries are monotone): C0 takes the i=0
+        // branch, C1 the i=1 branch.
+        debug_assert!(lo.u0 == 0 && lo.u1 == 1);
+        c0_hi = hi.c0;
+        c1_hi = hi.c1;
+        u0 = hi.u0;
+        u1 = hi.u1;
+    }
+    // Step 4: P''[j] sends (u0, u1) back to P'[j].
+    fanout(m, &hi_seq, &lo_seq, &[u0, u1])?;
+    Ok(SumaOut {
+        c0: DistInt::concat(lo.c0, c0_hi),
+        c1: DistInt::concat(lo.c1, c1_hi),
+        u0,
+        u1,
+    })
+}
+
+/// `SUM(P, A, B)` — parallel addition. Returns `(C, v)` with
+/// `C = (A + B) mod s^n` partitioned in `seq` like the inputs and
+/// `v = ⌊(A+B)/s^n⌋ ∈ {0,1}` the most-significant (carry) digit.
+pub fn sum(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(DistInt, u32)> {
+    check_layout(seq, a, "SUM a");
+    check_layout(seq, b, "SUM b");
+    assert_eq!(a.chunk_width, b.chunk_width, "SUM operand widths differ");
+    let p = seq.len();
+
+    if p == 1 {
+        let pid = seq.at(0);
+        let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
+        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
+        let (d, v) = m.local(pid, |base, ops| add_with_carry(&av, &bv, 0, *base, ops));
+        let c = DistInt {
+            chunk_width: a.chunk_width,
+            chunks: vec![(pid, m.alloc(pid, d)?)],
+        };
+        return Ok((c, v));
+    }
+
+    let (lo_seq, hi_seq) = (seq.lower_half(), seq.upper_half());
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+    // SUM on the low half and SUMA on the high half run in parallel.
+    let (c_lo, v_lo) = sum(m, &lo_seq, &a0, &b0)?;
+    let hi = suma(m, &hi_seq, &a1, &b1)?;
+
+    // Step 3: P'[j] sends v' to P''[j].
+    fanout(m, &lo_seq, &hi_seq, &[v_lo])?;
+    // Step 4: selection at the high half (≤ 2 comparisons each).
+    for j in 0..hi_seq.len() {
+        m.compute(hi_seq.at(j), 2);
+    }
+    let c_hi = select_consume(m, v_lo == 1, hi.c0, hi.c1);
+    let v = if v_lo == 1 { hi.u1 } else { hi.u0 };
+    // Step 5: P''[j] sends v back to P'[j] so every processor knows the
+    // most significant digit of C.
+    fanout(m, &hi_seq, &lo_seq, &[v])?;
+    Ok((DistInt::concat(c_lo, c_hi), v))
+}
+
+/// Sum of `k >= 2` addends by chained applications of [`sum`] (the paper:
+/// "the procedure can be easily extended to more addends; the cost
+/// scales linearly"). Carries of intermediate sums are folded into the
+/// running carry count, which is returned alongside
+/// `C = (Σ X_i) mod s^n`. The caller arranges widths so the total fits
+/// (as COPSIM's recomposition does); `carry` reports the overflow.
+pub fn sum_many(m: &mut Machine, seq: &Seq, xs: &[&DistInt]) -> Result<(DistInt, u32)> {
+    assert!(xs.len() >= 2);
+    let (mut acc, mut carry) = sum(m, seq, xs[0], xs[1])?;
+    for x in &xs[2..] {
+        let (next, v) = sum(m, seq, &acc, x)?;
+        acc.free(m);
+        acc = next;
+        carry += v;
+    }
+    Ok((acc, carry))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::convert::{from_u128, to_u128};
+    use crate::bignum::Base;
+    use crate::theory;
+    use crate::util::Rng;
+
+    fn setup(p: usize, n: usize, seed: u64) -> (Machine, Seq, Vec<u32>, Vec<u32>) {
+        let mut rng = Rng::new(seed);
+        let m = Machine::unbounded(p, Base::new(16));
+        let seq = Seq::range(p);
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        (m, seq, a, b)
+    }
+
+    fn run_sum(p: usize, n: usize, seed: u64) -> (Machine, Vec<u32>, u32, Vec<u32>, Vec<u32>) {
+        let (mut m, seq, a, b) = setup(p, n, seed);
+        let w = n / p;
+        let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
+        let (c, v) = sum(&mut m, &seq, &da, &db).unwrap();
+        let digits = c.gather(&m);
+        (m, digits, v, a, b)
+    }
+
+    #[test]
+    fn sum_correct_various() {
+        for &(p, n) in &[(1usize, 8usize), (2, 8), (4, 16), (8, 64), (16, 64), (32, 256)] {
+            let (_, c, v, a, b) = run_sum(p, n, 42 + p as u64);
+            let base = Base::new(16);
+            if n <= 7 {
+                let want = to_u128(&a, base) + to_u128(&b, base);
+                let mut full = c.clone();
+                full.push(v);
+                assert_eq!(to_u128(&full, base), want, "p={p} n={n}");
+            } else {
+                // Verify via digit-wise reference addition.
+                let mut ops = crate::bignum::Ops::default();
+                let (want, carry) =
+                    add_with_carry(&a, &b, 0, base, &mut ops);
+                assert_eq!(c, want, "p={p} n={n}");
+                assert_eq!(v, carry);
+            }
+        }
+    }
+
+    #[test]
+    fn sum_cost_within_lemma7() {
+        for &(p, n) in &[(2usize, 64usize), (4, 64), (8, 64), (16, 256), (64, 1024)] {
+            let (m, ..) = run_sum(p, n, 7);
+            let c = m.critical();
+            let b = theory::lemma7_sum(n as u64, p as u64);
+            assert!(c.ops <= b.ops, "T p={p} n={n}: {} > {}", c.ops, b.ops);
+            assert!(c.words <= b.words, "BW p={p} n={n}: {} > {}", c.words, b.words);
+            assert!(c.msgs <= b.msgs, "L p={p} n={n}: {} > {}", c.msgs, b.msgs);
+            // Memory requirement from Lemma 7: 4(n/|P| + 1).
+            assert!(
+                m.mem_peak_max() <= 4 * (n as u64 / p as u64 + 1),
+                "M p={p} n={n}: {} > {}",
+                m.mem_peak_max(),
+                4 * (n as u64 / p as u64 + 1)
+            );
+        }
+    }
+
+    #[test]
+    fn sum_many_correct() {
+        let mut m = Machine::unbounded(4, Base::new(16));
+        let seq = Seq::range(4);
+        let base = Base::new(16);
+        let xs: Vec<u128> = vec![0xFFFF_FFFF_FFFF, 0x1234_5678, 0xFEDC_BA98_7654_3210];
+        let dists: Vec<DistInt> = xs
+            .iter()
+            .map(|&v| {
+                let d = from_u128(v, 16, base);
+                DistInt::scatter(&mut m, &seq, &d, 4).unwrap()
+            })
+            .collect();
+        let refs: Vec<&DistInt> = dists.iter().collect();
+        let (c, carry) = sum_many(&mut m, &seq, &refs).unwrap();
+        let got = to_u128(&c.gather(&m), base) + ((carry as u128) << 64);
+        assert_eq!(got, xs.iter().sum::<u128>());
+    }
+
+    #[test]
+    fn sum_critical_path_scales() {
+        // Strong scaling of the compute term: quadrupling P with fixed n
+        // must cut the ops term roughly in proportion (plus log terms).
+        let (m4, ..) = run_sum(4, 4096, 9);
+        let (m64, ..) = run_sum(64, 4096, 9);
+        assert!(
+            m64.critical().ops * 8 < m4.critical().ops * 16,
+            "no speedup: P=4 {} vs P=64 {}",
+            m4.critical().ops,
+            m64.critical().ops
+        );
+    }
+}

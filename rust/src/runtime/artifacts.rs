@@ -1,0 +1,139 @@
+//! Artifact registry: `artifacts/manifest.json` parsing.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact: `int32[batch, k] x int32[batch, k] ->
+/// int32[batch, 2k]` over base-`2^base_log2` digits.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: PathBuf,
+    pub entry: String,
+    pub batch: usize,
+    pub k: usize,
+    pub base_log2: u32,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("{path:?}: unexpected manifest format");
+        }
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest: missing artifacts array")?
+        {
+            artifacts.push(ArtifactInfo {
+                file: dir.join(
+                    a.get("file")
+                        .and_then(Json::as_str)
+                        .context("artifact: missing file")?,
+                ),
+                entry: a
+                    .get("entry")
+                    .and_then(Json::as_str)
+                    .context("artifact: missing entry")?
+                    .to_string(),
+                batch: a
+                    .get("batch")
+                    .and_then(Json::as_u64)
+                    .context("artifact: missing batch")? as usize,
+                k: a.get("k").and_then(Json::as_u64).context("artifact: missing k")? as usize,
+                base_log2: a
+                    .get("base_log2")
+                    .and_then(Json::as_u64)
+                    .unwrap_or(8) as u32,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("{path:?}: no artifacts listed");
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Pick the best artifact for an `entry` handling operands of `k`
+    /// base-256 digits with batch `>= want_batch`: the smallest
+    /// compiled `K >= k`, preferring an exact batch match.
+    pub fn select(&self, entry: &str, k: usize, want_batch: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry && a.k >= k)
+            .min_by_key(|a| {
+                (
+                    a.k,
+                    if a.batch >= want_batch {
+                        a.batch - want_batch
+                    } else {
+                        usize::MAX - a.batch
+                    },
+                )
+            })
+    }
+
+    /// Largest compiled K for an entry (host-side splitting threshold).
+    pub fn max_k(&self, entry: &str) -> usize {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry)
+            .map(|a| a.k)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","dtype":"int32","artifacts":[
+                {"file":"a.hlo.txt","entry":"school","batch":1,"k":256,"base_log2":8},
+                {"file":"b.hlo.txt","entry":"school","batch":8,"k":256,"base_log2":8},
+                {"file":"c.hlo.txt","entry":"school","batch":1,"k":1024,"base_log2":8}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects() {
+        let dir = std::env::temp_dir().join("copmul-manifest-test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        // Exact fit with batch preference.
+        let a = m.select("school", 200, 8).unwrap();
+        assert_eq!((a.k, a.batch), (256, 8));
+        // Larger-K fallback.
+        let a = m.select("school", 512, 1).unwrap();
+        assert_eq!(a.k, 1024);
+        // Too large: none.
+        assert!(m.select("school", 4096, 1).is_none());
+        assert_eq!(m.max_k("school"), 1024);
+        assert_eq!(m.max_k("karatsuba"), 0);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Manifest::load("/definitely/not/here").is_err());
+    }
+}

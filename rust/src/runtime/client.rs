@@ -1,0 +1,192 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use super::artifacts::{ArtifactInfo, Manifest};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// A compiled executable together with its static shape.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    batch: usize,
+    k: usize,
+}
+
+/// The XLA runtime: a CPU PJRT client plus lazily compiled executables
+/// for every artifact in the manifest. `execute_*` calls are serialized
+/// with an internal mutex (the PJRT CPU client is itself multi-threaded
+/// internally; one in-flight execution keeps latency predictable for
+/// the batcher on top).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, Compiled>>,
+}
+
+// The xla crate wraps thread-safe C++ objects behind raw pointers that
+// miss Send/Sync auto-derivation; executions are serialized by the
+// mutex above.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(XlaRuntime {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile every artifact of `entry` up front (hides first-call
+    /// compile latency from the serving path; used by the coordinator
+    /// benches and the e2e example).
+    pub fn precompile(&self, entry: &str) -> Result<usize> {
+        let infos: Vec<ArtifactInfo> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == entry)
+            .cloned()
+            .collect();
+        for info in &infos {
+            let zeros_a = vec![0i32; info.batch * info.k];
+            let zeros_b = vec![0i32; info.batch * info.k];
+            self.execute(info, &zeros_a, &zeros_b)?;
+        }
+        Ok(infos.len())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn key(info: &ArtifactInfo) -> String {
+        format!("{}:{}:{}", info.entry, info.batch, info.k)
+    }
+
+    /// Execute the artifact on a padded batch.
+    ///
+    /// `a`, `b`: row-major `batch x k` base-256 digits (int32).
+    /// Returns `batch x 2k` digits. Compiles the artifact on first use.
+    pub fn execute(&self, info: &ArtifactInfo, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+        let (batch, k) = (info.batch, info.k);
+        if a.len() != batch * k || b.len() != batch * k {
+            bail!(
+                "execute: operand size {} x {} != batch {batch} x k {k}",
+                a.len(),
+                b.len()
+            );
+        }
+        let mut map = self.compiled.lock().unwrap();
+        let key = Self::key(info);
+        if !map.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&info.file)
+                .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {:?}", info.file))?;
+            map.insert(key.clone(), Compiled { exe, batch, k });
+        }
+        let c = map.get(&key).unwrap();
+        let dims = [c.batch as i64, c.k as i64];
+        let la = xla::Literal::vec1(a).reshape(&dims)?;
+        let lb = xla::Literal::vec1(b).reshape(&dims)?;
+        let result = c.exe.execute::<xla::Literal>(&[la, lb])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // lowered with return_tuple=True
+        Ok(out.to_vec::<i32>()?)
+    }
+
+    /// Convenience: multiply one pair of K-digit base-256 vectors using
+    /// the best-fitting artifact (padding K and batch as needed).
+    pub fn mul_base256(&self, entry: &str, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+        let k = a.len();
+        let info = self
+            .manifest
+            .select(entry, k, 1)
+            .with_context(|| format!("no `{entry}` artifact fits k = {k}"))?
+            .clone();
+        let mut pa = vec![0i32; info.batch * info.k];
+        let mut pb = vec![0i32; info.batch * info.k];
+        pa[..k].copy_from_slice(a);
+        pb[..k].copy_from_slice(b);
+        let out = self.execute(&info, &pa, &pb)?;
+        // Row 0, truncated to the true product width 2k. Digits beyond
+        // 2k are zero because the operands were zero-padded.
+        debug_assert!(out[2 * k..2 * info.k].iter().all(|&d| d == 0));
+        Ok(out[..2 * k].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::DEFAULT_ARTIFACTS_DIR;
+
+    fn runtime() -> Option<XlaRuntime> {
+        // Tests are skipped gracefully when `make artifacts` has not run.
+        XlaRuntime::new(DEFAULT_ARTIFACTS_DIR).ok()
+    }
+
+    #[test]
+    fn executes_school_artifact() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        // 0x01FF * 0x0100 = 0x01FF00 in base-256 digits (LSB first).
+        let mut a = vec![0i32; 256];
+        let mut b = vec![0i32; 256];
+        a[0] = 0xFF;
+        a[1] = 0x01;
+        b[1] = 0x01;
+        let c = rt.mul_base256("school", &a, &b).unwrap();
+        assert_eq!(c[0], 0);
+        assert_eq!(c[1], 0xFF);
+        assert_eq!(c[2], 0x01);
+        assert!(c[3..].iter().all(|&d| d == 0));
+    }
+
+    #[test]
+    fn school_and_karatsuba_artifacts_agree() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let mut rng = crate::util::Rng::new(0xA1);
+        let a: Vec<i32> = (0..256).map(|_| rng.below(256) as i32).collect();
+        let b: Vec<i32> = (0..256).map(|_| rng.below(256) as i32).collect();
+        let s = rt.mul_base256("school", &a, &b).unwrap();
+        let k = rt.mul_base256("karatsuba", &a, &b).unwrap();
+        assert_eq!(s, k);
+    }
+
+    #[test]
+    fn artifact_matches_rust_reference() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        use crate::bignum::{mul, Base, Ops};
+        let base8 = Base::new(8);
+        let mut rng = crate::util::Rng::new(0xB2);
+        let a: Vec<u32> = (0..256).map(|_| rng.below(256) as u32).collect();
+        let b: Vec<u32> = (0..256).map(|_| rng.below(256) as u32).collect();
+        let mut ops = Ops::default();
+        let want = mul::mul_school(&a, &b, base8, &mut ops);
+        let ai: Vec<i32> = a.iter().map(|&x| x as i32).collect();
+        let bi: Vec<i32> = b.iter().map(|&x| x as i32).collect();
+        let got = rt.mul_base256("school", &ai, &bi).unwrap();
+        let got: Vec<u32> = got.iter().map(|&x| x as u32).collect();
+        assert_eq!(got, want);
+    }
+}

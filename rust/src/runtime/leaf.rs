@@ -1,0 +1,210 @@
+//! [`XlaLeaf`]: routes simulator leaf products through the compiled
+//! JAX+Pallas artifact.
+//!
+//! The machine simulator works in base 2^16 (one digit per word); the
+//! artifacts work in base 2^8 (int32 lanes, exactness headroom for the
+//! in-graph convolution). The leaf repacks 16→8 bits, pads to the
+//! artifact's K, executes, and repacks the 2K-digit product back.
+//! Operands wider than the largest compiled K are split with host-side
+//! Karatsuba until the pieces fit (each piece then runs on the XLA
+//! executable, so the compiled kernel still does all the O(K²) work).
+//!
+//! Digit-op accounting: the artifact performs the same digit
+//! convolution the schoolbook leaf would; we charge `2·k8²` ops per
+//! executed pair (k8 = base-256 width), identical to `mul_school` on
+//! the repacked operands, so simulator cost theorems are unaffected by
+//! the backend choice.
+
+use super::client::XlaRuntime;
+use crate::algorithms::leaf::LeafMultiplier;
+use crate::bignum::convert::repack_base;
+use crate::bignum::core::add_into_width;
+use crate::bignum::{Base, Ops};
+use std::sync::Arc;
+
+/// Leaf multiplier backed by the PJRT runtime.
+pub struct XlaLeaf {
+    rt: Arc<XlaRuntime>,
+    entry: String,
+    /// Largest base-256 operand width the compiled artifacts accept.
+    max_k: usize,
+}
+
+impl XlaLeaf {
+    pub fn new(rt: Arc<XlaRuntime>, entry: &str) -> Self {
+        let max_k = rt.manifest().max_k(entry);
+        assert!(max_k > 0, "no `{entry}` artifacts available");
+        XlaLeaf {
+            rt,
+            entry: entry.to_string(),
+            max_k,
+        }
+    }
+}
+
+/// Multiply base-256 digit vectors of equal width: call `fit` directly
+/// while they fit `max_k`, otherwise split with host Karatsuba (same
+/// scheme as `bignum::mul::skim`) until the pieces fit. Shared by
+/// [`XlaLeaf`] and the coordinator's batching leaf.
+pub(crate) fn split_mul8(
+    fit: &mut dyn FnMut(&[u32], &[u32], &mut Ops) -> Vec<u32>,
+    max_k: usize,
+    a: &[u32],
+    b: &[u32],
+    ops: &mut Ops,
+) -> Vec<u32> {
+    let k = a.len();
+    if k <= max_k {
+        return fit(a, b, ops);
+    }
+    let base8 = Base::new(8);
+    let h = k / 2;
+    let (a0, a1) = (&a[..h], &a[h..]);
+    let (b0, b1) = (&b[..h], &b[h..]);
+    let (fa, ad) = crate::bignum::mul::abs_diff(a0, a1, base8, ops);
+    let (fb, bd) = crate::bignum::mul::abs_diff(b1, b0, base8, ops);
+    let c0 = split_mul8(fit, max_k, a0, b0, ops);
+    let c2 = split_mul8(fit, max_k, a1, b1, ops);
+    let cp = split_mul8(fit, max_k, &ad, &bd, ops);
+    let sign = fa * fb;
+    let mut out = vec![0u32; 2 * k];
+    out[..2 * h].copy_from_slice(&c0);
+    add_into_width(&mut out, &c0, h, base8, ops);
+    add_into_width(&mut out, &c2, h, base8, ops);
+    add_into_width(&mut out, &c2, k, base8, ops);
+    match sign {
+        1 => add_into_width(&mut out, &cp, h, base8, ops),
+        -1 => sub_into(&mut out, &cp, h, ops),
+        _ => {}
+    }
+    out
+}
+
+/// Repack machine-base operands to padded base-256 vectors, run `mul8`
+/// on them, repack the product back. Shared leaf plumbing.
+pub(crate) fn repacked_mul(
+    mul8: &mut dyn FnMut(&[u32], &[u32], &mut Ops) -> Vec<u32>,
+    a: &[u32],
+    b: &[u32],
+    base: Base,
+    ops: &mut Ops,
+) -> Vec<u32> {
+    let w = a.len();
+    debug_assert_eq!(w, b.len());
+    let base8 = Base::new(8);
+    let k8_exact = (w * base.log2 as usize).div_ceil(8);
+    let k8 = k8_exact.next_power_of_two().max(8);
+    let mut a8 = repack_base(a, base, base8);
+    let mut b8 = repack_base(b, base, base8);
+    a8.resize(k8, 0);
+    b8.resize(k8, 0);
+    let c8 = mul8(&a8, &b8, ops);
+    let mut c = repack_base(&c8, base8, base);
+    c.resize(2 * w, 0);
+    c
+}
+
+fn sub_into(dst: &mut [u32], src: &[u32], off: usize, ops: &mut Ops) {
+    let mut borrow = 0i64;
+    let mut i = 0;
+    while i < src.len() || borrow != 0 {
+        let d = off + i;
+        let sub = if i < src.len() { src[i] as i64 } else { 0 };
+        let mut t = dst[d] as i64 - sub - borrow;
+        if t < 0 {
+            t += 256;
+            borrow = 1;
+        } else {
+            borrow = 0;
+        }
+        dst[d] = t as u32;
+        ops.charge(1);
+        i += 1;
+    }
+}
+
+impl LeafMultiplier for XlaLeaf {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn mul(&self, a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
+        let mut fit = |x: &[u32], y: &[u32], ops: &mut Ops| -> Vec<u32> {
+            let k = x.len();
+            let ai: Vec<i32> = x.iter().map(|&d| d as i32).collect();
+            let bi: Vec<i32> = y.iter().map(|&d| d as i32).collect();
+            let out = self
+                .rt
+                .mul_base256(&self.entry, &ai, &bi)
+                .expect("XLA leaf execution failed");
+            ops.charge(2 * (k as u64) * (k as u64));
+            out.iter().map(|&d| d as u32).collect()
+        };
+        let max_k = self.max_k;
+        repacked_mul(
+            &mut |a8, b8, ops| split_mul8(&mut fit, max_k, a8, b8, ops),
+            a,
+            b,
+            base,
+            ops,
+        )
+    }
+
+    fn scratch_words(&self, w: usize) -> usize {
+        // Host-side buffers for repack + artifact I/O (in machine words).
+        4 * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::mul;
+    use crate::runtime::DEFAULT_ARTIFACTS_DIR;
+    use crate::util::Rng;
+
+    fn leaf() -> Option<XlaLeaf> {
+        let rt = XlaRuntime::new(DEFAULT_ARTIFACTS_DIR).ok()?;
+        Some(XlaLeaf::new(Arc::new(rt), "school"))
+    }
+
+    #[test]
+    fn xla_leaf_matches_rust_leaf() {
+        let Some(l) = leaf() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let base = Base::new(16);
+        let mut rng = Rng::new(0x1EAF);
+        for &w in &[8usize, 32, 128] {
+            let a = rng.digits(w, 16);
+            let b = rng.digits(w, 16);
+            let mut o1 = Ops::default();
+            let mut o2 = Ops::default();
+            let got = l.mul(&a, &b, base, &mut o1);
+            let want = mul::mul_school(&a, &b, base, &mut o2);
+            assert_eq!(got, want, "w={w}");
+            assert!(o1.get() > 0);
+        }
+    }
+
+    #[test]
+    fn xla_leaf_splits_oversized_operands() {
+        let Some(l) = leaf() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        // 4096 base-2^16 digits = 8192 base-256 digits > max K (1024):
+        // requires host Karatsuba splitting (3 levels).
+        let base = Base::new(16);
+        let mut rng = Rng::new(0xB16);
+        let w = 4096;
+        let a = rng.digits(w, 16);
+        let b = rng.digits(w, 16);
+        let mut o1 = Ops::default();
+        let mut o2 = Ops::default();
+        let got = l.mul(&a, &b, base, &mut o1);
+        let want = mul::skim(&a, &b, base, &mut o2);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,27 @@
+//! Runtime — PJRT/XLA execution of the AOT-compiled leaf multiplier.
+//!
+//! The build path (`make artifacts`) runs Python once: JAX lowers the
+//! L2 model (which inlines the L1 Pallas kernel under `interpret=True`)
+//! to HLO *text* under `artifacts/`. This module loads those artifacts
+//! with the `xla` crate (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`), so the
+//! Rust hot path executes the compiled kernel with no Python anywhere.
+//!
+//! * [`artifacts`] — manifest parsing and artifact registry.
+//! * [`client`] — the PJRT wrapper: one compiled executable per
+//!   (entry, batch, K) shape.
+//! * [`leaf`] — [`XlaLeaf`]: a [`LeafMultiplier`] that routes the
+//!   simulator's single-processor leaf products through the executable
+//!   (with base 2^16 ↔ 2^8 repacking and host-side Karatsuba splitting
+//!   for operands wider than the largest compiled K).
+
+pub mod artifacts;
+pub mod client;
+pub mod leaf;
+
+pub use artifacts::{ArtifactInfo, Manifest};
+pub use client::XlaRuntime;
+pub use leaf::XlaLeaf;
+
+/// Default artifacts directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";

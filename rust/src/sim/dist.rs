@@ -1,0 +1,344 @@
+//! Distributed integers: values partitioned across processor sequences
+//! (§2.1 "A is partitioned among the processors in P in n' digits"),
+//! plus the generic layout-change (`repartition`) and scalar broadcast
+//! helpers the algorithms use for their redistribution phases.
+
+use super::machine::{Machine, ProcId, Slot};
+use super::seq::Seq;
+use anyhow::Result;
+
+/// An integer partitioned across processors: chunk `k` (LSB-first) holds
+/// digits `[k·w, (k+1)·w)` of the value in the local memory of its owner.
+#[derive(Clone, Debug)]
+pub struct DistInt {
+    /// Digits per chunk (the paper's n').
+    pub chunk_width: usize,
+    /// `(owner, slot)` per chunk, least-significant chunk first.
+    pub chunks: Vec<(ProcId, Slot)>,
+}
+
+impl DistInt {
+    /// Total number of digits.
+    pub fn total_width(&self) -> usize {
+        self.chunk_width * self.chunks.len()
+    }
+
+    /// Owners in chunk order.
+    pub fn owners(&self) -> Vec<ProcId> {
+        self.chunks.iter().map(|&(p, _)| p).collect()
+    }
+
+    /// Distribute `digits` (LSB-first, length exactly `width·|seq|`)
+    /// across `seq` in `width`-digit chunks. Models the paper's initial
+    /// input layout; charges memory but no communication (the input is
+    /// assumed already balanced across processors, as both the
+    /// algorithms and the memory-independent lower bounds require).
+    pub fn scatter(m: &mut Machine, seq: &Seq, digits: &[u32], width: usize) -> Result<DistInt> {
+        assert_eq!(
+            digits.len(),
+            width * seq.len(),
+            "scatter: digit count {} != width {} x |P| {}",
+            digits.len(),
+            width,
+            seq.len()
+        );
+        let mut chunks = Vec::with_capacity(seq.len());
+        for j in 0..seq.len() {
+            let p = seq.at(j);
+            let slot = m.alloc(p, digits[j * width..(j + 1) * width].to_vec())?;
+            chunks.push((p, slot));
+        }
+        Ok(DistInt {
+            chunk_width: width,
+            chunks,
+        })
+    }
+
+    /// Collect the full digit vector (verification only — no cost).
+    pub fn gather(&self, m: &Machine) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.total_width());
+        for &(p, slot) in &self.chunks {
+            out.extend_from_slice(m.read(p, slot));
+        }
+        out
+    }
+
+    /// Free every chunk.
+    pub fn free(self, m: &mut Machine) {
+        for (p, slot) in self.chunks {
+            m.free(p, slot);
+        }
+    }
+
+    /// Split into (low, high) halves by chunk index. Both halves keep
+    /// the chunk width; no data moves.
+    pub fn split_half(&self) -> (DistInt, DistInt) {
+        let h = self.chunks.len() / 2;
+        (
+            DistInt {
+                chunk_width: self.chunk_width,
+                chunks: self.chunks[..h].to_vec(),
+            },
+            DistInt {
+                chunk_width: self.chunk_width,
+                chunks: self.chunks[h..].to_vec(),
+            },
+        )
+    }
+
+    /// Concatenate `lo` (less significant) and `hi` (equal chunk width).
+    pub fn concat(lo: DistInt, hi: DistInt) -> DistInt {
+        assert_eq!(lo.chunk_width, hi.chunk_width);
+        let mut chunks = lo.chunks;
+        chunks.extend(hi.chunks);
+        DistInt {
+            chunk_width: lo.chunk_width,
+            chunks,
+        }
+    }
+
+    /// Change layout: repartition the same value onto `new_seq` in
+    /// `new_width`-digit chunks (total width must be preserved).
+    ///
+    /// Every digit moves at most once (one message per maximal
+    /// contiguous source-range → destination pair; ranges staying on
+    /// their owner move for free), which keeps the charged communication
+    /// within the per-phase budgets of the paper's redistribution steps
+    /// (§5.1 phases 1a–1c / 3a–3e, §6.1 splitting/recomposition, §5.2 and
+    /// §6.2 DFS input/output shuffles) — see DESIGN.md, decision 4.
+    pub fn repartition(
+        self,
+        m: &mut Machine,
+        new_seq: &Seq,
+        new_width: usize,
+    ) -> Result<DistInt> {
+        let new = self.copy_to(m, new_seq, new_width)?;
+        self.free(m);
+        Ok(new)
+    }
+
+    /// Pad with `extra` zero chunks at the most-significant end, placed
+    /// on the given owners (memory charged, no communication).
+    pub fn extend_zero(mut self, m: &mut Machine, owners: &[ProcId]) -> Result<DistInt> {
+        for &p in owners {
+            let slot = m.alloc(p, vec![0u32; self.chunk_width])?;
+            self.chunks.push((p, slot));
+        }
+        Ok(self)
+    }
+
+    /// Prepend zero chunks at the *least*-significant end (a `s^(k·w)`
+    /// shift), placed on the given owners.
+    pub fn prepend_zero(self, m: &mut Machine, owners: &[ProcId]) -> Result<DistInt> {
+        let mut chunks = Vec::with_capacity(owners.len() + self.chunks.len());
+        for &p in owners {
+            let slot = m.alloc(p, vec![0u32; self.chunk_width])?;
+            chunks.push((p, slot));
+        }
+        chunks.extend(self.chunks);
+        Ok(DistInt {
+            chunk_width: self.chunk_width,
+            chunks,
+        })
+    }
+
+    /// Replicate chunk-wise onto another sequence of the same length:
+    /// `chunks[j].owner` sends its chunk to `dst.at(j)` (one parallel
+    /// message round of `chunk_width` words; COPSIM §5.1 phases 1b/1c).
+    /// The source layout is kept.
+    pub fn replicate(&self, m: &mut Machine, dst: &Seq) -> Result<DistInt> {
+        assert_eq!(self.chunks.len(), dst.len(), "replicate: length mismatch");
+        let mut chunks = Vec::with_capacity(dst.len());
+        for (j, &(src, slot)) in self.chunks.iter().enumerate() {
+            let d = dst.at(j);
+            let s = if src == d {
+                let data = m.read(src, slot).to_vec();
+                m.alloc(d, data)?
+            } else {
+                m.send_copy(src, d, slot)?
+            };
+            chunks.push((d, s));
+        }
+        Ok(DistInt {
+            chunk_width: self.chunk_width,
+            chunks,
+        })
+    }
+
+    /// Non-consuming repartition: build a *copy* of this value laid out
+    /// on `new_seq` in `new_width`-digit chunks; the source stays
+    /// resident (the DFS execution modes copy subproblem inputs because
+    /// the originals are still needed by later subproblems).
+    pub fn copy_to(&self, m: &mut Machine, new_seq: &Seq, new_width: usize) -> Result<DistInt> {
+        let total = self.total_width();
+        assert_eq!(
+            total,
+            new_width * new_seq.len(),
+            "copy_to: total width {} != {} x |P| {}",
+            total,
+            new_width,
+            new_seq.len()
+        );
+        let old_w = self.chunk_width;
+        let mut new_chunks = Vec::with_capacity(new_seq.len());
+        for j in 0..new_seq.len() {
+            let dst = new_seq.at(j);
+            let lo = j * new_width;
+            let hi = lo + new_width;
+            let mut buf: Vec<u32> = Vec::with_capacity(new_width);
+            let first = lo / old_w;
+            let last = (hi - 1) / old_w;
+            let mut piece_slots: Vec<Slot> = Vec::new();
+            for k in first..=last {
+                let (src, slot) = self.chunks[k];
+                let r_lo = lo.max(k * old_w) - k * old_w;
+                let r_hi = hi.min((k + 1) * old_w) - k * old_w;
+                if src == dst {
+                    buf.extend_from_slice(&m.read(src, slot)[r_lo..r_hi]);
+                } else {
+                    let s = m.send_range(src, dst, slot, r_lo..r_hi)?;
+                    buf.extend_from_slice(m.read(dst, s));
+                    piece_slots.push(s);
+                }
+            }
+            for s in piece_slots {
+                m.free(dst, s);
+            }
+            debug_assert_eq!(buf.len(), new_width);
+            let slot = m.alloc(dst, buf)?;
+            new_chunks.push((dst, slot));
+        }
+        Ok(DistInt {
+            chunk_width: new_width,
+            chunks: new_chunks,
+        })
+    }
+}
+
+/// Broadcast a scalar from `seq[root]` to every processor of `seq` with a
+/// binomial tree (≤ ⌈log₂|P|⌉ message rounds on the critical path).
+/// Returns one scalar slot per sequence rank (root's included).
+pub fn bcast_scalar(m: &mut Machine, seq: &Seq, root: usize, value: u32) -> Result<Vec<Slot>> {
+    let p = seq.len();
+    let mut slots: Vec<Option<Slot>> = vec![None; p];
+    slots[root] = Some(m.alloc_scalar(seq.at(root), value)?);
+    // Re-rank so the root is rank 0 (rotation preserves pairings).
+    let rerank = |r: usize| (r + root) % p;
+    let mut have = 1usize;
+    while have < p {
+        // Ranks [0, have) send to ranks [have, 2·have) in parallel.
+        for r in 0..have.min(p - have) {
+            let src_rank = rerank(r);
+            let dst_rank = rerank(r + have);
+            let src = seq.at(src_rank);
+            let dst = seq.at(dst_rank);
+            let s = m.send(src, dst, vec![value])?;
+            slots[dst_rank] = Some(s);
+        }
+        have *= 2;
+    }
+    Ok(slots.into_iter().map(|s| s.unwrap()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bignum::Base;
+    use crate::util::Rng;
+
+    fn mk(p: usize) -> Machine {
+        Machine::unbounded(p, Base::new(16))
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let mut m = mk(4);
+        let seq = Seq::range(4);
+        let mut rng = Rng::new(5);
+        let digits = rng.digits(16, 16);
+        let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
+        assert_eq!(d.gather(&m), digits);
+        assert_eq!(m.critical().words, 0, "scatter must not communicate");
+    }
+
+    #[test]
+    fn split_concat() {
+        let mut m = mk(4);
+        let seq = Seq::range(4);
+        let digits: Vec<u32> = (0..16).collect();
+        let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
+        let (lo, hi) = d.split_half();
+        assert_eq!(lo.gather(&m), (0..8).collect::<Vec<u32>>());
+        assert_eq!(hi.gather(&m), (8..16).collect::<Vec<u32>>());
+        let d = DistInt::concat(lo, hi);
+        assert_eq!(d.gather(&m), digits);
+    }
+
+    #[test]
+    fn repartition_preserves_value() {
+        let mut m = mk(8);
+        let seq = Seq::range(8);
+        let mut rng = Rng::new(7);
+        let digits = rng.digits(32, 16);
+        let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
+        // 8 procs x 4 digits -> 4 procs x 8 digits (upper half owners).
+        let target = Seq(vec![4, 5, 6, 7]);
+        let d = d.repartition(&mut m, &target, 8).unwrap();
+        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.owners(), vec![4, 5, 6, 7]);
+        // Each moved digit charged once: 32 digits move (none of the
+        // lower-half digits stay put, upper half: chunk k of proc 4..7
+        // partially stays). Just sanity-check totals are bounded.
+        assert!(m.stats.total_words <= 32);
+    }
+
+    #[test]
+    fn repartition_same_layout_is_free() {
+        let mut m = mk(4);
+        let seq = Seq::range(4);
+        let digits: Vec<u32> = (0..16).collect();
+        let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
+        let d = d.repartition(&mut m, &seq, 4).unwrap();
+        assert_eq!(d.gather(&m), digits);
+        assert_eq!(m.stats.total_words, 0);
+        assert_eq!(m.stats.total_msgs, 0);
+    }
+
+    #[test]
+    fn repartition_interleave() {
+        let mut m = mk(4);
+        let seq = Seq::range(4);
+        let digits: Vec<u32> = (100..116).collect();
+        let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
+        let inter = seq.interleave_halves(); // [0, 2, 1, 3]
+        let d = d.repartition(&mut m, &inter, 4).unwrap();
+        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.owners(), inter.ids().to_vec());
+    }
+
+    #[test]
+    fn bcast_scalar_reaches_all() {
+        let mut m = mk(8);
+        let seq = Seq::range(8);
+        let slots = bcast_scalar(&mut m, &seq, 3, 77).unwrap();
+        for (r, s) in slots.iter().enumerate() {
+            assert_eq!(m.read_scalar(seq.at(r), *s), 77);
+        }
+        // Binomial tree: critical path <= log2(8) = 3 messages.
+        assert!(m.critical().msgs <= 3, "msgs = {}", m.critical().msgs);
+        assert_eq!(m.stats.total_msgs, 7);
+    }
+
+    #[test]
+    fn extend_zero_pads_high() {
+        let mut m = mk(4);
+        let seq = Seq::range(4);
+        let digits: Vec<u32> = (1..9).collect();
+        let d = DistInt::scatter(&mut m, &Seq(vec![0, 1]), &digits, 4).unwrap();
+        let d = d.extend_zero(&mut m, &[2, 3]).unwrap();
+        let mut want = digits.clone();
+        want.extend(vec![0u32; 8]);
+        assert_eq!(d.gather(&m), want);
+        let _ = seq;
+    }
+}

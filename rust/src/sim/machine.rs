@@ -1,0 +1,405 @@
+//! The machine: processors, memory ledgers, message transport.
+
+use super::Clock;
+use crate::bignum::{Base, Ops};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Processor identifier: index into the machine's processor table.
+pub type ProcId = usize;
+
+/// Handle to a value resident in some processor's local memory.
+pub type Slot = u64;
+
+/// One simulated processor: logical clock + memory ledger + store.
+#[derive(Debug)]
+pub struct Processor {
+    pub clock: Clock,
+    store: HashMap<Slot, Vec<u32>>,
+    mem_used: u64,
+    mem_peak: u64,
+    mem_cap: u64,
+    /// Total ops executed by this processor (aggregate work, not
+    /// critical path): used by the speedup/efficiency experiments.
+    pub total_ops: u64,
+}
+
+impl Processor {
+    fn new(mem_cap: u64) -> Self {
+        Processor {
+            clock: Clock::default(),
+            store: HashMap::new(),
+            mem_used: 0,
+            mem_peak: 0,
+            mem_cap,
+            total_ops: 0,
+        }
+    }
+
+    #[inline]
+    pub fn mem_used(&self) -> u64 {
+        self.mem_used
+    }
+    #[inline]
+    pub fn mem_peak(&self) -> u64 {
+        self.mem_peak
+    }
+}
+
+/// Aggregate (whole-machine) statistics, complementing the critical-path
+/// clock: total communicated volume, total messages, total work.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MachineStats {
+    pub total_words: u64,
+    pub total_msgs: u64,
+    pub total_ops: u64,
+}
+
+/// The distributed-memory machine (see module docs for the model).
+#[derive(Debug)]
+pub struct Machine {
+    procs: Vec<Processor>,
+    pub base: Base,
+    next_slot: Slot,
+    pub stats: MachineStats,
+    /// When true, allocation failures abort with a context message
+    /// instead of returning Err (handy under tests). Default false.
+    pub trace: bool,
+    trace_log: Vec<String>,
+}
+
+impl Machine {
+    /// Create a machine with `p` processors, each with `mem_cap` words of
+    /// local memory, computing over digits of `base`.
+    pub fn new(p: usize, mem_cap: u64, base: Base) -> Self {
+        assert!(p >= 1, "need at least one processor");
+        Machine {
+            procs: (0..p).map(|_| Processor::new(mem_cap)).collect(),
+            base,
+            next_slot: 1,
+            stats: MachineStats::default(),
+            trace: false,
+            trace_log: Vec::new(),
+        }
+    }
+
+    /// Convenience: effectively unbounded local memories (for the MI
+    /// execution mode, which by definition ignores M).
+    pub fn unbounded(p: usize, base: Base) -> Self {
+        Machine::new(p, u64::MAX / 2, base)
+    }
+
+    #[inline]
+    pub fn n_procs(&self) -> usize {
+        self.procs.len()
+    }
+
+    #[inline]
+    pub fn mem_cap(&self) -> u64 {
+        self.procs[0].mem_cap
+    }
+
+    pub fn proc(&self, p: ProcId) -> &Processor {
+        &self.procs[p]
+    }
+
+    // ----- memory ledger ---------------------------------------------
+
+    /// Allocate `data` in `p`'s local memory. Fails if the capacity `M`
+    /// would be exceeded — this is the mechanism that makes the paper's
+    /// memory-requirement statements falsifiable.
+    pub fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
+        let words = data.len() as u64;
+        let proc = &mut self.procs[p];
+        if proc.mem_used + words > proc.mem_cap {
+            bail!(
+                "processor {p}: local memory exceeded (used {} + {} > cap {})",
+                proc.mem_used,
+                words,
+                proc.mem_cap
+            );
+        }
+        proc.mem_used += words;
+        proc.mem_peak = proc.mem_peak.max(proc.mem_used);
+        let slot = self.next_slot;
+        self.next_slot += 1;
+        self.procs[p].store.insert(slot, data);
+        Ok(slot)
+    }
+
+    /// Allocate a single scalar word (flags, carries).
+    pub fn alloc_scalar(&mut self, p: ProcId, v: u32) -> Result<Slot> {
+        self.alloc(p, vec![v])
+    }
+
+    /// Free a slot, returning its contents.
+    pub fn free(&mut self, p: ProcId, slot: Slot) -> Vec<u32> {
+        let data = self.procs[p]
+            .store
+            .remove(&slot)
+            .unwrap_or_else(|| panic!("processor {p}: free of unknown slot {slot}"));
+        self.procs[p].mem_used -= data.len() as u64;
+        data
+    }
+
+    /// Read a slot's contents.
+    pub fn read(&self, p: ProcId, slot: Slot) -> &[u32] {
+        self.procs[p]
+            .store
+            .get(&slot)
+            .unwrap_or_else(|| panic!("processor {p}: read of unknown slot {slot}"))
+    }
+
+    /// Read a scalar slot.
+    pub fn read_scalar(&self, p: ProcId, slot: Slot) -> u32 {
+        let d = self.read(p, slot);
+        debug_assert_eq!(d.len(), 1);
+        d[0]
+    }
+
+    /// Overwrite a slot in place (same or different width; ledger updated).
+    pub fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
+        let old_len = self
+            .procs[p]
+            .store
+            .get(&slot)
+            .unwrap_or_else(|| panic!("processor {p}: replace of unknown slot {slot}"))
+            .len() as u64;
+        let new_len = data.len() as u64;
+        let proc = &mut self.procs[p];
+        if proc.mem_used - old_len + new_len > proc.mem_cap {
+            bail!(
+                "processor {p}: local memory exceeded on replace ({} -> {} words, cap {})",
+                old_len,
+                new_len,
+                proc.mem_cap
+            );
+        }
+        proc.mem_used = proc.mem_used - old_len + new_len;
+        proc.mem_peak = proc.mem_peak.max(proc.mem_used);
+        proc.store.insert(slot, data);
+        Ok(())
+    }
+
+    // ----- computation ------------------------------------------------
+
+    /// Charge `ops` digit operations to `p`'s clock.
+    pub fn compute(&mut self, p: ProcId, ops: u64) {
+        self.procs[p].clock.ops += ops;
+        self.procs[p].total_ops += ops;
+        self.stats.total_ops += ops;
+    }
+
+    /// Run a local computation whose digit-op count is tracked by an
+    /// [`Ops`] counter, charging the result to `p`.
+    pub fn local<R>(&mut self, p: ProcId, f: impl FnOnce(&Base, &mut Ops) -> R) -> R {
+        let mut ops = Ops::default();
+        let base = self.base;
+        let r = f(&base, &mut ops);
+        self.compute(p, ops.get());
+        r
+    }
+
+    // ----- communication ----------------------------------------------
+
+    /// Send `data` from `src` to `dst` as one message; allocates the
+    /// payload in `dst`'s memory and returns the new slot.
+    ///
+    /// Cost semantics (see module docs): the transfer is charged once —
+    /// to the sender's clock — and the receiver clock joins the sender's
+    /// post-send snapshot, so both end at least at the transfer's
+    /// completion time on every metric.
+    pub fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        let words = data.len() as u64;
+        self.procs[src].clock.words += words;
+        self.procs[src].clock.msgs += 1;
+        self.stats.total_words += words;
+        self.stats.total_msgs += 1;
+        let snapshot = self.procs[src].clock;
+        let slot = self.alloc(dst, data)?;
+        let dclock = &mut self.procs[dst].clock;
+        *dclock = dclock.join(&snapshot);
+        Ok(slot)
+    }
+
+    /// Send a copy of an existing slot (source keeps its copy).
+    pub fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        let data = self.read(src, slot).to_vec();
+        self.send(src, dst, data)
+    }
+
+    /// Send an existing slot and free it at the source ("...and then
+    /// removes it from its local memory", as the paper repeatedly does).
+    pub fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        let data = self.free(src, slot);
+        self.send(src, dst, data)
+    }
+
+    /// Send a sub-range of a slot's digits (copy).
+    pub fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: std::ops::Range<usize>,
+    ) -> Result<Slot> {
+        let data = self.read(src, slot)[range].to_vec();
+        self.send(src, dst, data)
+    }
+
+    /// Synchronize a set of processors (a barrier): all clocks join.
+    /// The paper's algorithms are bulk-synchronous within each phase;
+    /// explicit barriers are only used by the experiment harness between
+    /// phases, not inside the algorithms (which synchronize via their
+    /// actual messages).
+    pub fn barrier(&mut self, procs: &[ProcId]) {
+        let mut j = Clock::default();
+        for &p in procs {
+            j = j.join(&self.procs[p].clock);
+        }
+        for &p in procs {
+            self.procs[p].clock = j;
+        }
+    }
+
+    // ----- reporting ----------------------------------------------------
+
+    /// Critical-path cost: component-wise max over all processors.
+    pub fn critical(&self) -> Clock {
+        let mut j = Clock::default();
+        for p in &self.procs {
+            j = j.join(&p.clock);
+        }
+        j
+    }
+
+    /// Peak local-memory usage over all processors (the paper's M(n,P)).
+    pub fn mem_peak_max(&self) -> u64 {
+        self.procs.iter().map(|p| p.mem_peak).max().unwrap_or(0)
+    }
+
+    /// Sum of peak local-memory usage (the "total memory O(n)" claim).
+    pub fn mem_peak_total(&self) -> u64 {
+        self.procs.iter().map(|p| p.mem_peak).sum()
+    }
+
+    /// Current resident words across all processors.
+    pub fn mem_used_total(&self) -> u64 {
+        self.procs.iter().map(|p| p.mem_used).sum()
+    }
+
+    /// Record a trace event (no cost) when tracing is enabled.
+    pub fn event(&mut self, msg: impl Into<String>) {
+        if self.trace {
+            self.trace_log.push(msg.into());
+        }
+    }
+
+    pub fn trace_log(&self) -> &[String] {
+        &self.trace_log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(p: usize, cap: u64) -> Machine {
+        Machine::new(p, cap, Base::new(16))
+    }
+
+    #[test]
+    fn alloc_free_ledger() {
+        let mut m = mk(2, 10);
+        let s = m.alloc(0, vec![1, 2, 3]).unwrap();
+        assert_eq!(m.proc(0).mem_used(), 3);
+        assert_eq!(m.read(0, s), &[1, 2, 3]);
+        let d = m.free(0, s);
+        assert_eq!(d, vec![1, 2, 3]);
+        assert_eq!(m.proc(0).mem_used(), 0);
+        assert_eq!(m.proc(0).mem_peak(), 3);
+    }
+
+    #[test]
+    fn alloc_respects_capacity() {
+        let mut m = mk(1, 4);
+        let _a = m.alloc(0, vec![0; 3]).unwrap();
+        assert!(m.alloc(0, vec![0; 2]).is_err());
+        let _b = m.alloc(0, vec![0; 1]).unwrap();
+    }
+
+    #[test]
+    fn send_charges_sender_and_joins_receiver() {
+        let mut m = mk(2, 100);
+        m.compute(0, 10);
+        let s = m.send(0, 1, vec![7, 8]).unwrap();
+        assert_eq!(m.read(1, s), &[7, 8]);
+        // Sender: 2 words, 1 msg, 10 ops.
+        assert_eq!(m.proc(0).clock, Clock { ops: 10, words: 2, msgs: 1 });
+        // Receiver joined the snapshot.
+        assert_eq!(m.proc(1).clock, Clock { ops: 10, words: 2, msgs: 1 });
+        // Aggregates.
+        assert_eq!(m.stats.total_words, 2);
+        assert_eq!(m.stats.total_msgs, 1);
+    }
+
+    #[test]
+    fn parallel_disjoint_work_counts_once() {
+        // Two processors each do 100 ops "in parallel" (disjoint clocks):
+        // the critical path is 100, not 200.
+        let mut m = mk(2, 100);
+        m.compute(0, 100);
+        m.compute(1, 100);
+        assert_eq!(m.critical().ops, 100);
+        assert_eq!(m.stats.total_ops, 200);
+    }
+
+    #[test]
+    fn sequential_dependent_work_accumulates() {
+        // p0 computes, sends to p1, p1 computes: critical path adds up.
+        let mut m = mk(2, 100);
+        m.compute(0, 50);
+        m.send(0, 1, vec![1]).unwrap();
+        m.compute(1, 70);
+        assert_eq!(m.critical(), Clock { ops: 120, words: 1, msgs: 1 });
+    }
+
+    #[test]
+    fn send_move_frees_source() {
+        let mut m = mk(2, 10);
+        let s = m.alloc(0, vec![1, 2]).unwrap();
+        let d = m.send_move(0, 1, s).unwrap();
+        assert_eq!(m.proc(0).mem_used(), 0);
+        assert_eq!(m.read(1, d), &[1, 2]);
+    }
+
+    #[test]
+    fn local_charges_ops() {
+        let mut m = mk(1, 100);
+        let v = m.local(0, |base, ops| {
+            ops.charge(42);
+            base.s()
+        });
+        assert_eq!(v, 65536);
+        assert_eq!(m.proc(0).clock.ops, 42);
+    }
+
+    #[test]
+    fn barrier_joins_clocks() {
+        let mut m = mk(3, 100);
+        m.compute(0, 5);
+        m.compute(1, 9);
+        m.barrier(&[0, 1, 2]);
+        assert_eq!(m.proc(2).clock.ops, 9);
+    }
+
+    #[test]
+    fn replace_updates_ledger() {
+        let mut m = mk(1, 10);
+        let s = m.alloc(0, vec![1, 2, 3]).unwrap();
+        m.replace(0, s, vec![9]).unwrap();
+        assert_eq!(m.proc(0).mem_used(), 1);
+        assert_eq!(m.read(0, s), &[9]);
+    }
+}

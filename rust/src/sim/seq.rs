@@ -1,0 +1,195 @@
+//! Ordered processor sequences (the paper's **P** notation, §2.1).
+//!
+//! `seq[0]` (the paper's `P[0]`) owns the *least-significant* chunk of a
+//! distributed integer; `seq[len-1]` the most significant. The paper's
+//! standard splits are provided: halves (`P'`, `P''`), even/odd
+//! interleavings (COPSIM's four groups), and the COPK three-way split.
+
+use super::machine::ProcId;
+
+/// An ordered sequence of processors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Seq(pub Vec<ProcId>);
+
+impl Seq {
+    /// The canonical sequence `[0, 1, ..., p-1]`.
+    pub fn range(p: usize) -> Self {
+        Seq((0..p).collect())
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// The paper's `P[i]`.
+    #[inline]
+    pub fn at(&self, i: usize) -> ProcId {
+        self.0[i]
+    }
+
+    pub fn ids(&self) -> &[ProcId] {
+        &self.0
+    }
+
+    /// Lower half `P' = [P[|P|/2 - 1], ..., P[0]]` (least significant).
+    pub fn lower_half(&self) -> Seq {
+        Seq(self.0[..self.len() / 2].to_vec())
+    }
+
+    /// Upper half `P'' = [P[|P|-1], ..., P[|P|/2]]` (most significant).
+    pub fn upper_half(&self) -> Seq {
+        Seq(self.0[self.len() / 2..].to_vec())
+    }
+
+    /// Even-index subsequence `[P[0], P[2], ...]`.
+    pub fn evens(&self) -> Seq {
+        Seq(self.0.iter().copied().step_by(2).collect())
+    }
+
+    /// Odd-index subsequence `[P[1], P[3], ...]`.
+    pub fn odds(&self) -> Seq {
+        Seq(self.0.iter().skip(1).copied().step_by(2).collect())
+    }
+
+    /// COPSIM's four BFS groups (§5.1 "Splitting"): even/odd processors
+    /// of each half — `P0` = evens of `P'`, `P1` = odds of `P'`,
+    /// `P2` = evens of `P''`, `P3` = odds of `P''`.
+    pub fn copsim_groups(&self) -> [Seq; 4] {
+        let lo = self.lower_half();
+        let hi = self.upper_half();
+        [lo.evens(), lo.odds(), hi.evens(), hi.odds()]
+    }
+
+    /// COPK's three BFS groups (§6.1): with `|P| = 4·3^i`, assign
+    /// `|P|/3` processors to each of `A0·B0`, `A'·B'`, `A1·B1`.
+    ///
+    /// The paper interleaves specific indices to economize particular
+    /// communication phases; any fixed one-to-one assignment preserves
+    /// the communication *costs* charged per phase (each processor still
+    /// exchanges the same chunk sizes with a distinct peer). We use:
+    /// `P0` = first 2/3 of the lower half thinned to |P|/3 by taking two
+    /// of every three slots... — concretely, we deal processors round-
+    /// robin: lower-half processors to groups (0,0,1), upper-half to
+    /// (2,2,1), preserving LSB-first order inside every group.
+    pub fn copk_groups(&self) -> [Seq; 3] {
+        let p = self.len();
+        assert!(p % 12 == 0 || p == 4, "COPK grouping expects |P| = 4·3^i, i >= 1");
+        let third = p / 3;
+        let lo = &self.0[..p / 2];
+        let hi = &self.0[p / 2..];
+        let mut g0 = Vec::with_capacity(third);
+        let mut g1 = Vec::with_capacity(third);
+        let mut g2 = Vec::with_capacity(third);
+        // Deal the lower half: two slots to P0, one to P1 (so P0 keeps a
+        // majority of the processors already holding A0/B0 digits).
+        for (k, &pid) in lo.iter().enumerate() {
+            if k % 3 == 2 {
+                g1.push(pid);
+            } else {
+                g0.push(pid);
+            }
+        }
+        // Deal the upper half symmetrically: two to P2, one to P1.
+        for (k, &pid) in hi.iter().enumerate() {
+            if k % 3 == 2 {
+                g1.push(pid);
+            } else {
+                g2.push(pid);
+            }
+        }
+        debug_assert_eq!(g0.len(), third);
+        debug_assert_eq!(g1.len(), third);
+        debug_assert_eq!(g2.len(), third);
+        [Seq(g0), Seq(g1), Seq(g2)]
+    }
+
+    /// Interleaving used by the main (DFS) execution modes (§5.2's `P'`):
+    /// re-rank the same processors so even ranks are the lower half and
+    /// odd ranks the upper half — each subproblem then reuses *all*
+    /// processors with halved chunk width.
+    pub fn interleave_halves(&self) -> Seq {
+        let lo = self.lower_half();
+        let hi = self.upper_half();
+        let mut out = Vec::with_capacity(self.len());
+        for i in 0..lo.len() {
+            out.push(lo.at(i));
+            out.push(hi.at(i));
+        }
+        Seq(out)
+    }
+
+    /// Position of processor `pid` in this sequence, if present.
+    pub fn rank_of(&self, pid: ProcId) -> Option<usize> {
+        self.0.iter().position(|&x| x == pid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halves_follow_paper_orientation() {
+        let s = Seq::range(8);
+        assert_eq!(s.lower_half().ids(), &[0, 1, 2, 3]);
+        assert_eq!(s.upper_half().ids(), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn copsim_groups_partition() {
+        let s = Seq::range(16);
+        let [g0, g1, g2, g3] = s.copsim_groups();
+        assert_eq!(g0.ids(), &[0, 2, 4, 6]);
+        assert_eq!(g1.ids(), &[1, 3, 5, 7]);
+        assert_eq!(g2.ids(), &[8, 10, 12, 14]);
+        assert_eq!(g3.ids(), &[9, 11, 13, 15]);
+        let mut all: Vec<_> = [&g0, &g1, &g2, &g3]
+            .iter()
+            .flat_map(|g| g.ids().iter().copied())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..16).collect::<Vec<_>>());
+        assert!(g0.len() == 4 && g1.len() == 4 && g2.len() == 4 && g3.len() == 4);
+    }
+
+    #[test]
+    fn copk_groups_partition() {
+        let s = Seq::range(12);
+        let [g0, g1, g2] = s.copk_groups();
+        let mut all: Vec<_> = [&g0, &g1, &g2]
+            .iter()
+            .flat_map(|g| g.ids().iter().copied())
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>());
+        assert_eq!(g0.len(), 4);
+        assert_eq!(g1.len(), 4);
+        assert_eq!(g2.len(), 4);
+        // P0 ⊂ lower half, P2 ⊂ upper half.
+        assert!(g0.ids().iter().all(|&p| p < 6));
+        assert!(g2.ids().iter().all(|&p| p >= 6));
+    }
+
+    #[test]
+    fn interleave_round_trips_membership() {
+        let s = Seq::range(8);
+        let t = s.interleave_halves();
+        assert_eq!(t.ids(), &[0, 4, 1, 5, 2, 6, 3, 7]);
+        let mut sorted = t.ids().to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, s.ids());
+    }
+
+    #[test]
+    fn rank_of_finds() {
+        let s = Seq(vec![5, 3, 9]);
+        assert_eq!(s.rank_of(3), Some(1));
+        assert_eq!(s.rank_of(7), None);
+    }
+}

@@ -1,0 +1,245 @@
+//! Closed-form bounds from the paper, used by tests and the experiment
+//! harness to build `paper bound | measured | ratio` tables.
+//!
+//! Upper bounds (what the algorithms must stay under):
+//! Lemmas 7–9 (primitives), Theorem 11 (COPSIM_MI), Theorem 12 (COPSIM),
+//! Theorem 14 (COPK_MI), Theorem 15 (COPK), Facts 10/13 (SLIM/SKIM).
+//!
+//! Lower bounds (what no algorithm can beat; Theorems 3–6): used to form
+//! the optimality *ratios* of Theorems 1 and 2. These are Ω-bounds; the
+//! functions return the bound expression with constant 1, so the
+//! measured/lower ratio being bounded by a constant over sweeps is the
+//! reproduction of "asymptotically optimal".
+
+use crate::sim::Clock;
+use crate::util::{pow_log2_3, pow_log3_2};
+
+const LOG2_3: f64 = 1.584962500721156; // log2(3)
+
+#[inline]
+fn lg(p: u64) -> f64 {
+    if p <= 1 {
+        0.0
+    } else {
+        (p as f64).log2()
+    }
+}
+
+#[inline]
+fn ceil_u64(x: f64) -> u64 {
+    if x <= 0.0 {
+        0
+    } else {
+        x.ceil() as u64
+    }
+}
+
+fn clock(ops: f64, words: f64, msgs: f64) -> Clock {
+    Clock {
+        ops: ceil_u64(ops),
+        words: ceil_u64(words),
+        msgs: ceil_u64(msgs),
+    }
+}
+
+// ---------------------------------------------------------------- upper
+
+/// Lemma 7 — parallel SUM: `T ≤ 6n/P + 4log₂P`, `BW ≤ 4log₂P`,
+/// `L ≤ 2log₂P`.
+pub fn lemma7_sum(n: u64, p: u64) -> Clock {
+    let (n, l) = (n as f64, lg(p));
+    clock(6.0 * n / p as f64 + 4.0 * l, 4.0 * l, 2.0 * l)
+}
+
+/// Lemma 7 — SUM memory requirement per processor: `4(n/P + 1)`.
+pub fn lemma7_sum_mem(n: u64, p: u64) -> u64 {
+    4 * (n / p + 1)
+}
+
+/// Lemma 8 — parallel COMPARE: `T ≤ n/P + log₂P`, `BW, L ≤ log₂P`.
+pub fn lemma8_compare(n: u64, p: u64) -> Clock {
+    let (n, l) = (n as f64, lg(p));
+    clock(n / p as f64 + l, l, l)
+}
+
+/// Lemma 9 — parallel DIFF: `T ≤ 7n/P + 5log₂P`, `BW ≤ 5log₂P`,
+/// `L ≤ 3log₂P`.
+pub fn lemma9_diff(n: u64, p: u64) -> Clock {
+    let (n, l) = (n as f64, lg(p));
+    clock(7.0 * n / p as f64 + 5.0 * l, 5.0 * l, 3.0 * l)
+}
+
+/// Fact 10 — SLIM sequential op bound `8n²` (space `8n`).
+pub fn fact10_slim_ops(n: u64) -> u64 {
+    8 * n * n
+}
+
+/// Fact 13 — SKIM sequential op bound `16·n^(log₂3)` (space `8n`).
+pub fn fact13_skim_ops(n: u64) -> u64 {
+    ceil_u64(16.0 * pow_log2_3(n as f64))
+}
+
+/// Theorem 11 — COPSIM in the MI execution mode:
+/// `T ≤ 38n²/P + 3log₂²P`, `BW ≤ 14n/√P + 6log₂²P`, `L ≤ 3log₂²P`.
+pub fn thm11_copsim_mi(n: u64, p: u64) -> Clock {
+    let (nf, pf, l) = (n as f64, p as f64, lg(p));
+    clock(
+        38.0 * nf * nf / pf + 3.0 * l * l,
+        14.0 * nf / pf.sqrt() + 6.0 * l * l,
+        3.0 * l * l,
+    )
+}
+
+/// Theorem 11 — COPSIM_MI memory requirement per processor: `12n/√P`.
+pub fn thm11_copsim_mi_mem(n: u64, p: u64) -> u64 {
+    ceil_u64(12.0 * n as f64 / (p as f64).sqrt()).max(8 * n / p)
+}
+
+/// Theorem 12 — COPSIM (main / limited-memory mode):
+/// `T ≤ 196n²/P`, `BW ≤ 3530n²/(MP)`, `L ≤ 7012·n²log₂²P/(M²P)`.
+pub fn thm12_copsim(n: u64, p: u64, m: u64) -> Clock {
+    let (nf, pf, mf, l) = (n as f64, p as f64, m as f64, lg(p));
+    clock(
+        196.0 * nf * nf / pf,
+        3530.0 * nf * nf / (mf * pf),
+        7012.0 * nf * nf * l * l / (mf * mf * pf),
+    )
+}
+
+/// Theorem 14 — COPK in the MI execution mode:
+/// `T ≤ 173·n^lg3/P`, `BW ≤ 174·n/P^(log₃2)`, `L ≤ 25log₂²P`.
+pub fn thm14_copk_mi(n: u64, p: u64) -> Clock {
+    let (nf, pf, l) = (n as f64, p as f64, lg(p));
+    clock(
+        173.0 * pow_log2_3(nf) / pf,
+        174.0 * nf / pow_log3_2(pf),
+        25.0 * l * l,
+    )
+}
+
+/// Theorem 14 — COPK_MI memory requirement per processor:
+/// `10n/P^(log₃2)`.
+pub fn thm14_copk_mi_mem(n: u64, p: u64) -> u64 {
+    ceil_u64(10.0 * n as f64 / pow_log3_2(p as f64)).max(8 * n / p)
+}
+
+/// Theorem 15 — COPK (main / limited-memory mode):
+/// `T ≤ 675·n^lg3/P`, `BW ≤ 1708·(n/M)^lg3·M/P`,
+/// `L ≤ 8728·n^lg3·log₂²P/(P·M^lg3)`.
+pub fn thm15_copk(n: u64, p: u64, m: u64) -> Clock {
+    let (nf, pf, mf, l) = (n as f64, p as f64, m as f64, lg(p));
+    clock(
+        675.0 * pow_log2_3(nf) / pf,
+        1708.0 * pow_log2_3(nf / mf) * mf / pf,
+        8728.0 * pow_log2_3(nf) * l * l / (pf * pow_log2_3(mf)),
+    )
+}
+
+// ---------------------------------------------------------------- lower
+
+/// Theorem 3 — memory-dependent lower bounds for *standard* integer
+/// multiplication (constant-1 Ω expressions):
+/// `BW = Ω(n²/(MP))`, `L = Ω(n²/(M²P))`.
+pub fn thm3_lower_standard(n: u64, p: u64, m: u64) -> (f64, f64) {
+    let (nf, pf, mf) = (n as f64, p as f64, m as f64);
+    (nf * nf / (mf * pf), nf * nf / (mf * mf * pf))
+}
+
+/// Theorem 4 — memory-independent lower bound for standard multiplication
+/// with balanced input: `BW = Ω(n/(B_m·√P))` with `B_m = 1` word here
+/// (the simulator counts words, so the bandwidth bound is `n/√P`).
+pub fn thm4_lower_standard_mi(n: u64, p: u64) -> f64 {
+    n as f64 / (p as f64).sqrt()
+}
+
+/// Theorem 5 — memory-dependent lower bounds for Karatsuba-strategy
+/// algorithms: `BW = Ω((n/M)^lg3·M/P)`, `L = Ω((n/M)^lg3/P)`.
+pub fn thm5_lower_karatsuba(n: u64, p: u64, m: u64) -> (f64, f64) {
+    let (nf, pf, mf) = (n as f64, p as f64, m as f64);
+    let r = pow_log2_3(nf / mf);
+    (r * mf / pf, r / pf)
+}
+
+/// Theorem 6 — memory-independent lower bound for Karatsuba with
+/// balanced input: `BW = Ω(n/P^(1/log₂3))`.
+pub fn thm6_lower_karatsuba_mi(n: u64, p: u64) -> f64 {
+    n as f64 / (p as f64).powf(1.0 / LOG2_3)
+}
+
+/// §2.2 execution-time model: `α·T + β·L + γ·BW`.
+/// Defaults model a commodity cluster: 1 ns/digit-op, 1 µs message
+/// latency, 10 ns/word.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeModel {
+    pub alpha_ns: f64,
+    pub beta_ns: f64,
+    pub gamma_ns: f64,
+}
+
+impl Default for TimeModel {
+    fn default() -> Self {
+        TimeModel {
+            alpha_ns: 1.0,
+            beta_ns: 1000.0,
+            gamma_ns: 10.0,
+        }
+    }
+}
+
+impl TimeModel {
+    /// Modeled execution time in nanoseconds for a measured cost triple.
+    pub fn time_ns(&self, c: &Clock) -> f64 {
+        self.alpha_ns * c.ops as f64 + self.beta_ns * c.msgs as f64 + self.gamma_ns * c.words as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_positive_and_monotone_in_n() {
+        let a = thm11_copsim_mi(1 << 10, 16);
+        let b = thm11_copsim_mi(1 << 12, 16);
+        assert!(b.ops > a.ops && b.words > a.words);
+        let a = thm14_copk_mi(1 << 10, 12);
+        let b = thm14_copk_mi(1 << 12, 12);
+        assert!(b.ops > a.ops && b.words > a.words);
+    }
+
+    #[test]
+    fn single_processor_degenerates() {
+        // With P = 1 all log terms vanish; SUM bound is the local cost.
+        let c = lemma7_sum(64, 1);
+        assert_eq!(c.words, 0);
+        assert_eq!(c.msgs, 0);
+        assert_eq!(c.ops, 6 * 64);
+    }
+
+    #[test]
+    fn lower_bounds_scale() {
+        let (bw1, l1) = thm3_lower_standard(1 << 12, 16, 256);
+        let (bw2, l2) = thm3_lower_standard(1 << 13, 16, 256);
+        assert!((bw2 / bw1 - 4.0).abs() < 1e-9);
+        assert!((l2 / l1 - 4.0).abs() < 1e-9);
+        // Karatsuba lower bound grows as n^lg3.
+        let (k1, _) = thm5_lower_karatsuba(1 << 12, 16, 256);
+        let (k2, _) = thm5_lower_karatsuba(1 << 13, 16, 256);
+        assert!((k2 / k1 - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn facts_match_formulae() {
+        assert_eq!(fact10_slim_ops(100), 80_000);
+        let k = fact13_skim_ops(64);
+        // 16 * 64^lg3 = 16 * 3^6 = 11664
+        assert_eq!(k, 11_664);
+    }
+
+    #[test]
+    fn time_model_combines() {
+        let tm = TimeModel::default();
+        let c = Clock { ops: 1000, words: 10, msgs: 2 };
+        assert!((tm.time_ns(&c) - (1000.0 + 2000.0 + 100.0)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,134 @@
+//! Small self-contained utilities: deterministic PRNG, integer helpers,
+//! and a micro property-testing harness.
+//!
+//! This build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! `proptest`, `criterion`) are replaced by the minimal implementations in
+//! this module.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// `ceil(a / b)` for unsigned integers.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `true` iff `x` is a power of two (0 is not).
+#[inline]
+pub fn is_pow2(x: u64) -> bool {
+    x != 0 && (x & (x - 1)) == 0
+}
+
+/// Round `x` up to the next power of two (identity on powers of two).
+#[inline]
+pub fn next_pow2(x: u64) -> u64 {
+    if x <= 1 {
+        return 1;
+    }
+    1u64 << (64 - (x - 1).leading_zeros())
+}
+
+/// `floor(log2 x)` for `x >= 1`.
+#[inline]
+pub fn ilog2(x: u64) -> u32 {
+    debug_assert!(x >= 1);
+    63 - x.leading_zeros()
+}
+
+/// `log2(x)` for an exact power of two.
+#[inline]
+pub fn exact_log2(x: u64) -> u32 {
+    debug_assert!(is_pow2(x), "{x} is not a power of two");
+    x.trailing_zeros()
+}
+
+/// `n^(log2 3)`, the Karatsuba exponent, as f64.
+#[inline]
+pub fn pow_log2_3(n: f64) -> f64 {
+    n.powf(3f64.log2())
+}
+
+/// `p^(log3 2)` as f64 (appears in the COPK memory bounds).
+#[inline]
+pub fn pow_log3_2(p: f64) -> f64 {
+    p.powf(2f64.log(3.0))
+}
+
+/// `true` iff `p` is of the form `4 * 3^i` (the COPK processor-count shape).
+pub fn is_copk_procs(p: u64) -> bool {
+    if p % 4 != 0 {
+        return false;
+    }
+    let mut q = p / 4;
+    while q % 3 == 0 {
+        q /= 3;
+    }
+    q == 1
+}
+
+/// Number of BFS levels for COPK: `i` such that `p = 4 * 3^i`.
+pub fn copk_bfs_levels(p: u64) -> u32 {
+    debug_assert!(is_copk_procs(p));
+    let mut q = p / 4;
+    let mut i = 0;
+    while q > 1 {
+        q /= 3;
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_div_ceil() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 8), 1);
+    }
+
+    #[test]
+    fn test_pow2_helpers() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(48));
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(64), 64);
+        assert_eq!(next_pow2(65), 128);
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(1024), 10);
+        assert_eq!(exact_log2(256), 8);
+    }
+
+    #[test]
+    fn test_copk_procs() {
+        assert!(is_copk_procs(4));
+        assert!(is_copk_procs(12));
+        assert!(is_copk_procs(36));
+        assert!(is_copk_procs(108));
+        assert!(!is_copk_procs(8));
+        assert!(!is_copk_procs(6));
+        assert!(!is_copk_procs(16));
+        assert_eq!(copk_bfs_levels(4), 0);
+        assert_eq!(copk_bfs_levels(12), 1);
+        assert_eq!(copk_bfs_levels(108), 3);
+    }
+
+    #[test]
+    fn test_karatsuba_exponent() {
+        let v = pow_log2_3(2.0);
+        assert!((v - 3.0).abs() < 1e-12);
+        let w = pow_log3_2(3.0);
+        assert!((w - 2.0).abs() < 1e-12);
+    }
+}

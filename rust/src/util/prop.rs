@@ -1,0 +1,98 @@
+//! Micro property-testing harness (offline replacement for `proptest`).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` random
+//! seeds; on failure it reports the failing seed so the case can be
+//! replayed exactly with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `f` for `cases` deterministic seeds derived from `name`.
+/// Panics with the failing seed embedded in the message.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay(seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// Assert-like helper producing `CaseResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality helper producing `CaseResult` with both sides in the message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes() {
+        check("always-true", 16, |rng| {
+            let x = rng.below(100);
+            crate::prop_assert!(x < 100, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false`")]
+    fn check_reports_failure() {
+        check("always-false", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn fnv_distinct() {
+        assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+}

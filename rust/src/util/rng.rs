@@ -1,0 +1,150 @@
+//! Deterministic PRNG: xoshiro256++ seeded by SplitMix64.
+//!
+//! Self-contained replacement for the `rand` crate (not available in this
+//! offline environment). All experiments and tests use fixed seeds so runs
+//! are reproducible bit-for-bit.
+
+/// xoshiro256++ PRNG (Blackman & Vigna). Deterministic, fast, and good
+/// enough statistically for workload generation and property tests.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed the generator deterministically from a single u64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's method (bound > 0).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // 128-bit multiply rejection-free-enough variant; for simulation
+        // workloads the tiny modulo bias of the simple method would also
+        // be fine, but do it properly.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= (u64::MAX - bound + 1) % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Random boolean.
+    #[inline]
+    pub fn coin(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Random f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Pick a random element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Random digit vector of length `n` in base `2^log2_base`
+    /// (LSB-first, last digit forced nonzero unless n == 0).
+    pub fn digits(&mut self, n: usize, log2_base: u32) -> Vec<u32> {
+        let base = 1u64 << log2_base;
+        let mut v: Vec<u32> = (0..n).map(|_| self.below(base) as u32).collect();
+        if n > 0 && v[n - 1] == 0 {
+            v[n - 1] = self.range(1, base - 1) as u32;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.below(10);
+            assert!(x < 10);
+        }
+        for _ in 0..1000 {
+            let x = r.range(5, 9);
+            assert!((5..=9).contains(&x));
+        }
+    }
+
+    #[test]
+    fn digits_shape() {
+        let mut r = Rng::new(3);
+        let d = r.digits(32, 16);
+        assert_eq!(d.len(), 32);
+        assert!(*d.last().unwrap() > 0);
+        assert!(d.iter().all(|&x| (x as u64) < (1u64 << 16)));
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(11);
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+}

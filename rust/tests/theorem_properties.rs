@@ -1,0 +1,206 @@
+//! Property tests on the paper's invariants, run over randomized
+//! (n, P, M) configurations. These are the "theorems as executable
+//! specifications" layer on top of the per-module unit tests.
+
+use copmul::algorithms::leaf::{SchoolLeaf, SkimLeaf, SlimLeaf};
+use copmul::algorithms::{copk_mi, copsim, copsim_mi};
+use copmul::bignum::{mul, Base, Ops};
+use copmul::prop_assert;
+use copmul::prop_assert_eq;
+use copmul::sim::{DistInt, Machine, Seq};
+use copmul::theory;
+use copmul::util::prop::check;
+use copmul::util::Rng;
+
+fn base() -> Base {
+    Base::new(16)
+}
+
+fn random_inputs(rng: &mut Rng, n: usize) -> (Vec<u32>, Vec<u32>) {
+    (rng.digits(n, 16), rng.digits(n, 16))
+}
+
+#[test]
+fn prop_copsim_mi_all_theorem11_invariants() {
+    check("thm11-invariants", 15, |rng| {
+        let p = [4usize, 16, 64][rng.below(3) as usize];
+        let w = 1usize << rng.range(2, 6);
+        let n = p * w;
+        let (a, b) = random_inputs(rng, n);
+        let mut m = Machine::new(p, theory::thm11_copsim_mi_mem(n as u64, p as u64), base());
+        let seq = Seq::range(p);
+        let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
+        let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf)
+            .map_err(|e| format!("memory bound violated: {e}"))?;
+        // Correctness.
+        let mut ops = Ops::default();
+        let want = mul::mul_school(&a, &b, base(), &mut ops);
+        prop_assert_eq!(c.gather(&m), want);
+        // Compute bound (Theorem 11).
+        let bound = theory::thm11_copsim_mi(n as u64, p as u64);
+        prop_assert!(
+            m.critical().ops <= bound.ops,
+            "T {} > {} at n={n} p={p}",
+            m.critical().ops,
+            bound.ops
+        );
+        // Output layout: 2n digits in 2w chunks on the same sequence.
+        prop_assert_eq!(c.total_width(), 2 * n);
+        prop_assert_eq!(c.chunk_width, 2 * w);
+        // No leaks: freeing the product empties every ledger.
+        c.free(&mut m);
+        prop_assert_eq!(m.mem_used_total(), 0u64);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_copk_mi_theorem14_invariants() {
+    check("thm14-invariants", 12, |rng| {
+        let p = [4usize, 12, 36][rng.below(3) as usize];
+        let w = 4usize << rng.range(0, 3);
+        let n = p * w;
+        let (a, b) = random_inputs(rng, n);
+        let mut m = Machine::new(p, theory::thm14_copk_mi_mem(n as u64, p as u64), base());
+        let seq = Seq::range(p);
+        let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
+        let c = copk_mi(&mut m, &seq, da, db, &SkimLeaf)
+            .map_err(|e| format!("memory bound violated: {e}"))?;
+        let mut ops = Ops::default();
+        let want = mul::mul_school(&a, &b, base(), &mut ops);
+        prop_assert_eq!(c.gather(&m), want);
+        let bound = theory::thm14_copk_mi(n as u64, p as u64);
+        prop_assert!(
+            m.critical().ops <= bound.ops,
+            "T {} > {} at n={n} p={p}",
+            m.critical().ops,
+            bound.ops
+        );
+        c.free(&mut m);
+        prop_assert_eq!(m.mem_used_total(), 0u64);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dfs_and_mi_agree() {
+    // The main (DFS) mode and the MI mode compute the same product and
+    // the DFS mode never uses more memory than its cap.
+    check("dfs-vs-mi", 8, |rng| {
+        let (p, n) = (64usize, 4096usize);
+        let (a, b) = random_inputs(rng, n);
+        let seq = Seq::range(p);
+
+        let mut m1 = Machine::unbounded(p, base());
+        let da = DistInt::scatter(&mut m1, &seq, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m1, &seq, &b, n / p).unwrap();
+        let c1 = copsim_mi(&mut m1, &seq, da, db, &SchoolLeaf).unwrap();
+
+        let cap = (80 * n / p) as u64;
+        let mut m2 = Machine::new(p, cap, base());
+        let da = DistInt::scatter(&mut m2, &seq, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m2, &seq, &b, n / p).unwrap();
+        let c2 = copsim(&mut m2, &seq, da, db, &SchoolLeaf)
+            .map_err(|e| format!("{e}"))?;
+
+        prop_assert_eq!(c1.gather(&m1), c2.gather(&m2));
+        prop_assert!(m2.mem_peak_max() <= cap, "peak {} > cap {cap}", m2.mem_peak_max());
+        // DFS trades communication for memory: it must use at least as
+        // much bandwidth as the MI run.
+        prop_assert!(
+            m2.critical().words >= m1.critical().words,
+            "DFS used less BW ({}) than MI ({})?",
+            m2.critical().words,
+            m1.critical().words
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_determinism() {
+    // Identical inputs ⇒ identical products AND identical cost triples
+    // (the simulator is fully deterministic).
+    check("determinism", 6, |rng| {
+        let p = [4usize, 16][rng.below(2) as usize];
+        let n = p * 16;
+        let (a, b) = random_inputs(rng, n);
+        let mut run = || {
+            let mut m = Machine::unbounded(p, base());
+            let seq = Seq::range(p);
+            let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+            let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+            let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf).unwrap();
+            (c.gather(&m), m.critical())
+        };
+        let (c1, k1) = run();
+        let (c2, k2) = run();
+        prop_assert_eq!(c1, c2);
+        prop_assert_eq!(k1, k2);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_operands() {
+    // Zero, one, all-max-digit operands through both schemes.
+    let patterns: Vec<Box<dyn Fn(usize) -> Vec<u32>>> = vec![
+        Box::new(|n| vec![0u32; n]),
+        Box::new(|n| {
+            let mut v = vec![0u32; n];
+            v[0] = 1;
+            v
+        }),
+        Box::new(|n| vec![0xFFFF; n]),
+    ];
+    let p = 4usize;
+    let n = 64usize;
+    let seq = Seq::range(p);
+    for (i, pa) in patterns.iter().enumerate() {
+        for (j, pb) in patterns.iter().enumerate() {
+            let a = pa(n);
+            let b = pb(n);
+            let mut ops = Ops::default();
+            let want = mul::mul_school(&a, &b, base(), &mut ops);
+            for scheme in ["copsim", "copk"] {
+                let mut m = Machine::unbounded(p, base());
+                let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+                let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+                let c = match scheme {
+                    "copsim" => copsim_mi(&mut m, &seq, da, db, &SlimLeaf).unwrap(),
+                    _ => copk_mi(&mut m, &seq, da, db, &SkimLeaf).unwrap(),
+                };
+                assert_eq!(c.gather(&m), want, "pattern ({i},{j}) scheme {scheme}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_total_memory_linear_in_n() {
+    // O(n) total space: doubling n roughly doubles total peak memory
+    // (within 3x — constants include the leaf scratch) in main mode.
+    let p = 64usize;
+    let mut totals = Vec::new();
+    for &n in &[2048usize, 4096, 8192] {
+        let cap = (80 * n / p) as u64;
+        let mut m = Machine::new(p, cap, base());
+        let seq = Seq::range(p);
+        let mut rng = Rng::new(0xAB);
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+        copsim(&mut m, &seq, da, db, &SchoolLeaf).unwrap();
+        totals.push(m.mem_peak_total() as f64 / n as f64);
+    }
+    let (mn, mx) = totals
+        .iter()
+        .fold((f64::MAX, 0f64), |(a, b), &v| (a.min(v), b.max(v)));
+    assert!(
+        mx / mn < 3.0,
+        "total-memory/n not flat across n: {totals:?}"
+    );
+}
