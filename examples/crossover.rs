@@ -12,7 +12,7 @@ use copmul::algorithms::hybrid::choose_algorithm;
 use copmul::experiments::{run_algo, Algo};
 use copmul::theory::TimeModel;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> copmul::error::Result<()> {
     let tm = TimeModel::default();
     println!("time model: α = {} ns/op, β = {} ns/msg, γ = {} ns/word", tm.alpha_ns, tm.beta_ns, tm.gamma_ns);
     println!(

@@ -25,10 +25,10 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> copmul::error::Result<()> {
     let base = Base::default();
     let rt = Arc::new(XlaRuntime::new("artifacts").map_err(|e| {
-        anyhow::anyhow!("{e}\nhint: run `make artifacts` first")
+        copmul::error::anyhow!("{e}\nhint: run `make artifacts` first")
     })?);
     println!("PJRT platform: {}", rt.platform());
     let leaf = Arc::new(BatchingXlaLeaf::new(Arc::clone(&rt), "school"));

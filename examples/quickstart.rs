@@ -4,7 +4,7 @@
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use copmul::algorithms::{copsim_mi, SlimLeaf};
+use copmul::algorithms::{copsim_mi, leaf_ref, SlimLeaf};
 use copmul::bignum::convert::to_hex;
 use copmul::bignum::{mul, Base, Ops};
 use copmul::metrics::fmt_u64;
@@ -12,7 +12,7 @@ use copmul::sim::{DistInt, Machine, Seq};
 use copmul::theory;
 use copmul::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> copmul::error::Result<()> {
     // A machine: P = 16 processors, each with a private memory big
     // enough for the MI execution mode (Theorem 11 needs 12n/sqrt(P)).
     let (n, p) = (4096usize, 16usize);
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
 
     // Multiply with COPSIM in the memory-independent mode; the leaves
     // run the paper's sequential SLIM.
-    let c = copsim_mi(&mut machine, &seq, da, db, &SlimLeaf)?;
+    let c = copsim_mi(&mut machine, &seq, da, db, &leaf_ref(SlimLeaf))?;
 
     // Verify against the sequential schoolbook oracle.
     let mut ops = Ops::default();

@@ -11,7 +11,7 @@
 use copmul::experiments::{run_algo, Algo};
 use copmul::metrics::fmt_u64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> copmul::error::Result<()> {
     let n = 1usize << 12;
     println!("== COPSIM, n = {n}, M = 80n/P ==");
     println!("{:>5} {:>9} {:>12} {:>10} {:>12} {:>10} {:>7}", "P", "M", "T", "T*P/n^2", "BW", "BW*MP/n^2", "L");

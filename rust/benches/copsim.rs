@@ -1,7 +1,6 @@
 //! Bench: COPSIM (E4/E5 wallclock side) — MI mode across (n, P) and the
 //! main (DFS) mode under the Theorem 12 memory floor. The reported
-//! `ns/simulated-op` column is the simulator-overhead figure tracked in
-//! EXPERIMENTS.md §Perf.
+//! `ns/simulated-op` column is the simulator-overhead figure.
 
 #[path = "bench_util.rs"]
 mod bench_util;

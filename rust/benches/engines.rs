@@ -1,0 +1,45 @@
+//! Bench: execution engines (E15 wallclock side) — cost-model
+//! interpreter vs the real-threads engine over the ISSUE grid
+//! n ∈ {2^10..2^16}, COPSIM P ∈ {4, 16, 64} (COPK on its 4·3^i
+//! shapes), reporting predicted-vs-measured and the threaded speedup.
+
+use copmul::experiments::engines::{compare_engines, Scheme};
+
+fn main() {
+    println!("== engines bench (E15: cost-model vs threads) ==");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("host cores: {cores}");
+    for &(scheme, p, n) in &[
+        (Scheme::Copsim, 4usize, 1usize << 10),
+        (Scheme::Copsim, 4, 1 << 12),
+        (Scheme::Copsim, 4, 1 << 14),
+        (Scheme::Copsim, 4, 1 << 16),
+        (Scheme::Copsim, 16, 1 << 12),
+        (Scheme::Copsim, 16, 1 << 14),
+        (Scheme::Copsim, 16, 1 << 16),
+        (Scheme::Copsim, 64, 1 << 14),
+        (Scheme::Copsim, 64, 1 << 16),
+        (Scheme::Copk, 4, 1 << 10),
+        (Scheme::Copk, 4, 1 << 12),
+        (Scheme::Copk, 4, 1 << 14),
+        (Scheme::Copk, 12, 3072),
+        (Scheme::Copk, 12, 12288),
+        (Scheme::Copk, 36, 4608),
+        (Scheme::Copk, 36, 18432),
+    ] {
+        match compare_engines(scheme, n, p, 1) {
+            Ok(c) => println!(
+                "{:28} {:36} threads={:>12?} sim={:>12?} predicted={:.1}ms speedup={:.2}x",
+                "engines",
+                format!("{scheme:?} p={p} n={n}"),
+                c.threaded_wall,
+                c.sim_wall,
+                c.predicted_ms,
+                c.speedup()
+            ),
+            Err(e) => println!("engines {scheme:?} p={p} n={n}: FAILED: {e}"),
+        }
+    }
+}

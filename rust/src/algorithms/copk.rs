@@ -27,18 +27,18 @@
 //! `[0, s^(3n/2))` (the paper's ⌈3/s⌉ top-digit bookkeeping is avoided
 //! by applying `±C'` before the `C2≪n/2` term).
 
-use super::leaf::LeafMultiplier;
+use super::leaf::LeafRef;
 use super::leaf_multiply;
+use crate::error::{ensure, Result};
 use crate::primitives::{diff, sum};
-use crate::sim::{DistInt, Machine, Seq};
+use crate::sim::{DistInt, MachineApi, Seq};
 use crate::util::{is_copk_procs, pow_log3_2};
-use anyhow::{ensure, Result};
 
 /// Karatsuba recombination (see module docs). Each of `c0`, `cp`, `c2`
 /// holds `n = |seq|·w` digits (any layout); result is `2n` digits on
 /// `seq` with chunk width `2w`. `sign = f_A·f_B ∈ {-1, 0, 1}`.
-pub(crate) fn recompose_karatsuba(
-    m: &mut Machine,
+pub(crate) fn recompose_karatsuba<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     c0: DistInt,
     cp: DistInt,
@@ -130,12 +130,12 @@ pub(crate) fn recompose_karatsuba(
 /// COPK in the MI execution mode (§6.1). Consumes `a`, `b`
 /// (`n = |seq|·w` digits partitioned in `seq`, `|P| = 4·3^i` or 1);
 /// returns the `2n`-digit product on `seq` in `2w`-digit chunks.
-pub fn copk_mi(
-    m: &mut Machine,
+pub fn copk_mi<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     a: DistInt,
     b: DistInt,
-    leaf: &dyn LeafMultiplier,
+    leaf: &LeafRef,
 ) -> Result<DistInt> {
     let p = seq.len();
     assert!(
@@ -213,12 +213,12 @@ pub fn copk_mi(
 /// COPK in the main execution mode (§6.2): depth-first steps until
 /// `n ≤ M·P^(log₃2)/10`, then [`copk_mi`]. Theorem 15 requires
 /// `M ≥ max(40n/P, log₂P)`.
-pub fn copk(
-    m: &mut Machine,
+pub fn copk<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     a: DistInt,
     b: DistInt,
-    leaf: &dyn LeafMultiplier,
+    leaf: &LeafRef,
 ) -> Result<DistInt> {
     let p = seq.len();
     assert!(
@@ -291,8 +291,9 @@ pub fn copk(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::leaf::{SchoolLeaf, SkimLeaf};
+    use crate::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf};
     use crate::bignum::{mul, Base, Ops};
+    use crate::sim::Machine;
     use crate::theory;
     use crate::util::Rng;
 
@@ -310,7 +311,7 @@ mod tests {
         let b = rng.digits(n, 16);
         let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-        let c = copk_mi(&mut m, &seq, da, db, &SkimLeaf).unwrap();
+        let c = copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap();
         let cd = c.gather(&m);
         (m, a, b, cd)
     }
@@ -374,7 +375,7 @@ mod tests {
             let b = rng.digits(n, 16);
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-            let c = copk(&mut m, &seq, da, db, &SchoolLeaf)
+            let c = copk(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf))
                 .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
             verify_product(&a, &b, &c.gather(&m));
             let crit = m.critical();
@@ -399,7 +400,7 @@ mod tests {
             let seq = Seq::range(p);
             let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
-            let c = copk_mi(&mut m, &seq, da, db, &SkimLeaf).unwrap();
+            let c = copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
             crate::prop_assert_eq!(c.gather(&m), want);
@@ -426,7 +427,7 @@ mod tests {
             &seq,
             da,
             db,
-            &crate::algorithms::leaf::SlimLeaf,
+            &leaf_ref(crate::algorithms::leaf::SlimLeaf),
         )
         .unwrap();
         assert!(

@@ -25,11 +25,11 @@
 //! the generic repartition (each digit moves once; see DESIGN.md
 //! decision 4).
 
-use super::leaf::LeafMultiplier;
+use super::leaf::LeafRef;
 use super::leaf_multiply;
+use crate::error::{ensure, Result};
 use crate::primitives::sum;
-use crate::sim::{DistInt, Machine, Seq};
-use anyhow::{ensure, Result};
+use crate::sim::{DistInt, MachineApi, Seq};
 
 /// `true` iff `p` is a power of four (COPSIM's processor-count shape).
 pub fn is_pow4(p: usize) -> bool {
@@ -39,8 +39,8 @@ pub fn is_pow4(p: usize) -> bool {
 /// Shared recomposition: combine subproducts
 /// `C = C0 + s^(n/2)(C1+C2) + s^n·C3` onto `seq` with chunk width `2w`,
 /// where each `C_i` holds `n = |seq|·w` digits (in any current layout).
-pub(crate) fn recompose(
-    m: &mut Machine,
+pub(crate) fn recompose<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     c0: DistInt,
     c1: DistInt,
@@ -92,12 +92,12 @@ pub(crate) fn recompose(
 /// COPSIM in the MI execution mode (§5.1). Consumes `a`, `b`
 /// (each `n = |seq|·w` digits partitioned in `seq`); returns the
 /// `2n`-digit product partitioned in `seq` in `2w`-digit chunks.
-pub fn copsim_mi(
-    m: &mut Machine,
+pub fn copsim_mi<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     a: DistInt,
     b: DistInt,
-    leaf: &dyn LeafMultiplier,
+    leaf: &LeafRef,
 ) -> Result<DistInt> {
     let p = seq.len();
     assert!(is_pow4(p), "COPSIM_MI requires |P| = 4^k (got {p})");
@@ -142,12 +142,12 @@ pub fn copsim_mi(
 /// [`copsim_mi`]. The machine's per-processor capacity `M` is taken from
 /// `m`; Theorem 12 requires `M ≥ max(80n/P, log₂P)` (and `M ≥ 24√P` for
 /// the DFS chunk widths to stay integral — Theorem 1's condition).
-pub fn copsim(
-    m: &mut Machine,
+pub fn copsim<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     a: DistInt,
     b: DistInt,
-    leaf: &dyn LeafMultiplier,
+    leaf: &LeafRef,
 ) -> Result<DistInt> {
     let p = seq.len();
     assert!(is_pow4(p), "COPSIM requires |P| = 4^k (got {p})");
@@ -213,8 +213,9 @@ pub fn copsim(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::leaf::{SchoolLeaf, SlimLeaf};
+    use crate::algorithms::leaf::{leaf_ref, SchoolLeaf, SlimLeaf};
     use crate::bignum::{mul, Base, Ops};
+    use crate::sim::Machine;
     use crate::theory;
     use crate::util::Rng;
 
@@ -232,7 +233,7 @@ mod tests {
         let b = rng.digits(n, 16);
         let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-        let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf).unwrap();
+        let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
         let cd = c.gather(&m);
         (m, a, b, cd)
     }
@@ -319,7 +320,7 @@ mod tests {
             let b = rng.digits(n, 16);
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-            let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf)
+            let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf))
                 .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
             let cd = c.gather(&m);
             verify_product(&a, &b, &cd);
@@ -341,7 +342,7 @@ mod tests {
             let b = rng.digits(n, 16);
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-            let c = copsim(&mut m, &seq, da, db, &SchoolLeaf)
+            let c = copsim(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf))
                 .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
             let cd = c.gather(&m);
             verify_product(&a, &b, &cd);
@@ -370,7 +371,7 @@ mod tests {
             let seq = Seq::range(p);
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-            let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf).unwrap();
+            let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
             crate::prop_assert_eq!(c.gather(&m), want);

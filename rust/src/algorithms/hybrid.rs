@@ -21,11 +21,11 @@
 
 use super::copk::copk;
 use super::copsim::{copsim, is_pow4};
-use super::leaf::LeafMultiplier;
-use crate::sim::{DistInt, Machine, Seq};
+use super::leaf::LeafRef;
+use crate::error::{bail, Result};
+use crate::sim::{DistInt, MachineApi, Seq};
 use crate::theory::{self, TimeModel};
 use crate::util::is_copk_procs;
-use anyhow::{bail, Result};
 
 /// Which top-level scheme a multiplication is dispatched to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,12 +88,12 @@ pub fn choose_algorithm(n: u64, p: u64, m: u64, tm: &TimeModel) -> Result<Algori
 
 /// Multiply via the scheme selected by [`choose_algorithm`].
 /// Returns the product and the scheme used.
-pub fn hybrid_mul(
-    m: &mut Machine,
+pub fn hybrid_mul<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     a: DistInt,
     b: DistInt,
-    leaf: &dyn LeafMultiplier,
+    leaf: &LeafRef,
     tm: &TimeModel,
 ) -> Result<(DistInt, Algorithm)> {
     let n = a.total_width() as u64;
@@ -108,8 +108,9 @@ pub fn hybrid_mul(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::leaf::HybridLeaf;
+    use crate::algorithms::leaf::{leaf_ref, HybridLeaf};
     use crate::bignum::{mul, Base, Ops};
+    use crate::sim::Machine;
     use crate::util::Rng;
 
     #[test]
@@ -146,7 +147,7 @@ mod tests {
             let b = rng.digits(n, 16);
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-            let leaf = HybridLeaf { threshold: 32 };
+            let leaf = leaf_ref(HybridLeaf { threshold: 32 });
             let (c, _algo) = hybrid_mul(&mut m, &seq, da, db, &leaf, &tm).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);

@@ -8,9 +8,21 @@
 //! executes the AOT-compiled JAX+Pallas digit-convolution kernel.
 
 use crate::bignum::{mul, Base, Ops};
+use std::sync::Arc;
+
+/// Shared handle to a leaf multiplier. The algorithms take this (rather
+/// than `&dyn LeafMultiplier`) because the threaded execution engine
+/// ships leaf products to per-processor worker threads, which requires
+/// an owned, thread-safe handle inside the shipped closure.
+pub type LeafRef = Arc<dyn LeafMultiplier + Send + Sync>;
+
+/// Wrap a concrete leaf into a [`LeafRef`].
+pub fn leaf_ref(l: impl LeafMultiplier + 'static) -> LeafRef {
+    Arc::new(l)
+}
 
 /// A sequential multiplier for equal-width power-of-two operands.
-pub trait LeafMultiplier: Sync {
+pub trait LeafMultiplier: Send + Sync {
     /// Human-readable name for reports.
     fn name(&self) -> &'static str;
 

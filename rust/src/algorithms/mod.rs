@@ -23,51 +23,65 @@ pub mod leaf;
 pub use copk::{copk, copk_mi};
 pub use copsim::{copsim, copsim_mi};
 pub use hybrid::{choose_algorithm, hybrid_mul, Algorithm};
-pub use leaf::{LeafMultiplier, SchoolLeaf, SkimLeaf, SlimLeaf};
+pub use leaf::{leaf_ref, LeafMultiplier, LeafRef, SchoolLeaf, SkimLeaf, SlimLeaf};
 
-use crate::sim::{DistInt, Machine, ProcId};
-use anyhow::Result;
+use crate::error::Result;
+use crate::sim::{DistInt, MachineApi, ProcId};
+use std::sync::Arc;
 
-/// Multiply the single-processor leaf case: reads both operands, runs
-/// the sequential leaf multiplier (charging its exact digit ops and —
-/// per Facts 10/13 — a transient scratch allocation so the 8n-word
-/// sequential space requirement shows up in the memory ledger), and
-/// allocates the `2w`-digit product. Consumes the operands.
-pub(crate) fn leaf_multiply(
-    m: &mut Machine,
+/// Multiply the single-processor leaf case: runs the sequential leaf
+/// multiplier on the owning processor via `compute_slot` — charging its
+/// exact digit ops and, per Facts 10/13, a transient scratch allocation
+/// so the 8n-word sequential space requirement shows up in the memory
+/// ledger — and produces the `2w`-digit product. Consumes the operands
+/// (they are freed as the product materializes, like the paper's
+/// processors delete input digits).
+///
+/// Going through `compute_slot` rather than `local` is what lets the
+/// threaded engine run sibling leaves on their processors'
+/// threads *concurrently* — the dominant digit work overlaps instead of
+/// serializing on the host.
+pub(crate) fn leaf_multiply<M: MachineApi>(
+    m: &mut M,
     pid: ProcId,
     a: DistInt,
     b: DistInt,
-    leaf: &dyn leaf::LeafMultiplier,
+    leaf: &LeafRef,
 ) -> Result<DistInt> {
     debug_assert_eq!(a.chunks.len(), 1);
     debug_assert_eq!(b.chunks.len(), 1);
     let w = a.chunk_width;
-    let mut av = m.read(pid, a.chunks[0].1).to_vec();
-    let mut bv = m.read(pid, b.chunks[0].1).to_vec();
-    // COPK's 3/2 width scaling produces non-power-of-two leaf widths;
-    // SLIM/SKIM recurse on power-of-two operands, so pad (the product's
-    // digits beyond 2w are provably zero and are truncated below).
-    let wp = w.next_power_of_two();
-    av.resize(wp, 0);
-    bv.resize(wp, 0);
     // Model the sequential algorithm's working space (Facts 10/13: 8n
     // words total; inputs 2w + output 2w are ledgered explicitly, the
     // recursion scratch is a transient block). Charged on the TRUE
-    // operand width w: the pow2 padding above is an artifact of reusing
+    // operand width w: the pow2 padding below is an artifact of reusing
     // SLIM/SKIM's power-of-two recursion, not of the paper's algorithm.
     let scratch = m.alloc(pid, vec![0u32; leaf.scratch_words(w)])?;
-    let prod = m.local(pid, |base, ops| leaf.mul(&av, &bv, *base, ops));
+    let leaf = Arc::clone(leaf);
+    let slot = m.compute_slot(
+        pid,
+        &[a.chunks[0].1, b.chunks[0].1],
+        true, // operands are consumed as the product materializes
+        Box::new(move |inputs, base, ops| {
+            // COPK's 3/2 width scaling produces non-power-of-two leaf
+            // widths; SLIM/SKIM recurse on power-of-two operands, so pad
+            // (the product's digits beyond 2w are provably zero and are
+            // truncated below).
+            let wp = w.next_power_of_two();
+            let mut av = inputs[0].clone();
+            let mut bv = inputs[1].clone();
+            av.resize(wp, 0);
+            bv.resize(wp, 0);
+            let mut prod = leaf.mul(&av, &bv, *base, ops);
+            if prod.len() > 2 * w {
+                debug_assert!(prod[2 * w..].iter().all(|&d| d == 0));
+                prod.truncate(2 * w);
+            }
+            debug_assert_eq!(prod.len(), 2 * w);
+            prod
+        }),
+    )?;
     m.free(pid, scratch);
-    let mut prod = prod;
-    if prod.len() > 2 * w {
-        debug_assert!(prod[2 * w..].iter().all(|&d| d == 0));
-        prod.truncate(2 * w);
-    }
-    debug_assert_eq!(prod.len(), 2 * w);
-    a.free(m);
-    b.free(m);
-    let slot = m.alloc(pid, prod)?;
     Ok(DistInt {
         chunk_width: 2 * w,
         chunks: vec![(pid, slot)],

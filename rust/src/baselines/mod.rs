@@ -19,15 +19,15 @@
 
 use crate::bignum::mul::abs_diff;
 use crate::bignum::{mul, Ops};
-use crate::sim::{DistInt, Machine, Seq};
-use anyhow::{ensure, Result};
+use crate::error::{ensure, Result};
+use crate::sim::{DistInt, MachineApi, Seq};
 use std::cmp::Ordering;
 
 /// All-gather both operands with recursive doubling, multiply slices
 /// locally, propagate carries sequentially. Inputs partitioned in `seq`
 /// (width `w = n/P`); output partitioned in `seq` (width `2w`).
-pub fn allgather_schoolbook(
-    m: &mut Machine,
+pub fn allgather_schoolbook<M: MachineApi>(
+    m: &mut M,
     seq: &Seq,
     a: DistInt,
     b: DistInt,
@@ -39,9 +39,9 @@ pub fn allgather_schoolbook(
 
     if p == 1 {
         let pid = seq.at(0);
-        let av = m.read(pid, a.chunks[0].1).to_vec();
-        let bv = m.read(pid, b.chunks[0].1).to_vec();
-        let c = m.local(pid, |base, ops| mul::mul_school(&av, &bv, *base, ops));
+        let av = m.read(pid, a.chunks[0].1);
+        let bv = m.read(pid, b.chunks[0].1);
+        let c = m.local(pid, move |base, ops| mul::mul_school(&av, &bv, *base, ops));
         a.free(m);
         b.free(m);
         let slot = m.alloc(pid, c)?;
@@ -69,8 +69,8 @@ pub fn allgather_schoolbook(
     let mut scratch_slots = Vec::with_capacity(p);
     for j in 0..p {
         let pid = seq.at(j);
-        let av = m.read(pid, full_a[j]).to_vec();
-        let bv = m.read(pid, full_b[j]).to_vec();
+        let av = m.read(pid, full_a[j]);
+        let bv = m.read(pid, full_b[j]);
         let lo = j * 2 * w;
         let hi = lo + 2 * w;
         let mut slice = vec![0u64; 2 * w];
@@ -93,7 +93,7 @@ pub fn allgather_schoolbook(
     // --- Sequential carry chain ----------------------------------------
     // Processor j normalizes its slice given the carry from j-1 and
     // forwards its own carry: P-1 strictly sequential messages.
-    let base = m.base;
+    let base = m.base();
     let mut out_chunks = Vec::with_capacity(p);
     let mut carry: u64 = 0;
     for j in 0..p {
@@ -139,12 +139,12 @@ pub fn allgather_schoolbook(
 
 /// Recursive-doubling all-gather: returns, for each sequence rank, a
 /// slot holding the FULL n-digit value.
-fn allgather(m: &mut Machine, seq: &Seq, x: &DistInt) -> Result<Vec<crate::sim::Slot>> {
+fn allgather<M: MachineApi>(m: &mut M, seq: &Seq, x: &DistInt) -> Result<Vec<crate::sim::Slot>> {
     let p = seq.len();
     let w = x.chunk_width;
     // blocks[j] = digits currently held by rank j (starts as own chunk).
     let mut blocks: Vec<Vec<u32>> = (0..p)
-        .map(|j| m.read(x.chunks[j].0, x.chunks[j].1).to_vec())
+        .map(|j| m.read(x.chunks[j].0, x.chunks[j].1))
         .collect();
     let mut owned: Vec<usize> = (0..p).collect(); // aligned block index
     let mut size = 1usize; // chunks per block
@@ -194,7 +194,12 @@ fn allgather(m: &mut Machine, seq: &Seq, x: &DistInt) -> Result<Vec<crate::sim::
 /// then recursion farms subproducts to slave sub-pools. Output ends up
 /// resident on the master and is finally re-partitioned across `seq`
 /// (width `2w`) for comparability.
-pub fn cesari_maeder(m: &mut Machine, seq: &Seq, a: DistInt, b: DistInt) -> Result<DistInt> {
+pub fn cesari_maeder<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+) -> Result<DistInt> {
     let w = a.chunk_width;
     let n = a.total_width();
     let master = Seq(vec![seq.at(0)]);
@@ -215,8 +220,8 @@ pub fn cesari_maeder(m: &mut Machine, seq: &Seq, a: DistInt, b: DistInt) -> Resu
 /// Recursive master-slave step. `pool[0]` is the master holding both
 /// `n`-digit operands; returns a slot on the master with the 2n-digit
 /// product.
-fn ms_mul(
-    m: &mut Machine,
+fn ms_mul<M: MachineApi>(
+    m: &mut M,
     pool: &[usize],
     sa: crate::sim::Slot,
     sb: crate::sim::Slot,
@@ -226,23 +231,27 @@ fn ms_mul(
     // A pool too small to farm out three subproblems computes locally —
     // and small operands are not worth shipping either.
     if pool.len() < 4 || n <= 64 {
-        let av = m.read(master, sa).to_vec();
-        let bv = m.read(master, sb).to_vec();
+        let av = m.read(master, sa);
+        let bv = m.read(master, sb);
         let scratch = m.alloc(master, vec![0u32; 4 * n])?;
-        let c = m.local(master, |base, ops| mul::skim(&av, &bv, *base, ops));
+        let c = m.local(master, move |base, ops| mul::skim(&av, &bv, *base, ops));
         m.free(master, scratch);
         return m.alloc(master, c);
     }
 
     let h = n / 2;
-    let (av, bv) = (m.read(master, sa).to_vec(), m.read(master, sb).to_vec());
+    let (av, bv) = (m.read(master, sa), m.read(master, sb));
     let (a0, a1) = (av[..h].to_vec(), av[h..].to_vec());
     let (b0, b1) = (bv[..h].to_vec(), bv[h..].to_vec());
 
     // THE bottleneck the paper calls out: the master computes the long
     // differences sequentially.
-    let ((fa, ad), (fb, bd)) = m.local(master, |base, ops| {
-        (abs_diff(&a0, &a1, *base, ops), abs_diff(&b1, &b0, *base, ops))
+    let (a0c, a1c, b0c, b1c) = (a0.clone(), a1.clone(), b0.clone(), b1.clone());
+    let ((fa, ad), (fb, bd)) = m.local(master, move |base, ops| {
+        (
+            abs_diff(&a0c, &a1c, *base, ops),
+            abs_diff(&b1c, &b0c, *base, ops),
+        )
     });
     let sign = fa * fb;
 
@@ -276,11 +285,11 @@ fn ms_mul(
 
     // Master combines sequentially: C = C0 + s^h(C0+C2±C') + s^n C2.
     let (c0, cp, c2) = (
-        m.read(master, rc0).to_vec(),
-        m.read(master, rcp).to_vec(),
-        m.read(master, rc2).to_vec(),
+        m.read(master, rc0),
+        m.read(master, rcp),
+        m.read(master, rc2),
     );
-    let c = m.local(master, |base, ops| {
+    let c = m.local(master, move |base, ops| {
         let mut out = vec![0u32; 2 * n];
         out[..n].copy_from_slice(&c0);
         crate::bignum::core::add_into_width(&mut out, &c0, h, *base, ops);
@@ -328,6 +337,7 @@ fn sub_into(dst: &mut [u32], src: &[u32], off: usize, base: crate::bignum::Base,
 mod tests {
     use super::*;
     use crate::bignum::{mul, Base, Ops};
+    use crate::sim::Machine;
     use crate::util::Rng;
 
     fn setup(p: usize, n: usize, seed: u64) -> (Machine, Seq, Vec<u32>, Vec<u32>) {
@@ -411,8 +421,14 @@ mod tests {
         let mut m2 = Machine::unbounded(p, Base::new(16));
         let da = DistInt::scatter(&mut m2, &seq1, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m2, &seq1, &b, n / p).unwrap();
-        crate::algorithms::copsim_mi(&mut m2, &seq1, da, db, &crate::algorithms::SlimLeaf)
-            .unwrap();
+        crate::algorithms::copsim_mi(
+            &mut m2,
+            &seq1,
+            da,
+            db,
+            &crate::algorithms::leaf_ref(crate::algorithms::SlimLeaf),
+        )
+        .unwrap();
         assert!(
             m2.critical().words < m1.critical().words,
             "COPSIM BW {} !< allgather BW {}",

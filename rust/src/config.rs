@@ -4,8 +4,39 @@
 
 use crate::algorithms::Algorithm;
 use crate::bignum::Base;
+use crate::error::{bail, Context, Result};
 use crate::theory::TimeModel;
-use anyhow::{bail, Context, Result};
+
+/// Which execution engine runs the machine model (see `sim::MachineApi`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Deterministic cost-model simulator (single host thread,
+    /// critical-path logical clocks).
+    #[default]
+    Sim,
+    /// Real execution: one OS thread per simulated processor.
+    Threads,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "sim" | "cost" | "cost-model" => EngineKind::Sim,
+            "threads" | "threaded" => EngineKind::Threads,
+            _ => bail!("unknown engine `{s}` (sim|threads)"),
+        })
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineKind::Sim => write!(f, "sim"),
+            EngineKind::Threads => write!(f, "threads"),
+        }
+    }
+}
 
 /// Which sequential leaf backend the recursion bottoms out on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -21,7 +52,7 @@ pub enum LeafKind {
 }
 
 impl std::str::FromStr for LeafKind {
-    type Err = anyhow::Error;
+    type Err = crate::error::Error;
     fn from_str(s: &str) -> Result<Self> {
         Ok(match s {
             "slim" => LeafKind::Slim,
@@ -49,6 +80,8 @@ pub struct RunConfig {
     /// Forced algorithm; None = hybrid dispatch.
     pub algo: Option<Algorithm>,
     pub leaf: LeafKind,
+    /// Execution engine: cost-model simulator or real threads.
+    pub engine: EngineKind,
     pub seed: u64,
     pub artifacts_dir: String,
     pub time_model: TimeModel,
@@ -65,6 +98,7 @@ impl Default for RunConfig {
             base_log2: 16,
             algo: None,
             leaf: LeafKind::Skim,
+            engine: EngineKind::Sim,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             time_model: TimeModel::default(),
@@ -100,6 +134,9 @@ impl RunConfig {
                 }
             }
             "leaf" => self.leaf = value.parse()?,
+            // Accepted both as `engine=threads` and as the CLI flag
+            // spelling `--engine=threads`.
+            "engine" | "--engine" => self.engine = value.parse()?,
             "seed" => self.seed = value.parse().context("seed")?,
             "artifacts" | "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "workers" => self.workers = value.parse().context("workers")?,
@@ -190,6 +227,17 @@ mod tests {
         assert_eq!(c.leaf, LeafKind::School);
         assert_eq!(c.mem_cap, Some(4096));
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn engine_flag_parses_both_spellings() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.engine, EngineKind::Sim);
+        c.apply_args(&["engine=threads".into()]).unwrap();
+        assert_eq!(c.engine, EngineKind::Threads);
+        c.apply_args(&["--engine=sim".into()]).unwrap();
+        assert_eq!(c.engine, EngineKind::Sim);
+        assert!(c.set("engine", "gpu").is_err());
     }
 
     #[test]

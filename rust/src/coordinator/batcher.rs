@@ -213,7 +213,7 @@ impl BatchingXlaLeaf {
     }
 
     /// Precompile every bucket artifact (hide compile from serving).
-    pub fn warmup(&self) -> anyhow::Result<()> {
+    pub fn warmup(&self) -> crate::error::Result<()> {
         for b in &self.buckets {
             let za = vec![0i32; b.info.batch * b.info.k];
             let zb = vec![0i32; b.info.batch * b.info.k];

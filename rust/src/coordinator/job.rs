@@ -1,6 +1,7 @@
 //! Job types and input normalization.
 
 use crate::algorithms::Algorithm;
+use crate::config::EngineKind;
 use crate::sim::Clock;
 use crate::util::{copk_bfs_levels, is_copk_procs, next_pow2};
 use std::time::Duration;
@@ -20,6 +21,9 @@ pub struct JobSpec {
     pub mem_cap: Option<u64>,
     /// Force a scheme; None lets the §7 hybrid dispatcher choose.
     pub algo: Option<Algorithm>,
+    /// Execution engine: the deterministic cost-model simulator
+    /// (default) or one OS thread per simulated processor.
+    pub engine: EngineKind,
 }
 
 impl JobSpec {
@@ -31,6 +35,7 @@ impl JobSpec {
             procs: 4,
             mem_cap: None,
             algo: None,
+            engine: EngineKind::Sim,
         }
     }
 
@@ -61,7 +66,9 @@ pub struct JobResult {
     pub product: Vec<u32>,
     /// Scheme that ran.
     pub algo: Algorithm,
-    /// Simulated critical-path cost.
+    /// Engine that executed the machine model.
+    pub engine: EngineKind,
+    /// Critical-path cost (identical across engines by construction).
     pub cost: Clock,
     /// Peak per-processor memory words.
     pub mem_peak: u64,
@@ -76,12 +83,8 @@ mod tests {
     #[test]
     fn padding_rules() {
         let j = JobSpec {
-            id: 0,
-            a: vec![1; 100],
-            b: vec![1; 90],
             procs: 16,
-            mem_cap: None,
-            algo: None,
+            ..JobSpec::new(0, vec![1; 100], vec![1; 90])
         };
         let n = j.padded_width();
         assert_eq!(n % 16, 0);

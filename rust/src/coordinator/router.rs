@@ -1,13 +1,14 @@
 //! Worker pool and request routing.
 
 use super::job::{JobResult, JobSpec};
-use crate::algorithms::leaf::LeafMultiplier;
+use crate::algorithms::leaf::{LeafMultiplier, LeafRef};
 use crate::algorithms::{copk, copsim, hybrid, Algorithm};
 use crate::bignum::core::normalized_len;
 use crate::bignum::Base;
-use crate::sim::{DistInt, Machine, Seq};
+use crate::config::EngineKind;
+use crate::error::{Context, Result};
+use crate::sim::{DistInt, Machine, MachineApi, Seq, ThreadedMachine};
 use crate::theory::TimeModel;
-use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -87,7 +88,7 @@ impl Coordinator {
                 };
                 let Ok((spec, reply)) = msg else { break };
                 let t0 = Instant::now();
-                let res = run_job(&cfg, &spec, leaf.as_ref());
+                let res = run_job(&cfg, &spec, &leaf);
                 match &res {
                     Ok(_) => {
                         stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
@@ -143,40 +144,71 @@ impl Drop for Coordinator {
     }
 }
 
-/// Execute one job on a fresh simulated machine.
-fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &dyn LeafMultiplier) -> Result<JobResult> {
-    let t0 = Instant::now();
+/// Run the multiplication itself on any execution engine: scatter the
+/// padded operands, dispatch the scheme, gather and trim the product.
+fn execute_on<M: MachineApi>(
+    machine: &mut M,
+    time_model: &TimeModel,
+    spec: &JobSpec,
+    leaf: &LeafRef,
+) -> Result<(Vec<u32>, Algorithm)> {
     let p = spec.procs;
     let n = spec.padded_width();
     let w = n / p;
-    let mem_cap = spec.mem_cap.unwrap_or(u64::MAX / 2);
-    let mut machine = Machine::new(p, mem_cap, cfg.base);
     let seq = Seq::range(p);
 
     let mut a = spec.a.clone();
     let mut b = spec.b.clone();
     a.resize(n, 0);
     b.resize(n, 0);
-    let da = DistInt::scatter(&mut machine, &seq, &a, w)?;
-    let db = DistInt::scatter(&mut machine, &seq, &b, w)?;
+    let da = DistInt::scatter(machine, &seq, &a, w)?;
+    let db = DistInt::scatter(machine, &seq, &b, w)?;
 
     let (c, algo) = match spec.algo {
-        Some(Algorithm::Copsim) => (copsim(&mut machine, &seq, da, db, leaf)?, Algorithm::Copsim),
-        Some(Algorithm::Copk) => (copk(&mut machine, &seq, da, db, leaf)?, Algorithm::Copk),
-        None => hybrid::hybrid_mul(&mut machine, &seq, da, db, leaf, &cfg.time_model)?,
+        Some(Algorithm::Copsim) => (copsim(machine, &seq, da, db, leaf)?, Algorithm::Copsim),
+        Some(Algorithm::Copk) => (copk(machine, &seq, da, db, leaf)?, Algorithm::Copk),
+        None => hybrid::hybrid_mul(machine, &seq, da, db, leaf, time_model)?,
     };
 
-    let mut product = c.gather(&machine);
+    let mut product = c.gather(machine);
     let keep = normalized_len(&product).max(1);
     product.truncate(keep);
-    Ok(JobResult {
-        id: spec.id,
-        product,
-        algo,
-        cost: machine.critical(),
-        mem_peak: machine.mem_peak_max(),
-        wall: t0.elapsed(),
-    })
+    Ok((product, algo))
+}
+
+/// Execute one job on a fresh machine of the engine the spec selects.
+fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<JobResult> {
+    let t0 = Instant::now();
+    let mem_cap = spec.mem_cap.unwrap_or(u64::MAX / 2);
+    match spec.engine {
+        EngineKind::Sim => {
+            let mut machine = Machine::new(spec.procs, mem_cap, cfg.base);
+            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, leaf)?;
+            Ok(JobResult {
+                id: spec.id,
+                product,
+                algo,
+                engine: spec.engine,
+                cost: machine.critical(),
+                mem_peak: machine.mem_peak_max(),
+                wall: t0.elapsed(),
+            })
+        }
+        EngineKind::Threads => {
+            let mut machine = ThreadedMachine::new(spec.procs, mem_cap, cfg.base);
+            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, leaf)?;
+            let report = machine.finish()?;
+            Ok(JobResult {
+                id: spec.id,
+                product,
+                algo,
+                engine: spec.engine,
+                cost: report.critical,
+                mem_peak: report.mem_peak_max,
+                wall: t0.elapsed(),
+            })
+        }
+    }
 }
 
 #[cfg(test)]
@@ -259,6 +291,29 @@ mod tests {
         spec.algo = Some(Algorithm::Copk);
         let res = coord.submit_blocking(spec).unwrap();
         assert_eq!(res.algo, Algorithm::Copk);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn threaded_engine_matches_sim_engine() {
+        let coord = start_default();
+        let base = Base::default();
+        let mut rng = Rng::new(0x7E7);
+        let a = rng.digits(128, 16);
+        let b = rng.digits(128, 16);
+        let mut sim_spec = JobSpec::new(1, a.clone(), b.clone());
+        sim_spec.procs = 16;
+        sim_spec.algo = Some(Algorithm::Copsim);
+        let sim = coord.submit_blocking(sim_spec).unwrap();
+        let mut thr_spec = JobSpec::new(2, a, b);
+        thr_spec.procs = 16;
+        thr_spec.algo = Some(Algorithm::Copsim);
+        thr_spec.engine = EngineKind::Threads;
+        let thr = coord.submit_blocking(thr_spec).unwrap();
+        assert_eq!(thr.engine, EngineKind::Threads);
+        assert_eq!(sim.product, thr.product, "engines disagree on product");
+        assert_eq!(sim.cost, thr.cost, "engines disagree on cost triple");
+        assert_eq!(sim.mem_peak, thr.mem_peak);
         coord.shutdown();
     }
 

@@ -1,0 +1,154 @@
+//! Minimal error handling with an `anyhow`-compatible surface.
+//!
+//! This build environment is fully offline, so the `anyhow` crate the
+//! code was written against is replaced by this self-contained module:
+//! a string-backed [`Error`], the [`Result`] alias, the [`Context`]
+//! extension trait, and the [`anyhow!`]/[`bail!`]/[`ensure!`] macros.
+//! Call sites `use crate::error::...` exactly as they would
+//! `use anyhow::...`.
+
+use std::fmt;
+
+/// A string-backed error. Context wrapping prepends `"{context}: "`,
+/// matching `anyhow`'s `{:#}` rendering closely enough for logs.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error(m.to_string())
+    }
+
+    /// Prepend a context layer.
+    pub fn wrap(self, c: impl fmt::Display) -> Self {
+        Error(format!("{c}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Any std error converts losslessly (message-wise) into [`Error`],
+/// so `?` works on `io::Result`, channel results, parses, etc.
+/// ([`Error`] itself deliberately does not implement `std::error::Error`,
+/// which keeps this blanket impl coherent — the same trick `anyhow`
+/// uses.)
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::Context`: attach context to errors (or missing
+/// `Option` values) while converting to [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{c}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error(c.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::error::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)+) => {
+        $crate::error::Error::msg(format!($fmt, $($arg)+))
+    };
+    ($err:expr $(,)?) => {
+        $crate::error::Error::msg($err)
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)+));
+        }
+    };
+}
+
+// Make the macros importable as `use crate::error::{anyhow, bail, ensure}`
+// (mirroring `use anyhow::{anyhow, bail, ensure}`).
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke with code {}", 7)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke with code 7");
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: broke with code 7");
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(30).is_err());
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(io_fail().is_err());
+        let e = Error::msg("inner").wrap("ctx");
+        assert_eq!(format!("{e}"), "ctx: inner");
+    }
+}

@@ -4,7 +4,7 @@
 use super::{run_algo, Algo};
 use crate::metrics::{fmt_f64, fmt_ratio, fmt_u64, Table};
 use crate::theory;
-use anyhow::Result;
+use crate::error::Result;
 
 /// E4 — Theorem 11: COPSIM_MI sweep.
 pub fn e04_copsim_mi() -> Result<Vec<Table>> {

@@ -1,0 +1,255 @@
+//! E15 — execution-engine comparison: the cost-model simulator vs the
+//! real-threads executor running the *same* algorithm source through
+//! [`MachineApi`].
+//!
+//! For each (algorithm, n, P) cell both engines multiply identical
+//! random operands. The table reports
+//!
+//! * the critical-path cost triple (identical across engines — checked),
+//! * the §2.2 model's predicted time `α·T + β·L + γ·BW` from the
+//!   cost-model clocks,
+//! * measured wall-clock of the single-threaded cost-model interpreter,
+//! * measured wall-clock of the threaded engine (one OS thread per
+//!   simulated processor), and
+//! * the threaded engine's speedup over the interpreter — the
+//!   "coordination algorithms actually parallelize" evidence the
+//!   simulator alone cannot provide.
+
+use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
+use crate::algorithms::{copk_mi, copsim_mi};
+use crate::bignum::Base;
+use crate::error::{ensure, Result};
+use crate::metrics::{fmt_f64, fmt_u64, Table};
+use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use crate::theory::TimeModel;
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Which scheme a comparison cell runs (MI mode on an unbounded
+/// machine; the engines execute identical operation streams either way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Copsim,
+    Copk,
+}
+
+impl Scheme {
+    fn name(self) -> &'static str {
+        match self {
+            Scheme::Copsim => "COPSIM",
+            Scheme::Copk => "COPK",
+        }
+    }
+
+    fn leaf(self) -> LeafRef {
+        match self {
+            // Schoolbook has the smallest wall-clock constant, which
+            // makes the engine comparison about execution, not leaf
+            // choice; COPK keeps its natural Karatsuba leaf.
+            Scheme::Copsim => leaf_ref(SchoolLeaf),
+            Scheme::Copk => leaf_ref(SkimLeaf),
+        }
+    }
+}
+
+/// One engine-comparison cell.
+#[derive(Clone, Debug)]
+pub struct EngineComparison {
+    pub scheme: Scheme,
+    pub p: usize,
+    pub n: usize,
+    /// Critical-path triple (asserted identical across engines).
+    pub clock: Clock,
+    /// §2.2 predicted time from the cost-model clocks, in ms.
+    pub predicted_ms: f64,
+    /// Wall-clock of the cost-model interpreter (single host thread).
+    pub sim_wall: Duration,
+    /// Wall-clock of the threaded engine (P OS threads).
+    pub threaded_wall: Duration,
+}
+
+impl EngineComparison {
+    /// Threaded-engine speedup over the single-threaded interpreter.
+    pub fn speedup(&self) -> f64 {
+        self.sim_wall.as_secs_f64() / self.threaded_wall.as_secs_f64().max(1e-9)
+    }
+}
+
+fn run_on<M: MachineApi>(
+    m: &mut M,
+    scheme: Scheme,
+    seq: &Seq,
+    a: &[u32],
+    b: &[u32],
+    leaf: &LeafRef,
+) -> Result<(Vec<u32>, Duration)> {
+    let n = a.len();
+    let w = n / seq.len();
+    let t0 = Instant::now();
+    let da = DistInt::scatter(m, seq, a, w)?;
+    let db = DistInt::scatter(m, seq, b, w)?;
+    let c = match scheme {
+        Scheme::Copsim => copsim_mi(m, seq, da, db, leaf)?,
+        Scheme::Copk => copk_mi(m, seq, da, db, leaf)?,
+    };
+    // The gather synchronizes with all in-flight worker activity, so
+    // the measured span covers the complete multiplication on both
+    // engines.
+    let product = c.gather(m);
+    let wall = t0.elapsed();
+    Ok((product, wall))
+}
+
+/// Run one (scheme, n, P) cell on both engines and cross-check them.
+pub fn compare_engines(scheme: Scheme, n: usize, p: usize, seed: u64) -> Result<EngineComparison> {
+    let base = Base::new(16);
+    let leaf = scheme.leaf();
+    let mut rng = Rng::new(seed);
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let seq = Seq::range(p);
+
+    let mut sim = Machine::unbounded(p, base);
+    let (sim_prod, sim_wall) = run_on(&mut sim, scheme, &seq, &a, &b, &leaf)?;
+    let sim_clock = sim.critical();
+
+    let mut thr = ThreadedMachine::unbounded(p, base);
+    let (thr_prod, threaded_wall) = run_on(&mut thr, scheme, &seq, &a, &b, &leaf)?;
+    let report = thr.finish()?;
+
+    ensure!(
+        sim_prod == thr_prod,
+        "engines disagree on the product at {} n={n} P={p}",
+        scheme.name()
+    );
+    ensure!(
+        sim_clock == report.critical,
+        "engines disagree on the cost triple at {} n={n} P={p}: sim {} vs threads {}",
+        scheme.name(),
+        sim_clock,
+        report.critical
+    );
+
+    let predicted_ms = TimeModel::default().time_ns(&sim_clock) / 1e6;
+    Ok(EngineComparison {
+        scheme,
+        p,
+        n,
+        clock: sim_clock,
+        predicted_ms,
+        sim_wall,
+        threaded_wall,
+    })
+}
+
+/// The default E15 sweep: COPSIM over P ∈ {4, 16, 64} and COPK over its
+/// P = 4·3^i shapes, n up to 2^14 (the bench target `engines` runs the
+/// larger sizes).
+pub fn e15_engines() -> Result<Vec<Table>> {
+    let cells: &[(Scheme, usize, usize)] = &[
+        (Scheme::Copsim, 4, 1 << 10),
+        (Scheme::Copsim, 4, 1 << 12),
+        (Scheme::Copsim, 4, 1 << 14),
+        (Scheme::Copsim, 16, 1 << 12),
+        (Scheme::Copsim, 16, 1 << 14),
+        (Scheme::Copsim, 64, 1 << 14),
+        (Scheme::Copk, 4, 1 << 10),
+        (Scheme::Copk, 4, 1 << 12),
+        (Scheme::Copk, 12, 3072),
+        (Scheme::Copk, 36, 4608),
+    ];
+    let mut t = Table::new(
+        "E15: cost-model predicted critical path vs measured threaded wall-clock \
+         (predicted = α·T + β·L + γ·BW on the cost-model clocks; speedup = sim wall / threaded wall)",
+        &[
+            "scheme", "P", "n", "T", "BW", "L", "predicted ms", "sim wall ms", "threads wall ms",
+            "speedup",
+        ],
+    );
+    for &(scheme, p, n) in cells {
+        let c = compare_engines(scheme, n, p, 0xE15)?;
+        t.row(vec![
+            scheme.name().into(),
+            p.to_string(),
+            fmt_u64(n as u64),
+            fmt_u64(c.clock.ops),
+            fmt_u64(c.clock.words),
+            fmt_u64(c.clock.msgs),
+            fmt_f64(c.predicted_ms),
+            fmt_f64(c.sim_wall.as_secs_f64() * 1e3),
+            fmt_f64(c.threaded_wall.as_secs_f64() * 1e3),
+            format!("{:.2}", c.speedup()),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engines_agree_on_small_cells() {
+        for &(scheme, p, n) in &[
+            (Scheme::Copsim, 4usize, 256usize),
+            (Scheme::Copsim, 16, 512),
+            (Scheme::Copk, 4, 256),
+            (Scheme::Copk, 12, 384),
+        ] {
+            let c = compare_engines(scheme, n, p, 0x515).unwrap();
+            assert!(c.clock.ops > 0);
+            assert!(c.predicted_ms > 0.0);
+        }
+    }
+
+    fn cores() -> usize {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    #[test]
+    fn threaded_speedup_materializes() {
+        // The threaded engine must beat the single-threaded interpreter
+        // on a multi-core host once the leaf products dominate. Sized at
+        // n = 2^13 so the suite stays fast in debug builds; the full
+        // n = 2^14 acceptance cell runs in E15 and the ignored release
+        // test below. Skipped on hosts without enough cores, where no
+        // engine can manufacture parallelism.
+        if cores() < 4 {
+            eprintln!("skipping: only {} core(s) available", cores());
+            return;
+        }
+        // Wall-clock under a concurrently-running test suite is noisy;
+        // accept the first of three attempts that shows a speedup.
+        let mut last = None;
+        for attempt in 0..3 {
+            let c = compare_engines(Scheme::Copsim, 1 << 13, 4, 0x5EED + attempt).unwrap();
+            if c.speedup() > 1.0 {
+                return;
+            }
+            last = Some(c);
+        }
+        let c = last.unwrap();
+        panic!(
+            "threaded engine never faster over 3 attempts: sim {:?} vs threads {:?}",
+            c.sim_wall, c.threaded_wall
+        );
+    }
+
+    #[test]
+    #[ignore = "release-mode acceptance check: cargo test --release -- --ignored"]
+    fn threaded_speedup_at_n14_p4() {
+        if cores() < 4 {
+            eprintln!("skipping: only {} core(s) available", cores());
+            return;
+        }
+        let c = compare_engines(Scheme::Copsim, 1 << 14, 4, 0x5EED).unwrap();
+        assert!(
+            c.speedup() > 1.0,
+            "threaded engine not faster at n=2^14 P=4: sim {:?} vs threads {:?}",
+            c.sim_wall,
+            c.threaded_wall
+        );
+    }
+}

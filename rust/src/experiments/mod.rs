@@ -1,7 +1,7 @@
 //! Experiment harness: one entry per paper result (see DESIGN.md's
 //! experiment index). Every experiment prints
-//! `paper bound | measured | ratio` tables; EXPERIMENTS.md records the
-//! outputs.
+//! `paper bound | measured | ratio` tables; run them with
+//! `copmul experiment <id|all> [--csv]`.
 //!
 //! The paper has no empirical section — its "tables and figures" are
 //! the cost theorems. Reproducing it therefore means *measuring* the
@@ -11,16 +11,17 @@
 //! optimality claims (Theorems 1 and 2).
 
 pub mod algorithms;
+pub mod engines;
 pub mod primitives;
 pub mod systems;
 
-use crate::algorithms::leaf::{SchoolLeaf, SkimLeaf, SlimLeaf};
+use crate::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf, SlimLeaf};
 use crate::algorithms::{copk, copk_mi, copsim, copsim_mi};
 use crate::bignum::Base;
+use crate::error::Result;
 use crate::metrics::Table;
 use crate::sim::{Clock, DistInt, Machine, Seq};
 use crate::util::Rng;
-use anyhow::Result;
 
 /// Outcome of one simulated run.
 #[derive(Clone, Copy, Debug)]
@@ -57,17 +58,17 @@ pub fn run_algo(algo: Algo, n: usize, p: usize, mem: Option<u64>, seed: u64) -> 
     let da = DistInt::scatter(&mut m, &seq, &a, n / p)?;
     let db = DistInt::scatter(&mut m, &seq, &b, n / p)?;
     let c = match algo {
-        Algo::CopsimMi => copsim_mi(&mut m, &seq, da, db, &SlimLeaf)?,
-        Algo::CopsimMain => copsim(&mut m, &seq, da, db, &SchoolLeaf)?,
-        Algo::CopkMi => copk_mi(&mut m, &seq, da, db, &SkimLeaf)?,
-        Algo::CopkMain => copk(&mut m, &seq, da, db, &SchoolLeaf)?,
+        Algo::CopsimMi => copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf))?,
+        Algo::CopsimMain => copsim(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf))?,
+        Algo::CopkMi => copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf))?,
+        Algo::CopkMain => copk(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf))?,
         Algo::Allgather => crate::baselines::allgather_schoolbook(&mut m, &seq, da, db)?,
         Algo::CesariMaeder => crate::baselines::cesari_maeder(&mut m, &seq, da, db)?,
     };
     // Sanity: verify against the sequential oracle on every run.
     let mut ops = crate::bignum::Ops::default();
     let want = crate::bignum::mul::mul_school(&a, &b, base, &mut ops);
-    anyhow::ensure!(c.gather(&m) == want, "product mismatch in {algo:?}");
+    crate::error::ensure!(c.gather(&m) == want, "product mismatch in {algo:?}");
     Ok(RunStats {
         clock: m.critical(),
         mem_peak: m.mem_peak_max(),
@@ -171,6 +172,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "modeled execution time α·T + β·L + γ·BW",
             run: systems::e14_time_model,
         },
+        Experiment {
+            id: "E15",
+            paper_ref: "§2.2 model vs real execution",
+            title: "execution engines: predicted critical path vs threaded wall-clock",
+            run: engines::e15_engines,
+        },
     ]
 }
 
@@ -184,7 +191,7 @@ pub fn run_by_id(id: &str) -> Result<Vec<(String, Vec<Table>)>> {
             out.push((format!("{} — {} ({})", e.id, e.title, e.paper_ref), tables));
         }
     }
-    anyhow::ensure!(!out.is_empty(), "no experiment matches `{id}`");
+    crate::error::ensure!(!out.is_empty(), "no experiment matches `{id}`");
     Ok(out)
 }
 
@@ -195,10 +202,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 14);
+        assert_eq!(reg.len(), 15);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 14);
+        assert_eq!(ids.len(), 15);
     }
 
     #[test]

@@ -6,7 +6,7 @@ use crate::primitives::{compare, diff, sum};
 use crate::sim::{Clock, DistInt, Machine, Seq};
 use crate::theory;
 use crate::util::Rng;
-use anyhow::Result;
+use crate::error::Result;
 
 const SWEEP: &[(usize, usize)] = &[
     (2, 1 << 10),

@@ -5,7 +5,7 @@
 use super::{run_algo, Algo};
 use crate::metrics::{fmt_f64, fmt_ratio, fmt_u64, Table};
 use crate::theory::TimeModel;
-use anyhow::Result;
+use crate::error::Result;
 
 /// E10 — strong scaling: fixed n, growing P, M = Θ(n/P).
 /// Perfect strong scaling ⇒ `T·P/n²` and `BW·M·P/n²` stay flat.

@@ -14,9 +14,12 @@
 //! * [`bignum`] — exact base-`s` big-integer arithmetic (the digit model of
 //!   §2.1) including the sequential `SLIM` (Fact 10) and `SKIM` (Fact 13)
 //!   leaf multipliers, with per-call digit-operation counting.
-//! * [`sim`] — a deterministic simulator of the paper's machine model with
-//!   critical-path cost accounting (§2.2, Yang–Miller) and per-processor
-//!   memory ledgers.
+//! * [`sim`] — the machine-model layer behind the [`sim::MachineApi`]
+//!   trait: a deterministic cost-model simulator ([`sim::Machine`], with
+//!   critical-path accounting per §2.2, Yang–Miller, and per-processor
+//!   memory ledgers) and a real-threads executor
+//!   ([`sim::ThreadedMachine`], one OS thread per simulated processor
+//!   with point-to-point message channels).
 //! * [`primitives`] — parallel `SUM`, `COMPARE`, `DIFF` (§4), including the
 //!   speculative carry/borrow pre-calculation the paper uses to break the
 //!   sequential carry chain.
@@ -33,17 +36,19 @@
 //! * [`coordinator`] — a multi-threaded job router + dynamic batcher that
 //!   serves multiplication requests over simulated machines, dispatching
 //!   leaf products to the XLA runtime.
-//! * [`experiments`] — one module per paper result (E1–E14), each printing
-//!   a `paper bound | measured | ratio` table.
+//! * [`experiments`] — one module per paper result (E1–E15), each printing
+//!   a `paper bound | measured | ratio` table; E15 compares the
+//!   cost-model and threaded execution engines.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! recorded results.
+//! See `rust/DESIGN.md` for the architecture notes (including the
+//! two-backend execution-engine split) and the experiment index.
 
 pub mod algorithms;
 pub mod baselines;
 pub mod bignum;
 pub mod config;
 pub mod coordinator;
+pub mod error;
 pub mod experiments;
 pub mod metrics;
 pub mod primitives;
@@ -52,5 +57,5 @@ pub mod sim;
 pub mod theory;
 pub mod util;
 
-pub use config::RunConfig;
-pub use sim::{Clock, Machine, Seq};
+pub use config::{EngineKind, RunConfig};
+pub use sim::{Clock, Machine, MachineApi, Seq, ThreadedMachine};

@@ -12,9 +12,10 @@
 //!
 //! Common `key=value` options: `n`, `procs`, `mem`, `algo`
 //! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
-//! `seed`, `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
+//! `engine` (sim|threads; also spelled `--engine=...`), `seed`,
+//! `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
 
-use anyhow::{bail, Context, Result};
+use copmul::error::{bail, Context, Result};
 use copmul::algorithms::leaf::{HybridLeaf, LeafMultiplier, SchoolLeaf, SkimLeaf, SlimLeaf};
 use copmul::bignum::convert::{parse_hex, to_hex};
 use copmul::config::{LeafKind, RunConfig};
@@ -53,13 +54,16 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E14|all> [--csv] [key=value ...]
+  copmul experiment <E1..E15|all> [--csv] [key=value ...]
   copmul serve [jobs=N] [key=value ...]
   copmul info [artifacts=DIR]
   copmul selftest
 
 KEYS: n procs mem algo(copsim|copk|hybrid) leaf(slim|skim|school|hybrid|xla|xla-batched)
-      seed workers artifacts alpha_ns beta_ns gamma_ns
+      --engine=(sim|threads) seed workers artifacts alpha_ns beta_ns gamma_ns
+
+ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
+         threads = one OS thread per simulated processor (wall-clock speedup).
 ";
 
 /// Build the leaf backend the config names.
@@ -89,8 +93,8 @@ fn cmd_mul(args: &[String]) -> Result<()> {
     cfg.apply_args(&kv.iter().map(|s| s.to_string()).collect::<Vec<_>>())?;
     cfg.validate()?;
     let base = cfg.base();
-    let a = parse_hex(a_hex, base).map_err(|e| anyhow::anyhow!(e))?;
-    let b = parse_hex(b_hex, base).map_err(|e| anyhow::anyhow!(e))?;
+    let a = parse_hex(a_hex, base).map_err(|e| copmul::error::anyhow!(e))?;
+    let b = parse_hex(b_hex, base).map_err(|e| copmul::error::anyhow!(e))?;
     let leaf = make_leaf(&cfg)?;
 
     let coord = Coordinator::start(
@@ -105,9 +109,11 @@ fn cmd_mul(args: &[String]) -> Result<()> {
     spec.procs = cfg.procs;
     spec.mem_cap = cfg.mem_cap;
     spec.algo = cfg.algo;
+    spec.engine = cfg.engine;
     let res = coord.submit_blocking(spec)?;
     println!("product  = {}", to_hex(&res.product, base));
     println!("scheme   = {}", res.algo);
+    println!("engine   = {}", res.engine);
     println!(
         "cost     = T={} BW={} L={} (critical path)",
         fmt_u64(res.cost.ops),
@@ -160,8 +166,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         leaf,
     );
     println!(
-        "serving {jobs} jobs (n={}, procs={}, leaf={:?}, workers={})",
-        cfg.n, cfg.procs, cfg.leaf, cfg.workers
+        "serving {jobs} jobs (n={}, procs={}, leaf={:?}, engine={}, workers={})",
+        cfg.n, cfg.procs, cfg.leaf, cfg.engine, cfg.workers
     );
     let mut rng = Rng::new(cfg.seed);
     let t0 = std::time::Instant::now();
@@ -173,6 +179,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         spec.procs = cfg.procs;
         spec.mem_cap = cfg.mem_cap;
         spec.algo = cfg.algo;
+        spec.engine = cfg.engine;
         pending.push(coord.submit(spec));
     }
     let mut lat_us: Vec<u64> = Vec::with_capacity(jobs);
@@ -238,14 +245,17 @@ fn cmd_selftest() -> Result<()> {
         (4, None),
     ] {
         let coord = Coordinator::start(CoordinatorConfig::default(), Arc::new(SkimLeaf));
-        let mut spec = JobSpec::new(0, a.clone(), b.clone());
-        spec.procs = procs;
-        spec.algo = algo;
-        let res = coord.submit_blocking(spec)?;
-        anyhow::ensure!(
-            to_hex(&res.product, base) == want,
-            "selftest mismatch at procs={procs}"
-        );
+        for engine in [copmul::EngineKind::Sim, copmul::EngineKind::Threads] {
+            let mut spec = JobSpec::new(0, a.clone(), b.clone());
+            spec.procs = procs;
+            spec.algo = algo;
+            spec.engine = engine;
+            let res = coord.submit_blocking(spec)?;
+            copmul::error::ensure!(
+                to_hex(&res.product, base) == want,
+                "selftest mismatch at procs={procs} engine={engine}"
+            );
+        }
         coord.shutdown();
     }
     // XLA path, if artifacts are present.
@@ -255,7 +265,7 @@ fn cmd_selftest() -> Result<()> {
         let mut spec = JobSpec::new(1, a.clone(), b.clone());
         spec.procs = 4;
         let res = coord.submit_blocking(spec)?;
-        anyhow::ensure!(to_hex(&res.product, base) == want, "xla selftest mismatch");
+        copmul::error::ensure!(to_hex(&res.product, base) == want, "xla selftest mismatch");
         coord.shutdown();
         println!("selftest OK (incl. XLA leaf)");
     } else {

@@ -15,8 +15,8 @@
 
 use super::{check_layout, fanout};
 use crate::bignum::core::cmp_digits;
-use crate::sim::{DistInt, Machine, Seq};
-use anyhow::Result;
+use crate::error::Result;
+use crate::sim::{DistInt, MachineApi, Seq};
 use std::cmp::Ordering;
 
 fn ord_to_flag(o: Ordering) -> i32 {
@@ -27,13 +27,13 @@ fn ord_to_flag(o: Ordering) -> i32 {
     }
 }
 
-fn compare_rec(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<i32> {
+fn compare_rec<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<i32> {
     let p = seq.len();
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
-        let f = m.local(pid, |_base, ops| ord_to_flag(cmp_digits(&av, &bv, ops)));
+        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let f = m.local(pid, move |_base, ops| ord_to_flag(cmp_digits(&av, &bv, ops)));
         return Ok(f);
     }
     let (lo_seq, hi_seq) = (seq.lower_half(), seq.upper_half());
@@ -57,7 +57,7 @@ fn compare_rec(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<i
 }
 
 /// `COMPARE(P, A, B)` — see module docs.
-pub fn compare(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<i32> {
+pub fn compare<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<i32> {
     check_layout(seq, a, "COMPARE a");
     check_layout(seq, b, "COMPARE b");
     assert_eq!(a.chunk_width, b.chunk_width);
@@ -68,6 +68,7 @@ pub fn compare(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<i
 mod tests {
     use super::*;
     use crate::bignum::Base;
+    use crate::sim::Machine;
     use crate::theory;
     use crate::util::Rng;
 

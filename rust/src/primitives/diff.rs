@@ -17,9 +17,9 @@
 
 use super::{check_layout, dup_dist, fanout, select_consume};
 use crate::bignum::core::sub_with_borrow;
+use crate::error::Result;
 use crate::primitives::compare::compare;
-use crate::sim::{DistInt, Machine, Seq};
-use anyhow::Result;
+use crate::sim::{DistInt, MachineApi, Seq};
 
 /// Output of the speculative branch `DIFFR`.
 struct DiffrOut {
@@ -31,13 +31,13 @@ struct DiffrOut {
     b1: u32,
 }
 
-fn diffr(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<DiffrOut> {
+fn diffr<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<DiffrOut> {
     let p = seq.len();
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
-        let ((d0, b0), (d1, b1)) = m.local(pid, |base, ops| {
+        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let ((d0, b0), (d1, b1)) = m.local(pid, move |base, ops| {
             (
                 sub_with_borrow(&av, &bv, 0, *base, ops),
                 sub_with_borrow(&av, &bv, 1, *base, ops),
@@ -98,13 +98,18 @@ fn diffr(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<DiffrOu
 /// `DIFFL`: `(A - B) mod s^w` plus its borrow-out, for `A, B`
 /// partitioned in `seq`. Internally the upper half speculates via
 /// [`diffr`].
-fn diffl(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(DistInt, u32)> {
+fn diffl<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: &DistInt,
+    b: &DistInt,
+) -> Result<(DistInt, u32)> {
     let p = seq.len();
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
-        let (d, bo) = m.local(pid, |base, ops| sub_with_borrow(&av, &bv, 0, *base, ops));
+        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let (d, bo) = m.local(pid, move |base, ops| sub_with_borrow(&av, &bv, 0, *base, ops));
         return Ok((
             DistInt {
                 chunk_width: a.chunk_width,
@@ -132,7 +137,12 @@ fn diffl(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(DistIn
 
 /// `DIFF(P, A, B)` — `C = |A - B|` and the sign flag `f` (see module
 /// docs). The zero case materializes an all-zero `C` as the paper does.
-pub fn diff(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(DistInt, i32)> {
+pub fn diff<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: &DistInt,
+    b: &DistInt,
+) -> Result<(DistInt, i32)> {
     check_layout(seq, a, "DIFF a");
     check_layout(seq, b, "DIFF b");
     assert_eq!(a.chunk_width, b.chunk_width);
@@ -158,8 +168,8 @@ pub fn diff(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(Dis
     if seq.len() == 1 {
         let pid = seq.at(0);
         let (sx, sy) = (x.chunks[0].1, y.chunks[0].1);
-        let (xv, yv) = (m.read(pid, sx).to_vec(), m.read(pid, sy).to_vec());
-        let (d, bo) = m.local(pid, |base, ops| sub_with_borrow(&xv, &yv, 0, *base, ops));
+        let (xv, yv) = (m.read(pid, sx), m.read(pid, sy));
+        let (d, bo) = m.local(pid, move |base, ops| sub_with_borrow(&xv, &yv, 0, *base, ops));
         debug_assert_eq!(bo, 0);
         return Ok((
             DistInt {
@@ -179,6 +189,7 @@ mod tests {
     use super::*;
     use crate::bignum::convert::to_u128;
     use crate::bignum::Base;
+    use crate::sim::Machine;
     use crate::theory;
     use crate::util::Rng;
 

@@ -23,7 +23,7 @@ pub use compare::compare;
 pub use diff::diff;
 pub use sum::{sum, sum_many};
 
-use crate::sim::{DistInt, Machine, Seq};
+use crate::sim::{DistInt, MachineApi, Seq};
 
 /// Deliver a small payload (flags/carries) held by every processor of
 /// `src_seq` to every processor of `dst_seq`.
@@ -34,12 +34,12 @@ use crate::sim::{DistInt, Machine, Seq};
 /// so one recursion level splits unevenly) the uncovered tail of
 /// `dst_seq` is filled by doubling rounds among the receivers —
 /// `O(log)` extra latency only at the uneven levels.
-pub(crate) fn fanout(
-    m: &mut Machine,
+pub(crate) fn fanout<M: MachineApi>(
+    m: &mut M,
     src_seq: &Seq,
     dst_seq: &Seq,
     payload: &[u32],
-) -> anyhow::Result<()> {
+) -> crate::error::Result<()> {
     let f = src_seq.len().min(dst_seq.len());
     // Round 0: pairwise.
     for j in 0..f {
@@ -80,13 +80,10 @@ pub(crate) fn check_layout(seq: &Seq, x: &DistInt, what: &str) {
 
 /// Duplicate a distributed value chunk-by-chunk on the same owners
 /// (memory charged; no communication, no digit ops — an in-memory copy).
-pub(crate) fn dup_dist(
-    m: &mut crate::sim::Machine,
-    x: &DistInt,
-) -> anyhow::Result<DistInt> {
+pub(crate) fn dup_dist<M: MachineApi>(m: &mut M, x: &DistInt) -> crate::error::Result<DistInt> {
     let mut chunks = Vec::with_capacity(x.chunks.len());
     for &(p, slot) in &x.chunks {
-        let data = m.read(p, slot).to_vec();
+        let data = m.read(p, slot);
         let s = m.alloc(p, data)?;
         chunks.push((p, s));
     }
@@ -99,8 +96,8 @@ pub(crate) fn dup_dist(
 /// Select between two speculative distributed values: keep `c1` if
 /// `take_one`, else `c0`; free the other. If both outputs of a caller
 /// need the *same* branch, use [`dup_dist`] first.
-pub(crate) fn select_consume(
-    m: &mut crate::sim::Machine,
+pub(crate) fn select_consume<M: MachineApi>(
+    m: &mut M,
     take_one: bool,
     c0: DistInt,
     c1: DistInt,

@@ -13,8 +13,8 @@
 
 use super::{check_layout, dup_dist, fanout, select_consume};
 use crate::bignum::core::add_with_carry;
-use crate::sim::{DistInt, Machine, Seq};
-use anyhow::Result;
+use crate::error::Result;
+use crate::sim::{DistInt, MachineApi, Seq};
 
 /// Output of the speculative branch: both possible sums and carries.
 struct SumaOut {
@@ -25,13 +25,13 @@ struct SumaOut {
 }
 
 /// `SUMA(P, A, B)` (see module docs). Both inputs partitioned in `seq`.
-fn suma(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<SumaOut> {
+fn suma<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<SumaOut> {
     let p = seq.len();
     if p == 1 {
         let pid = seq.at(0);
         let (&(_, sa), &(_, sb)) = (&a.chunks[0], &b.chunks[0]);
-        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
-        let ((d0, u0), (d1, u1)) = m.local(pid, |base, ops| {
+        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let ((d0, u0), (d1, u1)) = m.local(pid, move |base, ops| {
             (
                 add_with_carry(&av, &bv, 0, *base, ops),
                 add_with_carry(&av, &bv, 1, *base, ops),
@@ -94,7 +94,12 @@ fn suma(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<SumaOut>
 /// `SUM(P, A, B)` — parallel addition. Returns `(C, v)` with
 /// `C = (A + B) mod s^n` partitioned in `seq` like the inputs and
 /// `v = ⌊(A+B)/s^n⌋ ∈ {0,1}` the most-significant (carry) digit.
-pub fn sum(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(DistInt, u32)> {
+pub fn sum<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: &DistInt,
+    b: &DistInt,
+) -> Result<(DistInt, u32)> {
     check_layout(seq, a, "SUM a");
     check_layout(seq, b, "SUM b");
     assert_eq!(a.chunk_width, b.chunk_width, "SUM operand widths differ");
@@ -103,8 +108,8 @@ pub fn sum(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(Dist
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa).to_vec(), m.read(pid, sb).to_vec());
-        let (d, v) = m.local(pid, |base, ops| add_with_carry(&av, &bv, 0, *base, ops));
+        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let (d, v) = m.local(pid, move |base, ops| add_with_carry(&av, &bv, 0, *base, ops));
         let c = DistInt {
             chunk_width: a.chunk_width,
             chunks: vec![(pid, m.alloc(pid, d)?)],
@@ -139,7 +144,7 @@ pub fn sum(m: &mut Machine, seq: &Seq, a: &DistInt, b: &DistInt) -> Result<(Dist
 /// running carry count, which is returned alongside
 /// `C = (Σ X_i) mod s^n`. The caller arranges widths so the total fits
 /// (as COPSIM's recomposition does); `carry` reports the overflow.
-pub fn sum_many(m: &mut Machine, seq: &Seq, xs: &[&DistInt]) -> Result<(DistInt, u32)> {
+pub fn sum_many<M: MachineApi>(m: &mut M, seq: &Seq, xs: &[&DistInt]) -> Result<(DistInt, u32)> {
     assert!(xs.len() >= 2);
     let (mut acc, mut carry) = sum(m, seq, xs[0], xs[1])?;
     for x in &xs[2..] {
@@ -156,6 +161,7 @@ mod tests {
     use super::*;
     use crate::bignum::convert::{from_u128, to_u128};
     use crate::bignum::Base;
+    use crate::sim::Machine;
     use crate::theory;
     use crate::util::Rng;
 

@@ -1,7 +1,7 @@
 //! Artifact registry: `artifacts/manifest.json` parsing.
 
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One compiled artifact: `int32[batch, k] x int32[batch, k] ->
@@ -29,7 +29,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let src = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
-        let j = Json::parse(&src).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        let j = Json::parse(&src).map_err(|e| crate::error::anyhow!("{path:?}: {e}"))?;
         if j.get("format").and_then(Json::as_str) != Some("hlo-text") {
             bail!("{path:?}: unexpected manifest format");
         }

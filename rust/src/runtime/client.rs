@@ -1,7 +1,11 @@
 //! PJRT client wrapper: compile HLO-text artifacts once, execute many.
 
 use super::artifacts::{ArtifactInfo, Manifest};
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
+// The real `xla` crate is not vendored offline; the stub fails
+// gracefully at client construction (see xla_stub docs for enabling
+// the real backend).
+use crate::runtime::xla_stub as xla;
 use std::collections::HashMap;
 use std::sync::Mutex;
 

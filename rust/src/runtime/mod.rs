@@ -18,6 +18,7 @@
 pub mod artifacts;
 pub mod client;
 pub mod leaf;
+pub mod xla_stub;
 
 pub use artifacts::{ArtifactInfo, Manifest};
 pub use client::XlaRuntime;

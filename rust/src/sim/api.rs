@@ -1,0 +1,169 @@
+//! [`MachineApi`] — the machine-model surface the algorithms program
+//! against (see DESIGN.md, "Execution engines").
+//!
+//! The paper's COPSIM/COPK are coordination algorithms: they are defined
+//! by the sequence of allocations, local computations, and point-to-point
+//! messages each processor performs, independently of what actually
+//! executes them. This trait captures exactly that surface —
+//! alloc/free/read/replace (the per-processor memory ledger),
+//! compute/local/compute_slot (digit work), send*/barrier
+//! (communication) and the cost/memory reporting — so one algorithm
+//! source drives every backend:
+//!
+//! * [`super::Machine`] — the deterministic cost-model interpreter
+//!   (logical clocks, critical-path accounting, single host thread).
+//! * [`super::ThreadedMachine`] — real execution: one OS thread per
+//!   simulated processor, per-processor arenas, mpsc message channels,
+//!   wall-clock timing alongside the same logical clocks.
+//!
+//! ## Contract
+//!
+//! Backends must charge costs identically: `compute`/`local`/
+//! `compute_slot` add digit ops to the executing processor's clock; a
+//! send charges the payload size and one message to the *sender* and
+//! joins the receiver's clock with the sender's post-send snapshot;
+//! `barrier` joins the clocks of the given processors. Under that
+//! contract the two backends produce *bit-identical products and
+//! identical cost triples* — property-tested in
+//! `tests/theorem_properties.rs`.
+//!
+//! ## Asynchrony
+//!
+//! `compute_slot` is the operation that lets a real-threads backend
+//! actually overlap work: it names its inputs and output by slot, so the
+//! backend may run the closure on the owning processor *asynchronously*
+//! and only synchronize when some later operation reads the produced
+//! slot. The recursion leaves of COPSIM/COPK (the dominant O(w²)/
+//! O(w^lg3) digit work) go through it, which is where the threaded
+//! backend's wall-clock speedup comes from. `local` stays synchronous
+//! because its result feeds control flow (carries, flags).
+
+use super::machine::{MachineStats, ProcId, Slot};
+use super::Clock;
+use crate::bignum::{Base, Ops};
+use crate::error::Result;
+use std::ops::Range;
+
+/// A computation shipped to a processor by [`MachineApi::compute_slot`]:
+/// receives the input slots' contents and the machine base, charges its
+/// digit ops, and returns the output slot's contents.
+pub type SlotComputation = Box<dyn FnOnce(&[Vec<u32>], &Base, &mut Ops) -> Vec<u32> + Send>;
+
+/// The machine-model operation surface (see module docs).
+pub trait MachineApi {
+    // ----- shape ------------------------------------------------------
+
+    /// Number of processors.
+    fn n_procs(&self) -> usize;
+    /// Per-processor memory capacity `M` in words.
+    fn mem_cap(&self) -> u64;
+    /// Digit base.
+    fn base(&self) -> Base;
+
+    // ----- memory ledger ---------------------------------------------
+
+    /// Allocate `data` in `p`'s local memory, returning a slot handle.
+    /// The cost-model backend fails eagerly when the capacity `M` would
+    /// be exceeded; asynchronous backends may defer the report (the
+    /// overflow then surfaces at the next synchronizing operation or at
+    /// finish time).
+    fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot>;
+
+    /// Allocate a single scalar word (flags, carries).
+    fn alloc_scalar(&mut self, p: ProcId, v: u32) -> Result<Slot> {
+        self.alloc(p, vec![v])
+    }
+
+    /// Free a slot.
+    fn free(&mut self, p: ProcId, slot: Slot);
+
+    /// Read a slot's contents (no cost charged; synchronizes with any
+    /// pending asynchronous work on `p`).
+    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32>;
+
+    /// Read a scalar slot.
+    fn read_scalar(&self, p: ProcId, slot: Slot) -> u32 {
+        let d = self.read(p, slot);
+        debug_assert_eq!(d.len(), 1);
+        d[0]
+    }
+
+    /// Overwrite a slot in place (same or different width; ledger
+    /// updated).
+    fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()>;
+
+    // ----- computation ------------------------------------------------
+
+    /// Charge `ops` digit operations to `p`'s clock.
+    fn compute(&mut self, p: ProcId, ops: u64);
+
+    /// Run a local computation on `p` whose digit-op count is tracked by
+    /// an [`Ops`] counter; blocks until the result is available (results
+    /// feed control flow). Executes on `p`'s thread in the threaded
+    /// backend.
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static;
+
+    /// Run a local computation on `p` from input slots to a fresh output
+    /// slot, possibly asynchronously (see module docs). When `consume`
+    /// is true the input slots are freed once their contents have been
+    /// captured, *before* the output is allocated — this mirrors the
+    /// paper's leaves, which drop their operands as the product
+    /// materializes, and keeps the ledger peak at inputs+scratch rather
+    /// than inputs+scratch+output.
+    fn compute_slot(
+        &mut self,
+        p: ProcId,
+        inputs: &[Slot],
+        consume: bool,
+        f: SlotComputation,
+    ) -> Result<Slot>;
+
+    // ----- communication ----------------------------------------------
+
+    /// Send `data` from `src` to `dst` as one message; allocates the
+    /// payload in `dst`'s memory and returns the new slot. Charged once,
+    /// to the sender; the receiver's clock joins the sender's post-send
+    /// snapshot.
+    fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot>;
+
+    /// Send a copy of an existing slot (source keeps its copy).
+    fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot>;
+
+    /// Send an existing slot and free it at the source.
+    fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot>;
+
+    /// Send a sub-range of a slot's digits (copy).
+    fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: Range<usize>,
+    ) -> Result<Slot>;
+
+    /// Synchronize a set of processors: all their clocks join.
+    fn barrier(&mut self, procs: &[ProcId]);
+
+    // ----- reporting ----------------------------------------------------
+
+    /// Critical-path cost: component-wise max over all processors.
+    fn critical(&self) -> Clock;
+
+    /// Aggregate totals (whole-machine work/words/messages).
+    fn stats(&self) -> MachineStats;
+
+    /// Peak local-memory usage over all processors (the paper's M(n,P)).
+    fn mem_peak_max(&self) -> u64;
+
+    /// Sum of per-processor peaks (the "total memory O(n)" claim).
+    fn mem_peak_total(&self) -> u64;
+
+    /// Current resident words across all processors.
+    fn mem_used_total(&self) -> u64;
+
+    /// Record a trace event (no cost). Backends may ignore it.
+    fn event(&mut self, _msg: &str) {}
+}

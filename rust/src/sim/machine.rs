@@ -1,8 +1,9 @@
 //! The machine: processors, memory ledgers, message transport.
 
+use super::api::{MachineApi, SlotComputation};
 use super::Clock;
 use crate::bignum::{Base, Ops};
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 use std::collections::HashMap;
 
 /// Processor identifier: index into the machine's processor table.
@@ -62,8 +63,10 @@ pub struct Machine {
     pub base: Base,
     next_slot: Slot,
     pub stats: MachineStats,
-    /// When true, allocation failures abort with a context message
-    /// instead of returning Err (handy under tests). Default false.
+    /// When true, messages passed to [`Machine::event`] are recorded in
+    /// `trace_log` (retrievable via [`Machine::trace_log`]). The flag
+    /// only gates that recording; it does not change error behaviour —
+    /// allocation failures return `Err` either way. Default false.
     pub trace: bool,
     trace_log: Vec<String>,
 }
@@ -298,6 +301,110 @@ impl Machine {
 
     pub fn trace_log(&self) -> &[String] {
         &self.trace_log
+    }
+}
+
+/// The cost-model execution engine: [`Machine`]'s inherent operations
+/// *are* the [`MachineApi`] contract; this impl adapts the borrowed
+/// return types (`read`) and runs `compute_slot` synchronously in
+/// program order, which is exactly the deterministic reference
+/// semantics the threaded backend is property-tested against.
+impl MachineApi for Machine {
+    fn n_procs(&self) -> usize {
+        Machine::n_procs(self)
+    }
+    fn mem_cap(&self) -> u64 {
+        Machine::mem_cap(self)
+    }
+    fn base(&self) -> Base {
+        self.base
+    }
+
+    fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
+        Machine::alloc(self, p, data)
+    }
+    fn free(&mut self, p: ProcId, slot: Slot) {
+        Machine::free(self, p, slot);
+    }
+    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32> {
+        Machine::read(self, p, slot).to_vec()
+    }
+    fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
+        Machine::replace(self, p, slot, data)
+    }
+
+    fn compute(&mut self, p: ProcId, ops: u64) {
+        Machine::compute(self, p, ops);
+    }
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        Machine::local(self, p, f)
+    }
+    fn compute_slot(
+        &mut self,
+        p: ProcId,
+        inputs: &[Slot],
+        consume: bool,
+        f: SlotComputation,
+    ) -> Result<Slot> {
+        let data: Vec<Vec<u32>> = inputs
+            .iter()
+            .map(|&s| Machine::read(self, p, s).to_vec())
+            .collect();
+        if consume {
+            for &s in inputs {
+                Machine::free(self, p, s);
+            }
+        }
+        let base = self.base;
+        let mut ops = Ops::default();
+        let out = f(&data, &base, &mut ops);
+        Machine::compute(self, p, ops.get());
+        Machine::alloc(self, p, out)
+    }
+
+    fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        Machine::send(self, src, dst, data)
+    }
+    fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        Machine::send_copy(self, src, dst, slot)
+    }
+    fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        Machine::send_move(self, src, dst, slot)
+    }
+    fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: std::ops::Range<usize>,
+    ) -> Result<Slot> {
+        Machine::send_range(self, src, dst, slot, range)
+    }
+    fn barrier(&mut self, procs: &[ProcId]) {
+        Machine::barrier(self, procs);
+    }
+
+    fn critical(&self) -> Clock {
+        Machine::critical(self)
+    }
+    fn stats(&self) -> MachineStats {
+        self.stats
+    }
+    fn mem_peak_max(&self) -> u64 {
+        Machine::mem_peak_max(self)
+    }
+    fn mem_peak_total(&self) -> u64 {
+        Machine::mem_peak_total(self)
+    }
+    fn mem_used_total(&self) -> u64 {
+        Machine::mem_used_total(self)
+    }
+    fn event(&mut self, msg: &str) {
+        Machine::event(self, msg);
     }
 }
 

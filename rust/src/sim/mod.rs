@@ -1,5 +1,8 @@
-//! Deterministic simulator of the paper's distributed-memory machine
-//! model (§2) with critical-path cost accounting (§2.2).
+//! The machine-model layer: the paper's distributed-memory machine (§2)
+//! behind the pluggable [`MachineApi`] trait, with two execution
+//! engines — the deterministic cost-model simulator ([`Machine`],
+//! critical-path accounting per §2.2) and the real-threads executor
+//! ([`ThreadedMachine`], one OS thread per processor). See DESIGN.md.
 //!
 //! ## Model
 //!
@@ -43,13 +46,17 @@
 //! usage is recorded per processor, making the paper's memory-requirement
 //! statements (e.g. Theorem 11's `12n/√P`) checkable rather than assumed.
 
+pub mod api;
 pub mod dist;
 pub mod machine;
 pub mod seq;
+pub mod threaded;
 
+pub use api::{MachineApi, SlotComputation};
 pub use dist::DistInt;
 pub use machine::{Machine, MachineStats, ProcId, Slot};
 pub use seq::Seq;
+pub use threaded::{ThreadedMachine, ThreadedReport};
 
 /// Per-processor logical clock; component-wise max is the merge operator.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

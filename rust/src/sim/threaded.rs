@@ -1,0 +1,817 @@
+//! [`ThreadedMachine`] — the real-threads execution engine.
+//!
+//! One OS thread per simulated processor. Each worker owns a
+//! per-processor arena (dense slot-indexed storage replacing the cost
+//! model's `HashMap` store), its memory ledger, and its logical
+//! [`Clock`]; processors are connected point-to-point by `std::sync::mpsc`
+//! channels whose messages carry the payload digits *and* the sender's
+//! post-send clock snapshot — the same cost semantics as the cost-model
+//! backend, so the two engines produce identical products and identical
+//! cost triples (property-tested in `tests/theorem_properties.rs`).
+//!
+//! ## Execution model
+//!
+//! The algorithm runs on the host thread and issues commands through
+//! [`MachineApi`]; each command is enqueued on the owning processor's
+//! command channel and the workers drain their queues in program order.
+//! Most commands are fire-and-forget (alloc/free/send/recv/
+//! `compute_slot`), so independent processors genuinely overlap — in
+//! particular the recursion leaves dispatched via `compute_slot`, which
+//! dominate the digit work. Only `read` and `local` block the host,
+//! because their results feed control flow.
+//!
+//! ## Why this cannot deadlock
+//!
+//! A receive executed by worker `d` blocks on the `(s → d)` channel
+//! until worker `s` executes the matching send. Matching send/recv
+//! command pairs are enqueued by the single host thread at the same
+//! program point, so command order across all queues is consistent with
+//! one global program order; a worker can only wait on a message whose
+//! send command sits at an *earlier* program point in another queue,
+//! and queue prefixes always drain, so every wait is eventually
+//! satisfied.
+//!
+//! ## Memory-cap semantics
+//!
+//! The cost model fails an over-cap `alloc` eagerly. Workers execute
+//! asynchronously, so they instead record the first overflow and keep
+//! going (the run's products remain correct — the ledger is
+//! accounting, not storage); the error surfaces from
+//! [`ThreadedMachine::finish`] or [`ThreadedMachine::take_error`].
+//! Memory-*bound* checking therefore belongs to the cost-model engine;
+//! the threaded engine is for wall-clock execution.
+
+use super::api::{MachineApi, SlotComputation};
+use super::machine::{MachineStats, ProcId, Slot};
+use super::Clock;
+use crate::bignum::{Base, Ops};
+use crate::error::{bail, Result};
+use std::any::Any;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A point-to-point message: payload digits + sender clock snapshot.
+type NetMsg = (Vec<u32>, Clock);
+
+/// Payload source for a send command executed by the sending worker.
+enum Payload {
+    /// Data shipped from the host (already materialized).
+    Owned(Vec<u32>),
+    /// Data taken from the sender's own arena, optionally a sub-range,
+    /// optionally freeing the slot afterwards (send_copy / send_move /
+    /// send_range run entirely worker-side, no host synchronization).
+    FromSlot {
+        slot: Slot,
+        range: Option<std::ops::Range<usize>>,
+        free_after: bool,
+    },
+}
+
+/// Rendezvous state for one barrier call.
+struct BarrierState {
+    expected: usize,
+    state: Mutex<(usize, Clock)>,
+    cv: Condvar,
+}
+
+/// Commands processed by a worker in program order.
+enum Cmd {
+    Alloc {
+        slot: Slot,
+        data: Vec<u32>,
+    },
+    Free {
+        slot: Slot,
+    },
+    Replace {
+        slot: Slot,
+        data: Vec<u32>,
+    },
+    Read {
+        slot: Slot,
+        reply: Sender<Vec<u32>>,
+    },
+    Compute {
+        ops: u64,
+    },
+    Local {
+        f: Box<dyn FnOnce(&Base, &mut Ops) -> Box<dyn Any + Send> + Send>,
+        reply: Sender<Box<dyn Any + Send>>,
+    },
+    ComputeSlot {
+        out: Slot,
+        inputs: Vec<Slot>,
+        consume: bool,
+        f: SlotComputation,
+    },
+    Send {
+        dst: ProcId,
+        payload: Payload,
+    },
+    Recv {
+        src: ProcId,
+        slot: Slot,
+    },
+    Barrier {
+        state: Arc<BarrierState>,
+    },
+    Query {
+        reply: Sender<WorkerSnapshot>,
+    },
+}
+
+/// Point-in-time view of one worker, returned by `Query`.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerSnapshot {
+    pub clock: Clock,
+    pub mem_used: u64,
+    pub mem_peak: u64,
+    pub total_ops: u64,
+    pub sent_words: u64,
+    pub sent_msgs: u64,
+    /// Time spent executing digit work (`local`/`compute_slot`).
+    pub busy: Duration,
+    pub error: Option<String>,
+}
+
+/// Final report from [`ThreadedMachine::finish`].
+#[derive(Clone, Debug)]
+pub struct ThreadedReport {
+    /// Wall-clock from machine construction to finish.
+    pub wall: Duration,
+    /// Critical-path cost (identical to the cost-model engine's).
+    pub critical: Clock,
+    pub stats: MachineStats,
+    pub mem_peak_max: u64,
+    pub mem_peak_total: u64,
+    /// Per-processor busy time (digit work only) — utilization evidence.
+    pub busy: Vec<Duration>,
+}
+
+/// One worker's private state: the per-processor arena and ledgers.
+struct Worker {
+    pid: ProcId,
+    base: Base,
+    mem_cap: u64,
+    /// Dense arena: the handle assigns per-processor sequential slot
+    /// ids, so `slot as usize` indexes directly.
+    arena: Vec<Option<Vec<u32>>>,
+    clock: Clock,
+    mem_used: u64,
+    mem_peak: u64,
+    total_ops: u64,
+    sent_words: u64,
+    sent_msgs: u64,
+    busy: Duration,
+    error: Option<String>,
+    /// Outgoing channels, indexed by destination (None on the diagonal).
+    net_tx: Vec<Option<Sender<NetMsg>>>,
+    /// Incoming channels, indexed by source (None on the diagonal).
+    net_rx: Vec<Option<Receiver<NetMsg>>>,
+}
+
+impl Worker {
+    fn fail(&mut self, msg: String) {
+        if self.error.is_none() {
+            self.error = Some(msg);
+        }
+    }
+
+    fn charge_alloc(&mut self, words: u64) {
+        if self.mem_used + words > self.mem_cap {
+            self.fail(format!(
+                "processor {}: local memory exceeded (used {} + {} > cap {})",
+                self.pid, self.mem_used, words, self.mem_cap
+            ));
+        }
+        self.mem_used += words;
+        self.mem_peak = self.mem_peak.max(self.mem_used);
+    }
+
+    fn store(&mut self, slot: Slot, data: Vec<u32>) {
+        self.charge_alloc(data.len() as u64);
+        let idx = slot as usize;
+        if idx >= self.arena.len() {
+            self.arena.resize_with(idx + 1, || None);
+        }
+        debug_assert!(self.arena[idx].is_none(), "slot {slot} already in use");
+        self.arena[idx] = Some(data);
+    }
+
+    fn take(&mut self, slot: Slot) -> Vec<u32> {
+        let data = self
+            .arena
+            .get_mut(slot as usize)
+            .and_then(Option::take)
+            .unwrap_or_else(|| panic!("processor {}: free of unknown slot {slot}", self.pid));
+        self.mem_used -= data.len() as u64;
+        // Slot ids are handle-assigned and never reused, so reclaim the
+        // trailing run of freed entries to keep the arena's footprint
+        // proportional to *live* slots (allocation patterns are largely
+        // LIFO) rather than to the total historical allocation count.
+        while matches!(self.arena.last(), Some(None)) {
+            self.arena.pop();
+        }
+        data
+    }
+
+    fn get(&self, slot: Slot) -> &Vec<u32> {
+        self.arena
+            .get(slot as usize)
+            .and_then(Option::as_ref)
+            .unwrap_or_else(|| panic!("processor {}: read of unknown slot {slot}", self.pid))
+    }
+
+    fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            clock: self.clock,
+            mem_used: self.mem_used,
+            mem_peak: self.mem_peak,
+            total_ops: self.total_ops,
+            sent_words: self.sent_words,
+            sent_msgs: self.sent_msgs,
+            busy: self.busy,
+            error: self.error.clone(),
+        }
+    }
+
+    fn run(mut self, rx: Receiver<Cmd>) {
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Cmd::Alloc { slot, data } => self.store(slot, data),
+                Cmd::Free { slot } => {
+                    self.take(slot);
+                }
+                Cmd::Replace { slot, data } => {
+                    let old = self.take(slot);
+                    drop(old);
+                    self.store(slot, data);
+                }
+                Cmd::Read { slot, reply } => {
+                    let _ = reply.send(self.get(slot).clone());
+                }
+                Cmd::Compute { ops } => {
+                    self.clock.ops += ops;
+                    self.total_ops += ops;
+                }
+                Cmd::Local { f, reply } => {
+                    let t0 = Instant::now();
+                    let mut ops = Ops::default();
+                    let out = f(&self.base, &mut ops);
+                    self.busy += t0.elapsed();
+                    self.clock.ops += ops.get();
+                    self.total_ops += ops.get();
+                    let _ = reply.send(out);
+                }
+                Cmd::ComputeSlot {
+                    out,
+                    inputs,
+                    consume,
+                    f,
+                } => {
+                    // Consumed inputs are taken (moved) rather than
+                    // cloned — same ledger sequence (free inputs, then
+                    // alloc output) without copying every leaf operand.
+                    let data: Vec<Vec<u32>> = if consume {
+                        inputs.iter().map(|&s| self.take(s)).collect()
+                    } else {
+                        inputs.iter().map(|&s| self.get(s).clone()).collect()
+                    };
+                    let t0 = Instant::now();
+                    let mut ops = Ops::default();
+                    let produced = f(&data, &self.base, &mut ops);
+                    self.busy += t0.elapsed();
+                    self.clock.ops += ops.get();
+                    self.total_ops += ops.get();
+                    self.store(out, produced);
+                }
+                Cmd::Send { dst, payload } => {
+                    let data = match payload {
+                        Payload::Owned(d) => d,
+                        Payload::FromSlot {
+                            slot,
+                            range,
+                            free_after,
+                        } => {
+                            if free_after {
+                                let d = self.take(slot);
+                                match range {
+                                    Some(r) => d[r].to_vec(),
+                                    None => d,
+                                }
+                            } else {
+                                let d = self.get(slot);
+                                match range {
+                                    Some(r) => d[r].to_vec(),
+                                    None => d.clone(),
+                                }
+                            }
+                        }
+                    };
+                    self.clock.words += data.len() as u64;
+                    self.clock.msgs += 1;
+                    self.sent_words += data.len() as u64;
+                    self.sent_msgs += 1;
+                    let snapshot = self.clock;
+                    if let Some(tx) = &self.net_tx[dst] {
+                        // A closed peer means the machine is shutting
+                        // down; dropping the message is then harmless.
+                        let _ = tx.send((data, snapshot));
+                    }
+                }
+                Cmd::Recv { src, slot } => {
+                    let chan = self.net_rx[src]
+                        .as_ref()
+                        .expect("recv from self is a local operation");
+                    match chan.recv() {
+                        Ok((data, snapshot)) => {
+                            self.store(slot, data);
+                            self.clock = self.clock.join(&snapshot);
+                        }
+                        Err(_) => self.fail(format!(
+                            "processor {}: peer {src} hung up mid-message",
+                            self.pid
+                        )),
+                    }
+                }
+                Cmd::Barrier { state } => {
+                    let mut g = state.state.lock().unwrap();
+                    g.0 += 1;
+                    g.1 = g.1.join(&self.clock);
+                    if g.0 == state.expected {
+                        state.cv.notify_all();
+                    } else {
+                        while g.0 < state.expected {
+                            g = state.cv.wait(g).unwrap();
+                        }
+                    }
+                    let joined = g.1;
+                    drop(g);
+                    self.clock = joined;
+                }
+                Cmd::Query { reply } => {
+                    let _ = reply.send(self.snapshot());
+                }
+            }
+        }
+    }
+}
+
+/// The real-threads execution engine (see module docs).
+pub struct ThreadedMachine {
+    base: Base,
+    mem_cap: u64,
+    /// Per-processor next slot id (dense arena indices).
+    next_slot: Vec<Slot>,
+    cmd_txs: Vec<Sender<Cmd>>,
+    handles: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl ThreadedMachine {
+    /// Spawn `p` worker threads, each modelling one processor with
+    /// `mem_cap` words of local memory, computing over digits of `base`.
+    pub fn new(p: usize, mem_cap: u64, base: Base) -> Self {
+        assert!(p >= 1, "need at least one processor");
+        // Point-to-point mesh: one channel per ordered pair.
+        let mut net_tx: Vec<Vec<Option<Sender<NetMsg>>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        let mut net_rx: Vec<Vec<Option<Receiver<NetMsg>>>> =
+            (0..p).map(|_| (0..p).map(|_| None).collect()).collect();
+        for s in 0..p {
+            for d in 0..p {
+                if s != d {
+                    let (tx, rx) = channel();
+                    net_tx[s][d] = Some(tx);
+                    net_rx[d][s] = Some(rx);
+                }
+            }
+        }
+        let mut cmd_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        // Pair the mesh rows with their workers (reverse order so
+        // remove() is O(1) from the back without index shifting).
+        let mut tx_rows: Vec<_> = net_tx.into_iter().collect();
+        let mut rx_rows: Vec<_> = net_rx.into_iter().collect();
+        for pid in (0..p).rev() {
+            let worker = Worker {
+                pid,
+                base,
+                mem_cap,
+                arena: Vec::new(),
+                clock: Clock::default(),
+                mem_used: 0,
+                mem_peak: 0,
+                total_ops: 0,
+                sent_words: 0,
+                sent_msgs: 0,
+                busy: Duration::ZERO,
+                error: None,
+                net_tx: tx_rows.pop().expect("mesh row"),
+                net_rx: rx_rows.pop().expect("mesh row"),
+            };
+            let (tx, rx) = channel();
+            cmd_txs.push(tx);
+            handles.push(std::thread::spawn(move || worker.run(rx)));
+        }
+        cmd_txs.reverse();
+        handles.reverse();
+        ThreadedMachine {
+            base,
+            mem_cap,
+            next_slot: vec![1; p],
+            cmd_txs,
+            handles,
+            started: Instant::now(),
+        }
+    }
+
+    /// Effectively unbounded local memories (MI execution mode).
+    pub fn unbounded(p: usize, base: Base) -> Self {
+        ThreadedMachine::new(p, u64::MAX / 2, base)
+    }
+
+    fn cmd(&self, p: ProcId, c: Cmd) {
+        self.cmd_txs[p].send(c).expect("worker thread died");
+    }
+
+    fn fresh_slot(&mut self, p: ProcId) -> Slot {
+        let s = self.next_slot[p];
+        self.next_slot[p] += 1;
+        s
+    }
+
+    /// Blocking snapshot of one worker (drains its queue first, so the
+    /// snapshot reflects every operation issued before this call).
+    pub fn snapshot(&self, p: ProcId) -> WorkerSnapshot {
+        let (tx, rx) = channel();
+        self.cmd(p, Cmd::Query { reply: tx });
+        rx.recv().expect("worker thread died")
+    }
+
+    fn snapshot_all(&self) -> Vec<WorkerSnapshot> {
+        (0..self.cmd_txs.len()).map(|p| self.snapshot(p)).collect()
+    }
+
+    /// First recorded worker error (memory overflow, peer loss), if any.
+    pub fn take_error(&self) -> Option<String> {
+        self.snapshot_all().into_iter().find_map(|s| s.error)
+    }
+
+    /// Drain all queues, join the worker threads, and report. Consumes
+    /// the engine's usefulness: further [`MachineApi`] calls panic.
+    pub fn finish(&mut self) -> Result<ThreadedReport> {
+        let snaps = self.snapshot_all();
+        self.cmd_txs.clear(); // close the queues
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let wall = self.started.elapsed();
+        if let Some(e) = snaps.iter().find_map(|s| s.error.clone()) {
+            bail!("threaded engine: {e}");
+        }
+        let mut critical = Clock::default();
+        let mut stats = MachineStats::default();
+        let mut mem_peak_max = 0;
+        let mut mem_peak_total = 0;
+        let mut busy = Vec::with_capacity(snaps.len());
+        for s in &snaps {
+            critical = critical.join(&s.clock);
+            stats.total_ops += s.total_ops;
+            stats.total_words += s.sent_words;
+            stats.total_msgs += s.sent_msgs;
+            mem_peak_max = mem_peak_max.max(s.mem_peak);
+            mem_peak_total += s.mem_peak;
+            busy.push(s.busy);
+        }
+        Ok(ThreadedReport {
+            wall,
+            critical,
+            stats,
+            mem_peak_max,
+            mem_peak_total,
+            busy,
+        })
+    }
+}
+
+impl Drop for ThreadedMachine {
+    fn drop(&mut self) {
+        self.cmd_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl MachineApi for ThreadedMachine {
+    fn n_procs(&self) -> usize {
+        self.cmd_txs.len()
+    }
+    fn mem_cap(&self) -> u64 {
+        self.mem_cap
+    }
+    fn base(&self) -> Base {
+        self.base
+    }
+
+    fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
+        let slot = self.fresh_slot(p);
+        self.cmd(p, Cmd::Alloc { slot, data });
+        Ok(slot)
+    }
+    fn free(&mut self, p: ProcId, slot: Slot) {
+        self.cmd(p, Cmd::Free { slot });
+    }
+    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32> {
+        let (tx, rx) = channel();
+        self.cmd(p, Cmd::Read { slot, reply: tx });
+        rx.recv().expect("worker thread died")
+    }
+    fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
+        self.cmd(p, Cmd::Replace { slot, data });
+        Ok(())
+    }
+
+    fn compute(&mut self, p: ProcId, ops: u64) {
+        self.cmd(p, Cmd::Compute { ops });
+    }
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let boxed = Box::new(move |base: &Base, ops: &mut Ops| -> Box<dyn Any + Send> {
+            Box::new(f(base, ops))
+        });
+        self.cmd(p, Cmd::Local { f: boxed, reply: tx });
+        let out = rx.recv().expect("worker thread died");
+        *out.downcast::<R>().expect("local closure result type")
+    }
+    fn compute_slot(
+        &mut self,
+        p: ProcId,
+        inputs: &[Slot],
+        consume: bool,
+        f: SlotComputation,
+    ) -> Result<Slot> {
+        let out = self.fresh_slot(p);
+        self.cmd(
+            p,
+            Cmd::ComputeSlot {
+                out,
+                inputs: inputs.to_vec(),
+                consume,
+                f,
+            },
+        );
+        Ok(out)
+    }
+
+    fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        let slot = self.fresh_slot(dst);
+        self.cmd(
+            src,
+            Cmd::Send {
+                dst,
+                payload: Payload::Owned(data),
+            },
+        );
+        self.cmd(dst, Cmd::Recv { src, slot });
+        Ok(slot)
+    }
+    fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        let out = self.fresh_slot(dst);
+        self.cmd(
+            src,
+            Cmd::Send {
+                dst,
+                payload: Payload::FromSlot {
+                    slot,
+                    range: None,
+                    free_after: false,
+                },
+            },
+        );
+        self.cmd(dst, Cmd::Recv { src, slot: out });
+        Ok(out)
+    }
+    fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        let out = self.fresh_slot(dst);
+        self.cmd(
+            src,
+            Cmd::Send {
+                dst,
+                payload: Payload::FromSlot {
+                    slot,
+                    range: None,
+                    free_after: true,
+                },
+            },
+        );
+        self.cmd(dst, Cmd::Recv { src, slot: out });
+        Ok(out)
+    }
+    fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: std::ops::Range<usize>,
+    ) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        let out = self.fresh_slot(dst);
+        self.cmd(
+            src,
+            Cmd::Send {
+                dst,
+                payload: Payload::FromSlot {
+                    slot,
+                    range: Some(range),
+                    free_after: false,
+                },
+            },
+        );
+        self.cmd(dst, Cmd::Recv { src, slot: out });
+        Ok(out)
+    }
+    fn barrier(&mut self, procs: &[ProcId]) {
+        if procs.len() <= 1 {
+            return;
+        }
+        let state = Arc::new(BarrierState {
+            expected: procs.len(),
+            state: Mutex::new((0, Clock::default())),
+            cv: Condvar::new(),
+        });
+        for &p in procs {
+            self.cmd(
+                p,
+                Cmd::Barrier {
+                    state: Arc::clone(&state),
+                },
+            );
+        }
+    }
+
+    fn critical(&self) -> Clock {
+        self.snapshot_all()
+            .iter()
+            .fold(Clock::default(), |acc, s| acc.join(&s.clock))
+    }
+    fn stats(&self) -> MachineStats {
+        let mut st = MachineStats::default();
+        for s in self.snapshot_all() {
+            st.total_ops += s.total_ops;
+            st.total_words += s.sent_words;
+            st.total_msgs += s.sent_msgs;
+        }
+        st
+    }
+    fn mem_peak_max(&self) -> u64 {
+        self.snapshot_all().iter().map(|s| s.mem_peak).max().unwrap_or(0)
+    }
+    fn mem_peak_total(&self) -> u64 {
+        self.snapshot_all().iter().map(|s| s.mem_peak).sum()
+    }
+    fn mem_used_total(&self) -> u64 {
+        self.snapshot_all().iter().map(|s| s.mem_used).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(p: usize) -> ThreadedMachine {
+        ThreadedMachine::unbounded(p, Base::new(16))
+    }
+
+    #[test]
+    fn alloc_read_free_roundtrip() {
+        let mut m = mk(2);
+        let s = m.alloc(0, vec![1, 2, 3]).unwrap();
+        assert_eq!(m.read(0, s), vec![1, 2, 3]);
+        m.free(0, s);
+        let snap = m.snapshot(0);
+        assert_eq!(snap.mem_used, 0);
+        assert_eq!(snap.mem_peak, 3);
+    }
+
+    #[test]
+    fn send_matches_cost_model_semantics() {
+        let mut m = mk(2);
+        m.compute(0, 10);
+        let s = m.send(0, 1, vec![7, 8]).unwrap();
+        assert_eq!(m.read(1, s), vec![7, 8]);
+        let c0 = m.snapshot(0).clock;
+        let c1 = m.snapshot(1).clock;
+        assert_eq!(c0, Clock { ops: 10, words: 2, msgs: 1 });
+        assert_eq!(c1, Clock { ops: 10, words: 2, msgs: 1 });
+        let report = m.finish().unwrap();
+        assert_eq!(report.stats.total_words, 2);
+        assert_eq!(report.stats.total_msgs, 1);
+    }
+
+    #[test]
+    fn local_runs_on_worker_and_charges() {
+        let mut m = mk(1);
+        let v = m.local(0, |base, ops| {
+            ops.charge(42);
+            base.s()
+        });
+        assert_eq!(v, 65536);
+        assert_eq!(m.snapshot(0).clock.ops, 42);
+    }
+
+    #[test]
+    fn compute_slot_is_asynchronous_but_ordered() {
+        let mut m = mk(2);
+        let a = m.alloc(0, vec![2, 3]).unwrap();
+        let out = m
+            .compute_slot(
+                0,
+                &[a],
+                true,
+                Box::new(|inputs, _base, ops| {
+                    ops.charge(inputs[0].len() as u64);
+                    inputs[0].iter().map(|d| d * 10).collect()
+                }),
+            )
+            .unwrap();
+        // The read synchronizes with the pending computation.
+        assert_eq!(m.read(0, out), vec![20, 30]);
+        let snap = m.snapshot(0);
+        assert_eq!(snap.clock.ops, 2);
+        assert_eq!(snap.mem_used, 2, "input consumed, output resident");
+    }
+
+    #[test]
+    fn send_move_frees_source_worker_side() {
+        let mut m = mk(2);
+        let s = m.alloc(0, vec![1, 2]).unwrap();
+        let d = m.send_move(0, 1, s).unwrap();
+        assert_eq!(m.read(1, d), vec![1, 2]);
+        assert_eq!(m.snapshot(0).mem_used, 0);
+    }
+
+    #[test]
+    fn barrier_joins_clocks() {
+        let mut m = mk(3);
+        m.compute(0, 5);
+        m.compute(1, 9);
+        m.barrier(&[0, 1, 2]);
+        assert_eq!(m.snapshot(2).clock.ops, 9);
+    }
+
+    #[test]
+    fn memory_overflow_surfaces_at_finish() {
+        let mut m = ThreadedMachine::new(1, 4, Base::new(16));
+        let _a = m.alloc(0, vec![0; 3]).unwrap();
+        let _b = m.alloc(0, vec![0; 3]).unwrap(); // over cap, deferred
+        assert!(m.finish().is_err());
+    }
+
+    #[test]
+    fn parallel_compute_slots_overlap() {
+        // Two slow leaves on different processors must overlap: the
+        // wall-clock of the pair is well under the sum of both. Only
+        // meaningful with at least two cores.
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores < 2 {
+            eprintln!("skipping: only {cores} core(s) available");
+            return;
+        }
+        let mut m = mk(2);
+        let work = |_: &[Vec<u32>], base: &Base, ops: &mut Ops| -> Vec<u32> {
+            let mut acc = 1u64;
+            for i in 0..4_000_000u64 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            ops.charge(1);
+            vec![(acc & base.mask()) as u32]
+        };
+        let a0 = m.alloc(0, vec![1]).unwrap();
+        let a1 = m.alloc(1, vec![1]).unwrap();
+        let t0 = Instant::now();
+        let o0 = m.compute_slot(0, &[a0], true, Box::new(work)).unwrap();
+        let o1 = m.compute_slot(1, &[a1], true, Box::new(work)).unwrap();
+        let _ = m.read(0, o0);
+        let _ = m.read(1, o1);
+        let wall = t0.elapsed();
+        let report = m.finish().unwrap();
+        let serial: Duration = report.busy.iter().sum();
+        assert!(
+            wall < serial,
+            "no overlap: wall {wall:?} >= serial busy {serial:?}"
+        );
+    }
+}

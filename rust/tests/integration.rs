@@ -125,7 +125,13 @@ fn memory_exhaustion_fails_cleanly_not_wrongly() {
     let b = rng.digits(n, 16);
     let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
     let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-    let res = copmul::algorithms::copsim(&mut m, &seq, da, db, &SchoolLeaf);
+    let res = copmul::algorithms::copsim(
+        &mut m,
+        &seq,
+        da,
+        db,
+        &copmul::algorithms::leaf_ref(SchoolLeaf),
+    );
     assert!(res.is_err(), "expected a memory/width error");
 }
 

@@ -2,12 +2,12 @@
 //! (n, P, M) configurations. These are the "theorems as executable
 //! specifications" layer on top of the per-module unit tests.
 
-use copmul::algorithms::leaf::{SchoolLeaf, SkimLeaf, SlimLeaf};
+use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf, SlimLeaf};
 use copmul::algorithms::{copk_mi, copsim, copsim_mi};
 use copmul::bignum::{mul, Base, Ops};
 use copmul::prop_assert;
 use copmul::prop_assert_eq;
-use copmul::sim::{DistInt, Machine, Seq};
+use copmul::sim::{DistInt, Machine, MachineApi, Seq, ThreadedMachine};
 use copmul::theory;
 use copmul::util::prop::check;
 use copmul::util::Rng;
@@ -31,7 +31,7 @@ fn prop_copsim_mi_all_theorem11_invariants() {
         let seq = Seq::range(p);
         let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
-        let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf)
+        let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf))
             .map_err(|e| format!("memory bound violated: {e}"))?;
         // Correctness.
         let mut ops = Ops::default();
@@ -66,7 +66,7 @@ fn prop_copk_mi_theorem14_invariants() {
         let seq = Seq::range(p);
         let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
-        let c = copk_mi(&mut m, &seq, da, db, &SkimLeaf)
+        let c = copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf))
             .map_err(|e| format!("memory bound violated: {e}"))?;
         let mut ops = Ops::default();
         let want = mul::mul_school(&a, &b, base(), &mut ops);
@@ -96,13 +96,13 @@ fn prop_dfs_and_mi_agree() {
         let mut m1 = Machine::unbounded(p, base());
         let da = DistInt::scatter(&mut m1, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m1, &seq, &b, n / p).unwrap();
-        let c1 = copsim_mi(&mut m1, &seq, da, db, &SchoolLeaf).unwrap();
+        let c1 = copsim_mi(&mut m1, &seq, da, db, &leaf_ref(SchoolLeaf)).unwrap();
 
         let cap = (80 * n / p) as u64;
         let mut m2 = Machine::new(p, cap, base());
         let da = DistInt::scatter(&mut m2, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m2, &seq, &b, n / p).unwrap();
-        let c2 = copsim(&mut m2, &seq, da, db, &SchoolLeaf)
+        let c2 = copsim(&mut m2, &seq, da, db, &leaf_ref(SchoolLeaf))
             .map_err(|e| format!("{e}"))?;
 
         prop_assert_eq!(c1.gather(&m1), c2.gather(&m2));
@@ -132,7 +132,7 @@ fn prop_determinism() {
             let seq = Seq::range(p);
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-            let c = copsim_mi(&mut m, &seq, da, db, &SlimLeaf).unwrap();
+            let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
             (c.gather(&m), m.critical())
         };
         let (c1, k1) = run();
@@ -169,8 +169,8 @@ fn prop_edge_operands() {
                 let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
                 let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
                 let c = match scheme {
-                    "copsim" => copsim_mi(&mut m, &seq, da, db, &SlimLeaf).unwrap(),
-                    _ => copk_mi(&mut m, &seq, da, db, &SkimLeaf).unwrap(),
+                    "copsim" => copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap(),
+                    _ => copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap(),
                 };
                 assert_eq!(c.gather(&m), want, "pattern ({i},{j}) scheme {scheme}");
             }
@@ -193,7 +193,7 @@ fn prop_total_memory_linear_in_n() {
         let b = rng.digits(n, 16);
         let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
-        copsim(&mut m, &seq, da, db, &SchoolLeaf).unwrap();
+        copsim(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf)).unwrap();
         totals.push(m.mem_peak_total() as f64 / n as f64);
     }
     let (mn, mx) = totals
@@ -203,4 +203,111 @@ fn prop_total_memory_linear_in_n() {
         mx / mn < 3.0,
         "total-memory/n not flat across n: {totals:?}"
     );
+}
+
+// ----- execution-engine equivalence (MachineApi contract) -------------
+
+/// Run one scheme on both engines and return (product, cost) per engine
+/// plus the bignum reference product.
+fn run_both_engines(
+    scheme: &str,
+    p: usize,
+    n: usize,
+    a: &[u32],
+    b: &[u32],
+) -> ((Vec<u32>, copmul::Clock), (Vec<u32>, copmul::Clock), Vec<u32>) {
+    let seq = Seq::range(p);
+    let w = n / p;
+
+    let mut sim = Machine::unbounded(p, base());
+    let da = DistInt::scatter(&mut sim, &seq, a, w).unwrap();
+    let db = DistInt::scatter(&mut sim, &seq, b, w).unwrap();
+    let c = match scheme {
+        "copsim" => copsim_mi(&mut sim, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap(),
+        _ => copk_mi(&mut sim, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap(),
+    };
+    let sim_out = (c.gather(&sim), sim.critical());
+
+    let mut thr = ThreadedMachine::unbounded(p, base());
+    let da = DistInt::scatter(&mut thr, &seq, a, w).unwrap();
+    let db = DistInt::scatter(&mut thr, &seq, b, w).unwrap();
+    let c = match scheme {
+        "copsim" => copsim_mi(&mut thr, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap(),
+        _ => copk_mi(&mut thr, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap(),
+    };
+    let thr_out = (c.gather(&thr), MachineApi::critical(&thr));
+    thr.finish().expect("threaded engine reported an error");
+
+    let mut ops = Ops::default();
+    let reference = mul::mul_school(a, b, base(), &mut ops);
+    (sim_out, thr_out, reference)
+}
+
+#[test]
+fn prop_engines_bit_identical_copsim() {
+    // For random inputs and P ∈ {4, 16}, the cost-model and threaded
+    // backends must produce bit-identical products, identical cost
+    // triples, and both must match the bignum reference.
+    check("engines-equivalence-copsim", 8, |rng| {
+        let p = [4usize, 16][rng.below(2) as usize];
+        let w = 1usize << rng.range(2, 5);
+        let n = p * w;
+        let (a, b) = random_inputs(rng, n);
+        let ((sp, sc), (tp, tc), reference) = run_both_engines("copsim", p, n, &a, &b);
+        prop_assert_eq!(&sp, &reference);
+        prop_assert_eq!(&tp, &reference);
+        prop_assert_eq!(sp, tp);
+        prop_assert_eq!(sc, tc);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engines_bit_identical_copk() {
+    check("engines-equivalence-copk", 8, |rng| {
+        let p = [4usize, 12][rng.below(2) as usize];
+        let w = 4usize << rng.range(0, 2);
+        let n = p * w;
+        let (a, b) = random_inputs(rng, n);
+        let ((sp, sc), (tp, tc), reference) = run_both_engines("copk", p, n, &a, &b);
+        prop_assert_eq!(&sp, &reference);
+        prop_assert_eq!(&tp, &reference);
+        prop_assert_eq!(sp, tp);
+        prop_assert_eq!(sc, tc);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engines_agree_on_primitives() {
+    // SUM and DIFF drive `local` (blocking worker round-trips) rather
+    // than `compute_slot`; the engines must still agree exactly.
+    use copmul::primitives::{diff, sum};
+    check("engines-equivalence-primitives", 8, |rng| {
+        let p = 1usize << rng.range(0, 4);
+        let w = 1usize << rng.range(1, 4);
+        let n = p * w;
+        let (a, b) = random_inputs(rng, n);
+        let seq = Seq::range(p);
+
+        let mut sim = Machine::unbounded(p, base());
+        let da = DistInt::scatter(&mut sim, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut sim, &seq, &b, w).unwrap();
+        let (cs, vs) = sum(&mut sim, &seq, &da, &db).unwrap();
+        let (ds, fs) = diff(&mut sim, &seq, &da, &db).unwrap();
+
+        let mut thr = ThreadedMachine::unbounded(p, base());
+        let da = DistInt::scatter(&mut thr, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut thr, &seq, &b, w).unwrap();
+        let (ct, vt) = sum(&mut thr, &seq, &da, &db).unwrap();
+        let (dt, ft) = diff(&mut thr, &seq, &da, &db).unwrap();
+
+        prop_assert_eq!(cs.gather(&sim), ct.gather(&thr));
+        prop_assert_eq!(vs, vt);
+        prop_assert_eq!(ds.gather(&sim), dt.gather(&thr));
+        prop_assert_eq!(fs, ft);
+        prop_assert_eq!(sim.critical(), MachineApi::critical(&thr));
+        thr.finish().map_err(|e| format!("{e}"))?;
+        Ok(())
+    });
 }
