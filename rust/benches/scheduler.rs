@@ -1,0 +1,59 @@
+//! Bench: sharded scheduler throughput (E16 wallclock side) — serial
+//! (one shard) vs sharded execution of the same job fleet on both
+//! engines, reporting jobs/s, the throughput speedup, and the per-job
+//! critical-path cost ratio (1.00 by construction — the uniform-
+//! baseline accounting; printed so a regression is visible at bench
+//! time too).
+
+use copmul::config::EngineKind;
+use copmul::experiments::scheduler::run_fleet;
+use copmul::theory::TimeModel;
+
+fn main() {
+    println!("== scheduler bench (E16: serial vs sharded fleets) ==");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("host cores: {cores}");
+    let tm = TimeModel::default();
+    for &(engine, jobs, n) in &[
+        (EngineKind::Sim, 16usize, 1usize << 10),
+        (EngineKind::Sim, 16, 1 << 12),
+        (EngineKind::Threads, 16, 1 << 10),
+        (EngineKind::Threads, 16, 1 << 12),
+        (EngineKind::Threads, 16, 1 << 14),
+    ] {
+        let serial = match run_fleet(engine, 4, 1, jobs, n) {
+            Ok(o) => o,
+            Err(e) => {
+                println!("scheduler {engine} jobs={jobs} n={n}: serial FAILED: {e}");
+                continue;
+            }
+        };
+        let sharded = match run_fleet(engine, 16, 4, jobs, n) {
+            Ok(o) => o,
+            Err(e) => {
+                println!("scheduler {engine} jobs={jobs} n={n}: sharded FAILED: {e}");
+                continue;
+            }
+        };
+        let cost_ratio: f64 = sharded
+            .results
+            .iter()
+            .zip(serial.results.iter())
+            .map(|(h, s)| tm.time_ns(&h.cost) / tm.time_ns(&s.cost).max(1e-9))
+            .sum::<f64>()
+            / jobs as f64;
+        println!(
+            "{:28} {:24} serial={:>8.1} jobs/s sharded={:>8.1} jobs/s speedup={:.2}x \
+             peak_conc={} cost_ratio={:.2}",
+            "scheduler",
+            format!("{engine} jobs={jobs} n={n}"),
+            serial.jobs_per_s(),
+            sharded.jobs_per_s(),
+            sharded.jobs_per_s() / serial.jobs_per_s().max(1e-9),
+            sharded.peak_concurrent,
+            cost_ratio,
+        );
+    }
+}

@@ -32,7 +32,13 @@ pub fn normalized_len(digits: &[u32]) -> usize {
 /// This is the single-processor kernel of `SUMA` (§4.1): the two
 /// speculative results `C_0/u_0` and `C_1/u_1` are two calls with
 /// `carry_in` 0 and 1.
-pub fn add_with_carry(a: &[u32], b: &[u32], carry_in: u32, base: Base, ops: &mut Ops) -> (Vec<u32>, u32) {
+pub fn add_with_carry(
+    a: &[u32],
+    b: &[u32],
+    carry_in: u32,
+    base: Base,
+    ops: &mut Ops,
+) -> (Vec<u32>, u32) {
     assert_eq!(a.len(), b.len(), "fixed-width add requires equal widths");
     let s = base.s();
     let mut out = Vec::with_capacity(a.len());
@@ -55,7 +61,13 @@ pub fn add_with_carry(a: &[u32], b: &[u32], carry_in: u32, base: Base, ops: &mut
 ///
 /// Single-processor kernel of `DIFFR` (§4.3): speculative values
 /// `C_0/b_0` and `C_1/b_1` are the calls with `borrow_in` 0 and 1.
-pub fn sub_with_borrow(a: &[u32], b: &[u32], borrow_in: u32, base: Base, ops: &mut Ops) -> (Vec<u32>, u32) {
+pub fn sub_with_borrow(
+    a: &[u32],
+    b: &[u32],
+    borrow_in: u32,
+    base: Base,
+    ops: &mut Ops,
+) -> (Vec<u32>, u32) {
     assert_eq!(a.len(), b.len(), "fixed-width sub requires equal widths");
     let mut out = Vec::with_capacity(a.len());
     let mut borrow = borrow_in as i64;

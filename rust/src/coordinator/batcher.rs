@@ -11,6 +11,7 @@
 
 use crate::algorithms::leaf::LeafMultiplier;
 use crate::bignum::{Base, Ops};
+use crate::error::Result;
 use crate::runtime::artifacts::ArtifactInfo;
 use crate::runtime::leaf::{repacked_mul, split_mul8};
 use crate::runtime::XlaRuntime;
@@ -18,6 +19,34 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Backend that executes batched leaf artifacts: the PJRT runtime in
+/// production, a mock in tests (the batcher's queueing/flush/routing
+/// logic is runtime-agnostic and is unit-tested against a pure-Rust
+/// mock so the tests run without compiled artifacts).
+pub trait BatchExecutor: Send + Sync {
+    /// Artifacts available for `entry` (any order, any batch size).
+    fn artifacts(&self, entry: &str) -> Vec<ArtifactInfo>;
+
+    /// Execute `info` on row-major `batch x k` base-256 operands,
+    /// returning `batch x 2k` product digits.
+    fn execute_batch(&self, info: &ArtifactInfo, a: &[i32], b: &[i32]) -> Result<Vec<i32>>;
+}
+
+impl BatchExecutor for XlaRuntime {
+    fn artifacts(&self, entry: &str) -> Vec<ArtifactInfo> {
+        self.manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == entry)
+            .cloned()
+            .collect()
+    }
+
+    fn execute_batch(&self, info: &ArtifactInfo, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+        self.execute(info, a, b)
+    }
+}
 
 /// Result slot a waiting request parks on.
 struct Cell {
@@ -61,7 +90,7 @@ struct Bucket {
 /// A [`LeafMultiplier`] that coalesces concurrent leaf products into
 /// batched artifact executions.
 pub struct BatchingXlaLeaf {
-    rt: Arc<XlaRuntime>,
+    rt: Arc<dyn BatchExecutor>,
     buckets: Vec<Bucket>,
     max_k: usize,
     /// How long a lone request lingers for company before flushing.
@@ -70,25 +99,19 @@ pub struct BatchingXlaLeaf {
 }
 
 impl BatchingXlaLeaf {
+    /// Batch over the PJRT runtime (the production path).
+    pub fn new(rt: Arc<XlaRuntime>, entry: &str) -> Self {
+        Self::with_executor(rt, entry)
+    }
+
     /// Build one bucket per batched (`batch > 1`) artifact of `entry`,
     /// sorted by K ascending.
-    pub fn new(rt: Arc<XlaRuntime>, entry: &str) -> Self {
-        let mut infos: Vec<ArtifactInfo> = rt
-            .manifest()
-            .artifacts
-            .iter()
-            .filter(|a| a.entry == entry && a.batch > 1)
-            .cloned()
-            .collect();
+    pub fn with_executor(rt: Arc<dyn BatchExecutor>, entry: &str) -> Self {
+        let all = rt.artifacts(entry);
+        let mut infos: Vec<ArtifactInfo> = all.iter().filter(|a| a.batch > 1).cloned().collect();
         if infos.is_empty() {
             // Fall back to whatever exists (degenerates to batch = 1).
-            infos = rt
-                .manifest()
-                .artifacts
-                .iter()
-                .filter(|a| a.entry == entry)
-                .cloned()
-                .collect();
+            infos = all;
         }
         assert!(!infos.is_empty(), "no `{entry}` artifacts for batching");
         infos.sort_by_key(|a| a.k);
@@ -196,7 +219,7 @@ impl BatchingXlaLeaf {
         }
         let out = self
             .rt
-            .execute(&bucket.info, &fa, &fb)
+            .execute_batch(&bucket.info, &fa, &fb)
             .expect("batched XLA execution failed");
         self.stats.executions.fetch_add(1, Ordering::Relaxed);
         self.stats
@@ -213,11 +236,11 @@ impl BatchingXlaLeaf {
     }
 
     /// Precompile every bucket artifact (hide compile from serving).
-    pub fn warmup(&self) -> crate::error::Result<()> {
+    pub fn warmup(&self) -> Result<()> {
         for b in &self.buckets {
             let za = vec![0i32; b.info.batch * b.info.k];
             let zb = vec![0i32; b.info.batch * b.info.k];
-            self.rt.execute(&b.info, &za, &zb)?;
+            self.rt.execute_batch(&b.info, &za, &zb)?;
         }
         Ok(())
     }
@@ -257,10 +280,196 @@ mod tests {
     use crate::bignum::mul;
     use crate::runtime::DEFAULT_ARTIFACTS_DIR;
     use crate::util::Rng;
+    use std::path::PathBuf;
 
+    // ----- mock runtime: the batcher's queueing/flush/routing logic
+    // unit-tested without compiled artifacts ---------------------------
+
+    /// Pure-Rust stand-in for the PJRT runtime: one batched artifact of
+    /// configurable shape whose rows are multiplied with the schoolbook
+    /// reference in base 256 (the artifact contract).
+    struct MockRuntime {
+        batch: usize,
+        k: usize,
+        executions: AtomicU64,
+        /// Rows whose operands were entirely zero — the padding rows of
+        /// partial batches (real requests force a nonzero digit).
+        zero_rows: AtomicU64,
+    }
+
+    impl MockRuntime {
+        fn new(batch: usize, k: usize) -> Arc<Self> {
+            Arc::new(MockRuntime {
+                batch,
+                k,
+                executions: AtomicU64::new(0),
+                zero_rows: AtomicU64::new(0),
+            })
+        }
+    }
+
+    impl BatchExecutor for MockRuntime {
+        fn artifacts(&self, entry: &str) -> Vec<ArtifactInfo> {
+            vec![ArtifactInfo {
+                file: PathBuf::from("mock://school"),
+                entry: entry.to_string(),
+                batch: self.batch,
+                k: self.k,
+                base_log2: 8,
+            }]
+        }
+
+        fn execute_batch(&self, info: &ArtifactInfo, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+            assert_eq!(a.len(), info.batch * info.k, "operand A not padded to shape");
+            assert_eq!(b.len(), info.batch * info.k, "operand B not padded to shape");
+            self.executions.fetch_add(1, Ordering::Relaxed);
+            let base = Base::new(8);
+            let mut out = vec![0i32; info.batch * 2 * info.k];
+            for row in 0..info.batch {
+                let ra: Vec<u32> = a[row * info.k..(row + 1) * info.k]
+                    .iter()
+                    .map(|&d| d as u32)
+                    .collect();
+                let rb: Vec<u32> = b[row * info.k..(row + 1) * info.k]
+                    .iter()
+                    .map(|&d| d as u32)
+                    .collect();
+                if ra.iter().all(|&d| d == 0) && rb.iter().all(|&d| d == 0) {
+                    self.zero_rows.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let mut ops = Ops::default();
+                let prod = mul::mul_school(&ra, &rb, base, &mut ops);
+                for (i, &d) in prod.iter().take(2 * info.k).enumerate() {
+                    out[row * 2 * info.k + i] = d as i32;
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn mock_batcher(batch: usize, linger: Duration) -> (Arc<MockRuntime>, Arc<BatchingXlaLeaf>) {
+        let rt = MockRuntime::new(batch, 256);
+        let mut leaf =
+            BatchingXlaLeaf::with_executor(Arc::clone(&rt) as Arc<dyn BatchExecutor>, "school");
+        leaf.linger = linger;
+        (rt, Arc::new(leaf))
+    }
+
+    /// Artifact-backed batcher for the end-to-end tests below; `None`
+    /// (skip) when `artifacts/` is not built.
     fn batcher() -> Option<Arc<BatchingXlaLeaf>> {
         let rt = XlaRuntime::new(DEFAULT_ARTIFACTS_DIR).ok()?;
         Some(Arc::new(BatchingXlaLeaf::new(Arc::new(rt), "school")))
+    }
+
+    fn reference(x: &[u32], y: &[u32]) -> Vec<u32> {
+        let mut ops = Ops::default();
+        mul::mul_school(x, y, Base::new(16), &mut ops)
+    }
+
+    #[test]
+    fn mock_batch_fill_flushes_without_linger() {
+        // With linger effectively infinite, only a full batch can
+        // trigger a flush: 4 concurrent requests into a B=4 bucket must
+        // coalesce into exactly one execution.
+        // A generous linger distinguishes fill-flush (instant) from
+        // linger-flush (seconds) without risking a hung test.
+        let (rt, b) = mock_batcher(4, Duration::from_secs(5));
+        let base = Base::new(16);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(t);
+                let x = rng.digits(64, 16);
+                let y = rng.digits(64, 16);
+                let mut ops = Ops::default();
+                let got = b.mul(&x, &y, base, &mut ops);
+                assert_eq!(got, reference(&x, &y), "thread {t}");
+            }));
+        }
+        let t0 = Instant::now();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "batch-fill flush did not fire; requests waited out the linger"
+        );
+        assert_eq!(rt.executions.load(Ordering::Relaxed), 1);
+        assert_eq!(b.stats.requests.load(Ordering::Relaxed), 4);
+        assert_eq!(b.stats.batched_rows.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn mock_lone_request_flushes_after_linger() {
+        let (rt, b) = mock_batcher(8, Duration::from_micros(60));
+        let base = Base::new(16);
+        let mut rng = Rng::new(9);
+        let x = rng.digits(32, 16);
+        let y = rng.digits(32, 16);
+        let mut ops = Ops::default();
+        let got = b.mul(&x, &y, base, &mut ops);
+        assert_eq!(got, reference(&x, &y));
+        // One request, one (partial) execution — the linger timer, not
+        // batch fill, flushed it.
+        assert_eq!(rt.executions.load(Ordering::Relaxed), 1);
+        assert_eq!(b.stats.batched_rows.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn mock_partial_batch_is_zero_padded() {
+        // 3 requests into a B=8 bucket: one flush whose remaining 5 rows
+        // travel as zeros (the mock counts all-zero rows).
+        let (rt, b) = mock_batcher(8, Duration::from_millis(50));
+        let base = Base::new(16);
+        let mut handles = Vec::new();
+        for t in 0..3u64 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0x100 + t);
+                let x = rng.digits(64, 16);
+                let y = rng.digits(64, 16);
+                let mut ops = Ops::default();
+                let got = b.mul(&x, &y, base, &mut ops);
+                assert_eq!(got, reference(&x, &y), "thread {t}");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let ex = rt.executions.load(Ordering::Relaxed);
+        let zeros = rt.zero_rows.load(Ordering::Relaxed);
+        // All three coalesce when they enqueue within the linger window
+        // (the common case); even under pathological scheduling each
+        // flush is zero-padded to the full batch shape.
+        assert!(ex >= 1);
+        assert_eq!(zeros, ex * 8 - 3, "padding rows must be all-zero");
+    }
+
+    #[test]
+    fn mock_result_rows_route_back_to_their_cells() {
+        // Distinct operands per thread; every caller must receive the
+        // product of *its own* pair, not a neighbour's row.
+        let (rt, b) = mock_batcher(4, Duration::from_secs(5));
+        let base = Base::new(16);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let b = Arc::clone(&b);
+            handles.push(std::thread::spawn(move || {
+                // Constant-digit operands make cross-row mixups loud.
+                let x = vec![(t as u32) + 1; 64];
+                let y = vec![(t as u32) + 11; 64];
+                let mut ops = Ops::default();
+                let got = b.mul(&x, &y, base, &mut ops);
+                assert_eq!(got, reference(&x, &y), "row for thread {t} misrouted");
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(rt.executions.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use crate::algorithms::Algorithm;
 use crate::config::EngineKind;
-use crate::sim::Clock;
+use crate::sim::{Clock, ProcId};
 use crate::util::{copk_bfs_levels, is_copk_procs, next_pow2};
 use std::time::Duration;
 
@@ -45,7 +45,14 @@ impl JobSpec {
     /// of two are divisible by `2^levels` whenever `w >= 2^levels`)
     /// holds.
     pub fn padded_width(&self) -> usize {
-        let p = self.procs;
+        self.padded_width_for(self.procs)
+    }
+
+    /// [`JobSpec::padded_width`] for an explicit processor count: the
+    /// scheduler may run a job on a shard larger than `self.procs` (to
+    /// meet its `theory::*_mem` footprint), and the layout constraints
+    /// depend on the count that actually runs.
+    pub fn padded_width_for(&self, p: usize) -> usize {
         let len = self.a.len().max(self.b.len()).max(1);
         let mut w = next_pow2(len.div_ceil(p) as u64) as usize;
         if is_copk_procs(p as u64) {
@@ -70,10 +77,17 @@ pub struct JobResult {
     pub engine: EngineKind,
     /// Critical-path cost (identical across engines by construction).
     pub cost: Clock,
-    /// Peak per-processor memory words.
+    /// Peak per-processor memory words. For sharded execution this is
+    /// the shard's high-water mark over the shared machine's lifetime,
+    /// which may include earlier jobs that ran on the same shard.
     pub mem_peak: u64,
-    /// Host wallclock for the whole job.
+    /// Host wallclock for the whole job, submission to completion
+    /// (queue and shard waits included for scheduler jobs).
     pub wall: Duration,
+    /// Processors the job ran on: `None` for a dedicated per-job
+    /// machine (the [`super::Coordinator`] path), the shard's ids for
+    /// sharded execution (the [`super::Scheduler`] path).
+    pub shard: Option<Vec<ProcId>>,
 }
 
 #[cfg(test)]
@@ -99,5 +113,12 @@ mod tests {
         let n = j.padded_width();
         assert_eq!(n % 108, 0);
         assert!((n / 108) >= 8);
+
+        // Explicit-count variant: a larger shard re-derives the layout.
+        let j = JobSpec::new(2, vec![1; 100], vec![1; 90]);
+        assert_eq!(j.padded_width(), j.padded_width_for(j.procs));
+        let n = j.padded_width_for(16);
+        assert_eq!(n % 16, 0);
+        assert!((n / 16).is_power_of_two());
     }
 }

@@ -11,7 +11,12 @@
 //!
 //! * [`job`] — request/response types and input padding rules.
 //! * [`router`] — worker pool (std::thread; tokio is not available in
-//!   this offline build) with a shared work queue.
+//!   this offline build) with a shared work queue; one dedicated
+//!   machine per job.
+//! * [`scheduler`] — sharded multi-job scheduling: one shared machine
+//!   (either engine) carved into per-job shards sized by the paper's
+//!   memory requirements, with admission control and work-stealing of
+//!   freed shards.
 //! * [`batcher`] — dynamic batcher: concurrent leaf products from
 //!   different workers are coalesced into one batched artifact
 //!   execution (padding the batch dimension), amortizing PJRT dispatch.
@@ -19,7 +24,9 @@
 pub mod batcher;
 pub mod job;
 pub mod router;
+pub mod scheduler;
 
-pub use batcher::BatchingXlaLeaf;
+pub use batcher::{BatchExecutor, BatchingXlaLeaf};
 pub use job::{JobResult, JobSpec};
-pub use router::{Coordinator, CoordinatorConfig, CoordinatorStats};
+pub use router::{execute_on, Coordinator, CoordinatorConfig, CoordinatorStats};
+pub use scheduler::{plan_shard, Scheduler, SchedulerConfig, SchedulerStats};

@@ -47,6 +47,10 @@ pub struct CoordinatorStats {
 }
 
 impl CoordinatorStats {
+    /// Completed jobs per summed per-job wall second. Per-job walls
+    /// overlap under concurrency (and include queue wait), so this is
+    /// an inverse mean latency, NOT an elapsed-time throughput —
+    /// measure real throughput with the caller's own clock.
     pub fn throughput_jobs_per_s(&self) -> f64 {
         let jobs = self.jobs_completed.load(Ordering::Relaxed) as f64;
         let us = self.total_wall_us.load(Ordering::Relaxed) as f64;
@@ -60,10 +64,15 @@ impl CoordinatorStats {
 
 type Reply = Sender<Result<JobResult>>;
 
+/// A queued job: spec, reply channel, and the submission instant (so
+/// `JobResult::wall` spans submission to completion, matching the
+/// scheduler path's semantics).
+type Queued = (JobSpec, Reply, Instant);
+
 /// The coordinator: accepts [`JobSpec`]s, runs them on a worker pool,
 /// returns [`JobResult`]s through per-job channels.
 pub struct Coordinator {
-    tx: Option<Sender<(JobSpec, Reply)>>,
+    tx: Option<Sender<Queued>>,
     workers: Vec<JoinHandle<()>>,
     pub stats: Arc<CoordinatorStats>,
 }
@@ -72,7 +81,7 @@ impl Coordinator {
     /// Start the worker pool. `leaf` is shared by all workers (the
     /// batching XLA leaf coalesces across workers — that is the point).
     pub fn start(cfg: CoordinatorConfig, leaf: Arc<dyn LeafMultiplier + Send + Sync>) -> Self {
-        let (tx, rx) = channel::<(JobSpec, Reply)>();
+        let (tx, rx) = channel::<Queued>();
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(CoordinatorStats::default());
         let mut workers = Vec::with_capacity(cfg.workers);
@@ -86,15 +95,14 @@ impl Coordinator {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
-                let Ok((spec, reply)) = msg else { break };
-                let t0 = Instant::now();
-                let res = run_job(&cfg, &spec, &leaf);
-                match &res {
-                    Ok(_) => {
+                let Ok((spec, reply, submitted_at)) = msg else { break };
+                let mut res = run_job(&cfg, &spec, &leaf);
+                match &mut res {
+                    Ok(r) => {
+                        r.wall = submitted_at.elapsed();
                         stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
-                        stats
-                            .total_wall_us
-                            .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                        let us = r.wall.as_micros() as u64;
+                        stats.total_wall_us.fetch_add(us, Ordering::Relaxed);
                     }
                     Err(_) => {
                         stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
@@ -116,7 +124,7 @@ impl Coordinator {
         self.tx
             .as_ref()
             .expect("coordinator already shut down")
-            .send((spec, reply_tx))
+            .send((spec, reply_tx, Instant::now()))
             .expect("worker pool gone");
         reply_rx
     }
@@ -145,32 +153,38 @@ impl Drop for Coordinator {
 }
 
 /// Run the multiplication itself on any execution engine: scatter the
-/// padded operands, dispatch the scheme, gather and trim the product.
-fn execute_on<M: MachineApi>(
+/// padded operands over `seq` (any disjoint processor set — the
+/// scheduler passes shard sub-ranges of a shared machine), dispatch the
+/// scheme, gather, trim, and free the product.
+///
+/// Freeing matters on shared machines: a job must leave its shard's
+/// ledgers empty so the next job starts from a clean slate.
+pub fn execute_on<M: MachineApi>(
     machine: &mut M,
     time_model: &TimeModel,
     spec: &JobSpec,
+    seq: &Seq,
     leaf: &LeafRef,
 ) -> Result<(Vec<u32>, Algorithm)> {
-    let p = spec.procs;
-    let n = spec.padded_width();
+    let p = seq.len();
+    let n = spec.padded_width_for(p);
     let w = n / p;
-    let seq = Seq::range(p);
 
     let mut a = spec.a.clone();
     let mut b = spec.b.clone();
     a.resize(n, 0);
     b.resize(n, 0);
-    let da = DistInt::scatter(machine, &seq, &a, w)?;
-    let db = DistInt::scatter(machine, &seq, &b, w)?;
+    let da = DistInt::scatter(machine, seq, &a, w)?;
+    let db = DistInt::scatter(machine, seq, &b, w)?;
 
     let (c, algo) = match spec.algo {
-        Some(Algorithm::Copsim) => (copsim(machine, &seq, da, db, leaf)?, Algorithm::Copsim),
-        Some(Algorithm::Copk) => (copk(machine, &seq, da, db, leaf)?, Algorithm::Copk),
-        None => hybrid::hybrid_mul(machine, &seq, da, db, leaf, time_model)?,
+        Some(Algorithm::Copsim) => (copsim(machine, seq, da, db, leaf)?, Algorithm::Copsim),
+        Some(Algorithm::Copk) => (copk(machine, seq, da, db, leaf)?, Algorithm::Copk),
+        None => hybrid::hybrid_mul(machine, seq, da, db, leaf, time_model)?,
     };
 
     let mut product = c.gather(machine);
+    c.free(machine);
     let keep = normalized_len(&product).max(1);
     product.truncate(keep);
     Ok((product, algo))
@@ -180,10 +194,11 @@ fn execute_on<M: MachineApi>(
 fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<JobResult> {
     let t0 = Instant::now();
     let mem_cap = spec.mem_cap.unwrap_or(u64::MAX / 2);
+    let seq = Seq::range(spec.procs);
     match spec.engine {
         EngineKind::Sim => {
             let mut machine = Machine::new(spec.procs, mem_cap, cfg.base);
-            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, leaf)?;
+            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             Ok(JobResult {
                 id: spec.id,
                 product,
@@ -192,11 +207,12 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
                 cost: machine.critical(),
                 mem_peak: machine.mem_peak_max(),
                 wall: t0.elapsed(),
+                shard: None,
             })
         }
         EngineKind::Threads => {
             let mut machine = ThreadedMachine::new(spec.procs, mem_cap, cfg.base);
-            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, leaf)?;
+            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             let report = machine.finish()?;
             Ok(JobResult {
                 id: spec.id,
@@ -206,6 +222,7 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
                 cost: report.critical,
                 mem_peak: report.mem_peak_max,
                 wall: t0.elapsed(),
+                shard: None,
             })
         }
     }
@@ -271,10 +288,7 @@ mod tests {
             let res = rx.recv().unwrap().unwrap();
             assert_eq!(to_hex(&res.product, base), want[i], "job {i}");
         }
-        assert_eq!(
-            coord.stats.jobs_completed.load(Ordering::Relaxed),
-            24
-        );
+        assert_eq!(coord.stats.jobs_completed.load(Ordering::Relaxed), 24);
         coord.shutdown();
     }
 
@@ -320,7 +334,7 @@ mod tests {
     #[test]
     fn reports_simulated_cost_and_memory() {
         let coord = start_default();
-        let mut spec = JobSpec::new(2, vec![1; 256], vec![2; 256], );
+        let mut spec = JobSpec::new(2, vec![1; 256], vec![2; 256]);
         spec.procs = 16;
         let res = coord.submit_blocking(spec).unwrap();
         assert!(res.cost.ops > 0);

@@ -1,0 +1,835 @@
+//! Sharded multi-job scheduling over one shared machine.
+//!
+//! The paper's cost bounds are per-multiplication; a serving system runs
+//! *many* multiplications at once. Instead of building one machine per
+//! job (the [`super::Coordinator`] path), the scheduler owns a single
+//! `P`-processor machine — either execution engine — and carves it into
+//! **shards**: disjoint [`Seq`] sub-ranges sized so each job's
+//! `theory::*_mem` footprint fits the per-processor capacity `M`. Jobs
+//! stream through a queue; runners acquire shards from a free pool, run
+//! their job's scheme on the shard, and release the processors for the
+//! next job to steal. This mirrors the resource-partitioning move of
+//! communication-optimal Strassen's BFS/DFS processor splitting
+//! (Ballard et al.), applied across *independent* jobs rather than
+//! recursive subproblems.
+//!
+//! ## Exact per-job cost accounting on a shared machine
+//!
+//! Logical clocks evolve in a max-plus algebra: operations add constants
+//! to one processor's clock, and message delivery / barriers join clocks
+//! by component-wise max. Both operations commute with adding a uniform
+//! constant to every clock involved. The scheduler therefore barriers a
+//! shard to a **uniform baseline** `B` at acquisition; the job's clocks
+//! then evolve exactly as on a fresh machine shifted by `B`, and the
+//! reported cost triple `join(end clocks).since(B)` is *bit-identical*
+//! to running the job alone. `tests/engine_differential.rs` asserts
+//! this against single-job reference runs on both engines.
+//!
+//! ## Concurrency model
+//!
+//! The shared machine sits behind a mutex taken per [`MachineApi`]
+//! call. Worker threads of the threaded engine never take that mutex,
+//! so a runner blocking inside `read`/`local` (waiting for a worker to
+//! drain its queue) cannot deadlock: worker progress needs only its own
+//! command queue and its peers' — never the host lock. Shards are
+//! disjoint, so jobs exchange no messages and share no barrier, and the
+//! mutex-acquisition order provides the single global program order the
+//! threaded engine's no-deadlock argument requires.
+//!
+//! ## Admission control
+//!
+//! `submit` rejects immediately when the queue is full
+//! (`max_queue`), when no processor-count shape the job's scheme
+//! accepts fits the machine, or when even the largest shard leaves the
+//! job's theory memory footprint above `M`. A job that fails mid-run
+//! has its shard purged (every resident slot dropped) before the
+//! processors return to the pool, so one bad job cannot poison the
+//! machine for its successors.
+
+use super::job::{JobResult, JobSpec};
+use super::router::execute_on;
+use crate::algorithms::copsim::is_pow4;
+use crate::algorithms::leaf::LeafRef;
+use crate::algorithms::Algorithm;
+use crate::bignum::{Base, Ops};
+use crate::config::EngineKind;
+use crate::error::{bail, Context, Result};
+use crate::sim::{
+    Clock, Machine, MachineApi, MachineStats, ProcId, ProcView, Seq, Slot, SlotComputation,
+    ThreadedMachine,
+};
+use crate::theory::{self, TimeModel};
+use crate::util::is_copk_procs;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+// ---------------------------------------------------------------- shards
+
+/// Per-processor memory words the theory requires to run an `n`-digit
+/// product on `p` processors under the job's scheme: the MI-mode
+/// memory-requirement expressions (Theorem 11's `12n/√P`, Theorem 14's
+/// `10n/P^(log₃2)`). The hybrid dispatcher may choose either scheme, so
+/// `None` takes the max of both.
+pub fn theory_mem_footprint(n: u64, p: u64, algo: Option<Algorithm>) -> u64 {
+    match algo {
+        Some(Algorithm::Copsim) => theory::thm11_copsim_mi_mem(n, p),
+        Some(Algorithm::Copk) => theory::thm14_copk_mi_mem(n, p),
+        None => theory::thm11_copsim_mi_mem(n, p).max(theory::thm14_copk_mi_mem(n, p)),
+    }
+}
+
+/// Processor counts (ascending) the job's scheme can run on, up to the
+/// machine size: powers of four for COPSIM, `4·3^i` for COPK, the union
+/// for hybrid dispatch.
+fn shape_ladder(algo: Option<Algorithm>, total: usize) -> impl Iterator<Item = usize> {
+    (1..=total).filter(move |&s| match algo {
+        Some(Algorithm::Copsim) => is_pow4(s),
+        Some(Algorithm::Copk) => s == 1 || is_copk_procs(s as u64),
+        None => is_pow4(s) || is_copk_procs(s as u64),
+    })
+}
+
+/// Shard sizing: the smallest shape `≥ spec.procs` whose theory memory
+/// footprint fits the per-processor cap. Growing the shard *shrinks*
+/// the per-processor footprint (the paper's memory requirements fall
+/// with `P`), which is what keeps total memory O(n) per job: a job is
+/// given exactly as many processors as its footprint demands, no more.
+/// Errors when no shard of this machine can satisfy the job.
+pub fn plan_shard(spec: &JobSpec, total_procs: usize, mem_cap: u64) -> Result<usize> {
+    for p in shape_ladder(spec.algo, total_procs) {
+        if p < spec.procs {
+            continue;
+        }
+        let n = spec.padded_width_for(p) as u64;
+        if theory_mem_footprint(n, p as u64, spec.algo) <= mem_cap {
+            return Ok(p);
+        }
+    }
+    bail!(
+        "job {} not admissible: no processor shape in [{}..{}] fits its \
+         memory footprint under M = {} words/proc",
+        spec.id,
+        spec.procs,
+        total_procs,
+        mem_cap
+    )
+}
+
+// ---------------------------------------------------- the shared machine
+
+/// The engine actually executing the shared machine.
+enum EngineMachine {
+    Sim(Machine),
+    Threads(ThreadedMachine),
+}
+
+/// Dispatch one expression over whichever engine backs the guard.
+/// Arms call through `MachineApi` explicitly so `Machine`'s inherent
+/// methods (different signatures) cannot shadow the trait surface.
+macro_rules! on_engine {
+    ($g:expr, $m:ident => $e:expr) => {
+        match &mut *$g {
+            EngineMachine::Sim($m) => $e,
+            EngineMachine::Threads($m) => $e,
+        }
+    };
+}
+
+/// A job's handle onto the shared machine: every [`MachineApi`] call
+/// locks the machine for exactly that call. Runners hold one each; the
+/// shard discipline (disjoint `Seq`s) is what keeps jobs independent,
+/// not the lock — the lock only serializes the command stream, giving
+/// the threaded engine its consistent global program order.
+struct ShardView {
+    machine: Arc<Mutex<EngineMachine>>,
+}
+
+impl ShardView {
+    fn lock(&self) -> MutexGuard<'_, EngineMachine> {
+        self.machine.lock().unwrap()
+    }
+}
+
+impl MachineApi for ShardView {
+    fn n_procs(&self) -> usize {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::n_procs(m))
+    }
+    fn mem_cap(&self) -> u64 {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::mem_cap(m))
+    }
+    fn base(&self) -> Base {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::base(m))
+    }
+
+    fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::alloc(m, p, data))
+    }
+    fn free(&mut self, p: ProcId, slot: Slot) {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::free(m, p, slot))
+    }
+    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32> {
+        // Two-phase on the threaded engine: enqueue under the lock,
+        // await after releasing it — otherwise every concurrent job
+        // serializes behind this worker's queue drain. Program order
+        // is fixed at enqueue time, so the result is identical.
+        let pending = {
+            let mut g = self.lock();
+            match &mut *g {
+                EngineMachine::Sim(m) => return MachineApi::read(m, p, slot),
+                EngineMachine::Threads(m) => m.read_request(p, slot),
+            }
+        };
+        pending.recv().expect("worker thread died")
+    }
+    fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::replace(m, p, slot, data))
+    }
+
+    fn compute(&mut self, p: ProcId, ops: u64) {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::compute(m, p, ops))
+    }
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        // Two-phase, as in `read`.
+        let pending = {
+            let mut g = self.lock();
+            match &mut *g {
+                EngineMachine::Sim(m) => return MachineApi::local(m, p, f),
+                EngineMachine::Threads(m) => m.local_request::<R, F>(p, f),
+            }
+        };
+        let out = pending.recv().expect("worker thread died");
+        *out.downcast::<R>().expect("local closure result type")
+    }
+    fn compute_slot(
+        &mut self,
+        p: ProcId,
+        inputs: &[Slot],
+        consume: bool,
+        f: SlotComputation,
+    ) -> Result<Slot> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::compute_slot(m, p, inputs, consume, f))
+    }
+
+    fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::send(m, src, dst, data))
+    }
+    fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::send_copy(m, src, dst, slot))
+    }
+    fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::send_move(m, src, dst, slot))
+    }
+    fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: Range<usize>,
+    ) -> Result<Slot> {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::send_range(m, src, dst, slot, range))
+    }
+    fn barrier(&mut self, procs: &[ProcId]) {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::barrier(m, procs))
+    }
+
+    fn proc_view(&self, p: ProcId) -> ProcView {
+        // Two-phase, as in `read`.
+        let pending = {
+            let mut g = self.lock();
+            match &mut *g {
+                EngineMachine::Sim(m) => return MachineApi::proc_view(m, p),
+                EngineMachine::Threads(m) => m.snapshot_request(p),
+            }
+        };
+        let s = pending.recv().expect("worker thread died");
+        ProcView {
+            clock: s.clock,
+            mem_used: s.mem_used,
+            mem_peak: s.mem_peak,
+        }
+    }
+    fn critical(&self) -> Clock {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::critical(m))
+    }
+    fn stats(&self) -> MachineStats {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::stats(m))
+    }
+    fn mem_peak_max(&self) -> u64 {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::mem_peak_max(m))
+    }
+    fn mem_peak_total(&self) -> u64 {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::mem_peak_total(m))
+    }
+    fn mem_used_total(&self) -> u64 {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::mem_used_total(m))
+    }
+    fn purge(&mut self, p: ProcId) {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::purge(m, p))
+    }
+}
+
+// ------------------------------------------------------------- the pool
+
+/// Free processors of the shared machine plus the running-job count and
+/// the FIFO ticket counters (see [`Pool::acquire`]).
+struct PoolState {
+    free: Vec<ProcId>,
+    running: usize,
+    /// Next ticket to hand out.
+    next_ticket: u64,
+    /// Ticket currently allowed to take processors.
+    serving: u64,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    freed: Condvar,
+}
+
+impl Pool {
+    fn new(total: usize) -> Self {
+        Pool {
+            state: Mutex::new(PoolState {
+                free: (0..total).collect(),
+                running: 0,
+                next_ticket: 0,
+                serving: 0,
+            }),
+            freed: Condvar::new(),
+        }
+    }
+
+    /// Take `size` free processors, waiting for running jobs to release
+    /// theirs if needed (the work-stealing path: freed processors go
+    /// straight to the oldest waiter). Acquisition is FIFO-ticketed:
+    /// a large job at the head of the line is never starved by
+    /// later-arriving small jobs draining every release before it can
+    /// accumulate its shard (admission guarantees `size` fits the
+    /// machine, so the head always makes progress once running jobs
+    /// finish).
+    fn acquire(&self, size: usize, stats: &SchedulerStats) -> Vec<ProcId> {
+        let mut st = self.state.lock().unwrap();
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        let mut waited = false;
+        while st.serving != ticket || st.free.len() < size {
+            waited = true;
+            st = self.freed.wait(st).unwrap();
+        }
+        // Lowest ids first, for reproducible shard composition.
+        st.free.sort_unstable();
+        let shard: Vec<ProcId> = st.free.drain(..size).collect();
+        st.serving += 1;
+        st.running += 1;
+        stats.shards_acquired.fetch_add(1, Ordering::Relaxed);
+        if waited {
+            stats.shards_stolen.fetch_add(1, Ordering::Relaxed);
+        }
+        stats
+            .peak_concurrent
+            .fetch_max(st.running as u64, Ordering::Relaxed);
+        drop(st);
+        // Wake the next ticket (it may already have enough processors).
+        self.freed.notify_all();
+        shard
+    }
+
+    fn release(&self, shard: Vec<ProcId>) {
+        let mut st = self.state.lock().unwrap();
+        st.free.extend(shard);
+        st.running -= 1;
+        drop(st);
+        self.freed.notify_all();
+    }
+}
+
+// -------------------------------------------------------- the scheduler
+
+/// Scheduler configuration.
+#[derive(Clone)]
+pub struct SchedulerConfig {
+    /// Total simulated processors in the shared machine.
+    pub procs: usize,
+    /// Per-processor memory capacity `M` in words (`u64::MAX / 2` for
+    /// effectively unbounded, i.e. the MI setting).
+    pub mem_cap: u64,
+    /// Machine digit base.
+    pub base: Base,
+    /// Execution engine backing the shared machine. Per-job
+    /// `JobSpec::engine` is ignored here — there is one machine.
+    /// Per-job `JobSpec::mem_cap` participates in shard *sizing* (min
+    /// with this machine-wide cap) but is not separately enforced at
+    /// runtime; use the [`super::Coordinator`] for exact per-job caps.
+    pub engine: EngineKind,
+    /// Time model used by the hybrid dispatcher.
+    pub time_model: TimeModel,
+    /// Runner threads = maximum concurrently running jobs.
+    pub runners: usize,
+    /// Admission control: maximum jobs queued or running at once.
+    pub max_queue: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            procs: 16,
+            mem_cap: u64::MAX / 2,
+            base: Base::default(),
+            engine: EngineKind::Sim,
+            time_model: TimeModel::default(),
+            runners: 4,
+            max_queue: 1024,
+        }
+    }
+}
+
+/// Aggregate scheduler statistics.
+#[derive(Debug, Default)]
+pub struct SchedulerStats {
+    pub admitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    /// Jobs submitted but not yet replied to.
+    pub in_flight: AtomicU64,
+    pub shards_acquired: AtomicU64,
+    /// Acquisitions that had to wait for another job to free processors.
+    pub shards_stolen: AtomicU64,
+    /// High-water mark of concurrently running jobs.
+    pub peak_concurrent: AtomicU64,
+    /// Sum of per-job end-to-end wall times (they overlap under
+    /// concurrency — divide by completed jobs for a mean latency, NOT
+    /// by elapsed time for a throughput; throughput comes from the
+    /// caller's own elapsed clock, e.g. `FleetOutcome::jobs_per_s`).
+    pub total_wall_us: AtomicU64,
+}
+
+type Reply = Sender<Result<JobResult>>;
+
+/// The sharded scheduler (see module docs).
+/// A queued job: spec, planned shard size, reply channel, and the
+/// submission instant (so reported wall times include queue wait).
+type Queued = (JobSpec, usize, Reply, Instant);
+
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    shared: Arc<Mutex<EngineMachine>>,
+    tx: Option<Sender<Queued>>,
+    runners: Vec<JoinHandle<()>>,
+    pub stats: Arc<SchedulerStats>,
+}
+
+impl Scheduler {
+    /// Build the shared machine and start the runner pool.
+    pub fn start(cfg: SchedulerConfig, leaf: LeafRef) -> Scheduler {
+        assert!(cfg.procs >= 1, "need at least one processor");
+        let machine = match cfg.engine {
+            EngineKind::Sim => EngineMachine::Sim(Machine::new(cfg.procs, cfg.mem_cap, cfg.base)),
+            EngineKind::Threads => {
+                EngineMachine::Threads(ThreadedMachine::new(cfg.procs, cfg.mem_cap, cfg.base))
+            }
+        };
+        let shared = Arc::new(Mutex::new(machine));
+        let pool = Arc::new(Pool::new(cfg.procs));
+        let stats = Arc::new(SchedulerStats::default());
+        let (tx, rx) = channel::<Queued>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut runners = Vec::with_capacity(cfg.runners);
+        for _ in 0..cfg.runners.max(1) {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            let pool = Arc::clone(&pool);
+            let stats = Arc::clone(&stats);
+            let leaf = Arc::clone(&leaf);
+            let cfg = cfg.clone();
+            runners.push(std::thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok((spec, shard_size, reply, submitted_at)) = msg else {
+                    break;
+                };
+                let t0 = submitted_at;
+                let shard = pool.acquire(shard_size, &stats);
+                let mut res = run_sharded(&shared, &cfg, &spec, &shard, &leaf);
+                if res.is_err() {
+                    // Reclaim whatever the failed job left resident so
+                    // the shard returns to the pool clean.
+                    let mut view = ShardView {
+                        machine: Arc::clone(&shared),
+                    };
+                    for &p in &shard {
+                        view.purge(p);
+                    }
+                }
+                pool.release(shard);
+                match &mut res {
+                    Ok(r) => {
+                        r.wall = t0.elapsed();
+                        stats.completed.fetch_add(1, Ordering::Relaxed);
+                        let us = r.wall.as_micros() as u64;
+                        stats.total_wall_us.fetch_add(us, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        stats.failed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+                let _ = reply.send(res);
+            }));
+        }
+        Scheduler {
+            cfg,
+            shared,
+            tx: Some(tx),
+            runners,
+            stats,
+        }
+    }
+
+    /// Admit a job (or reject it — see module docs); the result arrives
+    /// on the returned channel once a shard has run it.
+    pub fn submit(&self, spec: JobSpec) -> Result<Receiver<Result<JobResult>>> {
+        // Reserve the queue slot first (fetch_add, not check-then-act:
+        // concurrent submitters must not over-admit past max_queue),
+        // releasing it on every rejection path.
+        let prior = self.stats.in_flight.fetch_add(1, Ordering::Relaxed);
+        if prior >= self.cfg.max_queue as u64 {
+            self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "scheduler queue full ({prior} jobs in flight, max {})",
+                self.cfg.max_queue
+            );
+        }
+        // A job's own memory bound tightens its shard plan (the shard
+        // grows until the footprint fits the stricter of the two caps).
+        // Runtime *enforcement* stays machine-wide: the shared machine
+        // was built with `cfg.mem_cap`, there is one ledger per
+        // processor — per-job caps below it are a sizing input, not a
+        // fault line (the Coordinator path enforces them exactly).
+        let effective_cap = spec.mem_cap.unwrap_or(u64::MAX / 2).min(self.cfg.mem_cap);
+        let shard_size = match plan_shard(&spec, self.cfg.procs, effective_cap) {
+            Ok(s) => s,
+            Err(e) => {
+                self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("scheduler already shut down")
+            .send((spec, shard_size, reply_tx, Instant::now()))
+            .expect("runner pool gone");
+        Ok(reply_rx)
+    }
+
+    /// Submit and wait.
+    pub fn submit_blocking(&self, spec: JobSpec) -> Result<JobResult> {
+        self.submit(spec)?
+            .recv()
+            .context("scheduler dropped reply")?
+    }
+
+    /// Drain the queue, join the runners, and tear down the shared
+    /// machine — surfacing any deferred threaded-engine error (the
+    /// threaded backend reports memory overflows at finish time).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.tx.take();
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+        let mut g = self.shared.lock().unwrap();
+        if let EngineMachine::Threads(m) = &mut *g {
+            m.finish()?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.runners.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run one job on its shard of the shared machine (see module docs for
+/// the uniform-baseline cost argument).
+fn run_sharded(
+    shared: &Arc<Mutex<EngineMachine>>,
+    cfg: &SchedulerConfig,
+    spec: &JobSpec,
+    shard: &[ProcId],
+    leaf: &LeafRef,
+) -> Result<JobResult> {
+    let mut view = ShardView {
+        machine: Arc::clone(shared),
+    };
+    // Uniform clock baseline: max-plus clock evolution commutes with a
+    // uniform shift, so everything after this barrier is exactly a
+    // fresh-machine run of the job shifted by `baseline`.
+    view.barrier(shard);
+    let baseline = view.proc_view(shard[0]).clock;
+    let seq = Seq(shard.to_vec());
+    let (product, algo) = execute_on(&mut view, &cfg.time_model, spec, &seq, leaf)?;
+    let mut end = Clock::default();
+    let mut mem_peak = 0u64;
+    for &p in shard {
+        let v = view.proc_view(p);
+        end = end.join(&v.clock);
+        mem_peak = mem_peak.max(v.mem_peak);
+    }
+    Ok(JobResult {
+        id: spec.id,
+        product,
+        algo,
+        engine: cfg.engine,
+        cost: end.since(&baseline),
+        mem_peak,
+        wall: std::time::Duration::ZERO, // filled by the runner
+        shard: Some(shard.to_vec()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+    use crate::bignum::mul;
+    use crate::util::Rng;
+
+    fn base() -> Base {
+        Base::new(16)
+    }
+
+    fn reference_product(a: &[u32], b: &[u32]) -> Vec<u32> {
+        let mut ops = Ops::default();
+        let mut prod = mul::mul_school(a, b, base(), &mut ops);
+        let keep = crate::bignum::core::normalized_len(&prod).max(1);
+        prod.truncate(keep);
+        prod
+    }
+
+    #[test]
+    fn plan_shard_picks_smallest_fitting_shape() {
+        // Unbounded memory: the requested count wins when it is a valid
+        // shape, and invalid counts round up to the next shape.
+        let mut spec = JobSpec::new(0, vec![1; 64], vec![1; 64]);
+        spec.algo = Some(Algorithm::Copsim);
+        assert_eq!(plan_shard(&spec, 64, u64::MAX / 2).unwrap(), 4);
+        spec.procs = 8; // not 4^k -> next power of four
+        assert_eq!(plan_shard(&spec, 64, u64::MAX / 2).unwrap(), 16);
+        spec.procs = 8;
+        spec.algo = Some(Algorithm::Copk);
+        assert_eq!(plan_shard(&spec, 64, u64::MAX / 2).unwrap(), 12);
+        // Hybrid: union ladder, 12 is the smallest shape >= 8.
+        spec.algo = None;
+        assert_eq!(plan_shard(&spec, 64, u64::MAX / 2).unwrap(), 12);
+        // No shape fits the machine at all.
+        spec.procs = 32;
+        assert!(plan_shard(&spec, 8, u64::MAX / 2).is_err());
+    }
+
+    #[test]
+    fn plan_shard_grows_for_memory() {
+        // n = 1024 on 4 procs needs 12n/sqrt(4) = 6144 words/proc
+        // (Theorem 11); a 4000-word cap forces the 16-proc shape
+        // (12n/4 = 3072).
+        let mut spec = JobSpec::new(0, vec![1; 1024], vec![1; 1024]);
+        spec.algo = Some(Algorithm::Copsim);
+        assert_eq!(plan_shard(&spec, 64, 4000).unwrap(), 16);
+        // And a cap too small for every shape rejects.
+        assert!(plan_shard(&spec, 16, 64).is_err());
+    }
+
+    #[test]
+    fn sharded_jobs_match_dedicated_machine() {
+        let cfg = SchedulerConfig {
+            procs: 8,
+            runners: 2,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let mut rng = Rng::new(0x5EAD);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for id in 0..6u64 {
+            let n = 1usize << rng.range(4, 7);
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            want.push(reference_product(&a, &b));
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            spec.algo = Some(Algorithm::Copsim);
+            pending.push((spec.clone(), sched.submit(spec).unwrap()));
+        }
+        for (i, (spec, rx)) in pending.into_iter().enumerate() {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.product, want[i], "job {i} product");
+            let shard = res.shard.clone().expect("scheduler jobs carry shards");
+            assert_eq!(shard.len(), 4);
+            // The sharded cost triple equals a dedicated-machine run.
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            let leaf = leaf_ref(SchoolLeaf);
+            execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+            assert_eq!(res.cost, solo.critical(), "job {i} cost triple");
+        }
+        assert_eq!(sched.stats.completed.load(Ordering::Relaxed), 6);
+        assert!(sched.stats.peak_concurrent.load(Ordering::Relaxed) <= 2);
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn threaded_engine_shares_one_machine() {
+        let cfg = SchedulerConfig {
+            procs: 8,
+            runners: 2,
+            engine: EngineKind::Threads,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let mut rng = Rng::new(0xBEEF);
+        let mut pending = Vec::new();
+        let mut want = Vec::new();
+        for id in 0..4u64 {
+            let a = rng.digits(128, 16);
+            let b = rng.digits(128, 16);
+            want.push(reference_product(&a, &b));
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            pending.push(sched.submit(spec).unwrap());
+        }
+        for (i, rx) in pending.into_iter().enumerate() {
+            let res = rx.recv().unwrap().unwrap();
+            assert_eq!(res.product, want[i], "job {i}");
+            assert_eq!(res.engine, EngineKind::Threads);
+        }
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn admission_rejects_impossible_and_queue_full() {
+        // A job wider than the whole machine is rejected up front.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 4,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut spec = JobSpec::new(0, vec![1; 32], vec![1; 32]);
+        spec.procs = 16;
+        assert!(sched.submit(spec).is_err());
+        assert_eq!(sched.stats.rejected.load(Ordering::Relaxed), 1);
+        sched.shutdown().unwrap();
+
+        // max_queue = 0 rejects every submission deterministically.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                max_queue: 0,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        assert!(sched.submit(JobSpec::new(1, vec![1; 8], vec![2; 8])).is_err());
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn purged_shard_serves_later_jobs_with_identical_costs() {
+        // The failure path purges a shard before releasing it; this
+        // checks the invariant that path relies on — a purge between two
+        // identical jobs on the same shard changes neither the product
+        // nor the cost triple (clocks survive, slots do not).
+        let cfg = SchedulerConfig {
+            procs: 4,
+            runners: 1,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let a = vec![3u32; 64];
+        let b = vec![5u32; 64];
+        let r1 = sched.submit_blocking(JobSpec::new(0, a.clone(), b.clone())).unwrap();
+        // Purge the shard out-of-band, then the next job must still run
+        // correctly on the same processors.
+        {
+            let mut view = ShardView {
+                machine: Arc::clone(&sched.shared),
+            };
+            for p in 0..4 {
+                view.purge(p);
+            }
+        }
+        let r2 = sched.submit_blocking(JobSpec::new(1, a, b)).unwrap();
+        assert_eq!(r1.product, r2.product);
+        assert_eq!(r1.cost, r2.cost, "purge must not disturb cost isolation");
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn work_stealing_reuses_freed_shards() {
+        // 8 jobs over a 2-shard machine with 4 runners: every shard is
+        // released and re-acquired; peak concurrency is capped by the
+        // processor pool, not the runner count.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 8,
+                runners: 4,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut rng = Rng::new(0x57EA);
+        let mut pending = Vec::new();
+        for id in 0..8u64 {
+            let a = rng.digits(256, 16);
+            let b = rng.digits(256, 16);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            spec.algo = Some(Algorithm::Copsim);
+            pending.push(sched.submit(spec).unwrap());
+        }
+        for rx in pending {
+            rx.recv().unwrap().unwrap();
+        }
+        assert_eq!(sched.stats.shards_acquired.load(Ordering::Relaxed), 8);
+        assert!(sched.stats.peak_concurrent.load(Ordering::Relaxed) <= 2);
+        assert_eq!(sched.stats.completed.load(Ordering::Relaxed), 8);
+        sched.shutdown().unwrap();
+    }
+}

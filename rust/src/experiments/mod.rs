@@ -13,6 +13,7 @@
 pub mod algorithms;
 pub mod engines;
 pub mod primitives;
+pub mod scheduler;
 pub mod systems;
 
 use crate::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf, SlimLeaf};
@@ -178,6 +179,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "execution engines: predicted critical path vs threaded wall-clock",
             run: engines::e15_engines,
         },
+        Experiment {
+            id: "E16",
+            paper_ref: "per-mult. bounds under concurrency",
+            title: "sharded scheduler: jobs/sec + per-job critical-path inflation",
+            run: scheduler::e16_scheduler,
+        },
     ]
 }
 
@@ -202,10 +209,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 15);
+        assert_eq!(reg.len(), 16);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 15);
+        assert_eq!(ids.len(), 16);
     }
 
     #[test]

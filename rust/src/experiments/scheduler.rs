@@ -1,0 +1,208 @@
+//! E16 — sharded scheduler vs serial execution: jobs/sec and per-job
+//! critical-path inflation, on both execution engines.
+//!
+//! The same fleet of jobs runs twice per engine: **serial** (the shared
+//! machine is exactly one shard, so jobs queue behind each other) and
+//! **sharded** (the machine holds several shards and jobs run
+//! concurrently). Two claims are measured:
+//!
+//! * **Throughput scales** — jobs/sec of the sharded run over the
+//!   serial run.
+//! * **Per-job costs do not inflate** — the scheduler barriers each
+//!   shard to a uniform clock baseline, so a job's critical-path cost
+//!   triple is bit-identical whether it shared the machine or had it
+//!   alone (`cost inflation = 1.00` by construction; the table prints
+//!   the measured ratio so a regression is visible, and the
+//!   differential suite asserts the equality case by case). Per-job
+//!   wall time is end-to-end (queue wait included), so the sharded
+//!   run's wall ratio also shows the *latency* win: serial jobs queue
+//!   behind each other, sharded jobs don't.
+
+use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use crate::algorithms::Algorithm;
+use crate::config::EngineKind;
+use crate::coordinator::{JobResult, JobSpec, Scheduler, SchedulerConfig};
+use crate::error::{ensure, Result};
+use crate::metrics::{fmt_f64, fmt_u64, Table};
+use crate::theory::TimeModel;
+use crate::util::Rng;
+use std::time::Duration;
+
+/// One scheduler run over a fixed fleet of jobs.
+pub struct FleetOutcome {
+    /// Wall-clock from first submission to last completion.
+    pub wall: Duration,
+    /// Per-job results, in submission (id) order.
+    pub results: Vec<JobResult>,
+    /// High-water mark of concurrently running jobs.
+    pub peak_concurrent: u64,
+}
+
+impl FleetOutcome {
+    pub fn jobs_per_s(&self) -> f64 {
+        self.results.len() as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Run `jobs` identical-distribution jobs (seeded; the fleet is the
+/// same across calls) through a scheduler of `procs` processors with
+/// `runners` concurrent shards.
+pub fn run_fleet(
+    engine: EngineKind,
+    procs: usize,
+    runners: usize,
+    jobs: usize,
+    n: usize,
+) -> Result<FleetOutcome> {
+    let sched = Scheduler::start(
+        SchedulerConfig {
+            procs,
+            runners,
+            engine,
+            ..Default::default()
+        },
+        leaf_ref(SchoolLeaf),
+    );
+    let mut rng = Rng::new(0xE16);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(jobs);
+    for id in 0..jobs as u64 {
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let mut spec = JobSpec::new(id, a, b);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        pending.push(sched.submit(spec)?);
+    }
+    let mut results = Vec::with_capacity(jobs);
+    for rx in pending {
+        results.push(rx.recv().expect("scheduler dropped reply")?);
+    }
+    let wall = t0.elapsed();
+    let peak_concurrent = sched
+        .stats
+        .peak_concurrent
+        .load(std::sync::atomic::Ordering::Relaxed);
+    sched.shutdown()?;
+    Ok(FleetOutcome {
+        wall,
+        results,
+        peak_concurrent,
+    })
+}
+
+/// Mean over jobs of `num[i] / den[i]`.
+fn mean_ratio(num: impl Iterator<Item = f64>, den: impl Iterator<Item = f64>) -> f64 {
+    let (mut acc, mut count) = (0.0, 0usize);
+    for (x, y) in num.zip(den) {
+        acc += x / y.max(1e-12);
+        count += 1;
+    }
+    acc / count.max(1) as f64
+}
+
+pub fn e16_scheduler() -> Result<Vec<Table>> {
+    const JOBS: usize = 8;
+    const N: usize = 1024;
+    let tm = TimeModel::default();
+    let mut t = Table::new(
+        "E16: sharded scheduler vs serial execution (8 jobs, n = 1024, 4 procs/job; \
+         cost inflation 1.00 = sharding does not distort the paper's per-job metrics)",
+        &[
+            "engine",
+            "mode",
+            "P",
+            "shards",
+            "peak conc.",
+            "jobs/s",
+            "mean job T",
+            "cost inflation",
+            "mean wall ms",
+            "wall inflation",
+            "throughput speedup",
+        ],
+    );
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        let serial = run_fleet(engine, 4, 1, JOBS, N)?;
+        let sharded = run_fleet(engine, 16, 4, JOBS, N)?;
+        ensure!(
+            serial.results.len() == sharded.results.len(),
+            "fleet size mismatch"
+        );
+        for (s, h) in serial.results.iter().zip(sharded.results.iter()) {
+            ensure!(
+                s.product == h.product,
+                "sharded product diverged from serial at job {}",
+                s.id
+            );
+        }
+        let cost_inflation = mean_ratio(
+            sharded.results.iter().map(|r| tm.time_ns(&r.cost)),
+            serial.results.iter().map(|r| tm.time_ns(&r.cost)),
+        );
+        let wall_inflation = mean_ratio(
+            sharded.results.iter().map(|r| r.wall.as_secs_f64()),
+            serial.results.iter().map(|r| r.wall.as_secs_f64()),
+        );
+        let mean_ops = |rs: &[JobResult]| {
+            rs.iter().map(|r| r.cost.ops).sum::<u64>() / rs.len() as u64
+        };
+        let mean_wall_ms = |o: &FleetOutcome| {
+            o.results.iter().map(|r| r.wall.as_secs_f64()).sum::<f64>() * 1e3
+                / o.results.len() as f64
+        };
+        for (mode, outcome, shards) in [("serial", &serial, 1usize), ("sharded", &sharded, 4)] {
+            t.row(vec![
+                engine.to_string(),
+                mode.into(),
+                if shards == 1 { "4".into() } else { "16".into() },
+                shards.to_string(),
+                outcome.peak_concurrent.to_string(),
+                fmt_f64(outcome.jobs_per_s()),
+                fmt_u64(mean_ops(&outcome.results)),
+                if mode == "serial" {
+                    "1.00".into()
+                } else {
+                    format!("{cost_inflation:.2}")
+                },
+                fmt_f64(mean_wall_ms(outcome)),
+                if mode == "serial" {
+                    "1.00".into()
+                } else {
+                    format!("{wall_inflation:.2}")
+                },
+                if mode == "serial" {
+                    "1.00".into()
+                } else {
+                    format!("{:.2}", sharded.jobs_per_s() / serial.jobs_per_s().max(1e-9))
+                },
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_costs_identical_serial_vs_sharded() {
+        // Small fleet so the debug-mode suite stays fast; the full E16
+        // cell runs in release via `copmul experiment E16`.
+        let serial = run_fleet(EngineKind::Sim, 4, 1, 4, 256).unwrap();
+        let sharded = run_fleet(EngineKind::Sim, 16, 4, 4, 256).unwrap();
+        for (s, h) in serial.results.iter().zip(sharded.results.iter()) {
+            assert_eq!(s.product, h.product, "job {}", s.id);
+            assert_eq!(s.cost, h.cost, "sharding distorted job {}'s cost", s.id);
+        }
+        assert_eq!(serial.peak_concurrent, 1);
+    }
+
+    #[test]
+    fn fleet_runs_on_threaded_engine() {
+        let sharded = run_fleet(EngineKind::Threads, 16, 4, 4, 256).unwrap();
+        assert_eq!(sharded.results.len(), 4);
+        assert!(sharded.results.iter().all(|r| r.cost.ops > 0));
+    }
+}

@@ -33,12 +33,15 @@
 //!   experiment harness.
 //! * [`runtime`] — PJRT/XLA client: loads the AOT-compiled JAX+Pallas leaf
 //!   multiplier (`artifacts/*.hlo.txt`) and executes it from the hot path.
-//! * [`coordinator`] — a multi-threaded job router + dynamic batcher that
-//!   serves multiplication requests over simulated machines, dispatching
-//!   leaf products to the XLA runtime.
-//! * [`experiments`] — one module per paper result (E1–E15), each printing
+//! * [`coordinator`] — the serving layer: a multi-threaded job router
+//!   (one machine per job), a sharded multi-job scheduler (ONE shared
+//!   machine carved into per-job shards sized by the paper's memory
+//!   requirements, with admission control and work-stealing), and a
+//!   dynamic batcher dispatching leaf products to the XLA runtime.
+//! * [`experiments`] — one module per paper result (E1–E16), each printing
 //!   a `paper bound | measured | ratio` table; E15 compares the
-//!   cost-model and threaded execution engines.
+//!   cost-model and threaded execution engines, E16 measures the sharded
+//!   scheduler's throughput and per-job cost inflation.
 //!
 //! See `rust/DESIGN.md` for the architecture notes (including the
 //! two-backend execution-engine split) and the experiment index.

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
-//! copmul experiment <id|all> [--csv]           run paper experiments E1-E14
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E16
 //! copmul serve [key=value ...]                 coordinator demo workload
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
@@ -14,12 +14,18 @@
 //! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
 //! `engine` (sim|threads; also spelled `--engine=...`), `seed`,
 //! `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
+//! `serve` additionally takes `--jobs=N` (request count) and
+//! `--shards=K` (run the sharded scheduler: ONE shared machine of
+//! `procs` processors carved into up to `K` concurrent shards, instead
+//! of one dedicated machine per job).
 
-use copmul::error::{bail, Context, Result};
 use copmul::algorithms::leaf::{HybridLeaf, LeafMultiplier, SchoolLeaf, SkimLeaf, SlimLeaf};
 use copmul::bignum::convert::{parse_hex, to_hex};
 use copmul::config::{LeafKind, RunConfig};
-use copmul::coordinator::{BatchingXlaLeaf, Coordinator, CoordinatorConfig, JobSpec};
+use copmul::coordinator::{
+    BatchingXlaLeaf, Coordinator, CoordinatorConfig, JobSpec, Scheduler, SchedulerConfig,
+};
+use copmul::error::{bail, Context, Result};
 use copmul::experiments;
 use copmul::metrics::fmt_u64;
 use copmul::runtime::{XlaLeaf, XlaRuntime};
@@ -54,8 +60,8 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E15|all> [--csv] [key=value ...]
-  copmul serve [jobs=N] [key=value ...]
+  copmul experiment <E1..E16|all> [--csv] [key=value ...]
+  copmul serve [--jobs=N] [--shards=K] [key=value ...]
   copmul info [artifacts=DIR]
   copmul selftest
 
@@ -64,6 +70,11 @@ KEYS: n procs mem algo(copsim|copk|hybrid) leaf(slim|skim|school|hybrid|xla|xla-
 
 ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
          threads = one OS thread per simulated processor (wall-clock speedup).
+
+SERVE:   --jobs=N   number of requests (default 64)
+         --shards=K sharded scheduler: one shared `procs`-processor machine,
+                    up to K jobs running concurrently on disjoint shards
+                    (omit for the classic one-machine-per-job coordinator)
 ";
 
 /// Build the leaf backend the config names.
@@ -146,17 +157,34 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let mut jobs = 64usize;
+    let mut shards: Option<usize> = None;
     let mut rest = Vec::new();
     for a in args {
-        if let Some(v) = a.strip_prefix("jobs=") {
+        if let Some(v) = a.strip_prefix("jobs=").or_else(|| a.strip_prefix("--jobs=")) {
             jobs = v.parse().context("jobs")?;
+        } else if let Some(v) = a
+            .strip_prefix("shards=")
+            .or_else(|| a.strip_prefix("--shards="))
+        {
+            shards = Some(v.parse().context("shards")?);
         } else {
             rest.push(a.clone());
         }
     }
     cfg.apply_args(&rest)?;
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    match shards {
+        Some(k) => serve_sharded(&cfg, jobs, k),
+        None => serve_per_job(&cfg, jobs),
+    }
+}
+
+/// Classic path: one dedicated machine per job, `workers` in parallel.
+fn serve_per_job(cfg: &RunConfig, jobs: usize) -> Result<()> {
     let base = cfg.base();
-    let leaf = make_leaf(&cfg)?;
+    let leaf = make_leaf(cfg)?;
     let coord = Coordinator::start(
         CoordinatorConfig {
             workers: cfg.workers,
@@ -173,8 +201,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for id in 0..jobs as u64 {
-        let a = rng.digits(cfg.n, 16);
-        let b = rng.digits(cfg.n, 16);
+        let a = rng.digits(cfg.n, cfg.base_log2);
+        let b = rng.digits(cfg.n, cfg.base_log2);
         let mut spec = JobSpec::new(id, a, b);
         spec.procs = cfg.procs;
         spec.mem_cap = cfg.mem_cap;
@@ -188,6 +216,79 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         lat_us.push(res.wall.as_micros() as u64);
     }
     let wall = t0.elapsed();
+    print_latency_summary(jobs, wall, &mut lat_us);
+    coord.shutdown();
+    Ok(())
+}
+
+/// Sharded path: ONE shared machine of `procs` processors; jobs request
+/// `procs / shards` processors each and run concurrently on disjoint
+/// shards, stealing freed processors as earlier jobs complete.
+fn serve_sharded(cfg: &RunConfig, jobs: usize, shards: usize) -> Result<()> {
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    if cfg.procs % shards != 0 {
+        bail!("--shards={shards} must divide procs={}", cfg.procs);
+    }
+    let per_job = cfg.procs / shards;
+    let base = cfg.base();
+    let leaf = make_leaf(cfg)?;
+    let sched = Scheduler::start(
+        SchedulerConfig {
+            procs: cfg.procs,
+            mem_cap: cfg.mem_cap.unwrap_or(u64::MAX / 2),
+            base,
+            engine: cfg.engine,
+            time_model: cfg.time_model,
+            runners: shards,
+            max_queue: jobs.max(1024),
+        },
+        leaf,
+    );
+    println!(
+        "serving {jobs} jobs on a shared {}-processor machine \
+         ({shards} shards x {per_job} procs, n={}, leaf={:?}, engine={})",
+        cfg.procs, cfg.n, cfg.leaf, cfg.engine
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for id in 0..jobs as u64 {
+        let a = rng.digits(cfg.n, cfg.base_log2);
+        let b = rng.digits(cfg.n, cfg.base_log2);
+        let mut spec = JobSpec::new(id, a, b);
+        spec.procs = per_job;
+        spec.algo = cfg.algo;
+        pending.push(sched.submit(spec)?);
+    }
+    let mut lat_us: Vec<u64> = Vec::with_capacity(jobs);
+    for rx in pending {
+        let res = rx.recv().context("runner hung up")??;
+        lat_us.push(res.wall.as_micros() as u64);
+    }
+    let wall = t0.elapsed();
+    print_latency_summary(jobs, wall, &mut lat_us);
+    println!(
+        "scheduler: peak {} concurrent, {} shard acquisitions ({} after a wait)",
+        sched
+            .stats
+            .peak_concurrent
+            .load(std::sync::atomic::Ordering::Relaxed),
+        sched
+            .stats
+            .shards_acquired
+            .load(std::sync::atomic::Ordering::Relaxed),
+        sched
+            .stats
+            .shards_stolen
+            .load(std::sync::atomic::Ordering::Relaxed),
+    );
+    sched.shutdown()?;
+    Ok(())
+}
+
+fn print_latency_summary(jobs: usize, wall: std::time::Duration, lat_us: &mut [u64]) {
     lat_us.sort_unstable();
     let pct = |q: f64| lat_us[(q * (lat_us.len() - 1) as f64) as usize];
     println!(
@@ -198,8 +299,6 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         fmt_u64(pct(0.95)),
         fmt_u64(pct(0.99)),
     );
-    coord.shutdown();
-    Ok(())
 }
 
 fn cmd_info(args: &[String]) -> Result<()> {

@@ -49,6 +49,21 @@ use std::ops::Range;
 /// digit ops, and returns the output slot's contents.
 pub type SlotComputation = Box<dyn FnOnce(&[Vec<u32>], &Base, &mut Ops) -> Vec<u32> + Send>;
 
+/// Point-in-time view of a single processor: its logical clock and
+/// memory ledger. Returned by [`MachineApi::proc_view`]; the scheduler
+/// uses it to account per-shard costs (a job's cost triple is the join
+/// of its shard's end clocks minus the uniform baseline the shard was
+/// barrier'd to at acquisition).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ProcView {
+    /// The processor's logical clock.
+    pub clock: Clock,
+    /// Words currently resident in its local memory.
+    pub mem_used: u64,
+    /// High-water mark of `mem_used` over the machine's lifetime.
+    pub mem_peak: u64,
+}
+
 /// The machine-model operation surface (see module docs).
 pub trait MachineApi {
     // ----- shape ------------------------------------------------------
@@ -149,6 +164,12 @@ pub trait MachineApi {
 
     // ----- reporting ----------------------------------------------------
 
+    /// One processor's clock and memory ledger (synchronizes with any
+    /// pending asynchronous work on `p`). Sub-machine (shard) costs are
+    /// computed from these views; `critical()` only covers the whole
+    /// machine.
+    fn proc_view(&self, p: ProcId) -> ProcView;
+
     /// Critical-path cost: component-wise max over all processors.
     fn critical(&self) -> Clock;
 
@@ -163,6 +184,12 @@ pub trait MachineApi {
 
     /// Current resident words across all processors.
     fn mem_used_total(&self) -> u64;
+
+    /// Scheduler support: drop every value resident on `p` (its ledger
+    /// returns to zero words used; clocks and peaks are kept). Used to
+    /// reclaim a shard whose job failed mid-run and left slots behind —
+    /// never call it on a processor another computation still owns.
+    fn purge(&mut self, p: ProcId);
 
     /// Record a trace event (no cost). Backends may ignore it.
     fn event(&mut self, _msg: &str) {}

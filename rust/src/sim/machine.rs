@@ -1,6 +1,6 @@
 //! The machine: processors, memory ledgers, message transport.
 
-use super::api::{MachineApi, SlotComputation};
+use super::api::{MachineApi, ProcView, SlotComputation};
 use super::Clock;
 use crate::bignum::{Base, Ops};
 use crate::error::{bail, Result};
@@ -251,6 +251,15 @@ impl Machine {
         self.send(src, dst, data)
     }
 
+    /// Drop every slot resident on `p`; the ledger returns to zero used
+    /// words (peak is kept — it already happened). Scheduler support:
+    /// reclaims a shard whose job failed and leaked its working set.
+    pub fn purge(&mut self, p: ProcId) {
+        let proc = &mut self.procs[p];
+        proc.store.clear();
+        proc.mem_used = 0;
+    }
+
     /// Synchronize a set of processors (a barrier): all clocks join.
     /// The paper's algorithms are bulk-synchronous within each phase;
     /// explicit barriers are only used by the experiment harness between
@@ -388,6 +397,14 @@ impl MachineApi for Machine {
         Machine::barrier(self, procs);
     }
 
+    fn proc_view(&self, p: ProcId) -> ProcView {
+        let proc = &self.procs[p];
+        ProcView {
+            clock: proc.clock,
+            mem_used: proc.mem_used,
+            mem_peak: proc.mem_peak,
+        }
+    }
     fn critical(&self) -> Clock {
         Machine::critical(self)
     }
@@ -402,6 +419,9 @@ impl MachineApi for Machine {
     }
     fn mem_used_total(&self) -> u64 {
         Machine::mem_used_total(self)
+    }
+    fn purge(&mut self, p: ProcId) {
+        Machine::purge(self, p);
     }
     fn event(&mut self, msg: &str) {
         Machine::event(self, msg);
@@ -499,6 +519,22 @@ mod tests {
         m.compute(1, 9);
         m.barrier(&[0, 1, 2]);
         assert_eq!(m.proc(2).clock.ops, 9);
+    }
+
+    #[test]
+    fn purge_resets_ledger_keeps_clock_and_peak() {
+        let mut m = mk(2, 10);
+        m.compute(0, 7);
+        let _a = m.alloc(0, vec![1, 2, 3]).unwrap();
+        let _b = m.alloc(0, vec![4]).unwrap();
+        m.purge(0);
+        let v = MachineApi::proc_view(&m, 0);
+        assert_eq!(v.mem_used, 0);
+        assert_eq!(v.mem_peak, 4);
+        assert_eq!(v.clock.ops, 7);
+        // The processor is reusable after the purge.
+        let s = m.alloc(0, vec![9; 10]).unwrap();
+        assert_eq!(m.read(0, s), &[9; 10]);
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub mod machine;
 pub mod seq;
 pub mod threaded;
 
-pub use api::{MachineApi, SlotComputation};
+pub use api::{MachineApi, ProcView, SlotComputation};
 pub use dist::DistInt;
 pub use machine::{Machine, MachineStats, ProcId, Slot};
 pub use seq::Seq;

@@ -41,7 +41,7 @@
 //! Memory-*bound* checking therefore belongs to the cost-model engine;
 //! the threaded engine is for wall-clock execution.
 
-use super::api::{MachineApi, SlotComputation};
+use super::api::{MachineApi, ProcView, SlotComputation};
 use super::machine::{MachineStats, ProcId, Slot};
 use super::Clock;
 use crate::bignum::{Base, Ops};
@@ -117,6 +117,7 @@ enum Cmd {
     Barrier {
         state: Arc<BarrierState>,
     },
+    Purge,
     Query {
         reply: Sender<WorkerSnapshot>,
     },
@@ -351,6 +352,10 @@ impl Worker {
                     drop(g);
                     self.clock = joined;
                 }
+                Cmd::Purge => {
+                    self.arena.clear();
+                    self.mem_used = 0;
+                }
                 Cmd::Query { reply } => {
                     let _ = reply.send(self.snapshot());
                 }
@@ -446,9 +451,48 @@ impl ThreadedMachine {
     /// Blocking snapshot of one worker (drains its queue first, so the
     /// snapshot reflects every operation issued before this call).
     pub fn snapshot(&self, p: ProcId) -> WorkerSnapshot {
+        self.snapshot_request(p).recv().expect("worker thread died")
+    }
+
+    // ----- two-phase (enqueue now, await later) variants --------------
+    //
+    // The blocking operations (`read`, `local`, `snapshot`) enqueue a
+    // command and wait on its reply channel. A caller that wraps this
+    // machine in an outer lock (the scheduler's shared machine) must be
+    // able to enqueue under the lock and RELEASE it before blocking —
+    // otherwise every concurrent job serializes on one worker's queue
+    // drain. Program order is fixed at enqueue time, so awaiting after
+    // the lock is dropped observes exactly the same state.
+
+    /// Enqueue a read; the reply channel delivers the slot's contents
+    /// once worker `p` drains its queue to this command.
+    pub fn read_request(&self, p: ProcId, slot: Slot) -> Receiver<Vec<u32>> {
+        let (tx, rx) = channel();
+        self.cmd(p, Cmd::Read { slot, reply: tx });
+        rx
+    }
+
+    /// Enqueue a local computation; the reply channel delivers the
+    /// boxed result (downcast to the closure's return type).
+    pub fn local_request<R, F>(&self, p: ProcId, f: F) -> Receiver<Box<dyn Any + Send>>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let boxed = Box::new(move |base: &Base, ops: &mut Ops| -> Box<dyn Any + Send> {
+            Box::new(f(base, ops))
+        });
+        self.cmd(p, Cmd::Local { f: boxed, reply: tx });
+        rx
+    }
+
+    /// Enqueue a snapshot query; the reply channel delivers the
+    /// worker's state once its queue drains to this command.
+    pub fn snapshot_request(&self, p: ProcId) -> Receiver<WorkerSnapshot> {
         let (tx, rx) = channel();
         self.cmd(p, Cmd::Query { reply: tx });
-        rx.recv().expect("worker thread died")
+        rx
     }
 
     fn snapshot_all(&self) -> Vec<WorkerSnapshot> {
@@ -526,9 +570,9 @@ impl MachineApi for ThreadedMachine {
         self.cmd(p, Cmd::Free { slot });
     }
     fn read(&self, p: ProcId, slot: Slot) -> Vec<u32> {
-        let (tx, rx) = channel();
-        self.cmd(p, Cmd::Read { slot, reply: tx });
-        rx.recv().expect("worker thread died")
+        self.read_request(p, slot)
+            .recv()
+            .expect("worker thread died")
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
         self.cmd(p, Cmd::Replace { slot, data });
@@ -543,11 +587,7 @@ impl MachineApi for ThreadedMachine {
         R: Send + 'static,
         F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
     {
-        let (tx, rx) = channel();
-        let boxed = Box::new(move |base: &Base, ops: &mut Ops| -> Box<dyn Any + Send> {
-            Box::new(f(base, ops))
-        });
-        self.cmd(p, Cmd::Local { f: boxed, reply: tx });
+        let rx = self.local_request::<R, F>(p, f);
         let out = rx.recv().expect("worker thread died");
         *out.downcast::<R>().expect("local closure result type")
     }
@@ -660,6 +700,14 @@ impl MachineApi for ThreadedMachine {
         }
     }
 
+    fn proc_view(&self, p: ProcId) -> ProcView {
+        let s = self.snapshot(p);
+        ProcView {
+            clock: s.clock,
+            mem_used: s.mem_used,
+            mem_peak: s.mem_peak,
+        }
+    }
     fn critical(&self) -> Clock {
         self.snapshot_all()
             .iter()
@@ -682,6 +730,9 @@ impl MachineApi for ThreadedMachine {
     }
     fn mem_used_total(&self) -> u64 {
         self.snapshot_all().iter().map(|s| s.mem_used).sum()
+    }
+    fn purge(&mut self, p: ProcId) {
+        self.cmd(p, Cmd::Purge);
     }
 }
 
@@ -768,6 +819,21 @@ mod tests {
         m.compute(1, 9);
         m.barrier(&[0, 1, 2]);
         assert_eq!(m.snapshot(2).clock.ops, 9);
+    }
+
+    #[test]
+    fn purge_resets_ledger_keeps_clock() {
+        let mut m = mk(2);
+        m.compute(1, 9);
+        let _a = m.alloc(1, vec![1, 2, 3]).unwrap();
+        MachineApi::purge(&mut m, 1);
+        let v = m.proc_view(1);
+        assert_eq!(v.mem_used, 0);
+        assert_eq!(v.mem_peak, 3);
+        assert_eq!(v.clock.ops, 9);
+        let s = m.alloc(1, vec![5]).unwrap();
+        assert_eq!(m.read(1, s), vec![5]);
+        m.finish().unwrap();
     }
 
     #[test]

@@ -9,6 +9,18 @@ use super::rng::Rng;
 /// Outcome of a single property case.
 pub type CaseResult = Result<(), String>;
 
+/// Case-count knob for expensive property suites: returns the
+/// `COPMUL_PROP_CASES` environment variable when it is set and parses,
+/// the suite's default otherwise. Tier-1 CI keeps the fast defaults;
+/// the dedicated differential CI job raises it (and a developer can
+/// lower it for a quick local iteration).
+pub fn cases(default: u64) -> u64 {
+    std::env::var("COPMUL_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
 /// Run `f` for `cases` deterministic seeds derived from `name`.
 /// Panics with the failing seed embedded in the message.
 pub fn check<F>(name: &str, cases: u64, mut f: F)
@@ -94,5 +106,16 @@ mod tests {
     #[test]
     fn fnv_distinct() {
         assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+
+    #[test]
+    fn cases_defaults_without_env() {
+        // The test runner may export COPMUL_PROP_CASES; only assert the
+        // default path when it is absent.
+        if std::env::var("COPMUL_PROP_CASES").is_err() {
+            assert_eq!(cases(17), 17);
+        } else {
+            let _ = cases(17); // must not panic on any env value
+        }
     }
 }

@@ -1,0 +1,251 @@
+//! Cross-engine differential test harness.
+//!
+//! A seeded corpus of random `(n, P, base, algorithm)` cases runs every
+//! multiplication three ways — the sequential `bignum::mul` reference,
+//! the cost-model [`Machine`], and the real-threads
+//! [`ThreadedMachine`] — asserting bit-identical products and identical
+//! `(compute, bandwidth, latency)` cost triples. A second suite drives
+//! the sharded [`Scheduler`] with concurrent jobs on both engines and
+//! checks every job against a dedicated single-job machine.
+//!
+//! Case counts scale with `COPMUL_PROP_CASES` (see `util::prop::cases`):
+//! the in-repo defaults keep tier-1's debug-mode run fast; the dedicated
+//! CI `differential` job sets `COPMUL_PROP_CASES=400` (release mode),
+//! which is where the ≥200-case corpus requirement is enforced.
+
+use copmul::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf};
+use copmul::algorithms::{copk_mi, copsim, copsim_mi, hybrid, Algorithm};
+use copmul::bignum::{mul, Base, Ops};
+use copmul::config::EngineKind;
+use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
+use copmul::prop_assert;
+use copmul::prop_assert_eq;
+use copmul::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use copmul::theory::TimeModel;
+use copmul::util::prop::{cases, check};
+use copmul::util::Rng;
+
+/// Which entry point a corpus case exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Entry {
+    /// COPSIM main mode under a memory cap tight enough to force a DFS
+    /// level before the MI recursion takes over.
+    CopsimMain,
+    CopsimMi,
+    CopkMi,
+    /// §7 hybrid dispatch (the scheme choice must agree across engines
+    /// because both machines report the same `mem_cap`).
+    Hybrid,
+}
+
+/// A corpus case's shape: entry, processor count, working width, digit
+/// base, and per-processor memory cap.
+struct Shape {
+    entry: Entry,
+    p: usize,
+    n: usize,
+    base: Base,
+    cap: u64,
+}
+
+fn draw_shape(rng: &mut Rng) -> Shape {
+    let entry = *rng.pick(&[Entry::CopsimMain, Entry::CopsimMi, Entry::CopkMi, Entry::Hybrid]);
+    let base = Base::new(*rng.pick(&[4u32, 8, 16]));
+    let unbounded = u64::MAX / 2;
+    match entry {
+        Entry::CopsimMain => {
+            // p = 64 with M = 80n/P forces exactly one DFS level before
+            // the subproblem meets the MI memory requirement (the same
+            // shape `prop_dfs_and_mi_agree` runs, scaled down).
+            let p = 64usize;
+            let n = p * 16;
+            Shape {
+                entry,
+                p,
+                n,
+                base,
+                cap: (80 * n / p) as u64,
+            }
+        }
+        Entry::CopsimMi => {
+            let p = [4usize, 16][rng.below(2) as usize];
+            let w = 1usize << rng.range(2, 5);
+            Shape {
+                entry,
+                p,
+                n: p * w,
+                base,
+                cap: unbounded,
+            }
+        }
+        Entry::CopkMi => {
+            let p = [4usize, 12][rng.below(2) as usize];
+            let w = 4usize << rng.range(0, 2);
+            Shape {
+                entry,
+                p,
+                n: p * w,
+                base,
+                cap: unbounded,
+            }
+        }
+        Entry::Hybrid => {
+            let p = [4usize, 12, 16][rng.below(3) as usize];
+            let w = 4usize << rng.range(0, 2);
+            Shape {
+                entry,
+                p,
+                n: p * w,
+                base,
+                cap: unbounded,
+            }
+        }
+    }
+}
+
+/// Run one case on any engine, returning (product, cost triple).
+fn run_on<M: MachineApi>(
+    m: &mut M,
+    shape: &Shape,
+    a: &[u32],
+    b: &[u32],
+    leaf: &LeafRef,
+) -> Result<(Vec<u32>, Clock), String> {
+    let seq = Seq::range(shape.p);
+    let w = shape.n / shape.p;
+    let da = DistInt::scatter(m, &seq, a, w).map_err(|e| e.to_string())?;
+    let db = DistInt::scatter(m, &seq, b, w).map_err(|e| e.to_string())?;
+    let c = match shape.entry {
+        Entry::CopsimMain => copsim(m, &seq, da, db, leaf),
+        Entry::CopsimMi => copsim_mi(m, &seq, da, db, leaf),
+        Entry::CopkMi => copk_mi(m, &seq, da, db, leaf),
+        Entry::Hybrid => {
+            hybrid::hybrid_mul(m, &seq, da, db, leaf, &TimeModel::default()).map(|(c, _)| c)
+        }
+    }
+    .map_err(|e| format!("{:?} failed: {e}", shape.entry))?;
+    let product = c.gather(m);
+    c.free(m);
+    Ok((product, m.critical()))
+}
+
+#[test]
+fn differential_reference_vs_both_engines() {
+    let leaf = leaf_ref(SchoolLeaf);
+    check("engine-differential-corpus", cases(48), |rng| {
+        let shape = draw_shape(rng);
+        let a = rng.digits(shape.n, shape.base.log2);
+        let b = rng.digits(shape.n, shape.base.log2);
+
+        let mut ops = Ops::default();
+        let reference = mul::mul_school(&a, &b, shape.base, &mut ops);
+
+        let mut sim = Machine::new(shape.p, shape.cap, shape.base);
+        let (sim_prod, sim_cost) = run_on(&mut sim, &shape, &a, &b, &leaf)?;
+
+        let mut thr = ThreadedMachine::new(shape.p, shape.cap, shape.base);
+        let (thr_prod, thr_cost) = run_on(&mut thr, &shape, &a, &b, &leaf)?;
+        thr.finish()
+            .map_err(|e| format!("threaded engine error: {e}"))?;
+
+        prop_assert_eq!(&sim_prod, &reference);
+        prop_assert_eq!(&thr_prod, &reference);
+        prop_assert!(
+            sim_prod == thr_prod,
+            "products diverge at {:?} n={} p={} base=2^{}",
+            shape.entry,
+            shape.n,
+            shape.p,
+            shape.base.log2
+        );
+        prop_assert!(
+            sim_cost == thr_cost,
+            "cost triples diverge at {:?} n={} p={} base=2^{}: sim {} vs threads {}",
+            shape.entry,
+            shape.n,
+            shape.p,
+            shape.base.log2,
+            sim_cost,
+            thr_cost
+        );
+        Ok(())
+    });
+}
+
+/// The scheduler path: concurrent jobs on shards of one shared machine
+/// must match dedicated single-job machines bit for bit — products AND
+/// cost triples (the uniform-baseline accounting argument, asserted).
+#[test]
+fn differential_scheduler_sharded_vs_single_job() {
+    // (requested procs, forced scheme) mix: shard sizes 4/12/16 on a
+    // 16-processor machine force shard waits and work-stealing.
+    let mixes: &[(usize, Option<Algorithm>)] = &[
+        (4, Some(Algorithm::Copsim)),
+        (4, Some(Algorithm::Copk)),
+        (4, None),
+        (12, Some(Algorithm::Copk)),
+        (16, Some(Algorithm::Copsim)),
+    ];
+    let jobs_per_engine = (cases(48) / 4).clamp(8, 64) as usize;
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        let cfg = SchedulerConfig {
+            procs: 16,
+            runners: 4,
+            engine,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let mut rng = Rng::new(0xD1FF);
+        let mut pending = Vec::new();
+        for id in 0..jobs_per_engine as u64 {
+            // The first wave is four chunky 4-proc jobs: all four shards
+            // fill simultaneously, so concurrency is demonstrated
+            // deterministically rather than by racing small jobs.
+            let (n, (procs, algo)) = if id < 4 {
+                (512, (4, Some(Algorithm::Copsim)))
+            } else {
+                ((16usize) << rng.range(0, 3), *rng.pick(mixes))
+            };
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = procs;
+            spec.algo = algo;
+            pending.push((spec.clone(), sched.submit(spec).unwrap()));
+        }
+        for (spec, rx) in pending {
+            let res = rx.recv().unwrap().unwrap_or_else(|e| {
+                panic!("job {} failed on {engine}: {e}", spec.id);
+            });
+            let shard = res.shard.clone().expect("scheduler results carry shards");
+            // Dedicated single-job reference on a fresh cost-model
+            // machine of the shard's size (engine equivalence makes the
+            // cost model the reference for both engines).
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            let leaf = leaf_ref(SchoolLeaf);
+            let (product, _algo) =
+                execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+            assert_eq!(
+                res.product, product,
+                "sharded product != single-job product (job {}, {engine})",
+                spec.id
+            );
+            assert_eq!(
+                res.cost,
+                solo.critical(),
+                "sharded cost triple != single-job cost (job {}, {engine})",
+                spec.id
+            );
+        }
+        let peak = sched
+            .stats
+            .peak_concurrent
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            peak >= 2,
+            "scheduler never ran 2 jobs concurrently on {engine} (peak {peak})"
+        );
+        sched.shutdown().unwrap();
+    }
+}
