@@ -23,14 +23,14 @@ fn main() {
         (EngineKind::Threads, 16, 1 << 12),
         (EngineKind::Threads, 16, 1 << 14),
     ] {
-        let serial = match run_fleet(engine, 4, 1, jobs, n) {
+        let serial = match run_fleet(engine, 4, 1, jobs, n, None) {
             Ok(o) => o,
             Err(e) => {
                 println!("scheduler {engine} jobs={jobs} n={n}: serial FAILED: {e}");
                 continue;
             }
         };
-        let sharded = match run_fleet(engine, 16, 4, jobs, n) {
+        let sharded = match run_fleet(engine, 16, 4, jobs, n, None) {
             Ok(o) => o,
             Err(e) => {
                 println!("scheduler {engine} jobs={jobs} n={n}: sharded FAILED: {e}");

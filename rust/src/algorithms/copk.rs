@@ -312,7 +312,7 @@ mod tests {
         let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
         let c = copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap();
-        let cd = c.gather(&m);
+        let cd = c.gather(&m).unwrap();
         (m, a, b, cd)
     }
 
@@ -377,7 +377,7 @@ mod tests {
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
             let c = copk(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf))
                 .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
-            verify_product(&a, &b, &c.gather(&m));
+            verify_product(&a, &b, &c.gather(&m).unwrap());
             let crit = m.critical();
             let bound = theory::thm15_copk(n as u64, p as u64, cap);
             assert!(crit.ops <= bound.ops, "T: {} > {}", crit.ops, bound.ops);
@@ -403,7 +403,7 @@ mod tests {
             let c = copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
-            crate::prop_assert_eq!(c.gather(&m), want);
+            crate::prop_assert_eq!(c.gather(&m).unwrap(), want);
             crate::prop_assert_eq!(m.mem_used_total(), 2 * n as u64);
             Ok(())
         });

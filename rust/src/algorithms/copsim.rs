@@ -234,7 +234,7 @@ mod tests {
         let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
         let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
-        let cd = c.gather(&m);
+        let cd = c.gather(&m).unwrap();
         (m, a, b, cd)
     }
 
@@ -322,7 +322,7 @@ mod tests {
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
             let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf))
                 .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
-            let cd = c.gather(&m);
+            let cd = c.gather(&m).unwrap();
             verify_product(&a, &b, &cd);
         }
     }
@@ -344,7 +344,7 @@ mod tests {
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
             let c = copsim(&mut m, &seq, da, db, &leaf_ref(SchoolLeaf))
                 .unwrap_or_else(|e| panic!("p={p} n={n} cap={cap}: {e}"));
-            let cd = c.gather(&m);
+            let cd = c.gather(&m).unwrap();
             verify_product(&a, &b, &cd);
             // Costs within Theorem 12.
             let crit = m.critical();
@@ -374,7 +374,7 @@ mod tests {
             let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
-            crate::prop_assert_eq!(c.gather(&m), want);
+            crate::prop_assert_eq!(c.gather(&m).unwrap(), want);
             // All intermediates freed: only the product remains.
             crate::prop_assert_eq!(m.mem_used_total(), 2 * n as u64);
             Ok(())

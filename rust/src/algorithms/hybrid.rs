@@ -151,7 +151,7 @@ mod tests {
             let (c, _algo) = hybrid_mul(&mut m, &seq, da, db, &leaf, &tm).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
-            assert_eq!(c.gather(&m), want, "p={p} n={n}");
+            assert_eq!(c.gather(&m).unwrap(), want, "p={p} n={n}");
         }
     }
 }

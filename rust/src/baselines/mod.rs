@@ -39,9 +39,9 @@ pub fn allgather_schoolbook<M: MachineApi>(
 
     if p == 1 {
         let pid = seq.at(0);
-        let av = m.read(pid, a.chunks[0].1);
-        let bv = m.read(pid, b.chunks[0].1);
-        let c = m.local(pid, move |base, ops| mul::mul_school(&av, &bv, *base, ops));
+        let av = m.read(pid, a.chunks[0].1)?;
+        let bv = m.read(pid, b.chunks[0].1)?;
+        let c = m.local(pid, move |base, ops| mul::mul_school(&av, &bv, *base, ops))?;
         a.free(m);
         b.free(m);
         let slot = m.alloc(pid, c)?;
@@ -69,8 +69,8 @@ pub fn allgather_schoolbook<M: MachineApi>(
     let mut scratch_slots = Vec::with_capacity(p);
     for j in 0..p {
         let pid = seq.at(j);
-        let av = m.read(pid, full_a[j]);
-        let bv = m.read(pid, full_b[j]);
+        let av = m.read(pid, full_a[j])?;
+        let bv = m.read(pid, full_b[j])?;
         let lo = j * 2 * w;
         let hi = lo + 2 * w;
         let mut slice = vec![0u64; 2 * w];
@@ -145,7 +145,7 @@ fn allgather<M: MachineApi>(m: &mut M, seq: &Seq, x: &DistInt) -> Result<Vec<cra
     // blocks[j] = digits currently held by rank j (starts as own chunk).
     let mut blocks: Vec<Vec<u32>> = (0..p)
         .map(|j| m.read(x.chunks[j].0, x.chunks[j].1))
-        .collect();
+        .collect::<Result<_>>()?;
     let mut owned: Vec<usize> = (0..p).collect(); // aligned block index
     let mut size = 1usize; // chunks per block
     while size < p {
@@ -231,16 +231,16 @@ fn ms_mul<M: MachineApi>(
     // A pool too small to farm out three subproblems computes locally —
     // and small operands are not worth shipping either.
     if pool.len() < 4 || n <= 64 {
-        let av = m.read(master, sa);
-        let bv = m.read(master, sb);
+        let av = m.read(master, sa)?;
+        let bv = m.read(master, sb)?;
         let scratch = m.alloc(master, vec![0u32; 4 * n])?;
-        let c = m.local(master, move |base, ops| mul::skim(&av, &bv, *base, ops));
+        let c = m.local(master, move |base, ops| mul::skim(&av, &bv, *base, ops))?;
         m.free(master, scratch);
         return m.alloc(master, c);
     }
 
     let h = n / 2;
-    let (av, bv) = (m.read(master, sa), m.read(master, sb));
+    let (av, bv) = (m.read(master, sa)?, m.read(master, sb)?);
     let (a0, a1) = (av[..h].to_vec(), av[h..].to_vec());
     let (b0, b1) = (bv[..h].to_vec(), bv[h..].to_vec());
 
@@ -252,7 +252,7 @@ fn ms_mul<M: MachineApi>(
             abs_diff(&a0c, &a1c, *base, ops),
             abs_diff(&b1c, &b0c, *base, ops),
         )
-    });
+    })?;
     let sign = fa * fb;
 
     // Farm out: three slaves pools led by slaves[i][0]; ship operands.
@@ -285,9 +285,9 @@ fn ms_mul<M: MachineApi>(
 
     // Master combines sequentially: C = C0 + s^h(C0+C2±C') + s^n C2.
     let (c0, cp, c2) = (
-        m.read(master, rc0),
-        m.read(master, rcp),
-        m.read(master, rc2),
+        m.read(master, rc0)?,
+        m.read(master, rcp)?,
+        m.read(master, rc2)?,
     );
     let c = m.local(master, move |base, ops| {
         let mut out = vec![0u32; 2 * n];
@@ -303,7 +303,7 @@ fn ms_mul<M: MachineApi>(
             Ordering::Equal => {}
         }
         out
-    });
+    })?;
     m.free(master, rc0);
     m.free(master, rcp);
     m.free(master, rc2);
@@ -356,7 +356,7 @@ mod tests {
             let c = allgather_schoolbook(&mut m, &seq, da, db).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
-            assert_eq!(c.gather(&m), want, "p={p} n={n}");
+            assert_eq!(c.gather(&m).unwrap(), want, "p={p} n={n}");
         }
     }
 
@@ -369,7 +369,7 @@ mod tests {
             let c = cesari_maeder(&mut m, &seq, da, db).unwrap();
             let mut ops = Ops::default();
             let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
-            assert_eq!(c.gather(&m), want, "p={p} n={n}");
+            assert_eq!(c.gather(&m).unwrap(), want, "p={p} n={n}");
         }
     }
 

@@ -88,6 +88,14 @@ pub struct JobResult {
     /// machine (the [`super::Coordinator`] path), the shard's ids for
     /// sharded execution (the [`super::Scheduler`] path).
     pub shard: Option<Vec<ProcId>>,
+    /// How many executions it took (1 = first try; >1 means earlier
+    /// attempts failed and the scheduler requeued the job).
+    pub attempts: u32,
+    /// Injected faults that hit the job's shard during the *successful*
+    /// attempt without killing it (stalls, duplicated messages). Zero
+    /// means the reported cost triple is bit-identical to a fault-free
+    /// dedicated run — the invariant the chaos suite asserts.
+    pub faults_survived: u64,
 }
 
 #[cfg(test)]

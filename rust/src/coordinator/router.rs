@@ -183,7 +183,7 @@ pub fn execute_on<M: MachineApi>(
         None => hybrid::hybrid_mul(machine, seq, da, db, leaf, time_model)?,
     };
 
-    let mut product = c.gather(machine);
+    let mut product = c.gather(machine)?;
     c.free(machine);
     let keep = normalized_len(&product).max(1);
     product.truncate(keep);
@@ -208,6 +208,8 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
                 mem_peak: machine.mem_peak_max(),
                 wall: t0.elapsed(),
                 shard: None,
+                attempts: 1,
+                faults_survived: 0,
             })
         }
         EngineKind::Threads => {
@@ -223,6 +225,8 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
                 mem_peak: report.mem_peak_max,
                 wall: t0.elapsed(),
                 shard: None,
+                attempts: 1,
+                faults_survived: 0,
             })
         }
     }

@@ -95,7 +95,7 @@ fn run_on<M: MachineApi>(
     // The gather synchronizes with all in-flight worker activity, so
     // the measured span covers the complete multiplication on both
     // engines.
-    let product = c.gather(m);
+    let product = c.gather(m)?;
     let wall = t0.elapsed();
     Ok((product, wall))
 }

@@ -11,6 +11,7 @@
 //! optimality claims (Theorems 1 and 2).
 
 pub mod algorithms;
+pub mod chaos;
 pub mod engines;
 pub mod primitives;
 pub mod scheduler;
@@ -69,7 +70,7 @@ pub fn run_algo(algo: Algo, n: usize, p: usize, mem: Option<u64>, seed: u64) -> 
     // Sanity: verify against the sequential oracle on every run.
     let mut ops = crate::bignum::Ops::default();
     let want = crate::bignum::mul::mul_school(&a, &b, base, &mut ops);
-    crate::error::ensure!(c.gather(&m) == want, "product mismatch in {algo:?}");
+    crate::error::ensure!(c.gather(&m)? == want, "product mismatch in {algo:?}");
     Ok(RunStats {
         clock: m.critical(),
         mem_peak: m.mem_peak_max(),
@@ -185,6 +186,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "sharded scheduler: jobs/sec + per-job critical-path inflation",
             run: scheduler::e16_scheduler,
         },
+        Experiment {
+            id: "E17",
+            paper_ref: "bounds under faults",
+            title: "chaos: throughput + cost inflation vs injected fault rate",
+            run: chaos::e17_chaos,
+        },
     ]
 }
 
@@ -209,10 +216,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 16);
+        assert_eq!(reg.len(), 17);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 16);
+        assert_eq!(ids.len(), 17);
     }
 
     #[test]

@@ -36,6 +36,10 @@ pub struct FleetOutcome {
     pub results: Vec<JobResult>,
     /// High-water mark of concurrently running jobs.
     pub peak_concurrent: u64,
+    /// Total faults the machine's plan injected (0 without a plan).
+    pub faults_injected: u64,
+    /// Failed attempts that were requeued.
+    pub retries: u64,
 }
 
 impl FleetOutcome {
@@ -46,19 +50,28 @@ impl FleetOutcome {
 
 /// Run `jobs` identical-distribution jobs (seeded; the fleet is the
 /// same across calls) through a scheduler of `procs` processors with
-/// `runners` concurrent shards.
+/// `runners` concurrent shards. `fault` optionally arms the shared
+/// machine's deterministic injection plan (E17); `None` is the
+/// fault-free configuration every other experiment uses.
 pub fn run_fleet(
     engine: EngineKind,
     procs: usize,
     runners: usize,
     jobs: usize,
     n: usize,
+    fault: Option<crate::sim::FaultConfig>,
 ) -> Result<FleetOutcome> {
     let sched = Scheduler::start(
         SchedulerConfig {
             procs,
             runners,
             engine,
+            fault,
+            max_attempts: 5,
+            // Uniform injection would quarantine arbitrary processors
+            // and turn throughput runs into capacity races; the policy
+            // has its own tests (see tests/chaos_soak.rs rationale).
+            quarantine_after: 0,
             ..Default::default()
         },
         leaf_ref(SchoolLeaf),
@@ -83,11 +96,15 @@ pub fn run_fleet(
         .stats
         .peak_concurrent
         .load(std::sync::atomic::Ordering::Relaxed);
+    let faults_injected = sched.faults_injected();
+    let retries = sched.stats.retries.load(std::sync::atomic::Ordering::Relaxed);
     sched.shutdown()?;
     Ok(FleetOutcome {
         wall,
         results,
         peak_concurrent,
+        faults_injected,
+        retries,
     })
 }
 
@@ -123,8 +140,8 @@ pub fn e16_scheduler() -> Result<Vec<Table>> {
         ],
     );
     for engine in [EngineKind::Sim, EngineKind::Threads] {
-        let serial = run_fleet(engine, 4, 1, JOBS, N)?;
-        let sharded = run_fleet(engine, 16, 4, JOBS, N)?;
+        let serial = run_fleet(engine, 4, 1, JOBS, N, None)?;
+        let sharded = run_fleet(engine, 16, 4, JOBS, N, None)?;
         ensure!(
             serial.results.len() == sharded.results.len(),
             "fleet size mismatch"
@@ -190,8 +207,8 @@ mod tests {
     fn fleet_costs_identical_serial_vs_sharded() {
         // Small fleet so the debug-mode suite stays fast; the full E16
         // cell runs in release via `copmul experiment E16`.
-        let serial = run_fleet(EngineKind::Sim, 4, 1, 4, 256).unwrap();
-        let sharded = run_fleet(EngineKind::Sim, 16, 4, 4, 256).unwrap();
+        let serial = run_fleet(EngineKind::Sim, 4, 1, 4, 256, None).unwrap();
+        let sharded = run_fleet(EngineKind::Sim, 16, 4, 4, 256, None).unwrap();
         for (s, h) in serial.results.iter().zip(sharded.results.iter()) {
             assert_eq!(s.product, h.product, "job {}", s.id);
             assert_eq!(s.cost, h.cost, "sharding distorted job {}'s cost", s.id);
@@ -201,7 +218,7 @@ mod tests {
 
     #[test]
     fn fleet_runs_on_threaded_engine() {
-        let sharded = run_fleet(EngineKind::Threads, 16, 4, 4, 256).unwrap();
+        let sharded = run_fleet(EngineKind::Threads, 16, 4, 4, 256, None).unwrap();
         assert_eq!(sharded.results.len(), 4);
         assert!(sharded.results.iter().all(|r| r.cost.ops > 0));
     }

@@ -17,9 +17,12 @@
 //! * [`sim`] — the machine-model layer behind the [`sim::MachineApi`]
 //!   trait: a deterministic cost-model simulator ([`sim::Machine`], with
 //!   critical-path accounting per §2.2, Yang–Miller, and per-processor
-//!   memory ledgers) and a real-threads executor
+//!   memory ledgers), a real-threads executor
 //!   ([`sim::ThreadedMachine`], one OS thread per simulated processor
-//!   with point-to-point message channels).
+//!   with point-to-point message channels), and a seeded deterministic
+//!   fault-injection wrapper over either engine
+//!   ([`sim::FaultyMachine`] — dropped/duplicated/reordered messages,
+//!   stalls, alloc/compute failures, recoverable processor crashes).
 //! * [`primitives`] — parallel `SUM`, `COMPARE`, `DIFF` (§4), including the
 //!   speculative carry/borrow pre-calculation the paper uses to break the
 //!   sequential carry chain.
@@ -36,12 +39,15 @@
 //! * [`coordinator`] — the serving layer: a multi-threaded job router
 //!   (one machine per job), a sharded multi-job scheduler (ONE shared
 //!   machine carved into per-job shards sized by the paper's memory
-//!   requirements, with admission control and work-stealing), and a
-//!   dynamic batcher dispatching leaf products to the XLA runtime.
-//! * [`experiments`] — one module per paper result (E1–E16), each printing
+//!   requirements, with admission control, work-stealing, and fault
+//!   recovery — per-job retries with shard-size backoff, safe-mode
+//!   final attempts, processor quarantine), and a dynamic batcher
+//!   dispatching leaf products to the XLA runtime.
+//! * [`experiments`] — one module per paper result (E1–E17), each printing
 //!   a `paper bound | measured | ratio` table; E15 compares the
 //!   cost-model and threaded execution engines, E16 measures the sharded
-//!   scheduler's throughput and per-job cost inflation.
+//!   scheduler's throughput and per-job cost inflation, E17 measures
+//!   throughput and cost inflation under injected faults.
 //!
 //! See `rust/DESIGN.md` for the architecture notes (including the
 //! two-backend execution-engine split) and the experiment index.

@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
-//! copmul experiment <id|all> [--csv]           run paper experiments E1-E16
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E17
 //! copmul serve [key=value ...]                 coordinator demo workload
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
@@ -14,10 +14,11 @@
 //! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
 //! `engine` (sim|threads; also spelled `--engine=...`), `seed`,
 //! `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
-//! `serve` additionally takes `--jobs=N` (request count) and
-//! `--shards=K` (run the sharded scheduler: ONE shared machine of
-//! `procs` processors carved into up to `K` concurrent shards, instead
-//! of one dedicated machine per job).
+//! `serve` additionally takes `--jobs=N` (request count), `--shards=K`
+//! (run the sharded scheduler: ONE shared machine of `procs` processors
+//! carved into up to `K` concurrent shards, instead of one dedicated
+//! machine per job) and `--fault-rate=R`/`--fault-seed=S` (sharded
+//! only: deterministic fault injection with scheduler recovery).
 
 use copmul::algorithms::leaf::{HybridLeaf, LeafMultiplier, SchoolLeaf, SkimLeaf, SlimLeaf};
 use copmul::bignum::convert::{parse_hex, to_hex};
@@ -29,6 +30,7 @@ use copmul::error::{bail, Context, Result};
 use copmul::experiments;
 use copmul::metrics::fmt_u64;
 use copmul::runtime::{XlaLeaf, XlaRuntime};
+use copmul::sim::FaultConfig;
 use copmul::util::Rng;
 use std::sync::Arc;
 
@@ -60,8 +62,8 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E16|all> [--csv] [key=value ...]
-  copmul serve [--jobs=N] [--shards=K] [key=value ...]
+  copmul experiment <E1..E17|all> [--csv] [key=value ...]
+  copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [key=value ...]
   copmul info [artifacts=DIR]
   copmul selftest
 
@@ -75,6 +77,11 @@ SERVE:   --jobs=N   number of requests (default 64)
          --shards=K sharded scheduler: one shared `procs`-processor machine,
                     up to K jobs running concurrently on disjoint shards
                     (omit for the classic one-machine-per-job coordinator)
+         --fault-rate=R --fault-seed=S (sharded only) deterministic fault
+                    injection: each eligible machine operation faults with
+                    probability R from seed S (default 0 / 42); failed jobs
+                    are retried with shard-size backoff and the run reports
+                    injected faults, retries and quarantined processors
 ";
 
 /// Build the leaf backend the config names.
@@ -158,6 +165,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut cfg = RunConfig::default();
     let mut jobs = 64usize;
     let mut shards: Option<usize> = None;
+    let mut fault_rate = 0f64;
+    let mut fault_seed = 42u64;
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("jobs=").or_else(|| a.strip_prefix("--jobs=")) {
@@ -167,6 +176,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .or_else(|| a.strip_prefix("--shards="))
         {
             shards = Some(v.parse().context("shards")?);
+        } else if let Some(v) = a
+            .strip_prefix("fault-rate=")
+            .or_else(|| a.strip_prefix("--fault-rate="))
+        {
+            fault_rate = v.parse().context("fault-rate")?;
+        } else if let Some(v) = a
+            .strip_prefix("fault-seed=")
+            .or_else(|| a.strip_prefix("--fault-seed="))
+        {
+            fault_seed = v.parse().context("fault-seed")?;
         } else {
             rest.push(a.clone());
         }
@@ -175,9 +194,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if jobs == 0 {
         bail!("--jobs must be >= 1");
     }
+    if !(0.0..=1.0).contains(&fault_rate) {
+        bail!("--fault-rate must be in [0, 1]");
+    }
+    let fault = (fault_rate > 0.0).then(|| FaultConfig::new(fault_seed, fault_rate));
     match shards {
-        Some(k) => serve_sharded(&cfg, jobs, k),
-        None => serve_per_job(&cfg, jobs),
+        Some(k) => serve_sharded(&cfg, jobs, k, fault),
+        None => {
+            if fault.is_some() {
+                bail!("--fault-rate requires the sharded scheduler (--shards=K)");
+            }
+            serve_per_job(&cfg, jobs)
+        }
     }
 }
 
@@ -223,8 +251,15 @@ fn serve_per_job(cfg: &RunConfig, jobs: usize) -> Result<()> {
 
 /// Sharded path: ONE shared machine of `procs` processors; jobs request
 /// `procs / shards` processors each and run concurrently on disjoint
-/// shards, stealing freed processors as earlier jobs complete.
-fn serve_sharded(cfg: &RunConfig, jobs: usize, shards: usize) -> Result<()> {
+/// shards, stealing freed processors as earlier jobs complete. With a
+/// fault plan, the machine deterministically injects faults and the
+/// scheduler's recovery (retries, backoff, quarantine) absorbs them.
+fn serve_sharded(
+    cfg: &RunConfig,
+    jobs: usize,
+    shards: usize,
+    fault: Option<FaultConfig>,
+) -> Result<()> {
     if shards == 0 {
         bail!("--shards must be >= 1");
     }
@@ -232,8 +267,32 @@ fn serve_sharded(cfg: &RunConfig, jobs: usize, shards: usize) -> Result<()> {
         bail!("--shards={shards} must divide procs={}", cfg.procs);
     }
     let per_job = cfg.procs / shards;
+    // procs/shards must be a shape the scheme ladder actually accepts
+    // (4^k / 4·3^i / their union) — otherwise plan_shard silently
+    // rounds every job UP and the run delivers less concurrency than
+    // the banner claims. Probe with a representative job.
+    {
+        let mut probe = JobSpec::new(0, vec![1; cfg.n.max(1)], vec![1; cfg.n.max(1)]);
+        probe.procs = per_job;
+        probe.algo = cfg.algo;
+        probe.mem_cap = cfg.mem_cap;
+        let planned = copmul::coordinator::plan_shard(
+            &probe,
+            cfg.procs,
+            cfg.mem_cap.unwrap_or(u64::MAX / 2),
+        )?;
+        if planned != per_job {
+            bail!(
+                "--shards={shards} gives {per_job} procs/job, but the smallest shard \
+                 this workload can actually run on is {planned} (shapes are 4^k for \
+                 copsim, 4·3^i for copk, their union for hybrid, within memory); \
+                 pick shards so procs/shards is such a shape"
+            );
+        }
+    }
     let base = cfg.base();
     let leaf = make_leaf(cfg)?;
+    let faulty = fault.is_some();
     let sched = Scheduler::start(
         SchedulerConfig {
             procs: cfg.procs,
@@ -243,6 +302,8 @@ fn serve_sharded(cfg: &RunConfig, jobs: usize, shards: usize) -> Result<()> {
             time_model: cfg.time_model,
             runners: shards,
             max_queue: jobs.max(1024),
+            fault,
+            ..Default::default()
         },
         leaf,
     );
@@ -284,6 +345,17 @@ fn serve_sharded(cfg: &RunConfig, jobs: usize, shards: usize) -> Result<()> {
             .shards_stolen
             .load(std::sync::atomic::Ordering::Relaxed),
     );
+    if faulty {
+        println!(
+            "faults: {} injected, {} attempt(s) retried, {} processor(s) quarantined",
+            sched.faults_injected(),
+            sched
+                .stats
+                .retries
+                .load(std::sync::atomic::Ordering::Relaxed),
+            sched.quarantined_procs(),
+        );
+    }
     sched.shutdown()?;
     Ok(())
 }

@@ -32,8 +32,8 @@ fn compare_rec<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) ->
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
-        let f = m.local(pid, move |_base, ops| ord_to_flag(cmp_digits(&av, &bv, ops)));
+        let (av, bv) = (m.read(pid, sa)?, m.read(pid, sb)?);
+        let f = m.local(pid, move |_base, ops| ord_to_flag(cmp_digits(&av, &bv, ops)))?;
         return Ok(f);
     }
     let (lo_seq, hi_seq) = (seq.lower_half(), seq.upper_half());

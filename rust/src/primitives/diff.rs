@@ -36,13 +36,13 @@ fn diffr<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) -> Resul
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let (av, bv) = (m.read(pid, sa)?, m.read(pid, sb)?);
         let ((d0, b0), (d1, b1)) = m.local(pid, move |base, ops| {
             (
                 sub_with_borrow(&av, &bv, 0, *base, ops),
                 sub_with_borrow(&av, &bv, 1, *base, ops),
             )
-        });
+        })?;
         return Ok(DiffrOut {
             c0: DistInt {
                 chunk_width: a.chunk_width,
@@ -108,8 +108,8 @@ fn diffl<M: MachineApi>(
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
-        let (d, bo) = m.local(pid, move |base, ops| sub_with_borrow(&av, &bv, 0, *base, ops));
+        let (av, bv) = (m.read(pid, sa)?, m.read(pid, sb)?);
+        let (d, bo) = m.local(pid, move |base, ops| sub_with_borrow(&av, &bv, 0, *base, ops))?;
         return Ok((
             DistInt {
                 chunk_width: a.chunk_width,
@@ -168,8 +168,8 @@ pub fn diff<M: MachineApi>(
     if seq.len() == 1 {
         let pid = seq.at(0);
         let (sx, sy) = (x.chunks[0].1, y.chunks[0].1);
-        let (xv, yv) = (m.read(pid, sx), m.read(pid, sy));
-        let (d, bo) = m.local(pid, move |base, ops| sub_with_borrow(&xv, &yv, 0, *base, ops));
+        let (xv, yv) = (m.read(pid, sx)?, m.read(pid, sy)?);
+        let (d, bo) = m.local(pid, move |base, ops| sub_with_borrow(&xv, &yv, 0, *base, ops))?;
         debug_assert_eq!(bo, 0);
         return Ok((
             DistInt {
@@ -208,13 +208,13 @@ mod tests {
         let (c, f) = diff(&mut m, &seq, &da, &db).unwrap();
         assert_eq!(f, 1);
         assert_eq!(
-            to_u128(&c.gather(&m), base),
+            to_u128(&c.gather(&m).unwrap(), base),
             0x1234_5678_9ABC_DEF0 - 0x0FED_CBA9_8765_4321
         );
         // Reversed: |B - A| with f = -1.
         let (c2, f2) = diff(&mut m, &seq, &db, &da).unwrap();
         assert_eq!(f2, -1);
-        assert_eq!(c2.gather(&m), c.gather(&m));
+        assert_eq!(c2.gather(&m).unwrap(), c.gather(&m).unwrap());
     }
 
     #[test]
@@ -225,7 +225,7 @@ mod tests {
         let (da, db) = (dist(&mut m, &seq, &a), dist(&mut m, &seq, &a));
         let (c, f) = diff(&mut m, &seq, &da, &db).unwrap();
         assert_eq!(f, 0);
-        assert_eq!(c.gather(&m), vec![0, 0, 0, 0]);
+        assert_eq!(c.gather(&m).unwrap(), vec![0, 0, 0, 0]);
     }
 
     #[test]
@@ -244,7 +244,7 @@ mod tests {
             let mut ops = crate::bignum::Ops::default();
             let (want_f, want) = crate::bignum::mul::abs_diff(&a, &b, base, &mut ops);
             crate::prop_assert_eq!(f, want_f);
-            crate::prop_assert_eq!(c.gather(&m), want);
+            crate::prop_assert_eq!(c.gather(&m).unwrap(), want);
             Ok(())
         });
     }

@@ -83,7 +83,7 @@ pub(crate) fn check_layout(seq: &Seq, x: &DistInt, what: &str) {
 pub(crate) fn dup_dist<M: MachineApi>(m: &mut M, x: &DistInt) -> crate::error::Result<DistInt> {
     let mut chunks = Vec::with_capacity(x.chunks.len());
     for &(p, slot) in &x.chunks {
-        let data = m.read(p, slot);
+        let data = m.read(p, slot)?;
         let s = m.alloc(p, data)?;
         chunks.push((p, s));
     }

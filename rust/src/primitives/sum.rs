@@ -30,13 +30,13 @@ fn suma<M: MachineApi>(m: &mut M, seq: &Seq, a: &DistInt, b: &DistInt) -> Result
     if p == 1 {
         let pid = seq.at(0);
         let (&(_, sa), &(_, sb)) = (&a.chunks[0], &b.chunks[0]);
-        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
+        let (av, bv) = (m.read(pid, sa)?, m.read(pid, sb)?);
         let ((d0, u0), (d1, u1)) = m.local(pid, move |base, ops| {
             (
                 add_with_carry(&av, &bv, 0, *base, ops),
                 add_with_carry(&av, &bv, 1, *base, ops),
             )
-        });
+        })?;
         let c0 = DistInt {
             chunk_width: a.chunk_width,
             chunks: vec![(pid, m.alloc(pid, d0)?)],
@@ -108,8 +108,8 @@ pub fn sum<M: MachineApi>(
     if p == 1 {
         let pid = seq.at(0);
         let (sa, sb) = (a.chunks[0].1, b.chunks[0].1);
-        let (av, bv) = (m.read(pid, sa), m.read(pid, sb));
-        let (d, v) = m.local(pid, move |base, ops| add_with_carry(&av, &bv, 0, *base, ops));
+        let (av, bv) = (m.read(pid, sa)?, m.read(pid, sb)?);
+        let (d, v) = m.local(pid, move |base, ops| add_with_carry(&av, &bv, 0, *base, ops))?;
         let c = DistInt {
             chunk_width: a.chunk_width,
             chunks: vec![(pid, m.alloc(pid, d)?)],
@@ -180,7 +180,7 @@ mod tests {
         let da = DistInt::scatter(&mut m, &seq, &a, w).unwrap();
         let db = DistInt::scatter(&mut m, &seq, &b, w).unwrap();
         let (c, v) = sum(&mut m, &seq, &da, &db).unwrap();
-        let digits = c.gather(&m);
+        let digits = c.gather(&m).unwrap();
         (m, digits, v, a, b)
     }
 
@@ -239,7 +239,7 @@ mod tests {
             .collect();
         let refs: Vec<&DistInt> = dists.iter().collect();
         let (c, carry) = sum_many(&mut m, &seq, &refs).unwrap();
-        let got = to_u128(&c.gather(&m), base) + ((carry as u128) << 64);
+        let got = to_u128(&c.gather(&m).unwrap(), base) + ((carry as u128) << 64);
         assert_eq!(got, xs.iter().sum::<u128>());
     }
 

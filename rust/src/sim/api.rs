@@ -37,6 +37,19 @@
 //! O(w^lg3) digit work) go through it, which is where the threaded
 //! backend's wall-clock speedup comes from. `local` stays synchronous
 //! because its result feeds control flow (carries, flags).
+//!
+//! ## Fallibility
+//!
+//! The blocking operations (`read`, `local`, `proc_view`) return
+//! `Result`: on a real-threads backend the owning worker thread can be
+//! gone (panicked, or crashed by the fault-injection wrapper
+//! [`super::FaultyMachine`]), and the failure must surface as an error
+//! the caller — one job of many on a shared machine — can recover from,
+//! rather than poisoning the whole machine with a panic. The cost-model
+//! backend never fails these. Purely-accounting operations (`compute`,
+//! `free`, `barrier`, `purge`) stay infallible; on a dead processor
+//! they become no-ops and the next fallible operation reports the
+//! death.
 
 use super::machine::{MachineStats, ProcId, Slot};
 use super::Clock;
@@ -93,14 +106,15 @@ pub trait MachineApi {
     fn free(&mut self, p: ProcId, slot: Slot);
 
     /// Read a slot's contents (no cost charged; synchronizes with any
-    /// pending asynchronous work on `p`).
-    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32>;
+    /// pending asynchronous work on `p`). Fails when `p`'s worker is
+    /// dead or crashed (see module docs, "Fallibility").
+    fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>>;
 
     /// Read a scalar slot.
-    fn read_scalar(&self, p: ProcId, slot: Slot) -> u32 {
-        let d = self.read(p, slot);
+    fn read_scalar(&self, p: ProcId, slot: Slot) -> Result<u32> {
+        let d = self.read(p, slot)?;
         debug_assert_eq!(d.len(), 1);
-        d[0]
+        Ok(d[0])
     }
 
     /// Overwrite a slot in place (same or different width; ledger
@@ -115,8 +129,8 @@ pub trait MachineApi {
     /// Run a local computation on `p` whose digit-op count is tracked by
     /// an [`Ops`] counter; blocks until the result is available (results
     /// feed control flow). Executes on `p`'s thread in the threaded
-    /// backend.
-    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    /// backend; fails when that thread is dead or crashed.
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> Result<R>
     where
         R: Send + 'static,
         F: FnOnce(&Base, &mut Ops) -> R + Send + 'static;
@@ -167,8 +181,8 @@ pub trait MachineApi {
     /// One processor's clock and memory ledger (synchronizes with any
     /// pending asynchronous work on `p`). Sub-machine (shard) costs are
     /// computed from these views; `critical()` only covers the whole
-    /// machine.
-    fn proc_view(&self, p: ProcId) -> ProcView;
+    /// machine. Fails when `p`'s worker is dead or crashed.
+    fn proc_view(&self, p: ProcId) -> Result<ProcView>;
 
     /// Critical-path cost: component-wise max over all processors.
     fn critical(&self) -> Clock;

@@ -64,12 +64,13 @@ impl DistInt {
     }
 
     /// Collect the full digit vector (verification only — no cost).
-    pub fn gather<M: MachineApi>(&self, m: &M) -> Vec<u32> {
+    /// Fails when a chunk owner's worker is dead or crashed.
+    pub fn gather<M: MachineApi>(&self, m: &M) -> Result<Vec<u32>> {
         let mut out = Vec::with_capacity(self.total_width());
         for &(p, slot) in &self.chunks {
-            out.extend_from_slice(&m.read(p, slot));
+            out.extend_from_slice(&m.read(p, slot)?);
         }
-        out
+        Ok(out)
     }
 
     /// Free every chunk.
@@ -161,7 +162,7 @@ impl DistInt {
         for (j, &(src, slot)) in self.chunks.iter().enumerate() {
             let d = dst.at(j);
             let s = if src == d {
-                let data = m.read(src, slot);
+                let data = m.read(src, slot)?;
                 m.alloc(d, data)?
             } else {
                 m.send_copy(src, d, slot)?
@@ -231,7 +232,7 @@ impl DistInt {
                 let slot = if *src == dst {
                     let mut buf: Vec<u32> = Vec::with_capacity(new_width);
                     for &(slot, r_lo, r_hi) in pieces {
-                        buf.extend_from_slice(&m.read(*src, slot)[r_lo..r_hi]);
+                        buf.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
                     }
                     m.alloc(dst, buf)?
                 } else if pieces.len() == 1 {
@@ -244,7 +245,7 @@ impl DistInt {
                 } else {
                     let mut payload: Vec<u32> = Vec::with_capacity(new_width);
                     for &(slot, r_lo, r_hi) in pieces {
-                        payload.extend_from_slice(&m.read(*src, slot)[r_lo..r_hi]);
+                        payload.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
                     }
                     m.send(*src, dst, payload)?
                 };
@@ -259,7 +260,7 @@ impl DistInt {
             for (src, pieces) in &runs {
                 if *src == dst {
                     for &(slot, r_lo, r_hi) in pieces {
-                        buf.extend_from_slice(&m.read(*src, slot)[r_lo..r_hi]);
+                        buf.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
                     }
                 } else {
                     let s = if pieces.len() == 1 {
@@ -268,11 +269,11 @@ impl DistInt {
                     } else {
                         let mut payload: Vec<u32> = Vec::new();
                         for &(slot, r_lo, r_hi) in pieces {
-                            payload.extend_from_slice(&m.read(*src, slot)[r_lo..r_hi]);
+                            payload.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
                         }
                         m.send(*src, dst, payload)?
                     };
-                    buf.extend_from_slice(&m.read(dst, s));
+                    buf.extend_from_slice(&m.read(dst, s)?);
                     m.free(dst, s);
                 }
             }
@@ -335,7 +336,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let digits = rng.digits(16, 16);
         let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
-        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.gather(&m).unwrap(), digits);
         assert_eq!(m.critical().words, 0, "scatter must not communicate");
     }
 
@@ -346,10 +347,10 @@ mod tests {
         let digits: Vec<u32> = (0..16).collect();
         let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
         let (lo, hi) = d.split_half();
-        assert_eq!(lo.gather(&m), (0..8).collect::<Vec<u32>>());
-        assert_eq!(hi.gather(&m), (8..16).collect::<Vec<u32>>());
+        assert_eq!(lo.gather(&m).unwrap(), (0..8).collect::<Vec<u32>>());
+        assert_eq!(hi.gather(&m).unwrap(), (8..16).collect::<Vec<u32>>());
         let d = DistInt::concat(lo, hi);
-        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.gather(&m).unwrap(), digits);
     }
 
     #[test]
@@ -362,7 +363,7 @@ mod tests {
         // 8 procs x 4 digits -> 4 procs x 8 digits (upper half owners).
         let target = Seq(vec![4, 5, 6, 7]);
         let d = d.repartition(&mut m, &target, 8).unwrap();
-        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.gather(&m).unwrap(), digits);
         assert_eq!(d.owners(), vec![4, 5, 6, 7]);
         // Each moved digit charged once; runs are coalesced, so at most
         // one message per (contiguous source range, destination) pair.
@@ -377,7 +378,7 @@ mod tests {
         let digits: Vec<u32> = (0..16).collect();
         let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
         let d = d.repartition(&mut m, &seq, 4).unwrap();
-        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.gather(&m).unwrap(), digits);
         assert_eq!(m.stats.total_words, 0);
         assert_eq!(m.stats.total_msgs, 0);
     }
@@ -390,7 +391,7 @@ mod tests {
         let d = DistInt::scatter(&mut m, &seq, &digits, 4).unwrap();
         let inter = seq.interleave_halves(); // [0, 2, 1, 3]
         let d = d.repartition(&mut m, &inter, 4).unwrap();
-        assert_eq!(d.gather(&m), digits);
+        assert_eq!(d.gather(&m).unwrap(), digits);
         assert_eq!(d.owners(), inter.ids().to_vec());
     }
 
@@ -404,7 +405,7 @@ mod tests {
         let digits: Vec<u32> = (0..16).collect();
         let d = DistInt::scatter(&mut m, &Seq(vec![0, 0, 2, 2]), &digits, 4).unwrap();
         let c = d.copy_to(&mut m, &Seq(vec![0, 1]), 8).unwrap();
-        assert_eq!(c.gather(&m), digits);
+        assert_eq!(c.gather(&m).unwrap(), digits);
         // Chunk 0: owner 0 == dst 0 — free. Chunk 1: owner 2 -> dst 1 —
         // one coalesced 8-word message (the uncoalesced path charged 2).
         assert_eq!(m.stats.total_msgs, 1);
@@ -438,7 +439,7 @@ mod tests {
         let d = d.extend_zero(&mut m, &[2, 3]).unwrap();
         let mut want = digits.clone();
         want.extend(vec![0u32; 8]);
-        assert_eq!(d.gather(&m), want);
+        assert_eq!(d.gather(&m).unwrap(), want);
         let _ = seq;
     }
 }

@@ -1,0 +1,740 @@
+//! [`FaultyMachine`] — deterministic fault injection over any execution
+//! engine.
+//!
+//! The paper's cost theorems assume a machine that never fails; the
+//! serving layer cannot. This wrapper implements [`MachineApi`] over any
+//! inner engine and injects faults from a **seeded plan**: every
+//! eligible operation draws a decision from a hash of
+//! `(seed, processor, per-processor op index)`, so a given seed produces
+//! the same fault sequence on every run of the same program — on the
+//! cost-model engine *and* on the threaded engine, whose hosts issue the
+//! identical operation stream.
+//!
+//! ## Injectable faults ([`FaultKind`])
+//!
+//! * `DropMsg` — a point-to-point message is lost: the send is not
+//!   performed and the call errors (the coordination algorithms cannot
+//!   survive a lost message, so the job fails and is retried).
+//! * `DupMsg` — the message is delivered twice; the duplicate is
+//!   discarded at the receiver. The product is unaffected but the
+//!   sender's clock is charged for both copies — cost inflation, not
+//!   failure.
+//! * `ReorderMsg` — the message arrives out of sequence: the wire cost
+//!   is charged and the payload discarded, and the call errors (the
+//!   machine model's channels are ordered by construction, so a
+//!   reordered message is detected, like a sequence-number mismatch).
+//! * `Stall` — transient processor stall: extra digit-op clock skew is
+//!   charged to the processor at a `send` or `barrier`. Cost inflation,
+//!   not failure.
+//! * `AllocFail` — an `alloc`/`replace` fails (transient memory
+//!   pressure); surfaces as the same recoverable `Err` a real
+//!   over-capacity allocation produces.
+//! * `ComputeFail` — a `compute_slot` (leaf product) fails.
+//! * `Crash` — the processor dies: the triggering call errors and every
+//!   later fallible operation involving the processor errors too, until
+//!   [`FaultyMachine::heal`] restarts it (the scheduler heals a shard's
+//!   processors when it reclaims the shard).
+//!
+//! Every injected fault is recorded as a [`FaultEvent`], so tests can
+//! assert exact fault counts and the scheduler can report how many
+//! faults a job survived.
+//!
+//! ## Zero-fault transparency
+//!
+//! When no fault fires (rate 0, suppressed processors, or simply no
+//! draw below the rate), every operation passes straight through to the
+//! inner engine with **no extra cost charged** — products and cost
+//! triples are bit-identical to an unwrapped run. The chaos suite
+//! asserts this invariant end to end.
+//!
+//! ## Determinism boundary
+//!
+//! The per-processor op index is advanced by every state-changing
+//! `MachineApi` call involving the processor (immutable observers —
+//! `read`, `proc_view` — check crash state but do not advance it).
+//! [`FaultyMachine::reset_op_index`] rewinds chosen processors to index
+//! zero; the scheduler calls it when a shard is acquired, so a job's
+//! fault pattern depends only on `(seed, shard processors, the job's own
+//! operation stream)` — not on which jobs ran on the shard before it.
+
+use super::api::{MachineApi, ProcView, SlotComputation};
+use super::machine::{MachineStats, ProcId, Slot};
+use super::Clock;
+use crate::bignum::{Base, Ops};
+use crate::error::{anyhow, Result};
+use std::ops::Range;
+
+/// One injectable fault category (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    DropMsg,
+    DupMsg,
+    ReorderMsg,
+    Stall,
+    AllocFail,
+    ComputeFail,
+    Crash,
+}
+
+/// All fault kinds, in the order used for deterministic kind selection.
+pub const ALL_FAULT_KINDS: [FaultKind; 7] = [
+    FaultKind::DropMsg,
+    FaultKind::DupMsg,
+    FaultKind::ReorderMsg,
+    FaultKind::Stall,
+    FaultKind::AllocFail,
+    FaultKind::ComputeFail,
+    FaultKind::Crash,
+];
+
+/// A recorded injection: what fired, where, and at which per-processor
+/// operation index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub proc: ProcId,
+    pub op_index: u64,
+}
+
+/// The seeded fault plan.
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Seed of the deterministic decision stream.
+    pub seed: u64,
+    /// Probability that an eligible operation injects a fault. The
+    /// paper-scale programs issue thousands of operations per job, so
+    /// useful soak rates are small (1e-4..1e-2).
+    pub rate: f64,
+    /// Clock skew (digit ops) charged by a `Stall`.
+    pub stall_ops: u64,
+    /// Kinds this plan may inject (defaults to all).
+    pub kinds: Vec<FaultKind>,
+}
+
+impl FaultConfig {
+    pub fn new(seed: u64, rate: f64) -> Self {
+        FaultConfig {
+            seed,
+            rate,
+            stall_ops: 64,
+            kinds: ALL_FAULT_KINDS.to_vec(),
+        }
+    }
+
+    /// Restrict the plan to the given kinds.
+    pub fn only(mut self, kinds: &[FaultKind]) -> Self {
+        self.kinds = kinds.to_vec();
+        self
+    }
+}
+
+/// Interception site: determines which fault kinds are applicable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Site {
+    Alloc,
+    Compute,
+    Send,
+    Barrier,
+    /// Counter-advancing but never injecting (free, compute charges,
+    /// local control-flow results).
+    Neutral,
+}
+
+impl Site {
+    fn applicable(self) -> &'static [FaultKind] {
+        match self {
+            Site::Alloc => &[FaultKind::AllocFail, FaultKind::Crash],
+            Site::Compute => &[FaultKind::ComputeFail, FaultKind::Crash],
+            Site::Send => &[
+                FaultKind::DropMsg,
+                FaultKind::DupMsg,
+                FaultKind::ReorderMsg,
+                FaultKind::Stall,
+                FaultKind::Crash,
+            ],
+            Site::Barrier => &[FaultKind::Stall],
+            Site::Neutral => &[],
+        }
+    }
+
+    fn salt(self) -> u64 {
+        match self {
+            Site::Alloc => 0xA110C,
+            Site::Compute => 0xC09901E,
+            Site::Send => 0x5E4D,
+            Site::Barrier => 0xBA221E2,
+            Site::Neutral => 0,
+        }
+    }
+}
+
+/// SplitMix64-style mixer: the decision hash.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic fault injection over any execution engine (see module
+/// docs). `FaultyMachine::passthrough` builds a transparent wrapper
+/// with no plan — zero overhead beyond the delegation.
+pub struct FaultyMachine<E: MachineApi> {
+    inner: E,
+    plan: Option<FaultConfig>,
+    /// Per-processor operation index (the deterministic "time" axis).
+    op_index: Vec<u64>,
+    /// Injected-crash state per processor.
+    crashed: Vec<bool>,
+    /// Injection suppressed per processor (the scheduler's safe-mode
+    /// escape hatch for a job's final attempt).
+    suppressed: Vec<bool>,
+    /// Every injected fault, in injection order.
+    events: Vec<FaultEvent>,
+    /// Injected-fault count per processor (cheap delta queries).
+    per_proc_events: Vec<u64>,
+}
+
+impl<E: MachineApi> FaultyMachine<E> {
+    /// Wrap `inner` with a seeded fault plan.
+    pub fn new(inner: E, plan: FaultConfig) -> Self {
+        Self::with(inner, Some(plan))
+    }
+
+    /// Wrap `inner` with an optional plan (`None` = fully transparent).
+    pub fn with(inner: E, plan: Option<FaultConfig>) -> Self {
+        let p = inner.n_procs();
+        FaultyMachine {
+            inner,
+            plan,
+            op_index: vec![0; p],
+            crashed: vec![false; p],
+            suppressed: vec![false; p],
+            events: Vec::new(),
+            per_proc_events: vec![0; p],
+        }
+    }
+
+    /// Transparent wrapper: no faults ever fire.
+    pub fn passthrough(inner: E) -> Self {
+        Self::with(inner, None)
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// `true` while an injected crash holds the processor down.
+    pub fn is_crashed(&self, p: ProcId) -> bool {
+        self.crashed[p]
+    }
+
+    /// Restart a crashed processor (recovery: the scheduler heals a
+    /// shard's processors while reclaiming the shard; the inner
+    /// engine's state survives because injected crashes never reached
+    /// it).
+    pub fn heal(&mut self, p: ProcId) {
+        self.crashed[p] = false;
+    }
+
+    /// Suppress (or re-enable) injection on a processor. Crash state is
+    /// unaffected; suppression only stops *new* faults.
+    pub fn set_suppressed(&mut self, p: ProcId, on: bool) {
+        self.suppressed[p] = on;
+    }
+
+    /// Rewind a processor's op index to zero (see module docs,
+    /// "Determinism boundary").
+    pub fn reset_op_index(&mut self, procs: &[ProcId]) {
+        for &p in procs {
+            self.op_index[p] = 0;
+        }
+    }
+
+    /// Every injected fault so far, in injection order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Number of injected faults involving processor `p`.
+    pub fn fault_count(&self, p: ProcId) -> u64 {
+        self.per_proc_events[p]
+    }
+
+    /// Total injected faults.
+    pub fn total_injected(&self) -> u64 {
+        self.events.len() as u64
+    }
+
+    /// Fallible-path crash gate: error out while `p` is held down.
+    /// Public so wrappers that bypass this impl for two-phase blocking
+    /// operations (the scheduler's `ShardView`) can apply the same
+    /// gate before enqueuing on the inner engine.
+    pub fn check_alive(&self, p: ProcId) -> Result<()> {
+        if self.crashed[p] {
+            Err(anyhow!("processor {p}: crashed (injected fault)"))
+        } else {
+            Ok(())
+        }
+    }
+
+    /// The interception `local` performs, without the inner call:
+    /// crash gate plus the counter-advancing neutral draw. For callers
+    /// that run the actual computation through the inner engine's
+    /// two-phase request path.
+    pub fn precheck_local(&mut self, p: ProcId) -> Result<()> {
+        self.check_alive(p)?;
+        let _ = self.draw(p, Site::Neutral);
+        Ok(())
+    }
+
+    fn record(&mut self, kind: FaultKind, p: ProcId, op_index: u64) {
+        self.events.push(FaultEvent {
+            kind,
+            proc: p,
+            op_index,
+        });
+        self.per_proc_events[p] += 1;
+    }
+
+    /// Advance `p`'s op index and decide whether a fault fires at this
+    /// site. Pure function of `(seed, p, index, site)` — independent of
+    /// wall-clock, scheduling, or prior draws.
+    fn draw(&mut self, p: ProcId, site: Site) -> Option<FaultKind> {
+        let plan = self.plan.as_ref()?;
+        let idx = self.op_index[p];
+        self.op_index[p] += 1;
+        if self.suppressed[p] || plan.rate <= 0.0 {
+            return None;
+        }
+        // Rate-reject before touching the kind tables: the hash does
+        // not depend on them, and ~all draws of a realistic plan return
+        // here — keep the per-operation hot path allocation-free.
+        let h = mix(
+            plan.seed ^ mix((p as u64) ^ site.salt()) ^ idx.wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        if u >= plan.rate {
+            return None;
+        }
+        let applicable: Vec<FaultKind> = site
+            .applicable()
+            .iter()
+            .copied()
+            .filter(|k| plan.kinds.contains(k))
+            .collect();
+        if applicable.is_empty() {
+            return None;
+        }
+        let kind = applicable[(mix(h) % applicable.len() as u64) as usize];
+        self.record(kind, p, idx);
+        Some(kind)
+    }
+
+    /// Shared handler for the four send flavours. `deliver` performs the
+    /// real transfer on the inner engine; `duplicate` performs one extra
+    /// delivery whose slot is discarded at `dst`.
+    fn faulty_send(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        deliver: impl FnOnce(&mut E) -> Result<Slot>,
+        duplicate: impl FnOnce(&mut E) -> Result<Slot>,
+    ) -> Result<Slot> {
+        self.check_alive(src)?;
+        self.check_alive(dst)?;
+        match self.draw(src, Site::Send) {
+            None => deliver(&mut self.inner),
+            Some(FaultKind::Stall) => {
+                let skew = self.plan.as_ref().map(|p| p.stall_ops).unwrap_or(0);
+                self.inner.compute(src, skew);
+                deliver(&mut self.inner)
+            }
+            Some(FaultKind::DupMsg) => {
+                let dup = duplicate(&mut self.inner)?;
+                self.inner.free(dst, dup);
+                deliver(&mut self.inner)
+            }
+            Some(FaultKind::ReorderMsg) => {
+                // The wire is used (cost charged) but the payload lands
+                // out of sequence and is rejected.
+                let slot = deliver(&mut self.inner)?;
+                self.inner.free(dst, slot);
+                Err(anyhow!(
+                    "message {src} -> {dst}: arrived out of order (injected fault)"
+                ))
+            }
+            Some(FaultKind::DropMsg) => Err(anyhow!(
+                "message {src} -> {dst}: dropped (injected fault)"
+            )),
+            Some(FaultKind::Crash) => {
+                self.crashed[src] = true;
+                Err(anyhow!("processor {src}: crashed (injected fault)"))
+            }
+            Some(k) => unreachable!("{k:?} not applicable at a send site"),
+        }
+    }
+}
+
+impl<E: MachineApi> MachineApi for FaultyMachine<E> {
+    fn n_procs(&self) -> usize {
+        self.inner.n_procs()
+    }
+    fn mem_cap(&self) -> u64 {
+        self.inner.mem_cap()
+    }
+    fn base(&self) -> Base {
+        self.inner.base()
+    }
+
+    fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
+        self.check_alive(p)?;
+        match self.draw(p, Site::Alloc) {
+            None => self.inner.alloc(p, data),
+            Some(FaultKind::AllocFail) => Err(anyhow!(
+                "processor {p}: allocation failed (injected fault)"
+            )),
+            Some(FaultKind::Crash) => {
+                self.crashed[p] = true;
+                Err(anyhow!("processor {p}: crashed (injected fault)"))
+            }
+            Some(k) => unreachable!("{k:?} not applicable at an alloc site"),
+        }
+    }
+
+    fn free(&mut self, p: ProcId, slot: Slot) {
+        let _ = self.draw(p, Site::Neutral);
+        self.inner.free(p, slot);
+    }
+
+    fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
+        self.check_alive(p)?;
+        self.inner.read(p, slot)
+    }
+
+    fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
+        self.check_alive(p)?;
+        match self.draw(p, Site::Alloc) {
+            None => self.inner.replace(p, slot, data),
+            Some(FaultKind::AllocFail) => Err(anyhow!(
+                "processor {p}: replace failed (injected fault)"
+            )),
+            Some(FaultKind::Crash) => {
+                self.crashed[p] = true;
+                Err(anyhow!("processor {p}: crashed (injected fault)"))
+            }
+            Some(k) => unreachable!("{k:?} not applicable at an alloc site"),
+        }
+    }
+
+    fn compute(&mut self, p: ProcId, ops: u64) {
+        let _ = self.draw(p, Site::Neutral);
+        self.inner.compute(p, ops);
+    }
+
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> Result<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        self.check_alive(p)?;
+        let _ = self.draw(p, Site::Neutral);
+        self.inner.local(p, f)
+    }
+
+    fn compute_slot(
+        &mut self,
+        p: ProcId,
+        inputs: &[Slot],
+        consume: bool,
+        f: SlotComputation,
+    ) -> Result<Slot> {
+        self.check_alive(p)?;
+        match self.draw(p, Site::Compute) {
+            None => self.inner.compute_slot(p, inputs, consume, f),
+            Some(FaultKind::ComputeFail) => Err(anyhow!(
+                "processor {p}: leaf computation failed (injected fault)"
+            )),
+            Some(FaultKind::Crash) => {
+                self.crashed[p] = true;
+                Err(anyhow!("processor {p}: crashed (injected fault)"))
+            }
+            Some(k) => unreachable!("{k:?} not applicable at a compute site"),
+        }
+    }
+
+    fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        let dup = data.clone();
+        self.faulty_send(
+            src,
+            dst,
+            move |m| m.send(src, dst, data),
+            move |m| m.send(src, dst, dup),
+        )
+    }
+
+    fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        self.faulty_send(
+            src,
+            dst,
+            move |m| m.send_copy(src, dst, slot),
+            move |m| m.send_copy(src, dst, slot),
+        )
+    }
+
+    fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        // The duplicate of a move is a copy — the real delivery then
+        // moves the slot.
+        self.faulty_send(
+            src,
+            dst,
+            move |m| m.send_move(src, dst, slot),
+            move |m| m.send_copy(src, dst, slot),
+        )
+    }
+
+    fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: Range<usize>,
+    ) -> Result<Slot> {
+        let dup_range = range.clone();
+        self.faulty_send(
+            src,
+            dst,
+            move |m| m.send_range(src, dst, slot, range),
+            move |m| m.send_range(src, dst, slot, dup_range),
+        )
+    }
+
+    fn barrier(&mut self, procs: &[ProcId]) {
+        for &p in procs {
+            if let Some(FaultKind::Stall) = self.draw(p, Site::Barrier) {
+                let skew = self.plan.as_ref().map(|c| c.stall_ops).unwrap_or(0);
+                self.inner.compute(p, skew);
+            }
+        }
+        self.inner.barrier(procs);
+    }
+
+    fn proc_view(&self, p: ProcId) -> Result<ProcView> {
+        self.check_alive(p)?;
+        self.inner.proc_view(p)
+    }
+    fn critical(&self) -> Clock {
+        self.inner.critical()
+    }
+    fn stats(&self) -> MachineStats {
+        self.inner.stats()
+    }
+    fn mem_peak_max(&self) -> u64 {
+        self.inner.mem_peak_max()
+    }
+    fn mem_peak_total(&self) -> u64 {
+        self.inner.mem_peak_total()
+    }
+    fn mem_used_total(&self) -> u64 {
+        self.inner.mem_used_total()
+    }
+    fn purge(&mut self, p: ProcId) {
+        self.inner.purge(p);
+    }
+    fn event(&mut self, msg: &str) {
+        self.inner.event(msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Machine;
+
+    fn mk(p: usize) -> Machine {
+        Machine::unbounded(p, Base::new(16))
+    }
+
+    /// A fixed little program touching every site category.
+    fn drive(m: &mut FaultyMachine<Machine>) -> Result<Vec<u32>> {
+        let a = m.alloc(0, vec![1, 2, 3])?;
+        let s = m.send_copy(0, 1, a)?;
+        m.compute(1, 5);
+        let out = m.compute_slot(
+            1,
+            &[s],
+            true,
+            Box::new(|inp, _b, ops| {
+                ops.charge(inp[0].len() as u64);
+                inp[0].iter().map(|d| d + 1).collect()
+            }),
+        )?;
+        m.barrier(&[0, 1]);
+        let got = m.read(1, out)?;
+        m.free(1, out);
+        m.free(0, a);
+        Ok(got)
+    }
+
+    #[test]
+    fn passthrough_is_transparent() {
+        // Same program, wrapped and unwrapped: identical products AND
+        // identical cost triples (the zero-fault identity invariant).
+        let mut plain = FaultyMachine::passthrough(mk(2));
+        let got = drive(&mut plain).unwrap();
+        assert_eq!(got, vec![2, 3, 4]);
+
+        let mut zero_rate = FaultyMachine::new(mk(2), FaultConfig::new(7, 0.0));
+        let got2 = drive(&mut zero_rate).unwrap();
+        assert_eq!(got, got2);
+        assert_eq!(plain.critical(), zero_rate.critical());
+        assert_eq!(plain.total_injected(), 0);
+        assert_eq!(zero_rate.total_injected(), 0);
+    }
+
+    #[test]
+    fn injection_is_deterministic_and_recorded_exactly() {
+        // Rate 1 on a Stall-only plan: every send and barrier slot
+        // stalls, nothing fails, and two runs record identical event
+        // logs (the "exact fault counts" contract).
+        let plan = FaultConfig::new(0xFA17, 1.0).only(&[FaultKind::Stall]);
+        let run = |plan: FaultConfig| {
+            let mut m = FaultyMachine::new(mk(2), plan);
+            let got = drive(&mut m).unwrap();
+            (got, m.events().to_vec(), m.critical())
+        };
+        let (g1, e1, c1) = run(plan.clone());
+        let (g2, e2, c2) = run(plan);
+        assert_eq!(g1, vec![2, 3, 4]);
+        assert_eq!(g1, g2);
+        assert_eq!(e1, e2, "fault plans must replay bit-identically");
+        assert_eq!(c1, c2);
+        // drive() has one send (proc 0) and one 2-proc barrier: exactly
+        // three Stall slots.
+        assert_eq!(e1.len(), 3, "events: {e1:?}");
+        assert!(e1.iter().all(|e| e.kind == FaultKind::Stall));
+        // Stalls inflate the clock by stall_ops each.
+        let mut clean = FaultyMachine::passthrough(mk(2));
+        drive(&mut clean).unwrap();
+        assert!(c1.ops > clean.critical().ops);
+    }
+
+    #[test]
+    fn drop_fails_the_call_and_records() {
+        let plan = FaultConfig::new(3, 1.0).only(&[FaultKind::DropMsg]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        let a = m.alloc(0, vec![9]).unwrap();
+        let err = m.send_copy(0, 1, a).unwrap_err();
+        assert!(err.to_string().contains("dropped"), "{err}");
+        assert_eq!(m.total_injected(), 1);
+        assert_eq!(m.fault_count(0), 1);
+        assert_eq!(m.fault_count(1), 0);
+        // The wire was never used and the receiver holds nothing.
+        assert_eq!(m.inner().stats.total_msgs, 0);
+        assert_eq!(m.inner().proc(1).mem_used(), 0);
+    }
+
+    #[test]
+    fn duplicate_inflates_cost_but_not_product() {
+        let plan = FaultConfig::new(11, 1.0).only(&[FaultKind::DupMsg]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        let a = m.alloc(0, vec![4, 5]).unwrap();
+        let s = m.send_copy(0, 1, a).unwrap();
+        assert_eq!(m.read(1, s).unwrap(), vec![4, 5]);
+        // Two deliveries on the wire, one resident copy.
+        assert_eq!(m.inner().stats.total_msgs, 2);
+        assert_eq!(m.inner().stats.total_words, 4);
+        assert_eq!(m.inner().proc(1).mem_used(), 2);
+    }
+
+    #[test]
+    fn reorder_charges_wire_and_fails() {
+        let plan = FaultConfig::new(5, 1.0).only(&[FaultKind::ReorderMsg]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        let a = m.alloc(0, vec![8; 4]).unwrap();
+        let err = m.send_copy(0, 1, a).unwrap_err();
+        assert!(err.to_string().contains("out of order"), "{err}");
+        assert_eq!(m.inner().stats.total_msgs, 1, "wire cost is charged");
+        assert_eq!(m.inner().proc(1).mem_used(), 0, "payload discarded");
+    }
+
+    #[test]
+    fn crash_sticks_until_heal() {
+        let plan = FaultConfig::new(0xDEAD, 1.0).only(&[FaultKind::Crash]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        assert!(m.alloc(0, vec![1]).is_err());
+        assert!(m.is_crashed(0));
+        // Every fallible op on the crashed proc errors, including reads
+        // and sends *to* it.
+        assert!(m.read(0, 1).is_err());
+        assert!(m.proc_view(0).is_err());
+        assert!(m.send(1, 0, vec![2]).is_err());
+        // Other processors are unaffected (suppress further injection
+        // to observe the healthy path).
+        m.set_suppressed(1, true);
+        let b = m.alloc(1, vec![7]).unwrap();
+        assert_eq!(m.read(1, b).unwrap(), vec![7]);
+        // Heal: the processor serves again (suppressed here so the
+        // rate-1.0 plan does not immediately re-crash it).
+        m.heal(0);
+        m.set_suppressed(0, true);
+        let c = m.alloc(0, vec![3]).unwrap();
+        assert_eq!(m.read(0, c).unwrap(), vec![3]);
+    }
+
+    #[test]
+    fn alloc_and_compute_failures_fire_on_chosen_sites() {
+        let plan = FaultConfig::new(1, 1.0).only(&[FaultKind::AllocFail]);
+        let mut m = FaultyMachine::new(mk(1), plan);
+        let err = m.alloc(0, vec![1]).unwrap_err();
+        assert!(err.to_string().contains("allocation failed"), "{err}");
+
+        let plan = FaultConfig::new(1, 1.0).only(&[FaultKind::ComputeFail]);
+        let mut m = FaultyMachine::new(mk(1), plan);
+        m.set_suppressed(0, true);
+        let a = m.alloc(0, vec![1]).unwrap();
+        m.set_suppressed(0, false);
+        let err = m
+            .compute_slot(0, &[a], false, Box::new(|_, _, _| vec![0]))
+            .unwrap_err();
+        assert!(err.to_string().contains("computation failed"), "{err}");
+        // The event log names the (proc, op-index) pair that fired.
+        let e = *m.events().last().unwrap();
+        assert_eq!(e.proc, 0);
+        assert_eq!(e.kind, FaultKind::ComputeFail);
+    }
+
+    #[test]
+    fn reset_op_index_replays_the_same_pattern() {
+        // Two identical programs separated by a reset draw identical
+        // fault decisions — the scheduler's per-job epoch argument.
+        let plan = FaultConfig::new(0xEE, 0.5).only(&[FaultKind::Stall]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        drive(&mut m).ok();
+        let first: Vec<FaultEvent> = m.events().to_vec();
+        let n_first = first.len();
+        m.reset_op_index(&[0, 1]);
+        drive(&mut m).ok();
+        let second = &m.events()[n_first..];
+        assert_eq!(first.as_slice(), second, "epoch replay must match");
+    }
+
+    #[test]
+    fn suppression_stops_injection_without_touching_counters() {
+        let plan = FaultConfig::new(9, 1.0).only(&[FaultKind::DropMsg]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        m.set_suppressed(0, true);
+        m.set_suppressed(1, true);
+        let got = drive(&mut m).unwrap();
+        assert_eq!(got, vec![2, 3, 4]);
+        assert_eq!(m.total_injected(), 0);
+    }
+}

@@ -335,8 +335,8 @@ impl MachineApi for Machine {
     fn free(&mut self, p: ProcId, slot: Slot) {
         Machine::free(self, p, slot);
     }
-    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32> {
-        Machine::read(self, p, slot).to_vec()
+    fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
+        Ok(Machine::read(self, p, slot).to_vec())
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
         Machine::replace(self, p, slot, data)
@@ -345,12 +345,12 @@ impl MachineApi for Machine {
     fn compute(&mut self, p: ProcId, ops: u64) {
         Machine::compute(self, p, ops);
     }
-    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> Result<R>
     where
         R: Send + 'static,
         F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
     {
-        Machine::local(self, p, f)
+        Ok(Machine::local(self, p, f))
     }
     fn compute_slot(
         &mut self,
@@ -397,13 +397,13 @@ impl MachineApi for Machine {
         Machine::barrier(self, procs);
     }
 
-    fn proc_view(&self, p: ProcId) -> ProcView {
+    fn proc_view(&self, p: ProcId) -> Result<ProcView> {
         let proc = &self.procs[p];
-        ProcView {
+        Ok(ProcView {
             clock: proc.clock,
             mem_used: proc.mem_used,
             mem_peak: proc.mem_peak,
-        }
+        })
     }
     fn critical(&self) -> Clock {
         Machine::critical(self)
@@ -528,7 +528,7 @@ mod tests {
         let _a = m.alloc(0, vec![1, 2, 3]).unwrap();
         let _b = m.alloc(0, vec![4]).unwrap();
         m.purge(0);
-        let v = MachineApi::proc_view(&m, 0);
+        let v = MachineApi::proc_view(&m, 0).unwrap();
         assert_eq!(v.mem_used, 0);
         assert_eq!(v.mem_peak, 4);
         assert_eq!(v.clock.ops, 7);

@@ -2,7 +2,9 @@
 //! behind the pluggable [`MachineApi`] trait, with two execution
 //! engines — the deterministic cost-model simulator ([`Machine`],
 //! critical-path accounting per §2.2) and the real-threads executor
-//! ([`ThreadedMachine`], one OS thread per processor). See DESIGN.md.
+//! ([`ThreadedMachine`], one OS thread per processor) — plus
+//! [`FaultyMachine`], a deterministic seeded fault-injection wrapper
+//! over either engine (the chaos/soak layer). See DESIGN.md.
 //!
 //! ## Model
 //!
@@ -48,12 +50,14 @@
 
 pub mod api;
 pub mod dist;
+pub mod faulty;
 pub mod machine;
 pub mod seq;
 pub mod threaded;
 
 pub use api::{MachineApi, ProcView, SlotComputation};
 pub use dist::DistInt;
+pub use faulty::{FaultConfig, FaultEvent, FaultKind, FaultyMachine};
 pub use machine::{Machine, MachineStats, ProcId, Slot};
 pub use seq::Seq;
 pub use threaded::{ThreadedMachine, ThreadedReport};

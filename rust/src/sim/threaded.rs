@@ -45,7 +45,7 @@ use super::api::{MachineApi, ProcView, SlotComputation};
 use super::machine::{MachineStats, ProcId, Slot};
 use super::Clock;
 use crate::bignum::{Base, Ops};
-use crate::error::{bail, Result};
+use crate::error::{anyhow, bail, Result};
 use std::any::Any;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -438,8 +438,14 @@ impl ThreadedMachine {
         ThreadedMachine::new(p, u64::MAX / 2, base)
     }
 
-    fn cmd(&self, p: ProcId, c: Cmd) {
-        self.cmd_txs[p].send(c).expect("worker thread died");
+    /// Enqueue a command on `p`'s queue. Returns an error (instead of
+    /// panicking) when the worker thread is gone — a panicked worker
+    /// closes its queue, and the death must fail only the callers that
+    /// depend on that processor, not the whole machine.
+    fn cmd(&self, p: ProcId, c: Cmd) -> Result<()> {
+        self.cmd_txs[p]
+            .send(c)
+            .map_err(|_| anyhow!("processor {p}: worker thread died"))
     }
 
     fn fresh_slot(&mut self, p: ProcId) -> Slot {
@@ -450,8 +456,11 @@ impl ThreadedMachine {
 
     /// Blocking snapshot of one worker (drains its queue first, so the
     /// snapshot reflects every operation issued before this call).
-    pub fn snapshot(&self, p: ProcId) -> WorkerSnapshot {
-        self.snapshot_request(p).recv().expect("worker thread died")
+    /// Fails when the worker thread is dead.
+    pub fn snapshot(&self, p: ProcId) -> Result<WorkerSnapshot> {
+        self.snapshot_request(p)
+            .recv()
+            .map_err(|_| anyhow!("processor {p}: worker thread died"))
     }
 
     // ----- two-phase (enqueue now, await later) variants --------------
@@ -465,10 +474,12 @@ impl ThreadedMachine {
     // the lock is dropped observes exactly the same state.
 
     /// Enqueue a read; the reply channel delivers the slot's contents
-    /// once worker `p` drains its queue to this command.
+    /// once worker `p` drains its queue to this command. If the worker
+    /// is dead the command is dropped and the receiver's `recv` fails —
+    /// the awaiting side maps that to a per-call error.
     pub fn read_request(&self, p: ProcId, slot: Slot) -> Receiver<Vec<u32>> {
         let (tx, rx) = channel();
-        self.cmd(p, Cmd::Read { slot, reply: tx });
+        let _ = self.cmd(p, Cmd::Read { slot, reply: tx });
         rx
     }
 
@@ -483,7 +494,7 @@ impl ThreadedMachine {
         let boxed = Box::new(move |base: &Base, ops: &mut Ops| -> Box<dyn Any + Send> {
             Box::new(f(base, ops))
         });
-        self.cmd(p, Cmd::Local { f: boxed, reply: tx });
+        let _ = self.cmd(p, Cmd::Local { f: boxed, reply: tx });
         rx
     }
 
@@ -491,12 +502,16 @@ impl ThreadedMachine {
     /// worker's state once its queue drains to this command.
     pub fn snapshot_request(&self, p: ProcId) -> Receiver<WorkerSnapshot> {
         let (tx, rx) = channel();
-        self.cmd(p, Cmd::Query { reply: tx });
+        let _ = self.cmd(p, Cmd::Query { reply: tx });
         rx
     }
 
+    /// Snapshots of every worker that is still alive (dead workers are
+    /// skipped; `finish` reports them).
     fn snapshot_all(&self) -> Vec<WorkerSnapshot> {
-        (0..self.cmd_txs.len()).map(|p| self.snapshot(p)).collect()
+        (0..self.cmd_txs.len())
+            .filter_map(|p| self.snapshot(p).ok())
+            .collect()
     }
 
     /// First recorded worker error (memory overflow, peer loss), if any.
@@ -505,14 +520,22 @@ impl ThreadedMachine {
     }
 
     /// Drain all queues, join the worker threads, and report. Consumes
-    /// the engine's usefulness: further [`MachineApi`] calls panic.
+    /// the engine's usefulness: further [`MachineApi`] calls error or
+    /// no-op.
     pub fn finish(&mut self) -> Result<ThreadedReport> {
+        let expected = self.cmd_txs.len();
         let snaps = self.snapshot_all();
         self.cmd_txs.clear(); // close the queues
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
         let wall = self.started.elapsed();
+        if snaps.len() < expected {
+            bail!(
+                "threaded engine: {} worker thread(s) died",
+                expected - snaps.len()
+            );
+        }
         if let Some(e) = snaps.iter().find_map(|s| s.error.clone()) {
             bail!("threaded engine: {e}");
         }
@@ -563,33 +586,34 @@ impl MachineApi for ThreadedMachine {
 
     fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
         let slot = self.fresh_slot(p);
-        self.cmd(p, Cmd::Alloc { slot, data });
+        self.cmd(p, Cmd::Alloc { slot, data })?;
         Ok(slot)
     }
     fn free(&mut self, p: ProcId, slot: Slot) {
-        self.cmd(p, Cmd::Free { slot });
+        let _ = self.cmd(p, Cmd::Free { slot });
     }
-    fn read(&self, p: ProcId, slot: Slot) -> Vec<u32> {
+    fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
         self.read_request(p, slot)
             .recv()
-            .expect("worker thread died")
+            .map_err(|_| anyhow!("processor {p}: worker thread died during read"))
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
-        self.cmd(p, Cmd::Replace { slot, data });
-        Ok(())
+        self.cmd(p, Cmd::Replace { slot, data })
     }
 
     fn compute(&mut self, p: ProcId, ops: u64) {
-        self.cmd(p, Cmd::Compute { ops });
+        let _ = self.cmd(p, Cmd::Compute { ops });
     }
-    fn local<R, F>(&mut self, p: ProcId, f: F) -> R
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> Result<R>
     where
         R: Send + 'static,
         F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
     {
         let rx = self.local_request::<R, F>(p, f);
-        let out = rx.recv().expect("worker thread died");
-        *out.downcast::<R>().expect("local closure result type")
+        let out = rx
+            .recv()
+            .map_err(|_| anyhow!("processor {p}: worker thread died during local"))?;
+        Ok(*out.downcast::<R>().expect("local closure result type"))
     }
     fn compute_slot(
         &mut self,
@@ -607,7 +631,7 @@ impl MachineApi for ThreadedMachine {
                 consume,
                 f,
             },
-        );
+        )?;
         Ok(out)
     }
 
@@ -620,8 +644,8 @@ impl MachineApi for ThreadedMachine {
                 dst,
                 payload: Payload::Owned(data),
             },
-        );
-        self.cmd(dst, Cmd::Recv { src, slot });
+        )?;
+        self.cmd(dst, Cmd::Recv { src, slot })?;
         Ok(slot)
     }
     fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
@@ -637,8 +661,8 @@ impl MachineApi for ThreadedMachine {
                     free_after: false,
                 },
             },
-        );
-        self.cmd(dst, Cmd::Recv { src, slot: out });
+        )?;
+        self.cmd(dst, Cmd::Recv { src, slot: out })?;
         Ok(out)
     }
     fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
@@ -654,8 +678,8 @@ impl MachineApi for ThreadedMachine {
                     free_after: true,
                 },
             },
-        );
-        self.cmd(dst, Cmd::Recv { src, slot: out });
+        )?;
+        self.cmd(dst, Cmd::Recv { src, slot: out })?;
         Ok(out)
     }
     fn send_range(
@@ -677,8 +701,8 @@ impl MachineApi for ThreadedMachine {
                     free_after: false,
                 },
             },
-        );
-        self.cmd(dst, Cmd::Recv { src, slot: out });
+        )?;
+        self.cmd(dst, Cmd::Recv { src, slot: out })?;
         Ok(out)
     }
     fn barrier(&mut self, procs: &[ProcId]) {
@@ -691,22 +715,33 @@ impl MachineApi for ThreadedMachine {
             cv: Condvar::new(),
         });
         for &p in procs {
-            self.cmd(
-                p,
-                Cmd::Barrier {
-                    state: Arc::clone(&state),
-                },
-            );
+            // A dead worker never reaches the rendezvous; lower the
+            // expectation so the survivors are not stranded forever.
+            if self
+                .cmd(
+                    p,
+                    Cmd::Barrier {
+                        state: Arc::clone(&state),
+                    },
+                )
+                .is_err()
+            {
+                let mut g = state.state.lock().unwrap();
+                g.0 += 1;
+                if g.0 == state.expected {
+                    state.cv.notify_all();
+                }
+            }
         }
     }
 
-    fn proc_view(&self, p: ProcId) -> ProcView {
-        let s = self.snapshot(p);
-        ProcView {
+    fn proc_view(&self, p: ProcId) -> Result<ProcView> {
+        let s = self.snapshot(p)?;
+        Ok(ProcView {
             clock: s.clock,
             mem_used: s.mem_used,
             mem_peak: s.mem_peak,
-        }
+        })
     }
     fn critical(&self) -> Clock {
         self.snapshot_all()
@@ -732,7 +767,7 @@ impl MachineApi for ThreadedMachine {
         self.snapshot_all().iter().map(|s| s.mem_used).sum()
     }
     fn purge(&mut self, p: ProcId) {
-        self.cmd(p, Cmd::Purge);
+        let _ = self.cmd(p, Cmd::Purge);
     }
 }
 
@@ -748,9 +783,9 @@ mod tests {
     fn alloc_read_free_roundtrip() {
         let mut m = mk(2);
         let s = m.alloc(0, vec![1, 2, 3]).unwrap();
-        assert_eq!(m.read(0, s), vec![1, 2, 3]);
+        assert_eq!(m.read(0, s).unwrap(), vec![1, 2, 3]);
         m.free(0, s);
-        let snap = m.snapshot(0);
+        let snap = m.snapshot(0).unwrap();
         assert_eq!(snap.mem_used, 0);
         assert_eq!(snap.mem_peak, 3);
     }
@@ -760,9 +795,9 @@ mod tests {
         let mut m = mk(2);
         m.compute(0, 10);
         let s = m.send(0, 1, vec![7, 8]).unwrap();
-        assert_eq!(m.read(1, s), vec![7, 8]);
-        let c0 = m.snapshot(0).clock;
-        let c1 = m.snapshot(1).clock;
+        assert_eq!(m.read(1, s).unwrap(), vec![7, 8]);
+        let c0 = m.snapshot(0).unwrap().clock;
+        let c1 = m.snapshot(1).unwrap().clock;
         assert_eq!(c0, Clock { ops: 10, words: 2, msgs: 1 });
         assert_eq!(c1, Clock { ops: 10, words: 2, msgs: 1 });
         let report = m.finish().unwrap();
@@ -773,12 +808,14 @@ mod tests {
     #[test]
     fn local_runs_on_worker_and_charges() {
         let mut m = mk(1);
-        let v = m.local(0, |base, ops| {
-            ops.charge(42);
-            base.s()
-        });
+        let v = m
+            .local(0, |base, ops| {
+                ops.charge(42);
+                base.s()
+            })
+            .unwrap();
         assert_eq!(v, 65536);
-        assert_eq!(m.snapshot(0).clock.ops, 42);
+        assert_eq!(m.snapshot(0).unwrap().clock.ops, 42);
     }
 
     #[test]
@@ -797,8 +834,8 @@ mod tests {
             )
             .unwrap();
         // The read synchronizes with the pending computation.
-        assert_eq!(m.read(0, out), vec![20, 30]);
-        let snap = m.snapshot(0);
+        assert_eq!(m.read(0, out).unwrap(), vec![20, 30]);
+        let snap = m.snapshot(0).unwrap();
         assert_eq!(snap.clock.ops, 2);
         assert_eq!(snap.mem_used, 2, "input consumed, output resident");
     }
@@ -808,8 +845,8 @@ mod tests {
         let mut m = mk(2);
         let s = m.alloc(0, vec![1, 2]).unwrap();
         let d = m.send_move(0, 1, s).unwrap();
-        assert_eq!(m.read(1, d), vec![1, 2]);
-        assert_eq!(m.snapshot(0).mem_used, 0);
+        assert_eq!(m.read(1, d).unwrap(), vec![1, 2]);
+        assert_eq!(m.snapshot(0).unwrap().mem_used, 0);
     }
 
     #[test]
@@ -818,7 +855,7 @@ mod tests {
         m.compute(0, 5);
         m.compute(1, 9);
         m.barrier(&[0, 1, 2]);
-        assert_eq!(m.snapshot(2).clock.ops, 9);
+        assert_eq!(m.snapshot(2).unwrap().clock.ops, 9);
     }
 
     #[test]
@@ -827,12 +864,12 @@ mod tests {
         m.compute(1, 9);
         let _a = m.alloc(1, vec![1, 2, 3]).unwrap();
         MachineApi::purge(&mut m, 1);
-        let v = m.proc_view(1);
+        let v = m.proc_view(1).unwrap();
         assert_eq!(v.mem_used, 0);
         assert_eq!(v.mem_peak, 3);
         assert_eq!(v.clock.ops, 9);
         let s = m.alloc(1, vec![5]).unwrap();
-        assert_eq!(m.read(1, s), vec![5]);
+        assert_eq!(m.read(1, s).unwrap(), vec![5]);
         m.finish().unwrap();
     }
 
@@ -870,8 +907,8 @@ mod tests {
         let t0 = Instant::now();
         let o0 = m.compute_slot(0, &[a0], true, Box::new(work)).unwrap();
         let o1 = m.compute_slot(1, &[a1], true, Box::new(work)).unwrap();
-        let _ = m.read(0, o0);
-        let _ = m.read(1, o1);
+        let _ = m.read(0, o0).unwrap();
+        let _ = m.read(1, o1).unwrap();
         let wall = t0.elapsed();
         let report = m.finish().unwrap();
         let serial: Duration = report.busy.iter().sum();

@@ -3,6 +3,13 @@
 //! `check(name, cases, |rng| ...)` runs a closure over `cases` random
 //! seeds; on failure it reports the failing seed so the case can be
 //! replayed exactly with `replay(seed, f)`.
+//!
+//! `check_shrink(name, cases, gen, shrink, f)` additionally minimizes a
+//! failing case: the property is split into a *generator* (draws the
+//! case shape from the rng) and a *shrink hook* (proposes smaller
+//! shapes, e.g. smaller `n`, then smaller `P`); on failure the harness
+//! greedily walks the shrink candidates and reports the smallest shape
+//! that still fails alongside the original seed.
 
 use super::rng::Rng;
 
@@ -45,6 +52,81 @@ where
     let mut rng = Rng::new(seed);
     if let Err(msg) = f(&mut rng) {
         panic!("replay(seed {seed:#x}) failed: {msg}");
+    }
+}
+
+/// Hard ceiling on shrink iterations: the hooks propose strictly
+/// smaller cases, so real searches terminate long before this; the cap
+/// only guards against a buggy non-shrinking hook.
+const MAX_SHRINK_STEPS: usize = 256;
+
+/// Greedy minimization (see module docs): starting from the failing
+/// `case`, repeatedly move to the first candidate from `shrink` that
+/// still fails, until no candidate fails. Each candidate is re-run with
+/// a fresh rng from the case's own seed, so the search is fully
+/// deterministic. Returns `(smallest failing case, its message, steps)`.
+pub fn shrink_failure<T, S, F>(
+    seed: u64,
+    case: T,
+    msg: String,
+    shrink: S,
+    f: &mut F,
+) -> (T, String, usize)
+where
+    T: Clone,
+    S: Fn(&T) -> Vec<T>,
+    F: FnMut(&mut Rng, &T) -> CaseResult,
+{
+    let mut cur = case;
+    let mut cur_msg = msg;
+    let mut steps = 0;
+    while steps < MAX_SHRINK_STEPS {
+        let mut advanced = false;
+        for cand in shrink(&cur) {
+            let mut rng = Rng::new(seed);
+            if let Err(m) = f(&mut rng, &cand) {
+                cur = cand;
+                cur_msg = m;
+                steps += 1;
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    (cur, cur_msg, steps)
+}
+
+/// [`check`] with failing-case minimization. `gen` draws the case shape
+/// from the rng; `f` runs the property for a given shape (drawing any
+/// further randomness — operands — from the same rng); `shrink`
+/// proposes smaller shapes in preference order (convention: shrink the
+/// problem size `n` first, then the processor count `P`). On failure
+/// the panic reports the original seed AND the smallest still-failing
+/// shape, so the replay starts from the minimal reproduction.
+pub fn check_shrink<T, G, S, F>(name: &str, cases: u64, mut gen: G, shrink: S, mut f: F)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    F: FnMut(&mut Rng, &T) -> CaseResult,
+{
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base ^ (i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = f(&mut rng, &case) {
+            let (small, small_msg, steps) =
+                shrink_failure(seed, case.clone(), msg.clone(), &shrink, &mut f);
+            panic!(
+                "property `{name}` failed at case {i} (seed {seed:#x}): {msg}\n\
+                 original case: {case:?}\n\
+                 shrunk in {steps} step(s) to: {small:?} ({small_msg})"
+            );
+        }
     }
 }
 
@@ -106,6 +188,81 @@ mod tests {
     #[test]
     fn fnv_distinct() {
         assert_ne!(fnv1a(b"a"), fnv1a(b"b"));
+    }
+
+    /// The shrink hook used by the shrinker's own tests: smaller n
+    /// first (halve, then decrement), then smaller p (halve).
+    fn shrink_np(c: &(usize, usize)) -> Vec<(usize, usize)> {
+        let (n, p) = *c;
+        let mut out = Vec::new();
+        if n > 1 {
+            out.push((n / 2, p));
+            out.push((n - 1, p));
+        }
+        if p > 1 {
+            out.push((n, p / 2));
+        }
+        out
+    }
+
+    #[test]
+    fn shrinker_finds_the_minimal_failing_case() {
+        // Property fails iff n >= 10 && p >= 2: the minimum failing
+        // case reachable by the hook is exactly (10, 2).
+        let mut f = |_rng: &mut Rng, c: &(usize, usize)| -> CaseResult {
+            if c.0 >= 10 && c.1 >= 2 {
+                Err(format!("boom at {c:?}"))
+            } else {
+                Ok(())
+            }
+        };
+        let (small, msg, steps) = shrink_failure(7, (96, 8), "boom".into(), shrink_np, &mut f);
+        assert_eq!(small, (10, 2), "after {steps} steps: {msg}");
+        assert!(steps > 0);
+        // Shrinking a case the hook cannot reduce reports it unchanged.
+        let (small, _, steps) = shrink_failure(7, (10, 2), "boom".into(), shrink_np, &mut f);
+        assert_eq!(small, (10, 2));
+        assert_eq!(steps, 0);
+    }
+
+    #[test]
+    fn shrinker_terminates_on_non_shrinking_hooks() {
+        // A pathological hook that proposes the same case forever must
+        // hit the step ceiling, not loop.
+        let mut f = |_: &mut Rng, _: &(usize, usize)| -> CaseResult { Err("always".into()) };
+        let same = |c: &(usize, usize)| vec![*c];
+        let (_, _, steps) = shrink_failure(1, (4, 4), "always".into(), same, &mut f);
+        assert_eq!(steps, MAX_SHRINK_STEPS);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk in")]
+    fn check_shrink_reports_original_and_minimal() {
+        check_shrink(
+            "shrinking-property",
+            4,
+            |rng| (rng.range(50, 100) as usize, 4usize),
+            shrink_np,
+            |_rng, c| {
+                crate::prop_assert!(c.0 < 10, "n = {} too big", c.0);
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn check_shrink_passes_quiet_properties() {
+        check_shrink(
+            "shrinking-property-ok",
+            8,
+            |rng| (rng.range(1, 8) as usize, 2usize),
+            shrink_np,
+            |_rng, c| {
+                crate::prop_assert!(c.0 <= 8, "impossible");
+                let _ = c;
+                Ok(())
+            },
+        );
     }
 
     #[test]

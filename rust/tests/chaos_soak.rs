@@ -1,0 +1,216 @@
+//! Chaos/soak suite: a seeded corpus of jobs driven through
+//! [`FaultyMachine`]-wrapped schedulers — cost-model AND threaded
+//! engines — under escalating fault rates.
+//!
+//! Invariants (ISSUE 3 acceptance criteria):
+//!
+//! 1. **Liveness** — every admitted job eventually completes within its
+//!    retry budget, on both engines, at every tested rate.
+//! 2. **Correctness** — every completed product is verified against the
+//!    sequential bignum reference.
+//! 3. **Zero-fault cost identity** — a job whose shard saw zero
+//!    injected faults during its successful attempt reports a cost
+//!    triple bit-identical to a dedicated fault-free machine.
+//!
+//! The corpus (sizes, processor requests, scheme mix) is seeded, so a
+//! failure names a reproducible fleet; the exact interleaving of jobs
+//! onto shards may vary with the host scheduler, but the invariants
+//! hold for every interleaving (the scheduler's final attempt runs with
+//! injection suppressed, so a pure injection plan can never exhaust a
+//! retry budget).
+//!
+//! Scale with `COPMUL_PROP_CASES` (`util::prop::cases`): tier-1 keeps
+//! the fast default; the CI `chaos` job runs 200 cases in release mode.
+
+use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use copmul::algorithms::Algorithm;
+use copmul::bignum::core::normalized_len;
+use copmul::bignum::{mul, Base, Ops};
+use copmul::config::EngineKind;
+use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
+use copmul::sim::{FaultConfig, Machine, Seq};
+use copmul::util::prop::cases;
+use copmul::util::Rng;
+
+fn base() -> Base {
+    Base::new(16)
+}
+
+fn reference_product(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut ops = Ops::default();
+    let mut prod = mul::mul_school(a, b, base(), &mut ops);
+    let keep = normalized_len(&prod).max(1);
+    prod.truncate(keep);
+    prod
+}
+
+/// Outcome tallies of one soak run.
+struct SoakReport {
+    jobs: usize,
+    retried_jobs: usize,
+    faults_survived_total: u64,
+    faults_injected: u64,
+    zero_fault_jobs: usize,
+}
+
+/// Drive `jobs` seeded jobs through a faulty scheduler on `engine` at
+/// `rate`, asserting the three soak invariants (module docs).
+fn soak(engine: EngineKind, rate: f64, fault_seed: u64, jobs: usize) -> SoakReport {
+    let cfg = SchedulerConfig {
+        procs: 16,
+        runners: 3,
+        engine,
+        fault: (rate > 0.0).then(|| FaultConfig::new(fault_seed, rate)),
+        max_attempts: 5,
+        // Quarantine stays off in the soak: injected faults hit every
+        // processor uniformly, so pulling "repeat offenders" would only
+        // shrink the machine under the fleet and turn the liveness
+        // invariant into a capacity race. The quarantine policy has its
+        // own deterministic tests in coordinator::scheduler.
+        quarantine_after: 0,
+        ..Default::default()
+    };
+    let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+    let mut rng = Rng::new(0x50AC ^ fault_seed);
+    let mut pending = Vec::new();
+    let mut want = Vec::new();
+    for id in 0..jobs as u64 {
+        let n = (32usize) << rng.range(0, 3); // 32..256 digits
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        want.push(reference_product(&a, &b));
+        let mut spec = JobSpec::new(id, a, b);
+        // Mix of scheme/width requests; every shape fits the machine.
+        let (procs, algo) = *rng.pick(&[
+            (4usize, Some(Algorithm::Copsim)),
+            (4, Some(Algorithm::Copk)),
+            (4, None),
+            (12, Some(Algorithm::Copk)),
+        ]);
+        spec.procs = procs;
+        spec.algo = algo;
+        pending.push((spec.clone(), sched.submit(spec).unwrap()));
+    }
+    let mut report = SoakReport {
+        jobs,
+        retried_jobs: 0,
+        faults_survived_total: 0,
+        faults_injected: 0,
+        zero_fault_jobs: 0,
+    };
+    for (i, (spec, rx)) in pending.into_iter().enumerate() {
+        // Invariant 1: completion within the retry budget.
+        let res = rx.recv().unwrap().unwrap_or_else(|e| {
+            panic!("admitted job {i} did not complete on {engine} at rate {rate}: {e}")
+        });
+        // Invariant 2: bignum-verified product.
+        assert_eq!(
+            res.product, want[i],
+            "job {i} product corrupted on {engine} at rate {rate}"
+        );
+        assert!(res.attempts >= 1 && res.attempts <= 5);
+        if res.attempts > 1 {
+            report.retried_jobs += 1;
+        }
+        report.faults_survived_total += res.faults_survived;
+        // Invariant 3: zero-fault shards cost exactly the dedicated run.
+        if res.faults_survived == 0 {
+            report.zero_fault_jobs += 1;
+            let shard = res.shard.clone().expect("scheduler results carry shards");
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            let leaf = leaf_ref(SchoolLeaf);
+            execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+            assert_eq!(
+                res.cost,
+                solo.critical(),
+                "zero-fault job {i} cost differs from dedicated run ({engine}, rate {rate})"
+            );
+        }
+    }
+    report.faults_injected = sched.faults_injected();
+    assert_eq!(
+        sched.stats.completed.load(std::sync::atomic::Ordering::Relaxed),
+        jobs as u64
+    );
+    assert_eq!(sched.stats.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    sched.shutdown().unwrap();
+    report
+}
+
+/// Escalating-rate soak on one engine. Job count scales with
+/// `COPMUL_PROP_CASES` (default 48 -> 8 jobs/rate in tier-1; the CI
+/// chaos job runs 200 -> 33 jobs/rate in release).
+fn escalating(engine: EngineKind) {
+    let jobs = (cases(48) / 6).clamp(4, 64) as usize;
+    let mut saw_faults = false;
+    let mut saw_retry_or_survival = false;
+    for (i, rate) in [0.0, 2e-4, 1e-3, 4e-3].into_iter().enumerate() {
+        let report = soak(engine, rate, 0xC4A0 + i as u64, jobs);
+        if rate == 0.0 {
+            // The fault-free run is the control: nothing injected,
+            // nothing retried, every job in the identity case.
+            assert_eq!(report.faults_injected, 0);
+            assert_eq!(report.retried_jobs, 0);
+            assert_eq!(report.zero_fault_jobs, report.jobs);
+        } else {
+            saw_faults |= report.faults_injected > 0;
+            saw_retry_or_survival |=
+                report.retried_jobs > 0 || report.faults_survived_total > 0;
+        }
+    }
+    // The escalation must actually bite: at these rates over thousands
+    // of operations per fleet, injection and recovery both fire.
+    assert!(saw_faults, "no faults injected across nonzero rates");
+    assert!(
+        saw_retry_or_survival,
+        "faults fired but neither retries nor survived-fault accounting observed"
+    );
+}
+
+#[test]
+fn chaos_soak_cost_model_engine() {
+    escalating(EngineKind::Sim);
+}
+
+#[test]
+fn chaos_soak_threaded_engine() {
+    escalating(EngineKind::Threads);
+}
+
+/// Determinism of the seeded plan itself: two identical single-runner
+/// soaks inject the identical fault sequence and produce identical
+/// per-job costs (single runner = one deterministic schedule).
+#[test]
+fn chaos_soak_single_runner_is_reproducible() {
+    let run = || {
+        let cfg = SchedulerConfig {
+            procs: 8,
+            runners: 1,
+            engine: EngineKind::Sim,
+            fault: Some(FaultConfig::new(0xBEE, 1e-3)),
+            max_attempts: 5,
+            quarantine_after: 0,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let mut rng = Rng::new(0xD0);
+        let mut out = Vec::new();
+        for id in 0..10u64 {
+            let a = rng.digits(128, 16);
+            let b = rng.digits(128, 16);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            spec.algo = Some(Algorithm::Copsim);
+            let res = sched.submit_blocking(spec).unwrap();
+            out.push((res.product, res.cost, res.attempts, res.faults_survived));
+        }
+        let injected = sched.faults_injected();
+        sched.shutdown().unwrap();
+        (out, injected)
+    };
+    let (a, ia) = run();
+    let (b, ib) = run();
+    assert_eq!(a, b, "single-runner soak must replay bit-identically");
+    assert_eq!(ia, ib, "injected fault counts must replay");
+}

@@ -4,9 +4,15 @@
 //! multiplication three ways — the sequential `bignum::mul` reference,
 //! the cost-model [`Machine`], and the real-threads
 //! [`ThreadedMachine`] — asserting bit-identical products and identical
-//! `(compute, bandwidth, latency)` cost triples. A second suite drives
-//! the sharded [`Scheduler`] with concurrent jobs on both engines and
-//! checks every job against a dedicated single-job machine.
+//! `(compute, bandwidth, latency)` cost triples; failing cases are
+//! minimized by `util::prop::check_shrink` (smaller n, then smaller P).
+//! An adversarial suite pins the same invariants on extreme operand
+//! shapes (n = 1, all-zero, all-max, unequal lengths, smallest legal
+//! P). Two scheduler suites drive concurrent jobs over shards of one
+//! shared machine on both engines: fault-free jobs must match dedicated
+//! single-job machines bit for bit, and under a seeded fault plan the
+//! same identity must hold for every job whose shard saw zero injected
+//! faults.
 //!
 //! Case counts scale with `COPMUL_PROP_CASES` (see `util::prop::cases`):
 //! the in-repo defaults keep tier-1's debug-mode run fast; the dedicated
@@ -20,9 +26,11 @@ use copmul::config::EngineKind;
 use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
 use copmul::prop_assert;
 use copmul::prop_assert_eq;
-use copmul::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use copmul::sim::{
+    Clock, DistInt, FaultConfig, FaultKind, Machine, MachineApi, Seq, ThreadedMachine,
+};
 use copmul::theory::TimeModel;
-use copmul::util::prop::{cases, check};
+use copmul::util::prop::{cases, check_shrink};
 use copmul::util::Rng;
 
 /// Which entry point a corpus case exercises.
@@ -40,6 +48,7 @@ enum Entry {
 
 /// A corpus case's shape: entry, processor count, working width, digit
 /// base, and per-processor memory cap.
+#[derive(Clone, Copy, Debug)]
 struct Shape {
     entry: Entry,
     p: usize,
@@ -48,59 +57,74 @@ struct Shape {
     cap: u64,
 }
 
+/// Build a shape from (entry, p, per-proc width), deriving the memory
+/// cap the entry needs: CopsimMain re-tightens `M = 80n/P` (one DFS
+/// level), everything else runs memory-independent.
+fn with_shape(entry: Entry, p: usize, w: usize, base: Base) -> Shape {
+    let n = p * w;
+    let cap = if entry == Entry::CopsimMain {
+        (80 * n / p) as u64
+    } else {
+        u64::MAX / 2
+    };
+    Shape {
+        entry,
+        p,
+        n,
+        base,
+        cap,
+    }
+}
+
 fn draw_shape(rng: &mut Rng) -> Shape {
     let entry = *rng.pick(&[Entry::CopsimMain, Entry::CopsimMi, Entry::CopkMi, Entry::Hybrid]);
     let base = Base::new(*rng.pick(&[4u32, 8, 16]));
-    let unbounded = u64::MAX / 2;
     match entry {
-        Entry::CopsimMain => {
-            // p = 64 with M = 80n/P forces exactly one DFS level before
-            // the subproblem meets the MI memory requirement (the same
-            // shape `prop_dfs_and_mi_agree` runs, scaled down).
-            let p = 64usize;
-            let n = p * 16;
-            Shape {
-                entry,
-                p,
-                n,
-                base,
-                cap: (80 * n / p) as u64,
-            }
-        }
-        Entry::CopsimMi => {
-            let p = [4usize, 16][rng.below(2) as usize];
-            let w = 1usize << rng.range(2, 5);
-            Shape {
-                entry,
-                p,
-                n: p * w,
-                base,
-                cap: unbounded,
-            }
-        }
-        Entry::CopkMi => {
-            let p = [4usize, 12][rng.below(2) as usize];
-            let w = 4usize << rng.range(0, 2);
-            Shape {
-                entry,
-                p,
-                n: p * w,
-                base,
-                cap: unbounded,
-            }
-        }
-        Entry::Hybrid => {
-            let p = [4usize, 12, 16][rng.below(3) as usize];
-            let w = 4usize << rng.range(0, 2);
-            Shape {
-                entry,
-                p,
-                n: p * w,
-                base,
-                cap: unbounded,
-            }
-        }
+        // p = 64 with M = 80n/P forces exactly one DFS level before
+        // the subproblem meets the MI memory requirement (the same
+        // shape `prop_dfs_and_mi_agree` runs, scaled down).
+        Entry::CopsimMain => with_shape(entry, 64, 16, base),
+        Entry::CopsimMi => with_shape(
+            entry,
+            [4usize, 16][rng.below(2) as usize],
+            1usize << rng.range(2, 5),
+            base,
+        ),
+        Entry::CopkMi => with_shape(
+            entry,
+            [4usize, 12][rng.below(2) as usize],
+            4usize << rng.range(0, 2),
+            base,
+        ),
+        Entry::Hybrid => with_shape(
+            entry,
+            [4usize, 12, 16][rng.below(3) as usize],
+            4usize << rng.range(0, 2),
+            base,
+        ),
     }
+}
+
+/// Shrink hook for the corpus (`util::prop::check_shrink`): smaller `n`
+/// first (halve the per-processor width, floor 4), then smaller `P`
+/// (the next shape down the entry's ladder), keeping every candidate a
+/// layout the entry accepts.
+fn shrink_shape(s: &Shape) -> Vec<Shape> {
+    let mut out = Vec::new();
+    let w = s.n / s.p;
+    if w > 4 {
+        out.push(with_shape(s.entry, s.p, w / 2, s.base));
+    }
+    let ladder: &[usize] = match s.entry {
+        Entry::CopsimMain => &[4, 16, 64],
+        Entry::CopsimMi => &[4, 16],
+        Entry::CopkMi => &[4, 12],
+        Entry::Hybrid => &[4, 12, 16],
+    };
+    if let Some(&q) = ladder.iter().rev().find(|&&q| q < s.p) {
+        out.push(with_shape(s.entry, q, w, s.base));
+    }
+    out
 }
 
 /// Run one case on any engine, returning (product, cost triple).
@@ -124,52 +148,123 @@ fn run_on<M: MachineApi>(
         }
     }
     .map_err(|e| format!("{:?} failed: {e}", shape.entry))?;
-    let product = c.gather(m);
+    let product = c.gather(m).map_err(|e| e.to_string())?;
     c.free(m);
     Ok((product, m.critical()))
 }
 
+/// One corpus case: both engines vs the bignum reference. Used by the
+/// randomized corpus (with shrinking) and the adversarial-shape suite.
+fn differential_case(rng: &mut Rng, shape: &Shape) -> Result<(), String> {
+    let leaf = leaf_ref(SchoolLeaf);
+    let a = rng.digits(shape.n, shape.base.log2);
+    let b = rng.digits(shape.n, shape.base.log2);
+
+    let mut ops = Ops::default();
+    let reference = mul::mul_school(&a, &b, shape.base, &mut ops);
+
+    let mut sim = Machine::new(shape.p, shape.cap, shape.base);
+    let (sim_prod, sim_cost) = run_on(&mut sim, shape, &a, &b, &leaf)?;
+
+    let mut thr = ThreadedMachine::new(shape.p, shape.cap, shape.base);
+    let (thr_prod, thr_cost) = run_on(&mut thr, shape, &a, &b, &leaf)?;
+    thr.finish()
+        .map_err(|e| format!("threaded engine error: {e}"))?;
+
+    prop_assert_eq!(&sim_prod, &reference);
+    prop_assert_eq!(&thr_prod, &reference);
+    prop_assert!(
+        sim_prod == thr_prod,
+        "products diverge at {:?} n={} p={} base=2^{}",
+        shape.entry,
+        shape.n,
+        shape.p,
+        shape.base.log2
+    );
+    prop_assert!(
+        sim_cost == thr_cost,
+        "cost triples diverge at {:?} n={} p={} base=2^{}: sim {} vs threads {}",
+        shape.entry,
+        shape.n,
+        shape.p,
+        shape.base.log2,
+        sim_cost,
+        thr_cost
+    );
+    Ok(())
+}
+
 #[test]
 fn differential_reference_vs_both_engines() {
+    // On failure, check_shrink re-runs the case through `shrink_shape`
+    // (smaller n, then smaller P) and reports the minimal still-failing
+    // shape alongside the original seed.
+    check_shrink(
+        "engine-differential-corpus",
+        cases(48),
+        draw_shape,
+        shrink_shape,
+        differential_case,
+    );
+}
+
+/// Adversarial operand shapes, asserted against the bignum reference on
+/// BOTH engines through the full `execute_on` padding path: n = 1,
+/// all-zero and all-max-digit operands, wildly unequal lengths, and the
+/// smallest legal P for each algorithm (1 = the leaf base case, and the
+/// smallest parallel shape: 4 = 4^1 = 4·3^0).
+#[test]
+fn differential_adversarial_operands() {
+    let base = Base::new(16);
+    let max = (base.s() - 1) as u32;
+    let cases: Vec<(&str, Vec<u32>, Vec<u32>)> = vec![
+        ("n=1", vec![7], vec![9]),
+        ("n=1 zero", vec![0], vec![5]),
+        ("all-zero", vec![0; 17], vec![0; 23]),
+        ("zero x random", vec![0; 16], vec![max; 16]),
+        ("all-max square", vec![max; 32], vec![max; 32]),
+        ("unequal lengths", vec![max; 300], vec![1, 0, max]),
+        ("one digit x long", vec![3], vec![max; 64]),
+    ];
+    let algos: &[(Option<Algorithm>, usize)] = &[
+        (Some(Algorithm::Copsim), 1),
+        (Some(Algorithm::Copsim), 4),
+        (Some(Algorithm::Copk), 1),
+        (Some(Algorithm::Copk), 4),
+        (None, 4),
+    ];
+    let tm = TimeModel::default();
     let leaf = leaf_ref(SchoolLeaf);
-    check("engine-differential-corpus", cases(48), |rng| {
-        let shape = draw_shape(rng);
-        let a = rng.digits(shape.n, shape.base.log2);
-        let b = rng.digits(shape.n, shape.base.log2);
-
+    for (what, a, b) in &cases {
+        // Reference: schoolbook on the raw (unequal-length) operands,
+        // normalized the way `execute_on` normalizes its product.
         let mut ops = Ops::default();
-        let reference = mul::mul_school(&a, &b, shape.base, &mut ops);
+        let mut want = mul::mul_school(a, b, base, &mut ops);
+        let keep = copmul::bignum::core::normalized_len(&want).max(1);
+        want.truncate(keep);
+        for &(algo, procs) in algos {
+            let mut spec = JobSpec::new(0, a.clone(), b.clone());
+            spec.procs = procs;
+            spec.algo = algo;
+            let seq = Seq::range(procs);
 
-        let mut sim = Machine::new(shape.p, shape.cap, shape.base);
-        let (sim_prod, sim_cost) = run_on(&mut sim, &shape, &a, &b, &leaf)?;
+            let mut sim = Machine::unbounded(procs, base);
+            let (sim_prod, _) = execute_on(&mut sim, &tm, &spec, &seq, &leaf)
+                .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (sim): {e}"));
+            assert_eq!(&sim_prod, &want, "{what} algo {algo:?} p={procs} (sim)");
 
-        let mut thr = ThreadedMachine::new(shape.p, shape.cap, shape.base);
-        let (thr_prod, thr_cost) = run_on(&mut thr, &shape, &a, &b, &leaf)?;
-        thr.finish()
-            .map_err(|e| format!("threaded engine error: {e}"))?;
-
-        prop_assert_eq!(&sim_prod, &reference);
-        prop_assert_eq!(&thr_prod, &reference);
-        prop_assert!(
-            sim_prod == thr_prod,
-            "products diverge at {:?} n={} p={} base=2^{}",
-            shape.entry,
-            shape.n,
-            shape.p,
-            shape.base.log2
-        );
-        prop_assert!(
-            sim_cost == thr_cost,
-            "cost triples diverge at {:?} n={} p={} base=2^{}: sim {} vs threads {}",
-            shape.entry,
-            shape.n,
-            shape.p,
-            shape.base.log2,
-            sim_cost,
-            thr_cost
-        );
-        Ok(())
-    });
+            let mut thr = ThreadedMachine::unbounded(procs, base);
+            let (thr_prod, _) = execute_on(&mut thr, &tm, &spec, &seq, &leaf)
+                .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (threads): {e}"));
+            let report = thr.finish().unwrap();
+            assert_eq!(&thr_prod, &want, "{what} algo {algo:?} p={procs} (threads)");
+            assert_eq!(
+                sim.critical(),
+                report.critical,
+                "{what} algo {algo:?} p={procs}: engines disagree on cost"
+            );
+        }
+    }
 }
 
 /// The scheduler path: concurrent jobs on shards of one shared machine
@@ -245,6 +340,80 @@ fn differential_scheduler_sharded_vs_single_job() {
         assert!(
             peak >= 2,
             "scheduler never ran 2 jobs concurrently on {engine} (peak {peak})"
+        );
+        sched.shutdown().unwrap();
+    }
+}
+
+/// The differential invariant extended to fault injection: with a
+/// seeded plan armed, every job still completes with the reference
+/// product, and any job whose shard saw ZERO injected faults during its
+/// successful attempt reports a cost triple bit-identical to a
+/// dedicated fault-free machine. (Jobs that absorbed stalls/duplicates
+/// legitimately inflate and are skipped; the chaos_soak suite covers
+/// them at scale.)
+#[test]
+fn differential_faulty_scheduler_zero_fault_jobs_match_dedicated() {
+    let jobs = (cases(48) / 6).clamp(6, 24) as usize;
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        let cfg = SchedulerConfig {
+            procs: 16,
+            runners: 4,
+            engine,
+            // Stall/DupMsg only: faults inflate costs but never kill an
+            // attempt, so every job finishes on attempt 1 and the
+            // faults_survived counter cleanly splits the fleet into
+            // "must be identical" and "legitimately inflated".
+            fault: Some(FaultConfig::new(0xD1F2, 0.002).only(&[
+                FaultKind::Stall,
+                FaultKind::DupMsg,
+            ])),
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let mut rng = Rng::new(0xFD1F);
+        let mut pending = Vec::new();
+        for id in 0..jobs as u64 {
+            let n = (32usize) << rng.range(0, 3);
+            let a = rng.digits(n, 16);
+            let b = rng.digits(n, 16);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            spec.algo = Some(Algorithm::Copsim);
+            pending.push((spec.clone(), sched.submit(spec).unwrap()));
+        }
+        let mut zero_fault_jobs = 0usize;
+        for (spec, rx) in pending {
+            let res = rx.recv().unwrap().unwrap_or_else(|e| {
+                panic!("job {} failed under stall/dup faults on {engine}: {e}", spec.id)
+            });
+            // Product correctness holds for every job, faulted or not.
+            let mut ops = Ops::default();
+            let mut want = mul::mul_school(&spec.a, &spec.b, cfg.base, &mut ops);
+            let keep = copmul::bignum::core::normalized_len(&want).max(1);
+            want.truncate(keep);
+            assert_eq!(res.product, want, "job {} product ({engine})", spec.id);
+            if res.faults_survived > 0 {
+                continue;
+            }
+            zero_fault_jobs += 1;
+            let shard = res.shard.clone().expect("scheduler results carry shards");
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            let leaf = leaf_ref(SchoolLeaf);
+            execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+            assert_eq!(
+                res.cost,
+                solo.critical(),
+                "zero-fault job {} must be bit-identical to a dedicated run ({engine})",
+                spec.id
+            );
+        }
+        // At a 0.2% rate most shards see no fault at all — the identity
+        // case must actually be exercised, not vacuously skipped.
+        assert!(
+            zero_fault_jobs > 0,
+            "no zero-fault jobs at rate 0.002 on {engine}; rate too high for the invariant check"
         );
         sched.shutdown().unwrap();
     }

@@ -1,0 +1,134 @@
+//! Golden cost-regression table: exact (T, BW, L, M) values for a
+//! small canonical grid of (n, P, algorithm) cells on the cost-model
+//! engine, pinned to `tests/golden/cost_table.tsv`.
+//!
+//! The cost model is fully deterministic, so ANY refactor that silently
+//! changes a cost triple — a lost message coalescing rule, an extra
+//! barrier, a changed leaf scratch charge — fails this test even when
+//! products stay correct and the theorem *inequalities* still hold.
+//!
+//! ## Updating the table
+//!
+//! When a cost change is INTENTIONAL (an optimization or an accounting
+//! fix), regenerate and commit the table:
+//!
+//! ```text
+//! COPMUL_BLESS=1 cargo test --test golden_costs
+//! git add tests/golden/cost_table.tsv   # review the diff first!
+//! ```
+//!
+//! Review the diff like code: every changed cell is a claim that the
+//! new cost is the right cost. If the file is absent (first run on a
+//! fresh grid) the test writes it and passes with a warning, so adding
+//! a cell never breaks the build — committing the generated file is
+//! what arms the regression gate.
+
+use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use copmul::algorithms::Algorithm;
+use copmul::coordinator::{execute_on, JobSpec};
+use copmul::bignum::Base;
+use copmul::sim::Machine;
+use copmul::sim::Seq;
+use copmul::theory::TimeModel;
+use copmul::util::Rng;
+use std::path::PathBuf;
+
+/// The canonical grid. Keep it small (seconds, not minutes, in debug
+/// mode) and stable — adding cells is cheap, renaming them invalidates
+/// history.
+const GRID: &[(usize, usize, Option<Algorithm>)] = &[
+    (256, 4, Some(Algorithm::Copsim)),
+    (256, 16, Some(Algorithm::Copsim)),
+    (1024, 16, Some(Algorithm::Copsim)),
+    (256, 4, Some(Algorithm::Copk)),
+    (384, 12, Some(Algorithm::Copk)),
+    (1152, 12, Some(Algorithm::Copk)),
+    (256, 4, None),
+    (1024, 4, None),
+];
+
+fn algo_name(a: Option<Algorithm>) -> &'static str {
+    match a {
+        Some(Algorithm::Copsim) => "copsim",
+        Some(Algorithm::Copk) => "copk",
+        None => "hybrid",
+    }
+}
+
+/// One grid cell -> its table line. Operands are seeded per cell, so
+/// lines are independent of grid order.
+fn measure(n: usize, p: usize, algo: Option<Algorithm>) -> String {
+    let base = Base::new(16);
+    let mut rng = Rng::new(0x601D ^ (n as u64) ^ ((p as u64) << 32));
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let mut spec = JobSpec::new(0, a, b);
+    spec.procs = p;
+    spec.algo = algo;
+    let mut m = Machine::unbounded(p, base);
+    let seq = Seq::range(p);
+    let leaf = leaf_ref(SchoolLeaf);
+    execute_on(&mut m, &TimeModel::default(), &spec, &seq, &leaf)
+        .unwrap_or_else(|e| panic!("golden cell n={n} p={p} {}: {e}", algo_name(algo)));
+    let c = m.critical();
+    format!(
+        "n={n}\tp={p}\talgo={}\tT={}\tBW={}\tL={}\tM={}",
+        algo_name(algo),
+        c.ops,
+        c.words,
+        c.msgs,
+        m.mem_peak_max()
+    )
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("cost_table.tsv")
+}
+
+#[test]
+fn golden_cost_table_is_stable() {
+    let lines: Vec<String> = GRID
+        .iter()
+        .map(|&(n, p, algo)| measure(n, p, algo))
+        .collect();
+    let current = format!(
+        "# Golden (T, BW, L, M) table — cost-model engine, SchoolLeaf, base 2^16.\n\
+         # Regenerate ONLY for intentional cost changes:\n\
+         #   COPMUL_BLESS=1 cargo test --test golden_costs\n\
+         # then review and commit the diff (see tests/golden_costs.rs).\n{}\n",
+        lines.join("\n")
+    );
+    let path = golden_path();
+    let bless = std::env::var("COPMUL_BLESS").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(stored) if !bless => {
+            if stored != current {
+                // Show a per-line diff before failing — the offending
+                // cell is what the developer needs.
+                for (want, got) in stored.lines().zip(current.lines()) {
+                    if want != got {
+                        eprintln!("golden mismatch:\n  stored:   {want}\n  measured: {got}");
+                    }
+                }
+                panic!(
+                    "cost-model outputs changed for pinned (n, P, algorithm) cells.\n\
+                     If intentional, regenerate with COPMUL_BLESS=1 (instructions in \
+                     {} and tests/golden_costs.rs).",
+                    path.display()
+                );
+            }
+        }
+        _ => {
+            // Bless mode, or first run with no table yet: write it.
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &current).unwrap();
+            eprintln!(
+                "golden cost table written to {} — commit it to arm the regression gate",
+                path.display()
+            );
+        }
+    }
+}

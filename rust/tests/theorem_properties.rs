@@ -36,7 +36,7 @@ fn prop_copsim_mi_all_theorem11_invariants() {
         // Correctness.
         let mut ops = Ops::default();
         let want = mul::mul_school(&a, &b, base(), &mut ops);
-        prop_assert_eq!(c.gather(&m), want);
+        prop_assert_eq!(c.gather(&m).unwrap(), want);
         // Compute bound (Theorem 11).
         let bound = theory::thm11_copsim_mi(n as u64, p as u64);
         prop_assert!(
@@ -70,7 +70,7 @@ fn prop_copk_mi_theorem14_invariants() {
             .map_err(|e| format!("memory bound violated: {e}"))?;
         let mut ops = Ops::default();
         let want = mul::mul_school(&a, &b, base(), &mut ops);
-        prop_assert_eq!(c.gather(&m), want);
+        prop_assert_eq!(c.gather(&m).unwrap(), want);
         let bound = theory::thm14_copk_mi(n as u64, p as u64);
         prop_assert!(
             m.critical().ops <= bound.ops,
@@ -105,7 +105,7 @@ fn prop_dfs_and_mi_agree() {
         let c2 = copsim(&mut m2, &seq, da, db, &leaf_ref(SchoolLeaf))
             .map_err(|e| format!("{e}"))?;
 
-        prop_assert_eq!(c1.gather(&m1), c2.gather(&m2));
+        prop_assert_eq!(c1.gather(&m1).unwrap(), c2.gather(&m2).unwrap());
         prop_assert!(m2.mem_peak_max() <= cap, "peak {} > cap {cap}", m2.mem_peak_max());
         // DFS trades communication for memory: it must use at least as
         // much bandwidth as the MI run.
@@ -133,7 +133,7 @@ fn prop_determinism() {
             let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
             let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
             let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
-            (c.gather(&m), m.critical())
+            (c.gather(&m).unwrap(), m.critical())
         };
         let (c1, k1) = run();
         let (c2, k2) = run();
@@ -172,7 +172,7 @@ fn prop_edge_operands() {
                     "copsim" => copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap(),
                     _ => copk_mi(&mut m, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap(),
                 };
-                assert_eq!(c.gather(&m), want, "pattern ({i},{j}) scheme {scheme}");
+                assert_eq!(c.gather(&m).unwrap(), want, "pattern ({i},{j}) scheme {scheme}");
             }
         }
     }
@@ -226,7 +226,7 @@ fn run_both_engines(
         "copsim" => copsim_mi(&mut sim, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap(),
         _ => copk_mi(&mut sim, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap(),
     };
-    let sim_out = (c.gather(&sim), sim.critical());
+    let sim_out = (c.gather(&sim).unwrap(), sim.critical());
 
     let mut thr = ThreadedMachine::unbounded(p, base());
     let da = DistInt::scatter(&mut thr, &seq, a, w).unwrap();
@@ -235,7 +235,7 @@ fn run_both_engines(
         "copsim" => copsim_mi(&mut thr, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap(),
         _ => copk_mi(&mut thr, &seq, da, db, &leaf_ref(SkimLeaf)).unwrap(),
     };
-    let thr_out = (c.gather(&thr), MachineApi::critical(&thr));
+    let thr_out = (c.gather(&thr).unwrap(), MachineApi::critical(&thr));
     thr.finish().expect("threaded engine reported an error");
 
     let mut ops = Ops::default();
@@ -397,9 +397,9 @@ fn prop_engines_agree_on_primitives() {
         let (ct, vt) = sum(&mut thr, &seq, &da, &db).unwrap();
         let (dt, ft) = diff(&mut thr, &seq, &da, &db).unwrap();
 
-        prop_assert_eq!(cs.gather(&sim), ct.gather(&thr));
+        prop_assert_eq!(cs.gather(&sim).unwrap(), ct.gather(&thr).unwrap());
         prop_assert_eq!(vs, vt);
-        prop_assert_eq!(ds.gather(&sim), dt.gather(&thr));
+        prop_assert_eq!(ds.gather(&sim).unwrap(), dt.gather(&thr).unwrap());
         prop_assert_eq!(fs, ft);
         prop_assert_eq!(sim.critical(), MachineApi::critical(&thr));
         thr.finish().map_err(|e| format!("{e}"))?;
