@@ -21,9 +21,13 @@
 //! The recomposition follows the paper's §5.1 phase (3): redistribute
 //! `C0 → P'`, `C3 → P''`, `C1, C2 → middle`, then three SUM invocations
 //! on `P* = seq[P/4..P]` (3P/4 processors) add the overlapping windows
-//! `C0≫n/2, C1, C2, C3≪n/2` as `3n/2`-digit values. Data movement uses
-//! the generic repartition (each digit moves once; see DESIGN.md
-//! decision 4).
+//! `C0≫n/2, C1, C2, C3≪n/2` as `3n/2`-digit values. All data movement
+//! goes through the `sim::collectives` layer — the repartitions compile
+//! to its coalesced all-to-all (each digit moves once; DESIGN.md
+//! decision 4), the operand replication to its `shift`, and the SUM
+//! flag exchanges to its `fanout` — so the `O(log P)` tree structure
+//! behind Theorem 1's latency claim is explicit, not implicit in ad-hoc
+//! send loops.
 
 use super::leaf::LeafRef;
 use super::leaf_multiply;

@@ -5,6 +5,7 @@
 use crate::algorithms::Algorithm;
 use crate::bignum::Base;
 use crate::error::{bail, Context, Result};
+use crate::sim::TopologyKind;
 use crate::theory::TimeModel;
 
 /// Which execution engine runs the machine model (see `sim::MachineApi`).
@@ -82,6 +83,8 @@ pub struct RunConfig {
     pub leaf: LeafKind,
     /// Execution engine: cost-model simulator or real threads.
     pub engine: EngineKind,
+    /// Network topology the machine(s) simulate/route over.
+    pub topology: TopologyKind,
     pub seed: u64,
     pub artifacts_dir: String,
     pub time_model: TimeModel,
@@ -99,6 +102,7 @@ impl Default for RunConfig {
             algo: None,
             leaf: LeafKind::Skim,
             engine: EngineKind::Sim,
+            topology: TopologyKind::FullyConnected,
             seed: 42,
             artifacts_dir: "artifacts".into(),
             time_model: TimeModel::default(),
@@ -135,8 +139,9 @@ impl RunConfig {
             }
             "leaf" => self.leaf = value.parse()?,
             // Accepted both as `engine=threads` and as the CLI flag
-            // spelling `--engine=threads`.
+            // spelling `--engine=threads` (likewise `topology`).
             "engine" | "--engine" => self.engine = value.parse()?,
+            "topology" | "--topology" => self.topology = value.parse()?,
             "seed" => self.seed = value.parse().context("seed")?,
             "artifacts" | "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "workers" => self.workers = value.parse().context("workers")?,
@@ -238,6 +243,19 @@ mod tests {
         c.apply_args(&["--engine=sim".into()]).unwrap();
         assert_eq!(c.engine, EngineKind::Sim);
         assert!(c.set("engine", "gpu").is_err());
+    }
+
+    #[test]
+    fn topology_flag_parses_both_spellings() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.topology, TopologyKind::FullyConnected);
+        c.apply_args(&["topology=torus".into()]).unwrap();
+        assert_eq!(c.topology, TopologyKind::Torus);
+        c.apply_args(&["--topology=hier".into()]).unwrap();
+        assert_eq!(c.topology, TopologyKind::Hier);
+        c.apply_args(&["--topology=fully-connected".into()]).unwrap();
+        assert_eq!(c.topology, TopologyKind::FullyConnected);
+        assert!(c.set("topology", "hypercube").is_err());
     }
 
     #[test]

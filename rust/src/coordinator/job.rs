@@ -2,7 +2,7 @@
 
 use crate::algorithms::Algorithm;
 use crate::config::EngineKind;
-use crate::sim::{Clock, ProcId};
+use crate::sim::{Clock, ProcId, TopologyKind};
 use crate::util::{copk_bfs_levels, is_copk_procs, next_pow2};
 use std::time::Duration;
 
@@ -24,6 +24,11 @@ pub struct JobSpec {
     /// Execution engine: the deterministic cost-model simulator
     /// (default) or one OS thread per simulated processor.
     pub engine: EngineKind,
+    /// Network topology of the job's machine (`--topology` on the
+    /// CLI). Per-job on the one-machine-per-job coordinator path; the
+    /// sharded scheduler fixes the topology per shared machine instead
+    /// (like the engine).
+    pub topology: TopologyKind,
 }
 
 impl JobSpec {
@@ -36,6 +41,7 @@ impl JobSpec {
             mem_cap: None,
             algo: None,
             engine: EngineKind::Sim,
+            topology: TopologyKind::FullyConnected,
         }
     }
 

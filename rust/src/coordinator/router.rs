@@ -190,14 +190,16 @@ pub fn execute_on<M: MachineApi>(
     Ok((product, algo))
 }
 
-/// Execute one job on a fresh machine of the engine the spec selects.
+/// Execute one job on a fresh machine of the engine (and network
+/// topology) the spec selects.
 fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<JobResult> {
     let t0 = Instant::now();
     let mem_cap = spec.mem_cap.unwrap_or(u64::MAX / 2);
     let seq = Seq::range(spec.procs);
+    let topo = spec.topology.build(spec.procs);
     match spec.engine {
         EngineKind::Sim => {
-            let mut machine = Machine::new(spec.procs, mem_cap, cfg.base);
+            let mut machine = Machine::with_topology(spec.procs, mem_cap, cfg.base, topo);
             let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             Ok(JobResult {
                 id: spec.id,
@@ -213,7 +215,7 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
             })
         }
         EngineKind::Threads => {
-            let mut machine = ThreadedMachine::new(spec.procs, mem_cap, cfg.base);
+            let mut machine = ThreadedMachine::with_topology(spec.procs, mem_cap, cfg.base, topo);
             let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             let report = machine.finish()?;
             Ok(JobResult {

@@ -85,7 +85,7 @@ use crate::config::EngineKind;
 use crate::error::{anyhow, bail, Context, Result};
 use crate::sim::{
     Clock, FaultConfig, FaultyMachine, Machine, MachineApi, MachineStats, ProcId, ProcView, Seq,
-    Slot, SlotComputation, ThreadedMachine,
+    Slot, SlotComputation, ThreadedMachine, TopologyKind, TopologyRef,
 };
 use crate::theory::{self, TimeModel};
 use crate::util::is_copk_procs;
@@ -198,6 +198,10 @@ impl MachineApi for ShardView {
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::base(m))
     }
+    fn topology(&self) -> TopologyRef {
+        let mut g = self.lock();
+        on_engine!(g, m => MachineApi::topology(m))
+    }
 
     fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
         let mut g = self.lock();
@@ -291,7 +295,7 @@ impl MachineApi for ShardView {
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::send_range(m, src, dst, slot, range))
     }
-    fn barrier(&mut self, procs: &[ProcId]) {
+    fn barrier(&mut self, procs: &[ProcId]) -> Result<()> {
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::barrier(m, procs))
     }
@@ -486,6 +490,15 @@ pub struct SchedulerConfig {
     /// with this machine-wide cap) but is not separately enforced at
     /// runtime; use the [`super::Coordinator`] for exact per-job caps.
     pub engine: EngineKind,
+    /// Network topology of the shared machine (per-machine, like the
+    /// engine; per-job `JobSpec::topology` is ignored here). NOTE: the
+    /// bit-exact sharded-equals-dedicated cost identity holds on the
+    /// fully-connected default, whose routes never leave a shard; on
+    /// torus/hier topologies inter-shard relays carry other jobs'
+    /// traffic, so per-job cost triples become machine-shaped rather
+    /// than job-isolated — realistic, but not comparable to a
+    /// dedicated run bit for bit.
+    pub topology: TopologyKind,
     /// Time model used by the hybrid dispatcher.
     pub time_model: TimeModel,
     /// Runner threads = maximum concurrently running jobs.
@@ -511,6 +524,7 @@ impl Default for SchedulerConfig {
             mem_cap: u64::MAX / 2,
             base: Base::default(),
             engine: EngineKind::Sim,
+            topology: TopologyKind::FullyConnected,
             time_model: TimeModel::default(),
             runners: 4,
             max_queue: 1024,
@@ -567,13 +581,14 @@ impl Scheduler {
     pub fn start(cfg: SchedulerConfig, leaf: LeafRef) -> Scheduler {
         assert!(cfg.procs >= 1, "need at least one processor");
         let plan = cfg.fault.clone();
+        let topo = cfg.topology.build(cfg.procs);
         let machine = match cfg.engine {
             EngineKind::Sim => EngineMachine::Sim(FaultyMachine::with(
-                Machine::new(cfg.procs, cfg.mem_cap, cfg.base),
+                Machine::with_topology(cfg.procs, cfg.mem_cap, cfg.base, topo),
                 plan,
             )),
             EngineKind::Threads => EngineMachine::Threads(FaultyMachine::with(
-                ThreadedMachine::new(cfg.procs, cfg.mem_cap, cfg.base),
+                ThreadedMachine::with_topology(cfg.procs, cfg.mem_cap, cfg.base, topo),
                 plan,
             )),
         };
@@ -853,8 +868,9 @@ fn run_sharded(
     };
     // Uniform clock baseline: max-plus clock evolution commutes with a
     // uniform shift, so everything after this barrier is exactly a
-    // fresh-machine run of the job shifted by `baseline`.
-    view.barrier(shard);
+    // fresh-machine run of the job shifted by `baseline`. A crashed or
+    // dead shard processor surfaces here, before any work is issued.
+    view.barrier(shard)?;
     let baseline = view.proc_view(shard[0])?.clock;
     let seq = Seq(shard.to_vec());
     let (product, algo) = execute_on(&mut view, &cfg.time_model, spec, &seq, leaf)?;

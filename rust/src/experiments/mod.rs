@@ -16,6 +16,7 @@ pub mod engines;
 pub mod primitives;
 pub mod scheduler;
 pub mod systems;
+pub mod topologies;
 
 use crate::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf, SlimLeaf};
 use crate::algorithms::{copk, copk_mi, copsim, copsim_mi};
@@ -192,6 +193,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "chaos: throughput + cost inflation vs injected fault rate",
             run: chaos::e17_chaos,
         },
+        Experiment {
+            id: "E18",
+            paper_ref: "bounds per network topology",
+            title: "topologies: measured vs predicted (T, BW, L), both engines",
+            run: topologies::e18_topologies,
+        },
     ]
 }
 
@@ -216,10 +223,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 17);
+        assert_eq!(reg.len(), 18);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 17);
+        assert_eq!(ids.len(), 18);
     }
 
     #[test]

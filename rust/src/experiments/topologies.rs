@@ -1,0 +1,195 @@
+//! E18 — network topologies: measured vs predicted `(T, BW, L)` per
+//! topology, on both execution engines.
+//!
+//! The paper's bounds assume the implicit fully-connected network; the
+//! topology layer replays the same coordination algorithms over a 2D
+//! torus and a two-level hierarchical cluster, charging every logical
+//! message hop by hop. The per-topology prediction is
+//! the fully-connected theorem bound scaled by
+//! [`theory::topology_inflation`]: `BW × (diameter · max link weight)`,
+//! `L × diameter`, `T` unchanged. The table reports measured /
+//! predicted ratios; a ratio above 1 would mean relay congestion
+//! pushed the critical path past the per-chain bound (the slack the
+//! `theory::` docs call out), and both engines are asserted to agree
+//! on every cost triple — the routing layers are cost-identical by
+//! construction.
+
+use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
+use crate::algorithms::{copk_mi, copsim_mi};
+use crate::bignum::Base;
+use crate::config::EngineKind;
+use crate::error::{ensure, Result};
+use crate::metrics::{fmt_f64, fmt_u64, Table};
+use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine, TopologyKind};
+use crate::theory;
+use crate::util::Rng;
+
+/// Which scheme a cell runs (MI mode, unbounded memory).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Copsim,
+    Copk,
+}
+
+impl Scheme {
+    fn name(self) -> &'static str {
+        match self {
+            Scheme::Copsim => "COPSIM",
+            Scheme::Copk => "COPK",
+        }
+    }
+    fn leaf(self) -> LeafRef {
+        match self {
+            Scheme::Copsim => leaf_ref(SchoolLeaf),
+            Scheme::Copk => leaf_ref(SkimLeaf),
+        }
+    }
+    fn fc_bound(self, n: u64, p: u64) -> Clock {
+        match self {
+            Scheme::Copsim => theory::thm11_copsim_mi(n, p),
+            Scheme::Copk => theory::thm14_copk_mi(n, p),
+        }
+    }
+}
+
+fn run_on<M: MachineApi>(
+    m: &mut M,
+    scheme: Scheme,
+    seq: &Seq,
+    a: &[u32],
+    b: &[u32],
+    leaf: &LeafRef,
+) -> Result<Vec<u32>> {
+    let w = a.len() / seq.len();
+    let da = DistInt::scatter(m, seq, a, w)?;
+    let db = DistInt::scatter(m, seq, b, w)?;
+    let c = match scheme {
+        Scheme::Copsim => copsim_mi(m, seq, da, db, leaf)?,
+        Scheme::Copk => copk_mi(m, seq, da, db, leaf)?,
+    };
+    let product = c.gather(m)?;
+    c.free(m);
+    Ok(product)
+}
+
+/// One (scheme, n, P, topology) cell on one engine: product + triple.
+fn measure(
+    scheme: Scheme,
+    n: usize,
+    p: usize,
+    kind: TopologyKind,
+    engine: EngineKind,
+    seed: u64,
+) -> Result<(Vec<u32>, Clock)> {
+    let base = Base::new(16);
+    let leaf = scheme.leaf();
+    let mut rng = Rng::new(seed);
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let seq = Seq::range(p);
+    let topo = kind.build(p);
+    match engine {
+        EngineKind::Sim => {
+            let mut m = Machine::with_topology(p, u64::MAX / 2, base, topo);
+            let prod = run_on(&mut m, scheme, &seq, &a, &b, &leaf)?;
+            Ok((prod, m.critical()))
+        }
+        EngineKind::Threads => {
+            let mut m = ThreadedMachine::with_topology(p, u64::MAX / 2, base, topo);
+            let prod = run_on(&mut m, scheme, &seq, &a, &b, &leaf)?;
+            let report = m.finish()?;
+            Ok((prod, report.critical))
+        }
+    }
+}
+
+/// One cross-engine cell: run on both engines, assert they agree, and
+/// return the (shared) measured triple with its per-topology
+/// prediction.
+pub fn compare_cell(
+    scheme: Scheme,
+    n: usize,
+    p: usize,
+    kind: TopologyKind,
+    seed: u64,
+) -> Result<(Clock, Clock)> {
+    let (sim_prod, sim_cost) = measure(scheme, n, p, kind, EngineKind::Sim, seed)?;
+    let (thr_prod, thr_cost) = measure(scheme, n, p, kind, EngineKind::Threads, seed)?;
+    ensure!(
+        sim_prod == thr_prod,
+        "engines disagree on the product at {} n={n} P={p} {kind}",
+        scheme.name()
+    );
+    ensure!(
+        sim_cost == thr_cost,
+        "engines disagree on the cost triple at {} n={n} P={p} {kind}: \
+         sim {sim_cost} vs threads {thr_cost}",
+        scheme.name()
+    );
+    let topo = kind.build(p);
+    let fc_bound = scheme.fc_bound(n as u64, p as u64);
+    Ok((sim_cost, theory::predicted_for_topology(fc_bound, topo.as_ref())))
+}
+
+/// The default E18 sweep: COPSIM and COPK cells × all three topologies,
+/// each cross-checked on both engines.
+pub fn e18_topologies() -> Result<Vec<Table>> {
+    let cells: &[(Scheme, usize, usize)] = &[
+        (Scheme::Copsim, 16, 1 << 10),
+        (Scheme::Copsim, 64, 1 << 12),
+        (Scheme::Copk, 12, 1536),
+        (Scheme::Copk, 36, 4608),
+    ];
+    let mut t = Table::new(
+        "E18: measured vs predicted (T, BW, L) per network topology, both engines \
+         (predicted = fully-connected theorem bound x topology inflation: \
+         BW x diameter·max-link-weight, L x diameter; engines asserted cost-identical)",
+        &[
+            "scheme", "topology", "P", "n", "T", "BW", "L", "pred BW", "pred L", "BW ratio",
+            "L ratio",
+        ],
+    );
+    for &(scheme, p, n) in cells {
+        for kind in TopologyKind::ALL {
+            let (measured, predicted) = compare_cell(scheme, n, p, kind, 0xE18)?;
+            t.row(vec![
+                scheme.name().into(),
+                kind.to_string(),
+                p.to_string(),
+                fmt_u64(n as u64),
+                fmt_u64(measured.ops),
+                fmt_u64(measured.words),
+                fmt_u64(measured.msgs),
+                fmt_u64(predicted.words),
+                fmt_u64(predicted.msgs),
+                fmt_f64(measured.words as f64 / predicted.words.max(1) as f64),
+                fmt_f64(measured.msgs as f64 / predicted.msgs.max(1) as f64),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_agree_across_engines_on_every_topology() {
+        for kind in TopologyKind::ALL {
+            let (measured, _) = compare_cell(Scheme::Copsim, 256, 4, kind, 0x718).unwrap();
+            assert!(measured.ops > 0);
+            let (measured, _) = compare_cell(Scheme::Copk, 384, 12, kind, 0x718).unwrap();
+            assert!(measured.ops > 0);
+        }
+    }
+
+    #[test]
+    fn fully_connected_prediction_is_the_paper_bound() {
+        let p = 16usize;
+        let n = 512usize;
+        let (_, predicted) =
+            compare_cell(Scheme::Copsim, n, p, TopologyKind::FullyConnected, 1).unwrap();
+        assert_eq!(predicted, theory::thm11_copsim_mi(n as u64, p as u64));
+    }
+}

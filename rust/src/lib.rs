@@ -19,10 +19,16 @@
 //!   critical-path accounting per §2.2, Yang–Miller, and per-processor
 //!   memory ledgers), a real-threads executor
 //!   ([`sim::ThreadedMachine`], one OS thread per simulated processor
-//!   with point-to-point message channels), and a seeded deterministic
+//!   with point-to-point message channels), a seeded deterministic
 //!   fault-injection wrapper over either engine
 //!   ([`sim::FaultyMachine`] — dropped/duplicated/reordered messages,
-//!   stalls, alloc/compute failures, recoverable processor crashes).
+//!   stalls, alloc/compute failures, recoverable processor crashes),
+//!   the shared collective-communication layer ([`sim::collectives`] —
+//!   binomial-tree broadcast/gather/scatter/carry-aware reduce,
+//!   pairwise shift/fanout, coalesced all-to-all), and pluggable
+//!   network topologies ([`sim::topology`] — fully-connected, 2D
+//!   torus, hierarchical two-level cluster, with hop-by-hop routing
+//!   and per-link charging in every engine).
 //! * [`primitives`] — parallel `SUM`, `COMPARE`, `DIFF` (§4), including the
 //!   speculative carry/borrow pre-calculation the paper uses to break the
 //!   sequential carry chain.
@@ -43,11 +49,12 @@
 //!   recovery — per-job retries with shard-size backoff, safe-mode
 //!   final attempts, processor quarantine), and a dynamic batcher
 //!   dispatching leaf products to the XLA runtime.
-//! * [`experiments`] — one module per paper result (E1–E17), each printing
+//! * [`experiments`] — one module per paper result (E1–E18), each printing
 //!   a `paper bound | measured | ratio` table; E15 compares the
 //!   cost-model and threaded execution engines, E16 measures the sharded
 //!   scheduler's throughput and per-job cost inflation, E17 measures
-//!   throughput and cost inflation under injected faults.
+//!   throughput and cost inflation under injected faults, E18 measures
+//!   vs per-topology predictions on both engines.
 //!
 //! See `rust/DESIGN.md` for the architecture notes (including the
 //! two-backend execution-engine split) and the experiment index.
@@ -67,4 +74,4 @@ pub mod theory;
 pub mod util;
 
 pub use config::{EngineKind, RunConfig};
-pub use sim::{Clock, Machine, MachineApi, Seq, ThreadedMachine};
+pub use sim::{Clock, Machine, MachineApi, Seq, ThreadedMachine, TopologyKind};

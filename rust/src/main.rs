@@ -4,7 +4,7 @@
 //!
 //! ```text
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
-//! copmul experiment <id|all> [--csv]           run paper experiments E1-E17
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E18
 //! copmul serve [key=value ...]                 coordinator demo workload
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
@@ -12,7 +12,8 @@
 //!
 //! Common `key=value` options: `n`, `procs`, `mem`, `algo`
 //! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
-//! `engine` (sim|threads; also spelled `--engine=...`), `seed`,
+//! `engine` (sim|threads; also spelled `--engine=...`), `topology`
+//! (fully-connected|torus|hier; also `--topology=...`), `seed`,
 //! `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
 //! `serve` additionally takes `--jobs=N` (request count), `--shards=K`
 //! (run the sharded scheduler: ONE shared machine of `procs` processors
@@ -62,16 +63,21 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E17|all> [--csv] [key=value ...]
+  copmul experiment <E1..E18|all> [--csv] [key=value ...]
   copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [key=value ...]
   copmul info [artifacts=DIR]
   copmul selftest
 
 KEYS: n procs mem algo(copsim|copk|hybrid) leaf(slim|skim|school|hybrid|xla|xla-batched)
-      --engine=(sim|threads) seed workers artifacts alpha_ns beta_ns gamma_ns
+      --engine=(sim|threads) --topology=(fully-connected|torus|hier)
+      seed workers artifacts alpha_ns beta_ns gamma_ns
 
 ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
          threads = one OS thread per simulated processor (wall-clock speedup).
+
+TOPOLOGIES: fully-connected (the paper's implicit network; default),
+            torus (2D wraparound grid, hop-by-hop routing and charging),
+            hier (two-level clusters over a half-bandwidth backbone).
 
 SERVE:   --jobs=N   number of requests (default 64)
          --shards=K sharded scheduler: one shared `procs`-processor machine,
@@ -128,10 +134,12 @@ fn cmd_mul(args: &[String]) -> Result<()> {
     spec.mem_cap = cfg.mem_cap;
     spec.algo = cfg.algo;
     spec.engine = cfg.engine;
+    spec.topology = cfg.topology;
     let res = coord.submit_blocking(spec)?;
     println!("product  = {}", to_hex(&res.product, base));
     println!("scheme   = {}", res.algo);
     println!("engine   = {}", res.engine);
+    println!("topology = {}", cfg.topology);
     println!(
         "cost     = T={} BW={} L={} (critical path)",
         fmt_u64(res.cost.ops),
@@ -222,8 +230,8 @@ fn serve_per_job(cfg: &RunConfig, jobs: usize) -> Result<()> {
         leaf,
     );
     println!(
-        "serving {jobs} jobs (n={}, procs={}, leaf={:?}, engine={}, workers={})",
-        cfg.n, cfg.procs, cfg.leaf, cfg.engine, cfg.workers
+        "serving {jobs} jobs (n={}, procs={}, leaf={:?}, engine={}, topology={}, workers={})",
+        cfg.n, cfg.procs, cfg.leaf, cfg.engine, cfg.topology, cfg.workers
     );
     let mut rng = Rng::new(cfg.seed);
     let t0 = std::time::Instant::now();
@@ -236,6 +244,7 @@ fn serve_per_job(cfg: &RunConfig, jobs: usize) -> Result<()> {
         spec.mem_cap = cfg.mem_cap;
         spec.algo = cfg.algo;
         spec.engine = cfg.engine;
+        spec.topology = cfg.topology;
         pending.push(coord.submit(spec));
     }
     let mut lat_us: Vec<u64> = Vec::with_capacity(jobs);
@@ -299,6 +308,7 @@ fn serve_sharded(
             mem_cap: cfg.mem_cap.unwrap_or(u64::MAX / 2),
             base,
             engine: cfg.engine,
+            topology: cfg.topology,
             time_model: cfg.time_model,
             runners: shards,
             max_queue: jobs.max(1024),
@@ -309,8 +319,8 @@ fn serve_sharded(
     );
     println!(
         "serving {jobs} jobs on a shared {}-processor machine \
-         ({shards} shards x {per_job} procs, n={}, leaf={:?}, engine={})",
-        cfg.procs, cfg.n, cfg.leaf, cfg.engine
+         ({shards} shards x {per_job} procs, n={}, leaf={:?}, engine={}, topology={})",
+        cfg.procs, cfg.n, cfg.leaf, cfg.engine, cfg.topology
     );
     let mut rng = Rng::new(cfg.seed);
     let t0 = std::time::Instant::now();

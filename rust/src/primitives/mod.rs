@@ -25,39 +25,11 @@ pub use sum::{sum, sum_many};
 
 use crate::sim::{DistInt, MachineApi, Seq};
 
-/// Deliver a small payload (flags/carries) held by every processor of
-/// `src_seq` to every processor of `dst_seq`.
-///
-/// When the sequences have equal length this is the paper's single
-/// parallel pairwise exchange (`P'[j] sends to P''[j]`): one message
-/// round. With uneven halves (COPSIM recomposes on `3P/4` processors,
-/// so one recursion level splits unevenly) the uncovered tail of
-/// `dst_seq` is filled by doubling rounds among the receivers —
-/// `O(log)` extra latency only at the uneven levels.
-pub(crate) fn fanout<M: MachineApi>(
-    m: &mut M,
-    src_seq: &Seq,
-    dst_seq: &Seq,
-    payload: &[u32],
-) -> crate::error::Result<()> {
-    let f = src_seq.len().min(dst_seq.len());
-    // Round 0: pairwise.
-    for j in 0..f {
-        let s = m.send(src_seq.at(j), dst_seq.at(j), payload.to_vec())?;
-        m.free(dst_seq.at(j), s);
-    }
-    // Doubling rounds among dst for the uncovered tail.
-    let mut have = f;
-    while have < dst_seq.len() {
-        let take = have.min(dst_seq.len() - have);
-        for j in 0..take {
-            let s = m.send(dst_seq.at(j), dst_seq.at(have + j), payload.to_vec())?;
-            m.free(dst_seq.at(have + j), s);
-        }
-        have += take;
-    }
-    Ok(())
-}
+// The per-level flag exchange of SUM/COMPARE/DIFF is the shared
+// `fanout` collective (pairwise round + doubling tail); it lives in
+// `sim::collectives` with the other tree schedules so its message
+// bound is pinned once, next to broadcast/gather/scatter/reduce.
+pub(crate) use crate::sim::collectives::fanout;
 
 /// Check the operand layout invariant shared by all primitives.
 pub(crate) fn check_layout(seq: &Seq, x: &DistInt, what: &str) {

@@ -20,11 +20,13 @@
 //!
 //! Backends must charge costs identically: `compute`/`local`/
 //! `compute_slot` add digit ops to the executing processor's clock; a
-//! send charges the payload size and one message to the *sender* and
-//! joins the receiver's clock with the sender's post-send snapshot;
-//! `barrier` joins the clocks of the given processors. Under that
-//! contract the two backends produce *bit-identical products and
-//! identical cost triples* — property-tested in
+//! send is charged hop by hop along the topology's route — each link
+//! sender pays the payload size times the link's bandwidth weight plus
+//! one message, and the next hop joins the post-charge snapshot (on the
+//! fully-connected default this is the paper's charge-once-to-the-
+//! sender rule); `barrier` joins the clocks of the given processors.
+//! Under that contract the two backends produce *bit-identical products
+//! and identical cost triples* on every topology — property-tested in
 //! `tests/theorem_properties.rs`.
 //!
 //! ## Asynchrony
@@ -46,12 +48,25 @@
 //! [`super::FaultyMachine`]), and the failure must surface as an error
 //! the caller — one job of many on a shared machine — can recover from,
 //! rather than poisoning the whole machine with a panic. The cost-model
-//! backend never fails these. Purely-accounting operations (`compute`,
-//! `free`, `barrier`, `purge`) stay infallible; on a dead processor
-//! they become no-ops and the next fallible operation reports the
-//! death.
+//! backend never fails these. `barrier` is fallible for the same
+//! reason: a rendezvous that includes a dead or crashed processor must
+//! report it to the caller instead of silently completing without the
+//! corpse. Purely-accounting operations (`compute`, `free`, `purge`)
+//! stay infallible; on a dead processor they become no-ops and the
+//! next fallible operation reports the death.
+//!
+//! ## Topology
+//!
+//! Every engine carries a [`Topology`] describing the physical
+//! interconnect (fully-connected by default). Sends are charged — and,
+//! on the threaded backend, actually routed — hop by hop along
+//! `topology().route(src, dst)` with per-link bandwidth weights; see
+//! the `topology` module docs for the charging rule. The collective
+//! schedules in `sim::collectives` are expressed in logical edges and
+//! inherit the topology through these send primitives.
 
 use super::machine::{MachineStats, ProcId, Slot};
+use super::topology::TopologyRef;
 use super::Clock;
 use crate::bignum::{Base, Ops};
 use crate::error::Result;
@@ -87,6 +102,8 @@ pub trait MachineApi {
     fn mem_cap(&self) -> u64;
     /// Digit base.
     fn base(&self) -> Base;
+    /// The physical interconnect (see module docs, "Topology").
+    fn topology(&self) -> TopologyRef;
 
     // ----- memory ledger ---------------------------------------------
 
@@ -152,10 +169,15 @@ pub trait MachineApi {
 
     // ----- communication ----------------------------------------------
 
-    /// Send `data` from `src` to `dst` as one message; allocates the
-    /// payload in `dst`'s memory and returns the new slot. Charged once,
-    /// to the sender; the receiver's clock joins the sender's post-send
-    /// snapshot.
+    /// Send `data` from `src` to `dst` as one logical message;
+    /// allocates the payload in `dst`'s memory and returns the new
+    /// slot. On the fully-connected topology this is charged once, to
+    /// the sender, and the receiver's clock joins the sender's
+    /// post-send snapshot; on other topologies the transfer is charged
+    /// (and on the threaded engine performed) hop by hop along
+    /// `topology().route(src, dst)`, each relay joining the previous
+    /// hop's snapshot before charging its own link. Relays never touch
+    /// their memory ledgers (wire forwarding — see `topology` docs).
     fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot>;
 
     /// Send a copy of an existing slot (source keeps its copy).
@@ -173,8 +195,11 @@ pub trait MachineApi {
         range: Range<usize>,
     ) -> Result<Slot>;
 
-    /// Synchronize a set of processors: all their clocks join.
-    fn barrier(&mut self, procs: &[ProcId]);
+    /// Synchronize a set of processors: all their clocks join. Fails
+    /// when any of them is dead or crashed (see module docs,
+    /// "Fallibility") — the survivors are still released, never left
+    /// waiting on the corpse.
+    fn barrier(&mut self, procs: &[ProcId]) -> Result<()>;
 
     // ----- reporting ----------------------------------------------------
 

@@ -1,12 +1,17 @@
 //! Distributed integers: values partitioned across processor sequences
 //! (§2.1 "A is partitioned among the processors in P in n' digits"),
-//! plus the generic layout-change (`repartition`) and scalar broadcast
-//! helpers the algorithms use for their redistribution phases.
+//! plus the generic layout-change (`repartition`) helpers the
+//! algorithms use for their redistribution phases. All data movement
+//! compiles to the tree/coalesced schedules in
+//! [`collectives`](super::collectives) — there are no ad-hoc send
+//! loops left at this layer.
 //!
 //! Everything here is generic over [`MachineApi`], so the same layout
-//! logic runs on the cost-model simulator and the threaded executor.
+//! logic runs on the cost-model simulator and the threaded executor,
+//! under any network topology.
 
 use super::api::MachineApi;
+use super::collectives::{self, ChunkPlan, Piece, Run};
 use super::machine::{ProcId, Slot};
 use super::seq::Seq;
 use crate::error::Result;
@@ -63,14 +68,12 @@ impl DistInt {
         })
     }
 
-    /// Collect the full digit vector (verification only — no cost).
-    /// Fails when a chunk owner's worker is dead or crashed.
+    /// Collect the full digit vector (verification / result extraction
+    /// only — no cost; the costed tree collective is
+    /// [`collectives::gather`]). Fails when a chunk owner's worker is
+    /// dead or crashed.
     pub fn gather<M: MachineApi>(&self, m: &M) -> Result<Vec<u32>> {
-        let mut out = Vec::with_capacity(self.total_width());
-        for &(p, slot) in &self.chunks {
-            out.extend_from_slice(&m.read(p, slot)?);
-        }
-        Ok(out)
+        collectives::gather_host(m, &self.chunks)
     }
 
     /// Free every chunk.
@@ -153,25 +156,14 @@ impl DistInt {
     }
 
     /// Replicate chunk-wise onto another sequence of the same length:
-    /// `chunks[j].owner` sends its chunk to `dst.at(j)` (one parallel
-    /// message round of `chunk_width` words; COPSIM §5.1 phases 1b/1c).
-    /// The source layout is kept.
+    /// `chunks[j].owner` sends its chunk to `dst.at(j)` — one
+    /// [`collectives::shift`] round of `chunk_width`-word messages
+    /// (COPSIM §5.1 phases 1b/1c). The source layout is kept.
     pub fn replicate<M: MachineApi>(&self, m: &mut M, dst: &Seq) -> Result<DistInt> {
         assert_eq!(self.chunks.len(), dst.len(), "replicate: length mismatch");
-        let mut chunks = Vec::with_capacity(dst.len());
-        for (j, &(src, slot)) in self.chunks.iter().enumerate() {
-            let d = dst.at(j);
-            let s = if src == d {
-                let data = m.read(src, slot)?;
-                m.alloc(d, data)?
-            } else {
-                m.send_copy(src, d, slot)?
-            };
-            chunks.push((d, s));
-        }
         Ok(DistInt {
             chunk_width: self.chunk_width,
-            chunks,
+            chunks: collectives::shift(m, &self.chunks, dst)?,
         })
     }
 
@@ -180,15 +172,14 @@ impl DistInt {
     /// resident (the DFS execution modes copy subproblem inputs because
     /// the originals are still needed by later subproblems).
     ///
-    /// Communication is coalesced: all consecutive source pieces of a
-    /// destination chunk that live on the same owner travel as ONE
+    /// Compiles the layout change into a [`collectives::all_to_all`]
+    /// plan: for every destination chunk, the maximal runs of
+    /// consecutive source pieces on one owner, each travelling as ONE
     /// message (the "one message per maximal contiguous range" rule the
     /// repartition cost argument relies on — DESIGN.md, decision 4).
-    /// When a whole destination chunk arrives as a single message, the
-    /// received allocation *is* the chunk, so the destination is charged
-    /// exactly once for it; only a chunk assembled from several runs
-    /// pays a transient (at most one run) on top of its final
-    /// allocation.
+    /// The collective keeps the received allocation as the destination
+    /// chunk whenever a whole chunk arrives in a single message, so the
+    /// destination is charged exactly once for it.
     pub fn copy_to<M: MachineApi>(
         &self,
         m: &mut M,
@@ -205,117 +196,43 @@ impl DistInt {
             new_seq.len()
         );
         let old_w = self.chunk_width;
-        let mut new_chunks = Vec::with_capacity(new_seq.len());
+        let mut plan = Vec::with_capacity(new_seq.len());
         for j in 0..new_seq.len() {
-            let dst = new_seq.at(j);
             let lo = j * new_width;
             let hi = lo + new_width;
             let first = lo / old_w;
             let last = (hi - 1) / old_w;
-            // Maximal runs of consecutive pieces on one owner:
-            // (src, [(slot, sub-range within the source chunk)]).
-            let mut runs: Vec<(ProcId, Vec<(Slot, usize, usize)>)> = Vec::new();
+            // Maximal runs of consecutive pieces on one owner.
+            let mut runs: Vec<Run> = Vec::new();
             for k in first..=last {
                 let (src, slot) = self.chunks[k];
                 let r_lo = lo.max(k * old_w) - k * old_w;
                 let r_hi = hi.min((k + 1) * old_w) - k * old_w;
-                match runs.last_mut() {
-                    Some((owner, pieces)) if *owner == src => pieces.push((slot, r_lo, r_hi)),
-                    _ => runs.push((src, vec![(slot, r_lo, r_hi)])),
-                }
-            }
-            if runs.len() == 1 {
-                // The whole chunk comes from one owner: a single local
-                // copy, or a single message whose received allocation is
-                // the final chunk.
-                let (src, pieces) = &runs[0];
-                let slot = if *src == dst {
-                    let mut buf: Vec<u32> = Vec::with_capacity(new_width);
-                    for &(slot, r_lo, r_hi) in pieces {
-                        buf.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
-                    }
-                    m.alloc(dst, buf)?
-                } else if pieces.len() == 1 {
-                    let (slot, r_lo, r_hi) = pieces[0];
-                    if r_lo == 0 && r_hi == old_w {
-                        m.send_copy(*src, dst, slot)?
-                    } else {
-                        m.send_range(*src, dst, slot, r_lo..r_hi)?
-                    }
-                } else {
-                    let mut payload: Vec<u32> = Vec::with_capacity(new_width);
-                    for &(slot, r_lo, r_hi) in pieces {
-                        payload.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
-                    }
-                    m.send(*src, dst, payload)?
+                let piece = Piece {
+                    slot,
+                    lo: r_lo,
+                    hi: r_hi,
+                    full: r_lo == 0 && r_hi == old_w,
                 };
-                new_chunks.push((dst, slot));
-                continue;
-            }
-            // Several runs: receive each remote run as one message,
-            // append it, and release the transient before the next run
-            // arrives, so the destination's overshoot beyond the final
-            // chunk is bounded by one run.
-            let mut buf: Vec<u32> = Vec::with_capacity(new_width);
-            for (src, pieces) in &runs {
-                if *src == dst {
-                    for &(slot, r_lo, r_hi) in pieces {
-                        buf.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
-                    }
-                } else {
-                    let s = if pieces.len() == 1 {
-                        let (slot, r_lo, r_hi) = pieces[0];
-                        m.send_range(*src, dst, slot, r_lo..r_hi)?
-                    } else {
-                        let mut payload: Vec<u32> = Vec::new();
-                        for &(slot, r_lo, r_hi) in pieces {
-                            payload.extend_from_slice(&m.read(*src, slot)?[r_lo..r_hi]);
-                        }
-                        m.send(*src, dst, payload)?
-                    };
-                    buf.extend_from_slice(&m.read(dst, s)?);
-                    m.free(dst, s);
+                match runs.last_mut() {
+                    Some(run) if run.src == src => run.pieces.push(piece),
+                    _ => runs.push(Run {
+                        src,
+                        pieces: vec![piece],
+                    }),
                 }
             }
-            debug_assert_eq!(buf.len(), new_width);
-            let slot = m.alloc(dst, buf)?;
-            new_chunks.push((dst, slot));
+            plan.push(ChunkPlan {
+                dst: new_seq.at(j),
+                width: new_width,
+                runs,
+            });
         }
         Ok(DistInt {
             chunk_width: new_width,
-            chunks: new_chunks,
+            chunks: collectives::all_to_all(m, &plan)?,
         })
     }
-}
-
-/// Broadcast a scalar from `seq[root]` to every processor of `seq` with a
-/// binomial tree (≤ ⌈log₂|P|⌉ message rounds on the critical path).
-/// Returns one scalar slot per sequence rank (root's included).
-pub fn bcast_scalar<M: MachineApi>(
-    m: &mut M,
-    seq: &Seq,
-    root: usize,
-    value: u32,
-) -> Result<Vec<Slot>> {
-    let p = seq.len();
-    let mut slots: Vec<Option<Slot>> = vec![None; p];
-    slots[root] = Some(m.alloc_scalar(seq.at(root), value)?);
-    // Re-rank so the root is rank 0 (rotation preserves pairings).
-    let rerank = |r: usize| (r + root) % p;
-    let mut have = 1usize;
-    while have < p {
-        // Ranks [0, have) send to ranks [have, 2·have) in parallel.
-        for r in 0..have.min(p - have) {
-            let src_rank = rerank(r);
-            let dst_rank = rerank(r + have);
-            let src = seq.at(src_rank);
-            let dst = seq.at(dst_rank);
-            let s = m.send(src, dst, vec![value])?;
-            slots[dst_rank] = Some(s);
-        }
-        have *= 2;
-    }
-    Ok(slots.into_iter().map(|s| s.unwrap()).collect())
 }
 
 #[cfg(test)]
@@ -415,19 +332,6 @@ mod tests {
             8,
             "destination must be charged exactly once for the chunk"
         );
-    }
-
-    #[test]
-    fn bcast_scalar_reaches_all() {
-        let mut m = mk(8);
-        let seq = Seq::range(8);
-        let slots = bcast_scalar(&mut m, &seq, 3, 77).unwrap();
-        for (r, s) in slots.iter().enumerate() {
-            assert_eq!(m.read_scalar(seq.at(r), *s), 77);
-        }
-        // Binomial tree: critical path <= log2(8) = 3 messages.
-        assert!(m.critical().msgs <= 3, "msgs = {}", m.critical().msgs);
-        assert_eq!(m.stats.total_msgs, 7);
     }
 
     #[test]

@@ -59,6 +59,7 @@
 
 use super::api::{MachineApi, ProcView, SlotComputation};
 use super::machine::{MachineStats, ProcId, Slot};
+use super::topology::TopologyRef;
 use super::Clock;
 use crate::bignum::{Base, Ops};
 use crate::error::{anyhow, Result};
@@ -305,10 +306,14 @@ impl<E: MachineApi> FaultyMachine<E> {
         self.per_proc_events[p] += 1;
     }
 
-    /// Advance `p`'s op index and decide whether a fault fires at this
-    /// site. Pure function of `(seed, p, index, site)` — independent of
-    /// wall-clock, scheduling, or prior draws.
-    fn draw(&mut self, p: ProcId, site: Site) -> Option<FaultKind> {
+    /// Advance `p`'s op index and decide — *without recording* —
+    /// whether a fault fires at this site. Pure function of
+    /// `(seed, p, index, site)` — independent of wall-clock,
+    /// scheduling, or prior draws. Returns the kind plus the index it
+    /// fired at, so the caller can record exactly the decisions it
+    /// materializes (multi-hop sends mask all but the first
+    /// delivery-changing draw).
+    fn decide(&mut self, p: ProcId, site: Site) -> Option<(FaultKind, u64)> {
         let plan = self.plan.as_ref()?;
         let idx = self.op_index[p];
         self.op_index[p] += 1;
@@ -334,14 +339,39 @@ impl<E: MachineApi> FaultyMachine<E> {
         if applicable.is_empty() {
             return None;
         }
-        let kind = applicable[(mix(h) % applicable.len() as u64) as usize];
-        self.record(kind, p, idx);
-        Some(kind)
+        Some((applicable[(mix(h) % applicable.len() as u64) as usize], idx))
+    }
+
+    /// [`FaultyMachine::decide`] + record — for single-decision sites,
+    /// where every drawn fault materializes.
+    fn draw(&mut self, p: ProcId, site: Site) -> Option<FaultKind> {
+        match self.decide(p, site) {
+            Some((kind, idx)) => {
+                self.record(kind, p, idx);
+                Some(kind)
+            }
+            None => None,
+        }
     }
 
     /// Shared handler for the four send flavours. `deliver` performs the
     /// real transfer on the inner engine; `duplicate` performs one extra
     /// delivery whose slot is discarded at `dst`.
+    ///
+    /// Injection is **per physical hop**: one decision draw per link of
+    /// the topology's `(src, dst)` route, all charged to the sending
+    /// processor's deterministic op-index stream (a route is part of
+    /// one logical operation; keying relay draws on the relays would
+    /// make a job's fault pattern depend on who else routes through
+    /// them). Among delivery-changing kinds the first drawn hop wins
+    /// and is the only one recorded; stalled hops materialize (skew
+    /// charged, event recorded) only when the message actually travels
+    /// the wire — i.e. never when the decisive fault is a `DropMsg` or
+    /// `Crash` (the message then traverses no link at all), always
+    /// under `DupMsg`/`ReorderMsg` (the wire is used end to end). The
+    /// event log therefore counts *materialized* faults exactly. On
+    /// the fully-connected default every route is one hop, reproducing
+    /// the single-draw behaviour bit for bit.
     fn faulty_send(
         &mut self,
         src: ProcId,
@@ -351,13 +381,32 @@ impl<E: MachineApi> FaultyMachine<E> {
     ) -> Result<Slot> {
         self.check_alive(src)?;
         self.check_alive(dst)?;
-        match self.draw(src, Site::Send) {
-            None => deliver(&mut self.inner),
-            Some(FaultKind::Stall) => {
-                let skew = self.plan.as_ref().map(|p| p.stall_ops).unwrap_or(0);
-                self.inner.compute(src, skew);
-                deliver(&mut self.inner)
+        let hops = self.inner.topology().hops(src, dst).max(1);
+        let mut stall_draws: Vec<u64> = Vec::new();
+        let mut decisive: Option<FaultKind> = None;
+        for _ in 0..hops {
+            match self.decide(src, Site::Send) {
+                None => {}
+                Some((FaultKind::Stall, idx)) => stall_draws.push(idx),
+                Some((k, idx)) => {
+                    if decisive.is_none() {
+                        decisive = Some(k);
+                        self.record(k, src, idx);
+                    }
+                }
             }
+        }
+        let message_travels =
+            !matches!(decisive, Some(FaultKind::DropMsg) | Some(FaultKind::Crash));
+        if message_travels && !stall_draws.is_empty() {
+            let skew = self.plan.as_ref().map(|p| p.stall_ops).unwrap_or(0);
+            self.inner.compute(src, skew * stall_draws.len() as u64);
+            for idx in stall_draws {
+                self.record(FaultKind::Stall, src, idx);
+            }
+        }
+        match decisive {
+            None => deliver(&mut self.inner),
             Some(FaultKind::DupMsg) => {
                 let dup = duplicate(&mut self.inner)?;
                 self.inner.free(dst, dup);
@@ -393,6 +442,9 @@ impl<E: MachineApi> MachineApi for FaultyMachine<E> {
     }
     fn base(&self) -> Base {
         self.inner.base()
+    }
+    fn topology(&self) -> TopologyRef {
+        self.inner.topology()
     }
 
     fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
@@ -517,14 +569,21 @@ impl<E: MachineApi> MachineApi for FaultyMachine<E> {
         )
     }
 
-    fn barrier(&mut self, procs: &[ProcId]) {
+    fn barrier(&mut self, procs: &[ProcId]) -> Result<()> {
+        // Draw first (op indices advance for every participant, crashed
+        // or not — the deterministic stream must not depend on crash
+        // state), then gate: a rendezvous including a crashed processor
+        // reports it instead of silently joining around the corpse.
         for &p in procs {
             if let Some(FaultKind::Stall) = self.draw(p, Site::Barrier) {
                 let skew = self.plan.as_ref().map(|c| c.stall_ops).unwrap_or(0);
                 self.inner.compute(p, skew);
             }
         }
-        self.inner.barrier(procs);
+        for &p in procs {
+            self.check_alive(p)?;
+        }
+        self.inner.barrier(procs)
     }
 
     fn proc_view(&self, p: ProcId) -> Result<ProcView> {
@@ -577,7 +636,7 @@ mod tests {
                 inp[0].iter().map(|d| d + 1).collect()
             }),
         )?;
-        m.barrier(&[0, 1]);
+        m.barrier(&[0, 1])?;
         let got = m.read(1, out)?;
         m.free(1, out);
         m.free(0, a);
@@ -710,6 +769,44 @@ mod tests {
         let e = *m.events().last().unwrap();
         assert_eq!(e.proc, 0);
         assert_eq!(e.kind, FaultKind::ComputeFail);
+    }
+
+    #[test]
+    fn per_hop_injection_draws_once_per_link() {
+        use crate::sim::topology::Torus2D;
+        use std::sync::Arc;
+        // Stall-every-draw plan on the 4x4 torus: a 4-hop send draws
+        // four stall events (one per physical link) and charges the
+        // sender four times the skew; the payload still arrives.
+        let plan = FaultConfig::new(1, 1.0).only(&[FaultKind::Stall]);
+        let inner = Machine::with_topology(
+            16,
+            u64::MAX / 2,
+            Base::new(16),
+            Arc::new(Torus2D::for_procs(16)),
+        );
+        let mut m = FaultyMachine::new(inner, plan);
+        let a = m.alloc(0, vec![5]).unwrap();
+        let s = m.send_copy(0, 10, a).unwrap();
+        assert_eq!(m.read(10, s).unwrap(), vec![5]);
+        assert_eq!(m.total_injected(), 4, "events: {:?}", m.events());
+        assert!(m.events().iter().all(|e| e.kind == FaultKind::Stall));
+        assert_eq!(m.fault_count(0), 4, "all hop draws key on the sender");
+        assert_eq!(m.inner().proc(0).clock.ops, 4 * 64);
+    }
+
+    #[test]
+    fn barrier_errors_on_crashed_processor() {
+        let plan = FaultConfig::new(0xDEAD, 1.0).only(&[FaultKind::Crash]);
+        let mut m = FaultyMachine::new(mk(2), plan);
+        assert!(m.alloc(0, vec![1]).is_err());
+        assert!(m.is_crashed(0));
+        let err = m.barrier(&[0, 1]).unwrap_err();
+        assert!(err.to_string().contains("crashed"), "{err}");
+        m.heal(0);
+        m.set_suppressed(0, true);
+        m.set_suppressed(1, true);
+        m.barrier(&[0, 1]).unwrap();
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The machine: processors, memory ledgers, message transport.
 
 use super::api::{MachineApi, ProcView, SlotComputation};
+use super::topology::{FullyConnected, TopologyRef};
 use super::Clock;
 use crate::bignum::{Base, Ops};
 use crate::error::{bail, Result};
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Processor identifier: index into the machine's processor table.
 pub type ProcId = usize;
@@ -61,6 +63,7 @@ pub struct MachineStats {
 pub struct Machine {
     procs: Vec<Processor>,
     pub base: Base,
+    topo: TopologyRef,
     next_slot: Slot,
     pub stats: MachineStats,
     /// When true, messages passed to [`Machine::event`] are recorded in
@@ -73,12 +76,21 @@ pub struct Machine {
 
 impl Machine {
     /// Create a machine with `p` processors, each with `mem_cap` words of
-    /// local memory, computing over digits of `base`.
+    /// local memory, computing over digits of `base`, on the default
+    /// fully-connected interconnect (the paper's implicit network).
     pub fn new(p: usize, mem_cap: u64, base: Base) -> Self {
+        Machine::with_topology(p, mem_cap, base, Arc::new(FullyConnected))
+    }
+
+    /// [`Machine::new`] on an explicit network topology: sends are
+    /// charged hop by hop along `topo.route(src, dst)` with per-link
+    /// bandwidth weights (see the `topology` module docs).
+    pub fn with_topology(p: usize, mem_cap: u64, base: Base, topo: TopologyRef) -> Self {
         assert!(p >= 1, "need at least one processor");
         Machine {
             procs: (0..p).map(|_| Processor::new(mem_cap)).collect(),
             base,
+            topo,
             next_slot: 1,
             stats: MachineStats::default(),
             trace: false,
@@ -205,25 +217,51 @@ impl Machine {
 
     // ----- communication ----------------------------------------------
 
-    /// Send `data` from `src` to `dst` as one message; allocates the
-    /// payload in `dst`'s memory and returns the new slot.
+    /// Send `data` from `src` to `dst` as one logical message;
+    /// allocates the payload in `dst`'s memory and returns the new slot.
     ///
-    /// Cost semantics (see module docs): the transfer is charged once —
-    /// to the sender's clock — and the receiver clock joins the sender's
-    /// post-send snapshot, so both end at least at the transfer's
-    /// completion time on every metric.
+    /// Cost semantics (see module docs): each physical hop of the
+    /// topology's route is charged to its link sender's clock (payload
+    /// words × link weight, plus one message), and the next hop's clock
+    /// joins the post-charge snapshot, so every processor on the route
+    /// ends at least at the transfer's completion time on every metric.
+    /// On the fully-connected default the route is the direct edge and
+    /// this degenerates to the paper's charge-once-to-the-sender rule.
+    /// Relays never touch their memory ledgers (wire forwarding); only
+    /// `dst` allocates — exactly mirroring the threaded engine's
+    /// store-and-forward, so the engines stay cost-identical on every
+    /// topology.
     pub fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
         assert_ne!(src, dst, "send to self is a local operation");
+        // Direct-edge fast path: `hops` is O(1) on every shipped
+        // topology, so single-link transfers (ALL transfers on the
+        // fully-connected default) never materialize a route vector —
+        // the hot path stays allocation-free beyond the payload.
+        if self.topo.hops(src, dst) == 1 {
+            self.hop_charge(src, dst, data.len() as u64);
+            return self.alloc(dst, data);
+        }
+        let route = self.topo.route(src, dst);
+        debug_assert!(route.len() >= 2, "route must span the endpoints");
         let words = data.len() as u64;
-        self.procs[src].clock.words += words;
-        self.procs[src].clock.msgs += 1;
-        self.stats.total_words += words;
+        for hop in route.windows(2) {
+            self.hop_charge(hop[0], hop[1], words);
+        }
+        self.alloc(dst, data)
+    }
+
+    /// Charge one physical hop `a → b` of `words` payload words: link
+    /// sender pays `words × link weight` and one message, `b`'s clock
+    /// joins the post-charge snapshot.
+    fn hop_charge(&mut self, a: ProcId, b: ProcId, words: u64) {
+        let hop_words = words * self.topo.link_bw_weight(a, b);
+        self.procs[a].clock.words += hop_words;
+        self.procs[a].clock.msgs += 1;
+        self.stats.total_words += hop_words;
         self.stats.total_msgs += 1;
-        let snapshot = self.procs[src].clock;
-        let slot = self.alloc(dst, data)?;
-        let dclock = &mut self.procs[dst].clock;
-        *dclock = dclock.join(&snapshot);
-        Ok(slot)
+        let snapshot = self.procs[a].clock;
+        let bclock = &mut self.procs[b].clock;
+        *bclock = bclock.join(&snapshot);
     }
 
     /// Send a copy of an existing slot (source keeps its copy).
@@ -328,6 +366,9 @@ impl MachineApi for Machine {
     fn base(&self) -> Base {
         self.base
     }
+    fn topology(&self) -> TopologyRef {
+        Arc::clone(&self.topo)
+    }
 
     fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
         Machine::alloc(self, p, data)
@@ -393,8 +434,9 @@ impl MachineApi for Machine {
     ) -> Result<Slot> {
         Machine::send_range(self, src, dst, slot, range)
     }
-    fn barrier(&mut self, procs: &[ProcId]) {
+    fn barrier(&mut self, procs: &[ProcId]) -> Result<()> {
         Machine::barrier(self, procs);
+        Ok(())
     }
 
     fn proc_view(&self, p: ProcId) -> Result<ProcView> {
@@ -535,6 +577,36 @@ mod tests {
         // The processor is reusable after the purge.
         let s = m.alloc(0, vec![9; 10]).unwrap();
         assert_eq!(m.read(0, s), &[9; 10]);
+    }
+
+    #[test]
+    fn torus_send_charges_per_hop() {
+        use super::super::topology::Torus2D;
+        let mut m =
+            Machine::with_topology(16, 1000, Base::new(16), Arc::new(Torus2D::for_procs(16)));
+        // 0 -> 10 on the 4x4 torus crosses 4 links (2 rows + 2 cols).
+        let s = m.send(0, 10, vec![1, 2]).unwrap();
+        assert_eq!(m.read(10, s), &[1, 2]);
+        assert_eq!(m.stats.total_msgs, 4);
+        assert_eq!(m.stats.total_words, 8);
+        // The hop chain accumulates on the critical path.
+        assert_eq!(m.critical(), Clock { ops: 0, words: 8, msgs: 4 });
+        // Relays are wire-only: no ledger charges anywhere but dst.
+        assert_eq!(m.mem_used_total(), 2);
+    }
+
+    #[test]
+    fn hier_send_weights_backbone_links() {
+        use super::super::topology::HierCluster;
+        let mut m =
+            Machine::with_topology(16, 1000, Base::new(16), Arc::new(HierCluster::for_procs(16)));
+        // 1 -> 7 routes [1, 0, 4, 7]; the (0,4) link is the
+        // half-bandwidth backbone (weight 2).
+        let s = m.send(1, 7, vec![9; 3]).unwrap();
+        assert_eq!(m.read(7, s), &[9; 3]);
+        assert_eq!(m.stats.total_msgs, 3);
+        assert_eq!(m.stats.total_words, 3 + 6 + 3);
+        assert_eq!(m.mem_used_total(), 3);
     }
 
     #[test]

@@ -4,7 +4,12 @@
 //! critical-path accounting per §2.2) and the real-threads executor
 //! ([`ThreadedMachine`], one OS thread per processor) — plus
 //! [`FaultyMachine`], a deterministic seeded fault-injection wrapper
-//! over either engine (the chaos/soak layer). See DESIGN.md.
+//! over either engine (the chaos/soak layer). Above the engines,
+//! [`collectives`] provides the shared tree-structured communication
+//! schedules every algorithm goes through; below them, [`topology`]
+//! maps logical sends onto a pluggable physical interconnect
+//! (fully-connected / 2D torus / hierarchical cluster) with per-hop
+//! charging. See DESIGN.md, "Collectives & topologies".
 //!
 //! ## Model
 //!
@@ -49,18 +54,22 @@
 //! statements (e.g. Theorem 11's `12n/√P`) checkable rather than assumed.
 
 pub mod api;
+pub mod collectives;
 pub mod dist;
 pub mod faulty;
 pub mod machine;
 pub mod seq;
 pub mod threaded;
+pub mod topology;
 
 pub use api::{MachineApi, ProcView, SlotComputation};
+pub use collectives::{all_to_all, broadcast, fanout, gather, reduce, scatter, shift};
 pub use dist::DistInt;
 pub use faulty::{FaultConfig, FaultEvent, FaultKind, FaultyMachine};
 pub use machine::{Machine, MachineStats, ProcId, Slot};
 pub use seq::Seq;
 pub use threaded::{ThreadedMachine, ThreadedReport};
+pub use topology::{FullyConnected, HierCluster, Topology, TopologyKind, TopologyRef, Torus2D};
 
 /// Per-processor logical clock; component-wise max is the merge operator.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

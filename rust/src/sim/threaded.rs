@@ -43,6 +43,7 @@
 
 use super::api::{MachineApi, ProcView, SlotComputation};
 use super::machine::{MachineStats, ProcId, Slot};
+use super::topology::{FullyConnected, TopologyRef};
 use super::Clock;
 use crate::bignum::{Base, Ops};
 use crate::error::{anyhow, bail, Result};
@@ -109,6 +110,18 @@ enum Cmd {
     Send {
         dst: ProcId,
         payload: Payload,
+        /// Per-word charge multiplier of the (self, dst) physical link.
+        weight: u64,
+    },
+    /// Relay one in-flight message: receive from `src`, charge this
+    /// worker's clock for the onward link, and send to `dst` — without
+    /// touching the local ledger (wire forwarding; see the `topology`
+    /// module docs). Multi-hop routes are chains of these between the
+    /// initial `Send` and the final `Recv`.
+    Forward {
+        src: ProcId,
+        dst: ProcId,
+        weight: u64,
     },
     Recv {
         src: ProcId,
@@ -288,7 +301,11 @@ impl Worker {
                     self.total_ops += ops.get();
                     self.store(out, produced);
                 }
-                Cmd::Send { dst, payload } => {
+                Cmd::Send {
+                    dst,
+                    payload,
+                    weight,
+                } => {
                     let data = match payload {
                         Payload::Owned(d) => d,
                         Payload::FromSlot {
@@ -311,15 +328,45 @@ impl Worker {
                             }
                         }
                     };
-                    self.clock.words += data.len() as u64;
+                    let words = data.len() as u64 * weight;
+                    self.clock.words += words;
                     self.clock.msgs += 1;
-                    self.sent_words += data.len() as u64;
+                    self.sent_words += words;
                     self.sent_msgs += 1;
                     let snapshot = self.clock;
                     if let Some(tx) = &self.net_tx[dst] {
                         // A closed peer means the machine is shutting
                         // down; dropping the message is then harmless.
                         let _ = tx.send((data, snapshot));
+                    }
+                }
+                Cmd::Forward { src, dst, weight } => {
+                    let chan = self.net_rx[src]
+                        .as_ref()
+                        .expect("forward from self is meaningless");
+                    match chan.recv() {
+                        Ok((data, snapshot)) => {
+                            // Join the inbound hop, then charge the
+                            // outbound link — same order as the
+                            // cost-model engine's hop loop, so the
+                            // engines stay clock-identical. The ledger
+                            // is untouched: relays are wire, not
+                            // storage.
+                            self.clock = self.clock.join(&snapshot);
+                            let words = data.len() as u64 * weight;
+                            self.clock.words += words;
+                            self.clock.msgs += 1;
+                            self.sent_words += words;
+                            self.sent_msgs += 1;
+                            let snap = self.clock;
+                            if let Some(tx) = &self.net_tx[dst] {
+                                let _ = tx.send((data, snap));
+                            }
+                        }
+                        Err(_) => self.fail(format!(
+                            "processor {}: peer {src} hung up mid-relay",
+                            self.pid
+                        )),
                     }
                 }
                 Cmd::Recv { src, slot } => {
@@ -368,6 +415,7 @@ impl Worker {
 pub struct ThreadedMachine {
     base: Base,
     mem_cap: u64,
+    topo: TopologyRef,
     /// Per-processor next slot id (dense arena indices).
     next_slot: Vec<Slot>,
     cmd_txs: Vec<Sender<Cmd>>,
@@ -377,8 +425,17 @@ pub struct ThreadedMachine {
 
 impl ThreadedMachine {
     /// Spawn `p` worker threads, each modelling one processor with
-    /// `mem_cap` words of local memory, computing over digits of `base`.
+    /// `mem_cap` words of local memory, computing over digits of `base`,
+    /// on the default fully-connected interconnect.
     pub fn new(p: usize, mem_cap: u64, base: Base) -> Self {
+        ThreadedMachine::with_topology(p, mem_cap, base, Arc::new(FullyConnected))
+    }
+
+    /// [`ThreadedMachine::new`] on an explicit network topology:
+    /// messages are genuinely routed hop by hop through the relay
+    /// workers' threads (`Cmd::Forward`), charging each link to its
+    /// sender exactly as the cost-model engine does.
+    pub fn with_topology(p: usize, mem_cap: u64, base: Base, topo: TopologyRef) -> Self {
         assert!(p >= 1, "need at least one processor");
         // Point-to-point mesh: one channel per ordered pair.
         let mut net_tx: Vec<Vec<Option<Sender<NetMsg>>>> =
@@ -426,11 +483,66 @@ impl ThreadedMachine {
         ThreadedMachine {
             base,
             mem_cap,
+            topo,
             next_slot: vec![1; p],
             cmd_txs,
             handles,
             started: Instant::now(),
         }
+    }
+
+    /// Enqueue one logical transfer along the topology's route: a
+    /// weighted `Send` at the origin, a `Forward` on every relay, and
+    /// the final `Recv` (which allocates) at the destination. All
+    /// commands are enqueued at this single program point, so the
+    /// global-order no-deadlock argument of the module docs covers
+    /// relayed messages unchanged.
+    fn route_send(&mut self, src: ProcId, dst: ProcId, payload: Payload) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        // Direct-edge fast path (all transfers on the fully-connected
+        // default): no route vector, just the Send/Recv pair.
+        if self.topo.hops(src, dst) == 1 {
+            let slot = self.fresh_slot(dst);
+            self.cmd(
+                src,
+                Cmd::Send {
+                    dst,
+                    payload,
+                    weight: self.topo.link_bw_weight(src, dst),
+                },
+            )?;
+            self.cmd(dst, Cmd::Recv { src, slot })?;
+            return Ok(slot);
+        }
+        let route = self.topo.route(src, dst);
+        debug_assert!(route.len() >= 2, "route must span the endpoints");
+        let slot = self.fresh_slot(dst);
+        self.cmd(
+            src,
+            Cmd::Send {
+                dst: route[1],
+                payload,
+                weight: self.topo.link_bw_weight(src, route[1]),
+            },
+        )?;
+        for i in 1..route.len() - 1 {
+            self.cmd(
+                route[i],
+                Cmd::Forward {
+                    src: route[i - 1],
+                    dst: route[i + 1],
+                    weight: self.topo.link_bw_weight(route[i], route[i + 1]),
+                },
+            )?;
+        }
+        self.cmd(
+            dst,
+            Cmd::Recv {
+                src: route[route.len() - 2],
+                slot,
+            },
+        )?;
+        Ok(slot)
     }
 
     /// Effectively unbounded local memories (MI execution mode).
@@ -583,6 +695,9 @@ impl MachineApi for ThreadedMachine {
     fn base(&self) -> Base {
         self.base
     }
+    fn topology(&self) -> TopologyRef {
+        Arc::clone(&self.topo)
+    }
 
     fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
         let slot = self.fresh_slot(p);
@@ -636,51 +751,29 @@ impl MachineApi for ThreadedMachine {
     }
 
     fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
-        assert_ne!(src, dst, "send to self is a local operation");
-        let slot = self.fresh_slot(dst);
-        self.cmd(
-            src,
-            Cmd::Send {
-                dst,
-                payload: Payload::Owned(data),
-            },
-        )?;
-        self.cmd(dst, Cmd::Recv { src, slot })?;
-        Ok(slot)
+        self.route_send(src, dst, Payload::Owned(data))
     }
     fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
-        assert_ne!(src, dst, "send to self is a local operation");
-        let out = self.fresh_slot(dst);
-        self.cmd(
+        self.route_send(
             src,
-            Cmd::Send {
-                dst,
-                payload: Payload::FromSlot {
-                    slot,
-                    range: None,
-                    free_after: false,
-                },
+            dst,
+            Payload::FromSlot {
+                slot,
+                range: None,
+                free_after: false,
             },
-        )?;
-        self.cmd(dst, Cmd::Recv { src, slot: out })?;
-        Ok(out)
+        )
     }
     fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
-        assert_ne!(src, dst, "send to self is a local operation");
-        let out = self.fresh_slot(dst);
-        self.cmd(
+        self.route_send(
             src,
-            Cmd::Send {
-                dst,
-                payload: Payload::FromSlot {
-                    slot,
-                    range: None,
-                    free_after: true,
-                },
+            dst,
+            Payload::FromSlot {
+                slot,
+                range: None,
+                free_after: true,
             },
-        )?;
-        self.cmd(dst, Cmd::Recv { src, slot: out })?;
-        Ok(out)
+        )
     }
     fn send_range(
         &mut self,
@@ -689,34 +782,30 @@ impl MachineApi for ThreadedMachine {
         slot: Slot,
         range: std::ops::Range<usize>,
     ) -> Result<Slot> {
-        assert_ne!(src, dst, "send to self is a local operation");
-        let out = self.fresh_slot(dst);
-        self.cmd(
+        self.route_send(
             src,
-            Cmd::Send {
-                dst,
-                payload: Payload::FromSlot {
-                    slot,
-                    range: Some(range),
-                    free_after: false,
-                },
+            dst,
+            Payload::FromSlot {
+                slot,
+                range: Some(range),
+                free_after: false,
             },
-        )?;
-        self.cmd(dst, Cmd::Recv { src, slot: out })?;
-        Ok(out)
+        )
     }
-    fn barrier(&mut self, procs: &[ProcId]) {
+    fn barrier(&mut self, procs: &[ProcId]) -> Result<()> {
         if procs.len() <= 1 {
-            return;
+            return Ok(());
         }
         let state = Arc::new(BarrierState {
             expected: procs.len(),
             state: Mutex::new((0, Clock::default())),
             cv: Condvar::new(),
         });
+        let mut dead = 0usize;
         for &p in procs {
             // A dead worker never reaches the rendezvous; lower the
-            // expectation so the survivors are not stranded forever.
+            // expectation so the survivors are not stranded forever,
+            // then report the death to the caller.
             if self
                 .cmd(
                     p,
@@ -726,6 +815,7 @@ impl MachineApi for ThreadedMachine {
                 )
                 .is_err()
             {
+                dead += 1;
                 let mut g = state.state.lock().unwrap();
                 g.0 += 1;
                 if g.0 == state.expected {
@@ -733,6 +823,10 @@ impl MachineApi for ThreadedMachine {
                 }
             }
         }
+        if dead > 0 {
+            bail!("barrier: {dead} worker thread(s) dead");
+        }
+        Ok(())
     }
 
     fn proc_view(&self, p: ProcId) -> Result<ProcView> {
@@ -854,8 +948,32 @@ mod tests {
         let mut m = mk(3);
         m.compute(0, 5);
         m.compute(1, 9);
-        m.barrier(&[0, 1, 2]);
+        m.barrier(&[0, 1, 2]).unwrap();
         assert_eq!(m.snapshot(2).unwrap().clock.ops, 9);
+    }
+
+    #[test]
+    fn routed_send_matches_cost_model_hop_charges() {
+        use super::super::topology::Torus2D;
+        let mut m = ThreadedMachine::with_topology(
+            16,
+            u64::MAX / 2,
+            Base::new(16),
+            Arc::new(Torus2D::for_procs(16)),
+        );
+        // Same transfer as machine.rs's torus_send_charges_per_hop:
+        // 0 -> 10 on the 4x4 torus is 4 wire hops through live relay
+        // workers; clocks, stats and ledgers must match the cost model.
+        let s = m.send(0, 10, vec![1, 2]).unwrap();
+        assert_eq!(m.read(10, s).unwrap(), vec![1, 2]);
+        assert_eq!(
+            MachineApi::critical(&m),
+            Clock { ops: 0, words: 8, msgs: 4 }
+        );
+        assert_eq!(m.mem_used_total(), 2, "relays must not touch ledgers");
+        let report = m.finish().unwrap();
+        assert_eq!(report.stats.total_msgs, 4);
+        assert_eq!(report.stats.total_words, 8);
     }
 
     #[test]

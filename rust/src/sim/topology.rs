@@ -1,0 +1,459 @@
+//! Network topologies: the physical interconnect under the machine
+//! model's logical point-to-point sends.
+//!
+//! The paper's model charges every message one unit of latency and its
+//! payload once in bandwidth — an implicit *fully-connected* network.
+//! Real machines are not fully connected: a message between two
+//! processors crosses a route of physical links, each link charging its
+//! own bandwidth and latency. The [`Topology`] trait makes that mapping
+//! explicit: it turns a logical `(src, dst)` edge into a route of
+//! physical hops plus per-link bandwidth weights, and every execution
+//! engine charges (and, for the threaded engine, actually performs) the
+//! transfer hop by hop. See DESIGN.md, "Collectives & topologies".
+//!
+//! ## Charging rule (shared by all engines)
+//!
+//! A logical send of `k` words over route `p₀ → p₁ → … → p_h` performs
+//! `h` hop transfers. Hop `i` charges `k · link_bw_weight(p_i, p_{i+1})`
+//! words and one message to `p_i`'s clock, and `p_{i+1}`'s clock joins
+//! `p_i`'s post-charge snapshot. Relays are pure *wire* forwarders:
+//! their memory ledgers are untouched (a switch buffers in network
+//! hardware, not in the processor's `M`-word local memory), so the
+//! paper's memory-requirement statements are topology-independent. Only
+//! the destination allocates the payload. On the fully-connected
+//! topology every route is the direct edge `[src, dst]` with weight 1,
+//! which reproduces the paper's charging bit for bit — the default
+//! topology is a zero-diff path.
+//!
+//! ## The three shipped topologies
+//!
+//! * [`FullyConnected`] — the paper's implicit network (default).
+//! * [`Torus2D`] — a 2D torus/mesh with wraparound links and
+//!   dimension-ordered (row-first) routing; `P` is factored into the
+//!   most-square `rows × cols` grid. Worst-case hops (diameter) is
+//!   `⌊rows/2⌋ + ⌊cols/2⌋`.
+//! * [`HierCluster`] — a two-level cluster: processors are grouped into
+//!   clusters of `cluster` consecutive ids; intra-cluster links are
+//!   full-speed direct edges, inter-cluster traffic routes through the
+//!   clusters' gateway processors over a half-bandwidth backbone
+//!   (`link_bw_weight = 2`). Worst-case route is
+//!   `src → gateway → gateway → dst`: 3 hops.
+
+use super::machine::ProcId;
+use crate::error::bail;
+use std::fmt;
+use std::sync::Arc;
+
+/// A physical interconnect: maps logical `(src, dst)` edges to hop
+/// routes and per-link charge weights (see module docs).
+pub trait Topology: Send + Sync + fmt::Debug {
+    /// Short stable name (used in tables and CLI echoes).
+    fn name(&self) -> &'static str;
+
+    /// The physical route from `src` to `dst`, inclusive of both
+    /// endpoints (`len() >= 2` whenever `src != dst`). Deterministic:
+    /// the same edge always routes the same way.
+    fn route(&self, src: ProcId, dst: ProcId) -> Vec<ProcId>;
+
+    /// Number of physical links one `(src, dst)` message crosses.
+    fn hops(&self, src: ProcId, dst: ProcId) -> u64 {
+        self.route(src, dst).len() as u64 - 1
+    }
+
+    /// Per-word charge multiplier of the physical link `(a, b)`
+    /// (1 = full-speed link).
+    fn link_bw_weight(&self, a: ProcId, b: ProcId) -> u64;
+
+    /// Worst-case hops between any processor pair (at least 1) — the
+    /// latency inflation factor `theory::` predictions use.
+    fn diameter(&self) -> u64;
+
+    /// Worst-case per-word link weight — the bandwidth inflation
+    /// factor `theory::` predictions use.
+    fn max_link_bw_weight(&self) -> u64;
+}
+
+/// Shared handle to a topology (engines clone it freely).
+pub type TopologyRef = Arc<dyn Topology>;
+
+// ------------------------------------------------------ fully connected
+
+/// The paper's implicit network: every pair joined by a dedicated
+/// full-speed link. Routes are the direct edges; charging degenerates
+/// to the paper's one-message-one-payload rule.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FullyConnected;
+
+impl Topology for FullyConnected {
+    fn name(&self) -> &'static str {
+        "fully-connected"
+    }
+    fn route(&self, src: ProcId, dst: ProcId) -> Vec<ProcId> {
+        vec![src, dst]
+    }
+    fn hops(&self, _src: ProcId, _dst: ProcId) -> u64 {
+        1
+    }
+    fn link_bw_weight(&self, _a: ProcId, _b: ProcId) -> u64 {
+        1
+    }
+    fn diameter(&self) -> u64 {
+        1
+    }
+    fn max_link_bw_weight(&self) -> u64 {
+        1
+    }
+}
+
+// ---------------------------------------------------------------- torus
+
+/// 2D torus: `rows × cols` grid with wraparound links in both
+/// dimensions, dimension-ordered routing (rows first, then columns,
+/// each along the shorter way around; ties go forward). Processor `p`
+/// sits at `(p / cols, p % cols)`.
+#[derive(Clone, Copy, Debug)]
+pub struct Torus2D {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Torus2D {
+    /// The most-square torus holding exactly `p` processors: `rows` is
+    /// the largest divisor of `p` with `rows ≤ √p` (a prime `p`
+    /// degenerates to a 1 × p ring).
+    pub fn for_procs(p: usize) -> Self {
+        let p = p.max(1);
+        let mut rows = 1;
+        let mut d = 1;
+        while d * d <= p {
+            if p % d == 0 {
+                rows = d;
+            }
+            d += 1;
+        }
+        Torus2D { rows, cols: p / rows }
+    }
+
+    #[inline]
+    fn coords(&self, p: ProcId) -> (usize, usize) {
+        (p / self.cols, p % self.cols)
+    }
+
+    /// Shortest circular distance and step (+1 or n-1, additive mod n)
+    /// from `a` to `b` on a ring of `n`; ties break forward.
+    fn ring_step(a: usize, b: usize, n: usize) -> (usize, usize) {
+        let fwd = (b + n - a) % n;
+        let bwd = (a + n - b) % n;
+        if fwd <= bwd {
+            (fwd, 1)
+        } else {
+            (bwd, n - 1)
+        }
+    }
+}
+
+impl Topology for Torus2D {
+    fn name(&self) -> &'static str {
+        "torus"
+    }
+
+    fn route(&self, src: ProcId, dst: ProcId) -> Vec<ProcId> {
+        let (mut r, c0) = self.coords(src);
+        let (tr, tc) = self.coords(dst);
+        let mut path = vec![src];
+        let (dr, rstep) = Self::ring_step(r, tr, self.rows);
+        for _ in 0..dr {
+            r = (r + rstep) % self.rows;
+            path.push(r * self.cols + c0);
+        }
+        let mut c = c0;
+        let (dc, cstep) = Self::ring_step(c, tc, self.cols);
+        for _ in 0..dc {
+            c = (c + cstep) % self.cols;
+            path.push(r * self.cols + c);
+        }
+        path
+    }
+
+    fn hops(&self, src: ProcId, dst: ProcId) -> u64 {
+        let (r0, c0) = self.coords(src);
+        let (r1, c1) = self.coords(dst);
+        let (dr, _) = Self::ring_step(r0, r1, self.rows);
+        let (dc, _) = Self::ring_step(c0, c1, self.cols);
+        (dr + dc) as u64
+    }
+
+    fn link_bw_weight(&self, _a: ProcId, _b: ProcId) -> u64 {
+        1
+    }
+
+    fn diameter(&self) -> u64 {
+        ((self.rows / 2 + self.cols / 2) as u64).max(1)
+    }
+
+    fn max_link_bw_weight(&self) -> u64 {
+        1
+    }
+}
+
+// ----------------------------------------------------------- hierarchy
+
+/// Two-level cluster: consecutive blocks of `cluster` processors form a
+/// cluster whose first processor is its gateway. Intra-cluster edges
+/// are direct full-speed links; inter-cluster traffic routes
+/// `src → gateway(src) → gateway(dst) → dst` over a backbone whose
+/// links charge `inter_weight` words per word (a half-bandwidth uplink
+/// at the default 2).
+#[derive(Clone, Copy, Debug)]
+pub struct HierCluster {
+    pub procs: usize,
+    pub cluster: usize,
+    pub inter_weight: u64,
+}
+
+impl HierCluster {
+    /// Near-square clustering (`cluster = ⌈√p⌉`) with the default
+    /// half-bandwidth backbone.
+    pub fn for_procs(p: usize) -> Self {
+        let p = p.max(1);
+        let mut c = 1;
+        while c * c < p {
+            c += 1;
+        }
+        HierCluster {
+            procs: p,
+            cluster: c,
+            inter_weight: 2,
+        }
+    }
+
+    #[inline]
+    fn cluster_of(&self, p: ProcId) -> usize {
+        p / self.cluster
+    }
+
+    #[inline]
+    fn gateway(&self, cluster: usize) -> ProcId {
+        cluster * self.cluster
+    }
+}
+
+impl Topology for HierCluster {
+    fn name(&self) -> &'static str {
+        "hier"
+    }
+
+    fn route(&self, src: ProcId, dst: ProcId) -> Vec<ProcId> {
+        let (cs, cd) = (self.cluster_of(src), self.cluster_of(dst));
+        if cs == cd {
+            return vec![src, dst];
+        }
+        let mut path = vec![src];
+        let gs = self.gateway(cs);
+        if gs != src {
+            path.push(gs);
+        }
+        let gd = self.gateway(cd);
+        path.push(gd);
+        if gd != dst {
+            path.push(dst);
+        }
+        path
+    }
+
+    fn hops(&self, src: ProcId, dst: ProcId) -> u64 {
+        // O(1) — the engines call this on every send (the default
+        // impl would materialize the route just to count its links).
+        let (cs, cd) = (self.cluster_of(src), self.cluster_of(dst));
+        if cs == cd {
+            1
+        } else {
+            let mut h = 1; // the backbone link
+            if self.gateway(cs) != src {
+                h += 1;
+            }
+            if self.gateway(cd) != dst {
+                h += 1;
+            }
+            h
+        }
+    }
+
+    fn link_bw_weight(&self, a: ProcId, b: ProcId) -> u64 {
+        if self.cluster_of(a) == self.cluster_of(b) {
+            1
+        } else {
+            self.inter_weight
+        }
+    }
+
+    fn diameter(&self) -> u64 {
+        if self.procs <= self.cluster {
+            1 // single cluster: all intra
+        } else if self.cluster == 1 {
+            1 // every processor is a gateway: one backbone hop
+        } else {
+            3 // src -> gateway -> gateway -> dst
+        }
+    }
+
+    fn max_link_bw_weight(&self) -> u64 {
+        if self.procs <= self.cluster {
+            1
+        } else {
+            self.inter_weight
+        }
+    }
+}
+
+// ------------------------------------------------------- configuration
+
+/// Topology selector carried by configs and [`crate::coordinator::JobSpec`]
+/// (`--topology` on the CLI); [`TopologyKind::build`] instantiates the
+/// concrete topology for a machine's processor count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TopologyKind {
+    #[default]
+    FullyConnected,
+    Torus,
+    Hier,
+}
+
+impl TopologyKind {
+    /// Instantiate the topology for a `p`-processor machine.
+    pub fn build(self, p: usize) -> TopologyRef {
+        match self {
+            TopologyKind::FullyConnected => Arc::new(FullyConnected),
+            TopologyKind::Torus => Arc::new(Torus2D::for_procs(p)),
+            TopologyKind::Hier => Arc::new(HierCluster::for_procs(p)),
+        }
+    }
+
+    /// All kinds, for matrix-style sweeps (tests, E18).
+    pub const ALL: [TopologyKind; 3] = [
+        TopologyKind::FullyConnected,
+        TopologyKind::Torus,
+        TopologyKind::Hier,
+    ];
+}
+
+impl std::str::FromStr for TopologyKind {
+    type Err = crate::error::Error;
+    fn from_str(s: &str) -> crate::error::Result<Self> {
+        Ok(match s {
+            "fully-connected" | "full" | "fc" => TopologyKind::FullyConnected,
+            "torus" | "torus2d" | "mesh" => TopologyKind::Torus,
+            "hier" | "hierarchical" | "cluster" => TopologyKind::Hier,
+            _ => bail!("unknown topology `{s}` (fully-connected|torus|hier)"),
+        })
+    }
+}
+
+impl fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TopologyKind::FullyConnected => write!(f, "fully-connected"),
+            TopologyKind::Torus => write!(f, "torus"),
+            TopologyKind::Hier => write!(f, "hier"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_route(t: &dyn Topology, src: ProcId, dst: ProcId) {
+        let r = t.route(src, dst);
+        assert_eq!(*r.first().unwrap(), src);
+        assert_eq!(*r.last().unwrap(), dst);
+        assert_eq!(r.len() as u64 - 1, t.hops(src, dst), "{src}->{dst} on {}", t.name());
+        assert!(t.hops(src, dst) <= t.diameter());
+        // Simple path: no processor repeats.
+        let mut seen = r.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), r.len(), "route revisits a node: {r:?}");
+    }
+
+    #[test]
+    fn fully_connected_is_direct() {
+        let t = FullyConnected;
+        for (s, d) in [(0, 1), (3, 7), (15, 0)] {
+            assert_eq!(t.route(s, d), vec![s, d]);
+            assert_eq!(t.hops(s, d), 1);
+        }
+        assert_eq!(t.diameter(), 1);
+        assert_eq!(t.max_link_bw_weight(), 1);
+    }
+
+    #[test]
+    fn torus_factorization_is_most_square() {
+        assert_eq!((Torus2D::for_procs(16).rows, Torus2D::for_procs(16).cols), (4, 4));
+        assert_eq!((Torus2D::for_procs(12).rows, Torus2D::for_procs(12).cols), (3, 4));
+        assert_eq!((Torus2D::for_procs(7).rows, Torus2D::for_procs(7).cols), (1, 7));
+        assert_eq!((Torus2D::for_procs(1).rows, Torus2D::for_procs(1).cols), (1, 1));
+    }
+
+    #[test]
+    fn torus_routes_are_shortest_and_wrap() {
+        let t = Torus2D::for_procs(16); // 4 x 4
+        // Neighbors: one hop.
+        assert_eq!(t.hops(0, 1), 1);
+        assert_eq!(t.hops(0, 4), 1);
+        // Wraparound: (0,0) -> (0,3) is one hop backwards.
+        assert_eq!(t.hops(0, 3), 1);
+        assert_eq!(t.hops(0, 12), 1);
+        // Opposite corner: diameter.
+        assert_eq!(t.hops(0, 10), 4);
+        assert_eq!(t.diameter(), 4);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s != d {
+                    check_route(&t, s, d);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_routes_through_gateways() {
+        let t = HierCluster::for_procs(16); // clusters of 4, gateways 0,4,8,12
+        assert_eq!(t.cluster, 4);
+        // Intra-cluster: direct.
+        assert_eq!(t.route(1, 3), vec![1, 3]);
+        assert_eq!(t.link_bw_weight(1, 3), 1);
+        // Full inter-cluster route: src -> gw -> gw -> dst.
+        assert_eq!(t.route(1, 7), vec![1, 0, 4, 7]);
+        // Gateway endpoints shorten the route.
+        assert_eq!(t.route(0, 7), vec![0, 4, 7]);
+        assert_eq!(t.route(1, 4), vec![1, 0, 4]);
+        assert_eq!(t.route(0, 4), vec![0, 4]);
+        // The backbone link is the weighted one.
+        assert_eq!(t.link_bw_weight(0, 4), 2);
+        assert_eq!(t.diameter(), 3);
+        assert_eq!(t.max_link_bw_weight(), 2);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s != d {
+                    check_route(&t, s, d);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        use std::str::FromStr;
+        let fc = TopologyKind::from_str("fully-connected").unwrap();
+        assert_eq!(fc, TopologyKind::FullyConnected);
+        assert_eq!(TopologyKind::from_str("torus").unwrap(), TopologyKind::Torus);
+        assert_eq!(TopologyKind::from_str("hierarchical").unwrap(), TopologyKind::Hier);
+        assert!(TopologyKind::from_str("ring").is_err());
+        for kind in TopologyKind::ALL {
+            let t = kind.build(12);
+            assert!(t.diameter() >= 1);
+            assert_eq!(kind.to_string().parse::<TopologyKind>().unwrap(), kind);
+        }
+    }
+}

@@ -16,8 +16,12 @@
 //!
 //! Case counts scale with `COPMUL_PROP_CASES` (see `util::prop::cases`):
 //! the in-repo defaults keep tier-1's debug-mode run fast; the dedicated
-//! CI `differential` job sets `COPMUL_PROP_CASES=400` (release mode),
-//! which is where the ≥200-case corpus requirement is enforced.
+//! CI `differential` job runs release-mode at `COPMUL_PROP_CASES=200`
+//! per leg of a network-topology matrix (`COPMUL_TOPOLOGY` ∈
+//! fully-connected / torus / hier), which is where the ≥200-case corpus
+//! requirement is enforced — engine equivalence must hold under
+//! hop-by-hop routing too, not just on the paper's implicit
+//! fully-connected network.
 
 use copmul::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf};
 use copmul::algorithms::{copk_mi, copsim, copsim_mi, hybrid, Algorithm};
@@ -28,10 +32,27 @@ use copmul::prop_assert;
 use copmul::prop_assert_eq;
 use copmul::sim::{
     Clock, DistInt, FaultConfig, FaultKind, Machine, MachineApi, Seq, ThreadedMachine,
+    TopologyKind,
 };
 use copmul::theory::TimeModel;
 use copmul::util::prop::{cases, check_shrink};
 use copmul::util::Rng;
+
+/// Network topology the randomized corpus runs under, from
+/// `COPMUL_TOPOLOGY` (the CI `differential` job sweeps
+/// fully-connected / torus / hier as a matrix; the in-repo default is
+/// the paper's fully-connected network). Engine equivalence — products
+/// AND cost triples — must hold on every topology: the threaded
+/// engine's relay routing and the cost model's hop loop charge
+/// identically by construction.
+fn corpus_topology() -> TopologyKind {
+    match std::env::var("COPMUL_TOPOLOGY") {
+        Ok(s) => s
+            .parse()
+            .unwrap_or_else(|e| panic!("COPMUL_TOPOLOGY: {e}")),
+        Err(_) => TopologyKind::FullyConnected,
+    }
+}
 
 /// Which entry point a corpus case exercises.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -163,10 +184,12 @@ fn differential_case(rng: &mut Rng, shape: &Shape) -> Result<(), String> {
     let mut ops = Ops::default();
     let reference = mul::mul_school(&a, &b, shape.base, &mut ops);
 
-    let mut sim = Machine::new(shape.p, shape.cap, shape.base);
+    let kind = corpus_topology();
+    let mut sim = Machine::with_topology(shape.p, shape.cap, shape.base, kind.build(shape.p));
     let (sim_prod, sim_cost) = run_on(&mut sim, shape, &a, &b, &leaf)?;
 
-    let mut thr = ThreadedMachine::new(shape.p, shape.cap, shape.base);
+    let mut thr =
+        ThreadedMachine::with_topology(shape.p, shape.cap, shape.base, kind.build(shape.p));
     let (thr_prod, thr_cost) = run_on(&mut thr, shape, &a, &b, &leaf)?;
     thr.finish()
         .map_err(|e| format!("threaded engine error: {e}"))?;

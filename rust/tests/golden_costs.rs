@@ -29,6 +29,7 @@ use copmul::coordinator::{execute_on, JobSpec};
 use copmul::bignum::Base;
 use copmul::sim::Machine;
 use copmul::sim::Seq;
+use copmul::sim::TopologyKind;
 use copmul::theory::TimeModel;
 use copmul::util::Rng;
 use std::path::PathBuf;
@@ -56,8 +57,11 @@ fn algo_name(a: Option<Algorithm>) -> &'static str {
 }
 
 /// One grid cell -> its table line. Operands are seeded per cell, so
-/// lines are independent of grid order.
-fn measure(n: usize, p: usize, algo: Option<Algorithm>) -> String {
+/// lines are independent of grid order. `topo` of `None` uses the
+/// default machine constructor — what the table pins; an explicit
+/// `Some(TopologyKind::FullyConnected)` must produce identical lines
+/// (the zero-diff guarantee of the collectives/topology refactor).
+fn measure(n: usize, p: usize, algo: Option<Algorithm>, topo: Option<TopologyKind>) -> String {
     let base = Base::new(16);
     let mut rng = Rng::new(0x601D ^ (n as u64) ^ ((p as u64) << 32));
     let a = rng.digits(n, 16);
@@ -65,7 +69,10 @@ fn measure(n: usize, p: usize, algo: Option<Algorithm>) -> String {
     let mut spec = JobSpec::new(0, a, b);
     spec.procs = p;
     spec.algo = algo;
-    let mut m = Machine::unbounded(p, base);
+    let mut m = match topo {
+        None => Machine::unbounded(p, base),
+        Some(kind) => Machine::with_topology(p, u64::MAX / 2, base, kind.build(p)),
+    };
     let seq = Seq::range(p);
     let leaf = leaf_ref(SchoolLeaf);
     execute_on(&mut m, &TimeModel::default(), &spec, &seq, &leaf)
@@ -88,11 +95,25 @@ fn golden_path() -> PathBuf {
         .join("cost_table.tsv")
 }
 
+/// `--topology=fully-connected` must be a zero-diff spelling of the
+/// default: every golden cell re-measured under the explicit topology
+/// produces the exact line the committed table pins.
+#[test]
+fn golden_cells_identical_under_explicit_fully_connected_topology() {
+    for &(n, p, algo) in GRID {
+        assert_eq!(
+            measure(n, p, algo, Some(TopologyKind::FullyConnected)),
+            measure(n, p, algo, None),
+            "explicit fully-connected diverged from the default at n={n} p={p}"
+        );
+    }
+}
+
 #[test]
 fn golden_cost_table_is_stable() {
     let lines: Vec<String> = GRID
         .iter()
-        .map(|&(n, p, algo)| measure(n, p, algo))
+        .map(|&(n, p, algo)| measure(n, p, algo, None))
         .collect();
     let current = format!(
         "# Golden (T, BW, L, M) table — cost-model engine, SchoolLeaf, base 2^16.\n\

@@ -7,7 +7,7 @@ use copmul::algorithms::{copk_mi, copsim, copsim_mi};
 use copmul::bignum::{mul, Base, Ops};
 use copmul::prop_assert;
 use copmul::prop_assert_eq;
-use copmul::sim::{DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use copmul::sim::{DistInt, Machine, MachineApi, Seq, ThreadedMachine, TopologyKind};
 use copmul::theory;
 use copmul::util::prop::{cases, check};
 use copmul::util::Rng;
@@ -312,6 +312,113 @@ fn prop_threaded_engine_within_latency_and_bandwidth_bounds() {
         let p = [4usize, 12][rng.below(2) as usize];
         let w = 4usize << rng.range(0, 2);
         threaded_bounds_case(rng, "copk", p, w)
+    });
+}
+
+// ----- network topologies (collectives & per-hop charging) ------------
+
+/// Run COPSIM_MI on the cost-model engine under a topology; returns the
+/// machine (the caller inspects clocks) after verifying the product.
+fn run_copsim_on_topology(kind: TopologyKind, p: usize, n: usize, seed: u64) -> Machine {
+    let mut rng = Rng::new(seed);
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let mut m = Machine::with_topology(p, u64::MAX / 2, base(), kind.build(p));
+    let seq = Seq::range(p);
+    let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+    let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+    let c = copsim_mi(&mut m, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
+    let mut ops = Ops::default();
+    let want = mul::mul_school(&a, &b, base(), &mut ops);
+    assert_eq!(c.gather(&m).unwrap(), want, "product wrong on {kind} p={p} n={n}");
+    m
+}
+
+#[test]
+fn prop_every_topology_latency_within_log2_bound() {
+    // The paper's latency claim (Theorem 1): L = O(log²P) on the
+    // implicit fully-connected network. Per topology, a logical message
+    // becomes at most `diameter` physical hops, so the class bound is
+    // paper-constant · log₂²P · diameter; the ×6 headroom absorbs relay
+    // congestion (several logical edges serializing on one physical
+    // link or gateway), which the per-chain inflation argument does not
+    // cover. The *tight* fully-connected latency constants stay pinned
+    // by `copsim_mi_cost_within_thm11` / `copsim_mi_latency_is_polylog`
+    // in src/algorithms/copsim.rs; this test owns the per-topology
+    // class membership, and an accidental O(n) message pattern still
+    // trips it on every topology.
+    for kind in TopologyKind::ALL {
+        for &(p, n) in &[(4usize, 256usize), (16, 1024), (64, 4096)] {
+            let m = run_copsim_on_topology(kind, p, n, 0x109);
+            let lg = (p as f64).log2();
+            let diameter = kind.build(p).diameter() as f64;
+            let bound = (6.0 * diameter * (8.0 * lg * lg + 16.0)) as u64;
+            assert!(
+                m.critical().msgs <= bound,
+                "L {} > {} on {kind} at p={p} n={n}",
+                m.critical().msgs,
+                bound
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fully_connected_topology_is_zero_diff() {
+    // The collectives/topology refactor must not move a single unit of
+    // cost on the default topology: an explicit fully-connected machine
+    // and a default-constructed one produce bit-identical cost triples
+    // and memory peaks (the golden cost table pins the same invariant
+    // against the committed reference grid).
+    for &(p, n) in &[(4usize, 256usize), (16, 1024)] {
+        let mfc = run_copsim_on_topology(TopologyKind::FullyConnected, p, n, 0x0FC);
+        let mut rng = Rng::new(0x0FC);
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let mut md = Machine::unbounded(p, base());
+        let seq = Seq::range(p);
+        let da = DistInt::scatter(&mut md, &seq, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut md, &seq, &b, n / p).unwrap();
+        copsim_mi(&mut md, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
+        assert_eq!(mfc.critical(), md.critical(), "cost triple moved at p={p} n={n}");
+        assert_eq!(mfc.stats.total_words, md.stats.total_words);
+        assert_eq!(mfc.stats.total_msgs, md.stats.total_msgs);
+        assert_eq!(mfc.mem_peak_max(), md.mem_peak_max());
+    }
+}
+
+#[test]
+fn prop_engines_bit_identical_on_every_topology() {
+    // The threaded engine's hop-by-hop relay routing must charge
+    // exactly what the cost model's hop loop charges — per topology,
+    // products and cost triples bit for bit.
+    check("engines-equivalence-topologies", cases(6), |rng| {
+        let kind = TopologyKind::ALL[rng.below(3) as usize];
+        let p = [4usize, 16][rng.below(2) as usize];
+        let w = 1usize << rng.range(2, 4);
+        let n = p * w;
+        let (a, b) = random_inputs(rng, n);
+        let seq = Seq::range(p);
+
+        let mut sim = Machine::with_topology(p, u64::MAX / 2, base(), kind.build(p));
+        let da = DistInt::scatter(&mut sim, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut sim, &seq, &b, w).unwrap();
+        let cs = copsim_mi(&mut sim, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
+
+        let mut thr = ThreadedMachine::with_topology(p, u64::MAX / 2, base(), kind.build(p));
+        let da = DistInt::scatter(&mut thr, &seq, &a, w).unwrap();
+        let db = DistInt::scatter(&mut thr, &seq, &b, w).unwrap();
+        let ct = copsim_mi(&mut thr, &seq, da, db, &leaf_ref(SlimLeaf)).unwrap();
+
+        prop_assert_eq!(cs.gather(&sim).unwrap(), ct.gather(&thr).unwrap());
+        prop_assert!(
+            sim.critical() == MachineApi::critical(&thr),
+            "triples diverge on {kind} p={p} n={n}: sim {} vs threads {}",
+            sim.critical(),
+            MachineApi::critical(&thr)
+        );
+        thr.finish().map_err(|e| format!("{e}"))?;
+        Ok(())
     });
 }
 
