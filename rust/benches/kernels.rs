@@ -1,0 +1,66 @@
+//! Packed-limb kernel micro-benchmarks: the digit-level source of the
+//! engine-level wall-clock wins (PR 5). Cases pair the packed dispatch
+//! path against the digit-at-a-time oracle at identical charges —
+//! `copmul bench --json` records the same comparison into BENCH_5.json;
+//! this binary is the quick `make bench` view.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{report, time_it};
+use copmul::bignum::{
+    add_with_carry, mul_school, mul_school_reference, skim_with_leaf, Base, Ops,
+};
+use copmul::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(0xBEC5);
+    for &log2 in &[4u32, 8, 16] {
+        let base = Base::new(log2);
+        for &n in &[256usize, 1024, 4096] {
+            let a = rng.digits(n, log2);
+            let b = rng.digits(n, log2);
+            let case = format!("mul n={n} base=2^{log2}");
+            let (min, mean) = time_it(1, 5, || {
+                let mut ops = Ops::default();
+                mul_school(&a, &b, base, &mut ops)
+            });
+            report("kernels/packed", &case, min, mean, "");
+            let (min, mean) = time_it(1, 5, || {
+                let mut ops = Ops::default();
+                mul_school_reference(&a, &b, base, &mut ops)
+            });
+            report("kernels/scalar", &case, min, mean, "");
+        }
+    }
+
+    // Additive kernels at the default base.
+    let base = Base::default();
+    for &w in &[64usize, 1024, 65536] {
+        let a = rng.digits(w, base.log2);
+        let b = rng.digits(w, base.log2);
+        let case = format!("add w={w} base=2^16");
+        let (min, mean) = time_it(2, 20, || {
+            let mut ops = Ops::default();
+            add_with_carry(&a, &b, 0, base, &mut ops)
+        });
+        report("kernels/add", &case, min, mean, "");
+    }
+
+    // Leaf-width sweep: the wall-clock crossover the LEAF_WIDTH re-tune
+    // note records (model constant stays 64; see bignum/mul.rs).
+    let n = 4096;
+    let a = rng.digits(n, base.log2);
+    let b = rng.digits(n, base.log2);
+    for &lw in &[16usize, 32, 64, 128, 256, 512] {
+        let mut charged = 0u64;
+        let case = format!("skim n={n} leaf={lw}");
+        let (min, mean) = time_it(1, 3, || {
+            let mut ops = Ops::default();
+            let out = skim_with_leaf(&a, &b, base, &mut ops, lw);
+            charged = ops.get();
+            out
+        });
+        report("kernels/leaf-sweep", &case, min, mean, &format!("T={charged}"));
+    }
+}

@@ -63,7 +63,9 @@ impl LeafMultiplier for SkimLeaf {
 }
 
 /// Iterative schoolbook (operand scanning): same O(n²) op count as SLIM
-/// with a smaller constant; the fastest pure-Rust wallclock leaf.
+/// with a smaller constant. Runs on the packed-limb kernel for wide
+/// operands (several digits per `u64` limb — `bignum::packed`), which
+/// makes it the fastest pure-Rust leaf below the Karatsuba crossover.
 pub struct SchoolLeaf;
 
 impl LeafMultiplier for SchoolLeaf {

@@ -68,8 +68,8 @@ pub(crate) fn leaf_multiply<M: MachineApi>(
             // (the product's digits beyond 2w are provably zero and are
             // truncated below).
             let wp = w.next_power_of_two();
-            let mut av = inputs[0].clone();
-            let mut bv = inputs[1].clone();
+            let mut av = inputs[0].to_vec();
+            let mut bv = inputs[1].to_vec();
             av.resize(wp, 0);
             bv.resize(wp, 0);
             let mut prod = leaf.mul(&av, &bv, *base, ops);

@@ -4,8 +4,16 @@
 //! base cases use (e.g. the local computations of `SUMA`, `DIFFR`, and the
 //! leaf multipliers). All routines operate on LSB-first digit slices and
 //! count digit operations.
+//!
+//! Wide operands dispatch physically to the packed-limb kernels in
+//! [`super::packed`] (several digits per `u64` limb) while charging the
+//! model's digit-at-a-time counts — closed form where the count is
+//! data-independent (`add`/`sub`: one op per position), counted exactly
+//! where it is not (`cmp`: scan depth; `add_into_width`: carry-chain
+//! length). The representation is never cost-visible; see DESIGN.md,
+//! decision 11, and the parity suite in `tests/packed_kernels.rs`.
 
-use super::{Base, Ops};
+use super::{packed, Base, Ops};
 use std::cmp::Ordering;
 
 /// Strip trailing (most-significant) zero digits; never shrinks below 1
@@ -40,6 +48,12 @@ pub fn add_with_carry(
     ops: &mut Ops,
 ) -> (Vec<u32>, u32) {
     assert_eq!(a.len(), b.len(), "fixed-width add requires equal widths");
+    // One digit-add (+ carry fold) per position — closed form, so the
+    // packed path below never touches the ledger.
+    ops.charge(a.len() as u64);
+    if carry_in <= 1 && packed::add_viable(base, a.len()) {
+        return packed::add_packed(a, b, carry_in, base);
+    }
     let s = base.s();
     let mut out = Vec::with_capacity(a.len());
     let mut carry = carry_in as u64;
@@ -49,8 +63,6 @@ pub fn add_with_carry(
         debug_assert!(carry <= 1);
         out.push((t & base.mask()) as u32);
     }
-    // One digit-add (+ carry fold) per position.
-    ops.charge(a.len() as u64);
     debug_assert!(carry < s);
     (out, carry as u32)
 }
@@ -69,6 +81,11 @@ pub fn sub_with_borrow(
     ops: &mut Ops,
 ) -> (Vec<u32>, u32) {
     assert_eq!(a.len(), b.len(), "fixed-width sub requires equal widths");
+    // One digit-subtract (+ borrow fold) per position — closed form.
+    ops.charge(a.len() as u64);
+    if borrow_in <= 1 && packed::add_viable(base, a.len()) {
+        return packed::sub_packed(a, b, borrow_in, base);
+    }
     let mut out = Vec::with_capacity(a.len());
     let mut borrow = borrow_in as i64;
     for i in 0..a.len() {
@@ -81,16 +98,29 @@ pub fn sub_with_borrow(
         }
         out.push(t as u32);
     }
-    ops.charge(a.len() as u64);
     (out, borrow as u32)
 }
 
 /// Compare two equal-width digit vectors as integers.
+///
+/// The model scans from the most significant digit and charges one
+/// comparison per inspected pair, stopping at the first difference
+/// (worst case w comparisons, matching Lemma 8's n/|P| local term).
+/// Physically the scan probes two digits per `u64` compare
+/// ([`packed::cmp_packed`]), which also reports the exact scalar scan
+/// depth — the charge stays bit-identical to the digit loop's.
 pub fn cmp_digits(a: &[u32], b: &[u32], ops: &mut Ops) -> Ordering {
     assert_eq!(a.len(), b.len(), "fixed-width cmp requires equal widths");
-    // Scan from the most significant digit; each inspected pair is one
-    // digit comparison. (Worst case w comparisons, matching Lemma 8's
-    // n/|P| local term.)
+    let (ord, inspected) = packed::cmp_packed(a, b);
+    ops.charge(inspected);
+    ord
+}
+
+/// The digit-at-a-time scan kept as the oracle [`cmp_digits`] is
+/// pinned against — for ordering *and* charge depth — in
+/// `tests/packed_kernels.rs`.
+pub fn cmp_digits_reference(a: &[u32], b: &[u32], ops: &mut Ops) -> Ordering {
+    assert_eq!(a.len(), b.len(), "fixed-width cmp requires equal widths");
     for i in (0..a.len()).rev() {
         ops.charge(1);
         match a[i].cmp(&b[i]) {
@@ -104,7 +134,10 @@ pub fn cmp_digits(a: &[u32], b: &[u32], ops: &mut Ops) -> Ordering {
 /// Add `src` (any width) into `dst` starting at digit offset `off`,
 /// propagating carries through `dst`; `dst` must be wide enough that the
 /// final carry is absorbed (panics otherwise). Returns nothing; charges
-/// one op per touched digit.
+/// one op per touched digit — batched into a single counter update (the
+/// touched count is data-dependent through the carry chain, so it is
+/// counted, not closed-form; the total equals per-digit charging,
+/// asserted exactly in `tests/packed_kernels.rs`).
 ///
 /// Used by the sequential multipliers to accumulate partial products
 /// (`C = C0 + s^(n/2)(C1+C2) + s^n C3`).
@@ -124,9 +157,9 @@ pub fn add_into_width(dst: &mut [u32], src: &[u32], off: usize, base: Base, ops:
         let t = dst[d] as u64 + add + carry;
         dst[d] = (t & base.mask()) as u32;
         carry = t >> base.log2;
-        ops.charge(1);
         i += 1;
     }
+    ops.charge(i as u64);
 }
 
 /// Value of a short digit vector as u128 (panics if it doesn't fit).

@@ -1,0 +1,364 @@
+//! Packed-limb kernels: several base-`2^k` digits per `u64` limb.
+//!
+//! These are *physical* fast paths only. The machine model's currency —
+//! digit operations, memory words, messages — is charged by the callers
+//! in `bignum::{core, mul}` in closed form, never by this module: a
+//! packed kernel that multiplies two digits per hardware multiply still
+//! charges exactly the digit-at-a-time count, so skipping physical work
+//! can never change a ledger (DESIGN.md, decision 11). Every kernel
+//! here is *exact* — it computes the same integer as the scalar loop —
+//! so products are bit-identical by construction and pinned against the
+//! scalar oracles by `tests/packed_kernels.rs`.
+//!
+//! Two limb layouts are used:
+//!
+//! * **Multiplication layout** — `m = ⌊32 / k⌋` digits per limb, limb
+//!   base `B = 2^(m·k) ≤ 2^32`. A limb-by-limb product plus the running
+//!   column value and carry is at most `B² − 1 ≤ u64::MAX`, so the
+//!   whole operand-scanning inner loop runs in plain `u64` arithmetic
+//!   with `m²` fewer hardware multiplies than the digit loop (4× at
+//!   the default base 2^16, 16× at 2^8, 64× at 2^4).
+//! * **Additive layout** — `m = ⌊62 / k⌋` digits per limb (`B ≤ 2^62`),
+//!   leaving headroom for one carry bit on add and for the borrow
+//!   wrap-around trick on subtract.
+//!
+//! Ragged widths are handled by giving the most-significant limb its
+//! true bit width, so carries out of a `w`-digit window are detected
+//! exactly where the scalar loop detects them.
+
+use super::Base;
+use std::cmp::Ordering;
+
+/// How digits map onto limbs for one kernel family.
+#[derive(Clone, Copy, Debug)]
+pub struct Layout {
+    /// Digits per full limb (`m`).
+    pub digits_per_limb: usize,
+    /// Bits of a full limb (`m · k`).
+    pub limb_bits: u32,
+}
+
+impl Layout {
+    /// Multiplication layout: limb values below `2^32` so the
+    /// schoolbook column update `out + a·b + carry` fits `u64` exactly.
+    pub fn for_mul(base: Base) -> Layout {
+        let m = (32 / base.log2).max(1) as usize;
+        Layout {
+            digits_per_limb: m,
+            limb_bits: m as u32 * base.log2,
+        }
+    }
+
+    /// Additive layout: limb values below `2^62` (add needs one carry
+    /// bit of headroom; subtract detects the borrow in bit 63).
+    pub fn for_add(base: Base) -> Layout {
+        let m = (62 / base.log2).max(1) as usize;
+        Layout {
+            digits_per_limb: m,
+            limb_bits: m as u32 * base.log2,
+        }
+    }
+
+    /// Full-limb value mask `2^(m·k) − 1`.
+    #[inline]
+    pub fn mask(&self) -> u64 {
+        if self.limb_bits == 64 {
+            u64::MAX
+        } else {
+            (1u64 << self.limb_bits) - 1
+        }
+    }
+}
+
+/// Whether the packed multiply path pays off for these operand widths.
+/// Any `m ≥ 2` layout is exact; the threshold only gates overhead.
+#[inline]
+pub fn mul_viable(base: Base, min_len: usize) -> bool {
+    base.log2 <= 16 && min_len >= PACKED_MUL_MIN
+}
+
+/// Whether the packed add/sub path pays off at width `w`.
+#[inline]
+pub fn add_viable(base: Base, w: usize) -> bool {
+    Layout::for_add(base).digits_per_limb >= 2 && w >= PACKED_ADD_MIN
+}
+
+/// Minimum `min(|a|, |b|)` before `mul_school` dispatches to the packed
+/// kernel (below this the pack/unpack passes dominate the saved
+/// multiplies).
+pub const PACKED_MUL_MIN: usize = 8;
+
+/// Minimum width before the additive helpers dispatch to their packed
+/// kernels.
+pub const PACKED_ADD_MIN: usize = 32;
+
+/// Fold up to `digits_per_limb` digits (LSB-first) into one limb.
+#[inline]
+fn pack_limb(digits: &[u32], k: u32) -> u64 {
+    let mut limb = 0u64;
+    for (j, &d) in digits.iter().enumerate() {
+        limb |= (d as u64) << (j as u32 * k);
+    }
+    limb
+}
+
+/// Append `count` base-`2^k` digits of `limb` (LSB-first) to `out`.
+#[inline]
+fn unpack_limb(limb: u64, k: u32, count: usize, out: &mut Vec<u32>) {
+    let digit_mask = (1u64 << k) - 1;
+    for j in 0..count {
+        out.push(((limb >> (j as u32 * k)) & digit_mask) as u32);
+    }
+}
+
+/// Pack a digit vector into mul-layout limbs (top limb zero-padded —
+/// harmless for multiplication, where the window width is implicit in
+/// the output truncation).
+fn pack(digits: &[u32], lay: Layout, k: u32) -> Vec<u64> {
+    let m = lay.digits_per_limb;
+    let mut limbs = Vec::with_capacity(digits.len().div_ceil(m));
+    for chunk in digits.chunks(m) {
+        limbs.push(pack_limb(chunk, k));
+    }
+    limbs
+}
+
+/// Exact schoolbook product via packed limbs. Returns the full
+/// `|a| + |b|`-digit product (LSB-first, untrimmed) — bit-identical to
+/// the digit-at-a-time loop. Charges nothing: the caller charges the
+/// model's closed-form count.
+pub fn mul_packed(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
+    let (na, nb) = (a.len(), b.len());
+    debug_assert!(na > 0 && nb > 0);
+    let k = base.log2;
+    let lay = Layout::for_mul(base);
+    let la = pack(a, lay, k);
+    let lb = pack(b, lay, k);
+    let mask = lay.mask();
+    let bits = lay.limb_bits;
+    let mut out = vec![0u64; la.len() + lb.len()];
+    for (i, &ai) in la.iter().enumerate() {
+        if ai == 0 {
+            // Physical skip only: the model charge is closed-form at
+            // the call site, so a zero row costs the same either way.
+            continue;
+        }
+        let mut carry = 0u64;
+        for (j, &bj) in lb.iter().enumerate() {
+            // All of out[i+j], ai, bj, carry are < B ≤ 2^32, so
+            // t ≤ B² − 1 ≤ u64::MAX: no overflow, exact arithmetic.
+            let t = out[i + j] + ai * bj + carry;
+            out[i + j] = t & mask;
+            carry = t >> bits;
+        }
+        let mut idx = i + lb.len();
+        while carry != 0 {
+            let t = out[idx] + carry;
+            out[idx] = t & mask;
+            carry = t >> bits;
+            idx += 1;
+        }
+    }
+    // Unpack and truncate: the product value is < s^(na+nb), so every
+    // digit beyond the window is provably zero.
+    let mut digits = Vec::with_capacity(na + nb);
+    for &limb in &out {
+        if digits.len() >= na + nb {
+            debug_assert_eq!(limb, 0, "product overflows its digit window");
+            break;
+        }
+        let take = lay.digits_per_limb.min(na + nb - digits.len());
+        unpack_limb(limb, k, take, &mut digits);
+        debug_assert!(
+            take == lay.digits_per_limb || limb >> (take as u32 * k) == 0,
+            "truncated limb must carry no value"
+        );
+    }
+    digits.resize(na + nb, 0);
+    digits
+}
+
+/// Exact fixed-width addition via packed limbs:
+/// `(A + B + carry_in) mod s^w` plus the outgoing carry — bit-identical
+/// to the scalar digit loop. `carry_in` must be 0 or 1 (the callers'
+/// contract; the dispatcher falls back to scalar otherwise).
+pub fn add_packed(a: &[u32], b: &[u32], carry_in: u32, base: Base) -> (Vec<u32>, u32) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(carry_in <= 1);
+    let w = a.len();
+    let k = base.log2;
+    let lay = Layout::for_add(base);
+    let m = lay.digits_per_limb;
+    let mask = lay.mask();
+    let mut out = Vec::with_capacity(w);
+    let mut carry = carry_in as u64;
+    let mut ca = a.chunks_exact(m);
+    let mut cb = b.chunks_exact(m);
+    for (la, lb) in ca.by_ref().zip(cb.by_ref()) {
+        // Limb values < 2^62: the sum plus carry fits u64 with room.
+        let s = pack_limb(la, k) + pack_limb(lb, k) + carry;
+        carry = s >> lay.limb_bits;
+        unpack_limb(s & mask, k, m, &mut out);
+    }
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    if !ra.is_empty() {
+        // The top limb keeps its true width so the carry out of the
+        // w-digit window lands in `carry`, not in padding bits.
+        let bits = ra.len() as u32 * k;
+        let s = pack_limb(ra, k) + pack_limb(rb, k) + carry;
+        carry = s >> bits;
+        unpack_limb(s & ((1u64 << bits) - 1), k, ra.len(), &mut out);
+    }
+    debug_assert!(carry <= 1);
+    (out, carry as u32)
+}
+
+/// Exact fixed-width subtraction via packed limbs:
+/// `(A − B − borrow_in) mod s^w` plus the outgoing borrow —
+/// bit-identical to the scalar digit loop. `borrow_in` must be 0 or 1.
+pub fn sub_packed(a: &[u32], b: &[u32], borrow_in: u32, base: Base) -> (Vec<u32>, u32) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(borrow_in <= 1);
+    let w = a.len();
+    let k = base.log2;
+    let lay = Layout::for_add(base);
+    let m = lay.digits_per_limb;
+    let mut out = Vec::with_capacity(w);
+    let mut borrow = borrow_in as u64;
+    let limb_sub = |la: u64, lb: u64, bits: u32, borrow: u64| -> (u64, u64) {
+        // Limb values are < 2^62, so a negative difference shows up in
+        // bit 63 of the wrapped u64; adding back 2^bits restores the
+        // modular limb exactly.
+        let t = la.wrapping_sub(lb).wrapping_sub(borrow);
+        let bo = t >> 63;
+        (t.wrapping_add(bo << bits), bo)
+    };
+    let mut ca = a.chunks_exact(m);
+    let mut cb = b.chunks_exact(m);
+    for (la, lb) in ca.by_ref().zip(cb.by_ref()) {
+        let (limb, bo) = limb_sub(pack_limb(la, k), pack_limb(lb, k), lay.limb_bits, borrow);
+        borrow = bo;
+        unpack_limb(limb, k, m, &mut out);
+    }
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    if !ra.is_empty() {
+        let bits = ra.len() as u32 * k;
+        let (limb, bo) = limb_sub(pack_limb(ra, k), pack_limb(rb, k), bits, borrow);
+        borrow = bo;
+        unpack_limb(limb, k, ra.len(), &mut out);
+    }
+    (out, borrow as u32)
+}
+
+/// Compare two equal-width digit vectors from the most significant end,
+/// two digits per probe (base-agnostic: `u32` digit pairs packed into a
+/// `u64` compare lexicographically). Returns the ordering plus the
+/// exact number of digit comparisons the scalar top-down scan performs
+/// — `w − i` where `i` is the most significant differing index, `w`
+/// when equal — so the caller's charge is bit-identical.
+pub fn cmp_packed(a: &[u32], b: &[u32]) -> (Ordering, u64) {
+    debug_assert_eq!(a.len(), b.len());
+    let w = a.len();
+    let mut i = w;
+    while i >= 2 {
+        let pa = ((a[i - 1] as u64) << 32) | a[i - 2] as u64;
+        let pb = ((b[i - 1] as u64) << 32) | b[i - 2] as u64;
+        if pa != pb {
+            if a[i - 1] != b[i - 1] {
+                return (a[i - 1].cmp(&b[i - 1]), (w - (i - 1)) as u64);
+            }
+            return (a[i - 2].cmp(&b[i - 2]), (w - (i - 2)) as u64);
+        }
+        i -= 2;
+    }
+    if i == 1 && a[0] != b[0] {
+        return (a[0].cmp(&b[0]), w as u64);
+    }
+    (Ordering::Equal, w as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layouts_match_base_widths() {
+        let m16 = Layout::for_mul(Base::new(16));
+        assert_eq!((m16.digits_per_limb, m16.limb_bits), (2, 32));
+        let m8 = Layout::for_mul(Base::new(8));
+        assert_eq!((m8.digits_per_limb, m8.limb_bits), (4, 32));
+        let m5 = Layout::for_mul(Base::new(5));
+        assert_eq!((m5.digits_per_limb, m5.limb_bits), (6, 30));
+        let a16 = Layout::for_add(Base::new(16));
+        assert_eq!((a16.digits_per_limb, a16.limb_bits), (3, 48));
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let base = Base::new(16);
+        let lay = Layout::for_mul(base);
+        let digits = vec![0xFFFF, 1, 2, 0xABCD, 7];
+        let limbs = pack(&digits, lay, base.log2);
+        let mut back = Vec::new();
+        for (t, &l) in limbs.iter().enumerate() {
+            let take = lay.digits_per_limb.min(digits.len() - t * lay.digits_per_limb);
+            unpack_limb(l, base.log2, take, &mut back);
+        }
+        assert_eq!(back, digits);
+    }
+
+    #[test]
+    fn mul_packed_max_operands_exact() {
+        // The adversarial all-max shape exercises every carry path.
+        let base = Base::new(16);
+        let a = vec![0xFFFFu32; 9];
+        let b = vec![0xFFFFu32; 5];
+        // The 14-digit product cannot be checked through u128, so use
+        // the identity A·B + A + B = s^14 − 1 for A = s^9−1, B = s^5−1:
+        // adding the operands digit-wise into the product must yield
+        // the all-max vector with no carry out.
+        let mut acc = mul_packed(&a, &b, base);
+        let mut carry = 0u64;
+        for (i, d) in acc.iter_mut().enumerate() {
+            let mut add = 0u64;
+            if i < 9 {
+                add += 0xFFFF;
+            }
+            if i < 5 {
+                add += 0xFFFF;
+            }
+            let t = *d as u64 + add + carry;
+            *d = (t & 0xFFFF) as u32;
+            carry = t >> 16;
+        }
+        assert_eq!(carry, 0);
+        assert!(acc.iter().all(|&d| d == 0xFFFF), "A·B + A + B != s^14 − 1");
+    }
+
+    #[test]
+    fn add_sub_packed_small_window() {
+        let base = Base::new(16);
+        // Width below a single additive limb (ragged top limb only).
+        let a = vec![0xFFFF, 0xFFFF];
+        let b = vec![1, 0];
+        let (sum, c) = add_packed(&a, &b, 0, base);
+        assert_eq!((sum, c), (vec![0, 0], 1));
+        let (diff, bo) = sub_packed(&b, &a, 0, base);
+        assert_eq!((diff, bo), (vec![2, 0], 1));
+    }
+
+    #[test]
+    fn cmp_packed_charges_match_scan_depth() {
+        let a = vec![1, 2, 3, 4, 5];
+        let mut b = a.clone();
+        assert_eq!(cmp_packed(&a, &b), (Ordering::Equal, 5));
+        b[0] = 0; // difference at the very bottom: full scan
+        assert_eq!(cmp_packed(&a, &b), (Ordering::Greater, 5));
+        b = a.clone();
+        b[4] = 9; // difference at the top: one comparison
+        assert_eq!(cmp_packed(&a, &b), (Ordering::Less, 1));
+        b = a.clone();
+        b[3] = 0; // second-from-top: two comparisons
+        assert_eq!(cmp_packed(&a, &b), (Ordering::Greater, 2));
+    }
+}

@@ -230,7 +230,30 @@ impl MachineApi for ShardView {
         };
         pending
             .recv()
+            .map(crate::sim::payload_into_vec)
             .map_err(|_| anyhow!("processor {p}: worker thread died during read"))
+    }
+    fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
+        // Two-phase as in `read`, but extending straight from the
+        // shared payload: the arena still holds its reference, so
+        // converting to an owned Vec first would clone the digits only
+        // to copy them again — this path (the collectives' assembly
+        // loops on sharded jobs) pays exactly one copy instead.
+        let pending = {
+            let mut g = self.lock();
+            match &mut *g {
+                EngineMachine::Sim(m) => return MachineApi::read_into(m, p, slot, buf),
+                EngineMachine::Threads(m) => {
+                    m.check_alive(p)?;
+                    m.inner().read_request(p, slot)
+                }
+            }
+        };
+        let shared = pending
+            .recv()
+            .map_err(|_| anyhow!("processor {p}: worker thread died during read"))?;
+        buf.extend_from_slice(&shared);
+        Ok(())
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
         let mut g = self.lock();
@@ -345,6 +368,11 @@ impl MachineApi for ShardView {
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::purge(m, p))
     }
+    // take_buffer/give_buffer deliberately keep their defaults (plain
+    // allocation): routing scratch buffers through the shared machine
+    // lock would add cross-shard contention on the collectives' hot
+    // assembly path to save a malloc — a bad trade under concurrent
+    // runners. The pool still serves every dedicated-machine path.
 }
 
 // ------------------------------------------------------------- the pool

@@ -67,6 +67,7 @@ pub mod coordinator;
 pub mod error;
 pub mod experiments;
 pub mod metrics;
+pub mod perf;
 pub mod primitives;
 pub mod runtime;
 pub mod sim;

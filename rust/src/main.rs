@@ -6,6 +6,7 @@
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
 //! copmul experiment <id|all> [--csv]           run paper experiments E1-E18
 //! copmul serve [key=value ...]                 coordinator demo workload
+//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_5.json
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
 //! ```
@@ -48,6 +49,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("mul") => cmd_mul(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("bench") => cmd_bench(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("selftest") => cmd_selftest(),
         Some("help") | None => {
@@ -65,6 +67,7 @@ USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
   copmul experiment <E1..E18|all> [--csv] [key=value ...]
   copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [key=value ...]
+  copmul bench [--json] [--out=PATH] [--smoke] [seed=N]
   copmul info [artifacts=DIR]
   copmul selftest
 
@@ -78,6 +81,12 @@ ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
 TOPOLOGIES: fully-connected (the paper's implicit network; default),
             torus (2D wraparound grid, hop-by-hop routing and charging),
             hier (two-level clusters over a half-bandwidth backbone).
+
+BENCH:   wall-clock harness (engine grid, packed-vs-scalar kernels,
+         leaf-width sweep). --json writes the BENCH_5.json artifact
+         (--out overrides the path); --smoke runs the CI-sized grid.
+         Cost triples shown are layout-invariant; wall-clock is the
+         quantity the perf PRs move.
 
 SERVE:   --jobs=N   number of requests (default 64)
          --shards=K sharded scheduler: one shared `procs`-processor machine,
@@ -381,6 +390,36 @@ fn print_latency_summary(jobs: usize, wall: std::time::Duration, lat_us: &mut [u
         fmt_u64(pct(0.95)),
         fmt_u64(pct(0.99)),
     );
+}
+
+/// `copmul bench` — the wall-clock harness behind BENCH_*.json (see
+/// `perf` module docs).
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let mut cfg = copmul::perf::BenchConfig::default();
+    let mut json = false;
+    let mut out = "BENCH_5.json".to_string();
+    for a in args {
+        if a == "--json" {
+            json = true;
+        } else if a == "--smoke" {
+            cfg.smoke = true;
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out = v.to_string();
+        } else if let Some(v) = a.strip_prefix("seed=") {
+            cfg.seed = v.parse().context("seed")?;
+        } else {
+            bail!("unknown bench option `{a}` (--json --out=PATH --smoke seed=N)");
+        }
+    }
+    let report = copmul::perf::run(&cfg)?;
+    for t in report.tables() {
+        println!("{}", t.markdown());
+    }
+    if json {
+        std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
 }
 
 fn cmd_info(args: &[String]) -> Result<()> {

@@ -1,0 +1,417 @@
+//! `copmul bench` — the wall-clock measurement harness behind the
+//! repo's `BENCH_*.json` perf trajectory.
+//!
+//! Three sections, all recorded per run into one JSON artifact
+//! (`BENCH_5.json` by default; CI's record-only `perf-smoke` job
+//! uploads it so every PR leaves a measured data point):
+//!
+//! * **engine grid** — end-to-end wall-clock of both execution engines
+//!   across (scheme × n × P) at the default base 2^16, with the cost
+//!   triple alongside (the triple is engine- and layout-invariant; the
+//!   wall-clock is what this PR series moves).
+//! * **kernels** — packed-limb [`bignum::mul_school`] vs the
+//!   digit-at-a-time oracle [`bignum::mul_school_reference`] across
+//!   widths and bases: the microscopic source of the macroscopic wins.
+//! * **leaf-width sweep** — [`bignum::skim_with_leaf`] across leaf
+//!   widths: the measured wall-clock optimum for the packed leaves
+//!   *and* the charged-op cost of each choice, i.e. exactly the
+//!   evidence a future `LEAF_WIDTH` re-tune (with its golden re-bless)
+//!   has to weigh. See the re-tune note on [`bignum::mul::LEAF_WIDTH`].
+
+use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
+use crate::algorithms::{copk_mi, copsim_mi};
+use crate::bignum::{self, Base, Ops};
+use crate::error::{ensure, Result};
+use crate::metrics::{fmt_u64, Table};
+use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use crate::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Bench configuration (CLI: `copmul bench [--smoke] [seed=...]`).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// CI-sized grid: smaller n ceilings, fewer kernel widths.
+    pub smoke: bool,
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            smoke: false,
+            seed: 42,
+        }
+    }
+}
+
+/// One engine-grid measurement.
+#[derive(Clone, Debug)]
+pub struct EngineCell {
+    pub scheme: &'static str,
+    pub engine: &'static str,
+    pub n: usize,
+    pub procs: usize,
+    pub base_log2: u32,
+    pub wall: Duration,
+    pub clock: Clock,
+    pub mem_peak: u64,
+}
+
+/// One kernel micro-benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct KernelCell {
+    pub kernel: &'static str,
+    pub n: usize,
+    pub base_log2: u32,
+    pub iters: u64,
+    pub ns_per_iter: f64,
+}
+
+/// One leaf-width sweep point.
+#[derive(Clone, Debug)]
+pub struct LeafCell {
+    pub leaf_width: usize,
+    pub n: usize,
+    pub base_log2: u32,
+    pub wall: Duration,
+    /// Charged digit ops at this width — the model-side cost of moving
+    /// the constant (bit-exact, so any change is a golden re-bless).
+    pub ops: u64,
+}
+
+/// The full bench report; serializes to the `BENCH_*.json` schema.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub engine_grid: Vec<EngineCell>,
+    pub kernels: Vec<KernelCell>,
+    pub leaf_sweep: Vec<LeafCell>,
+}
+
+/// Run one multiplication end to end on an engine (mirrors the E15
+/// runner): scatter → MI scheme → gather, timed around the whole span
+/// (the gather synchronizes with all in-flight worker activity).
+fn run_once<M: MachineApi>(
+    m: &mut M,
+    scheme: &'static str,
+    seq: &Seq,
+    a: &[u32],
+    b: &[u32],
+    leaf: &LeafRef,
+) -> Result<(Vec<u32>, Duration)> {
+    let w = a.len() / seq.len();
+    let t0 = Instant::now();
+    let da = DistInt::scatter(m, seq, a, w)?;
+    let db = DistInt::scatter(m, seq, b, w)?;
+    let c = match scheme {
+        "copsim" => copsim_mi(m, seq, da, db, leaf)?,
+        _ => copk_mi(m, seq, da, db, leaf)?,
+    };
+    let product = c.gather(m)?;
+    Ok((product, t0.elapsed()))
+}
+
+fn engine_grid(cfg: &BenchConfig, report: &mut BenchReport) -> Result<()> {
+    let base = Base::default();
+    // Scheme-natural leaves, as in E15: schoolbook keeps COPSIM's
+    // comparison about execution, COPK keeps its Karatsuba leaf.
+    // COPK's n are multiples of its P = 4·3^i processor shapes.
+    let copsim_n: &[usize] = if cfg.smoke {
+        &[1024, 4096]
+    } else {
+        &[1024, 4096, 16384]
+    };
+    let copk_n: &[usize] = if cfg.smoke { &[3072] } else { &[3072, 12288] };
+    let schemes = [
+        ("copsim", 16usize, copsim_n, leaf_ref(SchoolLeaf)),
+        ("copk", 12, copk_n, leaf_ref(SkimLeaf)),
+    ];
+    for (scheme, procs, n_list, leaf) in &schemes {
+        let (scheme, procs, n_list) = (*scheme, *procs, *n_list);
+        for &n in n_list {
+            let mut rng = Rng::new(cfg.seed ^ (n as u64) ^ ((procs as u64) << 32));
+            let a = rng.digits(n, base.log2);
+            let b = rng.digits(n, base.log2);
+            // Reference product once per cell, via the packed kernel.
+            let mut ops = Ops::default();
+            let want = bignum::mul_school(&a, &b, base, &mut ops);
+            let seq = Seq::range(procs);
+
+            let mut sim = Machine::unbounded(procs, base);
+            let (p_sim, wall_sim) = run_once(&mut sim, scheme, &seq, &a, &b, leaf)?;
+            ensure!(p_sim == want, "bench: sim product mismatch at n={n}");
+            report.engine_grid.push(EngineCell {
+                scheme,
+                engine: "sim",
+                n,
+                procs,
+                base_log2: base.log2,
+                wall: wall_sim,
+                clock: sim.critical(),
+                mem_peak: sim.mem_peak_max(),
+            });
+
+            let mut thr = ThreadedMachine::unbounded(procs, base);
+            let (p_thr, wall_thr) = run_once(&mut thr, scheme, &seq, &a, &b, leaf)?;
+            ensure!(p_thr == want, "bench: threaded product mismatch at n={n}");
+            let fin = thr.finish()?;
+            ensure!(
+                fin.critical == sim.critical(),
+                "bench: engines disagree on the cost triple at n={n}"
+            );
+            report.engine_grid.push(EngineCell {
+                scheme,
+                engine: "threads",
+                n,
+                procs,
+                base_log2: base.log2,
+                wall: wall_thr,
+                clock: fin.critical,
+                mem_peak: fin.mem_peak_max,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Time `f` adaptively: enough iterations to cover ~20ms, at least one.
+fn time_kernel(mut f: impl FnMut()) -> (u64, f64) {
+    let budget = Duration::from_millis(20);
+    let mut iters = 0u64;
+    let t0 = Instant::now();
+    loop {
+        f();
+        iters += 1;
+        if t0.elapsed() >= budget || iters >= 10_000 {
+            break;
+        }
+    }
+    (iters, t0.elapsed().as_nanos() as f64 / iters as f64)
+}
+
+fn kernel_table(cfg: &BenchConfig, report: &mut BenchReport) {
+    let n_list: &[usize] = if cfg.smoke {
+        &[256, 1024]
+    } else {
+        &[256, 1024, 4096]
+    };
+    for &log2 in &[4u32, 8, 16] {
+        let base = Base::new(log2);
+        for &n in n_list {
+            let mut rng = Rng::new(cfg.seed ^ ((log2 as u64) << 48) ^ n as u64);
+            let a = rng.digits(n, log2);
+            let b = rng.digits(n, log2);
+            let (iters, ns) = time_kernel(|| {
+                let mut ops = Ops::default();
+                std::hint::black_box(bignum::mul_school(
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&b),
+                    base,
+                    &mut ops,
+                ));
+            });
+            report.kernels.push(KernelCell {
+                kernel: "mul_school_packed",
+                n,
+                base_log2: log2,
+                iters,
+                ns_per_iter: ns,
+            });
+            let (iters, ns) = time_kernel(|| {
+                let mut ops = Ops::default();
+                std::hint::black_box(bignum::mul_school_reference(
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&b),
+                    base,
+                    &mut ops,
+                ));
+            });
+            report.kernels.push(KernelCell {
+                kernel: "mul_school_scalar",
+                n,
+                base_log2: log2,
+                iters,
+                ns_per_iter: ns,
+            });
+        }
+    }
+}
+
+fn leaf_sweep(cfg: &BenchConfig, report: &mut BenchReport) {
+    let base = Base::default();
+    let n = if cfg.smoke { 1024 } else { 4096 };
+    let mut rng = Rng::new(cfg.seed ^ 0x1EAF);
+    let a = rng.digits(n, base.log2);
+    let b = rng.digits(n, base.log2);
+    for &lw in &[16usize, 32, 64, 128, 256, 512] {
+        let mut ops = Ops::default();
+        let t0 = Instant::now();
+        std::hint::black_box(bignum::skim_with_leaf(&a, &b, base, &mut ops, lw));
+        report.leaf_sweep.push(LeafCell {
+            leaf_width: lw,
+            n,
+            base_log2: base.log2,
+            wall: t0.elapsed(),
+            ops: ops.get(),
+        });
+    }
+}
+
+/// Run the full bench and collect the report.
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
+    let mut report = BenchReport::default();
+    engine_grid(cfg, &mut report)?;
+    kernel_table(cfg, &mut report);
+    leaf_sweep(cfg, &mut report);
+    Ok(report)
+}
+
+impl BenchReport {
+    /// Human-readable tables for the terminal.
+    pub fn tables(&self) -> Vec<Table> {
+        let mut t1 = Table::new(
+            "engine grid (wall-clock; cost triple is layout-invariant)",
+            &["scheme", "engine", "n", "P", "wall µs", "T", "BW", "L", "M"],
+        );
+        for c in &self.engine_grid {
+            t1.row(vec![
+                c.scheme.into(),
+                c.engine.into(),
+                c.n.to_string(),
+                c.procs.to_string(),
+                fmt_u64(c.wall.as_micros() as u64),
+                fmt_u64(c.clock.ops),
+                fmt_u64(c.clock.words),
+                fmt_u64(c.clock.msgs),
+                fmt_u64(c.mem_peak),
+            ]);
+        }
+        let mut t2 = Table::new(
+            "kernels (packed vs digit-at-a-time)",
+            &["kernel", "base", "n", "iters", "ns/iter"],
+        );
+        for c in &self.kernels {
+            t2.row(vec![
+                c.kernel.into(),
+                format!("2^{}", c.base_log2),
+                c.n.to_string(),
+                c.iters.to_string(),
+                format!("{:.0}", c.ns_per_iter),
+            ]);
+        }
+        let mut t3 = Table::new(
+            "leaf-width sweep (skim, wall vs charged T)",
+            &["leaf_width", "n", "wall µs", "ops"],
+        );
+        for c in &self.leaf_sweep {
+            t3.row(vec![
+                c.leaf_width.to_string(),
+                c.n.to_string(),
+                fmt_u64(c.wall.as_micros() as u64),
+                fmt_u64(c.ops),
+            ]);
+        }
+        vec![t1, t2, t3]
+    }
+
+    /// Serialize to the `BENCH_*.json` schema (hand-rolled — no serde
+    /// in the offline build; `util::json` parses this back).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096);
+        s.push_str("{\n  \"bench\": 5,\n  \"engine_grid\": [\n");
+        for (i, c) in self.engine_grid.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"scheme\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"procs\": {}, \
+                 \"base_log2\": {}, \"wall_us\": {}, \"ops\": {}, \"words\": {}, \
+                 \"msgs\": {}, \"mem_peak\": {}}}{}\n",
+                c.scheme,
+                c.engine,
+                c.n,
+                c.procs,
+                c.base_log2,
+                c.wall.as_micros(),
+                c.clock.ops,
+                c.clock.words,
+                c.clock.msgs,
+                c.mem_peak,
+                if i + 1 < self.engine_grid.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ],\n  \"kernels\": [\n");
+        for (i, c) in self.kernels.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"kernel\": \"{}\", \"base_log2\": {}, \"n\": {}, \"iters\": {}, \
+                 \"ns_per_iter\": {:.1}}}{}\n",
+                c.kernel,
+                c.base_log2,
+                c.n,
+                c.iters,
+                c.ns_per_iter,
+                if i + 1 < self.kernels.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ],\n  \"leaf_width_sweep\": [\n");
+        for (i, c) in self.leaf_sweep.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"leaf_width\": {}, \"n\": {}, \"base_log2\": {}, \"wall_us\": {}, \
+                 \"ops\": {}}}{}\n",
+                c.leaf_width,
+                c.n,
+                c.base_log2,
+                c.wall.as_micros(),
+                c.ops,
+                if i + 1 < self.leaf_sweep.len() { "," } else { "" },
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn smoke_report_is_complete_and_valid_json() {
+        // A tiny one-cell pass through every section keeps this test
+        // fast while exercising the whole reporting pipeline.
+        let cfg = BenchConfig {
+            smoke: true,
+            seed: 7,
+        };
+        let mut report = BenchReport::default();
+        kernel_table(&cfg, &mut report);
+        leaf_sweep(&cfg, &mut report);
+        assert!(!report.kernels.is_empty());
+        assert!(!report.leaf_sweep.is_empty());
+        let j = Json::parse(&report.to_json()).expect("BENCH json must parse");
+        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(5));
+        assert!(j.get("kernels").and_then(Json::as_arr).is_some());
+        assert!(j.get("leaf_width_sweep").and_then(Json::as_arr).is_some());
+    }
+
+    #[test]
+    fn engine_grid_cells_agree_across_engines() {
+        // One small end-to-end cell per scheme (kept tiny for tier-1).
+        let base = Base::default();
+        let n = 256;
+        for (scheme, procs) in [("copsim", 4usize), ("copk", 4)] {
+            let mut rng = Rng::new(3);
+            let a = rng.digits(n, base.log2);
+            let b = rng.digits(n, base.log2);
+            let leaf: LeafRef = leaf_ref(SkimLeaf);
+            let seq = Seq::range(procs);
+            let mut sim = Machine::unbounded(procs, base);
+            let (ps, _) = run_once(&mut sim, scheme, &seq, &a, &b, &leaf).unwrap();
+            let mut thr = ThreadedMachine::unbounded(procs, base);
+            let (pt, _) = run_once(&mut thr, scheme, &seq, &a, &b, &leaf).unwrap();
+            assert_eq!(ps, pt, "{scheme}: engines disagree on the product");
+            assert_eq!(
+                thr.finish().unwrap().critical,
+                sim.critical(),
+                "{scheme}: engines disagree on the cost triple"
+            );
+        }
+    }
+}

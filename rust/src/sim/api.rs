@@ -73,9 +73,11 @@ use crate::error::Result;
 use std::ops::Range;
 
 /// A computation shipped to a processor by [`MachineApi::compute_slot`]:
-/// receives the input slots' contents and the machine base, charges its
-/// digit ops, and returns the output slot's contents.
-pub type SlotComputation = Box<dyn FnOnce(&[Vec<u32>], &Base, &mut Ops) -> Vec<u32> + Send>;
+/// receives the input slots' contents as borrowed digit slices (the
+/// backend lends its storage — consumed inputs are moved, never cloned,
+/// and non-consumed inputs are viewed in place), plus the machine base;
+/// charges its digit ops, and returns the output slot's contents.
+pub type SlotComputation = Box<dyn FnOnce(&[&[u32]], &Base, &mut Ops) -> Vec<u32> + Send>;
 
 /// Point-in-time view of a single processor: its logical clock and
 /// memory ledger. Returned by [`MachineApi::proc_view`]; the scheduler
@@ -132,6 +134,16 @@ pub trait MachineApi {
         let d = self.read(p, slot)?;
         debug_assert_eq!(d.len(), 1);
         Ok(d[0])
+    }
+
+    /// Append a slot's contents to `buf` (no cost charged; same
+    /// synchronization and failure semantics as [`MachineApi::read`]).
+    /// Engines whose storage is host-visible append straight from it,
+    /// skipping the intermediate vector `read` would materialize — the
+    /// collectives' assembly loops go through this.
+    fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
+        buf.extend_from_slice(&self.read(p, slot)?);
+        Ok(())
     }
 
     /// Overwrite a slot in place (same or different width; ledger
@@ -232,4 +244,21 @@ pub trait MachineApi {
 
     /// Record a trace event (no cost). Backends may ignore it.
     fn event(&mut self, _msg: &str) {}
+
+    // ----- physical buffer recycling -----------------------------------
+    //
+    // Purely physical, never cost-visible: the ledger charges payload
+    // lengths, not capacities, and these hooks move no model data.
+
+    /// Take a scratch/payload buffer with capacity at least `cap`.
+    /// Engines with a buffer pool hand out retired backing stores; the
+    /// default just allocates. Buffers obtained here typically flow
+    /// into `alloc`/`send` (becoming storage) or come back through
+    /// [`MachineApi::give_buffer`].
+    fn take_buffer(&mut self, cap: usize) -> Vec<u32> {
+        Vec::with_capacity(cap)
+    }
+
+    /// Return a buffer to the engine's pool (default: drop it).
+    fn give_buffer(&mut self, _buf: Vec<u32>) {}
 }

@@ -37,6 +37,8 @@ use super::machine::{ProcId, Slot};
 use super::seq::Seq;
 use crate::bignum::core::add_with_carry;
 use crate::error::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// `⌈log₂ p⌉` (0 for p ≤ 1) — the binomial-tree round count.
 pub fn ceil_log2(p: usize) -> u64 {
@@ -157,7 +159,7 @@ pub fn shift<M: MachineApi>(
 pub fn gather_host<M: MachineApi>(m: &M, chunks: &[(ProcId, Slot)]) -> Result<Vec<u32>> {
     let mut out = Vec::new();
     for &(p, slot) in chunks {
-        out.extend_from_slice(&m.read(p, slot)?);
+        m.read_into(p, slot, &mut out)?;
     }
     Ok(out)
 }
@@ -179,9 +181,11 @@ pub fn gather<M: MachineApi>(m: &mut M, chunks: &[(ProcId, Slot)]) -> Result<(Pr
             let (sp, ss) = cur[r + step];
             // Rank r+step's accumulated buffer moves to rank r…
             let moved = if sp == dp { ss } else { m.send_move(sp, dp, ss)? };
-            // …and is appended (free both halves, allocate the concat).
-            let mut buf = m.read(dp, ds)?;
-            buf.extend_from_slice(&m.read(dp, moved)?);
+            // …and is appended (free both halves, allocate the concat
+            // into a pooled buffer).
+            let mut buf = m.take_buffer(0);
+            m.read_into(dp, ds, &mut buf)?;
+            m.read_into(dp, moved, &mut buf)?;
             m.free(dp, ds);
             m.free(dp, moved);
             cur[r] = (dp, m.alloc(dp, buf)?);
@@ -272,7 +276,8 @@ pub fn reduce<M: MachineApi>(
                 // extra word, so the charged bandwidth covers all the
                 // information that moves.
                 debug_assert!(carries[r + step] <= u32::MAX as u64);
-                let mut payload = m.read(sp, ss)?;
+                let mut payload = m.take_buffer(0);
+                m.read_into(sp, ss, &mut payload)?;
                 payload.push(carries[r + step] as u32);
                 m.free(sp, ss);
                 let s = m.send(sp, dp, payload)?;
@@ -297,6 +302,97 @@ pub fn reduce<M: MachineApi>(
 }
 
 // ------------------------------------------------------------ all-to-all
+
+/// The pure *shape* of a repartition: chunk widths and counts on both
+/// sides. Everything the piece decomposition depends on — and nothing
+/// more: owners, slot ids, processor identities, and the network
+/// topology are all bound later, at execution. One cached plan
+/// therefore serves every machine, every shard, and every topology
+/// whose job has this shape (the key strictly subsumes a
+/// (shape, P, topology) key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanShape {
+    pub old_width: usize,
+    pub old_chunks: usize,
+    pub new_width: usize,
+    pub new_chunks: usize,
+}
+
+/// One piece of a symbolic repartition plan: source *chunk index* (not
+/// owner/slot) plus the digit sub-range `[lo, hi)` of that chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PieceTemplate {
+    pub chunk: usize,
+    pub lo: usize,
+    pub hi: usize,
+    /// Whole-chunk piece — the executor ships the slot without slicing.
+    pub full: bool,
+}
+
+/// A compiled repartition: for each destination rank, its source pieces
+/// in digit order.
+pub type RepartitionPlan = Vec<Vec<PieceTemplate>>;
+
+/// Soft cap on retained plans; the scheduler's workloads cycle through
+/// a handful of shapes, so eviction (a full clear, crude but O(1)
+/// amortized) is essentially never hit outside adversarial tests.
+const PLAN_CACHE_MAX: usize = 256;
+
+fn plan_cache() -> &'static Mutex<HashMap<PlanShape, Arc<RepartitionPlan>>> {
+    static CACHE: OnceLock<Mutex<HashMap<PlanShape, Arc<RepartitionPlan>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Number of compiled plans currently cached (test/introspection hook).
+pub fn plan_cache_len() -> usize {
+    plan_cache().lock().unwrap().len()
+}
+
+/// Compile (or fetch) the symbolic repartition plan for `shape`: per
+/// destination chunk, the source pieces covering its digit window.
+/// `DistInt::copy_to` binds owners and slots to this template and
+/// groups consecutive same-owner pieces into the maximal runs that
+/// travel as one message — so the executed plan is *identical* to the
+/// one the old per-call compilation produced, it just stops being
+/// recomputed for the scheduler's repeated same-shape jobs.
+pub fn repartition_plan(shape: PlanShape) -> Arc<RepartitionPlan> {
+    debug_assert_eq!(
+        shape.old_width * shape.old_chunks,
+        shape.new_width * shape.new_chunks,
+        "repartition must preserve total width"
+    );
+    let cache = plan_cache();
+    if let Some(plan) = cache.lock().unwrap().get(&shape) {
+        return Arc::clone(plan);
+    }
+    let old_w = shape.old_width;
+    let mut plan = Vec::with_capacity(shape.new_chunks);
+    for j in 0..shape.new_chunks {
+        let lo = j * shape.new_width;
+        let hi = lo + shape.new_width;
+        let first = lo / old_w;
+        let last = (hi - 1) / old_w;
+        let mut pieces = Vec::with_capacity(last - first + 1);
+        for k in first..=last {
+            let r_lo = lo.max(k * old_w) - k * old_w;
+            let r_hi = hi.min((k + 1) * old_w) - k * old_w;
+            pieces.push(PieceTemplate {
+                chunk: k,
+                lo: r_lo,
+                hi: r_hi,
+                full: r_lo == 0 && r_hi == old_w,
+            });
+        }
+        plan.push(pieces);
+    }
+    let plan = Arc::new(plan);
+    let mut g = cache.lock().unwrap();
+    if g.len() >= PLAN_CACHE_MAX {
+        g.clear();
+    }
+    g.insert(shape, Arc::clone(&plan));
+    plan
+}
 
 /// One contiguous sub-range `[lo, hi)` of a source slot feeding a
 /// destination chunk; `full` marks the whole-slot case (the executor
@@ -329,13 +425,32 @@ pub struct ChunkPlan {
 
 /// Read and concatenate a run's pieces on their owner (host-side copy
 /// of resident digits — the shared coalescing step both local
-/// assembly and remote payloads go through).
-fn assemble<M: MachineApi>(m: &M, src: ProcId, pieces: &[Piece], cap: usize) -> Result<Vec<u32>> {
-    let mut buf: Vec<u32> = Vec::with_capacity(cap);
+/// assembly and remote payloads go through). The buffer is drawn from
+/// the engine's pool, so repeated assembly reuses retired backing
+/// stores instead of round-tripping the allocator.
+fn assemble<M: MachineApi>(
+    m: &mut M,
+    src: ProcId,
+    pieces: &[Piece],
+    cap: usize,
+) -> Result<Vec<u32>> {
+    let mut buf = m.take_buffer(cap);
     for p in pieces {
-        buf.extend_from_slice(&m.read(src, p.slot)?[p.lo..p.hi]);
+        append_piece(m, src, p, &mut buf)?;
     }
     Ok(buf)
+}
+
+/// Append one piece's digits to `buf` — straight from engine storage
+/// where the backend allows it, via a transient otherwise.
+fn append_piece<M: MachineApi>(m: &M, src: ProcId, p: &Piece, buf: &mut Vec<u32>) -> Result<()> {
+    if p.full {
+        m.read_into(src, p.slot, buf)
+    } else {
+        let data = m.read(src, p.slot)?;
+        buf.extend_from_slice(&data[p.lo..p.hi]);
+        Ok(())
+    }
 }
 
 /// Personalized all-to-all: execute a redistribution plan, moving every
@@ -377,11 +492,11 @@ pub fn all_to_all<M: MachineApi>(m: &mut M, plan: &[ChunkPlan]) -> Result<Vec<(P
         // it, and release the transient before the next run arrives, so
         // the destination's overshoot beyond the final chunk is bounded
         // by one run.
-        let mut buf: Vec<u32> = Vec::with_capacity(chunk.width);
+        let mut buf = m.take_buffer(chunk.width);
         for Run { src, pieces } in &chunk.runs {
             if *src == dst {
                 for p in pieces {
-                    buf.extend_from_slice(&m.read(*src, p.slot)?[p.lo..p.hi]);
+                    append_piece(m, *src, p, &mut buf)?;
                 }
             } else {
                 let s = if pieces.len() == 1 {
@@ -391,7 +506,7 @@ pub fn all_to_all<M: MachineApi>(m: &mut M, plan: &[ChunkPlan]) -> Result<Vec<(P
                     let payload = assemble(m, *src, pieces, 0)?;
                     m.send(*src, dst, payload)?
                 };
-                buf.extend_from_slice(&m.read(dst, s)?);
+                m.read_into(dst, s, &mut buf)?;
                 m.free(dst, s);
             }
         }
@@ -569,6 +684,54 @@ mod tests {
         // covered in 2 more rounds (2 + 2 msgs).
         assert_eq!(m.stats.total_msgs, 6);
         assert_eq!(m.critical().msgs, 3);
+    }
+
+    #[test]
+    fn repartition_plan_cache_hits_and_decomposes_exactly() {
+        let shape = PlanShape {
+            old_width: 4,
+            old_chunks: 4,
+            new_width: 8,
+            new_chunks: 2,
+        };
+        let p1 = repartition_plan(shape);
+        let p2 = repartition_plan(shape);
+        assert!(
+            std::sync::Arc::ptr_eq(&p1, &p2),
+            "same shape must hit the cache"
+        );
+        assert!(plan_cache_len() >= 1);
+        // Hand-derived decomposition: each 8-digit destination chunk is
+        // two full 4-digit source chunks.
+        assert_eq!(p1.len(), 2);
+        assert_eq!(
+            p1[0],
+            vec![
+                PieceTemplate { chunk: 0, lo: 0, hi: 4, full: true },
+                PieceTemplate { chunk: 1, lo: 0, hi: 4, full: true },
+            ]
+        );
+        assert_eq!(
+            p1[1],
+            vec![
+                PieceTemplate { chunk: 2, lo: 0, hi: 4, full: true },
+                PieceTemplate { chunk: 3, lo: 0, hi: 4, full: true },
+            ]
+        );
+        // A ragged shape splits chunks mid-stream.
+        let ragged = repartition_plan(PlanShape {
+            old_width: 4,
+            old_chunks: 3,
+            new_width: 3,
+            new_chunks: 4,
+        });
+        assert_eq!(
+            ragged[1],
+            vec![
+                PieceTemplate { chunk: 0, lo: 3, hi: 4, full: false },
+                PieceTemplate { chunk: 1, lo: 0, hi: 2, full: false },
+            ]
+        );
     }
 
     #[test]

@@ -524,6 +524,17 @@ impl<E: MachineApi> MachineApi for FaultyMachine<E> {
     }
 
     fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        // The duplicate closure needs its own payload copy, but a
+        // cloned payload only matters when a plan can actually draw
+        // DupMsg. Without a plan (the scheduler's fault-free default)
+        // skip straight to the inner engine: `decide` would draw
+        // nothing and advance nothing, so this is exactly equivalent —
+        // minus one whole-payload clone per send.
+        if self.plan.is_none() {
+            self.check_alive(src)?;
+            self.check_alive(dst)?;
+            return self.inner.send(src, dst, data);
+        }
         let dup = data.clone();
         self.faulty_send(
             src,
@@ -610,6 +621,21 @@ impl<E: MachineApi> MachineApi for FaultyMachine<E> {
     }
     fn event(&mut self, msg: &str) {
         self.inner.event(msg);
+    }
+    // Buffer recycling is purely physical — no fault draw, straight
+    // delegation so the inner engine's pool stays reachable. read_into
+    // mirrors `read` exactly (check_alive + delegate, no draw), so the
+    // fault stream is identical while the inner engine's zero-copy
+    // append path stays reachable.
+    fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
+        self.check_alive(p)?;
+        self.inner.read_into(p, slot, buf)
+    }
+    fn take_buffer(&mut self, cap: usize) -> Vec<u32> {
+        self.inner.take_buffer(cap)
+    }
+    fn give_buffer(&mut self, buf: Vec<u32>) {
+        self.inner.give_buffer(buf);
     }
 }
 

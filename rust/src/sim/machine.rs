@@ -1,24 +1,37 @@
 //! The machine: processors, memory ledgers, message transport.
+//!
+//! Physical storage is a machine-wide **slab** — a dense `Vec` of
+//! cells indexed directly by `Slot`, with freed indices recycled
+//! through a free list — plus a **buffer pool** that cycles retired
+//! payload backing stores back into the alloc/send/assembly paths.
+//! Both are invisible to the cost model: the ledger charges payload
+//! *lengths* against `M`, and slot identity is opaque to every caller,
+//! so the golden cost grid is bit-identical to the old hash-map store.
 
 use super::api::{MachineApi, ProcView, SlotComputation};
 use super::topology::{FullyConnected, TopologyRef};
 use super::Clock;
 use crate::bignum::{Base, Ops};
 use crate::error::{bail, Result};
-use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Processor identifier: index into the machine's processor table.
 pub type ProcId = usize;
 
 /// Handle to a value resident in some processor's local memory.
+/// On the cost-model engine this encodes a slab index (plus one, so 0
+/// stays invalid — low 32 bits) and the cell's generation (high 32
+/// bits); freed indices are recycled through a free list, so the
+/// slab's footprint tracks *live* values, while the generation keeps
+/// stale handles failing loudly after a cell is reused.
 pub type Slot = u64;
 
-/// One simulated processor: logical clock + memory ledger + store.
+/// One simulated processor: logical clock + memory ledger. The stored
+/// payloads live in the machine-wide slab (slots are slab indices), so
+/// per-slot access is an array index, not a hash probe.
 #[derive(Debug)]
 pub struct Processor {
     pub clock: Clock,
-    store: HashMap<Slot, Vec<u32>>,
     mem_used: u64,
     mem_peak: u64,
     mem_cap: u64,
@@ -31,7 +44,6 @@ impl Processor {
     fn new(mem_cap: u64) -> Self {
         Processor {
             clock: Clock::default(),
-            store: HashMap::new(),
             mem_used: 0,
             mem_peak: 0,
             mem_cap,
@@ -58,13 +70,84 @@ pub struct MachineStats {
     pub total_ops: u64,
 }
 
+/// One slab cell: either a live value with its owning processor, or a
+/// vacant cell waiting on the free list. The generation counter bumps
+/// on every free, and the cell's current generation is baked into the
+/// `Slot` handle — so a stale handle to a recycled cell fails as
+/// loudly as it did under the old never-reused numbering, instead of
+/// silently aliasing the cell's next occupant.
+#[derive(Debug)]
+enum SlabEntry {
+    Vacant {
+        gen: u32,
+    },
+    Full {
+        owner: ProcId,
+        gen: u32,
+        data: Vec<u32>,
+    },
+}
+
+/// Recycles payload buffers between the slab and the send/assembly
+/// paths so steady-state alloc/free/send traffic stops round-tripping
+/// the global allocator. Purely physical: the ledger charges `len()`,
+/// never capacity, so pooling is cost-invisible.
+#[derive(Debug, Default)]
+struct BufPool {
+    bufs: Vec<Vec<u32>>,
+}
+
+/// Retention caps: enough buffers for the deepest recursion's transient
+/// population, without hoarding arbitrarily large backing stores (the
+/// per-buffer word cap also bounds how much invisible capacity an
+/// unsized `take_buffer(0)` request can pin under a small slot).
+const POOL_MAX_BUFS: usize = 64;
+const POOL_MAX_WORDS: usize = 1 << 18;
+
+impl BufPool {
+    fn take(&mut self, cap: usize) -> Vec<u32> {
+        match self.bufs.pop() {
+            // A grossly oversized buffer handed to a *sized* tiny
+            // request would stay pinned in the slab under a small
+            // long-lived slot (the ledger charges lengths, so the
+            // overshoot would be invisible dark memory) — drop it back
+            // to the allocator instead of recycling it. `cap == 0`
+            // means "size unknown" (assembly loops that discover their
+            // payload as they read): any recycled capacity is welcome
+            // there, and the per-buffer retention cap bounds the
+            // worst-case overshoot.
+            Some(b) if cap > 0 && b.capacity() > (cap.max(64)).saturating_mul(8) => {
+                drop(b);
+                Vec::with_capacity(cap)
+            }
+            Some(mut b) => {
+                b.reserve(cap);
+                b
+            }
+            None => Vec::with_capacity(cap),
+        }
+    }
+
+    fn give(&mut self, mut b: Vec<u32>) {
+        if self.bufs.len() < POOL_MAX_BUFS && b.capacity() > 0 && b.capacity() <= POOL_MAX_WORDS {
+            b.clear();
+            self.bufs.push(b);
+        }
+    }
+}
+
 /// The distributed-memory machine (see module docs for the model).
 #[derive(Debug)]
 pub struct Machine {
     procs: Vec<Processor>,
     pub base: Base,
     topo: TopologyRef,
-    next_slot: Slot,
+    /// Dense value store: `Slot` encodes (index + 1, generation).
+    /// Vacant cells are chained through `free_list` and reused by the
+    /// next alloc, which bumps nothing — the bump happened at free.
+    slab: Vec<SlabEntry>,
+    free_list: Vec<usize>,
+    pool: BufPool,
     pub stats: MachineStats,
     /// When true, messages passed to [`Machine::event`] are recorded in
     /// `trace_log` (retrievable via [`Machine::trace_log`]). The flag
@@ -91,7 +174,9 @@ impl Machine {
             procs: (0..p).map(|_| Processor::new(mem_cap)).collect(),
             base,
             topo,
-            next_slot: 1,
+            slab: Vec::new(),
+            free_list: Vec::new(),
+            pool: BufPool::default(),
             stats: MachineStats::default(),
             trace: false,
             trace_log: Vec::new(),
@@ -120,6 +205,28 @@ impl Machine {
 
     // ----- memory ledger ---------------------------------------------
 
+    /// Encode a slab index + cell generation as a `Slot` handle
+    /// (index+1 in the low 32 bits so 0 stays invalid, generation in
+    /// the high 32).
+    #[inline]
+    fn encode_slot(idx: usize, gen: u32) -> Slot {
+        debug_assert!(idx < u32::MAX as usize, "slab index overflows slot encoding");
+        ((gen as u64) << 32) | (idx as u64 + 1)
+    }
+
+    /// Slab index of `slot` if the cell is live, owned by `p`, and of
+    /// the handle's generation (a stale handle to a recycled cell
+    /// panics exactly like the old never-reused numbering did).
+    #[inline]
+    fn slot_idx(&self, p: ProcId, slot: Slot, what: &str) -> usize {
+        let idx = ((slot & u32::MAX as u64) as usize).wrapping_sub(1);
+        let gen = (slot >> 32) as u32;
+        match self.slab.get(idx) {
+            Some(SlabEntry::Full { owner, gen: g, .. }) if *owner == p && *g == gen => idx,
+            _ => panic!("processor {p}: {what} of unknown slot {slot}"),
+        }
+    }
+
     /// Allocate `data` in `p`'s local memory. Fails if the capacity `M`
     /// would be exceeded — this is the mechanism that makes the paper's
     /// memory-requirement statements falsifiable.
@@ -136,10 +243,20 @@ impl Machine {
         }
         proc.mem_used += words;
         proc.mem_peak = proc.mem_peak.max(proc.mem_used);
-        let slot = self.next_slot;
-        self.next_slot += 1;
-        self.procs[p].store.insert(slot, data);
-        Ok(slot)
+        let (idx, gen) = match self.free_list.pop() {
+            Some(idx) => {
+                let &SlabEntry::Vacant { gen } = &self.slab[idx] else {
+                    unreachable!("free list held a live cell");
+                };
+                self.slab[idx] = SlabEntry::Full { owner: p, gen, data };
+                (idx, gen)
+            }
+            None => {
+                self.slab.push(SlabEntry::Full { owner: p, gen: 0, data });
+                (self.slab.len() - 1, 0)
+            }
+        };
+        Ok(Machine::encode_slot(idx, gen))
     }
 
     /// Allocate a single scalar word (flags, carries).
@@ -147,22 +264,30 @@ impl Machine {
         self.alloc(p, vec![v])
     }
 
-    /// Free a slot, returning its contents.
+    /// Free a slot, returning its contents. The cell's generation bumps
+    /// so any handle still pointing at it is dead from here on.
     pub fn free(&mut self, p: ProcId, slot: Slot) -> Vec<u32> {
-        let data = self.procs[p]
-            .store
-            .remove(&slot)
-            .unwrap_or_else(|| panic!("processor {p}: free of unknown slot {slot}"));
+        let idx = self.slot_idx(p, slot, "free");
+        let gen = (slot >> 32) as u32;
+        let entry = std::mem::replace(
+            &mut self.slab[idx],
+            SlabEntry::Vacant { gen: gen.wrapping_add(1) },
+        );
+        let SlabEntry::Full { data, .. } = entry else {
+            unreachable!("slot_idx returned a vacant cell");
+        };
+        self.free_list.push(idx);
         self.procs[p].mem_used -= data.len() as u64;
         data
     }
 
     /// Read a slot's contents.
     pub fn read(&self, p: ProcId, slot: Slot) -> &[u32] {
-        self.procs[p]
-            .store
-            .get(&slot)
-            .unwrap_or_else(|| panic!("processor {p}: read of unknown slot {slot}"))
+        let idx = self.slot_idx(p, slot, "read");
+        match &self.slab[idx] {
+            SlabEntry::Full { data, .. } => data,
+            SlabEntry::Vacant { .. } => unreachable!(),
+        }
     }
 
     /// Read a scalar slot.
@@ -174,12 +299,11 @@ impl Machine {
 
     /// Overwrite a slot in place (same or different width; ledger updated).
     pub fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
-        let old_len = self
-            .procs[p]
-            .store
-            .get(&slot)
-            .unwrap_or_else(|| panic!("processor {p}: replace of unknown slot {slot}"))
-            .len() as u64;
+        let idx = self.slot_idx(p, slot, "replace");
+        let SlabEntry::Full { data: old, .. } = &mut self.slab[idx] else {
+            unreachable!()
+        };
+        let old_len = old.len() as u64;
         let new_len = data.len() as u64;
         let proc = &mut self.procs[p];
         if proc.mem_used - old_len + new_len > proc.mem_cap {
@@ -192,7 +316,8 @@ impl Machine {
         }
         proc.mem_used = proc.mem_used - old_len + new_len;
         proc.mem_peak = proc.mem_peak.max(proc.mem_used);
-        proc.store.insert(slot, data);
+        let retired = std::mem::replace(old, data);
+        self.pool.give(retired);
         Ok(())
     }
 
@@ -264,9 +389,19 @@ impl Machine {
         *bclock = bclock.join(&snapshot);
     }
 
-    /// Send a copy of an existing slot (source keeps its copy).
+    /// Send a copy of an existing slot (source keeps its copy). The
+    /// payload is staged in a pooled buffer, so steady-state copy
+    /// traffic reuses retired backing stores instead of allocating.
     pub fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
-        let data = self.read(src, slot).to_vec();
+        let idx = self.slot_idx(src, slot, "send_copy");
+        let len = match &self.slab[idx] {
+            SlabEntry::Full { data, .. } => data.len(),
+            SlabEntry::Vacant { .. } => unreachable!(),
+        };
+        let mut data = self.pool.take(len);
+        if let SlabEntry::Full { data: d, .. } = &self.slab[idx] {
+            data.extend_from_slice(d);
+        }
         self.send(src, dst, data)
     }
 
@@ -277,7 +412,8 @@ impl Machine {
         self.send(src, dst, data)
     }
 
-    /// Send a sub-range of a slot's digits (copy).
+    /// Send a sub-range of a slot's digits (copy; pooled staging as in
+    /// [`Machine::send_copy`]).
     pub fn send_range(
         &mut self,
         src: ProcId,
@@ -285,17 +421,35 @@ impl Machine {
         slot: Slot,
         range: std::ops::Range<usize>,
     ) -> Result<Slot> {
-        let data = self.read(src, slot)[range].to_vec();
+        let idx = self.slot_idx(src, slot, "send_range");
+        let mut data = self.pool.take(range.len());
+        if let SlabEntry::Full { data: d, .. } = &self.slab[idx] {
+            data.extend_from_slice(&d[range]);
+        }
         self.send(src, dst, data)
     }
 
     /// Drop every slot resident on `p`; the ledger returns to zero used
     /// words (peak is kept — it already happened). Scheduler support:
     /// reclaims a shard whose job failed and leaked its working set.
+    /// O(slab) — acceptable for the rare failure path.
     pub fn purge(&mut self, p: ProcId) {
-        let proc = &mut self.procs[p];
-        proc.store.clear();
-        proc.mem_used = 0;
+        for idx in 0..self.slab.len() {
+            let gen = match &self.slab[idx] {
+                SlabEntry::Full { owner, gen, .. } if *owner == p => *gen,
+                _ => continue,
+            };
+            let entry = std::mem::replace(
+                &mut self.slab[idx],
+                SlabEntry::Vacant { gen: gen.wrapping_add(1) },
+            );
+            let SlabEntry::Full { data, .. } = entry else {
+                unreachable!()
+            };
+            self.free_list.push(idx);
+            self.pool.give(data);
+        }
+        self.procs[p].mem_used = 0;
     }
 
     /// Synchronize a set of processors (a barrier): all clocks join.
@@ -374,10 +528,15 @@ impl MachineApi for Machine {
         Machine::alloc(self, p, data)
     }
     fn free(&mut self, p: ProcId, slot: Slot) {
-        Machine::free(self, p, slot);
+        let retired = Machine::free(self, p, slot);
+        self.pool.give(retired);
     }
     fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
         Ok(Machine::read(self, p, slot).to_vec())
+    }
+    fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
+        buf.extend_from_slice(Machine::read(self, p, slot));
+        Ok(())
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
         Machine::replace(self, p, slot, data)
@@ -400,18 +559,24 @@ impl MachineApi for Machine {
         consume: bool,
         f: SlotComputation,
     ) -> Result<Slot> {
-        let data: Vec<Vec<u32>> = inputs
-            .iter()
-            .map(|&s| Machine::read(self, p, s).to_vec())
-            .collect();
-        if consume {
-            for &s in inputs {
-                Machine::free(self, p, s);
-            }
-        }
         let base = self.base;
         let mut ops = Ops::default();
-        let out = f(&data, &base, &mut ops);
+        let out = if consume {
+            // Inputs are moved out of the slab (ledger freed before the
+            // output allocates, as the paper's leaves require) and the
+            // closure borrows them in place — no copies either way.
+            let held: Vec<Vec<u32>> = inputs.iter().map(|&s| Machine::free(self, p, s)).collect();
+            let views: Vec<&[u32]> = held.iter().map(|v| v.as_slice()).collect();
+            let out = f(&views, &base, &mut ops);
+            drop(views);
+            for v in held {
+                self.pool.give(v);
+            }
+            out
+        } else {
+            let views: Vec<&[u32]> = inputs.iter().map(|&s| Machine::read(self, p, s)).collect();
+            f(&views, &base, &mut ops)
+        };
         Machine::compute(self, p, ops.get());
         Machine::alloc(self, p, out)
     }
@@ -467,6 +632,12 @@ impl MachineApi for Machine {
     }
     fn event(&mut self, msg: &str) {
         Machine::event(self, msg);
+    }
+    fn take_buffer(&mut self, cap: usize) -> Vec<u32> {
+        self.pool.take(cap)
+    }
+    fn give_buffer(&mut self, buf: Vec<u32>) {
+        self.pool.give(buf);
     }
 }
 
@@ -607,6 +778,46 @@ mod tests {
         assert_eq!(m.stats.total_msgs, 3);
         assert_eq!(m.stats.total_words, 3 + 6 + 3);
         assert_eq!(m.mem_used_total(), 3);
+    }
+
+    #[test]
+    fn slab_recycles_cells_and_keeps_owner_checks() {
+        let mut m = mk(2, 100);
+        let a = m.alloc(0, vec![1, 2, 3]).unwrap();
+        assert_eq!(m.free(0, a), vec![1, 2, 3]);
+        // The vacant cell is reused (slot handles are opaque; identity
+        // reuse is allowed) and the ledger stays exact.
+        let b = m.alloc(0, vec![4]).unwrap();
+        assert_eq!(m.read(0, b), &[4]);
+        assert_eq!(m.proc(0).mem_used(), 1);
+        // Pooled buffers cycle invisibly: a long alloc/free train must
+        // not disturb ledger accounting.
+        for i in 0..100u32 {
+            let s = m.alloc(1, vec![i; 8]).unwrap();
+            MachineApi::free(&mut m, 1, s);
+        }
+        assert_eq!(m.proc(1).mem_used(), 0);
+        assert_eq!(m.proc(1).mem_peak(), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "read of unknown slot")]
+    fn read_of_foreign_slot_panics() {
+        let mut m = mk(2, 10);
+        let s = m.alloc(0, vec![1]).unwrap();
+        let _ = m.read(1, s);
+    }
+
+    #[test]
+    #[should_panic(expected = "read of unknown slot")]
+    fn stale_handle_to_recycled_cell_panics() {
+        // Use-after-free must stay a loud failure even though the slab
+        // recycles cells: the generation in the handle goes stale.
+        let mut m = mk(1, 100);
+        let a = m.alloc(0, vec![1, 2]).unwrap();
+        m.free(0, a);
+        let _b = m.alloc(0, vec![3, 4]).unwrap(); // reuses the cell
+        let _ = m.read(0, a);
     }
 
     #[test]

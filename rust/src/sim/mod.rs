@@ -68,7 +68,7 @@ pub use dist::DistInt;
 pub use faulty::{FaultConfig, FaultEvent, FaultKind, FaultyMachine};
 pub use machine::{Machine, MachineStats, ProcId, Slot};
 pub use seq::Seq;
-pub use threaded::{ThreadedMachine, ThreadedReport};
+pub use threaded::{payload_into_vec, ThreadedMachine, ThreadedReport};
 pub use topology::{FullyConnected, HierCluster, Topology, TopologyKind, TopologyRef, Torus2D};
 
 /// Per-processor logical clock; component-wise max is the merge operator.

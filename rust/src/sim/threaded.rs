@@ -1,13 +1,22 @@
 //! [`ThreadedMachine`] — the real-threads execution engine.
 //!
 //! One OS thread per simulated processor. Each worker owns a
-//! per-processor arena (dense slot-indexed storage replacing the cost
-//! model's `HashMap` store), its memory ledger, and its logical
-//! [`Clock`]; processors are connected point-to-point by `std::sync::mpsc`
-//! channels whose messages carry the payload digits *and* the sender's
-//! post-send clock snapshot — the same cost semantics as the cost-model
-//! backend, so the two engines produce identical products and identical
-//! cost triples (property-tested in `tests/theorem_properties.rs`).
+//! per-processor arena (dense slot-indexed storage, the threaded twin
+//! of the cost model's machine-wide slab), its memory ledger, and its
+//! logical [`Clock`]; processors are connected point-to-point by
+//! `std::sync::mpsc` channels whose messages carry the payload digits
+//! *and* the sender's post-send clock snapshot — the same cost
+//! semantics as the cost-model backend, so the two engines produce
+//! identical products and identical cost triples (property-tested in
+//! `tests/theorem_properties.rs`).
+//!
+//! Payload movement is **zero-copy**: arena entries are
+//! reference-counted, so whole-slot sends, relay forwarding, read
+//! replies, and `compute_slot` inputs share or move the digits —
+//! the only remaining copies are sub-range sends (which ship different
+//! digits) and host reads that need ownership while the slot stays
+//! live. None of this is cost-visible: ledgers charge lengths, wires
+//! charge words.
 //!
 //! ## Execution model
 //!
@@ -54,7 +63,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// A point-to-point message: payload digits + sender clock snapshot.
-type NetMsg = (Vec<u32>, Clock);
+/// The payload is reference-counted so relays ([`Cmd::Forward`]) and
+/// whole-slot sends move a pointer, never the digits.
+type NetMsg = (Arc<Vec<u32>>, Clock);
+
+/// Unwrap a shared payload into an owned vector, copying only when the
+/// arena (or another reader) still holds a reference.
+pub fn payload_into_vec(a: Arc<Vec<u32>>) -> Vec<u32> {
+    Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone())
+}
 
 /// Payload source for a send command executed by the sending worker.
 enum Payload {
@@ -92,7 +109,7 @@ enum Cmd {
     },
     Read {
         slot: Slot,
-        reply: Sender<Vec<u32>>,
+        reply: Sender<Arc<Vec<u32>>>,
     },
     Compute {
         ops: u64,
@@ -170,8 +187,10 @@ struct Worker {
     base: Base,
     mem_cap: u64,
     /// Dense arena: the handle assigns per-processor sequential slot
-    /// ids, so `slot as usize` indexes directly.
-    arena: Vec<Option<Vec<u32>>>,
+    /// ids, so `slot as usize` indexes directly. Entries are
+    /// reference-counted so reads, whole-slot sends, and relays share
+    /// the payload instead of cloning it.
+    arena: Vec<Option<Arc<Vec<u32>>>>,
     clock: Clock,
     mem_used: u64,
     mem_peak: u64,
@@ -205,6 +224,12 @@ impl Worker {
     }
 
     fn store(&mut self, slot: Slot, data: Vec<u32>) {
+        self.store_shared(slot, Arc::new(data));
+    }
+
+    /// Store an already-shared payload (a received message) without
+    /// copying its digits.
+    fn store_shared(&mut self, slot: Slot, data: Arc<Vec<u32>>) {
         self.charge_alloc(data.len() as u64);
         let idx = slot as usize;
         if idx >= self.arena.len() {
@@ -214,7 +239,7 @@ impl Worker {
         self.arena[idx] = Some(data);
     }
 
-    fn take(&mut self, slot: Slot) -> Vec<u32> {
+    fn take(&mut self, slot: Slot) -> Arc<Vec<u32>> {
         let data = self
             .arena
             .get_mut(slot as usize)
@@ -231,7 +256,7 @@ impl Worker {
         data
     }
 
-    fn get(&self, slot: Slot) -> &Vec<u32> {
+    fn get(&self, slot: Slot) -> &Arc<Vec<u32>> {
         self.arena
             .get(slot as usize)
             .and_then(Option::as_ref)
@@ -264,7 +289,9 @@ impl Worker {
                     self.store(slot, data);
                 }
                 Cmd::Read { slot, reply } => {
-                    let _ = reply.send(self.get(slot).clone());
+                    // Share the arena entry — the host copies only if
+                    // it truly needs ownership while the slot is live.
+                    let _ = reply.send(Arc::clone(self.get(slot)));
                 }
                 Cmd::Compute { ops } => {
                     self.clock.ops += ops;
@@ -285,18 +312,24 @@ impl Worker {
                     consume,
                     f,
                 } => {
-                    // Consumed inputs are taken (moved) rather than
-                    // cloned — same ledger sequence (free inputs, then
-                    // alloc output) without copying every leaf operand.
-                    let data: Vec<Vec<u32>> = if consume {
+                    // Consumed inputs are taken (moved), non-consumed
+                    // inputs are borrowed through their refcount —
+                    // either way the closure sees slices of the arena's
+                    // own payloads and no digits are copied. The ledger
+                    // sequence is unchanged (free inputs, then alloc
+                    // output).
+                    let held: Vec<Arc<Vec<u32>>> = if consume {
                         inputs.iter().map(|&s| self.take(s)).collect()
                     } else {
-                        inputs.iter().map(|&s| self.get(s).clone()).collect()
+                        inputs.iter().map(|&s| Arc::clone(self.get(s))).collect()
                     };
+                    let views: Vec<&[u32]> = held.iter().map(|a| a.as_slice()).collect();
                     let t0 = Instant::now();
                     let mut ops = Ops::default();
-                    let produced = f(&data, &self.base, &mut ops);
+                    let produced = f(&views, &self.base, &mut ops);
                     self.busy += t0.elapsed();
+                    drop(views);
+                    drop(held);
                     self.clock.ops += ops.get();
                     self.total_ops += ops.get();
                     self.store(out, produced);
@@ -306,8 +339,12 @@ impl Worker {
                     payload,
                     weight,
                 } => {
-                    let data = match payload {
-                        Payload::Owned(d) => d,
+                    // Whole-slot sends ship the arena's own payload by
+                    // reference (move on `free_after`, shared pointer
+                    // otherwise); only sub-range sends copy — they
+                    // genuinely ship different digits.
+                    let data: Arc<Vec<u32>> = match payload {
+                        Payload::Owned(d) => Arc::new(d),
                         Payload::FromSlot {
                             slot,
                             range,
@@ -316,14 +353,14 @@ impl Worker {
                             if free_after {
                                 let d = self.take(slot);
                                 match range {
-                                    Some(r) => d[r].to_vec(),
+                                    Some(r) => Arc::new(d[r].to_vec()),
                                     None => d,
                                 }
                             } else {
                                 let d = self.get(slot);
                                 match range {
-                                    Some(r) => d[r].to_vec(),
-                                    None => d.clone(),
+                                    Some(r) => Arc::new(d[r].to_vec()),
+                                    None => Arc::clone(d),
                                 }
                             }
                         }
@@ -351,7 +388,8 @@ impl Worker {
                             // cost-model engine's hop loop, so the
                             // engines stay clock-identical. The ledger
                             // is untouched: relays are wire, not
-                            // storage.
+                            // storage — and the payload moves through
+                            // as a shared pointer, never recopied.
                             self.clock = self.clock.join(&snapshot);
                             let words = data.len() as u64 * weight;
                             self.clock.words += words;
@@ -375,7 +413,9 @@ impl Worker {
                         .expect("recv from self is a local operation");
                     match chan.recv() {
                         Ok((data, snapshot)) => {
-                            self.store(slot, data);
+                            // The received allocation IS the arena
+                            // entry — no copy on delivery.
+                            self.store_shared(slot, data);
                             self.clock = self.clock.join(&snapshot);
                         }
                         Err(_) => self.fail(format!(
@@ -586,10 +626,12 @@ impl ThreadedMachine {
     // the lock is dropped observes exactly the same state.
 
     /// Enqueue a read; the reply channel delivers the slot's contents
-    /// once worker `p` drains its queue to this command. If the worker
-    /// is dead the command is dropped and the receiver's `recv` fails —
-    /// the awaiting side maps that to a per-call error.
-    pub fn read_request(&self, p: ProcId, slot: Slot) -> Receiver<Vec<u32>> {
+    /// — shared with the arena, so the worker never copies; convert
+    /// with [`payload_into_vec`] if ownership is needed — once worker
+    /// `p` drains its queue to this command. If the worker is dead the
+    /// command is dropped and the receiver's `recv` fails — the
+    /// awaiting side maps that to a per-call error.
+    pub fn read_request(&self, p: ProcId, slot: Slot) -> Receiver<Arc<Vec<u32>>> {
         let (tx, rx) = channel();
         let _ = self.cmd(p, Cmd::Read { slot, reply: tx });
         rx
@@ -710,7 +752,16 @@ impl MachineApi for ThreadedMachine {
     fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
         self.read_request(p, slot)
             .recv()
+            .map(payload_into_vec)
             .map_err(|_| anyhow!("processor {p}: worker thread died during read"))
+    }
+    fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
+        let shared = self
+            .read_request(p, slot)
+            .recv()
+            .map_err(|_| anyhow!("processor {p}: worker thread died during read"))?;
+        buf.extend_from_slice(&shared);
+        Ok(())
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
         self.cmd(p, Cmd::Replace { slot, data })
@@ -1012,7 +1063,7 @@ mod tests {
             return;
         }
         let mut m = mk(2);
-        let work = |_: &[Vec<u32>], base: &Base, ops: &mut Ops| -> Vec<u32> {
+        let work = |_: &[&[u32]], base: &Base, ops: &mut Ops| -> Vec<u32> {
             let mut acc = 1u64;
             for i in 0..4_000_000u64 {
                 acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
