@@ -1,0 +1,304 @@
+"""Model-side evidence for the PR-6 LEAF_WIDTH re-tune.
+
+Bit-exact Python replica of the Rust charging model for the sequential
+multipliers (`rust/src/bignum/{core,mul}.rs`) and of `util::Rng`
+(xoshiro256++ seeded by SplitMix64), so the charged-T consequences of a
+leaf-width change can be computed exactly in an environment without a
+Rust toolchain. The numbers printed by this script are the ones recorded
+in DESIGN.md ("Leaf-width re-tune" re-bless record); any drift between
+this replica and the Rust side is itself a bug (the Rng constants are
+pinned by `theorem_properties`' seed-stability test).
+
+Usage:  python3 python/tools/leaf_tune_model.py
+"""
+
+MASK64 = (1 << 64) - 1
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+    return state, (z ^ (z >> 31))
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+class Rng:
+    """util::Rng replica (xoshiro256++)."""
+
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK64
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK64, 23) + s[0]) & MASK64
+        t = (s[1] << 17) & MASK64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, bound):
+        # Lemire's method, as in rng.rs.
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            lo = m & MASK64
+            if lo >= bound or lo >= ((1 << 64) - bound) % bound:
+                return m >> 64
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo + 1)
+
+    def digits(self, n, log2_base):
+        base = 1 << log2_base
+        v = [self.below(base) for _ in range(n)]
+        if n > 0 and v[n - 1] == 0:
+            v[n - 1] = self.range(1, base - 1)
+        return v
+
+
+class Ops:
+    def __init__(self):
+        self.n = 0
+
+    def charge(self, k):
+        self.n += k
+
+
+def mul_school(a, b, base_log2, ops):
+    """Closed-form charge 2·|a|·|b|; exact product digits."""
+    na, nb = len(a), len(b)
+    ops.charge(2 * na * nb)
+    mask = (1 << base_log2) - 1
+    out = [0] * (na + nb)
+    for i, ai in enumerate(a):
+        if ai == 0:
+            continue
+        carry = 0
+        for j, bj in enumerate(b):
+            t = out[i + j] + ai * bj + carry
+            out[i + j] = t & mask
+            carry = t >> base_log2
+        k = i + nb
+        while carry != 0:
+            t = out[k] + (carry & mask)
+            out[k] = t & mask
+            carry = (carry >> base_log2) + (t >> base_log2)
+            k += 1
+    return out
+
+
+def cmp_digits(a, b, ops):
+    w = len(a)
+    for i in range(w - 1, -1, -1):
+        ops.charge(1)
+        if a[i] != b[i]:
+            return 1 if a[i] > b[i] else -1
+    return 0
+
+
+def sub_with_borrow(a, b, borrow_in, base_log2, ops):
+    ops.charge(len(a))
+    s = 1 << base_log2
+    out = []
+    borrow = borrow_in
+    for x, y in zip(a, b):
+        t = x - y - borrow
+        if t < 0:
+            t += s
+            borrow = 1
+        else:
+            borrow = 0
+        out.append(t)
+    return out, borrow
+
+
+def add_into_width(dst, src, off, base_log2, ops):
+    mask = (1 << base_log2) - 1
+    carry = 0
+    i = 0
+    while i < len(src) or carry != 0:
+        d = off + i
+        add = src[i] if i < len(src) else 0
+        t = dst[d] + add + carry
+        dst[d] = t & mask
+        carry = t >> base_log2
+        i += 1
+    ops.charge(i)
+
+
+def sub_into_width(dst, src, off, base_log2, ops):
+    s = 1 << base_log2
+    borrow = 0
+    i = 0
+    while i < len(src) or borrow != 0:
+        d = off + i
+        sub = src[i] if i < len(src) else 0
+        t = dst[d] - sub - borrow
+        if t < 0:
+            t += s
+            borrow = 1
+        else:
+            borrow = 0
+        dst[d] = t
+        i += 1
+    ops.charge(i)
+
+
+def abs_diff(x, y, base_log2, ops):
+    c = cmp_digits(x, y, ops)
+    if c == 0:
+        return 0, [0] * len(x)
+    if c > 0:
+        d, _ = sub_with_borrow(x, y, 0, base_log2, ops)
+        return 1, d
+    d, _ = sub_with_borrow(y, x, 0, base_log2, ops)
+    return -1, d
+
+
+def slim(a, b, base_log2, ops, leaf):
+    n = len(a)
+    if n <= max(leaf, 1):
+        return mul_school(a, b, base_log2, ops)
+    h = n // 2
+    a0, a1, b0, b1 = a[:h], a[h:], b[:h], b[h:]
+    c0 = slim(a0, b0, base_log2, ops, leaf)
+    c1 = slim(a0, b1, base_log2, ops, leaf)
+    c2 = slim(a1, b0, base_log2, ops, leaf)
+    c3 = slim(a1, b1, base_log2, ops, leaf)
+    out = [0] * (2 * n)
+    out[: 2 * h] = c0
+    add_into_width(out, c1, h, base_log2, ops)
+    add_into_width(out, c2, h, base_log2, ops)
+    add_into_width(out, c3, n, base_log2, ops)
+    return out
+
+
+def skim(a, b, base_log2, ops, leaf):
+    n = len(a)
+    if n <= max(leaf, 1):
+        return mul_school(a, b, base_log2, ops)
+    h = n // 2
+    a0, a1, b0, b1 = a[:h], a[h:], b[:h], b[h:]
+    fa, ad = abs_diff(a0, a1, base_log2, ops)
+    fb, bd = abs_diff(b1, b0, base_log2, ops)
+    c0 = skim(a0, b0, base_log2, ops, leaf)
+    c2 = skim(a1, b1, base_log2, ops, leaf)
+    cp = skim(ad, bd, base_log2, ops, leaf)
+    sign = fa * fb
+    out = [0] * (2 * n)
+    out[: 2 * h] = c0
+    add_into_width(out, c0, h, base_log2, ops)
+    add_into_width(out, c2, h, base_log2, ops)
+    add_into_width(out, c2, n, base_log2, ops)
+    if sign > 0:
+        add_into_width(out, cp, h, base_log2, ops)
+    elif sign < 0:
+        sub_into_width(out, cp, h, base_log2, ops)
+    return out
+
+
+def value(digits, base_log2):
+    v = 0
+    for d in reversed(digits):
+        v = (v << base_log2) | d
+    return v
+
+
+def fact13_bound(n):
+    import math
+
+    return math.ceil(16.0 * n ** (math.log2(3)))
+
+
+def fact10_bound(n):
+    return 8 * n * n
+
+
+def main():
+    # --- Pinned-test margins at the applied widths -------------------
+    print("== skim_op_bound_fact13 (seed 0x513, base 2^16) ==")
+    rng = Rng(0x513)
+    for n in (16, 64, 256, 1024):
+        a = rng.digits(n, 16)
+        b = rng.digits(n, 16)
+        for leaf in (64, 128):
+            ops = Ops()
+            c = skim(a, b, 16, ops, leaf)
+            assert value(c, 16) == value(a, 16) * value(b, 16)
+            bound = fact13_bound(n)
+            ok = "OK " if ops.n <= bound else "FAIL"
+            print(f"  n={n:5d} leaf={leaf:4d}: T={ops.n:9d}  bound={bound:9d}  {ok}")
+
+    print("== slim_op_bound_fact10 (seed 0x510, base 2^16) ==")
+    rng = Rng(0x510)
+    for n in (16, 64, 256):
+        a = rng.digits(n, 16)
+        b = rng.digits(n, 16)
+        for leaf in (64, 256):
+            ops = Ops()
+            c = slim(a, b, 16, ops, leaf)
+            assert value(c, 16) == value(a, 16) * value(b, 16)
+            bound = fact10_bound(n)
+            ok = "OK " if ops.n <= bound else "FAIL"
+            print(f"  n={n:5d} leaf={leaf:4d}: T={ops.n:9d}  bound={bound:9d}  {ok}")
+
+    print("== skim_cheaper_than_slim_at_scale (seed 0x333, n=1024) ==")
+    rng = Rng(0x333)
+    a = rng.digits(1024, 16)
+    b = rng.digits(1024, 16)
+    o_slim, o_skim = Ops(), Ops()
+    slim(a, b, 16, o_slim, 256)
+    skim(a, b, 16, o_skim, 128)
+    print(f"  slim(leaf 256)={o_slim.n}  skim(leaf 128)={o_skim.n}  "
+          f"{'OK' if o_skim.n < o_slim.n else 'FAIL'}")
+
+    print("== skim_charges sanity (seed 0x51C): tiny-leaf >= std/4 ==")
+    rng = Rng(0x51C)
+    for n in (64, 256):
+        a = rng.digits(n, 16)
+        b = rng.digits(n, 16)
+        o_std, o_tiny = Ops(), Ops()
+        p_std = skim(a, b, 16, o_std, 128)
+        p_tiny = skim(a, b, 16, o_tiny, 4)
+        assert p_std == p_tiny
+        ok = "OK" if o_tiny.n >= o_std.n // 4 else "FAIL"
+        print(f"  n={n}: std(128)={o_std.n} tiny(4)={o_tiny.n}  {ok}")
+
+    # --- DESIGN.md re-bless record: before/after charged T ----------
+    print("== re-tune before/after charged T (seed 0x1EAF operands) ==")
+    for log2 in (4, 8, 16):
+        for n in (1024, 4096):
+            rng = Rng(0x1EAF ^ n ^ log2)
+            a = rng.digits(n, log2)
+            b = rng.digits(n, log2)
+            o_sk_old, o_sk_new = Ops(), Ops()
+            skim(a, b, log2, o_sk_old, 64)
+            skim(a, b, log2, o_sk_new, 128)
+            o_sl_old, o_sl_new = Ops(), Ops()
+            slim(a, b, log2, o_sl_old, 64)
+            slim(a, b, log2, o_sl_new, 256)
+            print(
+                f"  base=2^{log2:<2d} n={n:5d}  "
+                f"skim T 64->{128}: {o_sk_old.n} -> {o_sk_new.n} "
+                f"({100.0 * o_sk_new.n / o_sk_old.n - 100:+.1f}%)   "
+                f"slim T 64->{256}: {o_sl_old.n} -> {o_sl_new.n} "
+                f"({100.0 * o_sl_new.n / o_sl_old.n - 100:+.1f}%)"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,14 @@
-//! Packed-limb kernel micro-benchmarks: the digit-level source of the
-//! engine-level wall-clock wins (PR 5). Cases pair the packed dispatch
-//! path against the digit-at-a-time oracle at identical charges —
-//! `copmul bench --json` records the same comparison into BENCH_5.json;
-//! this binary is the quick `make bench` view.
+//! Kernel-ladder micro-benchmarks: the digit-level source of the
+//! engine-level wall-clock wins. Cases time every ladder rung the host
+//! supports (reference → packed64 → generic → simd) at identical model
+//! charges — `copmul bench --json` records the same comparison into
+//! BENCH_6.json; this binary is the quick `make bench` view.
 
 #[path = "bench_util.rs"]
 mod bench_util;
 
 use bench_util::{report, time_it};
-use copmul::bignum::{
-    add_with_carry, mul_school, mul_school_reference, skim_with_leaf, Base, Ops,
-};
+use copmul::bignum::{add_with_carry, arch, skim_with_leaf, slim_with_leaf, Base, Ops};
 use copmul::util::Rng;
 
 fn main() {
@@ -21,20 +19,15 @@ fn main() {
             let a = rng.digits(n, log2);
             let b = rng.digits(n, log2);
             let case = format!("mul n={n} base=2^{log2}");
-            let (min, mean) = time_it(1, 5, || {
-                let mut ops = Ops::default();
-                mul_school(&a, &b, base, &mut ops)
-            });
-            report("kernels/packed", &case, min, mean, "");
-            let (min, mean) = time_it(1, 5, || {
-                let mut ops = Ops::default();
-                mul_school_reference(&a, &b, base, &mut ops)
-            });
-            report("kernels/scalar", &case, min, mean, "");
+            for rung in arch::ladder() {
+                let (min, mean) = time_it(1, 5, || (rung.mul)(&a, &b, base));
+                report(&format!("kernels/{}", rung.name), &case, min, mean, "");
+            }
         }
     }
 
-    // Additive kernels at the default base.
+    // Additive kernels at the default base (identical across the fast
+    // rungs — carry chains are serial — so time the dispatched path).
     let base = Base::default();
     for &w in &[64usize, 1024, 65536] {
         let a = rng.digits(w, base.log2);
@@ -47,20 +40,26 @@ fn main() {
         report("kernels/add", &case, min, mean, "");
     }
 
-    // Leaf-width sweep: the wall-clock crossover the LEAF_WIDTH re-tune
-    // note records (model constant stays 64; see bignum/mul.rs).
+    // Leaf-width sweep around the applied per-base `leaf_widths` table
+    // (skim ships 128, Fact-13-capped; slim ships 256 at base 2^16 —
+    // see bignum/mul.rs and DESIGN.md "Leaf-width re-tune").
     let n = 4096;
     let a = rng.digits(n, base.log2);
     let b = rng.digits(n, base.log2);
-    for &lw in &[16usize, 32, 64, 128, 256, 512] {
-        let mut charged = 0u64;
-        let case = format!("skim n={n} leaf={lw}");
-        let (min, mean) = time_it(1, 3, || {
-            let mut ops = Ops::default();
-            let out = skim_with_leaf(&a, &b, base, &mut ops, lw);
-            charged = ops.get();
-            out
-        });
-        report("kernels/leaf-sweep", &case, min, mean, &format!("T={charged}"));
+    for &lw in &[16usize, 32, 64, 128, 256, 512, 1024] {
+        for (scheme, f) in [
+            ("slim", slim_with_leaf as fn(&[u32], &[u32], Base, &mut Ops, usize) -> Vec<u32>),
+            ("skim", skim_with_leaf),
+        ] {
+            let mut charged = 0u64;
+            let case = format!("{scheme} n={n} leaf={lw}");
+            let (min, mean) = time_it(1, 3, || {
+                let mut ops = Ops::default();
+                let out = f(&a, &b, base, &mut ops, lw);
+                charged = ops.get();
+                out
+            });
+            report("kernels/leaf-sweep", &case, min, mean, &format!("T={charged}"));
+        }
     }
 }

@@ -63,9 +63,11 @@ impl LeafMultiplier for SkimLeaf {
 }
 
 /// Iterative schoolbook (operand scanning): same O(n²) op count as SLIM
-/// with a smaller constant. Runs on the packed-limb kernel for wide
-/// operands (several digits per `u64` limb — `bignum::packed`), which
-/// makes it the fastest pure-Rust leaf below the Karatsuba crossover.
+/// with a smaller constant. Runs on the active rung of the kernel
+/// ladder for wide operands (`bignum::arch` — u128 or SIMD column
+/// accumulation, dispatched once per process), which makes it the
+/// fastest pure-Rust leaf below the Karatsuba crossover. Scratch is
+/// leaf-width-independent, so leaf choice never moves the M ledger.
 pub struct SchoolLeaf;
 
 impl LeafMultiplier for SchoolLeaf {

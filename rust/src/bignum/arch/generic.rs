@@ -1,0 +1,137 @@
+//! Rung 2 of the kernel ladder: u128 carry-save column accumulation
+//! over *full* 64-bit limbs — the portable fast kernel, selected by
+//! default on hosts without a SIMD rung.
+//!
+//! PR 5's packed kernel (`bignum::packed`, rung 1) caps limbs at 32
+//! bits so the schoolbook column update fits `u64`. Widening the column
+//! update to `u128` removes that cap: `m = ⌊64 / k⌋` digits per limb,
+//! limb base `B = 2^(m·k) ≤ 2^64`, and the update
+//! `out[i+j] + ai·bj + carry ≤ B² − 1 ≤ u128::MAX` stays exact. That is
+//! 4× fewer hardware multiplies than the 32-bit packed layout at every
+//! base (16× fewer than the digit loop at base 2^16, 256× at 2^4), for
+//! one widening `u64×u64→u128` multiply each — the carry-save shape of
+//! SNIPPETS 1–2.
+//!
+//! Add/sub have no analogous win over the 62-bit packed layout (carry
+//! chains are serial either way), so this rung reuses `packed`'s
+//! additive kernels and only replaces the multiplier.
+//!
+//! Charges nothing; callers charge closed form (DESIGN.md, decision 11).
+
+use super::reference;
+use crate::bignum::packed::{self, pack_digits, unpack_digits, PACKED_MUL_MIN};
+use crate::bignum::Base;
+
+/// Digits per limb in the u128-column layout: `⌊64 / k⌋`.
+#[inline]
+pub fn digits_per_limb(base: Base) -> usize {
+    (64 / base.log2).max(1) as usize
+}
+
+/// Exact schoolbook product via full 64-bit limbs and u128 columns.
+/// Bit-identical to [`reference::mul`]; falls back to it below the
+/// pack/unpack amortization threshold.
+pub fn mul(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
+    let (na, nb) = (a.len(), b.len());
+    if na.min(nb) < PACKED_MUL_MIN {
+        return reference::mul(a, b, base);
+    }
+    let k = base.log2;
+    let m = digits_per_limb(base);
+    let bits = m as u32 * k;
+    let mask: u128 = if bits == 64 {
+        u64::MAX as u128
+    } else {
+        (1u128 << bits) - 1
+    };
+    let la = pack_digits(a, m, k);
+    let lb = pack_digits(b, m, k);
+    let mut out = vec![0u64; la.len() + lb.len()];
+    for (i, &ai) in la.iter().enumerate() {
+        if ai == 0 {
+            // Physical skip only — the model charge is closed-form at
+            // the call site, so a zero row costs the same either way.
+            continue;
+        }
+        let ai = ai as u128;
+        let mut carry: u128 = 0;
+        for (j, &bj) in lb.iter().enumerate() {
+            // out[i+j], carry < B and ai, bj ≤ B − 1 with B ≤ 2^64, so
+            // t ≤ B² − 1 ≤ u128::MAX: exact, no overflow.
+            let t = out[i + j] as u128 + ai * bj as u128 + carry;
+            out[i + j] = (t & mask) as u64;
+            carry = t >> bits;
+        }
+        let mut idx = i + lb.len();
+        // carry < B, so each step adds at most one bit of spill.
+        while carry != 0 {
+            let t = out[idx] as u128 + carry;
+            out[idx] = (t & mask) as u64;
+            carry = t >> bits;
+            idx += 1;
+        }
+    }
+    unpack_digits(&out, m, k, na + nb)
+}
+
+/// Fixed-width add for the fast rungs: the 62-bit packed adder when the
+/// width amortizes packing, the scalar loop otherwise. `carry_in` must
+/// be 0 or 1 (the dispatcher's contract; `bignum::core` routes larger
+/// carries straight to the reference loop).
+pub fn add(a: &[u32], b: &[u32], carry_in: u32, base: Base) -> (Vec<u32>, u32) {
+    debug_assert!(carry_in <= 1);
+    if packed::add_viable(base, a.len()) {
+        packed::add_packed(a, b, carry_in, base)
+    } else {
+        reference::add(a, b, carry_in, base)
+    }
+}
+
+/// Fixed-width sub for the fast rungs; see [`add`].
+pub fn sub(a: &[u32], b: &[u32], borrow_in: u32, base: Base) -> (Vec<u32>, u32) {
+    debug_assert!(borrow_in <= 1);
+    if packed::add_viable(base, a.len()) {
+        packed::sub_packed(a, b, borrow_in, base)
+    } else {
+        reference::sub(a, b, borrow_in, base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_fills_the_limb() {
+        assert_eq!(digits_per_limb(Base::new(16)), 4);
+        assert_eq!(digits_per_limb(Base::new(8)), 8);
+        assert_eq!(digits_per_limb(Base::new(4)), 16);
+        assert_eq!(digits_per_limb(Base::new(5)), 12);
+    }
+
+    #[test]
+    fn all_max_operands_exact() {
+        // A = s^12 − 1, B = s^9 − 1: A·B + A + B = s^21 − 1, so adding
+        // the operands digit-wise into the product must give all-max
+        // digits with no carry out (checks every u128 carry path).
+        let base = Base::new(16);
+        let a = vec![0xFFFFu32; 12];
+        let b = vec![0xFFFFu32; 9];
+        let mut acc = mul(&a, &b, base);
+        let mut carry = 0u64;
+        for (i, d) in acc.iter_mut().enumerate() {
+            let mut add = 0u64;
+            if i < 12 {
+                add += 0xFFFF;
+            }
+            if i < 9 {
+                add += 0xFFFF;
+            }
+            let t = *d as u64 + add + carry;
+            *d = (t & 0xFFFF) as u32;
+            carry = t >> 16;
+        }
+        assert_eq!(carry, 0);
+        assert!(acc.iter().all(|&d| d == 0xFFFF), "A·B + A + B != s^21 − 1");
+    }
+}

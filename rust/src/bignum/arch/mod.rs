@@ -1,0 +1,183 @@
+//! The kernel ladder: one dispatch table routing the sequential digit
+//! kernels (`mul_school` / `add_with_carry` / `sub_with_borrow`) to the
+//! fastest exact implementation the host supports.
+//!
+//! Rungs, slowest to fastest:
+//!
+//! | rung        | layout                | hw multiplies (base 2^16) |
+//! |-------------|-----------------------|---------------------------|
+//! | `reference` | one digit at a time   | n²                        |
+//! | `packed64`  | 32-bit limbs, u64 cols| n²/4                      |
+//! | `generic`   | 64-bit limbs, u128 cols| n²/16                    |
+//! | `simd`      | 32-bit limbs, SIMD cols| n²/4, 4 per instruction  |
+//!
+//! Every rung computes the *same integers* — each is pinned
+//! bit-identical to the `reference` oracle by the ladder-parity suite
+//! (`tests/packed_kernels.rs`). None of them touch the cost ledger: the
+//! model's digit-op counts are charged in closed form by the callers in
+//! `bignum::{core, mul}`, so which rung runs is invisible to every
+//! (T, BW, L, M) triple — the zero-diff invariant of DESIGN.md
+//! decision 11, now extended to the whole ladder (decision 12).
+//!
+//! Selection happens **once**, at first use, via [`active`]:
+//! `COPMUL_KERNEL={reference,packed64,generic,simd}` forces a rung
+//! (CI's `kernels` matrix pins each one); otherwise runtime CPU-feature
+//! detection picks `simd` where AVX2/NEON is present and `generic`
+//! elsewhere. Runtime detection (not compile-time `target_feature`
+//! cfg) keeps one binary correct and fast across a heterogeneous
+//! cluster — the deployment model the paper's machine abstraction
+//! assumes — at the cost of a single predictable branch per leaf call,
+//! amortized over entire leaf multiplications.
+
+pub mod generic;
+pub mod reference;
+pub mod simd;
+
+use super::{packed, Base};
+use std::sync::OnceLock;
+
+/// Identity of a ladder rung.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Digit-at-a-time scalar loops (the oracle).
+    Reference,
+    /// PR 5's 32-bit packed limbs with u64 column arithmetic.
+    Packed64,
+    /// Full 64-bit limbs with u128 column arithmetic.
+    Generic,
+    /// AVX2/NEON split-column accumulation (degrades to generic).
+    Simd,
+}
+
+/// One rung of the ladder: exact, charge-free kernels for the three
+/// dispatched digit operations. `add`/`sub` take the incoming
+/// carry/borrow (0 or 1) as their third argument.
+pub struct MulKernel {
+    pub kind: KernelKind,
+    pub name: &'static str,
+    pub mul: fn(&[u32], &[u32], Base) -> Vec<u32>,
+    pub add: fn(&[u32], &[u32], u32, Base) -> (Vec<u32>, u32),
+    pub sub: fn(&[u32], &[u32], u32, Base) -> (Vec<u32>, u32),
+}
+
+/// PR 5's packed kernel as a rung: viability-gated exactly as the old
+/// `mul_school` dispatch was, falling back to the oracle loop.
+fn packed64_mul(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
+    if packed::mul_viable(base, a.len().min(b.len())) {
+        packed::mul_packed(a, b, base)
+    } else {
+        reference::mul(a, b, base)
+    }
+}
+
+static REFERENCE: MulKernel = MulKernel {
+    kind: KernelKind::Reference,
+    name: "reference",
+    mul: reference::mul,
+    add: reference::add,
+    sub: reference::sub,
+};
+
+static PACKED64: MulKernel = MulKernel {
+    kind: KernelKind::Packed64,
+    name: "packed64",
+    mul: packed64_mul,
+    add: generic::add,
+    sub: generic::sub,
+};
+
+static GENERIC: MulKernel = MulKernel {
+    kind: KernelKind::Generic,
+    name: "generic",
+    mul: generic::mul,
+    add: generic::add,
+    sub: generic::sub,
+};
+
+static SIMD: MulKernel = MulKernel {
+    kind: KernelKind::Simd,
+    name: "simd",
+    mul: simd::mul,
+    add: generic::add,
+    sub: generic::sub,
+};
+
+/// Every rung this host can actually exercise, slowest first. The
+/// `simd` rung is listed only where a SIMD feature is detected (its
+/// entry points still *work* elsewhere — they degrade to `generic` —
+/// but listing them would make the parity suite silently re-test the
+/// generic rung and report coverage it does not have).
+pub fn ladder() -> Vec<&'static MulKernel> {
+    let mut rungs = vec![&REFERENCE, &PACKED64, &GENERIC];
+    if simd::available() {
+        rungs.push(&SIMD);
+    }
+    rungs
+}
+
+/// Resolve a rung by forced name (`COPMUL_KERNEL`), or `None` for the
+/// auto policy: `simd` where detected, `generic` otherwise. Forcing
+/// `simd` on a host without the feature is allowed — the rung degrades
+/// per call — so CI can pin every matrix value on any runner.
+pub fn select(forced: Option<&str>) -> Result<&'static MulKernel, String> {
+    match forced {
+        None => Ok(if simd::available() { &SIMD } else { &GENERIC }),
+        Some("reference") => Ok(&REFERENCE),
+        Some("packed64") => Ok(&PACKED64),
+        Some("generic") => Ok(&GENERIC),
+        Some("simd") => Ok(&SIMD),
+        Some(other) => Err(format!(
+            "COPMUL_KERNEL=`{other}` is not a ladder rung \
+             (expected reference, packed64, generic, or simd)"
+        )),
+    }
+}
+
+/// The process-wide active rung, chosen once at first use from the
+/// `COPMUL_KERNEL` environment variable (unset ⇒ auto detection). An
+/// invalid name panics loudly — a silently ignored pin would defeat the
+/// CI kernel matrix.
+pub fn active() -> &'static MulKernel {
+    static ACTIVE: OnceLock<&'static MulKernel> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let forced = std::env::var("COPMUL_KERNEL").ok();
+        select(forced.as_deref()).unwrap_or_else(|e| panic!("{e}"))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_always_contains_the_portable_rungs() {
+        let names: Vec<&str> = ladder().iter().map(|k| k.name).collect();
+        assert_eq!(&names[..3], &["reference", "packed64", "generic"]);
+        assert_eq!(names.len() == 4, simd::available());
+    }
+
+    #[test]
+    fn select_resolves_every_documented_name() {
+        for name in ["reference", "packed64", "generic", "simd"] {
+            assert_eq!(select(Some(name)).unwrap().name, name);
+        }
+        let auto = select(None).unwrap();
+        assert_eq!(
+            auto.kind,
+            if simd::available() {
+                KernelKind::Simd
+            } else {
+                KernelKind::Generic
+            }
+        );
+        assert!(select(Some("avx9000")).is_err());
+    }
+
+    #[test]
+    fn active_is_a_valid_rung() {
+        // Whatever COPMUL_KERNEL says (the CI matrix sets it), the
+        // process-wide rung must be one of the four statics.
+        let a = active();
+        assert!(["reference", "packed64", "generic", "simd"].contains(&a.name));
+    }
+}

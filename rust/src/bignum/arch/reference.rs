@@ -1,0 +1,78 @@
+//! Rung 0 of the kernel ladder: digit-at-a-time scalar loops.
+//!
+//! These are the *oracles* every other rung is pinned against in
+//! `tests/packed_kernels.rs` — one digit per iteration, no packing, no
+//! intrinsics, the loops a direct reading of the paper's §2.1 digit
+//! model produces. They are deliberately boring: any divergence between
+//! a faster rung and this module is a bug in the faster rung.
+//!
+//! Like every rung, these functions charge nothing — the model's
+//! closed-form digit counts are charged by the callers in
+//! `bignum::{core, mul}` (DESIGN.md, decision 11).
+
+use crate::bignum::Base;
+
+/// Schoolbook product, one digit-multiply at a time. Returns the full
+/// `|a| + |b|`-digit product (LSB-first, untrimmed).
+pub fn mul(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
+    let (na, nb) = (a.len(), b.len());
+    let mut out = vec![0u32; na + nb];
+    let mask = base.mask();
+    let log2 = base.log2;
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0 {
+            continue;
+        }
+        let ai = ai as u64;
+        let mut carry = 0u64;
+        for (j, &bj) in b.iter().enumerate() {
+            let t = out[i + j] as u64 + ai * bj as u64 + carry;
+            out[i + j] = (t & mask) as u32;
+            carry = t >> log2;
+        }
+        let mut k = i + nb;
+        while carry != 0 {
+            let t = out[k] as u64 + (carry & mask);
+            out[k] = (t & mask) as u32;
+            carry = (carry >> log2) + (t >> log2);
+            k += 1;
+        }
+    }
+    out
+}
+
+/// Fixed-width sum with incoming carry, one digit per iteration:
+/// `(A + B + carry_in) mod s^w` plus the outgoing carry.
+pub fn add(a: &[u32], b: &[u32], carry_in: u32, base: Base) -> (Vec<u32>, u32) {
+    debug_assert_eq!(a.len(), b.len());
+    let s = base.s();
+    let mut out = Vec::with_capacity(a.len());
+    let mut carry = carry_in as u64;
+    for i in 0..a.len() {
+        let t = a[i] as u64 + b[i] as u64 + carry;
+        carry = t >> base.log2;
+        debug_assert!(carry <= 1);
+        out.push((t & base.mask()) as u32);
+    }
+    debug_assert!(carry < s);
+    (out, carry as u32)
+}
+
+/// Fixed-width difference with incoming borrow, one digit per
+/// iteration: `(A - B - borrow_in) mod s^w` plus the outgoing borrow.
+pub fn sub(a: &[u32], b: &[u32], borrow_in: u32, base: Base) -> (Vec<u32>, u32) {
+    debug_assert_eq!(a.len(), b.len());
+    let mut out = Vec::with_capacity(a.len());
+    let mut borrow = borrow_in as i64;
+    for i in 0..a.len() {
+        let mut t = a[i] as i64 - b[i] as i64 - borrow;
+        if t < 0 {
+            t += base.s() as i64;
+            borrow = 1;
+        } else {
+            borrow = 0;
+        }
+        out.push(t as u32);
+    }
+    (out, borrow as u32)
+}

@@ -1,0 +1,302 @@
+//! Rung 3 of the kernel ladder: feature-gated SIMD column
+//! accumulation — AVX2 on `x86_64`, NEON on `aarch64` — behind runtime
+//! CPU-feature detection.
+//!
+//! Shape: operands are packed into 32-bit limbs (`m = ⌊32 / k⌋` digits
+//! each, the same `Layout::for_mul` as the u64 packed rung), and every
+//! limb-product is accumulated *positionally* into per-column lanes —
+//! no carry propagation inside the hot loop at all. A 32×32→64 lane
+//! product does not leave headroom to sum even two products in a u64
+//! lane, so each product is split into its 32-bit halves and summed
+//! into two parallel column arrays (`acc_lo`, `acc_hi`); with fewer
+//! than 2^31 limbs per operand neither array can overflow. One scalar
+//! pass then normalizes columns to limbs in base `2^(m·k)` (u128
+//! intermediate) and unpacks to digits.
+//!
+//! Both ISA bodies are the same loop; only the lane width differs
+//! (AVX2: 4 limb-products per multiply, NEON: 2). Hosts with neither
+//! feature degrade to the generic u128 rung — `mul` is total on every
+//! target, which is what lets `COPMUL_KERNEL=simd` pin this rung in CI
+//! without a hardware matrix.
+//!
+//! Charges nothing; callers charge closed form (DESIGN.md, decision 11).
+
+use super::{generic, reference};
+use crate::bignum::packed::{pack_digits, unpack_digits, Layout, PACKED_MUL_MIN};
+use crate::bignum::Base;
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+#[cfg(target_arch = "aarch64")]
+fn detect() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect() -> bool {
+    false
+}
+
+/// Whether this host has a real SIMD rung (checked once per call site;
+/// the stdlib caches the cpuid/auxval probe).
+pub fn available() -> bool {
+    detect()
+}
+
+/// The instruction set the SIMD rung would run on this host.
+pub fn isa() -> &'static str {
+    if !available() {
+        return "none";
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        "avx2"
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "neon"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "none"
+    }
+}
+
+/// Exact schoolbook product via SIMD column accumulation. Bit-identical
+/// to [`reference::mul`]; degrades to [`generic::mul`] when the host
+/// has no detected SIMD feature, and to the reference loop below the
+/// packing threshold.
+pub fn mul(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
+    if a.len().min(b.len()) < PACKED_MUL_MIN {
+        return reference::mul(a, b, base);
+    }
+    #[cfg(target_arch = "x86_64")]
+    if detect() {
+        // SAFETY: AVX2 presence was just verified at runtime.
+        return mul_columns(a, b, base, |la, lb, lo, hi| unsafe {
+            x86::accumulate(la, lb, lo, hi)
+        });
+    }
+    #[cfg(target_arch = "aarch64")]
+    if detect() {
+        // SAFETY: NEON presence was just verified at runtime.
+        return mul_columns(a, b, base, |la, lb, lo, hi| unsafe {
+            neon::accumulate(la, lb, lo, hi)
+        });
+    }
+    generic::mul(a, b, base)
+}
+
+/// The ISA-independent harness: pack to 32-bit limbs, let `accumulate`
+/// fill the split column arrays, normalize, unpack. `accumulate` must
+/// add, for every limb pair `(i, j)`, the low and high 32-bit halves of
+/// `la[i]·lb[j]` into `acc_lo[i+j]` / `acc_hi[i+j]` — nothing more; the
+/// harness owns all carry logic, so lane width is unobservable.
+#[allow(dead_code)] // unused only on targets with neither SIMD ISA
+fn mul_columns<F>(a: &[u32], b: &[u32], base: Base, accumulate: F) -> Vec<u32>
+where
+    F: FnOnce(&[u32], &[u32], &mut [u64], &mut [u64]),
+{
+    let (na, nb) = (a.len(), b.len());
+    let k = base.log2;
+    let lay = Layout::for_mul(base);
+    let m = lay.digits_per_limb;
+    let bits = lay.limb_bits; // ≤ 32
+    debug_assert!(
+        na.min(nb) < (1usize << 31),
+        "split column accumulators require < 2^31 terms per column"
+    );
+    // Mul-layout limb values are < 2^32: lossless as u32 lanes.
+    let la: Vec<u32> = pack_digits(a, m, k).iter().map(|&l| l as u32).collect();
+    let lb: Vec<u32> = pack_digits(b, m, k).iter().map(|&l| l as u32).collect();
+    let cols = la.len() + lb.len();
+    let mut acc_lo = vec![0u64; cols];
+    let mut acc_hi = vec![0u64; cols];
+    accumulate(&la, &lb, &mut acc_lo, &mut acc_hi);
+    // Normalize columns to base-2^bits limbs. Column c's true value is
+    // acc_lo[c] + 2^32·acc_hi[c] (each ≤ 2^63), so the running total
+    // fits u128 with room to spare.
+    let mask: u128 = (1u128 << bits) - 1;
+    let mut limbs = Vec::with_capacity(cols);
+    let mut carry: u128 = 0;
+    for (&lo, &hi) in acc_lo.iter().zip(&acc_hi) {
+        let t = carry + lo as u128 + ((hi as u128) << 32);
+        limbs.push((t & mask) as u64);
+        carry = t >> bits;
+    }
+    debug_assert_eq!(carry, 0, "product overflows its column window");
+    unpack_digits(&limbs, m, k, na + nb)
+}
+
+/// Scalar lane body — the exact arithmetic each SIMD lane performs, one
+/// limb-product at a time. Used by both ISA modules for ragged tails
+/// and by unit tests as the any-host oracle for `mul_columns`.
+#[allow(dead_code)] // unused only on targets with neither SIMD ISA
+#[inline]
+fn accumulate_tail(ai: u32, lb: &[u32], from: usize, col0: &mut [u64], col1: &mut [u64]) {
+    for (j, &bj) in lb.iter().enumerate().skip(from) {
+        let p = ai as u64 * bj as u64;
+        col0[j] += p & 0xFFFF_FFFF;
+        col1[j] += p >> 32;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_add_epi64, _mm256_and_si256, _mm256_cvtepu32_epi64,
+        _mm256_loadu_si256, _mm256_mul_epu32, _mm256_set1_epi64x, _mm256_srli_epi64,
+        _mm256_storeu_si256, _mm_loadu_si128,
+    };
+
+    /// AVX2 column accumulation: four limb-products per `vpmuludq`,
+    /// split into halves and added lane-wise into the column arrays.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn accumulate(la: &[u32], lb: &[u32], acc_lo: &mut [u64], acc_hi: &mut [u64]) {
+        let mask32 = _mm256_set1_epi64x(0xFFFF_FFFF);
+        let lanes = lb.len() & !3;
+        for (i, &ai) in la.iter().enumerate() {
+            if ai == 0 {
+                // Physical skip only; charges are closed-form upstream.
+                continue;
+            }
+            let av = _mm256_set1_epi64x(ai as i64);
+            let mut j = 0;
+            while j < lanes {
+                // Zero-extend four u32 limbs to u64 lanes; vpmuludq
+                // multiplies the low 32 bits of each lane: exact
+                // 32×32→64 products.
+                let bv =
+                    _mm256_cvtepu32_epi64(_mm_loadu_si128(lb.as_ptr().add(j) as *const __m128i));
+                let prod = _mm256_mul_epu32(av, bv);
+                let lo = _mm256_and_si256(prod, mask32);
+                let hi = _mm256_srli_epi64::<32>(prod);
+                let p_lo = acc_lo.as_mut_ptr().add(i + j) as *mut __m256i;
+                let lo_sum = _mm256_add_epi64(_mm256_loadu_si256(p_lo as *const _), lo);
+                _mm256_storeu_si256(p_lo, lo_sum);
+                let p_hi = acc_hi.as_mut_ptr().add(i + j) as *mut __m256i;
+                let hi_sum = _mm256_add_epi64(_mm256_loadu_si256(p_hi as *const _), hi);
+                _mm256_storeu_si256(p_hi, hi_sum);
+                j += 4;
+            }
+            super::accumulate_tail(ai, lb, lanes, &mut acc_lo[i..], &mut acc_hi[i..]);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::{
+        vaddq_u64, vandq_u64, vdup_n_u32, vdupq_n_u64, vld1_u32, vld1q_u64, vmull_u32,
+        vshrq_n_u64, vst1q_u64,
+    };
+
+    /// NEON column accumulation: two limb-products per `umull`, split
+    /// into halves and added lane-wise into the column arrays.
+    ///
+    /// # Safety
+    /// Caller must have verified NEON support at runtime.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn accumulate(la: &[u32], lb: &[u32], acc_lo: &mut [u64], acc_hi: &mut [u64]) {
+        let mask32 = vdupq_n_u64(0xFFFF_FFFF);
+        let lanes = lb.len() & !1;
+        for (i, &ai) in la.iter().enumerate() {
+            if ai == 0 {
+                // Physical skip only; charges are closed-form upstream.
+                continue;
+            }
+            let av = vdup_n_u32(ai);
+            let mut j = 0;
+            while j < lanes {
+                let prod = vmull_u32(av, vld1_u32(lb.as_ptr().add(j)));
+                let lo = vandq_u64(prod, mask32);
+                let hi = vshrq_n_u64::<32>(prod);
+                let p_lo = acc_lo.as_mut_ptr().add(i + j);
+                vst1q_u64(p_lo, vaddq_u64(vld1q_u64(p_lo as *const u64), lo));
+                let p_hi = acc_hi.as_mut_ptr().add(i + j);
+                vst1q_u64(p_hi, vaddq_u64(vld1q_u64(p_hi as *const u64), hi));
+                j += 2;
+            }
+            super::accumulate_tail(ai, lb, lanes, &mut acc_lo[i..], &mut acc_hi[i..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Any-host check of the harness + lane arithmetic: the scalar lane
+    /// body drives `mul_columns` and must reproduce the reference
+    /// product exactly (the real ISA lanes perform the same split).
+    #[test]
+    fn column_harness_matches_reference() {
+        let mut rng = Rng::new(0x51D0);
+        for &log2 in &[4u32, 8, 16] {
+            let base = Base::new(log2);
+            for &(na, nb) in &[(8usize, 8usize), (33, 17), (64, 9)] {
+                let a = rng.digits(na, log2);
+                let b = rng.digits(nb, log2);
+                let got = mul_columns(&a, &b, base, |la, lb, lo, hi| {
+                    for (i, &ai) in la.iter().enumerate() {
+                        accumulate_tail(ai, lb, 0, &mut lo[i..], &mut hi[i..]);
+                    }
+                });
+                assert_eq!(got, reference::mul(&a, &b, base), "na={na} nb={nb} k={log2}");
+            }
+        }
+    }
+
+    /// The dispatching entry point must be exact on whatever host runs
+    /// the tests — SIMD lanes where detected, generic degrade elsewhere.
+    #[test]
+    fn simd_mul_matches_reference_on_this_host() {
+        let mut rng = Rng::new(0x51D1);
+        for &log2 in &[4u32, 8, 16] {
+            let base = Base::new(log2);
+            for &(na, nb) in &[(8usize, 8usize), (40, 23), (129, 64), (300, 5)] {
+                let a = rng.digits(na, log2);
+                let b = rng.digits(nb, log2);
+                assert_eq!(
+                    mul(&a, &b, base),
+                    reference::mul(&a, &b, base),
+                    "isa={} na={na} nb={nb} k={log2}",
+                    isa()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_max_operands_exact_through_columns() {
+        // A = s^9 − 1, B = s^5 − 1 at base 2^16: A·B + A + B = s^14 − 1.
+        let base = Base::new(16);
+        let a = vec![0xFFFFu32; 9];
+        let b = vec![0xFFFFu32; 5];
+        let mut acc = mul_columns(&a, &b, base, |la, lb, lo, hi| {
+            for (i, &ai) in la.iter().enumerate() {
+                accumulate_tail(ai, lb, 0, &mut lo[i..], &mut hi[i..]);
+            }
+        });
+        let mut carry = 0u64;
+        for (i, d) in acc.iter_mut().enumerate() {
+            let mut add = 0u64;
+            if i < 9 {
+                add += 0xFFFF;
+            }
+            if i < 5 {
+                add += 0xFFFF;
+            }
+            let t = *d as u64 + add + carry;
+            *d = (t & 0xFFFF) as u32;
+            carry = t >> 16;
+        }
+        assert_eq!(carry, 0);
+        assert!(acc.iter().all(|&d| d == 0xFFFF));
+    }
+}

@@ -5,15 +5,17 @@
 //! leaf multipliers). All routines operate on LSB-first digit slices and
 //! count digit operations.
 //!
-//! Wide operands dispatch physically to the packed-limb kernels in
-//! [`super::packed`] (several digits per `u64` limb) while charging the
-//! model's digit-at-a-time counts — closed form where the count is
+//! Add/sub dispatch physically to the active rung of the kernel ladder
+//! ([`super::arch`] — packed `u64` limbs on every fast rung; carry
+//! chains gain nothing from wider columns) while charging the model's
+//! digit-at-a-time counts — closed form where the count is
 //! data-independent (`add`/`sub`: one op per position), counted exactly
 //! where it is not (`cmp`: scan depth; `add_into_width`: carry-chain
 //! length). The representation is never cost-visible; see DESIGN.md,
-//! decision 11, and the parity suite in `tests/packed_kernels.rs`.
+//! decisions 11–12, and the ladder-parity suite in
+//! `tests/packed_kernels.rs`.
 
-use super::{packed, Base, Ops};
+use super::{arch, packed, Base, Ops};
 use std::cmp::Ordering;
 
 /// Strip trailing (most-significant) zero digits; never shrinks below 1
@@ -49,22 +51,12 @@ pub fn add_with_carry(
 ) -> (Vec<u32>, u32) {
     assert_eq!(a.len(), b.len(), "fixed-width add requires equal widths");
     // One digit-add (+ carry fold) per position — closed form, so the
-    // packed path below never touches the ledger.
+    // kernel rung below never touches the ledger.
     ops.charge(a.len() as u64);
-    if carry_in <= 1 && packed::add_viable(base, a.len()) {
-        return packed::add_packed(a, b, carry_in, base);
+    if carry_in <= 1 {
+        return (arch::active().add)(a, b, carry_in, base);
     }
-    let s = base.s();
-    let mut out = Vec::with_capacity(a.len());
-    let mut carry = carry_in as u64;
-    for i in 0..a.len() {
-        let t = a[i] as u64 + b[i] as u64 + carry;
-        carry = t >> base.log2;
-        debug_assert!(carry <= 1);
-        out.push((t & base.mask()) as u32);
-    }
-    debug_assert!(carry < s);
-    (out, carry as u32)
+    arch::reference::add(a, b, carry_in, base)
 }
 
 /// Fixed-width difference with incoming borrow:
@@ -83,22 +75,10 @@ pub fn sub_with_borrow(
     assert_eq!(a.len(), b.len(), "fixed-width sub requires equal widths");
     // One digit-subtract (+ borrow fold) per position — closed form.
     ops.charge(a.len() as u64);
-    if borrow_in <= 1 && packed::add_viable(base, a.len()) {
-        return packed::sub_packed(a, b, borrow_in, base);
+    if borrow_in <= 1 {
+        return (arch::active().sub)(a, b, borrow_in, base);
     }
-    let mut out = Vec::with_capacity(a.len());
-    let mut borrow = borrow_in as i64;
-    for i in 0..a.len() {
-        let mut t = a[i] as i64 - b[i] as i64 - borrow;
-        if t < 0 {
-            t += base.s() as i64;
-            borrow = 1;
-        } else {
-            borrow = 0;
-        }
-        out.push(t as u32);
-    }
-    (out, borrow as u32)
+    arch::reference::sub(a, b, borrow_in, base)
 }
 
 /// Compare two equal-width digit vectors as integers.

@@ -14,10 +14,12 @@
 //! are the recursion leaves of COPSIM/COPK.
 //!
 //! The digit model is the *currency*, not the *representation*: wide
-//! kernels execute over packed `u64` limbs ([`packed`]) while charging
-//! the digit-at-a-time counts exactly, so the physical layout is never
-//! visible in any ledger (DESIGN.md, decision 11).
+//! kernels execute over packed limbs and SIMD lanes (the kernel ladder
+//! in [`arch`], dispatched once per process) while charging the
+//! digit-at-a-time counts exactly, so the physical layout is never
+//! visible in any ledger (DESIGN.md, decisions 11–12).
 
+pub mod arch;
 pub mod convert;
 pub mod core;
 pub mod mul;
@@ -26,7 +28,10 @@ pub mod packed;
 pub use self::core::{
     add_into_width, add_with_carry, cmp_digits, normalized_len, sub_with_borrow, trim,
 };
-pub use self::mul::{mul_school, mul_school_reference, skim, skim_with_leaf, slim, slim_with_leaf};
+pub use self::mul::{
+    leaf_widths, mul_school, mul_school_reference, skim, skim_with_leaf, slim, slim_with_leaf,
+    LeafWidths,
+};
 pub use convert::{from_u128, parse_hex, repack_base, to_hex, to_u128};
 
 /// Number base descriptor: `s = 2^log2`, one digit per memory word.

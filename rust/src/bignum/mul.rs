@@ -1,12 +1,12 @@
 //! Sequential integer multiplication: the recursion leaves of COPSIM/COPK.
 //!
 //! * [`mul_school`] — iterative schoolbook. Physically it dispatches to
-//!   the packed-limb kernel ([`super::packed`]) for wide operands —
-//!   several digits per `u64` limb, `m²` fewer hardware multiplies —
+//!   the active rung of the kernel ladder ([`super::arch`]) — packed
+//!   limbs, u128 columns, or SIMD columns, selected once per process —
 //!   while charging the model's exact digit-at-a-time count in closed
 //!   form (`2·|a|·|b|`), so the ledger never sees the representation.
 //!   The digit-at-a-time loop survives as [`mul_school_reference`], the
-//!   correctness-and-cost oracle the packed path is pinned against.
+//!   correctness-and-cost oracle every rung is pinned against.
 //! * [`slim`] — the paper's recursive long multiplication `SLIM` (§5):
 //!   four half-size subproducts combined by shifted additions. Fact 10
 //!   bounds it by `8n²` digit ops and `8n` words of space.
@@ -18,31 +18,29 @@
 //! (LSB-first, not trimmed) and charge exact digit-operation counts.
 
 use super::core::{add_into_width, add_with_carry, cmp_digits, sub_with_borrow};
-use super::{packed, Base, Ops};
+use super::{arch, Base, Ops};
 use std::cmp::Ordering;
 
 /// Iterative schoolbook product. Exact for any widths. Charges one op
 /// per digit-multiply and one per digit-add of the accumulation —
 /// `2·|a|·|b|` in closed form (identical to the per-row total the
 /// digit-at-a-time loop accrues, zero rows included: the model counts
-/// the worst case). Physically runs the packed-limb kernel when the
-/// operands are wide enough to amortize packing.
+/// the worst case). Physically runs whichever rung of the kernel
+/// ladder ([`arch::active`]) this process selected at startup.
 pub fn mul_school(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
     let (na, nb) = (a.len(), b.len());
     ops.charge(2 * na as u64 * nb as u64);
     if na == 0 || nb == 0 {
         return vec![0u32; na + nb];
     }
-    if packed::mul_viable(base, na.min(nb)) {
-        return packed::mul_packed(a, b, base);
-    }
-    mul_school_kernel(a, b, base)
+    (arch::active().mul)(a, b, base)
 }
 
 /// The digit-at-a-time schoolbook loop with its original per-row
-/// charging — kept verbatim as the oracle `tests/packed_kernels.rs`
-/// pins [`mul_school`] against (products AND exact op totals), and as
-/// the scalar baseline of the `copmul bench` kernel table.
+/// charging — kept as the oracle `tests/packed_kernels.rs` pins every
+/// ladder rung against (products AND exact op totals), and as the
+/// scalar baseline of the `copmul bench` kernel table. The loop itself
+/// lives in [`arch::reference`], rung 0 of the ladder.
 pub fn mul_school_reference(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
     let (na, nb) = (a.len(), b.len());
     if na == 0 || nb == 0 {
@@ -54,52 +52,53 @@ pub fn mul_school_reference(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> 
     for _ in 0..na {
         ops.charge(2 * nb as u64);
     }
-    mul_school_kernel(a, b, base)
+    arch::reference::mul(a, b, base)
 }
 
-/// The shared digit-at-a-time inner loop (no charging).
-fn mul_school_kernel(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
-    let (na, nb) = (a.len(), b.len());
-    let mut out = vec![0u32; na + nb];
-    let mask = base.mask();
-    let log2 = base.log2;
-    for (i, &ai) in a.iter().enumerate() {
-        if ai == 0 {
-            continue;
-        }
-        let ai = ai as u64;
-        let mut carry = 0u64;
-        for (j, &bj) in b.iter().enumerate() {
-            let t = out[i + j] as u64 + ai * bj as u64 + carry;
-            out[i + j] = (t & mask) as u32;
-            carry = t >> log2;
-        }
-        let mut k = i + nb;
-        while carry != 0 {
-            let t = out[k] as u64 + (carry & mask);
-            out[k] = (t & mask) as u32;
-            carry = (carry >> log2) + (t >> log2);
-            k += 1;
-        }
-    }
-    out
+/// The per-base leaf widths of the recursive multipliers — the applied
+/// PR-6 re-tune of what used to be a single `LEAF_WIDTH = 64`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeafWidths {
+    /// Direct-multiply threshold for [`slim`] (and SLIM-shaped leaves).
+    pub slim: usize,
+    /// Direct-multiply threshold for [`skim`] and [`mul_hybrid`].
+    pub skim: usize,
 }
 
-/// Width below which the recursive algorithms multiply directly.
-/// 1 reproduces the paper's recursions exactly; the public entry points
-/// use a small threshold for speed without affecting the op bounds
-/// (direct multiply of w digits charges 2w² <= the recursion's cost).
+/// Width below which the recursive algorithms multiply directly, per
+/// base and per scheme. A width of 1 reproduces the paper's recursions
+/// exactly; larger leaves trade recursion overhead for direct-multiply
+/// work at the full speed of the active kernel rung.
 ///
-/// **Re-tune note (PR 5).** The packed-limb leaves make direct
-/// multiplication ~m² cheaper per digit, which moves the *wall-clock*
-/// crossover upward — `copmul bench --json` emits a `leaf_width_sweep`
-/// table measuring it (run [`slim_with_leaf`]/[`skim_with_leaf`] to
-/// reproduce). The *model* constant stays 64 regardless: the recursion
-/// depth is cost-visible (T changes with it), and this PR's hard
-/// invariant is bit-identical cost triples against the golden grid.
-/// Moving the shipped constant to the measured optimum is a one-line
-/// change plus a golden re-bless in a future PR.
-pub const LEAF_WIDTH: usize = 64;
+/// **Re-tune (PR 6), applied** — PR 5 recorded but deferred this. The
+/// kernel ladder makes a direct leaf multiply `m²`-fold cheaper in
+/// hardware (`m = ⌊64/k⌋` digits per limb on the u128 rung), moving the
+/// wall-clock crossover far above 64, so the leaf scales with `m`:
+///
+/// * `slim = min(64·m, 1024)` → 256 / 512 / 1024 at bases 2^16 / 2^8 /
+///   2^4. SLIM's direct leaf charges `2w² ≤ 8w²` (Fact 10's own leaf
+///   constant), so a bigger slim leaf strictly *lowers* charged T; the
+///   1024 cap only bounds leaf scratch.
+/// * `skim = min(64·m, 128)` → 128 at every base. Karatsuba is capped
+///   by Fact 13's pinned constant: the direct leaf must satisfy
+///   `2w² ≤ 16·w^(log₂3)`, i.e. `w ≤ 150`, so 128 is the largest
+///   power-of-two leaf that keeps the `16·n^(log₂3)` bound intact.
+///   (The wall-clock optimum from `leaf_width_sweep` is higher; the
+///   paper constant, not the hardware, binds here — documented cap.)
+///
+/// Changing these values changes charged T (recursion depth is
+/// cost-visible), which is why this re-tune came with the repo's first
+/// deliberate golden re-bless — before/after triples and the exact
+/// sweep evidence are recorded in DESIGN.md ("Leaf-width re-tune",
+/// reproducible via `python/tools/leaf_tune_model.py` and
+/// `copmul bench --json`'s `leaf_width_sweep` table).
+pub fn leaf_widths(base: Base) -> LeafWidths {
+    let m = (64 / base.log2).max(1) as usize;
+    LeafWidths {
+        slim: (64 * m).min(1024),
+        skim: (64 * m).min(128),
+    }
+}
 
 /// `SLIM` — recursive long multiplication (paper §5, Fact 10).
 ///
@@ -107,13 +106,13 @@ pub const LEAF_WIDTH: usize = 64;
 /// pads otherwise; callers pad via [`super::convert::pad_pow2`]).
 /// Returns the `2n`-digit product.
 pub fn slim(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
-    slim_with_leaf(a, b, base, ops, LEAF_WIDTH)
+    slim_with_leaf(a, b, base, ops, leaf_widths(base).slim)
 }
 
 /// [`slim`] with an explicit leaf width — the bench harness's
 /// leaf-width sweep. The shipped entry point is `slim_with_leaf(...,
-/// LEAF_WIDTH)`; any other width changes the charged T (see the
-/// re-tune note on [`LEAF_WIDTH`]).
+/// leaf_widths(base).slim)`; any other width changes the charged T
+/// (see [`leaf_widths`]).
 pub fn slim_with_leaf(
     a: &[u32],
     b: &[u32],
@@ -152,7 +151,7 @@ pub fn slim_with_leaf(
 /// `f_A·f_B`, `C2 = A1·B1`; then `C1 = f_A·f_B·C' + C0 + C2` and
 /// `C = C0 + s^(n/2)·C1 + s^n·C2`.
 pub fn skim(a: &[u32], b: &[u32], base: Base, ops: &mut Ops) -> Vec<u32> {
-    skim_with_leaf(a, b, base, ops, LEAF_WIDTH)
+    skim_with_leaf(a, b, base, ops, leaf_widths(base).skim)
 }
 
 /// [`skim`] with an explicit leaf width — the bench harness's
@@ -249,7 +248,7 @@ pub fn mul_hybrid(a: &[u32], b: &[u32], threshold: usize, base: Base, ops: &mut 
     let n = a.len();
     assert_eq!(n, b.len());
     assert!(n.is_power_of_two());
-    if n <= threshold || n <= LEAF_WIDTH {
+    if n <= threshold || n <= leaf_widths(base).skim {
         return mul_school(a, b, base, ops);
     }
     // One Karatsuba level, then recurse hybrid.

@@ -25,6 +25,11 @@
 //! Ragged widths are handled by giving the most-significant limb its
 //! true bit width, so carries out of a `w`-digit window are detected
 //! exactly where the scalar loop detects them.
+//!
+//! Since PR 6 this module is the `packed64` rung of the kernel ladder
+//! ([`super::arch`]); its additive kernels also back the faster rungs
+//! (carry chains gain nothing from wider columns). The pack/unpack
+//! helpers are shared with the u128 and SIMD rungs.
 
 use super::Base;
 use std::cmp::Ordering;
@@ -94,7 +99,7 @@ pub const PACKED_ADD_MIN: usize = 32;
 
 /// Fold up to `digits_per_limb` digits (LSB-first) into one limb.
 #[inline]
-fn pack_limb(digits: &[u32], k: u32) -> u64 {
+pub(crate) fn pack_limb(digits: &[u32], k: u32) -> u64 {
     let mut limb = 0u64;
     for (j, &d) in digits.iter().enumerate() {
         limb |= (d as u64) << (j as u32 * k);
@@ -104,23 +109,45 @@ fn pack_limb(digits: &[u32], k: u32) -> u64 {
 
 /// Append `count` base-`2^k` digits of `limb` (LSB-first) to `out`.
 #[inline]
-fn unpack_limb(limb: u64, k: u32, count: usize, out: &mut Vec<u32>) {
+pub(crate) fn unpack_limb(limb: u64, k: u32, count: usize, out: &mut Vec<u32>) {
     let digit_mask = (1u64 << k) - 1;
     for j in 0..count {
         out.push(((limb >> (j as u32 * k)) & digit_mask) as u32);
     }
 }
 
-/// Pack a digit vector into mul-layout limbs (top limb zero-padded —
+/// Pack a digit vector into `m`-digit limbs (top limb zero-padded —
 /// harmless for multiplication, where the window width is implicit in
-/// the output truncation).
-fn pack(digits: &[u32], lay: Layout, k: u32) -> Vec<u64> {
-    let m = lay.digits_per_limb;
+/// the output truncation). Shared by every packing rung of the kernel
+/// ladder (`m · k ≤ 64` required).
+pub(crate) fn pack_digits(digits: &[u32], m: usize, k: u32) -> Vec<u64> {
+    debug_assert!(m as u32 * k <= 64);
     let mut limbs = Vec::with_capacity(digits.len().div_ceil(m));
     for chunk in digits.chunks(m) {
         limbs.push(pack_limb(chunk, k));
     }
     limbs
+}
+
+/// Unpack `m`-digit limbs back to exactly `len` digits, asserting (in
+/// debug builds) that nothing beyond the window carries value. Shared
+/// by every packing rung of the kernel ladder.
+pub(crate) fn unpack_digits(limbs: &[u64], m: usize, k: u32, len: usize) -> Vec<u32> {
+    let mut digits = Vec::with_capacity(len);
+    for &limb in limbs {
+        if digits.len() >= len {
+            debug_assert_eq!(limb, 0, "product overflows its digit window");
+            break;
+        }
+        let take = m.min(len - digits.len());
+        unpack_limb(limb, k, take, &mut digits);
+        debug_assert!(
+            take == m || limb >> (take as u32 * k) == 0,
+            "truncated limb must carry no value"
+        );
+    }
+    digits.resize(len, 0);
+    digits
 }
 
 /// Exact schoolbook product via packed limbs. Returns the full
@@ -132,8 +159,8 @@ pub fn mul_packed(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
     debug_assert!(na > 0 && nb > 0);
     let k = base.log2;
     let lay = Layout::for_mul(base);
-    let la = pack(a, lay, k);
-    let lb = pack(b, lay, k);
+    let la = pack_digits(a, lay.digits_per_limb, k);
+    let lb = pack_digits(b, lay.digits_per_limb, k);
     let mask = lay.mask();
     let bits = lay.limb_bits;
     let mut out = vec![0u64; la.len() + lb.len()];
@@ -161,21 +188,7 @@ pub fn mul_packed(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
     }
     // Unpack and truncate: the product value is < s^(na+nb), so every
     // digit beyond the window is provably zero.
-    let mut digits = Vec::with_capacity(na + nb);
-    for &limb in &out {
-        if digits.len() >= na + nb {
-            debug_assert_eq!(limb, 0, "product overflows its digit window");
-            break;
-        }
-        let take = lay.digits_per_limb.min(na + nb - digits.len());
-        unpack_limb(limb, k, take, &mut digits);
-        debug_assert!(
-            take == lay.digits_per_limb || limb >> (take as u32 * k) == 0,
-            "truncated limb must carry no value"
-        );
-    }
-    digits.resize(na + nb, 0);
-    digits
+    unpack_digits(&out, lay.digits_per_limb, k, na + nb)
 }
 
 /// Exact fixed-width addition via packed limbs:
@@ -298,12 +311,8 @@ mod tests {
         let base = Base::new(16);
         let lay = Layout::for_mul(base);
         let digits = vec![0xFFFF, 1, 2, 0xABCD, 7];
-        let limbs = pack(&digits, lay, base.log2);
-        let mut back = Vec::new();
-        for (t, &l) in limbs.iter().enumerate() {
-            let take = lay.digits_per_limb.min(digits.len() - t * lay.digits_per_limb);
-            unpack_limb(l, base.log2, take, &mut back);
-        }
+        let limbs = pack_digits(&digits, lay.digits_per_limb, base.log2);
+        let back = unpack_digits(&limbs, lay.digits_per_limb, base.log2, digits.len());
         assert_eq!(back, digits);
     }
 

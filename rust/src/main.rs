@@ -6,7 +6,7 @@
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
 //! copmul experiment <id|all> [--csv]           run paper experiments E1-E18
 //! copmul serve [key=value ...]                 coordinator demo workload
-//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_5.json
+//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_6.json
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
 //! ```
@@ -82,11 +82,12 @@ TOPOLOGIES: fully-connected (the paper's implicit network; default),
             torus (2D wraparound grid, hop-by-hop routing and charging),
             hier (two-level clusters over a half-bandwidth backbone).
 
-BENCH:   wall-clock harness (engine grid, packed-vs-scalar kernels,
-         leaf-width sweep). --json writes the BENCH_5.json artifact
+BENCH:   wall-clock harness (engine grid, kernel-ladder table, per-base
+         leaf-width sweep). --json writes the BENCH_6.json artifact
          (--out overrides the path); --smoke runs the CI-sized grid.
-         Cost triples shown are layout-invariant; wall-clock is the
-         quantity the perf PRs move.
+         COPMUL_KERNEL=(reference|packed64|generic|simd) pins the
+         dispatched rung. Cost triples shown are layout-invariant;
+         wall-clock is the quantity the perf PRs move.
 
 SERVE:   --jobs=N   number of requests (default 64)
          --shards=K sharded scheduler: one shared `procs`-processor machine,
@@ -397,7 +398,7 @@ fn print_latency_summary(jobs: usize, wall: std::time::Duration, lat_us: &mut [u
 fn cmd_bench(args: &[String]) -> Result<()> {
     let mut cfg = copmul::perf::BenchConfig::default();
     let mut json = false;
-    let mut out = "BENCH_5.json".to_string();
+    let mut out = "BENCH_6.json".to_string();
     for a in args {
         if a == "--json" {
             json = true;

@@ -2,25 +2,27 @@
 //! repo's `BENCH_*.json` perf trajectory.
 //!
 //! Three sections, all recorded per run into one JSON artifact
-//! (`BENCH_5.json` by default; CI's record-only `perf-smoke` job
-//! uploads it so every PR leaves a measured data point):
+//! (`BENCH_6.json` by default; CI's `perf-smoke` job uploads it and
+//! `BENCH_HISTORY.md` tracks the dated in-tree trail):
 //!
 //! * **engine grid** — end-to-end wall-clock of both execution engines
 //!   across (scheme × n × P) at the default base 2^16, with the cost
 //!   triple alongside (the triple is engine- and layout-invariant; the
 //!   wall-clock is what this PR series moves).
-//! * **kernels** — packed-limb [`bignum::mul_school`] vs the
-//!   digit-at-a-time oracle [`bignum::mul_school_reference`] across
-//!   widths and bases: the microscopic source of the macroscopic wins.
-//! * **leaf-width sweep** — [`bignum::skim_with_leaf`] across leaf
-//!   widths: the measured wall-clock optimum for the packed leaves
-//!   *and* the charged-op cost of each choice, i.e. exactly the
-//!   evidence a future `LEAF_WIDTH` re-tune (with its golden re-bless)
-//!   has to weigh. See the re-tune note on [`bignum::mul::LEAF_WIDTH`].
+//! * **kernels** — every rung of the kernel ladder
+//!   ([`bignum::arch::ladder`]) at identical closed-form charges:
+//!   reference vs packed64 vs generic vs (where detected) simd, across
+//!   widths and bases — the microscopic source of the macroscopic wins,
+//!   and the per-host evidence behind the dispatch default.
+//! * **leaf-width sweep** — [`bignum::slim_with_leaf`] and
+//!   [`bignum::skim_with_leaf`] across leaf widths per base: the
+//!   evidence the applied PR-6 `leaf_widths` table rests on (wall
+//!   *and* charged T per width — see [`bignum::mul::leaf_widths`] and
+//!   DESIGN.md's "Leaf-width re-tune" re-bless record).
 
 use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
 use crate::algorithms::{copk_mi, copsim_mi};
-use crate::bignum::{self, Base, Ops};
+use crate::bignum::{self, arch, Base, Ops};
 use crate::error::{ensure, Result};
 use crate::metrics::{fmt_u64, Table};
 use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
@@ -70,6 +72,8 @@ pub struct KernelCell {
 /// One leaf-width sweep point.
 #[derive(Clone, Debug)]
 pub struct LeafCell {
+    /// Which recursive multiplier was swept (`slim` or `skim`).
+    pub scheme: &'static str,
     pub leaf_width: usize,
     pub n: usize,
     pub base_log2: u32,
@@ -82,6 +86,11 @@ pub struct LeafCell {
 /// The full bench report; serializes to the `BENCH_*.json` schema.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
+    /// The ladder rung [`arch::active`] picked on this host (records
+    /// the `COPMUL_KERNEL` pin when CI sets one).
+    pub kernel_selected: &'static str,
+    /// The SIMD instruction set detected at runtime (`none` if absent).
+    pub simd_isa: &'static str,
     pub engine_grid: Vec<EngineCell>,
     pub kernels: Vec<KernelCell>,
     pub leaf_sweep: Vec<LeafCell>,
@@ -188,9 +197,12 @@ fn time_kernel(mut f: impl FnMut()) -> (u64, f64) {
     (iters, t0.elapsed().as_nanos() as f64 / iters as f64)
 }
 
+/// Every available ladder rung on identical operands. The smoke grid
+/// keeps n = 4096 so even CI's record-only artifact witnesses the
+/// headline comparison (generic vs packed64 at n ≥ 4096, base 2^16).
 fn kernel_table(cfg: &BenchConfig, report: &mut BenchReport) {
     let n_list: &[usize] = if cfg.smoke {
-        &[256, 1024]
+        &[1024, 4096]
     } else {
         &[256, 1024, 4096]
     };
@@ -200,65 +212,72 @@ fn kernel_table(cfg: &BenchConfig, report: &mut BenchReport) {
             let mut rng = Rng::new(cfg.seed ^ ((log2 as u64) << 48) ^ n as u64);
             let a = rng.digits(n, log2);
             let b = rng.digits(n, log2);
-            let (iters, ns) = time_kernel(|| {
-                let mut ops = Ops::default();
-                std::hint::black_box(bignum::mul_school(
-                    std::hint::black_box(&a),
-                    std::hint::black_box(&b),
-                    base,
-                    &mut ops,
-                ));
-            });
-            report.kernels.push(KernelCell {
-                kernel: "mul_school_packed",
-                n,
-                base_log2: log2,
-                iters,
-                ns_per_iter: ns,
-            });
-            let (iters, ns) = time_kernel(|| {
-                let mut ops = Ops::default();
-                std::hint::black_box(bignum::mul_school_reference(
-                    std::hint::black_box(&a),
-                    std::hint::black_box(&b),
-                    base,
-                    &mut ops,
-                ));
-            });
-            report.kernels.push(KernelCell {
-                kernel: "mul_school_scalar",
-                n,
-                base_log2: log2,
-                iters,
-                ns_per_iter: ns,
-            });
+            for rung in arch::ladder() {
+                let (iters, ns) = time_kernel(|| {
+                    std::hint::black_box((rung.mul)(
+                        std::hint::black_box(&a),
+                        std::hint::black_box(&b),
+                        base,
+                    ));
+                });
+                report.kernels.push(KernelCell {
+                    kernel: rung.name,
+                    n,
+                    base_log2: log2,
+                    iters,
+                    ns_per_iter: ns,
+                });
+            }
         }
     }
 }
 
+/// Both recursive multipliers across leaf widths, per base — the sweep
+/// whose full-grid output is the evidence behind `leaf_widths` (slim's
+/// charged T falls monotonically with the width; skim's rises, capped
+/// by Fact 13 at 128 — see DESIGN.md, "Leaf-width re-tune").
 fn leaf_sweep(cfg: &BenchConfig, report: &mut BenchReport) {
-    let base = Base::default();
+    type SweepFn = fn(&[u32], &[u32], Base, &mut Ops, usize) -> Vec<u32>;
     let n = if cfg.smoke { 1024 } else { 4096 };
-    let mut rng = Rng::new(cfg.seed ^ 0x1EAF);
-    let a = rng.digits(n, base.log2);
-    let b = rng.digits(n, base.log2);
-    for &lw in &[16usize, 32, 64, 128, 256, 512] {
-        let mut ops = Ops::default();
-        let t0 = Instant::now();
-        std::hint::black_box(bignum::skim_with_leaf(&a, &b, base, &mut ops, lw));
-        report.leaf_sweep.push(LeafCell {
-            leaf_width: lw,
-            n,
-            base_log2: base.log2,
-            wall: t0.elapsed(),
-            ops: ops.get(),
-        });
+    let widths: &[usize] = if cfg.smoke {
+        &[32, 64, 128, 256]
+    } else {
+        &[16, 32, 64, 128, 256, 512, 1024]
+    };
+    let schemes: [(&'static str, SweepFn); 2] = [
+        ("slim", bignum::slim_with_leaf),
+        ("skim", bignum::skim_with_leaf),
+    ];
+    for &log2 in &[4u32, 8, 16] {
+        let base = Base::new(log2);
+        let mut rng = Rng::new(cfg.seed ^ 0x1EAF ^ ((log2 as u64) << 40));
+        let a = rng.digits(n, log2);
+        let b = rng.digits(n, log2);
+        for (scheme, f) in schemes {
+            for &lw in widths {
+                let mut ops = Ops::default();
+                let t0 = Instant::now();
+                std::hint::black_box(f(&a, &b, base, &mut ops, lw));
+                report.leaf_sweep.push(LeafCell {
+                    scheme,
+                    leaf_width: lw,
+                    n,
+                    base_log2: log2,
+                    wall: t0.elapsed(),
+                    ops: ops.get(),
+                });
+            }
+        }
     }
 }
 
 /// Run the full bench and collect the report.
 pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
-    let mut report = BenchReport::default();
+    let mut report = BenchReport {
+        kernel_selected: arch::active().name,
+        simd_isa: arch::simd::isa(),
+        ..Default::default()
+    };
     engine_grid(cfg, &mut report)?;
     kernel_table(cfg, &mut report);
     leaf_sweep(cfg, &mut report);
@@ -286,7 +305,7 @@ impl BenchReport {
             ]);
         }
         let mut t2 = Table::new(
-            "kernels (packed vs digit-at-a-time)",
+            "kernel ladder (wall-clock at identical closed-form charges)",
             &["kernel", "base", "n", "iters", "ns/iter"],
         );
         for c in &self.kernels {
@@ -299,11 +318,13 @@ impl BenchReport {
             ]);
         }
         let mut t3 = Table::new(
-            "leaf-width sweep (skim, wall vs charged T)",
-            &["leaf_width", "n", "wall µs", "ops"],
+            "leaf-width sweep (wall vs charged T; shipped table: leaf_widths)",
+            &["scheme", "base", "leaf_width", "n", "wall µs", "ops"],
         );
         for c in &self.leaf_sweep {
             t3.row(vec![
+                c.scheme.into(),
+                format!("2^{}", c.base_log2),
                 c.leaf_width.to_string(),
                 c.n.to_string(),
                 fmt_u64(c.wall.as_micros() as u64),
@@ -317,7 +338,11 @@ impl BenchReport {
     /// in the offline build; `util::json` parses this back).
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(4096);
-        s.push_str("{\n  \"bench\": 5,\n  \"engine_grid\": [\n");
+        s.push_str(&format!(
+            "{{\n  \"bench\": 6,\n  \"kernel_selected\": \"{}\",\n  \
+             \"simd_isa\": \"{}\",\n  \"engine_grid\": [\n",
+            self.kernel_selected, self.simd_isa
+        ));
         for (i, c) in self.engine_grid.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"scheme\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"procs\": {}, \
@@ -352,8 +377,9 @@ impl BenchReport {
         s.push_str("  ],\n  \"leaf_width_sweep\": [\n");
         for (i, c) in self.leaf_sweep.iter().enumerate() {
             s.push_str(&format!(
-                "    {{\"leaf_width\": {}, \"n\": {}, \"base_log2\": {}, \"wall_us\": {}, \
-                 \"ops\": {}}}{}\n",
+                "    {{\"scheme\": \"{}\", \"leaf_width\": {}, \"n\": {}, \"base_log2\": {}, \
+                 \"wall_us\": {}, \"ops\": {}}}{}\n",
+                c.scheme,
                 c.leaf_width,
                 c.n,
                 c.base_log2,
@@ -380,13 +406,30 @@ mod tests {
             smoke: true,
             seed: 7,
         };
-        let mut report = BenchReport::default();
+        let mut report = BenchReport {
+            kernel_selected: arch::active().name,
+            simd_isa: arch::simd::isa(),
+            ..Default::default()
+        };
         kernel_table(&cfg, &mut report);
         leaf_sweep(&cfg, &mut report);
         assert!(!report.kernels.is_empty());
         assert!(!report.leaf_sweep.is_empty());
+        // Every available ladder rung shows up in the kernel table, and
+        // both sweep schemes per base.
+        for rung in arch::ladder() {
+            assert!(
+                report.kernels.iter().any(|c| c.kernel == rung.name),
+                "rung {} missing from the kernel table",
+                rung.name
+            );
+        }
+        for scheme in ["slim", "skim"] {
+            assert!(report.leaf_sweep.iter().any(|c| c.scheme == scheme));
+        }
         let j = Json::parse(&report.to_json()).expect("BENCH json must parse");
-        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(5));
+        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(6));
+        assert!(j.get("kernel_selected").and_then(Json::as_str).is_some());
         assert!(j.get("kernels").and_then(Json::as_arr).is_some());
         assert!(j.get("leaf_width_sweep").and_then(Json::as_arr).is_some());
     }

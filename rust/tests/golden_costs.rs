@@ -22,8 +22,15 @@
 //! fresh grid) the test writes it and passes with a warning, so adding
 //! a cell never breaks the build — committing the generated file is
 //! what arms the regression gate.
+//!
+//! The grid was re-blessed exactly once, in the PR that applied the
+//! per-base `leaf_widths` table (the first deliberate cost-model
+//! change; before/after T in DESIGN.md "Leaf-width re-tune"). Cells now
+//! pin the leaf kind too: SchoolLeaf cells are leaf-width-independent
+//! and must never move; Slim/Skim-leaf cells are exactly the ones that
+//! feel a future leaf-width change.
 
-use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf, SlimLeaf};
 use copmul::algorithms::Algorithm;
 use copmul::coordinator::{execute_on, JobSpec};
 use copmul::bignum::Base;
@@ -37,16 +44,49 @@ use std::path::PathBuf;
 /// The canonical grid. Keep it small (seconds, not minutes, in debug
 /// mode) and stable — adding cells is cheap, renaming them invalidates
 /// history.
-const GRID: &[(usize, usize, Option<Algorithm>)] = &[
-    (256, 4, Some(Algorithm::Copsim)),
-    (256, 16, Some(Algorithm::Copsim)),
-    (1024, 16, Some(Algorithm::Copsim)),
-    (256, 4, Some(Algorithm::Copk)),
-    (384, 12, Some(Algorithm::Copk)),
-    (1152, 12, Some(Algorithm::Copk)),
-    (256, 4, None),
-    (1024, 4, None),
+const GRID: &[(usize, usize, Option<Algorithm>, LeafKind)] = &[
+    (256, 4, Some(Algorithm::Copsim), LeafKind::School),
+    (256, 16, Some(Algorithm::Copsim), LeafKind::School),
+    (1024, 16, Some(Algorithm::Copsim), LeafKind::School),
+    (256, 4, Some(Algorithm::Copk), LeafKind::School),
+    (384, 12, Some(Algorithm::Copk), LeafKind::School),
+    (1152, 12, Some(Algorithm::Copk), LeafKind::School),
+    (256, 4, None, LeafKind::School),
+    (1024, 4, None, LeafKind::School),
+    // Leaf-sensitive cells: these are the ones a leaf-width change
+    // moves (SchoolLeaf charges 2w² regardless of the table).
+    (256, 4, Some(Algorithm::Copsim), LeafKind::Slim),
+    (1024, 16, Some(Algorithm::Copsim), LeafKind::Slim),
+    (384, 12, Some(Algorithm::Copk), LeafKind::Skim),
+    (1152, 12, Some(Algorithm::Copk), LeafKind::Skim),
 ];
+
+/// Which sequential leaf a cell runs — pinned in the table because the
+/// applied `leaf_widths` re-tune changed Slim/Skim leaf charges while
+/// SchoolLeaf stayed put.
+#[derive(Clone, Copy)]
+enum LeafKind {
+    School,
+    Slim,
+    Skim,
+}
+
+impl LeafKind {
+    fn name(self) -> &'static str {
+        match self {
+            LeafKind::School => "school",
+            LeafKind::Slim => "slim",
+            LeafKind::Skim => "skim",
+        }
+    }
+    fn build(self) -> copmul::algorithms::leaf::LeafRef {
+        match self {
+            LeafKind::School => leaf_ref(SchoolLeaf),
+            LeafKind::Slim => leaf_ref(SlimLeaf),
+            LeafKind::Skim => leaf_ref(SkimLeaf),
+        }
+    }
+}
 
 fn algo_name(a: Option<Algorithm>) -> &'static str {
     match a {
@@ -61,7 +101,13 @@ fn algo_name(a: Option<Algorithm>) -> &'static str {
 /// default machine constructor — what the table pins; an explicit
 /// `Some(TopologyKind::FullyConnected)` must produce identical lines
 /// (the zero-diff guarantee of the collectives/topology refactor).
-fn measure(n: usize, p: usize, algo: Option<Algorithm>, topo: Option<TopologyKind>) -> String {
+fn measure(
+    n: usize,
+    p: usize,
+    algo: Option<Algorithm>,
+    leaf_kind: LeafKind,
+    topo: Option<TopologyKind>,
+) -> String {
     let base = Base::new(16);
     let mut rng = Rng::new(0x601D ^ (n as u64) ^ ((p as u64) << 32));
     let a = rng.digits(n, 16);
@@ -74,13 +120,14 @@ fn measure(n: usize, p: usize, algo: Option<Algorithm>, topo: Option<TopologyKin
         Some(kind) => Machine::with_topology(p, u64::MAX / 2, base, kind.build(p)),
     };
     let seq = Seq::range(p);
-    let leaf = leaf_ref(SchoolLeaf);
+    let leaf = leaf_kind.build();
     execute_on(&mut m, &TimeModel::default(), &spec, &seq, &leaf)
         .unwrap_or_else(|e| panic!("golden cell n={n} p={p} {}: {e}", algo_name(algo)));
     let c = m.critical();
     format!(
-        "n={n}\tp={p}\talgo={}\tT={}\tBW={}\tL={}\tM={}",
+        "n={n}\tp={p}\talgo={}\tleaf={}\tT={}\tBW={}\tL={}\tM={}",
         algo_name(algo),
+        leaf_kind.name(),
         c.ops,
         c.words,
         c.msgs,
@@ -100,10 +147,10 @@ fn golden_path() -> PathBuf {
 /// produces the exact line the committed table pins.
 #[test]
 fn golden_cells_identical_under_explicit_fully_connected_topology() {
-    for &(n, p, algo) in GRID {
+    for &(n, p, algo, leaf) in GRID {
         assert_eq!(
-            measure(n, p, algo, Some(TopologyKind::FullyConnected)),
-            measure(n, p, algo, None),
+            measure(n, p, algo, leaf, Some(TopologyKind::FullyConnected)),
+            measure(n, p, algo, leaf, None),
             "explicit fully-connected diverged from the default at n={n} p={p}"
         );
     }
@@ -113,10 +160,10 @@ fn golden_cells_identical_under_explicit_fully_connected_topology() {
 fn golden_cost_table_is_stable() {
     let lines: Vec<String> = GRID
         .iter()
-        .map(|&(n, p, algo)| measure(n, p, algo, None))
+        .map(|&(n, p, algo, leaf)| measure(n, p, algo, leaf, None))
         .collect();
     let current = format!(
-        "# Golden (T, BW, L, M) table — cost-model engine, SchoolLeaf, base 2^16.\n\
+        "# Golden (T, BW, L, M) table — cost-model engine, per-cell leaf, base 2^16.\n\
          # Regenerate ONLY for intentional cost changes:\n\
          #   COPMUL_BLESS=1 cargo test --test golden_costs\n\
          # then review and commit the diff (see tests/golden_costs.rs).\n{}\n",

@@ -1,14 +1,18 @@
-//! Packed-kernel parity suite: the PR-5 referee for the bignum layer.
+//! Kernel-ladder parity suite: the referee for the bignum layer.
 //!
-//! The packed-limb kernels (`bignum::packed`) are *physical* fast paths
-//! under a hard invariant: bit-identical products AND bit-identical
-//! digit-op charges versus the digit-at-a-time loops they replace.
-//! This suite pins both, against scalar oracles kept verbatim in the
-//! crate (`mul_school_reference`, `cmp_digits_reference`) or re-derived
-//! locally, over random ragged widths × bases {2^4, 2^8, 2^16} and the
-//! adversarial all-zero / all-max shapes.
+//! Every rung of the kernel ladder (`bignum::arch` — reference,
+//! packed64, generic, and simd where the host supports it) is a
+//! *physical* fast path under a hard invariant: bit-identical products
+//! AND bit-identical digit-op charges versus the digit-at-a-time
+//! reference oracle. This suite pins both, against scalar oracles kept
+//! verbatim in the crate (`arch::reference`, `mul_school_reference`,
+//! `cmp_digits_reference`) or re-derived locally, over random ragged
+//! widths × bases {2^4, 2^8, 2^16} and the adversarial all-zero /
+//! all-max shapes. The `COPMUL_KERNEL` env knob pins process-wide
+//! dispatch; the CI `kernels` matrix job runs this suite once per
+//! forced rung.
 
-use copmul::bignum::packed;
+use copmul::bignum::{arch, packed};
 use copmul::bignum::{
     add_into_width, add_with_carry, cmp_digits, mul_school, mul_school_reference, skim,
     skim_with_leaf, sub_with_borrow, Base, Ops,
@@ -307,8 +311,137 @@ fn skim_charges_identical_regardless_of_physical_leaf_path() {
         let p_tiny = skim_with_leaf(&a, &b, base, &mut o_tiny, 4);
         assert_eq!(p_std, p_tiny, "products must not depend on leaf width");
         // Deeper recursion charges differently — that is the model
-        // effect the LEAF_WIDTH re-tune note documents.
+        // effect the applied per-base `leaf_widths` table trades on
+        // (DESIGN.md, "Leaf-width re-tune").
         assert!(o_tiny.get() >= o_std.get() / 4, "sanity: same order");
+    }
+}
+
+#[test]
+fn prop_ladder_every_rung_matches_reference_mul() {
+    // The core ladder invariant: every rung the host exposes is
+    // bit-identical to the digit-at-a-time reference oracle, including
+    // the adversarial all-zero / all-max / hot-top shapes that stress
+    // carry tails and the zero-row physical skip.
+    prop::check("ladder rung mul == reference oracle", prop::cases(48), |rng| {
+        let log2 = *rng.pick(&BASES);
+        let base = Base::new(log2);
+        let na = draw_width(rng);
+        let nb = draw_width(rng);
+        for a in shapes(rng, na, log2) {
+            for b in shapes(rng, nb, log2) {
+                let want = arch::reference::mul(&a, &b, base);
+                for rung in arch::ladder() {
+                    if (rung.mul)(&a, &b, base) != want {
+                        return Err(format!(
+                            "{} product diverges at na={na} nb={nb} base=2^{log2}",
+                            rung.name
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ladder_add_sub_rungs_match_reference() {
+    let mut rng = Rng::new(0x1ADD);
+    for &log2 in &BASES {
+        let base = Base::new(log2);
+        for &w in &[1usize, 7, 31, 32, 33, 100, 1000] {
+            let a = rng.digits(w, log2);
+            let b = rng.digits(w, log2);
+            for carry_in in [0u32, 1] {
+                let want_add = arch::reference::add(&a, &b, carry_in, base);
+                let want_sub = arch::reference::sub(&a, &b, carry_in, base);
+                for rung in arch::ladder() {
+                    assert_eq!(
+                        (rung.add)(&a, &b, carry_in, base),
+                        want_add,
+                        "{} add w={w} base=2^{log2} ci={carry_in}",
+                        rung.name
+                    );
+                    assert_eq!(
+                        (rung.sub)(&a, &b, carry_in, base),
+                        want_sub,
+                        "{} sub w={w} base=2^{log2} bi={carry_in}",
+                        rung.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn ladder_rungs_cover_every_legal_base() {
+    // The bench bases get the property test; every other k the digit
+    // model admits gets one asymmetric multiply per rung.
+    let mut rng = Rng::new(0x1A0D);
+    for log2 in 1..=16u32 {
+        let base = Base::new(log2);
+        let a = rng.digits(65, log2);
+        let b = rng.digits(33, log2);
+        let want = arch::reference::mul(&a, &b, base);
+        for rung in arch::ladder() {
+            assert_eq!((rung.mul)(&a, &b, base), want, "{} base=2^{log2}", rung.name);
+        }
+    }
+}
+
+#[test]
+fn copmul_kernel_env_knob_selects_the_named_rung() {
+    // `COPMUL_KERNEL` pins process-wide dispatch (the CI `kernels`
+    // matrix job sets it once per rung). `active()` memoizes in a
+    // OnceLock, so this test observes rather than mutates the env: when
+    // the knob is set, the active rung must carry that name; when
+    // unset, the auto policy must have picked simd-if-detected else
+    // generic.
+    let active = arch::active();
+    match std::env::var("COPMUL_KERNEL") {
+        Ok(name) => assert_eq!(active.name, name, "COPMUL_KERNEL not honored"),
+        Err(_) => assert!(
+            active.name == "simd" || active.name == "generic",
+            "auto policy must pick simd-if-detected else generic, got {}",
+            active.name
+        ),
+    }
+    // Every documented name resolves; junk is rejected loudly (the
+    // dispatcher panics on it rather than silently falling back).
+    for name in ["reference", "packed64", "generic", "simd"] {
+        assert!(arch::select(Some(name)).is_ok(), "{name} must resolve");
+    }
+    assert!(arch::select(Some("avx512")).is_err(), "unknown rung must be rejected");
+    // A forced rung actually computes — including "simd" on hosts
+    // without SIMD, where the rung degrades per-call to generic.
+    let base = Base::new(16);
+    let mut rng = Rng::new(0xE17);
+    let a = rng.digits(40, 16);
+    let b = rng.digits(40, 16);
+    let want = arch::reference::mul(&a, &b, base);
+    for name in ["reference", "packed64", "generic", "simd"] {
+        let k = arch::select(Some(name)).unwrap();
+        assert_eq!((k.mul)(&a, &b, base), want, "forced {name} diverges");
+    }
+}
+
+#[test]
+fn dispatched_mul_school_charge_is_kernel_independent() {
+    // Whatever rung `active()` resolved to in this process, the charge
+    // is the closed form 2·na·nb — the zero-diff invariant that lets
+    // the golden cost grid ignore the ladder entirely.
+    let mut rng = Rng::new(0x2D1F);
+    for &log2 in &BASES {
+        let base = Base::new(log2);
+        for (na, nb) in [(3usize, 5usize), (17, 17), (64, 96)] {
+            let a = rng.digits(na, log2);
+            let b = rng.digits(nb, log2);
+            let mut ops = Ops::default();
+            mul_school(&a, &b, base, &mut ops);
+            assert_eq!(ops.get(), 2 * na as u64 * nb as u64, "base=2^{log2}");
+        }
     }
 }
 
