@@ -1,0 +1,99 @@
+//! Bench: serving daemon under open-loop load — goodput and tail
+//! latency per (engine, offered rate), Poisson and bursty arrivals.
+//!
+//! Open-loop means the offered rate is held regardless of completions,
+//! so cells past saturation show the shedding policy at work: goodput
+//! plateaus near capacity, sheds absorb the excess, and the admitted
+//! p99 stays bounded by the deadline instead of growing with the run.
+
+use std::time::Duration;
+
+use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use copmul::config::EngineKind;
+use copmul::coordinator::{
+    run_open_loop, ArrivalGen, ArrivalKind, Daemon, DaemonConfig, OpenLoop, SchedulerConfig,
+    Workload,
+};
+
+const SEED: u64 = 0xBE7C;
+
+fn main() {
+    println!("== daemon bench (open-loop serving: goodput + tail latency) ==");
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("host cores: {cores}");
+    for &(engine, rate, kind, jobs) in &[
+        (EngineKind::Sim, 400.0, ArrivalKind::Poisson, 512u64),
+        (EngineKind::Sim, 1600.0, ArrivalKind::Poisson, 512),
+        (EngineKind::Sim, 6400.0, ArrivalKind::Poisson, 512),
+        (EngineKind::Sim, 6400.0, ArrivalKind::Bursty, 512),
+        (EngineKind::Threads, 400.0, ArrivalKind::Poisson, 256),
+        (EngineKind::Threads, 1600.0, ArrivalKind::Poisson, 256),
+        (EngineKind::Threads, 1600.0, ArrivalKind::Bursty, 256),
+    ] {
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 16,
+                    engine,
+                    runners: 4,
+                    max_queue: 4096,
+                    ..Default::default()
+                },
+                default_deadline: Some(Duration::from_millis(250)),
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let arrivals = match kind {
+            ArrivalKind::Poisson => ArrivalGen::poisson(SEED ^ rate as u64, rate),
+            ArrivalKind::Bursty => {
+                ArrivalGen::bursty(SEED ^ rate as u64, rate, 32, Duration::from_millis(20))
+            }
+        };
+        let arrivals = match arrivals {
+            Ok(a) => a,
+            Err(e) => {
+                println!("daemon {engine} rate={rate}: arrival gen FAILED: {e}");
+                continue;
+            }
+        };
+        let load = OpenLoop {
+            arrivals,
+            jobs,
+            workload: Workload {
+                seed: SEED,
+                n: 256,
+                base_log2: 16,
+                procs: 4,
+                algo: Some(copmul::algorithms::Algorithm::Copsim),
+            },
+            verify: false,
+            collect: false,
+        };
+        let rep = match run_open_loop(&daemon, &load) {
+            Ok(r) => r,
+            Err(e) => {
+                println!("daemon {engine} rate={rate}: run FAILED: {e}");
+                continue;
+            }
+        };
+        if let Err(e) = daemon.shutdown() {
+            println!("daemon {engine} rate={rate}: shutdown FAILED: {e}");
+        }
+        println!(
+            "{:8} {:32} offered={:>4} done={:>4} shed={:>4} goodput={:>8.1}/s \
+             p50={:>7}µs p99={:>7}µs p999={:>7}µs",
+            "daemon",
+            format!("{engine} rate={rate:.0} arrival={kind:?} jobs={jobs}"),
+            rep.offered,
+            rep.completed,
+            rep.shed_total(),
+            rep.goodput_per_s(),
+            rep.percentile_us(0.50),
+            rep.percentile_us(0.99),
+            rep.percentile_us(0.999),
+        );
+    }
+}

@@ -1,0 +1,1020 @@
+//! Always-on serving: open-loop load over the sharded scheduler.
+//!
+//! `copmul serve` runs a fixed batch and exits; this module is the
+//! persistent-service layer behind `copmul daemon`. A [`Daemon`] wraps
+//! a long-lived [`Scheduler`] and accepts concurrent submissions from
+//! any thread; [`run_open_loop`] drives it with a seeded **open-loop**
+//! arrival process — arrivals follow the generator's schedule and
+//! never wait for completions, so offered load is the independent
+//! variable and the system's only defenses are its admission and
+//! shedding policies (the closed-loop batch of `serve` can never
+//! overload itself; an open-loop client can and does).
+//!
+//! ## Arrival processes
+//!
+//! [`ArrivalGen`] produces deterministic, seeded inter-arrival gaps:
+//!
+//! * **Poisson** — exponential gaps via inverse-CDF over the seeded
+//!   [`Rng`]'s `[0, 1)` doubles: `-ln(1 − u) / rate`. Memoryless, the
+//!   standard open-loop reference load.
+//! * **Bursty (on/off)** — `burst` arrivals with exponential gaps at
+//!   the on-rate, then a fixed idle gap, repeated. Stresses admission
+//!   with queue spikes a Poisson stream of equal mean rarely produces.
+//!
+//! Same seed + parameters → the same schedule, byte for byte; the soak
+//! suite replays schedules to pin determinism.
+//!
+//! ## Shedding policy (reject early, never queue forever)
+//!
+//! Under open-loop overload a plain FIFO queue grows without bound and
+//! *every* job's latency diverges. The daemon instead sheds at three
+//! rungs, earliest first:
+//!
+//! 1. **SLO estimate, before queueing** — `submit` estimates queue
+//!    delay as `in_flight × EWMA(service time) / runners` and sheds a
+//!    deadlined job immediately when the estimate already exceeds its
+//!    deadline × [`DaemonConfig::shed_headroom`]. Costs the client a
+//!    round-trip of nothing: no queue slot, no shard, no work.
+//! 2. **Queue bound** — the scheduler's existing `max_queue`
+//!    reservation path ([`RejectKind::QueueFull`]).
+//! 3. **Deadline at dequeue** — a queued job whose budget expired
+//!    before a shard freed up is dropped by the runner
+//!    (`SchedulerStats::shed_expired`), bounding the work wasted on
+//!    jobs that already missed their SLO.
+//!
+//! Shedding is *load regulation*, not failure: shed jobs are counted
+//! separately from `failed` everywhere, and [`ServingReport`] exposes
+//! `check_shed_budget` so soaks can assert the shed fraction stays
+//! below a configured limit.
+//!
+//! ## Framing
+//!
+//! [`Request::encode`]/[`Request::decode`] define a little-endian
+//! length-explicit frame for submissions. The in-process channel API
+//! does not need it — it exists so the future `SocketMachine` listener
+//! (ROADMAP item 1) can speak the same contract over a real socket
+//! without re-deriving a wire format: a daemon front-end reading frames
+//! off a stream decodes straight into [`Request`] and calls
+//! [`Daemon::submit`].
+//!
+//! ## Cost identity under load
+//!
+//! Scheduling pressure moves *wall-clock* latency only: a job's
+//! reported `(T, BW, L)` cost triple comes from its shard's logical
+//! clocks relative to a uniform baseline, which queue waits and
+//! concurrent neighbors do not perturb (scheduler module docs). The
+//! serving experiment (E19) re-runs completed jobs on dedicated
+//! machines and asserts zero-fault triples stay bit-identical at every
+//! offered load.
+
+use super::job::{JobResult, JobSpec};
+use super::scheduler::{RejectKind, Scheduler, SchedulerConfig};
+use crate::algorithms::leaf::LeafRef;
+use crate::algorithms::Algorithm;
+use crate::bignum::{Base, Ops};
+use crate::error::{anyhow, bail, ensure, Error, Result};
+use crate::metrics::{fmt_u64, latency_summary, percentile};
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+// ------------------------------------------------------------- arrivals
+
+/// Which open-loop arrival process a generator produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalKind {
+    Poisson,
+    Bursty,
+}
+
+/// Seeded deterministic inter-arrival generator (module docs,
+/// "Arrival processes"). Clone it to replay the schedule.
+#[derive(Clone, Debug)]
+pub struct ArrivalGen {
+    kind: ArrivalKind,
+    rng: Rng,
+    /// Mean exponential gap while "on", seconds (`1 / rate`).
+    mean_gap_s: f64,
+    /// Bursty only: arrivals per on-phase.
+    burst: u64,
+    /// Bursty only: fixed off-phase gap appended between bursts.
+    idle: Duration,
+    left_in_burst: u64,
+}
+
+impl ArrivalGen {
+    /// Poisson arrivals at `rate_per_s` (exponential gaps).
+    pub fn poisson(seed: u64, rate_per_s: f64) -> Result<ArrivalGen> {
+        ensure!(
+            rate_per_s > 0.0 && rate_per_s.is_finite(),
+            "arrival rate must be a positive finite number (got {rate_per_s})"
+        );
+        Ok(ArrivalGen {
+            kind: ArrivalKind::Poisson,
+            rng: Rng::new(seed),
+            mean_gap_s: 1.0 / rate_per_s,
+            burst: 0,
+            idle: Duration::ZERO,
+            left_in_burst: 0,
+        })
+    }
+
+    /// On/off arrivals: `burst` exponential-gap arrivals at
+    /// `on_rate_per_s`, then a fixed `idle` gap, repeated.
+    pub fn bursty(seed: u64, on_rate_per_s: f64, burst: u64, idle: Duration) -> Result<ArrivalGen> {
+        ensure!(
+            on_rate_per_s > 0.0 && on_rate_per_s.is_finite(),
+            "on-rate must be a positive finite number (got {on_rate_per_s})"
+        );
+        ensure!(burst >= 1, "burst must be >= 1 (got {burst})");
+        Ok(ArrivalGen {
+            kind: ArrivalKind::Bursty,
+            rng: Rng::new(seed),
+            mean_gap_s: 1.0 / on_rate_per_s,
+            burst,
+            idle,
+            left_in_burst: burst,
+        })
+    }
+
+    pub fn kind(&self) -> ArrivalKind {
+        self.kind
+    }
+
+    /// Gap before the next arrival. Exponential via inverse CDF
+    /// (`u ∈ [0, 1)` keeps `1 − u > 0`, so the log is finite); bursty
+    /// generators splice the fixed idle gap in front of each new burst.
+    pub fn next_gap(&mut self) -> Duration {
+        let u = self.rng.f64();
+        let exp_s = -(1.0 - u).ln() * self.mean_gap_s;
+        let mut gap = Duration::from_secs_f64(exp_s);
+        if self.kind == ArrivalKind::Bursty {
+            if self.left_in_burst == 0 {
+                gap += self.idle;
+                self.left_in_burst = self.burst;
+            }
+            self.left_in_burst -= 1;
+        }
+        gap
+    }
+
+    /// Cumulative arrival offsets for `jobs` arrivals (first arrival at
+    /// `next_gap()`, not at zero). Consumes generator state; replay by
+    /// cloning or re-seeding.
+    pub fn schedule(&mut self, jobs: u64) -> Vec<Duration> {
+        let mut t = Duration::ZERO;
+        (0..jobs)
+            .map(|_| {
+                t += self.next_gap();
+                t
+            })
+            .collect()
+    }
+}
+
+// ------------------------------------------------------------- requests
+
+/// A client submission: the operands plus per-job knobs. The daemon
+/// assigns the job id.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// Operand digits, LSB-first in the daemon machine's base.
+    pub a: Vec<u32>,
+    pub b: Vec<u32>,
+    /// Requested processors (shard sizing rounds up the ladder).
+    pub procs: usize,
+    /// Force a scheme; `None` = hybrid dispatch.
+    pub algo: Option<Algorithm>,
+    /// The job's own memory bound (enforced at admission).
+    pub mem_cap: Option<u64>,
+    /// Relative deadline; `None` falls back to the daemon default.
+    pub deadline: Option<Duration>,
+}
+
+/// Sentinel for "no value" in the fixed-width frame fields.
+const FRAME_NONE: u64 = u64::MAX;
+
+impl Request {
+    /// Frame magic, `"COPM"` big-endian-readable in a hex dump.
+    pub const MAGIC: u32 = 0x434F_504D;
+    /// Frame format version.
+    pub const VERSION: u8 = 1;
+
+    /// Serialize to the daemon's little-endian wire frame:
+    ///
+    /// ```text
+    /// u32 magic  u8 version  u8 algo(0 hybrid|1 copsim|2 copk)
+    /// u16 reserved  u32 procs  u64 mem_cap(MAX=none)
+    /// u64 deadline_µs(MAX=none)  u32 a_len  u32 b_len
+    /// a_len×u32 digits  b_len×u32 digits
+    /// ```
+    ///
+    /// The in-process API never serializes; this is the socket contract
+    /// the future `SocketMachine` listener reuses (module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(36 + 4 * (self.a.len() + self.b.len()));
+        out.extend_from_slice(&Self::MAGIC.to_le_bytes());
+        out.push(Self::VERSION);
+        out.push(match self.algo {
+            None => 0,
+            Some(Algorithm::Copsim) => 1,
+            Some(Algorithm::Copk) => 2,
+        });
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&(self.procs as u32).to_le_bytes());
+        out.extend_from_slice(&self.mem_cap.unwrap_or(FRAME_NONE).to_le_bytes());
+        let dl = self
+            .deadline
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(FRAME_NONE);
+        out.extend_from_slice(&dl.to_le_bytes());
+        out.extend_from_slice(&(self.a.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.b.len() as u32).to_le_bytes());
+        for d in self.a.iter().chain(self.b.iter()) {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out
+    }
+
+    /// Parse one frame produced by [`Request::encode`], rejecting bad
+    /// magic, unknown versions, and truncated payloads.
+    pub fn decode(buf: &[u8]) -> Result<Request> {
+        let mut f = FrameCursor { buf, at: 0 };
+        let magic = f.u32()?;
+        ensure!(
+            magic == Self::MAGIC,
+            "bad frame magic {magic:#010x} (want {:#010x})",
+            Self::MAGIC
+        );
+        let version = f.u8()?;
+        ensure!(
+            version == Self::VERSION,
+            "unsupported frame version {version} (speak {})",
+            Self::VERSION
+        );
+        let algo = match f.u8()? {
+            0 => None,
+            1 => Some(Algorithm::Copsim),
+            2 => Some(Algorithm::Copk),
+            x => bail!("bad algo tag {x} (0 hybrid, 1 copsim, 2 copk)"),
+        };
+        f.take(2)?; // reserved
+        let procs = f.u32()? as usize;
+        let mem_cap = match f.u64()? {
+            FRAME_NONE => None,
+            m => Some(m),
+        };
+        let deadline = match f.u64()? {
+            FRAME_NONE => None,
+            us => Some(Duration::from_micros(us)),
+        };
+        let a_len = f.u32()? as usize;
+        let b_len = f.u32()? as usize;
+        let a = f.digits(a_len)?;
+        let b = f.digits(b_len)?;
+        ensure!(
+            f.at == buf.len(),
+            "trailing garbage: frame ends at {}, buffer has {}",
+            f.at,
+            buf.len()
+        );
+        Ok(Request {
+            a,
+            b,
+            procs,
+            algo,
+            mem_cap,
+            deadline,
+        })
+    }
+}
+
+/// Bounds-checked little-endian reader over one frame buffer.
+struct FrameCursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> FrameCursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("frame length overflow"))?;
+        let s = self.buf.get(self.at..end).ok_or_else(|| {
+            anyhow!("truncated frame: need {end} bytes, have {}", self.buf.len())
+        })?;
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn digits(&mut self, len: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(len.saturating_mul(4))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+// ------------------------------------------------------------ the daemon
+
+/// Why a submission was shed (client-visible taxonomy; module docs,
+/// "Shedding policy").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Estimated queue delay already exceeds the job's deadline.
+    SloEstimate,
+    /// The scheduler's `max_queue` bound is full.
+    QueueFull,
+    /// No shape of the machine fits the job (machine-wide cap).
+    Unfittable,
+    /// The job's own `mem_cap` is the binding constraint.
+    JobCap,
+}
+
+/// Outcome of [`Daemon::submit`]: admitted with a reply channel, or
+/// shed synchronously (reject-early — the caller learns immediately).
+#[derive(Debug)]
+pub enum Submission {
+    Admitted(Receiver<Result<JobResult>>),
+    Shed { reason: ShedReason, error: Error },
+}
+
+/// Daemon configuration: the scheduler it wraps plus the SLO policy.
+#[derive(Clone)]
+pub struct DaemonConfig {
+    pub sched: SchedulerConfig,
+    /// Deadline applied to requests that carry none (`None` = jobs
+    /// without their own deadline never expire and are never
+    /// SLO-shed).
+    pub default_deadline: Option<Duration>,
+    /// SLO shed threshold multiplier: shed a deadlined job up front
+    /// when `estimated_queue_delay > deadline × shed_headroom`. `1.0`
+    /// sheds exactly at the estimate; `< 1.0` sheds earlier
+    /// (conservative); `0.0` disables the estimate rung entirely
+    /// (queue-bound and dequeue-expiry rungs still apply).
+    pub shed_headroom: f64,
+    /// Seed for the service-time EWMA before the first completion, µs.
+    /// Start it near the expected per-job wall so the estimate rung is
+    /// neither blind (0 would never shed until a completion lands) nor
+    /// trigger-happy at cold start.
+    pub init_service_us: u64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            sched: SchedulerConfig::default(),
+            default_deadline: None,
+            shed_headroom: 1.0,
+            init_service_us: 200,
+        }
+    }
+}
+
+/// Daemon-level counters ([`Scheduler`] keeps its own; a
+/// [`ServingReport`] merges both).
+#[derive(Debug, Default)]
+pub struct DaemonStats {
+    /// Every `submit` call.
+    pub offered: AtomicU64,
+    /// Submissions the scheduler accepted.
+    pub admitted: AtomicU64,
+    /// Shed by the SLO estimate before queueing.
+    pub shed_slo: AtomicU64,
+    /// Shed by the scheduler's queue bound.
+    pub shed_queue_full: AtomicU64,
+    /// Rejected as unfittable (machine-wide or the job's own cap) —
+    /// malformed work, not load.
+    pub rejected_unfittable: AtomicU64,
+    /// EWMA of completed jobs' end-to-end wall time, µs (α = 1/8).
+    pub ewma_service_us: AtomicU64,
+}
+
+/// The always-on serving daemon: a long-lived [`Scheduler`] plus the
+/// SLO shedding policy. `submit` is `&self` and thread-safe — clients
+/// on any thread submit concurrently; replies arrive on per-job
+/// channels.
+pub struct Daemon {
+    sched: Scheduler,
+    cfg: DaemonConfig,
+    next_id: AtomicU64,
+    pub stats: DaemonStats,
+}
+
+impl Daemon {
+    /// Build the shared machine and start serving.
+    pub fn start(cfg: DaemonConfig, leaf: LeafRef) -> Daemon {
+        let sched = Scheduler::start(cfg.sched.clone(), leaf);
+        let stats = DaemonStats::default();
+        stats
+            .ewma_service_us
+            .store(cfg.init_service_us.max(1), Ordering::Relaxed);
+        Daemon {
+            sched,
+            cfg,
+            next_id: AtomicU64::new(0),
+            stats,
+        }
+    }
+
+    /// The wrapped scheduler (stats, fault counters).
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.sched
+    }
+
+    /// Machine digit base (for clients generating operands).
+    pub fn base(&self) -> Base {
+        self.sched.config().base
+    }
+
+    /// Queue-delay estimate behind the SLO rung: jobs ahead of this one
+    /// × mean service time ÷ runner parallelism. Deliberately crude —
+    /// it uses end-to-end wall (queue wait included) as the service
+    /// EWMA, which over-estimates under backlog and so sheds
+    /// *conservatively* exactly when the queue is deepest (decision
+    /// entry in DESIGN.md).
+    pub fn estimated_queue_delay(&self) -> Duration {
+        let waiting = self.sched.stats.in_flight.load(Ordering::Relaxed);
+        let ewma = self.stats.ewma_service_us.load(Ordering::Relaxed);
+        let runners = self.sched.config().runners.max(1) as u64;
+        Duration::from_micros(waiting.saturating_mul(ewma) / runners)
+    }
+
+    /// Fold a completed job's end-to-end wall into the service EWMA
+    /// (α = 1/8). [`run_open_loop`] calls this per completion; external
+    /// clients should too, or the estimate goes stale at `init`.
+    pub fn note_service(&self, wall: Duration) {
+        let us = (wall.as_micros() as u64).max(1);
+        let _ = self
+            .stats
+            .ewma_service_us
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |old| {
+                Some((old.saturating_mul(7).saturating_add(us)) / 8)
+            });
+    }
+
+    /// Submit one request: shed early (SLO estimate) or hand it to the
+    /// scheduler, mapping typed rejections to [`ShedReason`]s. Never
+    /// blocks on job execution.
+    pub fn submit(&self, req: Request) -> Submission {
+        self.stats.offered.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let deadline = req.deadline.or(self.cfg.default_deadline);
+        if let (Some(dl), true) = (deadline, self.cfg.shed_headroom > 0.0) {
+            let est = self.estimated_queue_delay();
+            if est.as_secs_f64() > dl.as_secs_f64() * self.cfg.shed_headroom {
+                self.stats.shed_slo.fetch_add(1, Ordering::Relaxed);
+                return Submission::Shed {
+                    reason: ShedReason::SloEstimate,
+                    error: anyhow!(
+                        "job {id} shed before queueing: estimated queue delay {est:?} \
+                         exceeds deadline {dl:?} × headroom {}",
+                        self.cfg.shed_headroom
+                    ),
+                };
+            }
+        }
+        let mut spec = JobSpec::new(id, req.a, req.b);
+        spec.procs = req.procs;
+        spec.algo = req.algo;
+        spec.mem_cap = req.mem_cap;
+        spec.deadline = deadline;
+        match self.sched.try_submit(spec) {
+            Ok(rx) => {
+                self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                Submission::Admitted(rx)
+            }
+            Err(rej) => {
+                let reason = match rej.kind {
+                    RejectKind::QueueFull => {
+                        self.stats.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                        ShedReason::QueueFull
+                    }
+                    RejectKind::Unfittable => {
+                        self.stats.rejected_unfittable.fetch_add(1, Ordering::Relaxed);
+                        ShedReason::Unfittable
+                    }
+                    RejectKind::JobCapUnfittable => {
+                        self.stats.rejected_unfittable.fetch_add(1, Ordering::Relaxed);
+                        ShedReason::JobCap
+                    }
+                };
+                Submission::Shed {
+                    reason,
+                    error: rej.error,
+                }
+            }
+        }
+    }
+
+    /// Drain in-flight jobs and tear down the scheduler.
+    pub fn shutdown(self) -> Result<()> {
+        self.sched.shutdown()
+    }
+}
+
+// ------------------------------------------------------------- workload
+
+/// Deterministic per-index request generation: request `i`'s operands
+/// come from `Rng::new(seed ⊻ mix(i))`, so any request regenerates from
+/// its index alone — no shared stream to replay from the start. On a
+/// fresh daemon driven by [`run_open_loop`], daemon job ids equal
+/// workload indices (one driver, ids assigned in submission order), so
+/// [`Workload::spec`] rebuilds the exact `JobSpec` of a collected
+/// [`JobResult`] for dedicated-machine verification.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub seed: u64,
+    /// Operand digits per side.
+    pub n: usize,
+    /// Machine base exponent (digits are in `[0, 2^base_log2)`).
+    pub base_log2: u32,
+    /// Requested processors per job.
+    pub procs: usize,
+    pub algo: Option<Algorithm>,
+}
+
+impl Default for Workload {
+    fn default() -> Self {
+        Workload {
+            seed: 0xDAE0,
+            n: 256,
+            base_log2: 16,
+            procs: 4,
+            algo: Some(Algorithm::Copsim),
+        }
+    }
+}
+
+impl Workload {
+    fn rng_for(&self, i: u64) -> Rng {
+        Rng::new(self.seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// The `i`-th request (no deadline — the daemon default applies).
+    pub fn request(&self, i: u64) -> Request {
+        let mut rng = self.rng_for(i);
+        Request {
+            a: rng.digits(self.n, self.base_log2),
+            b: rng.digits(self.n, self.base_log2),
+            procs: self.procs,
+            algo: self.algo,
+            mem_cap: None,
+            deadline: None,
+        }
+    }
+
+    /// The `JobSpec` the daemon built for job `id` (fresh-daemon id ==
+    /// workload index; see type docs) — for replaying a collected job
+    /// on a dedicated machine.
+    pub fn spec(&self, id: u64) -> JobSpec {
+        let req = self.request(id);
+        let mut spec = JobSpec::new(id, req.a, req.b);
+        spec.procs = req.procs;
+        spec.algo = req.algo;
+        spec
+    }
+}
+
+// ------------------------------------------------------- open-loop runs
+
+/// One open-loop run: the arrival schedule, how many jobs, and what to
+/// do with completions.
+#[derive(Clone, Debug)]
+pub struct OpenLoop {
+    pub arrivals: ArrivalGen,
+    pub jobs: u64,
+    pub workload: Workload,
+    /// Bignum-verify every completed product against a school-method
+    /// reference (the soak suites' correctness leg).
+    pub verify: bool,
+    /// Keep completed [`JobResult`]s in the report (for cost-identity
+    /// checks; off for big soaks to bound memory).
+    pub collect: bool,
+}
+
+/// Outcome of [`run_open_loop`]: merged daemon + scheduler counter
+/// deltas, sorted latencies, and (if collected) the results.
+#[derive(Debug)]
+pub struct ServingReport {
+    pub offered: u64,
+    pub completed: u64,
+    /// Jobs that ran and errored (retry budget exhausted, machine
+    /// degraded) — NOT shed jobs.
+    pub failed: u64,
+    pub shed_slo: u64,
+    pub shed_queue_full: u64,
+    /// Shed at dequeue by deadline expiry.
+    pub shed_expired: u64,
+    pub rejected_unfittable: u64,
+    pub retries: u64,
+    pub wall: Duration,
+    /// Completed jobs' end-to-end latency, µs, ascending.
+    pub lat_us: Vec<u64>,
+    /// Completed results (empty unless `OpenLoop::collect`).
+    pub results: Vec<JobResult>,
+}
+
+impl ServingReport {
+    /// Load-regulation sheds (SLO + queue + expiry). Unfittable
+    /// rejections are excluded: they are malformed work, not load.
+    pub fn shed_total(&self) -> u64 {
+        self.shed_slo + self.shed_queue_full + self.shed_expired
+    }
+
+    /// Completions per second of run wall time (0 for a ~zero wall).
+    pub fn goodput_per_s(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs < 1e-9 {
+            0.0
+        } else {
+            self.completed as f64 / secs
+        }
+    }
+
+    /// Latency percentile in µs (0 when nothing completed — pair with
+    /// `completed` when reading).
+    pub fn percentile_us(&self, q: f64) -> u64 {
+        percentile(&self.lat_us, q).unwrap_or(0)
+    }
+
+    /// Error when load-regulation sheds exceed `max_frac` of offered
+    /// jobs — the SLO budget gate the soak legs assert.
+    pub fn check_shed_budget(&self, max_frac: f64) -> Result<()> {
+        let frac = if self.offered == 0 {
+            0.0
+        } else {
+            self.shed_total() as f64 / self.offered as f64
+        };
+        ensure!(
+            frac <= max_frac,
+            "shed budget exceeded: {}/{} jobs shed ({frac:.3} > {max_frac:.3} allowed; \
+             {} slo-early, {} queue-full, {} deadline-expired)",
+            self.shed_total(),
+            self.offered,
+            self.shed_slo,
+            self.shed_queue_full,
+            self.shed_expired
+        );
+        Ok(())
+    }
+
+    /// Two-line human summary (never panics on an all-shed run).
+    pub fn summary(&self) -> String {
+        let mut lat = self.lat_us.clone();
+        let head = latency_summary(self.offered as usize, self.wall, &mut lat);
+        format!(
+            "{head}\n  p999={}µs goodput={:.1} jobs/s | shed: {} slo-early, {} queue-full, \
+             {} deadline-expired | {} unfittable, {} failed, {} retried",
+            fmt_u64(self.percentile_us(0.999)),
+            self.goodput_per_s(),
+            self.shed_slo,
+            self.shed_queue_full,
+            self.shed_expired,
+            self.rejected_unfittable,
+            self.failed,
+            self.retries,
+        )
+    }
+}
+
+/// Counter snapshot for delta-based reporting (the daemon may serve
+/// several runs back to back).
+struct Counters {
+    offered: u64,
+    completed: u64,
+    failed: u64,
+    shed_slo: u64,
+    shed_queue_full: u64,
+    shed_expired: u64,
+    rejected_unfittable: u64,
+    retries: u64,
+}
+
+fn snapshot(d: &Daemon) -> Counters {
+    let s = &d.stats;
+    let ss = &d.scheduler().stats;
+    Counters {
+        offered: s.offered.load(Ordering::Relaxed),
+        completed: ss.completed.load(Ordering::Relaxed),
+        failed: ss.failed.load(Ordering::Relaxed),
+        shed_slo: s.shed_slo.load(Ordering::Relaxed),
+        shed_queue_full: s.shed_queue_full.load(Ordering::Relaxed),
+        shed_expired: ss.shed_expired.load(Ordering::Relaxed),
+        rejected_unfittable: s.rejected_unfittable.load(Ordering::Relaxed),
+        retries: ss.retries.load(Ordering::Relaxed),
+    }
+}
+
+/// School-method reference product, trimmed like [`JobResult::product`].
+fn reference_product(a: &[u32], b: &[u32], base: Base) -> Vec<u32> {
+    let mut ops = Ops::default();
+    let mut prod = crate::bignum::mul::mul_school(a, b, base, &mut ops);
+    let keep = crate::bignum::core::normalized_len(&prod).max(1);
+    prod.truncate(keep);
+    prod
+}
+
+/// Drive the daemon with one open-loop run: submit on the arrival
+/// schedule (never waiting for completions — when the driver falls
+/// behind it submits immediately to catch up, preserving offered
+/// count), collect replies on a separate thread, and report merged
+/// counter deltas. Errors on a product-verification mismatch.
+pub fn run_open_loop(daemon: &Daemon, load: &OpenLoop) -> Result<ServingReport> {
+    let schedule = load.arrivals.clone().schedule(load.jobs);
+    let before = snapshot(daemon);
+    let base = daemon.base();
+    let collect = load.collect;
+    let (tx, rx) = channel::<(u64, Option<Vec<u32>>, Receiver<Result<JobResult>>)>();
+    let t0 = Instant::now();
+    let (mut lat_us, results, verify_err) = std::thread::scope(|s| {
+        let collector = s.spawn(move || {
+            let mut lat = Vec::new();
+            let mut out = Vec::new();
+            let mut verr: Option<String> = None;
+            while let Ok((i, want, job_rx)) = rx.recv() {
+                match job_rx.recv() {
+                    Ok(Ok(res)) => {
+                        daemon.note_service(res.wall);
+                        lat.push(res.wall.as_micros() as u64);
+                        if let Some(w) = want {
+                            if res.product != w && verr.is_none() {
+                                verr = Some(format!(
+                                    "request {i} (job {}): product mismatch vs school reference",
+                                    res.id
+                                ));
+                            }
+                        }
+                        if collect {
+                            out.push(res);
+                        }
+                    }
+                    // Failed or deadline-expired: counted via scheduler
+                    // stats; the reply error itself is not a run error.
+                    Ok(Err(_)) => {}
+                    Err(_) => {}
+                }
+            }
+            (lat, out, verr)
+        });
+        for (i, offset) in schedule.iter().enumerate() {
+            let target = t0 + *offset;
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+            let req = load.workload.request(i as u64);
+            let want = load
+                .verify
+                .then(|| reference_product(&req.a, &req.b, base));
+            if let Submission::Admitted(job_rx) = daemon.submit(req) {
+                tx.send((i as u64, want, job_rx))
+                    .expect("collector outlives the driver");
+            }
+        }
+        drop(tx);
+        collector.join().expect("collector thread panicked")
+    });
+    let wall = t0.elapsed();
+    if let Some(msg) = verify_err {
+        bail!("open-loop verification failed: {msg}");
+    }
+    let after = snapshot(daemon);
+    lat_us.sort_unstable();
+    Ok(ServingReport {
+        offered: after.offered - before.offered,
+        completed: after.completed - before.completed,
+        failed: after.failed - before.failed,
+        shed_slo: after.shed_slo - before.shed_slo,
+        shed_queue_full: after.shed_queue_full - before.shed_queue_full,
+        shed_expired: after.shed_expired - before.shed_expired,
+        rejected_unfittable: after.rejected_unfittable - before.rejected_unfittable,
+        retries: after.retries - before.retries,
+        wall,
+        lat_us,
+        results,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+
+    #[test]
+    fn arrival_replay_is_deterministic() {
+        let s1 = ArrivalGen::poisson(7, 800.0).unwrap().schedule(64);
+        let s2 = ArrivalGen::poisson(7, 800.0).unwrap().schedule(64);
+        assert_eq!(s1, s2, "same seed must replay the same schedule");
+        let s3 = ArrivalGen::poisson(8, 800.0).unwrap().schedule(64);
+        assert_ne!(s1, s3, "different seeds must differ");
+        // Mean-gap sanity: 4096 arrivals at 800/s land near 5.12 s.
+        let last = *ArrivalGen::poisson(9, 800.0)
+            .unwrap()
+            .schedule(4096)
+            .last()
+            .unwrap();
+        assert!(
+            (2.5..10.0).contains(&last.as_secs_f64()),
+            "poisson mean off: 4096 arrivals at 800/s ended at {last:?}"
+        );
+    }
+
+    #[test]
+    fn bursty_schedule_shows_idle_gaps() {
+        let idle = Duration::from_millis(50);
+        let sched = ArrivalGen::bursty(7, 1000.0, 8, idle).unwrap().schedule(24);
+        assert_eq!(
+            sched,
+            ArrivalGen::bursty(7, 1000.0, 8, idle).unwrap().schedule(24),
+            "bursty replay"
+        );
+        // Arrival 8 opens the second burst: its gap carries the idle.
+        let burst_gap = sched[8] - sched[7];
+        assert!(burst_gap >= idle, "inter-burst gap {burst_gap:?} < idle");
+        // Intra-burst gaps at 1000/s are far below the idle gap.
+        let intra = sched[7] - sched[6];
+        assert!(intra < idle, "intra-burst gap {intra:?} not < idle");
+    }
+
+    #[test]
+    fn request_frame_round_trips_and_rejects_corruption() {
+        let req = Request {
+            a: vec![1, 2, 3],
+            b: vec![4, 5],
+            procs: 12,
+            algo: Some(Algorithm::Copk),
+            mem_cap: Some(4096),
+            deadline: Some(Duration::from_millis(250)),
+        };
+        let buf = req.encode();
+        assert_eq!(Request::decode(&buf).unwrap(), req);
+        // None fields round-trip through the MAX sentinels.
+        let bare = Request {
+            algo: None,
+            mem_cap: None,
+            deadline: None,
+            ..req.clone()
+        };
+        assert_eq!(Request::decode(&bare.encode()).unwrap(), bare);
+        // Corrupt magic, truncation, and trailing garbage all reject.
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(Request::decode(&bad).is_err(), "bad magic");
+        assert!(Request::decode(&buf[..10]).is_err(), "truncated");
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(Request::decode(&long).is_err(), "trailing garbage");
+    }
+
+    #[test]
+    fn slo_estimate_sheds_before_queueing() {
+        // A pessimistic service EWMA (60 s/job) plus one occupied
+        // runner makes the estimate dwarf any deadline: the deadlined
+        // submission must shed synchronously, before queueing.
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 4,
+                    runners: 1,
+                    ..Default::default()
+                },
+                init_service_us: 60_000_000,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        // Occupy the runner with a big no-deadline job (no deadline →
+        // the SLO rung never sheds it).
+        let wl = Workload {
+            n: 4096,
+            ..Workload::default()
+        };
+        let Submission::Admitted(rx) = daemon.submit(wl.request(0)) else {
+            panic!("no-deadline job must be admitted");
+        };
+        let mut tight = wl.request(1);
+        tight.deadline = Some(Duration::from_millis(10));
+        match daemon.submit(tight) {
+            Submission::Shed { reason, error } => {
+                assert_eq!(reason, ShedReason::SloEstimate);
+                assert!(error.to_string().contains("estimated queue delay"));
+            }
+            Submission::Admitted(_) => panic!("estimate rung must shed"),
+        }
+        rx.recv().unwrap().unwrap();
+        assert_eq!(daemon.stats.offered.load(Ordering::Relaxed), 2);
+        assert_eq!(daemon.stats.admitted.load(Ordering::Relaxed), 1);
+        assert_eq!(daemon.stats.shed_slo.load(Ordering::Relaxed), 1);
+        daemon.shutdown().unwrap();
+    }
+
+    #[test]
+    fn scheduler_rejections_map_to_shed_reasons() {
+        // Queue bound → QueueFull.
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    max_queue: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let wl = Workload {
+            n: 16,
+            ..Workload::default()
+        };
+        let Submission::Shed { reason, .. } = daemon.submit(wl.request(0)) else {
+            panic!("max_queue = 0 must shed");
+        };
+        assert_eq!(reason, ShedReason::QueueFull);
+        assert_eq!(daemon.stats.shed_queue_full.load(Ordering::Relaxed), 1);
+        daemon.shutdown().unwrap();
+
+        // Machine too small → Unfittable; own cap binding → JobCap.
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 16,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut wide = wl.request(1);
+        wide.procs = 64;
+        let Submission::Shed { reason, .. } = daemon.submit(wide) else {
+            panic!("64-proc job on a 16-proc machine must reject");
+        };
+        assert_eq!(reason, ShedReason::Unfittable);
+        let mut capped = Workload {
+            n: 1024,
+            ..Workload::default()
+        }
+        .request(2);
+        capped.mem_cap = Some(64);
+        let Submission::Shed { reason, .. } = daemon.submit(capped) else {
+            panic!("64-word own cap at n = 1024 must reject");
+        };
+        assert_eq!(reason, ShedReason::JobCap);
+        assert_eq!(daemon.stats.rejected_unfittable.load(Ordering::Relaxed), 2);
+        daemon.shutdown().unwrap();
+    }
+
+    #[test]
+    fn open_loop_accounting_balances() {
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 8,
+                    runners: 2,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(3, 50_000.0).unwrap(),
+            jobs: 16,
+            workload: Workload {
+                n: 64,
+                ..Workload::default()
+            },
+            verify: true,
+            collect: true,
+        };
+        let rep = run_open_loop(&daemon, &load).unwrap();
+        assert_eq!(rep.offered, 16);
+        assert_eq!(
+            rep.completed + rep.failed + rep.shed_total() + rep.rejected_unfittable,
+            rep.offered,
+            "every offered job must be accounted exactly once"
+        );
+        // No deadline, queue 1024, fitting jobs: all complete.
+        assert_eq!(rep.completed, 16);
+        assert_eq!(rep.lat_us.len(), 16);
+        assert_eq!(rep.results.len(), 16);
+        assert!(rep.summary().contains("p50="), "got: {}", rep.summary());
+        assert!(rep.check_shed_budget(0.0).is_ok());
+        daemon.shutdown().unwrap();
+    }
+}

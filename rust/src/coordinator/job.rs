@@ -29,6 +29,11 @@ pub struct JobSpec {
     /// sharded scheduler fixes the topology per shared machine instead
     /// (like the engine).
     pub topology: TopologyKind,
+    /// Relative deadline, measured from submission. A job still queued
+    /// when the budget expires is shed at dequeue instead of run (the
+    /// serving daemon's SLO path — see `coordinator::daemon`). `None`
+    /// (the default) never expires.
+    pub deadline: Option<Duration>,
 }
 
 impl JobSpec {
@@ -42,6 +47,7 @@ impl JobSpec {
             algo: None,
             engine: EngineKind::Sim,
             topology: TopologyKind::FullyConnected,
+            deadline: None,
         }
     }
 

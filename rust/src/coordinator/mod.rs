@@ -20,13 +20,21 @@
 //! * [`batcher`] — dynamic batcher: concurrent leaf products from
 //!   different workers are coalesced into one batched artifact
 //!   execution (padding the batch dimension), amortizing PJRT dispatch.
+//! * [`daemon`] — always-on serving: a persistent scheduler under
+//!   seeded open-loop arrivals (Poisson/bursty) with per-job deadlines
+//!   and SLO-aware early shedding; the layer behind `copmul daemon`.
 
 pub mod batcher;
+pub mod daemon;
 pub mod job;
 pub mod router;
 pub mod scheduler;
 
 pub use batcher::{BatchExecutor, BatchingXlaLeaf};
+pub use daemon::{
+    run_open_loop, ArrivalGen, ArrivalKind, Daemon, DaemonConfig, DaemonStats, OpenLoop, Request,
+    ServingReport, ShedReason, Submission, Workload,
+};
 pub use job::{JobResult, JobSpec};
 pub use router::{execute_on, Coordinator, CoordinatorConfig, CoordinatorStats};
-pub use scheduler::{plan_shard, Scheduler, SchedulerConfig, SchedulerStats};
+pub use scheduler::{plan_shard, RejectKind, Scheduler, SchedulerConfig, SchedulerStats};

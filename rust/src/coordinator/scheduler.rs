@@ -41,10 +41,24 @@
 //! `submit` rejects immediately when the queue is full
 //! (`max_queue`), when no processor-count shape the job's scheme
 //! accepts fits the machine, or when even the largest shard leaves the
-//! job's theory memory footprint above `M`. A job that fails mid-run
-//! has its shard purged (every resident slot dropped) before the
-//! processors return to the pool, so one bad job cannot poison the
-//! machine for its successors.
+//! job's theory memory footprint above `M`. A job carrying its *own*
+//! `JobSpec::mem_cap` is additionally rejected when no shape fits that
+//! tighter bound — with a distinct error so callers can tell "this job
+//! asked for less memory than it needs" from "this machine is too
+//! small" ([`try_submit`](Scheduler::try_submit) exposes the
+//! distinction as a typed [`RejectKind`]; `submit` flattens it to the
+//! error message). A job that fails mid-run has its shard purged
+//! (every resident slot dropped) before the processors return to the
+//! pool, so one bad job cannot poison the machine for its successors.
+//!
+//! Jobs may also carry a relative [`JobSpec::deadline`]: a job still
+//! queued when its budget expires is **shed at dequeue** — counted in
+//! `SchedulerStats::shed_expired`, replied to with an error, never run.
+//! Running jobs are not preempted (a shard mid-multiplication cannot be
+//! safely unwound), so the deadline bounds *queue wait*, which is the
+//! unbounded quantity under open-loop load. The serving daemon
+//! ([`super::daemon`]) layers SLO-aware early shedding on top of these
+//! hooks.
 //!
 //! ## Fault recovery
 //!
@@ -82,7 +96,7 @@ use crate::algorithms::leaf::LeafRef;
 use crate::algorithms::Algorithm;
 use crate::bignum::{Base, Ops};
 use crate::config::EngineKind;
-use crate::error::{anyhow, bail, Context, Result};
+use crate::error::{anyhow, bail, Context, Error, Result};
 use crate::sim::{
     Clock, FaultConfig, FaultyMachine, Machine, MachineApi, MachineStats, ProcId, ProcView, Seq,
     Slot, SlotComputation, ThreadedMachine, TopologyKind, TopologyRef,
@@ -514,9 +528,14 @@ pub struct SchedulerConfig {
     pub base: Base,
     /// Execution engine backing the shared machine. Per-job
     /// `JobSpec::engine` is ignored here — there is one machine.
-    /// Per-job `JobSpec::mem_cap` participates in shard *sizing* (min
-    /// with this machine-wide cap) but is not separately enforced at
-    /// runtime; use the [`super::Coordinator`] for exact per-job caps.
+    /// Per-job `JobSpec::mem_cap` is enforced **at admission**: the
+    /// shard plan must satisfy the stricter of the job's cap and this
+    /// machine-wide cap, and a job whose own cap no shape can meet is
+    /// rejected with a distinct error ([`RejectKind::JobCapUnfittable`])
+    /// even when the machine cap alone would admit it. Mid-run *ledger*
+    /// enforcement stays machine-wide (one memory ledger per
+    /// processor); use the [`super::Coordinator`] for a dedicated
+    /// machine built at exactly the job's cap.
     pub engine: EngineKind,
     /// Network topology of the shared machine (per-machine, like the
     /// engine; per-job `JobSpec::topology` is ignored here). NOTE: the
@@ -578,6 +597,11 @@ pub struct SchedulerStats {
     /// Failed attempts that were requeued (completed jobs with
     /// `attempts > 1` contribute `attempts - 1` each).
     pub retries: AtomicU64,
+    /// Jobs shed at dequeue because their [`JobSpec::deadline`] expired
+    /// while they waited in the queue (counted in neither `completed`
+    /// nor `failed` — shedding is the admission policy working, not a
+    /// job failing).
+    pub shed_expired: AtomicU64,
     /// Processors pulled from service by the quarantine policy.
     pub procs_quarantined: AtomicU64,
     /// High-water mark of concurrently running jobs.
@@ -590,6 +614,30 @@ pub struct SchedulerStats {
 }
 
 type Reply = Sender<Result<JobResult>>;
+
+/// Why [`Scheduler::try_submit`] turned a job away. The daemon's
+/// shedding policy maps these to client-visible shed reasons; plain
+/// [`Scheduler::submit`] callers get the flattened error message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectKind {
+    /// `max_queue` jobs already queued or running.
+    QueueFull,
+    /// No shape of this machine fits the job under the machine-wide
+    /// memory cap — the machine is too small for the job.
+    Unfittable,
+    /// The job's *own* `JobSpec::mem_cap` is the binding constraint:
+    /// the machine-wide cap alone would admit it, but every accepted
+    /// shape's MI footprint exceeds the job's cap.
+    JobCapUnfittable,
+}
+
+/// A typed admission rejection: the kind plus the human-readable error
+/// `submit` would have returned.
+#[derive(Debug)]
+pub struct Rejection {
+    pub kind: RejectKind,
+    pub error: Error,
+}
 
 /// The sharded scheduler (see module docs).
 /// A queued job: spec, planned shard size, reply channel, and the
@@ -641,6 +689,24 @@ impl Scheduler {
                 let Ok((spec, shard_size, reply, submitted_at)) = msg else {
                     break;
                 };
+                // Deadline-aware dequeue: a job whose budget expired
+                // while it waited is shed here — never run, never
+                // counted completed or failed.
+                if let Some(dl) = spec.deadline {
+                    let queued = submitted_at.elapsed();
+                    if queued > dl {
+                        stats.shed_expired.fetch_add(1, Ordering::Relaxed);
+                        stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+                        let _ = reply.send(Err(anyhow!(
+                            "job {} shed: deadline {:?} expired before a shard \
+                             was free (queued {:?})",
+                            spec.id,
+                            dl,
+                            queued
+                        )));
+                        continue;
+                    }
+                }
                 let t0 = submitted_at;
                 let mut res =
                     run_with_recovery(&shared, &cfg, &pool, &stats, &spec, shard_size, &leaf);
@@ -668,6 +734,11 @@ impl Scheduler {
         }
     }
 
+    /// The configuration this scheduler was started with.
+    pub fn config(&self) -> &SchedulerConfig {
+        &self.cfg
+    }
+
     /// Total injected faults recorded by the shared machine's plan
     /// (zero without a plan).
     pub fn faults_injected(&self) -> u64 {
@@ -681,33 +752,65 @@ impl Scheduler {
     }
 
     /// Admit a job (or reject it — see module docs); the result arrives
-    /// on the returned channel once a shard has run it.
+    /// on the returned channel once a shard has run it. Like
+    /// [`Scheduler::try_submit`] with the rejection flattened to its
+    /// error message.
     pub fn submit(&self, spec: JobSpec) -> Result<Receiver<Result<JobResult>>> {
+        self.try_submit(spec).map_err(|r| r.error)
+    }
+
+    /// Book-keep a rejection: release the reserved queue slot, bump the
+    /// counter, and wrap the error with its kind.
+    fn rejected(&self, kind: RejectKind, error: Error) -> Rejection {
+        self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
+        self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        Rejection { kind, error }
+    }
+
+    /// [`Scheduler::submit`] with a typed rejection, so callers (the
+    /// serving daemon's shedding policy) can distinguish a full queue
+    /// from an unfittable job without string-matching.
+    pub fn try_submit(
+        &self,
+        spec: JobSpec,
+    ) -> std::result::Result<Receiver<Result<JobResult>>, Rejection> {
         // Reserve the queue slot first (fetch_add, not check-then-act:
         // concurrent submitters must not over-admit past max_queue),
         // releasing it on every rejection path.
         let prior = self.stats.in_flight.fetch_add(1, Ordering::Relaxed);
         if prior >= self.cfg.max_queue as u64 {
-            self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
-            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-            bail!(
+            let e = anyhow!(
                 "scheduler queue full ({prior} jobs in flight, max {})",
                 self.cfg.max_queue
             );
+            return Err(self.rejected(RejectKind::QueueFull, e));
         }
         // A job's own memory bound tightens its shard plan (the shard
-        // grows until the footprint fits the stricter of the two caps).
-        // Runtime *enforcement* stays machine-wide: the shared machine
-        // was built with `cfg.mem_cap`, there is one ledger per
-        // processor — per-job caps below it are a sizing input, not a
-        // fault line (the Coordinator path enforces them exactly).
+        // grows until the footprint fits the stricter of the two caps),
+        // and is *enforced* here at admission: a job whose own cap no
+        // shape can meet is rejected distinctly, even when the machine
+        // cap alone would admit it. Mid-run ledger enforcement stays
+        // machine-wide (one ledger per processor — the Coordinator path
+        // enforces per-job caps exactly at runtime too).
         let cap = effective_cap(&spec, self.cfg.mem_cap);
         let shard_size = match plan_shard(&spec, self.cfg.procs, cap) {
             Ok(s) => s,
             Err(e) => {
-                self.stats.in_flight.fetch_sub(1, Ordering::Relaxed);
-                self.stats.rejected.fetch_add(1, Ordering::Relaxed);
-                return Err(e);
+                let own_cap_binding = cap < self.cfg.mem_cap
+                    && plan_shard(&spec, self.cfg.procs, self.cfg.mem_cap).is_ok();
+                return Err(if own_cap_binding {
+                    let e = anyhow!(
+                        "job {} not admissible under its own mem_cap = {} words/proc: \
+                         every accepted shape's MI footprint exceeds the job's cap \
+                         (the machine-wide cap {} alone would admit it)",
+                        spec.id,
+                        cap,
+                        self.cfg.mem_cap
+                    );
+                    self.rejected(RejectKind::JobCapUnfittable, e)
+                } else {
+                    self.rejected(RejectKind::Unfittable, e)
+                });
             }
         };
         self.stats.admitted.fetch_add(1, Ordering::Relaxed);
@@ -1065,6 +1168,89 @@ mod tests {
             leaf_ref(SchoolLeaf),
         );
         assert!(sched.submit(JobSpec::new(1, vec![1; 8], vec![2; 8])).is_err());
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn per_job_mem_cap_rejected_distinctly_at_admission() {
+        // A machine with effectively unbounded memory admits the job —
+        // unless the job's OWN cap is the binding constraint, which must
+        // reject with the distinct JobCapUnfittable kind. Footprints at
+        // n = 1024 (Theorem 11, 12n/√P): P=4 → 6144, P=16 → 3072 — both
+        // far above the job's 64-word cap.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 16,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut spec = JobSpec::new(0, vec![1; 1024], vec![1; 1024]);
+        spec.algo = Some(Algorithm::Copsim);
+        spec.mem_cap = Some(64);
+        let rej = sched.try_submit(spec.clone()).unwrap_err();
+        assert_eq!(rej.kind, RejectKind::JobCapUnfittable);
+        assert!(
+            rej.error.to_string().contains("own mem_cap"),
+            "distinct message, got: {}",
+            rej.error
+        );
+        assert_eq!(sched.stats.rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.stats.in_flight.load(Ordering::Relaxed), 0);
+        // The same job without its own cap is admitted and completes.
+        spec.mem_cap = None;
+        spec.id = 1;
+        assert!(sched.submit_blocking(spec).is_ok());
+        sched.shutdown().unwrap();
+
+        // When the MACHINE cap is what rejects, the kind is Unfittable.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 4,
+                mem_cap: 64,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut spec = JobSpec::new(2, vec![1; 1024], vec![1; 1024]);
+        spec.algo = Some(Algorithm::Copsim);
+        let rej = sched.try_submit(spec).unwrap_err();
+        assert_eq!(rej.kind, RejectKind::Unfittable);
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_dequeue_not_run() {
+        use std::time::Duration;
+        // One runner: the slow job occupies it while the deadlined job
+        // waits in the queue past its (zero) budget. The waiter must be
+        // shed at dequeue — counted in shed_expired, not failed — and
+        // its reply must carry a deadline error.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 4,
+                runners: 1,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut slow = JobSpec::new(0, vec![1; 2048], vec![1; 2048]);
+        slow.algo = Some(Algorithm::Copsim);
+        let slow_rx = sched.submit(slow).unwrap();
+        let mut tight = JobSpec::new(1, vec![1; 8], vec![2; 8]);
+        tight.algo = Some(Algorithm::Copsim);
+        tight.deadline = Some(Duration::ZERO);
+        let tight_rx = sched.submit(tight).unwrap();
+        let err = tight_rx.recv().unwrap().unwrap_err();
+        assert!(
+            err.to_string().contains("deadline"),
+            "expected a deadline-shed error, got: {err}"
+        );
+        slow_rx.recv().unwrap().unwrap();
+        assert_eq!(sched.stats.shed_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.stats.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(sched.stats.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(sched.stats.in_flight.load(Ordering::Relaxed), 0);
         sched.shutdown().unwrap();
     }
 

@@ -15,6 +15,7 @@ pub mod chaos;
 pub mod engines;
 pub mod primitives;
 pub mod scheduler;
+pub mod serving;
 pub mod systems;
 pub mod topologies;
 
@@ -199,6 +200,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "topologies: measured vs predicted (T, BW, L), both engines",
             run: topologies::e18_topologies,
         },
+        Experiment {
+            id: "E19",
+            paper_ref: "per-mult. bounds under open-loop load",
+            title: "serving daemon: latency vs offered load + zero-fault cost identity",
+            run: serving::e19_serving,
+        },
     ]
 }
 
@@ -223,10 +230,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 18);
+        assert_eq!(reg.len(), 19);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 18);
+        assert_eq!(ids.len(), 19);
     }
 
     #[test]

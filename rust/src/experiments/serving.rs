@@ -1,0 +1,195 @@
+//! E19 — always-on serving under open-loop load: latency and goodput
+//! vs offered arrival rate on both execution engines, plus the
+//! zero-fault cost identity *under load*.
+//!
+//! Unlike E16's closed-loop fleet (submit everything, wait), the
+//! [`crate::coordinator::Daemon`] is driven open-loop: arrivals follow
+//! a seeded Poisson/bursty schedule and never wait for completions, so
+//! offered load can exceed capacity. The first table sweeps offered
+//! rate per engine and reports admitted-job percentiles, goodput, and
+//! the shed breakdown — past saturation, goodput should plateau near
+//! capacity while sheds absorb the excess instead of the queue (and
+//! p99) growing without bound.
+//!
+//! The second table replays every completed job of a verify+collect
+//! run on a dedicated machine ([`Workload::spec`] regenerates the
+//! exact `JobSpec` from the job id) and asserts its `(T, BW, L)`
+//! triple is **bit-identical** to the dedicated run: on the
+//! fully-connected topology, concurrency and shedding change *when* a
+//! job runs, never what it costs — the paper's per-multiplication
+//! bounds hold per job under serving load.
+
+use std::time::Duration;
+
+use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use crate::config::EngineKind;
+use crate::coordinator::{
+    execute_on, run_open_loop, ArrivalGen, Daemon, DaemonConfig, OpenLoop, SchedulerConfig,
+    Workload,
+};
+use crate::error::{ensure, Result};
+use crate::metrics::{fmt_f64, fmt_u64, Table};
+use crate::sim::{Machine, Seq};
+
+const SEED: u64 = 0xE19;
+
+fn daemon_for(engine: EngineKind) -> Daemon {
+    Daemon::start(
+        DaemonConfig {
+            sched: SchedulerConfig {
+                procs: 16,
+                engine,
+                runners: 4,
+                max_queue: 64,
+                ..Default::default()
+            },
+            default_deadline: Some(Duration::from_millis(250)),
+            ..Default::default()
+        },
+        leaf_ref(SchoolLeaf),
+    )
+}
+
+fn workload() -> Workload {
+    Workload {
+        seed: SEED,
+        n: 256,
+        base_log2: 16,
+        procs: 4,
+        algo: Some(crate::algorithms::Algorithm::Copsim),
+    }
+}
+
+pub fn e19_serving() -> Result<Vec<Table>> {
+    const JOBS: u64 = 96;
+    const RATES: [f64; 3] = [400.0, 1600.0, 6400.0];
+    let mut t1 = Table::new(
+        "E19: open-loop serving curve (96 jobs/cell, n = 256, 16 procs / 4 shards, \
+         250 ms deadline; percentiles over admitted completions)",
+        &[
+            "engine",
+            "offered/s",
+            "offered",
+            "completed",
+            "shed",
+            "p50 µs",
+            "p99 µs",
+            "p999 µs",
+            "goodput/s",
+        ],
+    );
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        for (i, &rate) in RATES.iter().enumerate() {
+            let daemon = daemon_for(engine);
+            let load = OpenLoop {
+                arrivals: ArrivalGen::poisson(SEED ^ i as u64, rate)?,
+                jobs: JOBS,
+                workload: workload(),
+                verify: false,
+                collect: false,
+            };
+            let rep = run_open_loop(&daemon, &load)?;
+            daemon.shutdown()?;
+            ensure!(rep.failed == 0, "E19 jobs must not fail on {engine}");
+            t1.row(vec![
+                engine.to_string(),
+                format!("{rate:.0}"),
+                rep.offered.to_string(),
+                rep.completed.to_string(),
+                rep.shed_total().to_string(),
+                fmt_u64(rep.percentile_us(0.50)),
+                fmt_u64(rep.percentile_us(0.99)),
+                fmt_u64(rep.percentile_us(0.999)),
+                fmt_f64(rep.goodput_per_s()),
+            ]);
+        }
+    }
+
+    let mut t2 = Table::new(
+        "E19: zero-fault cost identity under load (verify+collect run; every \
+         completed job's (T, BW, L) replayed on a dedicated machine)",
+        &["engine", "completed", "identical triples", "verdict"],
+    );
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        let daemon = daemon_for(engine);
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED ^ 0x1D, 1600.0)?,
+            jobs: 32,
+            workload: workload(),
+            verify: true,
+            collect: true,
+        };
+        let rep = run_open_loop(&daemon, &load)?;
+        let cfg = daemon.scheduler().config().clone();
+        daemon.shutdown()?;
+        let leaf = leaf_ref(SchoolLeaf);
+        for res in &rep.results {
+            let spec = load.workload.spec(res.id);
+            let shard = res.shard.as_ref().expect("scheduler results carry shards");
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf)?;
+            ensure!(
+                res.cost == solo.critical(),
+                "job {} cost under load differs from dedicated run on {engine}",
+                res.id
+            );
+        }
+        t2.row(vec![
+            engine.to_string(),
+            rep.results.len().to_string(),
+            rep.results.len().to_string(),
+            "bit-identical".to_string(),
+        ]);
+    }
+    Ok(vec![t1, t2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serving_cell_completes_and_sheds_are_accounted() {
+        // One small cell: accounting balances and nothing fails.
+        let daemon = daemon_for(EngineKind::Sim);
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED, 2000.0).unwrap(),
+            jobs: 12,
+            workload: workload(),
+            verify: false,
+            collect: false,
+        };
+        let rep = run_open_loop(&daemon, &load).unwrap();
+        daemon.shutdown().unwrap();
+        assert_eq!(rep.failed, 0);
+        assert_eq!(
+            rep.completed + rep.shed_total() + rep.rejected_unfittable,
+            rep.offered
+        );
+    }
+
+    #[test]
+    fn cost_identity_holds_for_a_collected_job() {
+        let daemon = daemon_for(EngineKind::Sim);
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED ^ 7, 2000.0).unwrap(),
+            jobs: 4,
+            workload: workload(),
+            verify: true,
+            collect: true,
+        };
+        let rep = run_open_loop(&daemon, &load).unwrap();
+        let cfg = daemon.scheduler().config().clone();
+        daemon.shutdown().unwrap();
+        assert!(!rep.results.is_empty());
+        let leaf = leaf_ref(SchoolLeaf);
+        let res = &rep.results[0];
+        let spec = load.workload.spec(res.id);
+        let shard = res.shard.as_ref().unwrap();
+        let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+        let seq = Seq::range(shard.len());
+        execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+        assert_eq!(res.cost, solo.critical());
+    }
+}

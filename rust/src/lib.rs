@@ -47,14 +47,18 @@
 //!   machine carved into per-job shards sized by the paper's memory
 //!   requirements, with admission control, work-stealing, and fault
 //!   recovery — per-job retries with shard-size backoff, safe-mode
-//!   final attempts, processor quarantine), and a dynamic batcher
-//!   dispatching leaf products to the XLA runtime.
-//! * [`experiments`] — one module per paper result (E1–E18), each printing
+//!   final attempts, processor quarantine), a dynamic batcher
+//!   dispatching leaf products to the XLA runtime, and an always-on
+//!   serving daemon ([`coordinator::Daemon`] — seeded open-loop
+//!   arrivals, per-job deadlines, SLO-aware early shedding).
+//! * [`experiments`] — one module per paper result (E1–E19), each printing
 //!   a `paper bound | measured | ratio` table; E15 compares the
 //!   cost-model and threaded execution engines, E16 measures the sharded
 //!   scheduler's throughput and per-job cost inflation, E17 measures
 //!   throughput and cost inflation under injected faults, E18 measures
-//!   vs per-topology predictions on both engines.
+//!   vs per-topology predictions on both engines, E19 measures the
+//!   serving daemon's latency/goodput vs offered open-loop load and the
+//!   zero-fault per-job cost identity under that load.
 //!
 //! See `rust/DESIGN.md` for the architecture notes (including the
 //! two-backend execution-engine split) and the experiment index.

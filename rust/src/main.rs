@@ -4,9 +4,10 @@
 //!
 //! ```text
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
-//! copmul experiment <id|all> [--csv]           run paper experiments E1-E18
-//! copmul serve [key=value ...]                 coordinator demo workload
-//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_6.json
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E19
+//! copmul serve [key=value ...]                 fixed-batch coordinator workload
+//! copmul daemon [--rate=R ...]                 always-on serving, open-loop load
+//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_7.json
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
 //! ```
@@ -26,9 +27,10 @@ use copmul::algorithms::leaf::{HybridLeaf, LeafMultiplier, SchoolLeaf, SkimLeaf,
 use copmul::bignum::convert::{parse_hex, to_hex};
 use copmul::config::{LeafKind, RunConfig};
 use copmul::coordinator::{
-    BatchingXlaLeaf, Coordinator, CoordinatorConfig, JobSpec, Scheduler, SchedulerConfig,
+    run_open_loop, ArrivalGen, BatchingXlaLeaf, Coordinator, CoordinatorConfig, Daemon,
+    DaemonConfig, JobSpec, OpenLoop, Scheduler, SchedulerConfig, Workload,
 };
-use copmul::error::{bail, Context, Result};
+use copmul::error::{bail, Context, Error, Result};
 use copmul::experiments;
 use copmul::metrics::fmt_u64;
 use copmul::runtime::{XlaLeaf, XlaRuntime};
@@ -49,6 +51,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("mul") => cmd_mul(&args[1..]),
         Some("experiment") => cmd_experiment(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("daemon") => cmd_daemon(&args[1..]),
         Some("bench") => cmd_bench(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("selftest") => cmd_selftest(),
@@ -65,8 +68,9 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E18|all> [--csv] [key=value ...]
-  copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [key=value ...]
+  copmul experiment <E1..E19|all> [--csv] [key=value ...]
+  copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [--daemon] [key=value ...]
+  copmul daemon [--jobs=N] [--rate=R] [--arrival=A] [--deadline-ms=D] [key=value ...]
   copmul bench [--json] [--out=PATH] [--smoke] [seed=N]
   copmul info [artifacts=DIR]
   copmul selftest
@@ -83,13 +87,14 @@ TOPOLOGIES: fully-connected (the paper's implicit network; default),
             hier (two-level clusters over a half-bandwidth backbone).
 
 BENCH:   wall-clock harness (engine grid, kernel-ladder table, per-base
-         leaf-width sweep). --json writes the BENCH_6.json artifact
-         (--out overrides the path); --smoke runs the CI-sized grid.
-         COPMUL_KERNEL=(reference|packed64|generic|simd) pins the
-         dispatched rung. Cost triples shown are layout-invariant;
+         leaf-width sweep, open-loop serving curve). --json writes the
+         BENCH_7.json artifact (--out overrides the path); --smoke runs
+         the CI-sized grid. COPMUL_KERNEL=(reference|packed64|generic|simd)
+         pins the dispatched rung. Cost triples shown are layout-invariant;
          wall-clock is the quantity the perf PRs move.
 
-SERVE:   --jobs=N   number of requests (default 64)
+SERVE:   fixed batch, closed-loop (submits everything, waits for all).
+         --jobs=N   number of requests (default 64)
          --shards=K sharded scheduler: one shared `procs`-processor machine,
                     up to K jobs running concurrently on disjoint shards
                     (omit for the classic one-machine-per-job coordinator)
@@ -98,6 +103,27 @@ SERVE:   --jobs=N   number of requests (default 64)
                     probability R from seed S (default 0 / 42); failed jobs
                     are retried with shard-size backoff and the run reports
                     injected faults, retries and quarantined processors
+         --daemon   forward to `copmul daemon` (open-loop serving)
+
+DAEMON:  always-on serving under seeded open-loop load: arrivals follow
+         the generator's schedule and never wait for completions; per-job
+         deadlines + SLO-aware early shedding bound latency instead of
+         the queue growing forever. Reports p50/p99/p999 + jobs/s, shed
+         and retry counts. Always sharded (one shared machine).
+         --jobs=N        arrivals to offer (default 256); soak example:
+                         copmul daemon --jobs=1000000 --rate=20000
+                         --deadline-ms=250 n=256
+         --rate=R        offered arrival rate, jobs/s (default 800)
+         --arrival=A     poisson | bursty (default poisson)
+         --burst=N       bursty: arrivals per on-phase (default 32)
+         --idle-ms=D     bursty: off-phase gap between bursts (default 50)
+         --deadline-ms=D per-job deadline; 0 = none (default 100)
+         --max-shed=F    fail the run if > F of offered jobs are shed
+         --verify        bignum-verify every completed product
+         --shards=K      concurrent shards of the shared machine (default 4)
+         --queue=N       admission bound, queued+running (default 1024)
+         --fault-rate=R --fault-seed=S   as in serve
+         --smoke [--json --out=PATH]     CI serving curve -> BENCH_7.json
 ";
 
 /// Build the leaf backend the config names.
@@ -180,11 +206,18 @@ fn cmd_experiment(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
+    // `serve --daemon` is the open-loop service: strip the flag and
+    // hand the rest to `copmul daemon` (shared flags keep their
+    // meaning; daemon-only flags become available).
+    if args.iter().any(|a| a == "--daemon") {
+        let rest: Vec<String> = args.iter().filter(|a| *a != "--daemon").cloned().collect();
+        return cmd_daemon(&rest);
+    }
     let mut cfg = RunConfig::default();
     let mut jobs = 64usize;
     let mut shards: Option<usize> = None;
     let mut fault_rate = 0f64;
-    let mut fault_seed = 42u64;
+    let mut fault_seed: Option<u64> = None;
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("jobs=").or_else(|| a.strip_prefix("--jobs=")) {
@@ -203,7 +236,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .strip_prefix("fault-seed=")
             .or_else(|| a.strip_prefix("--fault-seed="))
         {
-            fault_seed = v.parse().context("fault-seed")?;
+            fault_seed = Some(v.parse().context("fault-seed")?);
         } else {
             rest.push(a.clone());
         }
@@ -212,10 +245,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if jobs == 0 {
         bail!("--jobs must be >= 1");
     }
-    if !(0.0..=1.0).contains(&fault_rate) {
-        bail!("--fault-rate must be in [0, 1]");
-    }
-    let fault = (fault_rate > 0.0).then(|| FaultConfig::new(fault_seed, fault_rate));
+    let fault = validate_fault_flags(fault_rate, fault_seed)?;
     match shards {
         Some(k) => serve_sharded(&cfg, jobs, k, fault),
         None => {
@@ -225,6 +255,24 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             serve_per_job(&cfg, jobs)
         }
     }
+}
+
+/// Shared `--fault-rate`/`--fault-seed` validation for `serve` and
+/// `daemon`: a seed without injection is a silently-dead knob — bail,
+/// matching the `--fault-rate requires --shards` precedent.
+fn validate_fault_flags(fault_rate: f64, fault_seed: Option<u64>) -> Result<Option<FaultConfig>> {
+    if !(0.0..=1.0).contains(&fault_rate) {
+        bail!("--fault-rate must be in [0, 1]");
+    }
+    if fault_rate == 0.0 {
+        if let Some(seed) = fault_seed {
+            bail!(
+                "--fault-seed={seed} has no effect without --fault-rate > 0 \
+                 (pass --fault-rate=R or drop the seed)"
+            );
+        }
+    }
+    Ok((fault_rate > 0.0).then(|| FaultConfig::new(fault_seed.unwrap_or(42), fault_rate)))
 }
 
 /// Classic path: one dedicated machine per job, `workers` in parallel.
@@ -343,10 +391,22 @@ fn serve_sharded(
         spec.algo = cfg.algo;
         pending.push(sched.submit(spec)?);
     }
+    // Collect tolerantly: a failed job must not abort the loop before
+    // the summary prints (and the summary must cope with an empty
+    // latency set if *every* job failed).
     let mut lat_us: Vec<u64> = Vec::with_capacity(jobs);
+    let mut failed = 0usize;
+    let mut first_err: Option<Error> = None;
     for rx in pending {
-        let res = rx.recv().context("runner hung up")??;
-        lat_us.push(res.wall.as_micros() as u64);
+        match rx.recv().context("runner hung up")? {
+            Ok(res) => lat_us.push(res.wall.as_micros() as u64),
+            Err(e) => {
+                failed += 1;
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
     }
     let wall = t0.elapsed();
     print_latency_summary(jobs, wall, &mut lat_us);
@@ -377,20 +437,227 @@ fn serve_sharded(
         );
     }
     sched.shutdown()?;
+    if failed > 0 {
+        bail!(
+            "{failed}/{jobs} job(s) failed; first error: {}",
+            first_err.expect("failed > 0 implies a recorded error")
+        );
+    }
     Ok(())
 }
 
 fn print_latency_summary(jobs: usize, wall: std::time::Duration, lat_us: &mut [u64]) {
-    lat_us.sort_unstable();
-    let pct = |q: f64| lat_us[(q * (lat_us.len() - 1) as f64) as usize];
-    println!(
-        "done: {:.1} jobs/s over {:?} | job latency p50={}µs p95={}µs p99={}µs",
-        jobs as f64 / wall.as_secs_f64(),
-        wall,
-        fmt_u64(pct(0.50)),
-        fmt_u64(pct(0.95)),
-        fmt_u64(pct(0.99)),
+    println!("{}", copmul::metrics::latency_summary(jobs, wall, lat_us));
+}
+
+/// `copmul daemon` — always-on serving under seeded open-loop load
+/// (see the DAEMON section of [`HELP`] and `coordinator::daemon`).
+fn cmd_daemon(args: &[String]) -> Result<()> {
+    use std::time::Duration;
+
+    let mut cfg = RunConfig::default();
+    let mut jobs = 256u64;
+    let mut rate = 800.0f64;
+    let mut arrival = "poisson".to_string();
+    let mut burst = 32u64;
+    let mut idle_ms = 50u64;
+    let mut deadline_ms = 100u64;
+    let mut max_shed: Option<f64> = None;
+    let mut verify = false;
+    let mut shards = 4usize;
+    let mut queue = 1024usize;
+    let mut fault_rate = 0f64;
+    let mut fault_seed: Option<u64> = None;
+    let mut smoke = false;
+    let mut json = false;
+    let mut out = "BENCH_7.json".to_string();
+    let mut rest = Vec::new();
+    for a in args {
+        if let Some(v) = a.strip_prefix("--jobs=").or_else(|| a.strip_prefix("jobs=")) {
+            jobs = v.parse().context("jobs")?;
+        } else if let Some(v) = a.strip_prefix("--rate=") {
+            rate = v.parse().context("rate")?;
+        } else if let Some(v) = a.strip_prefix("--arrival=") {
+            arrival = v.to_string();
+        } else if let Some(v) = a.strip_prefix("--burst=") {
+            burst = v.parse().context("burst")?;
+        } else if let Some(v) = a.strip_prefix("--idle-ms=") {
+            idle_ms = v.parse().context("idle-ms")?;
+        } else if let Some(v) = a.strip_prefix("--deadline-ms=") {
+            deadline_ms = v.parse().context("deadline-ms")?;
+        } else if let Some(v) = a.strip_prefix("--max-shed=") {
+            max_shed = Some(v.parse().context("max-shed")?);
+        } else if a == "--verify" {
+            verify = true;
+        } else if let Some(v) = a
+            .strip_prefix("--shards=")
+            .or_else(|| a.strip_prefix("shards="))
+        {
+            shards = v.parse().context("shards")?;
+        } else if let Some(v) = a.strip_prefix("--queue=") {
+            queue = v.parse().context("queue")?;
+        } else if let Some(v) = a.strip_prefix("--fault-rate=") {
+            fault_rate = v.parse().context("fault-rate")?;
+        } else if let Some(v) = a.strip_prefix("--fault-seed=") {
+            fault_seed = Some(v.parse().context("fault-seed")?);
+        } else if a == "--smoke" {
+            smoke = true;
+        } else if a == "--json" {
+            json = true;
+        } else if let Some(v) = a.strip_prefix("--out=") {
+            out = v.to_string();
+        } else {
+            rest.push(a.clone());
+        }
+    }
+    cfg.apply_args(&rest)?;
+
+    if smoke {
+        // CI serving curve: both engines, Poisson + bursty legs,
+        // emitted in the BENCH_7.json `serving` section.
+        let bench_cfg = copmul::perf::BenchConfig {
+            smoke: true,
+            seed: cfg.seed,
+        };
+        let mut report = copmul::perf::BenchReport {
+            kernel_selected: copmul::bignum::arch::active().name,
+            simd_isa: copmul::bignum::arch::simd::isa(),
+            ..Default::default()
+        };
+        copmul::perf::serving_curve(&bench_cfg, &mut report)?;
+        for t in report.tables() {
+            if t.title.starts_with("serving curve") {
+                println!("{}", t.markdown());
+            }
+        }
+        if json {
+            std::fs::write(&out, report.to_json()).with_context(|| format!("writing {out}"))?;
+            println!("wrote {out}");
+        }
+        return Ok(());
+    }
+
+    if jobs == 0 {
+        bail!("--jobs must be >= 1");
+    }
+    let fault = validate_fault_flags(fault_rate, fault_seed)?;
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    if cfg.procs % shards != 0 {
+        bail!("--shards={shards} must divide procs={}", cfg.procs);
+    }
+    let per_job = cfg.procs / shards;
+    // Same shape probe as `serve --shards` — procs/shards must be a
+    // shape the scheme ladder accepts or every job silently rounds up.
+    {
+        let mut probe = JobSpec::new(0, vec![1; cfg.n.max(1)], vec![1; cfg.n.max(1)]);
+        probe.procs = per_job;
+        probe.algo = cfg.algo;
+        probe.mem_cap = cfg.mem_cap;
+        let planned = copmul::coordinator::plan_shard(
+            &probe,
+            cfg.procs,
+            cfg.mem_cap.unwrap_or(u64::MAX / 2),
+        )?;
+        if planned != per_job {
+            bail!(
+                "--shards={shards} gives {per_job} procs/job, but the smallest shard \
+                 this workload can actually run on is {planned} (shapes are 4^k for \
+                 copsim, 4·3^i for copk, their union for hybrid, within memory); \
+                 pick shards so procs/shards is such a shape"
+            );
+        }
+    }
+
+    let leaf = make_leaf(&cfg)?;
+    let faulty = fault.is_some();
+    let daemon = Daemon::start(
+        DaemonConfig {
+            sched: SchedulerConfig {
+                procs: cfg.procs,
+                mem_cap: cfg.mem_cap.unwrap_or(u64::MAX / 2),
+                base: cfg.base(),
+                engine: cfg.engine,
+                topology: cfg.topology,
+                time_model: cfg.time_model,
+                runners: shards,
+                max_queue: queue,
+                fault,
+                ..Default::default()
+            },
+            default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            ..Default::default()
+        },
+        leaf,
     );
+    let arrivals = match arrival.as_str() {
+        "poisson" => ArrivalGen::poisson(cfg.seed, rate)?,
+        "bursty" => ArrivalGen::bursty(cfg.seed, rate, burst, Duration::from_millis(idle_ms))?,
+        other => bail!("unknown arrival process `{other}` (poisson|bursty)"),
+    };
+    let load = OpenLoop {
+        arrivals,
+        jobs,
+        workload: Workload {
+            seed: cfg.seed,
+            n: cfg.n,
+            base_log2: cfg.base_log2,
+            procs: per_job,
+            algo: cfg.algo,
+        },
+        verify,
+        collect: false,
+    };
+    println!(
+        "daemon: {jobs} offered @ {rate:.0}/s ({arrival}), shared {}-processor machine \
+         ({shards} shards x {per_job} procs, n={}, engine={}, deadline={})",
+        cfg.procs,
+        cfg.n,
+        cfg.engine,
+        if deadline_ms > 0 {
+            format!("{deadline_ms}ms")
+        } else {
+            "none".to_string()
+        },
+    );
+    let rep = run_open_loop(&daemon, &load)?;
+    println!("{}", rep.summary());
+    println!(
+        "scheduler: peak {} concurrent, {} shard acquisitions ({} after a wait)",
+        daemon
+            .scheduler()
+            .stats
+            .peak_concurrent
+            .load(std::sync::atomic::Ordering::Relaxed),
+        daemon
+            .scheduler()
+            .stats
+            .shards_acquired
+            .load(std::sync::atomic::Ordering::Relaxed),
+        daemon
+            .scheduler()
+            .stats
+            .shards_stolen
+            .load(std::sync::atomic::Ordering::Relaxed),
+    );
+    if faulty {
+        println!(
+            "faults: {} injected, {} attempt(s) retried, {} processor(s) quarantined",
+            daemon.scheduler().faults_injected(),
+            daemon
+                .scheduler()
+                .stats
+                .retries
+                .load(std::sync::atomic::Ordering::Relaxed),
+            daemon.scheduler().quarantined_procs(),
+        );
+    }
+    daemon.shutdown()?;
+    if let Some(max_frac) = max_shed {
+        rep.check_shed_budget(max_frac)?;
+    }
+    Ok(())
 }
 
 /// `copmul bench` — the wall-clock harness behind BENCH_*.json (see
@@ -398,7 +665,7 @@ fn print_latency_summary(jobs: usize, wall: std::time::Duration, lat_us: &mut [u
 fn cmd_bench(args: &[String]) -> Result<()> {
     let mut cfg = copmul::perf::BenchConfig::default();
     let mut json = false;
-    let mut out = "BENCH_6.json".to_string();
+    let mut out = "BENCH_7.json".to_string();
     for a in args {
         if a == "--json" {
             json = true;

@@ -1,5 +1,8 @@
-//! Reporting: markdown/CSV table rendering and number formatting for
-//! the experiment harness.
+//! Reporting: markdown/CSV table rendering, number formatting, and the
+//! shared latency-percentile helpers for the experiment harness and the
+//! serving paths (`copmul serve` / `copmul daemon`).
+
+use std::time::Duration;
 
 /// A simple column-aligned table with markdown and CSV renderers.
 #[derive(Clone, Debug)]
@@ -88,6 +91,51 @@ pub fn fmt_ratio(num: f64, den: f64) -> String {
     }
 }
 
+/// Nearest-rank percentile over an ascending-sorted slice: index
+/// `round_half_up(q · (len − 1))` for `q` in `[0, 1]`. Half-up rounding
+/// matters at small sample counts — a plain floor reads the *min* for
+/// the p99 of two samples; this reads the max. Returns `None` on an
+/// empty slice: an all-jobs-shed serving run is a legal outcome the
+/// caller renders, not indexes into.
+pub fn percentile(sorted: &[u64], q: f64) -> Option<u64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = (q * (sorted.len() - 1) as f64 + 0.5).floor() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+/// One-line latency/throughput summary for a finished serving run.
+/// Sorts `lat_us` in place. `jobs` is the offered total — it may exceed
+/// `lat_us.len()` when jobs were shed, rejected, or failed. An empty
+/// latency set and a ~zero wall are both rendered (`-`), never indexed
+/// into or divided by (the empty-set panic and the jobs/s infinity this
+/// replaces are pinned by the unit tests below).
+pub fn latency_summary(jobs: usize, wall: Duration, lat_us: &mut [u64]) -> String {
+    lat_us.sort_unstable();
+    let done = lat_us.len();
+    let secs = wall.as_secs_f64();
+    let rate = if done == 0 || secs < 1e-9 {
+        "-".to_string()
+    } else {
+        format!("{:.1}", done as f64 / secs)
+    };
+    match (
+        percentile(lat_us, 0.50),
+        percentile(lat_us, 0.95),
+        percentile(lat_us, 0.99),
+    ) {
+        (Some(p50), Some(p95), Some(p99)) => format!(
+            "done: {done}/{jobs} jobs, {rate} jobs/s over {wall:?} | \
+             job latency p50={}µs p95={}µs p99={}µs",
+            fmt_u64(p50),
+            fmt_u64(p95),
+            fmt_u64(p99),
+        ),
+        _ => format!("done: 0/{jobs} jobs completed over {wall:?} (no latency percentiles)"),
+    }
+}
+
 /// Compact scientific-ish float formatting.
 pub fn fmt_f64(x: f64) -> String {
     if x == 0.0 {
@@ -123,6 +171,42 @@ mod tests {
     fn table_rejects_bad_rows() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn percentile_empty_set_is_none_not_panic() {
+        // The bug this pins: `lat_us[(q * (len - 1) as f64) as usize]`
+        // underflowed `len - 1` on an empty set (all jobs shed under
+        // sharded + fault serving) and panicked.
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(percentile(&[], 0.99), None);
+        let mut empty: Vec<u64> = Vec::new();
+        let line = latency_summary(8, Duration::from_millis(5), &mut empty);
+        assert!(line.contains("0/8"), "got: {line}");
+        assert!(!line.contains("p50="), "no percentiles on empty: {line}");
+    }
+
+    #[test]
+    fn percentile_rounds_half_up_nearest_rank() {
+        // Two samples: the old floor index read the MIN for p95/p99.
+        assert_eq!(percentile(&[10, 20], 0.95), Some(20));
+        assert_eq!(percentile(&[10, 20], 0.99), Some(20));
+        assert_eq!(percentile(&[10, 20], 0.0), Some(10));
+        // Median of an odd-length set stays the middle element.
+        assert_eq!(percentile(&[1, 2, 3], 0.5), Some(2));
+        // p999 exists for any non-empty set (reads the max here).
+        assert_eq!(percentile(&[1, 2, 3], 0.999), Some(3));
+        // q = 1.0 is exactly the max, never out of bounds.
+        assert_eq!(percentile(&[5, 6, 7, 8], 1.0), Some(8));
+    }
+
+    #[test]
+    fn latency_summary_guards_zero_wall() {
+        let mut lat = vec![100u64, 200];
+        let line = latency_summary(2, Duration::ZERO, &mut lat);
+        assert!(line.contains("- jobs/s"), "zero wall renders `-`: {line}");
+        assert!(!line.contains("inf"), "no infinities: {line}");
+        assert!(line.contains("p99=200µs"), "half-up p99 of 2 = max: {line}");
     }
 
     #[test]

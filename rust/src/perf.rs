@@ -1,9 +1,9 @@
 //! `copmul bench` — the wall-clock measurement harness behind the
 //! repo's `BENCH_*.json` perf trajectory.
 //!
-//! Three sections, all recorded per run into one JSON artifact
-//! (`BENCH_6.json` by default; CI's `perf-smoke` job uploads it and
-//! `BENCH_HISTORY.md` tracks the dated in-tree trail):
+//! Four sections, all recorded per run into one JSON artifact
+//! (`BENCH_7.json` by default; CI's `perf-smoke` and `serve-soak` jobs
+//! upload it and `BENCH_HISTORY.md` tracks the dated in-tree trail):
 //!
 //! * **engine grid** — end-to-end wall-clock of both execution engines
 //!   across (scheme × n × P) at the default base 2^16, with the cost
@@ -19,10 +19,18 @@
 //!   evidence the applied PR-6 `leaf_widths` table rests on (wall
 //!   *and* charged T per width — see [`bignum::mul::leaf_widths`] and
 //!   DESIGN.md's "Leaf-width re-tune" re-bless record).
+//! * **serving** — the open-loop serving curve (`copmul daemon`): per
+//!   engine and arrival process, offered load vs goodput with latency
+//!   percentiles and shed/retry counts — the section PR 7's always-on
+//!   daemon reports its trajectory through.
 
 use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
-use crate::algorithms::{copk_mi, copsim_mi};
+use crate::algorithms::{copk_mi, copsim_mi, Algorithm};
 use crate::bignum::{self, arch, Base, Ops};
+use crate::config::EngineKind;
+use crate::coordinator::{
+    run_open_loop, ArrivalGen, Daemon, DaemonConfig, OpenLoop, SchedulerConfig, Workload,
+};
 use crate::error::{ensure, Result};
 use crate::metrics::{fmt_u64, Table};
 use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
@@ -83,6 +91,27 @@ pub struct LeafCell {
     pub ops: u64,
 }
 
+/// One serving-curve measurement: a seeded open-loop run against the
+/// daemon at one offered rate.
+#[derive(Clone, Debug)]
+pub struct ServingCell {
+    pub engine: &'static str,
+    /// Arrival process (`poisson` or `bursty`).
+    pub arrival: &'static str,
+    /// Offered arrival rate, jobs/s (bursty: the on-phase rate).
+    pub offered_rate: f64,
+    pub offered: u64,
+    pub completed: u64,
+    /// Load-regulation sheds (SLO-early + queue-full + deadline-expired).
+    pub shed: u64,
+    pub retries: u64,
+    pub goodput_per_s: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub wall_ms: u64,
+}
+
 /// The full bench report; serializes to the `BENCH_*.json` schema.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
@@ -94,6 +123,7 @@ pub struct BenchReport {
     pub engine_grid: Vec<EngineCell>,
     pub kernels: Vec<KernelCell>,
     pub leaf_sweep: Vec<LeafCell>,
+    pub serving: Vec<ServingCell>,
 }
 
 /// Run one multiplication end to end on an engine (mirrors the E15
@@ -271,6 +301,82 @@ fn leaf_sweep(cfg: &BenchConfig, report: &mut BenchReport) {
     }
 }
 
+/// The open-loop serving curve (`copmul daemon` / CI `serve-soak`):
+/// per engine, seeded Poisson runs across offered rates plus one
+/// bursty run at the top rate, all through [`run_open_loop`] against a
+/// shared 16-processor daemon. The deadline keeps the overloaded legs
+/// shedding (reject-early) instead of queueing without bound, so the
+/// curve shows goodput saturating while offered load keeps growing.
+pub fn serving_curve(cfg: &BenchConfig, report: &mut BenchReport) -> Result<()> {
+    let jobs: u64 = if cfg.smoke { 160 } else { 512 };
+    let rates: &[f64] = if cfg.smoke {
+        &[400.0, 1600.0]
+    } else {
+        &[400.0, 1600.0, 6400.0]
+    };
+    let workload = Workload {
+        seed: cfg.seed ^ 0x5E21,
+        n: 256,
+        base_log2: 16,
+        procs: 4,
+        algo: Some(Algorithm::Copsim),
+    };
+    for (engine, name) in [(EngineKind::Sim, "sim"), (EngineKind::Threads, "threads")] {
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 16,
+                    runners: 4,
+                    engine,
+                    max_queue: 4096,
+                    ..Default::default()
+                },
+                default_deadline: Some(Duration::from_millis(250)),
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        );
+        let mut legs: Vec<(&'static str, ArrivalGen, f64)> = Vec::new();
+        for &r in rates {
+            legs.push(("poisson", ArrivalGen::poisson(cfg.seed ^ r as u64, r)?, r));
+        }
+        let top = *rates.last().unwrap();
+        legs.push((
+            "bursty",
+            ArrivalGen::bursty(cfg.seed ^ 0xB0, top, 32, Duration::from_millis(20))?,
+            top,
+        ));
+        for (arrival, arrivals, rate) in legs {
+            let rep = run_open_loop(
+                &daemon,
+                &OpenLoop {
+                    arrivals,
+                    jobs,
+                    workload,
+                    verify: false,
+                    collect: false,
+                },
+            )?;
+            report.serving.push(ServingCell {
+                engine: name,
+                arrival,
+                offered_rate: rate,
+                offered: rep.offered,
+                completed: rep.completed,
+                shed: rep.shed_total(),
+                retries: rep.retries,
+                goodput_per_s: rep.goodput_per_s(),
+                p50_us: rep.percentile_us(0.50),
+                p99_us: rep.percentile_us(0.99),
+                p999_us: rep.percentile_us(0.999),
+                wall_ms: rep.wall.as_millis() as u64,
+            });
+        }
+        daemon.shutdown()?;
+    }
+    Ok(())
+}
+
 /// Run the full bench and collect the report.
 pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     let mut report = BenchReport {
@@ -281,6 +387,7 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     engine_grid(cfg, &mut report)?;
     kernel_table(cfg, &mut report);
     leaf_sweep(cfg, &mut report);
+    serving_curve(cfg, &mut report)?;
     Ok(report)
 }
 
@@ -331,7 +438,30 @@ impl BenchReport {
                 fmt_u64(c.ops),
             ]);
         }
-        vec![t1, t2, t3]
+        let mut t4 = Table::new(
+            "serving curve (open-loop offered load vs goodput; copmul daemon)",
+            &[
+                "engine", "arrival", "rate/s", "offered", "done", "shed", "retry", "goodput/s",
+                "p50 µs", "p99 µs", "p999 µs", "wall ms",
+            ],
+        );
+        for c in &self.serving {
+            t4.row(vec![
+                c.engine.into(),
+                c.arrival.into(),
+                format!("{:.0}", c.offered_rate),
+                c.offered.to_string(),
+                c.completed.to_string(),
+                c.shed.to_string(),
+                c.retries.to_string(),
+                format!("{:.1}", c.goodput_per_s),
+                fmt_u64(c.p50_us),
+                fmt_u64(c.p99_us),
+                fmt_u64(c.p999_us),
+                c.wall_ms.to_string(),
+            ]);
+        }
+        vec![t1, t2, t3, t4]
     }
 
     /// Serialize to the `BENCH_*.json` schema (hand-rolled — no serde
@@ -339,7 +469,7 @@ impl BenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(4096);
         s.push_str(&format!(
-            "{{\n  \"bench\": 6,\n  \"kernel_selected\": \"{}\",\n  \
+            "{{\n  \"bench\": 7,\n  \"kernel_selected\": \"{}\",\n  \
              \"simd_isa\": \"{}\",\n  \"engine_grid\": [\n",
             self.kernel_selected, self.simd_isa
         ));
@@ -388,6 +518,28 @@ impl BenchReport {
                 if i + 1 < self.leaf_sweep.len() { "," } else { "" },
             ));
         }
+        s.push_str("  ],\n  \"serving\": [\n");
+        for (i, c) in self.serving.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"engine\": \"{}\", \"arrival\": \"{}\", \"offered_rate\": {:.1}, \
+                 \"offered\": {}, \"completed\": {}, \"shed\": {}, \"retries\": {}, \
+                 \"goodput_per_s\": {:.1}, \"p50_us\": {}, \"p99_us\": {}, \"p999_us\": {}, \
+                 \"wall_ms\": {}}}{}\n",
+                c.engine,
+                c.arrival,
+                c.offered_rate,
+                c.offered,
+                c.completed,
+                c.shed,
+                c.retries,
+                c.goodput_per_s,
+                c.p50_us,
+                c.p99_us,
+                c.p999_us,
+                c.wall_ms,
+                if i + 1 < self.serving.len() { "," } else { "" },
+            ));
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -413,6 +565,23 @@ mod tests {
         };
         kernel_table(&cfg, &mut report);
         leaf_sweep(&cfg, &mut report);
+        // A synthetic serving cell exercises the section's JSON and
+        // table paths without a multi-second open-loop run here (the
+        // live path is covered by the daemon tests and serve_soak).
+        report.serving.push(ServingCell {
+            engine: "sim",
+            arrival: "poisson",
+            offered_rate: 800.0,
+            offered: 160,
+            completed: 150,
+            shed: 10,
+            retries: 0,
+            goodput_per_s: 750.0,
+            p50_us: 900,
+            p99_us: 4200,
+            p999_us: 9800,
+            wall_ms: 200,
+        });
         assert!(!report.kernels.is_empty());
         assert!(!report.leaf_sweep.is_empty());
         // Every available ladder rung shows up in the kernel table, and
@@ -428,10 +597,14 @@ mod tests {
             assert!(report.leaf_sweep.iter().any(|c| c.scheme == scheme));
         }
         let j = Json::parse(&report.to_json()).expect("BENCH json must parse");
-        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(6));
+        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(7));
         assert!(j.get("kernel_selected").and_then(Json::as_str).is_some());
         assert!(j.get("kernels").and_then(Json::as_arr).is_some());
         assert!(j.get("leaf_width_sweep").and_then(Json::as_arr).is_some());
+        let serving = j.get("serving").and_then(Json::as_arr).expect("serving arr");
+        assert_eq!(serving.len(), 1);
+        assert_eq!(serving[0].get("completed").and_then(Json::as_u64), Some(150));
+        assert_eq!(report.tables().len(), 4, "serving table renders");
     }
 
     #[test]

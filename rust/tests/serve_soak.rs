@@ -1,0 +1,287 @@
+//! Serving-daemon soak suite: seeded open-loop load against the
+//! always-on [`Daemon`], on both execution engines.
+//!
+//! Invariants (ISSUE 7 acceptance criteria):
+//!
+//! 1. **Deterministic replay** — the same seed offers the same jobs in
+//!    the same arrival order; two fresh daemons produce identical
+//!    completed products.
+//! 2. **Accounting** — `completed + failed + shed_slo +
+//!    shed_queue_full + shed_expired + rejected_unfittable == offered`
+//!    always, including under deliberate overload (where sheds must be
+//!    nonzero rather than the queue growing without bound).
+//! 3. **All-shed liveness** — a run where *every* job is shed still
+//!    produces a summary (the empty-latency-set path of
+//!    `metrics::latency_summary`, the PR-7 panic fix) and balanced
+//!    counters.
+//! 4. **Chaos leg** — under injected faults every admitted job
+//!    completes within its retry budget with a bignum-verified
+//!    product, and every job whose shard saw zero faults reports a
+//!    cost triple bit-identical to a dedicated fault-free run
+//!    (the paper's per-multiplication bounds are per-job invariants
+//!    even under open-loop serving load).
+//!
+//! Scale with `COPMUL_PROP_CASES` (`util::prop::cases`): tier-1 keeps
+//! the fast default; the CI `serve-soak` job raises it in release mode.
+
+use std::time::Duration;
+
+use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use copmul::algorithms::Algorithm;
+use copmul::config::EngineKind;
+use copmul::coordinator::{
+    execute_on, run_open_loop, ArrivalGen, Daemon, DaemonConfig, OpenLoop, SchedulerConfig,
+    Workload,
+};
+use copmul::sim::{FaultConfig, Machine, Seq};
+use copmul::util::prop::cases;
+
+const SEED: u64 = 0x50AC_7E57;
+
+fn workload(procs: usize) -> Workload {
+    Workload {
+        seed: SEED,
+        n: 128,
+        base_log2: 16,
+        procs,
+        algo: Some(Algorithm::Copsim),
+    }
+}
+
+fn daemon(engine: EngineKind, cfg: DaemonConfig) -> Daemon {
+    let mut cfg = cfg;
+    cfg.sched.engine = engine;
+    Daemon::start(cfg, leaf_ref(SchoolLeaf))
+}
+
+fn jobs_for_tier() -> u64 {
+    (cases(48) / 4).clamp(8, 64)
+}
+
+/// Invariant 1: same seed, fresh daemon -> identical offered order and
+/// identical completed products.
+#[test]
+fn open_loop_run_replays_deterministically() {
+    let run = || {
+        let d = daemon(
+            EngineKind::Sim,
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 8,
+                    runners: 2,
+                    max_queue: 4096,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED, 50_000.0).unwrap(),
+            jobs: jobs_for_tier(),
+            workload: workload(4),
+            verify: true,
+            collect: true,
+        };
+        let rep = run_open_loop(&d, &load).unwrap();
+        d.shutdown().unwrap();
+        rep
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.offered, b.offered);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.completed, a.offered, "no deadline, deep queue: nothing sheds");
+    let mut pa: Vec<_> = a.results.iter().map(|r| (r.id, r.product.clone())).collect();
+    let mut pb: Vec<_> = b.results.iter().map(|r| (r.id, r.product.clone())).collect();
+    pa.sort();
+    pb.sort();
+    assert_eq!(pa, pb, "same seed must reproduce the same products");
+}
+
+/// Invariant 2: overload a tiny machine; sheds are nonzero and the
+/// counter balance holds exactly.
+#[test]
+fn overload_sheds_and_accounting_balances() {
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        let d = daemon(
+            engine,
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 4,
+                    runners: 1,
+                    max_queue: 2,
+                    ..Default::default()
+                },
+                default_deadline: Some(Duration::from_millis(5)),
+                ..Default::default()
+            },
+        );
+        let load = OpenLoop {
+            // Far past a single 4-proc runner's capacity at n = 512.
+            arrivals: ArrivalGen::bursty(SEED ^ 1, 100_000.0, 16, Duration::from_millis(1))
+                .unwrap(),
+            jobs: jobs_for_tier().max(24),
+            workload: Workload {
+                n: 512,
+                ..workload(4)
+            },
+            verify: false,
+            collect: false,
+        };
+        let rep = run_open_loop(&d, &load).unwrap();
+        d.shutdown().unwrap();
+        assert_eq!(
+            rep.completed
+                + rep.failed
+                + rep.shed_slo
+                + rep.shed_queue_full
+                + rep.shed_expired
+                + rep.rejected_unfittable,
+            rep.offered,
+            "accounting must balance on {engine}"
+        );
+        assert_eq!(rep.rejected_unfittable, 0, "all jobs fit the machine");
+        assert_eq!(rep.failed, 0, "no faults injected on {engine}");
+        assert!(
+            rep.shed_total() > 0,
+            "overload on {engine} must shed, not queue forever \
+             (completed {}, offered {})",
+            rep.completed,
+            rep.offered
+        );
+        // The summary renders whatever completed (possibly nothing).
+        let s = rep.summary();
+        assert!(s.contains("jobs"), "summary renders under overload: {s}");
+    }
+}
+
+/// Invariant 3: every job shed — queue-full rung (admission bound 0)
+/// and deadline-expiry rung (zero deadline, SLO rung disabled) — with
+/// no summary panic on the empty latency set.
+#[test]
+fn all_shed_runs_stay_live_and_summarize() {
+    // Rung 2: max_queue = 0 -> every submission is QueueFull-shed.
+    let d = daemon(
+        EngineKind::Sim,
+        DaemonConfig {
+            sched: SchedulerConfig {
+                procs: 4,
+                runners: 1,
+                max_queue: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+    );
+    let load = OpenLoop {
+        arrivals: ArrivalGen::poisson(SEED ^ 2, 100_000.0).unwrap(),
+        jobs: 8,
+        workload: workload(4),
+        verify: false,
+        collect: false,
+    };
+    let rep = run_open_loop(&d, &load).unwrap();
+    d.shutdown().unwrap();
+    assert_eq!(rep.completed, 0);
+    assert_eq!(rep.shed_queue_full, rep.offered);
+    // The PR-7 fix: an empty latency set summarizes instead of
+    // panicking on `len() - 1`.
+    let s = rep.summary();
+    assert!(s.contains("0/8"), "empty-set summary: {s}");
+
+    // Rung 3: zero deadline, estimate rung off -> jobs are admitted
+    // but every one expires in the queue and is shed at dequeue.
+    let d = daemon(
+        EngineKind::Sim,
+        DaemonConfig {
+            sched: SchedulerConfig {
+                procs: 4,
+                runners: 1,
+                max_queue: 4096,
+                ..Default::default()
+            },
+            default_deadline: Some(Duration::ZERO),
+            shed_headroom: 0.0,
+            ..Default::default()
+        },
+    );
+    let load = OpenLoop {
+        arrivals: ArrivalGen::poisson(SEED ^ 3, 100_000.0).unwrap(),
+        jobs: 8,
+        workload: workload(4),
+        verify: false,
+        collect: false,
+    };
+    let rep = run_open_loop(&d, &load).unwrap();
+    d.shutdown().unwrap();
+    assert_eq!(rep.completed, 0);
+    assert_eq!(rep.shed_expired, rep.offered, "zero deadline expires every queued job");
+    assert_eq!(rep.shed_slo, 0, "estimate rung was disabled");
+    rep.summary();
+}
+
+/// Invariant 4: chaos leg — faults under open-loop load on both
+/// engines; verified products, retry-budget liveness, and the
+/// zero-fault cost identity against dedicated runs.
+#[test]
+fn chaos_under_open_loop_load_keeps_cost_identity() {
+    for engine in [EngineKind::Sim, EngineKind::Threads] {
+        let d = daemon(
+            engine,
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 16,
+                    runners: 3,
+                    max_queue: 4096,
+                    fault: Some(FaultConfig::new(SEED ^ 4, 2e-4)),
+                    max_attempts: 5,
+                    // Uniform injection + quarantine would shrink the
+                    // machine under the fleet (see chaos_soak.rs).
+                    quarantine_after: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        );
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED ^ 5, 20_000.0).unwrap(),
+            jobs: jobs_for_tier(),
+            workload: workload(4),
+            verify: true,
+            collect: true,
+        };
+        let rep = run_open_loop(&d, &load).unwrap();
+        let cfg = d.scheduler().config().clone();
+        d.shutdown().unwrap();
+        assert_eq!(
+            rep.completed, rep.offered,
+            "no deadline: every admitted job completes within its retry \
+             budget on {engine}"
+        );
+        assert_eq!(rep.failed, 0, "retry budget exhausted on {engine}");
+        let leaf = leaf_ref(SchoolLeaf);
+        let mut zero_fault = 0usize;
+        for res in &rep.results {
+            assert!(res.attempts >= 1 && res.attempts <= 5);
+            if res.faults_survived > 0 {
+                continue;
+            }
+            zero_fault += 1;
+            let spec = load.workload.spec(res.id);
+            let shard = res.shard.as_ref().expect("scheduler results carry shards");
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+            assert_eq!(
+                res.cost,
+                solo.critical(),
+                "zero-fault job {} cost under load differs from the \
+                 dedicated run on {engine}",
+                res.id
+            );
+        }
+        assert!(
+            zero_fault > 0,
+            "at rate 2e-4 most jobs see no faults; identity leg must not be vacuous"
+        );
+    }
+}
