@@ -45,7 +45,8 @@ fn main() {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .expect("daemon start");
         let arrivals = match kind {
             ArrivalKind::Poisson => ArrivalGen::poisson(SEED ^ rate as u64, rate),
             ArrivalKind::Bursty => {

@@ -17,6 +17,9 @@ pub enum EngineKind {
     Sim,
     /// Real execution: one OS thread per simulated processor.
     Threads,
+    /// Real network: one OS worker process per group of simulated
+    /// processors, commands and messages over socket frames.
+    Sockets,
 }
 
 impl std::str::FromStr for EngineKind {
@@ -25,7 +28,8 @@ impl std::str::FromStr for EngineKind {
         Ok(match s {
             "sim" | "cost" | "cost-model" => EngineKind::Sim,
             "threads" | "threaded" => EngineKind::Threads,
-            _ => bail!("unknown engine `{s}` (sim|threads)"),
+            "sockets" | "socket" => EngineKind::Sockets,
+            _ => bail!("unknown engine `{s}` (sim|threads|sockets)"),
         })
     }
 }
@@ -35,6 +39,7 @@ impl std::fmt::Display for EngineKind {
         match self {
             EngineKind::Sim => write!(f, "sim"),
             EngineKind::Threads => write!(f, "threads"),
+            EngineKind::Sockets => write!(f, "sockets"),
         }
     }
 }
@@ -242,6 +247,10 @@ mod tests {
         assert_eq!(c.engine, EngineKind::Threads);
         c.apply_args(&["--engine=sim".into()]).unwrap();
         assert_eq!(c.engine, EngineKind::Sim);
+        c.apply_args(&["engine=sockets".into()]).unwrap();
+        assert_eq!(c.engine, EngineKind::Sockets);
+        c.apply_args(&["--engine=socket".into()]).unwrap();
+        assert_eq!(c.engine, EngineKind::Sockets);
         assert!(c.set("engine", "gpu").is_err());
     }
 

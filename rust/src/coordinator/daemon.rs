@@ -50,12 +50,14 @@
 //! ## Framing
 //!
 //! [`Request::encode`]/[`Request::decode`] define a little-endian
-//! length-explicit frame for submissions. The in-process channel API
-//! does not need it — it exists so the future `SocketMachine` listener
-//! (ROADMAP item 1) can speak the same contract over a real socket
-//! without re-deriving a wire format: a daemon front-end reading frames
-//! off a stream decodes straight into [`Request`] and calls
-//! [`Daemon::submit`].
+//! length-explicit frame for submissions, parsed with the shared
+//! [`FrameCursor`] (`util::frame`) — the same bounds-checked reader the
+//! socket engine's command/reply/net frames go through (`sim::socket`,
+//! ROADMAP item 1), so both codecs inherit one hardening discipline:
+//! every length field is capped against the remaining buffer before
+//! anything is allocated (fuzzed in `tests/wire_fuzz.rs`). A daemon
+//! front-end reading frames off a stream decodes straight into
+//! [`Request`] and calls [`Daemon::submit`].
 //!
 //! ## Cost identity under load
 //!
@@ -74,6 +76,7 @@ use crate::algorithms::Algorithm;
 use crate::bignum::{Base, Ops};
 use crate::error::{anyhow, bail, ensure, Error, Result};
 use crate::metrics::{fmt_u64, latency_summary, percentile};
+use crate::util::frame::FrameCursor;
 use crate::util::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver};
@@ -238,9 +241,10 @@ impl Request {
     }
 
     /// Parse one frame produced by [`Request::encode`], rejecting bad
-    /// magic, unknown versions, and truncated payloads.
+    /// magic, unknown versions, truncated payloads, trailing garbage,
+    /// and hostile length fields (see [`FrameCursor::digits`]).
     pub fn decode(buf: &[u8]) -> Result<Request> {
-        let mut f = FrameCursor { buf, at: 0 };
+        let mut f = FrameCursor::new(buf);
         let magic = f.u32()?;
         ensure!(
             magic == Self::MAGIC,
@@ -273,12 +277,7 @@ impl Request {
         let b_len = f.u32()? as usize;
         let a = f.digits(a_len)?;
         let b = f.digits(b_len)?;
-        ensure!(
-            f.at == buf.len(),
-            "trailing garbage: frame ends at {}, buffer has {}",
-            f.at,
-            buf.len()
-        );
+        f.expect_end()?;
         Ok(Request {
             a,
             b,
@@ -287,46 +286,6 @@ impl Request {
             mem_cap,
             deadline,
         })
-    }
-}
-
-/// Bounds-checked little-endian reader over one frame buffer.
-struct FrameCursor<'a> {
-    buf: &'a [u8],
-    at: usize,
-}
-
-impl<'a> FrameCursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        let end = self
-            .at
-            .checked_add(n)
-            .ok_or_else(|| anyhow!("frame length overflow"))?;
-        let s = self.buf.get(self.at..end).ok_or_else(|| {
-            anyhow!("truncated frame: need {end} bytes, have {}", self.buf.len())
-        })?;
-        self.at = end;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn digits(&mut self, len: usize) -> Result<Vec<u32>> {
-        let bytes = self.take(len.saturating_mul(4))?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
-            .collect())
     }
 }
 
@@ -417,19 +376,21 @@ pub struct Daemon {
 }
 
 impl Daemon {
-    /// Build the shared machine and start serving.
-    pub fn start(cfg: DaemonConfig, leaf: LeafRef) -> Daemon {
-        let sched = Scheduler::start(cfg.sched.clone(), leaf);
+    /// Build the shared machine and start serving. Only the socket
+    /// engine can fail construction (worker processes must spawn and
+    /// finish their wiring handshake).
+    pub fn start(cfg: DaemonConfig, leaf: LeafRef) -> Result<Daemon> {
+        let sched = Scheduler::start(cfg.sched.clone(), leaf)?;
         let stats = DaemonStats::default();
         stats
             .ewma_service_us
             .store(cfg.init_service_us.max(1), Ordering::Relaxed);
-        Daemon {
+        Ok(Daemon {
             sched,
             cfg,
             next_id: AtomicU64::new(0),
             stats,
-        }
+        })
     }
 
     /// The wrapped scheduler (stats, fault counters).
@@ -898,7 +859,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         // Occupy the runner with a big no-deadline job (no deadline →
         // the SLO rung never sheds it).
         let wl = Workload {
@@ -936,7 +898,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let wl = Workload {
             n: 16,
             ..Workload::default()
@@ -958,7 +921,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let mut wide = wl.request(1);
         wide.procs = 64;
         let Submission::Shed { reason, .. } = daemon.submit(wide) else {
@@ -991,7 +955,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let load = OpenLoop {
             arrivals: ArrivalGen::poisson(3, 50_000.0).unwrap(),
             jobs: 16,

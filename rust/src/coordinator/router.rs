@@ -7,7 +7,7 @@ use crate::bignum::core::normalized_len;
 use crate::bignum::Base;
 use crate::config::EngineKind;
 use crate::error::{Context, Result};
-use crate::sim::{DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use crate::sim::{DistInt, Machine, MachineApi, Seq, SocketMachine, ThreadedMachine};
 use crate::theory::TimeModel;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -216,6 +216,23 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
         }
         EngineKind::Threads => {
             let mut machine = ThreadedMachine::with_topology(spec.procs, mem_cap, cfg.base, topo);
+            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
+            let report = machine.finish()?;
+            Ok(JobResult {
+                id: spec.id,
+                product,
+                algo,
+                engine: spec.engine,
+                cost: report.critical,
+                mem_peak: report.mem_peak_max,
+                wall: t0.elapsed(),
+                shard: None,
+                attempts: 1,
+                faults_survived: 0,
+            })
+        }
+        EngineKind::Sockets => {
+            let mut machine = SocketMachine::with_topology(spec.procs, mem_cap, cfg.base, topo)?;
             let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             let report = machine.finish()?;
             Ok(JobResult {

@@ -99,7 +99,7 @@ use crate::config::EngineKind;
 use crate::error::{anyhow, bail, Context, Error, Result};
 use crate::sim::{
     Clock, FaultConfig, FaultyMachine, Machine, MachineApi, MachineStats, ProcId, ProcView, Seq,
-    Slot, SlotComputation, ThreadedMachine, TopologyKind, TopologyRef,
+    Slot, SlotComputation, SocketConfig, SocketMachine, ThreadedMachine, TopologyKind, TopologyRef,
 };
 use crate::theory::{self, TimeModel};
 use crate::util::is_copk_procs;
@@ -108,7 +108,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------- shards
 
@@ -164,12 +164,13 @@ pub fn plan_shard(spec: &JobSpec, total_procs: usize, mem_cap: u64) -> Result<us
 
 // ---------------------------------------------------- the shared machine
 
-/// The engine actually executing the shared machine. Both variants sit
+/// The engine actually executing the shared machine. Every variant sits
 /// behind a [`FaultyMachine`] wrapper; without a fault plan the wrapper
 /// is a transparent delegate, so the fault-free path is unchanged.
 enum EngineMachine {
     Sim(FaultyMachine<Machine>),
     Threads(FaultyMachine<ThreadedMachine>),
+    Sockets(FaultyMachine<SocketMachine>),
 }
 
 /// Dispatch one expression over whichever engine backs the guard.
@@ -180,8 +181,57 @@ macro_rules! on_engine {
         match &mut *$g {
             EngineMachine::Sim($m) => $e,
             EngineMachine::Threads($m) => $e,
+            EngineMachine::Sockets($m) => $e,
         }
     };
+}
+
+/// An in-flight payload reply from a two-phase call on a real-execution
+/// engine: the threaded engine ships the arena's shared reference over
+/// a channel, the socket engine decodes an owned copy off the wire. The
+/// socket wait is bounded by the machine's reply timeout (captured
+/// while the lock was held) so a worker process that dies in the window
+/// between the liveness check and the reply surfaces as an error, never
+/// a hang.
+enum PendingPayload {
+    Threads(Receiver<Arc<Vec<u32>>>),
+    Sockets(Receiver<Vec<u32>>, Duration),
+}
+
+impl PendingPayload {
+    fn wait(self, p: ProcId, what: &str) -> Result<Vec<u32>> {
+        match self {
+            PendingPayload::Threads(rx) => rx
+                .recv()
+                .map(crate::sim::payload_into_vec)
+                .map_err(|_| anyhow!("processor {p}: worker thread died during {what}")),
+            PendingPayload::Sockets(rx, timeout) => rx
+                .recv_timeout(timeout)
+                .map_err(|_| anyhow!("processor {p}: worker process died during {what}")),
+        }
+    }
+
+    /// Append the payload to `buf` without the extra owned conversion
+    /// `wait` would pay on the threaded engine (the arena still holds
+    /// its shared reference there, so `payload_into_vec` would clone
+    /// the digits only for us to copy them again).
+    fn wait_into(self, p: ProcId, buf: &mut Vec<u32>) -> Result<()> {
+        match self {
+            PendingPayload::Threads(rx) => {
+                let shared = rx
+                    .recv()
+                    .map_err(|_| anyhow!("processor {p}: worker thread died during read"))?;
+                buf.extend_from_slice(&shared);
+            }
+            PendingPayload::Sockets(rx, timeout) => {
+                let owned = rx
+                    .recv_timeout(timeout)
+                    .map_err(|_| anyhow!("processor {p}: worker process died during read"))?;
+                buf.extend_from_slice(&owned);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// A job's handle onto the shared machine: every [`MachineApi`] call
@@ -226,48 +276,53 @@ impl MachineApi for ShardView {
         on_engine!(g, m => MachineApi::free(m, p, slot))
     }
     fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
-        // Two-phase on the threaded engine: enqueue under the lock,
-        // await after releasing it — otherwise every concurrent job
-        // serializes behind this worker's queue drain. Program order
-        // is fixed at enqueue time, so the result is identical. A dead
-        // worker surfaces as a per-call error (failing this job only),
-        // never as a panic that would poison the shared machine.
+        // Two-phase on the real-execution engines: enqueue under the
+        // lock, await after releasing it — otherwise every concurrent
+        // job serializes behind this worker's queue drain. Program
+        // order is fixed at enqueue time, so the result is identical.
+        // A dead worker surfaces as a per-call error (failing this job
+        // only), never as a panic that would poison the shared machine.
         let pending = {
             let mut g = self.lock();
             match &mut *g {
                 EngineMachine::Sim(m) => return MachineApi::read(m, p, slot),
                 EngineMachine::Threads(m) => {
                     m.check_alive(p)?;
-                    m.inner().read_request(p, slot)
+                    PendingPayload::Threads(m.inner().read_request(p, slot))
+                }
+                EngineMachine::Sockets(m) => {
+                    m.check_alive(p)?;
+                    let timeout = m.inner().reply_timeout();
+                    PendingPayload::Sockets(m.inner().read_request(p, slot), timeout)
                 }
             }
         };
-        pending
-            .recv()
-            .map(crate::sim::payload_into_vec)
-            .map_err(|_| anyhow!("processor {p}: worker thread died during read"))
+        pending.wait(p, "read")
     }
     fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
-        // Two-phase as in `read`, but extending straight from the
-        // shared payload: the arena still holds its reference, so
-        // converting to an owned Vec first would clone the digits only
-        // to copy them again — this path (the collectives' assembly
-        // loops on sharded jobs) pays exactly one copy instead.
+        // Two-phase as in `read`. On the threaded engine this extends
+        // straight from the shared payload: the arena still holds its
+        // reference, so converting to an owned Vec first would clone
+        // the digits only to copy them again — this path (the
+        // collectives' assembly loops on sharded jobs) pays exactly one
+        // copy instead. The socket payload is already an owned wire
+        // copy, so the generic append is the same cost.
         let pending = {
             let mut g = self.lock();
             match &mut *g {
                 EngineMachine::Sim(m) => return MachineApi::read_into(m, p, slot, buf),
                 EngineMachine::Threads(m) => {
                     m.check_alive(p)?;
-                    m.inner().read_request(p, slot)
+                    PendingPayload::Threads(m.inner().read_request(p, slot))
+                }
+                EngineMachine::Sockets(m) => {
+                    m.check_alive(p)?;
+                    let timeout = m.inner().reply_timeout();
+                    PendingPayload::Sockets(m.inner().read_request(p, slot), timeout)
                 }
             }
         };
-        let shared = pending
-            .recv()
-            .map_err(|_| anyhow!("processor {p}: worker thread died during read"))?;
-        buf.extend_from_slice(&shared);
-        Ok(())
+        pending.wait_into(p, buf)
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
         let mut g = self.lock();
@@ -283,20 +338,33 @@ impl MachineApi for ShardView {
         R: Send + 'static,
         F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
     {
-        // Two-phase, as in `read`.
-        let pending = {
+        // Two-phase, as in `read`. The socket engine runs the closure
+        // host-side (it cannot cross a process boundary) and its
+        // worker acknowledges the op charge, so the same enqueue/await
+        // split applies.
+        let (pending, timeout) = {
             let mut g = self.lock();
             match &mut *g {
                 EngineMachine::Sim(m) => return MachineApi::local(m, p, f),
                 EngineMachine::Threads(m) => {
                     m.precheck_local(p)?;
-                    m.inner().local_request::<R, F>(p, f)
+                    (m.inner().local_request::<R, F>(p, f), None)
+                }
+                EngineMachine::Sockets(m) => {
+                    m.precheck_local(p)?;
+                    let timeout = m.inner().reply_timeout();
+                    (m.inner().local_request::<R, F>(p, f), Some(timeout))
                 }
             }
         };
-        let out = pending
-            .recv()
-            .map_err(|_| anyhow!("processor {p}: worker thread died during local"))?;
+        let out = match timeout {
+            None => pending
+                .recv()
+                .map_err(|_| anyhow!("processor {p}: worker thread died during local"))?,
+            Some(t) => pending
+                .recv_timeout(t)
+                .map_err(|_| anyhow!("processor {p}: worker process died during local"))?,
+        };
         Ok(*out.downcast::<R>().expect("local closure result type"))
     }
     fn compute_slot(
@@ -339,19 +407,29 @@ impl MachineApi for ShardView {
 
     fn proc_view(&self, p: ProcId) -> Result<ProcView> {
         // Two-phase, as in `read`.
-        let pending = {
+        let (pending, timeout) = {
             let mut g = self.lock();
             match &mut *g {
                 EngineMachine::Sim(m) => return MachineApi::proc_view(m, p),
                 EngineMachine::Threads(m) => {
                     m.check_alive(p)?;
-                    m.inner().snapshot_request(p)
+                    (m.inner().snapshot_request(p), None)
+                }
+                EngineMachine::Sockets(m) => {
+                    m.check_alive(p)?;
+                    let timeout = m.inner().reply_timeout();
+                    (m.inner().snapshot_request(p), Some(timeout))
                 }
             }
         };
-        let s = pending
-            .recv()
-            .map_err(|_| anyhow!("processor {p}: worker thread died during proc_view"))?;
+        let s = match timeout {
+            None => pending
+                .recv()
+                .map_err(|_| anyhow!("processor {p}: worker thread died during proc_view"))?,
+            Some(t) => pending
+                .recv_timeout(t)
+                .map_err(|_| anyhow!("processor {p}: worker process died during proc_view"))?,
+        };
         Ok(ProcView {
             clock: s.clock,
             mem_used: s.mem_used,
@@ -562,6 +640,10 @@ pub struct SchedulerConfig {
     /// Quarantine a processor after this many *consecutive* job-killing
     /// failures (0 disables quarantine).
     pub quarantine_after: u32,
+    /// Socket-engine wiring (`engine == EngineKind::Sockets` only):
+    /// worker-process grouping, transport, reply timeout, worker
+    /// binary. Ignored by the other engines.
+    pub socket: SocketConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -578,6 +660,7 @@ impl Default for SchedulerConfig {
             fault: None,
             max_attempts: 3,
             quarantine_after: 4,
+            socket: SocketConfig::default(),
         }
     }
 }
@@ -647,14 +730,18 @@ type Queued = (JobSpec, usize, Reply, Instant);
 pub struct Scheduler {
     cfg: SchedulerConfig,
     shared: Arc<Mutex<EngineMachine>>,
+    pool: Arc<Pool>,
     tx: Option<Sender<Queued>>,
     runners: Vec<JoinHandle<()>>,
     pub stats: Arc<SchedulerStats>,
 }
 
 impl Scheduler {
-    /// Build the shared machine and start the runner pool.
-    pub fn start(cfg: SchedulerConfig, leaf: LeafRef) -> Scheduler {
+    /// Build the shared machine and start the runner pool. Only the
+    /// socket engine can actually fail here (worker processes must
+    /// spawn and complete their wiring handshake); the in-process
+    /// engines always construct.
+    pub fn start(cfg: SchedulerConfig, leaf: LeafRef) -> Result<Scheduler> {
         assert!(cfg.procs >= 1, "need at least one processor");
         let plan = cfg.fault.clone();
         let topo = cfg.topology.build(cfg.procs);
@@ -665,6 +752,16 @@ impl Scheduler {
             )),
             EngineKind::Threads => EngineMachine::Threads(FaultyMachine::with(
                 ThreadedMachine::with_topology(cfg.procs, cfg.mem_cap, cfg.base, topo),
+                plan,
+            )),
+            EngineKind::Sockets => EngineMachine::Sockets(FaultyMachine::with(
+                SocketMachine::with_config(
+                    cfg.procs,
+                    cfg.mem_cap,
+                    cfg.base,
+                    topo,
+                    cfg.socket.clone(),
+                )?,
                 plan,
             )),
         };
@@ -725,13 +822,14 @@ impl Scheduler {
                 let _ = reply.send(res);
             }));
         }
-        Scheduler {
+        Ok(Scheduler {
             cfg,
             shared,
+            pool,
             tx: Some(tx),
             runners,
             stats,
-        }
+        })
     }
 
     /// The configuration this scheduler was started with.
@@ -749,6 +847,39 @@ impl Scheduler {
     /// Live (non-quarantined) processors are `cfg.procs` minus this.
     pub fn quarantined_procs(&self) -> u64 {
         self.stats.procs_quarantined.load(Ordering::Relaxed)
+    }
+
+    /// Ids of the processors currently pulled from service, sorted.
+    /// The kill-chaos tests use this to assert a real worker death
+    /// quarantines exactly the dead group's processors.
+    pub fn quarantined_proc_ids(&self) -> Vec<ProcId> {
+        let st = self.pool.state.lock().unwrap();
+        let mut q = st.quarantined.clone();
+        q.sort_unstable();
+        q
+    }
+
+    /// Socket engine only: OS pids of the live worker processes by
+    /// group (`None` for a group already reaped). Empty on the
+    /// in-process engines.
+    pub fn socket_worker_pids(&self) -> Vec<Option<u32>> {
+        let g = self.shared.lock().unwrap();
+        match &*g {
+            EngineMachine::Sockets(m) => m.inner().worker_pids(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Socket engine only: SIGKILL worker-process group `g` — the
+    /// kill-chaos tests use this to turn a real process death into the
+    /// per-job failure / quarantine path. Errors on the in-process
+    /// engines and on an already-dead group.
+    pub fn kill_socket_worker(&self, group: usize) -> Result<()> {
+        let guard = self.shared.lock().unwrap();
+        match &*guard {
+            EngineMachine::Sockets(m) => m.inner().kill_worker(group),
+            _ => bail!("kill_socket_worker: scheduler is not on the socket engine"),
+        }
     }
 
     /// Admit a job (or reject it — see module docs); the result arrives
@@ -831,16 +962,23 @@ impl Scheduler {
     }
 
     /// Drain the queue, join the runners, and tear down the shared
-    /// machine — surfacing any deferred threaded-engine error (the
-    /// threaded backend reports memory overflows at finish time).
+    /// machine — surfacing any deferred real-execution error (the
+    /// threaded backend reports memory overflows at finish time; the
+    /// socket backend additionally reaps its worker processes).
     pub fn shutdown(mut self) -> Result<()> {
         self.tx.take();
         for h in self.runners.drain(..) {
             let _ = h.join();
         }
         let mut g = self.shared.lock().unwrap();
-        if let EngineMachine::Threads(m) = &mut *g {
-            m.inner_mut().finish()?;
+        match &mut *g {
+            EngineMachine::Threads(m) => {
+                m.inner_mut().finish()?;
+            }
+            EngineMachine::Sockets(m) => {
+                m.inner_mut().finish()?;
+            }
+            EngineMachine::Sim(_) => {}
         }
         Ok(())
     }
@@ -1084,7 +1222,7 @@ mod tests {
             runners: 2,
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0x5EAD);
         let mut pending = Vec::new();
         let mut want = Vec::new();
@@ -1123,7 +1261,7 @@ mod tests {
             engine: EngineKind::Threads,
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0xBEEF);
         let mut pending = Vec::new();
         let mut want = Vec::new();
@@ -1152,7 +1290,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let mut spec = JobSpec::new(0, vec![1; 32], vec![1; 32]);
         spec.procs = 16;
         assert!(sched.submit(spec).is_err());
@@ -1166,7 +1305,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         assert!(sched.submit(JobSpec::new(1, vec![1; 8], vec![2; 8])).is_err());
         sched.shutdown().unwrap();
     }
@@ -1184,7 +1324,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let mut spec = JobSpec::new(0, vec![1; 1024], vec![1; 1024]);
         spec.algo = Some(Algorithm::Copsim);
         spec.mem_cap = Some(64);
@@ -1211,7 +1352,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let mut spec = JobSpec::new(2, vec![1; 1024], vec![1; 1024]);
         spec.algo = Some(Algorithm::Copsim);
         let rej = sched.try_submit(spec).unwrap_err();
@@ -1233,7 +1375,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let mut slow = JobSpec::new(0, vec![1; 2048], vec![1; 2048]);
         slow.algo = Some(Algorithm::Copsim);
         let slow_rx = sched.submit(slow).unwrap();
@@ -1265,7 +1408,7 @@ mod tests {
             runners: 1,
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
         let a = vec![3u32; 64];
         let b = vec![5u32; 64];
         let r1 = sched.submit_blocking(JobSpec::new(0, a.clone(), b.clone())).unwrap();
@@ -1313,7 +1456,7 @@ mod tests {
             quarantine_after: 0, // keep every proc in service here
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0xFA);
         let mut pending = Vec::new();
         let mut want = Vec::new();
@@ -1358,7 +1501,7 @@ mod tests {
             fault: Some(FaultConfig::new(0x57A, 0.001).only(&[FaultKind::Stall])),
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0x1D);
         let mut pending = Vec::new();
         for id in 0..8u64 {
@@ -1404,7 +1547,7 @@ mod tests {
             quarantine_after: 2,
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
         for id in 0..3u64 {
             let mut spec = JobSpec::new(id, vec![1; 32], vec![2; 32]);
             spec.procs = 4;
@@ -1432,7 +1575,7 @@ mod tests {
             quarantine_after: 1,
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
         let mut spec = JobSpec::new(0, vec![1; 32], vec![2; 32]);
         spec.procs = 4;
         spec.algo = Some(Algorithm::Copsim);
@@ -1458,7 +1601,8 @@ mod tests {
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )
+        .unwrap();
         let mut rng = Rng::new(0x57EA);
         let mut pending = Vec::new();
         for id in 0..8u64 {

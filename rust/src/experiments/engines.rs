@@ -1,8 +1,8 @@
 //! E15 — execution-engine comparison: the cost-model simulator vs the
-//! real-threads executor running the *same* algorithm source through
-//! [`MachineApi`].
+//! real-threads executor vs the real-network socket executor, all
+//! running the *same* algorithm source through [`MachineApi`].
 //!
-//! For each (algorithm, n, P) cell both engines multiply identical
+//! For each (algorithm, n, P) cell every engine multiplies identical
 //! random operands. The table reports
 //!
 //! * the critical-path cost triple (identical across engines — checked),
@@ -10,7 +10,11 @@
 //!   cost-model clocks,
 //! * measured wall-clock of the single-threaded cost-model interpreter,
 //! * measured wall-clock of the threaded engine (one OS thread per
-//!   simulated processor), and
+//!   simulated processor),
+//! * measured wall-clock of the socket engine (worker processes over
+//!   Unix-domain sockets — real serialization and kernel socket
+//!   buffers behind every message; `-` when no worker binary is
+//!   resolvable on this host), and
 //! * the threaded engine's speedup over the interpreter — the
 //!   "coordination algorithms actually parallelize" evidence the
 //!   simulator alone cannot provide.
@@ -20,7 +24,9 @@ use crate::algorithms::{copk_mi, copsim_mi};
 use crate::bignum::Base;
 use crate::error::{ensure, Result};
 use crate::metrics::{fmt_f64, fmt_u64, Table};
-use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use crate::sim::{
+    socket_available, Clock, DistInt, Machine, MachineApi, Seq, SocketMachine, ThreadedMachine,
+};
 use crate::theory::TimeModel;
 use crate::util::Rng;
 use std::time::{Duration, Instant};
@@ -66,6 +72,9 @@ pub struct EngineComparison {
     pub sim_wall: Duration,
     /// Wall-clock of the threaded engine (P OS threads).
     pub threaded_wall: Duration,
+    /// Wall-clock of the socket engine (worker processes over UDS);
+    /// `None` when no worker binary is resolvable on this host.
+    pub socket_wall: Option<Duration>,
 }
 
 impl EngineComparison {
@@ -130,6 +139,27 @@ pub fn compare_engines(scheme: Scheme, n: usize, p: usize, seed: u64) -> Result<
         report.critical
     );
 
+    let socket_wall = if socket_available() {
+        let mut sock = SocketMachine::unbounded(p, base)?;
+        let (sock_prod, wall) = run_on(&mut sock, scheme, &seq, &a, &b, &leaf)?;
+        let sock_report = sock.finish()?;
+        ensure!(
+            sim_prod == sock_prod,
+            "socket engine disagrees on the product at {} n={n} P={p}",
+            scheme.name()
+        );
+        ensure!(
+            sim_clock == sock_report.critical,
+            "socket engine disagrees on the cost triple at {} n={n} P={p}: sim {} vs sockets {}",
+            scheme.name(),
+            sim_clock,
+            sock_report.critical
+        );
+        Some(wall)
+    } else {
+        None
+    };
+
     let predicted_ms = TimeModel::default().time_ns(&sim_clock) / 1e6;
     Ok(EngineComparison {
         scheme,
@@ -139,6 +169,7 @@ pub fn compare_engines(scheme: Scheme, n: usize, p: usize, seed: u64) -> Result<
         predicted_ms,
         sim_wall,
         threaded_wall,
+        socket_wall,
     })
 }
 
@@ -159,10 +190,20 @@ pub fn e15_engines() -> Result<Vec<Table>> {
         (Scheme::Copk, 36, 4608),
     ];
     let mut t = Table::new(
-        "E15: cost-model predicted critical path vs measured threaded wall-clock \
-         (predicted = α·T + β·L + γ·BW on the cost-model clocks; speedup = sim wall / threaded wall)",
+        "E15: cost-model predicted critical path vs measured threaded and socket wall-clock \
+         (predicted = α·T + β·L + γ·BW on the cost-model clocks; speedup = sim wall / threaded \
+         wall; sockets = worker processes over UDS, `-` if no worker binary resolves)",
         &[
-            "scheme", "P", "n", "T", "BW", "L", "predicted ms", "sim wall ms", "threads wall ms",
+            "scheme",
+            "P",
+            "n",
+            "T",
+            "BW",
+            "L",
+            "predicted ms",
+            "sim wall ms",
+            "threads wall ms",
+            "sockets wall ms",
             "speedup",
         ],
     );
@@ -178,6 +219,9 @@ pub fn e15_engines() -> Result<Vec<Table>> {
             fmt_f64(c.predicted_ms),
             fmt_f64(c.sim_wall.as_secs_f64() * 1e3),
             fmt_f64(c.threaded_wall.as_secs_f64() * 1e3),
+            c.socket_wall
+                .map(|w| fmt_f64(w.as_secs_f64() * 1e3))
+                .unwrap_or_else(|| "-".into()),
             format!("{:.2}", c.speedup()),
         ]);
     }

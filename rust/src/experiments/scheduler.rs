@@ -75,7 +75,7 @@ pub fn run_fleet(
             ..Default::default()
         },
         leaf_ref(SchoolLeaf),
-    );
+    )?;
     let mut rng = Rng::new(0xE16);
     let t0 = std::time::Instant::now();
     let mut pending = Vec::with_capacity(jobs);

@@ -33,7 +33,7 @@ use crate::sim::{Machine, Seq};
 
 const SEED: u64 = 0xE19;
 
-fn daemon_for(engine: EngineKind) -> Daemon {
+fn daemon_for(engine: EngineKind) -> Result<Daemon> {
     Daemon::start(
         DaemonConfig {
             sched: SchedulerConfig {
@@ -80,7 +80,7 @@ pub fn e19_serving() -> Result<Vec<Table>> {
     );
     for engine in [EngineKind::Sim, EngineKind::Threads] {
         for (i, &rate) in RATES.iter().enumerate() {
-            let daemon = daemon_for(engine);
+            let daemon = daemon_for(engine)?;
             let load = OpenLoop {
                 arrivals: ArrivalGen::poisson(SEED ^ i as u64, rate)?,
                 jobs: JOBS,
@@ -111,7 +111,7 @@ pub fn e19_serving() -> Result<Vec<Table>> {
         &["engine", "completed", "identical triples", "verdict"],
     );
     for engine in [EngineKind::Sim, EngineKind::Threads] {
-        let daemon = daemon_for(engine);
+        let daemon = daemon_for(engine)?;
         let load = OpenLoop {
             arrivals: ArrivalGen::poisson(SEED ^ 0x1D, 1600.0)?,
             jobs: 32,
@@ -152,7 +152,7 @@ mod tests {
     #[test]
     fn serving_cell_completes_and_sheds_are_accounted() {
         // One small cell: accounting balances and nothing fails.
-        let daemon = daemon_for(EngineKind::Sim);
+        let daemon = daemon_for(EngineKind::Sim).unwrap();
         let load = OpenLoop {
             arrivals: ArrivalGen::poisson(SEED, 2000.0).unwrap(),
             jobs: 12,
@@ -171,7 +171,7 @@ mod tests {
 
     #[test]
     fn cost_identity_holds_for_a_collected_job() {
-        let daemon = daemon_for(EngineKind::Sim);
+        let daemon = daemon_for(EngineKind::Sim).unwrap();
         let load = OpenLoop {
             arrivals: ArrivalGen::poisson(SEED ^ 7, 2000.0).unwrap(),
             jobs: 4,

@@ -10,9 +10,11 @@
 //! `L × diameter`, `T` unchanged. The table reports measured /
 //! predicted ratios; a ratio above 1 would mean relay congestion
 //! pushed the critical path past the per-chain bound (the slack the
-//! `theory::` docs call out), and both engines are asserted to agree
+//! `theory::` docs call out), and all engines are asserted to agree
 //! on every cost triple — the routing layers are cost-identical by
-//! construction.
+//! construction. When a worker binary resolves, the socket engine
+//! (real worker processes over UDS) joins the cross-check, so the
+//! per-topology cost identity is established over the network too.
 
 use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
 use crate::algorithms::{copk_mi, copsim_mi};
@@ -20,7 +22,10 @@ use crate::bignum::Base;
 use crate::config::EngineKind;
 use crate::error::{ensure, Result};
 use crate::metrics::{fmt_f64, fmt_u64, Table};
-use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine, TopologyKind};
+use crate::sim::{
+    socket_available, Clock, DistInt, Machine, MachineApi, Seq, SocketMachine, ThreadedMachine,
+    TopologyKind,
+};
 use crate::theory;
 use crate::util::Rng;
 
@@ -100,6 +105,12 @@ fn measure(
             let report = m.finish()?;
             Ok((prod, report.critical))
         }
+        EngineKind::Sockets => {
+            let mut m = SocketMachine::with_topology(p, u64::MAX / 2, base, topo)?;
+            let prod = run_on(&mut m, scheme, &seq, &a, &b, &leaf)?;
+            let report = m.finish()?;
+            Ok((prod, report.critical))
+        }
     }
 }
 
@@ -126,6 +137,20 @@ pub fn compare_cell(
          sim {sim_cost} vs threads {thr_cost}",
         scheme.name()
     );
+    if socket_available() {
+        let (sock_prod, sock_cost) = measure(scheme, n, p, kind, EngineKind::Sockets, seed)?;
+        ensure!(
+            sim_prod == sock_prod,
+            "socket engine disagrees on the product at {} n={n} P={p} {kind}",
+            scheme.name()
+        );
+        ensure!(
+            sim_cost == sock_cost,
+            "socket engine disagrees on the cost triple at {} n={n} P={p} {kind}: \
+             sim {sim_cost} vs sockets {sock_cost}",
+            scheme.name()
+        );
+    }
     let topo = kind.build(p);
     let fc_bound = scheme.fc_bound(n as u64, p as u64);
     Ok((sim_cost, theory::predicted_for_topology(fc_bound, topo.as_ref())))
@@ -141,9 +166,10 @@ pub fn e18_topologies() -> Result<Vec<Table>> {
         (Scheme::Copk, 36, 4608),
     ];
     let mut t = Table::new(
-        "E18: measured vs predicted (T, BW, L) per network topology, both engines \
+        "E18: measured vs predicted (T, BW, L) per network topology, all engines \
          (predicted = fully-connected theorem bound x topology inflation: \
-         BW x diameter·max-link-weight, L x diameter; engines asserted cost-identical)",
+         BW x diameter·max-link-weight, L x diameter; engines asserted cost-identical, \
+         sockets joining the cross-check when a worker binary resolves)",
         &[
             "scheme", "topology", "P", "n", "T", "BW", "L", "pred BW", "pred L", "BW ratio",
             "L ratio",

@@ -19,8 +19,12 @@
 //!   critical-path accounting per §2.2, Yang–Miller, and per-processor
 //!   memory ledgers), a real-threads executor
 //!   ([`sim::ThreadedMachine`], one OS thread per simulated processor
-//!   with point-to-point message channels), a seeded deterministic
-//!   fault-injection wrapper over either engine
+//!   with point-to-point message channels), a real-network executor
+//!   ([`sim::SocketMachine`], one OS worker process per group of
+//!   simulated processors, speaking length-prefixed little-endian
+//!   frames over Unix-domain — or optionally TCP — sockets, with the
+//!   same clock/ledger semantics as the threaded engine), a seeded
+//!   deterministic fault-injection wrapper over any engine
 //!   ([`sim::FaultyMachine`] — dropped/duplicated/reordered messages,
 //!   stalls, alloc/compute failures, recoverable processor crashes),
 //!   the shared collective-communication layer ([`sim::collectives`] —
@@ -61,7 +65,7 @@
 //!   zero-fault per-job cost identity under that load.
 //!
 //! See `rust/DESIGN.md` for the architecture notes (including the
-//! two-backend execution-engine split) and the experiment index.
+//! three-backend execution-engine split) and the experiment index.
 
 pub mod algorithms;
 pub mod baselines;
@@ -79,4 +83,4 @@ pub mod theory;
 pub mod util;
 
 pub use config::{EngineKind, RunConfig};
-pub use sim::{Clock, Machine, MachineApi, Seq, ThreadedMachine, TopologyKind};
+pub use sim::{Clock, Machine, MachineApi, Seq, SocketMachine, ThreadedMachine, TopologyKind};

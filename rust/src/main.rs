@@ -7,14 +7,14 @@
 //! copmul experiment <id|all> [--csv]           run paper experiments E1-E19
 //! copmul serve [key=value ...]                 fixed-batch coordinator workload
 //! copmul daemon [--rate=R ...]                 always-on serving, open-loop load
-//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_7.json
+//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_8.json
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
 //! ```
 //!
 //! Common `key=value` options: `n`, `procs`, `mem`, `algo`
 //! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
-//! `engine` (sim|threads; also spelled `--engine=...`), `topology`
+//! `engine` (sim|threads|sockets; also spelled `--engine=...`), `topology`
 //! (fully-connected|torus|hier; also `--topology=...`), `seed`,
 //! `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
 //! `serve` additionally takes `--jobs=N` (request count), `--shards=K`
@@ -40,6 +40,17 @@ use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // Worker-process entry for the socket engine: a host SocketMachine
+    // spawns `copmul --socket-worker` with its wiring in the
+    // environment (COPMUL_SOCKET_HOST/GROUP/DIR), so this dispatches
+    // before any normal CLI parsing and never prints the help text.
+    if args.first().map(String::as_str) == Some("--socket-worker") {
+        if let Err(e) = copmul::sim::socket_worker_main() {
+            eprintln!("socket worker: {e:#}");
+            std::process::exit(1);
+        }
+        return;
+    }
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -76,11 +87,15 @@ USAGE:
   copmul selftest
 
 KEYS: n procs mem algo(copsim|copk|hybrid) leaf(slim|skim|school|hybrid|xla|xla-batched)
-      --engine=(sim|threads) --topology=(fully-connected|torus|hier)
+      --engine=(sim|threads|sockets) --topology=(fully-connected|torus|hier)
       seed workers artifacts alpha_ns beta_ns gamma_ns
 
 ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
-         threads = one OS thread per simulated processor (wall-clock speedup).
+         threads = one OS thread per simulated processor (wall-clock speedup);
+         sockets = one OS worker process per group of simulated processors,
+         commands and messages over Unix-domain sockets (COPMUL_SOCKET_TCP=1
+         for TCP loopback; COPMUL_SOCKET_GROUPS sets the process count).
+         The internal `copmul --socket-worker` entry is exec'd by the host.
 
 TOPOLOGIES: fully-connected (the paper's implicit network; default),
             torus (2D wraparound grid, hop-by-hop routing and charging),
@@ -88,7 +103,7 @@ TOPOLOGIES: fully-connected (the paper's implicit network; default),
 
 BENCH:   wall-clock harness (engine grid, kernel-ladder table, per-base
          leaf-width sweep, open-loop serving curve). --json writes the
-         BENCH_7.json artifact (--out overrides the path); --smoke runs
+         BENCH_8.json artifact (--out overrides the path); --smoke runs
          the CI-sized grid. COPMUL_KERNEL=(reference|packed64|generic|simd)
          pins the dispatched rung. Cost triples shown are layout-invariant;
          wall-clock is the quantity the perf PRs move.
@@ -123,7 +138,7 @@ DAEMON:  always-on serving under seeded open-loop load: arrivals follow
          --shards=K      concurrent shards of the shared machine (default 4)
          --queue=N       admission bound, queued+running (default 1024)
          --fault-rate=R --fault-seed=S   as in serve
-         --smoke [--json --out=PATH]     CI serving curve -> BENCH_7.json
+         --smoke [--json --out=PATH]     CI serving curve -> BENCH_8.json
 ";
 
 /// Build the leaf backend the config names.
@@ -470,7 +485,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
     let mut fault_seed: Option<u64> = None;
     let mut smoke = false;
     let mut json = false;
-    let mut out = "BENCH_7.json".to_string();
+    let mut out = "BENCH_8.json".to_string();
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("--jobs=").or_else(|| a.strip_prefix("jobs=")) {
@@ -514,7 +529,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
 
     if smoke {
         // CI serving curve: both engines, Poisson + bursty legs,
-        // emitted in the BENCH_7.json `serving` section.
+        // emitted in the BENCH_8.json `serving` section.
         let bench_cfg = copmul::perf::BenchConfig {
             smoke: true,
             seed: cfg.seed,
@@ -590,7 +605,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
             ..Default::default()
         },
         leaf,
-    );
+    )?;
     let arrivals = match arrival.as_str() {
         "poisson" => ArrivalGen::poisson(cfg.seed, rate)?,
         "bursty" => ArrivalGen::bursty(cfg.seed, rate, burst, Duration::from_millis(idle_ms))?,
@@ -665,7 +680,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
 fn cmd_bench(args: &[String]) -> Result<()> {
     let mut cfg = copmul::perf::BenchConfig::default();
     let mut json = false;
-    let mut out = "BENCH_7.json".to_string();
+    let mut out = "BENCH_8.json".to_string();
     for a in args {
         if a == "--json" {
             json = true;
@@ -727,13 +742,19 @@ fn cmd_selftest() -> Result<()> {
         &copmul::bignum::mul::mul_school(&a, &b, base, &mut ops),
         base,
     );
+    let mut engines = vec![copmul::EngineKind::Sim, copmul::EngineKind::Threads];
+    if copmul::sim::socket_available() {
+        engines.push(copmul::EngineKind::Sockets);
+    } else {
+        println!("selftest: socket engine skipped (no worker binary resolvable)");
+    }
     for (procs, algo) in [
         (16usize, Some(copmul::algorithms::Algorithm::Copsim)),
         (12, Some(copmul::algorithms::Algorithm::Copk)),
         (4, None),
     ] {
         let coord = Coordinator::start(CoordinatorConfig::default(), Arc::new(SkimLeaf));
-        for engine in [copmul::EngineKind::Sim, copmul::EngineKind::Threads] {
+        for &engine in &engines {
             let mut spec = JobSpec::new(0, a.clone(), b.clone());
             spec.procs = procs;
             spec.algo = algo;

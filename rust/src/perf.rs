@@ -1,8 +1,8 @@
 //! `copmul bench` — the wall-clock measurement harness behind the
 //! repo's `BENCH_*.json` perf trajectory.
 //!
-//! Four sections, all recorded per run into one JSON artifact
-//! (`BENCH_7.json` by default; CI's `perf-smoke` and `serve-soak` jobs
+//! Five sections, all recorded per run into one JSON artifact
+//! (`BENCH_8.json` by default; CI's `perf-smoke` and `serve-soak` jobs
 //! upload it and `BENCH_HISTORY.md` tracks the dated in-tree trail):
 //!
 //! * **engine grid** — end-to-end wall-clock of both execution engines
@@ -23,6 +23,11 @@
 //!   engine and arrival process, offered load vs goodput with latency
 //!   percentiles and shed/retry counts — the section PR 7's always-on
 //!   daemon reports its trajectory through.
+//! * **socket** — measured socket-engine wall-clock vs the §2.2 model
+//!   prediction `α·T + β·L + γ·BW` on the same cost-model clocks: real
+//!   worker processes over Unix-domain sockets, cross-checked for
+//!   product and cost-triple identity against the simulator. Empty
+//!   when no worker binary is resolvable on the host.
 
 use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
 use crate::algorithms::{copk_mi, copsim_mi, Algorithm};
@@ -33,7 +38,10 @@ use crate::coordinator::{
 };
 use crate::error::{ensure, Result};
 use crate::metrics::{fmt_u64, Table};
-use crate::sim::{Clock, DistInt, Machine, MachineApi, Seq, ThreadedMachine};
+use crate::sim::{
+    socket_available, Clock, DistInt, Machine, MachineApi, Seq, SocketMachine, ThreadedMachine,
+};
+use crate::theory::TimeModel;
 use crate::util::Rng;
 use std::time::{Duration, Instant};
 
@@ -112,6 +120,23 @@ pub struct ServingCell {
     pub wall_ms: u64,
 }
 
+/// One socket-engine measured-vs-predicted point: real worker
+/// processes over UDS, with the §2.2 prediction from the (identical)
+/// cost-model clock alongside.
+#[derive(Clone, Debug)]
+pub struct SocketCell {
+    pub scheme: &'static str,
+    pub n: usize,
+    pub procs: usize,
+    pub base_log2: u32,
+    /// Measured wall-clock over real sockets.
+    pub wall: Duration,
+    /// Cost triple (asserted identical to the simulator's).
+    pub clock: Clock,
+    /// §2.2 predicted time `α·T + β·L + γ·BW` in ms.
+    pub predicted_ms: f64,
+}
+
 /// The full bench report; serializes to the `BENCH_*.json` schema.
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
@@ -124,6 +149,8 @@ pub struct BenchReport {
     pub kernels: Vec<KernelCell>,
     pub leaf_sweep: Vec<LeafCell>,
     pub serving: Vec<ServingCell>,
+    /// Empty when no worker binary resolves on this host.
+    pub socket: Vec<SocketCell>,
 }
 
 /// Run one multiplication end to end on an engine (mirrors the E15
@@ -206,6 +233,61 @@ fn engine_grid(cfg: &BenchConfig, report: &mut BenchReport) -> Result<()> {
                 wall: wall_thr,
                 clock: fin.critical,
                 mem_peak: fin.mem_peak_max,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Socket-engine measured-vs-predicted: the same cells E15 runs, but
+/// over real worker processes, with the simulator alongside purely to
+/// supply the (asserted-identical) cost triple the §2.2 prediction is
+/// computed from. Records nothing when no worker binary resolves.
+fn socket_grid(cfg: &BenchConfig, report: &mut BenchReport) -> Result<()> {
+    if !socket_available() {
+        return Ok(());
+    }
+    let base = Base::default();
+    let model = TimeModel::default();
+    let copsim_n: &[usize] = if cfg.smoke { &[1024] } else { &[1024, 4096] };
+    let copk_n: &[usize] = if cfg.smoke { &[1536] } else { &[1536, 3072] };
+    let schemes = [
+        ("copsim", 4usize, copsim_n, leaf_ref(SchoolLeaf)),
+        ("copk", 12, copk_n, leaf_ref(SkimLeaf)),
+    ];
+    for (scheme, procs, n_list, leaf) in &schemes {
+        let (scheme, procs, n_list) = (*scheme, *procs, *n_list);
+        for &n in n_list {
+            let mut rng = Rng::new(cfg.seed ^ 0x50C ^ (n as u64) ^ ((procs as u64) << 32));
+            let a = rng.digits(n, base.log2);
+            let b = rng.digits(n, base.log2);
+            let seq = Seq::range(procs);
+
+            let mut sim = Machine::unbounded(procs, base);
+            let (p_sim, _) = run_once(&mut sim, scheme, &seq, &a, &b, leaf)?;
+            let clock = sim.critical();
+
+            let mut sock = SocketMachine::unbounded(procs, base)?;
+            let (p_sock, wall) = run_once(&mut sock, scheme, &seq, &a, &b, leaf)?;
+            let fin = sock.finish()?;
+            ensure!(
+                p_sock == p_sim,
+                "bench: socket product mismatch at {scheme} n={n}"
+            );
+            ensure!(
+                fin.critical == clock,
+                "bench: socket cost triple diverges at {scheme} n={n}: \
+                 sim {clock} vs sockets {}",
+                fin.critical
+            );
+            report.socket.push(SocketCell {
+                scheme,
+                n,
+                procs,
+                base_log2: base.log2,
+                wall,
+                clock,
+                predicted_ms: model.time_ns(&clock) / 1e6,
             });
         }
     }
@@ -335,7 +417,7 @@ pub fn serving_curve(cfg: &BenchConfig, report: &mut BenchReport) -> Result<()> 
                 ..Default::default()
             },
             leaf_ref(SchoolLeaf),
-        );
+        )?;
         let mut legs: Vec<(&'static str, ArrivalGen, f64)> = Vec::new();
         for &r in rates {
             legs.push(("poisson", ArrivalGen::poisson(cfg.seed ^ r as u64, r)?, r));
@@ -388,6 +470,7 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     kernel_table(cfg, &mut report);
     leaf_sweep(cfg, &mut report);
     serving_curve(cfg, &mut report)?;
+    socket_grid(cfg, &mut report)?;
     Ok(report)
 }
 
@@ -461,7 +544,36 @@ impl BenchReport {
                 c.wall_ms.to_string(),
             ]);
         }
-        vec![t1, t2, t3, t4]
+        let mut t5 = Table::new(
+            "socket engine: measured wall vs predicted α·T + β·L + γ·BW \
+             (empty when no worker binary resolves)",
+            &[
+                "scheme",
+                "n",
+                "P",
+                "T",
+                "BW",
+                "L",
+                "predicted ms",
+                "wall ms",
+                "ratio",
+            ],
+        );
+        for c in &self.socket {
+            let wall_ms = c.wall.as_secs_f64() * 1e3;
+            t5.row(vec![
+                c.scheme.into(),
+                c.n.to_string(),
+                c.procs.to_string(),
+                fmt_u64(c.clock.ops),
+                fmt_u64(c.clock.words),
+                fmt_u64(c.clock.msgs),
+                format!("{:.3}", c.predicted_ms),
+                format!("{wall_ms:.3}"),
+                format!("{:.2}", wall_ms / c.predicted_ms.max(1e-9)),
+            ]);
+        }
+        vec![t1, t2, t3, t4, t5]
     }
 
     /// Serialize to the `BENCH_*.json` schema (hand-rolled — no serde
@@ -469,7 +581,7 @@ impl BenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(4096);
         s.push_str(&format!(
-            "{{\n  \"bench\": 7,\n  \"kernel_selected\": \"{}\",\n  \
+            "{{\n  \"bench\": 8,\n  \"kernel_selected\": \"{}\",\n  \
              \"simd_isa\": \"{}\",\n  \"engine_grid\": [\n",
             self.kernel_selected, self.simd_isa
         ));
@@ -540,6 +652,24 @@ impl BenchReport {
                 if i + 1 < self.serving.len() { "," } else { "" },
             ));
         }
+        s.push_str("  ],\n  \"socket\": [\n");
+        for (i, c) in self.socket.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"scheme\": \"{}\", \"n\": {}, \"procs\": {}, \"base_log2\": {}, \
+                 \"wall_us\": {}, \"ops\": {}, \"words\": {}, \"msgs\": {}, \
+                 \"predicted_ms\": {:.3}}}{}\n",
+                c.scheme,
+                c.n,
+                c.procs,
+                c.base_log2,
+                c.wall.as_micros(),
+                c.clock.ops,
+                c.clock.words,
+                c.clock.msgs,
+                c.predicted_ms,
+                if i + 1 < self.socket.len() { "," } else { "" },
+            ));
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -582,6 +712,23 @@ mod tests {
             p999_us: 9800,
             wall_ms: 200,
         });
+        // Likewise a synthetic socket cell: the JSON/table paths must
+        // hold whether or not a worker binary resolves on this host
+        // (the live path is covered by socket_grid in `copmul bench`
+        // and the engine differential suite).
+        report.socket.push(SocketCell {
+            scheme: "copsim",
+            n: 1024,
+            procs: 4,
+            base_log2: 16,
+            wall: Duration::from_micros(1500),
+            clock: Clock {
+                ops: 70_000,
+                words: 2_048,
+                msgs: 24,
+            },
+            predicted_ms: 0.5,
+        });
         assert!(!report.kernels.is_empty());
         assert!(!report.leaf_sweep.is_empty());
         // Every available ladder rung shows up in the kernel table, and
@@ -597,14 +744,17 @@ mod tests {
             assert!(report.leaf_sweep.iter().any(|c| c.scheme == scheme));
         }
         let j = Json::parse(&report.to_json()).expect("BENCH json must parse");
-        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(7));
+        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(8));
         assert!(j.get("kernel_selected").and_then(Json::as_str).is_some());
         assert!(j.get("kernels").and_then(Json::as_arr).is_some());
         assert!(j.get("leaf_width_sweep").and_then(Json::as_arr).is_some());
         let serving = j.get("serving").and_then(Json::as_arr).expect("serving arr");
         assert_eq!(serving.len(), 1);
         assert_eq!(serving[0].get("completed").and_then(Json::as_u64), Some(150));
-        assert_eq!(report.tables().len(), 4, "serving table renders");
+        let socket = j.get("socket").and_then(Json::as_arr).expect("socket arr");
+        assert_eq!(socket.len(), 1);
+        assert_eq!(socket[0].get("wall_us").and_then(Json::as_u64), Some(1500));
+        assert_eq!(report.tables().len(), 5, "socket table renders");
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! The machine-model layer: the paper's distributed-memory machine (§2)
-//! behind the pluggable [`MachineApi`] trait, with two execution
+//! behind the pluggable [`MachineApi`] trait, with three execution
 //! engines — the deterministic cost-model simulator ([`Machine`],
-//! critical-path accounting per §2.2) and the real-threads executor
-//! ([`ThreadedMachine`], one OS thread per processor) — plus
+//! critical-path accounting per §2.2), the real-threads executor
+//! ([`ThreadedMachine`], one OS thread per processor), and the
+//! real-network executor ([`SocketMachine`], one OS process per group
+//! of processors over length-prefixed socket frames) — plus
 //! [`FaultyMachine`], a deterministic seeded fault-injection wrapper
-//! over either engine (the chaos/soak layer). Above the engines,
+//! over any engine (the chaos/soak layer). Above the engines,
 //! [`collectives`] provides the shared tree-structured communication
 //! schedules every algorithm goes through; below them, [`topology`]
 //! maps logical sends onto a pluggable physical interconnect
@@ -59,6 +61,7 @@ pub mod dist;
 pub mod faulty;
 pub mod machine;
 pub mod seq;
+pub mod socket;
 pub mod threaded;
 pub mod topology;
 
@@ -68,6 +71,10 @@ pub use dist::DistInt;
 pub use faulty::{FaultConfig, FaultEvent, FaultKind, FaultyMachine};
 pub use machine::{Machine, MachineStats, ProcId, Slot};
 pub use seq::Seq;
+pub use socket::{
+    resolve_worker_bin, socket_available, socket_worker_main, SocketConfig, SocketMachine,
+    SocketTransport,
+};
 pub use threaded::{payload_into_vec, ThreadedMachine, ThreadedReport};
 pub use topology::{FullyConnected, HierCluster, Topology, TopologyKind, TopologyRef, Torus2D};
 

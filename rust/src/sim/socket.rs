@@ -1,0 +1,2703 @@
+//! [`SocketMachine`] — the real-network execution engine.
+//!
+//! One OS *process* per group of simulated processors, connected over
+//! Unix-domain sockets (TCP behind [`SocketTransport::Tcp`] /
+//! `COPMUL_SOCKET_TCP=1`). This is the engine that takes the paper's
+//! "distributed memory" literally: every inter-group word genuinely
+//! crosses a kernel socket, so the predicted (T, BW, L) bounds are
+//! exercised against real message passing rather than shared memory.
+//!
+//! ## Cost contract
+//!
+//! The engine satisfies the exact contract the threaded engine does:
+//! bit-identical products AND identical (T, BW, L, M) cost triples on
+//! every topology (three-way differential in
+//! `tests/engine_differential.rs`). Each worker process runs one
+//! command loop per owned processor that is semantically byte-for-byte
+//! the threaded engine's `Worker::run`: the same ledger sequence
+//! (free inputs, charge ops, alloc output), the same clock-snapshot
+//! piggybacking on every message, the same join-then-charge order on
+//! relays, the same host-joined barrier clock.
+//!
+//! What differs is *where the digit work runs*: closures cannot cross
+//! a process boundary, so `local` and `compute_slot` bodies execute in
+//! the coordinator process (`compute_slot` round-trips the input
+//! digits). Workers own everything cost-visible — memory ledgers,
+//! clocks, and the wire — so model costs are unchanged; the engine
+//! loses `compute_slot` overlap, a wall-clock (not model-cost) effect.
+//! The threaded engine remains the wall-clock engine; this one is the
+//! communication-measurement engine.
+//!
+//! ## Wiring
+//!
+//! Frames are length-prefixed little-endian messages (shared
+//! [`crate::util::frame::FrameCursor`] reader, same hardened contract
+//! as the serving daemon's `Request::{encode,decode}`; fuzzed in
+//! `tests/wire_fuzz.rs`). Lifecycle: the host binds a listener, spawns
+//! `copmul --socket-worker` once per group, and handshakes
+//! Hello/Setup/Listening/Go/Ready; workers then build a full peer mesh
+//! (lower group connects, higher accepts) for the data plane. Each
+//! control link gets a host-side writer thread and reader thread; a
+//! reader EOF marks the group dead and fails its pending calls, which
+//! is how a real `SIGKILL` surfaces as per-call errors (kill-chaos in
+//! `tests/chaos_soak.rs`) — backstopped by
+//! [`SocketConfig::reply_timeout`] so a vanished worker can never hang
+//! the coordinator.
+
+use super::api::{MachineApi, ProcView, SlotComputation};
+use super::machine::{MachineStats, ProcId, Slot};
+use super::threaded::{payload_into_vec, ThreadedReport, WorkerSnapshot};
+use super::topology::{FullyConnected, TopologyRef};
+use super::Clock;
+use crate::bignum::{Base, Ops};
+use crate::error::{anyhow, bail, ensure, Result};
+use std::any::Any;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A delivered point-to-point message: payload digits + sender clock
+/// snapshot (the threaded engine's `NetMsg`, rebuilt per process).
+type NetMsg = (Arc<Vec<u32>>, Clock);
+/// Receiver mesh rows: `[local dst][global src]`.
+type NetRxMesh = Vec<Vec<Option<Receiver<NetMsg>>>>;
+/// Sender mesh rows: `[global src][local dst]`.
+type NetTxMesh = Vec<Vec<Option<Sender<NetMsg>>>>;
+
+pub mod wire {
+    //! The socket engine's frame codec. Every frame is a little-endian
+    //! body of `MAGIC`, `VERSION`, a one-byte opcode, and
+    //! opcode-specific fields, shipped length-prefixed by a `u32`.
+    //! Decoding uses the shared bounds-checked
+    //! [`FrameCursor`](crate::util::frame::FrameCursor), so hostile
+    //! length fields are rejected before any allocation and trailing
+    //! garbage fails the frame (fuzzed in `tests/wire_fuzz.rs`).
+
+    use crate::error::{bail, ensure, Result};
+    use crate::sim::threaded::WorkerSnapshot;
+    use crate::sim::Clock;
+    use crate::util::frame::{push_digits_lp, push_str_lp, FrameCursor};
+    use std::io::{Read, Write};
+    use std::time::Duration;
+
+    /// `"COPW"` — distinct from the serving daemon's `"COPM"`.
+    pub const MAGIC: u32 = 0x434F_5057;
+    pub const VERSION: u8 = 1;
+    /// Upper bound on one frame body; the length prefix is validated
+    /// against it before the body buffer is allocated.
+    pub const MAX_FRAME: usize = 1 << 26;
+
+    /// One message on a socket-engine link. Commands address a global
+    /// processor id `p`; the worker process owning `p`'s group
+    /// dispatches them to that processor's command loop.
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Frame {
+        // -- lifecycle (host <-> worker control stream) ---------------
+        Hello { group: u32 },
+        Setup { procs: u32, groups: u32, mem_cap: u64, base_log2: u8, bounds: Vec<u32> },
+        Listening { addr: String },
+        Go { addrs: Vec<String> },
+        Ready,
+        Shutdown,
+        // -- commands (host -> worker) --------------------------------
+        Alloc { p: u32, slot: u64, data: Vec<u32> },
+        Free { p: u32, slot: u64 },
+        Replace { p: u32, slot: u64, data: Vec<u32> },
+        Read { p: u32, slot: u64 },
+        Compute { p: u32, ops: u64 },
+        /// Charge a host-executed `local` closure at this queue point.
+        LocalSync { p: u32, ops: u64, busy_ns: u64 },
+        /// First half of `compute_slot`: free/borrow the inputs and
+        /// ship their digits to the host.
+        TakeInputs { p: u32, slots: Vec<u64>, consume: bool },
+        /// Second half of `compute_slot`: charge ops, store the output.
+        StoreOutput { p: u32, slot: u64, ops: u64, busy_ns: u64, data: Vec<u32> },
+        SendOwned { p: u32, dst: u32, weight: u64, data: Vec<u32> },
+        SendSlot {
+            p: u32,
+            dst: u32,
+            weight: u64,
+            slot: u64,
+            range: Option<(u64, u64)>,
+            free_after: bool,
+        },
+        Forward { p: u32, src: u32, dst: u32, weight: u64 },
+        Recv { p: u32, src: u32, slot: u64 },
+        BarrierCollect { p: u32 },
+        BarrierRelease { p: u32, clock: Clock },
+        Purge { p: u32 },
+        Query { p: u32 },
+        // -- replies (worker -> host) ---------------------------------
+        Data { p: u32, payload: Vec<u32> },
+        Ack { p: u32 },
+        Inputs { p: u32, payloads: Vec<Vec<u32>> },
+        Snapshot { p: u32, snap: WorkerSnapshot },
+        BarrierClock { p: u32, clock: Clock },
+        // -- peer data plane (worker <-> worker) ----------------------
+        PeerHello { group: u32 },
+        Net { src: u32, dst: u32, clock: Clock, payload: Vec<u32> },
+    }
+
+    fn push_u32(out: &mut Vec<u8>, v: u32) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn push_u64(out: &mut Vec<u8>, v: u64) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn push_clock(out: &mut Vec<u8>, c: &Clock) {
+        push_u64(out, c.ops);
+        push_u64(out, c.words);
+        push_u64(out, c.msgs);
+    }
+
+    fn read_clock(f: &mut FrameCursor) -> Result<Clock> {
+        let ops = f.u64()?;
+        let words = f.u64()?;
+        let msgs = f.u64()?;
+        Ok(Clock { ops, words, msgs })
+    }
+
+    fn read_bool(f: &mut FrameCursor) -> Result<bool> {
+        let b = f.u8()?;
+        ensure!(b <= 1, "bad bool byte {b} in frame");
+        Ok(b == 1)
+    }
+
+    /// Counted digit vector (writer half is `push_digits_lp`).
+    fn read_digits_lp(f: &mut FrameCursor) -> Result<Vec<u32>> {
+        let n = f.u32()? as usize;
+        f.digits(n)
+    }
+
+    impl Frame {
+        fn opcode(&self) -> u8 {
+            match self {
+                Frame::Hello { .. } => 0x01,
+                Frame::Setup { .. } => 0x02,
+                Frame::Listening { .. } => 0x03,
+                Frame::Go { .. } => 0x04,
+                Frame::Ready => 0x05,
+                Frame::Shutdown => 0x06,
+                Frame::Alloc { .. } => 0x10,
+                Frame::Free { .. } => 0x11,
+                Frame::Replace { .. } => 0x12,
+                Frame::Read { .. } => 0x13,
+                Frame::Compute { .. } => 0x14,
+                Frame::LocalSync { .. } => 0x15,
+                Frame::TakeInputs { .. } => 0x16,
+                Frame::StoreOutput { .. } => 0x17,
+                Frame::SendOwned { .. } => 0x18,
+                Frame::SendSlot { .. } => 0x19,
+                Frame::Forward { .. } => 0x1A,
+                Frame::Recv { .. } => 0x1B,
+                Frame::BarrierCollect { .. } => 0x1C,
+                Frame::BarrierRelease { .. } => 0x1D,
+                Frame::Purge { .. } => 0x1E,
+                Frame::Query { .. } => 0x1F,
+                Frame::Data { .. } => 0x20,
+                Frame::Ack { .. } => 0x21,
+                Frame::Inputs { .. } => 0x22,
+                Frame::Snapshot { .. } => 0x23,
+                Frame::BarrierClock { .. } => 0x24,
+                Frame::PeerHello { .. } => 0x30,
+                Frame::Net { .. } => 0x31,
+            }
+        }
+
+        /// Serialize the frame body (no length prefix).
+        pub fn encode(&self) -> Vec<u8> {
+            let mut out = Vec::with_capacity(32);
+            push_u32(&mut out, MAGIC);
+            out.push(VERSION);
+            out.push(self.opcode());
+            match self {
+                Frame::Hello { group } | Frame::PeerHello { group } => {
+                    push_u32(&mut out, *group);
+                }
+                Frame::Setup {
+                    procs,
+                    groups,
+                    mem_cap,
+                    base_log2,
+                    bounds,
+                } => {
+                    push_u32(&mut out, *procs);
+                    push_u32(&mut out, *groups);
+                    push_u64(&mut out, *mem_cap);
+                    out.push(*base_log2);
+                    push_digits_lp(&mut out, bounds);
+                }
+                Frame::Listening { addr } => push_str_lp(&mut out, addr),
+                Frame::Go { addrs } => {
+                    push_u32(&mut out, addrs.len() as u32);
+                    for a in addrs {
+                        push_str_lp(&mut out, a);
+                    }
+                }
+                Frame::Ready | Frame::Shutdown => {}
+                Frame::Alloc { p, slot, data } | Frame::Replace { p, slot, data } => {
+                    push_u32(&mut out, *p);
+                    push_u64(&mut out, *slot);
+                    push_digits_lp(&mut out, data);
+                }
+                Frame::Free { p, slot } | Frame::Read { p, slot } => {
+                    push_u32(&mut out, *p);
+                    push_u64(&mut out, *slot);
+                }
+                Frame::Compute { p, ops } => {
+                    push_u32(&mut out, *p);
+                    push_u64(&mut out, *ops);
+                }
+                Frame::LocalSync { p, ops, busy_ns } => {
+                    push_u32(&mut out, *p);
+                    push_u64(&mut out, *ops);
+                    push_u64(&mut out, *busy_ns);
+                }
+                Frame::TakeInputs { p, slots, consume } => {
+                    push_u32(&mut out, *p);
+                    push_u32(&mut out, slots.len() as u32);
+                    for s in slots {
+                        push_u64(&mut out, *s);
+                    }
+                    out.push(u8::from(*consume));
+                }
+                Frame::StoreOutput {
+                    p,
+                    slot,
+                    ops,
+                    busy_ns,
+                    data,
+                } => {
+                    push_u32(&mut out, *p);
+                    push_u64(&mut out, *slot);
+                    push_u64(&mut out, *ops);
+                    push_u64(&mut out, *busy_ns);
+                    push_digits_lp(&mut out, data);
+                }
+                Frame::SendOwned { p, dst, weight, data } => {
+                    push_u32(&mut out, *p);
+                    push_u32(&mut out, *dst);
+                    push_u64(&mut out, *weight);
+                    push_digits_lp(&mut out, data);
+                }
+                Frame::SendSlot {
+                    p,
+                    dst,
+                    weight,
+                    slot,
+                    range,
+                    free_after,
+                } => {
+                    push_u32(&mut out, *p);
+                    push_u32(&mut out, *dst);
+                    push_u64(&mut out, *weight);
+                    push_u64(&mut out, *slot);
+                    match range {
+                        Some((a, b)) => {
+                            out.push(1);
+                            push_u64(&mut out, *a);
+                            push_u64(&mut out, *b);
+                        }
+                        None => out.push(0),
+                    }
+                    out.push(u8::from(*free_after));
+                }
+                Frame::Forward { p, src, dst, weight } => {
+                    push_u32(&mut out, *p);
+                    push_u32(&mut out, *src);
+                    push_u32(&mut out, *dst);
+                    push_u64(&mut out, *weight);
+                }
+                Frame::Recv { p, src, slot } => {
+                    push_u32(&mut out, *p);
+                    push_u32(&mut out, *src);
+                    push_u64(&mut out, *slot);
+                }
+                Frame::BarrierCollect { p }
+                | Frame::Ack { p }
+                | Frame::Purge { p }
+                | Frame::Query { p } => push_u32(&mut out, *p),
+                Frame::BarrierRelease { p, clock } | Frame::BarrierClock { p, clock } => {
+                    push_u32(&mut out, *p);
+                    push_clock(&mut out, clock);
+                }
+                Frame::Data { p, payload } => {
+                    push_u32(&mut out, *p);
+                    push_digits_lp(&mut out, payload);
+                }
+                Frame::Inputs { p, payloads } => {
+                    push_u32(&mut out, *p);
+                    push_u32(&mut out, payloads.len() as u32);
+                    for d in payloads {
+                        push_digits_lp(&mut out, d);
+                    }
+                }
+                Frame::Snapshot { p, snap } => {
+                    push_u32(&mut out, *p);
+                    push_clock(&mut out, &snap.clock);
+                    push_u64(&mut out, snap.mem_used);
+                    push_u64(&mut out, snap.mem_peak);
+                    push_u64(&mut out, snap.total_ops);
+                    push_u64(&mut out, snap.sent_words);
+                    push_u64(&mut out, snap.sent_msgs);
+                    push_u64(&mut out, snap.busy.as_nanos() as u64);
+                    match &snap.error {
+                        Some(e) => {
+                            out.push(1);
+                            push_str_lp(&mut out, e);
+                        }
+                        None => out.push(0),
+                    }
+                }
+                Frame::Net {
+                    src,
+                    dst,
+                    clock,
+                    payload,
+                } => {
+                    push_u32(&mut out, *src);
+                    push_u32(&mut out, *dst);
+                    push_clock(&mut out, clock);
+                    push_digits_lp(&mut out, payload);
+                }
+            }
+            out
+        }
+
+        /// Parse one frame body. Rejects bad magic/version, unknown
+        /// opcodes, hostile length fields, and trailing garbage.
+        pub fn decode(buf: &[u8]) -> Result<Frame> {
+            let mut f = FrameCursor::new(buf);
+            let magic = f.u32()?;
+            ensure!(magic == MAGIC, "bad socket frame magic {magic:#010x}");
+            let version = f.u8()?;
+            ensure!(version == VERSION, "unsupported socket frame version {version}");
+            let op = f.u8()?;
+            let frame = match op {
+                0x01 => Frame::Hello { group: f.u32()? },
+                0x02 => {
+                    let procs = f.u32()?;
+                    let groups = f.u32()?;
+                    let mem_cap = f.u64()?;
+                    let base_log2 = f.u8()?;
+                    let bounds = read_digits_lp(&mut f)?;
+                    Frame::Setup {
+                        procs,
+                        groups,
+                        mem_cap,
+                        base_log2,
+                        bounds,
+                    }
+                }
+                0x03 => Frame::Listening { addr: f.str_lp()? },
+                0x04 => {
+                    let n = f.u32()? as usize;
+                    ensure!(
+                        n <= f.remaining() / 4,
+                        "address count {n} exceeds the {} bytes left in the frame",
+                        f.remaining()
+                    );
+                    let mut addrs = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        addrs.push(f.str_lp()?);
+                    }
+                    Frame::Go { addrs }
+                }
+                0x05 => Frame::Ready,
+                0x06 => Frame::Shutdown,
+                0x10 | 0x12 => {
+                    let p = f.u32()?;
+                    let slot = f.u64()?;
+                    let data = read_digits_lp(&mut f)?;
+                    if op == 0x10 {
+                        Frame::Alloc { p, slot, data }
+                    } else {
+                        Frame::Replace { p, slot, data }
+                    }
+                }
+                0x11 | 0x13 => {
+                    let p = f.u32()?;
+                    let slot = f.u64()?;
+                    if op == 0x11 {
+                        Frame::Free { p, slot }
+                    } else {
+                        Frame::Read { p, slot }
+                    }
+                }
+                0x14 => {
+                    let p = f.u32()?;
+                    let ops = f.u64()?;
+                    Frame::Compute { p, ops }
+                }
+                0x15 => {
+                    let p = f.u32()?;
+                    let ops = f.u64()?;
+                    let busy_ns = f.u64()?;
+                    Frame::LocalSync { p, ops, busy_ns }
+                }
+                0x16 => {
+                    let p = f.u32()?;
+                    let n = f.u32()? as usize;
+                    ensure!(
+                        n <= f.remaining() / 8,
+                        "slot count {n} exceeds the {} bytes left in the frame",
+                        f.remaining()
+                    );
+                    let mut slots = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        slots.push(f.u64()?);
+                    }
+                    let consume = read_bool(&mut f)?;
+                    Frame::TakeInputs { p, slots, consume }
+                }
+                0x17 => {
+                    let p = f.u32()?;
+                    let slot = f.u64()?;
+                    let ops = f.u64()?;
+                    let busy_ns = f.u64()?;
+                    let data = read_digits_lp(&mut f)?;
+                    Frame::StoreOutput {
+                        p,
+                        slot,
+                        ops,
+                        busy_ns,
+                        data,
+                    }
+                }
+                0x18 => {
+                    let p = f.u32()?;
+                    let dst = f.u32()?;
+                    let weight = f.u64()?;
+                    let data = read_digits_lp(&mut f)?;
+                    Frame::SendOwned { p, dst, weight, data }
+                }
+                0x19 => {
+                    let p = f.u32()?;
+                    let dst = f.u32()?;
+                    let weight = f.u64()?;
+                    let slot = f.u64()?;
+                    let range = if read_bool(&mut f)? {
+                        let a = f.u64()?;
+                        let b = f.u64()?;
+                        Some((a, b))
+                    } else {
+                        None
+                    };
+                    let free_after = read_bool(&mut f)?;
+                    Frame::SendSlot {
+                        p,
+                        dst,
+                        weight,
+                        slot,
+                        range,
+                        free_after,
+                    }
+                }
+                0x1A => {
+                    let p = f.u32()?;
+                    let src = f.u32()?;
+                    let dst = f.u32()?;
+                    let weight = f.u64()?;
+                    Frame::Forward { p, src, dst, weight }
+                }
+                0x1B => {
+                    let p = f.u32()?;
+                    let src = f.u32()?;
+                    let slot = f.u64()?;
+                    Frame::Recv { p, src, slot }
+                }
+                0x1C => Frame::BarrierCollect { p: f.u32()? },
+                0x1D | 0x24 => {
+                    let p = f.u32()?;
+                    let clock = read_clock(&mut f)?;
+                    if op == 0x1D {
+                        Frame::BarrierRelease { p, clock }
+                    } else {
+                        Frame::BarrierClock { p, clock }
+                    }
+                }
+                0x1E => Frame::Purge { p: f.u32()? },
+                0x1F => Frame::Query { p: f.u32()? },
+                0x20 => {
+                    let p = f.u32()?;
+                    let payload = read_digits_lp(&mut f)?;
+                    Frame::Data { p, payload }
+                }
+                0x21 => Frame::Ack { p: f.u32()? },
+                0x22 => {
+                    let p = f.u32()?;
+                    let n = f.u32()? as usize;
+                    ensure!(
+                        n <= f.remaining() / 4,
+                        "payload count {n} exceeds the {} bytes left in the frame",
+                        f.remaining()
+                    );
+                    let mut payloads = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        payloads.push(read_digits_lp(&mut f)?);
+                    }
+                    Frame::Inputs { p, payloads }
+                }
+                0x23 => {
+                    let p = f.u32()?;
+                    let clock = read_clock(&mut f)?;
+                    let mem_used = f.u64()?;
+                    let mem_peak = f.u64()?;
+                    let total_ops = f.u64()?;
+                    let sent_words = f.u64()?;
+                    let sent_msgs = f.u64()?;
+                    let busy = Duration::from_nanos(f.u64()?);
+                    let error = if read_bool(&mut f)? {
+                        Some(f.str_lp()?)
+                    } else {
+                        None
+                    };
+                    Frame::Snapshot {
+                        p,
+                        snap: WorkerSnapshot {
+                            clock,
+                            mem_used,
+                            mem_peak,
+                            total_ops,
+                            sent_words,
+                            sent_msgs,
+                            busy,
+                            error,
+                        },
+                    }
+                }
+                0x30 => Frame::PeerHello { group: f.u32()? },
+                0x31 => {
+                    let src = f.u32()?;
+                    let dst = f.u32()?;
+                    let clock = read_clock(&mut f)?;
+                    let payload = read_digits_lp(&mut f)?;
+                    Frame::Net {
+                        src,
+                        dst,
+                        clock,
+                        payload,
+                    }
+                }
+                other => bail!("unknown socket frame opcode {other:#04x}"),
+            };
+            f.expect_end()?;
+            Ok(frame)
+        }
+    }
+
+    /// Length-prefix and serialize one frame (the bytes `read_frame`
+    /// expects on the wire).
+    pub fn frame_bytes(frame: &Frame) -> Vec<u8> {
+        let body = frame.encode();
+        let mut out = Vec::with_capacity(body.len() + 4);
+        push_u32(&mut out, body.len() as u32);
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Write one length-prefixed frame and flush.
+    pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+        w.write_all(&frame_bytes(frame))?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one length-prefixed frame. The length prefix is validated
+    /// against [`MAX_FRAME`] before the body buffer is allocated.
+    pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+        let mut len4 = [0u8; 4];
+        r.read_exact(&mut len4)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        ensure!(len <= MAX_FRAME, "socket frame length {len} exceeds the {MAX_FRAME}-byte cap");
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Frame::decode(&body)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transport: Unix-domain sockets by default, TCP loopback behind a
+// flag (and the fallback on platforms without UDS).
+// ---------------------------------------------------------------------
+
+/// Which socket family carries the engine's links.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SocketTransport {
+    /// Unix-domain sockets in a per-machine scratch directory.
+    Unix,
+    /// TCP on 127.0.0.1 (ephemeral ports).
+    Tcp,
+}
+
+/// One connected link of either family.
+enum Stream {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixStream),
+    Tcp(std::net::TcpStream),
+}
+
+impl Stream {
+    fn connect(addr: &str) -> Result<Stream> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            return Ok(Stream::Unix(std::os::unix::net::UnixStream::connect(path)?));
+            #[cfg(not(unix))]
+            bail!("unix socket address {path:?} on a platform without UDS");
+        }
+        if let Some(hostport) = addr.strip_prefix("tcp:") {
+            return Ok(Stream::Tcp(std::net::TcpStream::connect(hostport)?));
+        }
+        bail!("unrecognized socket address {addr:?}")
+    }
+
+    fn try_clone(&self) -> Result<Stream> {
+        Ok(match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => Stream::Unix(s.try_clone()?),
+            Stream::Tcp(s) => Stream::Tcp(s.try_clone()?),
+        })
+    }
+
+    fn set_read_timeout(&self, t: Option<Duration>) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(t)?,
+            Stream::Tcp(s) => s.set_read_timeout(t)?,
+        }
+        Ok(())
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+            Stream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+            Stream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+            Stream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket of either family.
+enum Listener {
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+    Tcp(std::net::TcpListener),
+}
+
+impl Listener {
+    /// Bind under `dir` (UDS) or on an ephemeral loopback port (TCP);
+    /// returns the listener and the address string peers connect to.
+    fn bind(transport: SocketTransport, dir: &Path, name: &str) -> Result<(Listener, String)> {
+        match transport {
+            #[cfg(unix)]
+            SocketTransport::Unix => {
+                let path = dir.join(format!("{name}.sock"));
+                let l = std::os::unix::net::UnixListener::bind(&path)?;
+                let addr = format!("unix:{}", path.display());
+                Ok((Listener::Unix(l), addr))
+            }
+            #[cfg(not(unix))]
+            SocketTransport::Unix => Listener::bind(SocketTransport::Tcp, dir, name),
+            SocketTransport::Tcp => {
+                let l = std::net::TcpListener::bind(("127.0.0.1", 0))?;
+                let addr = format!("tcp:{}", l.local_addr()?);
+                Ok((Listener::Tcp(l), addr))
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb)?,
+            Listener::Tcp(l) => l.set_nonblocking(nb)?,
+        }
+        Ok(())
+    }
+
+    /// One non-blocking accept attempt: `Ok(None)` means nothing is
+    /// queued yet.
+    fn accept_once(&self) -> Result<Option<Stream>> {
+        let out = match self {
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+        };
+        match out {
+            Ok(s) => Ok(Some(s)),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e.into()),
+        }
+    }
+
+    /// Accept one connection, polling until `deadline` so a worker
+    /// that never comes up fails the handshake instead of hanging it.
+    fn accept_deadline(&self, deadline: Instant) -> Result<Stream> {
+        self.set_nonblocking(true)?;
+        let out = loop {
+            match self.accept_once() {
+                Ok(Some(s)) => break Ok(s),
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        break Err(anyhow!("timed out waiting for a socket connection"));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => break Err(e),
+            }
+        };
+        let _ = self.set_nonblocking(false);
+        let s = out?;
+        // Accepted sockets inherit non-blocking mode on some platforms.
+        match &s {
+            #[cfg(unix)]
+            Stream::Unix(u) => u.set_nonblocking(false)?,
+            Stream::Tcp(t) => t.set_nonblocking(false)?,
+        }
+        Ok(s)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Configuration and worker-binary resolution.
+// ---------------------------------------------------------------------
+
+/// Socket-engine knobs. [`Default`] reads the `COPMUL_SOCKET_*`
+/// environment; pass an explicit config from tests to avoid env races.
+#[derive(Clone, Debug)]
+pub struct SocketConfig {
+    /// Worker processes to spawn; each owns a contiguous block of
+    /// processors. `0` = auto (`min(procs, 2)`). Env:
+    /// `COPMUL_SOCKET_GROUPS`.
+    pub groups: usize,
+    /// Socket family (env: `COPMUL_SOCKET_TCP=1` for TCP).
+    pub transport: SocketTransport,
+    /// Upper bound on any single reply wait, so a killed worker fails
+    /// the call instead of hanging it (env: `COPMUL_SOCKET_TIMEOUT_MS`).
+    pub reply_timeout: Duration,
+    /// Worker executable; `None` resolves via `COPMUL_WORKER_BIN`,
+    /// then the current executable and its sibling directories.
+    pub worker_bin: Option<PathBuf>,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        let groups = std::env::var("COPMUL_SOCKET_GROUPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        let transport = if std::env::var("COPMUL_SOCKET_TCP").as_deref() == Ok("1") {
+            SocketTransport::Tcp
+        } else {
+            SocketTransport::Unix
+        };
+        let reply_timeout = std::env::var("COPMUL_SOCKET_TIMEOUT_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .map(Duration::from_millis)
+            .unwrap_or(Duration::from_secs(30));
+        SocketConfig {
+            groups,
+            transport,
+            reply_timeout,
+            worker_bin: None,
+        }
+    }
+}
+
+/// Locate the `copmul` binary that serves as the worker executable.
+/// Test harness binaries live in `target/<profile>/deps/`, so the real
+/// binary is probed next to the current executable and one directory
+/// up; integration tests pass `env!("CARGO_BIN_EXE_copmul")` through
+/// [`SocketConfig::worker_bin`] instead.
+pub fn resolve_worker_bin(cfg: &SocketConfig) -> Option<PathBuf> {
+    if let Some(p) = &cfg.worker_bin {
+        return Some(p.clone());
+    }
+    if let Ok(p) = std::env::var("COPMUL_WORKER_BIN") {
+        return Some(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().ok()?;
+    if exe.file_stem().map(|s| s == "copmul").unwrap_or(false) {
+        return Some(exe);
+    }
+    let dirs = [exe.parent(), exe.parent().and_then(Path::parent)];
+    for dir in dirs.into_iter().flatten() {
+        for name in ["copmul", "copmul.exe"] {
+            let cand = dir.join(name);
+            if cand.is_file() {
+                return Some(cand);
+            }
+        }
+    }
+    None
+}
+
+/// Whether this host can run the socket engine at all (a worker
+/// binary is resolvable). The differential tests use this to skip the
+/// socket leg unless `COPMUL_ENGINE_MATRIX` demands it.
+pub fn socket_available() -> bool {
+    resolve_worker_bin(&SocketConfig::default()).is_some()
+}
+
+/// Even contiguous split of `procs` processors over `groups` worker
+/// processes: group `g` owns `[bounds[g], bounds[g+1])`.
+pub(crate) fn group_bounds(procs: usize, groups: usize) -> Vec<usize> {
+    (0..=groups).map(|g| g * procs / groups).collect()
+}
+
+fn group_of_bounds(bounds: &[usize], p: usize) -> usize {
+    (0..bounds.len() - 1)
+        .find(|&g| p < bounds[g + 1])
+        .expect("processor within group bounds")
+}
+
+/// Per-machine scratch directory for UDS paths.
+fn scratch_dir() -> Result<PathBuf> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let n = SEQ.fetch_add(1, Ordering::SeqCst);
+    let dir = std::env::temp_dir().join(format!("copmul-sock-{}-{n}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+// ---------------------------------------------------------------------
+// Host side: the coordinator-resident engine.
+// ---------------------------------------------------------------------
+
+/// A reply the host is waiting for, queued per processor in command
+/// order (workers answer their queue in order, so reply order matches).
+enum Pending {
+    Data(Sender<Vec<u32>>),
+    /// `local` runs host-side; the worker's `Ack` releases the value
+    /// at the correct queue point.
+    Local {
+        value: Option<Box<dyn Any + Send>>,
+        tx: Sender<Box<dyn Any + Send>>,
+    },
+    Inputs(Sender<Vec<Vec<u32>>>),
+    Snapshot(Sender<WorkerSnapshot>),
+    Barrier(Sender<Clock>),
+}
+
+type PendingQueues = Arc<Vec<Mutex<VecDeque<Pending>>>>;
+
+/// Host endpoint of one worker process's control stream.
+struct GroupLink {
+    /// Pre-framed bytes to the writer thread; `None` once finished.
+    tx: Option<Sender<Vec<u8>>>,
+    /// Set on writer error or reader EOF — i.e. the process is gone.
+    dead: Arc<AtomicBool>,
+    writer: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// Fail every call still waiting on a dead group's processors: their
+/// reply senders are dropped, so the waiters' `recv` fails immediately.
+fn drain_pending(pending: &PendingQueues, range: &std::ops::Range<usize>) {
+    for p in range.clone() {
+        pending[p].lock().unwrap().clear();
+    }
+}
+
+fn writer_loop(
+    mut stream: Stream,
+    rx: Receiver<Vec<u8>>,
+    dead: Arc<AtomicBool>,
+    range: std::ops::Range<usize>,
+    pending: PendingQueues,
+) {
+    while let Ok(buf) = rx.recv() {
+        if stream.write_all(&buf).and_then(|_| stream.flush()).is_err() {
+            dead.store(true, Ordering::SeqCst);
+            drain_pending(&pending, &range);
+            return;
+        }
+    }
+}
+
+/// Deliver one reply frame to the pending entry at the front of its
+/// processor's queue. Any mismatch is a protocol violation and tears
+/// the link down.
+fn fulfill(frame: wire::Frame, range: &std::ops::Range<usize>, pending: &PendingQueues) -> bool {
+    let p = match &frame {
+        wire::Frame::Data { p, .. }
+        | wire::Frame::Ack { p }
+        | wire::Frame::Inputs { p, .. }
+        | wire::Frame::Snapshot { p, .. }
+        | wire::Frame::BarrierClock { p, .. } => *p as usize,
+        _ => return false,
+    };
+    if !range.contains(&p) {
+        return false;
+    }
+    let entry = pending[p].lock().unwrap().pop_front();
+    match (frame, entry) {
+        (wire::Frame::Data { payload, .. }, Some(Pending::Data(tx))) => {
+            let _ = tx.send(payload);
+            true
+        }
+        (wire::Frame::Ack { .. }, Some(Pending::Local { mut value, tx })) => {
+            if let Some(v) = value.take() {
+                let _ = tx.send(v);
+            }
+            true
+        }
+        (wire::Frame::Inputs { payloads, .. }, Some(Pending::Inputs(tx))) => {
+            let _ = tx.send(payloads);
+            true
+        }
+        (wire::Frame::Snapshot { snap, .. }, Some(Pending::Snapshot(tx))) => {
+            let _ = tx.send(snap);
+            true
+        }
+        (wire::Frame::BarrierClock { clock, .. }, Some(Pending::Barrier(tx))) => {
+            let _ = tx.send(clock);
+            true
+        }
+        _ => false,
+    }
+}
+
+fn reader_loop(
+    mut stream: Stream,
+    range: std::ops::Range<usize>,
+    pending: PendingQueues,
+    dead: Arc<AtomicBool>,
+) {
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(frame) => {
+                if !fulfill(frame, &range, &pending) {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    // EOF (worker exit or kill) or a corrupt link: the group is gone.
+    dead.store(true, Ordering::SeqCst);
+    drain_pending(&pending, &range);
+}
+
+/// The real-network execution engine (see module docs).
+pub struct SocketMachine {
+    base: Base,
+    mem_cap: u64,
+    topo: TopologyRef,
+    procs: usize,
+    cfg: SocketConfig,
+    /// Group boundaries: group `g` owns `[bounds[g], bounds[g+1])`.
+    bounds: Vec<usize>,
+    /// Per-processor next slot id (dense worker-arena indices).
+    next_slot: Vec<Slot>,
+    links: Vec<GroupLink>,
+    pending: PendingQueues,
+    children: Mutex<Vec<Option<Child>>>,
+    /// Commands issued so far — the deterministic trigger for
+    /// [`SocketMachine::arm_kill`].
+    cmds_issued: AtomicU64,
+    /// `(group, fire_at_command_count)` for a pending seeded kill.
+    kill_plan: Mutex<Option<(usize, u64)>>,
+    dir: PathBuf,
+    started: Instant,
+}
+
+impl SocketMachine {
+    /// Spawn worker processes modelling `p` processors with `mem_cap`
+    /// words of local memory each, on the default fully-connected
+    /// interconnect. Unlike the in-process engines this can fail:
+    /// process spawn or the socket handshake may be refused.
+    pub fn new(p: usize, mem_cap: u64, base: Base) -> Result<Self> {
+        SocketMachine::with_topology(p, mem_cap, base, Arc::new(FullyConnected))
+    }
+
+    /// Effectively unbounded local memories (MI execution mode).
+    pub fn unbounded(p: usize, base: Base) -> Result<Self> {
+        SocketMachine::new(p, u64::MAX / 2, base)
+    }
+
+    /// [`SocketMachine::new`] on an explicit network topology: relayed
+    /// hops run through the relay processors' command loops exactly as
+    /// on the threaded engine.
+    pub fn with_topology(p: usize, mem_cap: u64, base: Base, topo: TopologyRef) -> Result<Self> {
+        SocketMachine::with_config(p, mem_cap, base, topo, SocketConfig::default())
+    }
+
+    /// Fully explicit constructor.
+    pub fn with_config(
+        p: usize,
+        mem_cap: u64,
+        base: Base,
+        topo: TopologyRef,
+        cfg: SocketConfig,
+    ) -> Result<Self> {
+        assert!(p >= 1, "need at least one processor");
+        let dir = scratch_dir()?;
+        let mut children: Vec<Option<Child>> = Vec::new();
+        match SocketMachine::boot(p, mem_cap, base, topo, cfg, &dir, &mut children) {
+            Ok(m) => Ok(m),
+            Err(e) => {
+                for c in children.iter_mut().filter_map(Option::as_mut) {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+                Err(e)
+            }
+        }
+    }
+
+    /// Spawn + handshake. Children spawned so far are pushed into
+    /// `children` as we go, so the caller can reap them on error.
+    fn boot(
+        procs: usize,
+        mem_cap: u64,
+        base: Base,
+        topo: TopologyRef,
+        cfg: SocketConfig,
+        dir: &Path,
+        children: &mut Vec<Option<Child>>,
+    ) -> Result<SocketMachine> {
+        let groups = if cfg.groups == 0 {
+            procs.min(2)
+        } else {
+            cfg.groups.min(procs)
+        };
+        let bounds = group_bounds(procs, groups);
+        let bin = resolve_worker_bin(&cfg).ok_or_else(|| {
+            anyhow!("cannot locate the copmul worker binary (set COPMUL_WORKER_BIN)")
+        })?;
+        let (listener, host_addr) = Listener::bind(cfg.transport, dir, "host")?;
+        for g in 0..groups {
+            let child = Command::new(&bin)
+                .arg("--socket-worker")
+                .env("COPMUL_SOCKET_HOST", &host_addr)
+                .env("COPMUL_SOCKET_GROUP", g.to_string())
+                .env("COPMUL_SOCKET_DIR", dir)
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| anyhow!("spawning socket worker {g} ({}): {e}", bin.display()))?;
+            children.push(Some(child));
+        }
+        // Accept each worker and identify it by its Hello.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut slots: Vec<Option<Stream>> = (0..groups).map(|_| None).collect();
+        for _ in 0..groups {
+            let mut s = listener.accept_deadline(deadline)?;
+            s.set_read_timeout(Some(Duration::from_secs(10)))?;
+            match wire::read_frame(&mut s)? {
+                wire::Frame::Hello { group } => {
+                    let g = group as usize;
+                    ensure!(
+                        g < groups && slots[g].is_none(),
+                        "bad worker hello (group {group})"
+                    );
+                    slots[g] = Some(s);
+                }
+                other => bail!("expected Hello during handshake, got {other:?}"),
+            }
+        }
+        let mut streams: Vec<Stream> = slots
+            .into_iter()
+            .map(|s| s.expect("all groups connected"))
+            .collect();
+        let setup = wire::Frame::Setup {
+            procs: procs as u32,
+            groups: groups as u32,
+            mem_cap,
+            base_log2: base.log2 as u8,
+            bounds: bounds.iter().map(|&b| b as u32).collect(),
+        };
+        for s in &mut streams {
+            wire::write_frame(s, &setup)?;
+        }
+        let mut peer_addrs = vec![String::new(); groups];
+        for (g, s) in streams.iter_mut().enumerate() {
+            match wire::read_frame(s)? {
+                wire::Frame::Listening { addr } => peer_addrs[g] = addr,
+                other => bail!("expected Listening from worker {g}, got {other:?}"),
+            }
+        }
+        let go = wire::Frame::Go { addrs: peer_addrs };
+        for s in &mut streams {
+            wire::write_frame(s, &go)?;
+        }
+        for (g, s) in streams.iter_mut().enumerate() {
+            match wire::read_frame(s)? {
+                wire::Frame::Ready => {}
+                other => bail!("expected Ready from worker {g}, got {other:?}"),
+            }
+        }
+        // Steady state: per-group writer + reader threads.
+        let pending: PendingQueues =
+            Arc::new((0..procs).map(|_| Mutex::new(VecDeque::new())).collect());
+        let mut links = Vec::with_capacity(groups);
+        for (g, s) in streams.into_iter().enumerate() {
+            s.set_read_timeout(None)?;
+            let range = bounds[g]..bounds[g + 1];
+            let dead = Arc::new(AtomicBool::new(false));
+            let (tx, rx) = channel::<Vec<u8>>();
+            let wstream = s.try_clone()?;
+            let writer = {
+                let dead = Arc::clone(&dead);
+                let range = range.clone();
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || writer_loop(wstream, rx, dead, range, pending))
+            };
+            let reader = {
+                let dead = Arc::clone(&dead);
+                let pending = Arc::clone(&pending);
+                std::thread::spawn(move || reader_loop(s, range, pending, dead))
+            };
+            links.push(GroupLink {
+                tx: Some(tx),
+                dead,
+                writer: Some(writer),
+                reader: Some(reader),
+            });
+        }
+        Ok(SocketMachine {
+            base,
+            mem_cap,
+            topo,
+            procs,
+            cfg,
+            bounds,
+            next_slot: vec![1; procs],
+            links,
+            pending,
+            children: Mutex::new(std::mem::take(children)),
+            cmds_issued: AtomicU64::new(0),
+            kill_plan: Mutex::new(None),
+            dir: dir.to_path_buf(),
+            started: Instant::now(),
+        })
+    }
+
+    fn group_of(&self, p: ProcId) -> usize {
+        debug_assert!(p < self.procs);
+        group_of_bounds(&self.bounds, p)
+    }
+
+    /// Count one issued command and fire a pending armed kill when its
+    /// trigger count is reached.
+    fn tick(&self) {
+        let n = self.cmds_issued.fetch_add(1, Ordering::SeqCst) + 1;
+        let fire = {
+            let mut plan = self.kill_plan.lock().unwrap();
+            match *plan {
+                Some((g, at)) if n >= at => {
+                    *plan = None;
+                    Some(g)
+                }
+                _ => None,
+            }
+        };
+        if let Some(g) = fire {
+            let _ = self.kill_worker(g);
+        }
+    }
+
+    /// Enqueue one command frame on `p`'s group link. Returns an error
+    /// when the worker process is dead — the socket twin of the
+    /// threaded engine's "worker thread died".
+    fn post(&self, p: ProcId, frame: &wire::Frame) -> Result<()> {
+        self.tick();
+        let g = self.group_of(p);
+        let link = &self.links[g];
+        if link.dead.load(Ordering::SeqCst) {
+            bail!("processor {p}: worker process (group {g}) is dead");
+        }
+        let tx = link
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("socket engine already finished"))?;
+        tx.send(wire::frame_bytes(frame))
+            .map_err(|_| anyhow!("processor {p}: worker process (group {g}) is dead"))
+    }
+
+    /// [`SocketMachine::post`] for commands that expect a reply: the
+    /// pending entry is queued first so the reader can never race it.
+    fn post_with_reply(&self, p: ProcId, frame: &wire::Frame, entry: Pending) -> Result<()> {
+        self.pending[p].lock().unwrap().push_back(entry);
+        if let Err(e) = self.post(p, frame) {
+            self.pending[p].lock().unwrap().pop_back();
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    fn fresh_slot(&mut self, p: ProcId) -> Slot {
+        let s = self.next_slot[p];
+        self.next_slot[p] += 1;
+        s
+    }
+
+    /// Bounded reply wait (a dead worker fails the call, never hangs it).
+    pub fn reply_timeout(&self) -> Duration {
+        self.cfg.reply_timeout
+    }
+
+    /// Number of worker processes.
+    pub fn n_groups(&self) -> usize {
+        self.links.len()
+    }
+
+    /// OS pids of the live worker processes (`None` = exited/reaped).
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        self.children
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|c| c.as_ref().map(Child::id))
+            .collect()
+    }
+
+    /// Kill group `g`'s worker process now (SIGKILL on unix) — the
+    /// kill-chaos tests' real-fault injector.
+    pub fn kill_worker(&self, g: usize) -> Result<()> {
+        {
+            let mut kids = self.children.lock().unwrap();
+            match kids.get_mut(g).and_then(Option::take) {
+                Some(mut c) => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                None => bail!("group {g}: no live worker process"),
+            }
+        }
+        self.links[g].dead.store(true, Ordering::SeqCst);
+        drain_pending(&self.pending, &(self.bounds[g]..self.bounds[g + 1]));
+        Ok(())
+    }
+
+    /// Arm a deterministic kill: group `g` dies once `after_cmds` more
+    /// commands have been issued (seeded chaos schedules replayable by
+    /// construction).
+    pub fn arm_kill(&self, g: usize, after_cmds: u64) {
+        let at = self.cmds_issued.load(Ordering::SeqCst) + after_cmds.max(1);
+        *self.kill_plan.lock().unwrap() = Some((g, at));
+    }
+
+    // ----- two-phase (enqueue now, await later) variants --------------
+    //
+    // Same contract as the threaded engine's: the scheduler's shard
+    // view enqueues under its machine lock and awaits after releasing
+    // it. Program order is fixed at enqueue time.
+
+    /// Enqueue a read; the reply channel delivers the slot's digits.
+    /// If the worker process is dead the entry is dropped and the
+    /// receiver's `recv` fails.
+    pub fn read_request(&self, p: ProcId, slot: Slot) -> Receiver<Vec<u32>> {
+        let (tx, rx) = channel();
+        let frame = wire::Frame::Read { p: p as u32, slot };
+        let _ = self.post_with_reply(p, &frame, Pending::Data(tx));
+        rx
+    }
+
+    /// Run `f` host-side now (closures cannot cross the process
+    /// boundary), charge its ops on worker `p` at this queue point,
+    /// and deliver the boxed result once the worker acknowledges.
+    pub fn local_request<R, F>(&self, p: ProcId, f: F) -> Receiver<Box<dyn Any + Send>>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let t0 = Instant::now();
+        let mut ops = Ops::default();
+        let out: Box<dyn Any + Send> = Box::new(f(&self.base, &mut ops));
+        let busy_ns = t0.elapsed().as_nanos() as u64;
+        let frame = wire::Frame::LocalSync {
+            p: p as u32,
+            ops: ops.get(),
+            busy_ns,
+        };
+        let entry = Pending::Local {
+            value: Some(out),
+            tx,
+        };
+        let _ = self.post_with_reply(p, &frame, entry);
+        rx
+    }
+
+    /// Enqueue a snapshot query; the reply channel delivers the
+    /// worker-side processor state once its queue drains to it.
+    pub fn snapshot_request(&self, p: ProcId) -> Receiver<WorkerSnapshot> {
+        let (tx, rx) = channel();
+        let frame = wire::Frame::Query { p: p as u32 };
+        let _ = self.post_with_reply(p, &frame, Pending::Snapshot(tx));
+        rx
+    }
+
+    /// Blocking snapshot of one processor (drains its queue first).
+    pub fn snapshot(&self, p: ProcId) -> Result<WorkerSnapshot> {
+        self.snapshot_request(p)
+            .recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| anyhow!("processor {p}: worker process unreachable"))
+    }
+
+    /// Snapshots of every processor still reachable (dead groups are
+    /// skipped; `finish` reports them).
+    fn snapshot_all(&self) -> Vec<WorkerSnapshot> {
+        (0..self.procs).filter_map(|p| self.snapshot(p).ok()).collect()
+    }
+
+    /// First recorded worker-side error (memory overflow, peer loss).
+    pub fn take_error(&self) -> Option<String> {
+        self.snapshot_all().into_iter().find_map(|s| s.error)
+    }
+
+    /// Enqueue one logical transfer along the topology's route —
+    /// identical command structure to the threaded engine, so the cost
+    /// accounting is identical too.
+    fn route_send(&mut self, src: ProcId, dst: ProcId, payload: HostPayload) -> Result<Slot> {
+        assert_ne!(src, dst, "send to self is a local operation");
+        if self.topo.hops(src, dst) == 1 {
+            let slot = self.fresh_slot(dst);
+            let w = self.topo.link_bw_weight(src, dst);
+            self.post(src, &send_frame(src, dst, w, payload))?;
+            let recv = wire::Frame::Recv {
+                p: dst as u32,
+                src: src as u32,
+                slot,
+            };
+            self.post(dst, &recv)?;
+            return Ok(slot);
+        }
+        let route = self.topo.route(src, dst);
+        debug_assert!(route.len() >= 2, "route must span the endpoints");
+        let slot = self.fresh_slot(dst);
+        let w0 = self.topo.link_bw_weight(src, route[1]);
+        self.post(src, &send_frame(src, route[1], w0, payload))?;
+        for i in 1..route.len() - 1 {
+            let fwd = wire::Frame::Forward {
+                p: route[i] as u32,
+                src: route[i - 1] as u32,
+                dst: route[i + 1] as u32,
+                weight: self.topo.link_bw_weight(route[i], route[i + 1]),
+            };
+            self.post(route[i], &fwd)?;
+        }
+        let recv = wire::Frame::Recv {
+            p: dst as u32,
+            src: route[route.len() - 2] as u32,
+            slot,
+        };
+        self.post(dst, &recv)?;
+        Ok(slot)
+    }
+
+    /// Reap every child, killing the stragglers after `patience`.
+    fn reap_children(&self, patience: Duration) {
+        let deadline = Instant::now() + patience;
+        let mut kids = self.children.lock().unwrap();
+        loop {
+            let mut live = false;
+            for slot in kids.iter_mut() {
+                if let Some(c) = slot.as_mut() {
+                    match c.try_wait() {
+                        Ok(None) => live = true,
+                        Ok(Some(_)) | Err(_) => *slot = None,
+                    }
+                }
+            }
+            if !live {
+                return;
+            }
+            if Instant::now() >= deadline {
+                for slot in kids.iter_mut() {
+                    if let Some(c) = slot.as_mut() {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    *slot = None;
+                }
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Drain all queues, shut the worker processes down, and report.
+    /// Consumes the engine's usefulness: further [`MachineApi`] calls
+    /// error or no-op.
+    pub fn finish(&mut self) -> Result<ThreadedReport> {
+        let expected = self.procs;
+        // Snapshot first: it synchronizes every queue, so all replies
+        // are home before the links close.
+        let snaps = self.snapshot_all();
+        let reps: Vec<usize> = self.bounds[..self.links.len()].to_vec();
+        for &rep in &reps {
+            let _ = self.post(rep, &wire::Frame::Shutdown);
+        }
+        for link in &mut self.links {
+            link.tx = None; // writer flushes its queue, then exits
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.writer.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = link.reader.take() {
+                let _ = h.join();
+            }
+        }
+        self.reap_children(Duration::from_secs(5));
+        let wall = self.started.elapsed();
+        if snaps.len() < expected {
+            bail!(
+                "socket engine: {} processor(s) unreachable (worker process died)",
+                expected - snaps.len()
+            );
+        }
+        if let Some(e) = snaps.iter().find_map(|s| s.error.clone()) {
+            bail!("socket engine: {e}");
+        }
+        let mut critical = Clock::default();
+        let mut stats = MachineStats::default();
+        let mut mem_peak_max = 0;
+        let mut mem_peak_total = 0;
+        let mut busy = Vec::with_capacity(snaps.len());
+        for s in &snaps {
+            critical = critical.join(&s.clock);
+            stats.total_ops += s.total_ops;
+            stats.total_words += s.sent_words;
+            stats.total_msgs += s.sent_msgs;
+            mem_peak_max = mem_peak_max.max(s.mem_peak);
+            mem_peak_total += s.mem_peak;
+            busy.push(s.busy);
+        }
+        Ok(ThreadedReport {
+            wall,
+            critical,
+            stats,
+            mem_peak_max,
+            mem_peak_total,
+            busy,
+        })
+    }
+}
+
+impl Drop for SocketMachine {
+    fn drop(&mut self) {
+        // Kill first so blocked reader threads see EOF immediately.
+        {
+            let mut kids = self.children.lock().unwrap();
+            for slot in kids.iter_mut() {
+                if let Some(c) = slot.as_mut() {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                }
+                *slot = None;
+            }
+        }
+        for link in &mut self.links {
+            link.tx = None;
+        }
+        for link in &mut self.links {
+            if let Some(h) = link.writer.take() {
+                let _ = h.join();
+            }
+            if let Some(h) = link.reader.take() {
+                let _ = h.join();
+            }
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+/// Payload source for a send, resolved worker-side (same split as the
+/// threaded engine's `Payload`).
+enum HostPayload {
+    Owned(Vec<u32>),
+    FromSlot {
+        slot: Slot,
+        range: Option<std::ops::Range<usize>>,
+        free_after: bool,
+    },
+}
+
+fn send_frame(p: ProcId, dst: ProcId, weight: u64, payload: HostPayload) -> wire::Frame {
+    match payload {
+        HostPayload::Owned(data) => wire::Frame::SendOwned {
+            p: p as u32,
+            dst: dst as u32,
+            weight,
+            data,
+        },
+        HostPayload::FromSlot {
+            slot,
+            range,
+            free_after,
+        } => wire::Frame::SendSlot {
+            p: p as u32,
+            dst: dst as u32,
+            weight,
+            slot,
+            range: range.map(|r| (r.start as u64, r.end as u64)),
+            free_after,
+        },
+    }
+}
+
+impl MachineApi for SocketMachine {
+    fn n_procs(&self) -> usize {
+        self.procs
+    }
+    fn mem_cap(&self) -> u64 {
+        self.mem_cap
+    }
+    fn base(&self) -> Base {
+        self.base
+    }
+    fn topology(&self) -> TopologyRef {
+        Arc::clone(&self.topo)
+    }
+
+    fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
+        let slot = self.fresh_slot(p);
+        let frame = wire::Frame::Alloc {
+            p: p as u32,
+            slot,
+            data,
+        };
+        self.post(p, &frame)?;
+        Ok(slot)
+    }
+    fn free(&mut self, p: ProcId, slot: Slot) {
+        let frame = wire::Frame::Free { p: p as u32, slot };
+        let _ = self.post(p, &frame);
+    }
+    fn read(&self, p: ProcId, slot: Slot) -> Result<Vec<u32>> {
+        self.read_request(p, slot)
+            .recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| anyhow!("processor {p}: worker process died during read"))
+    }
+    fn read_into(&self, p: ProcId, slot: Slot, buf: &mut Vec<u32>) -> Result<()> {
+        let data = self
+            .read_request(p, slot)
+            .recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| anyhow!("processor {p}: worker process died during read"))?;
+        buf.extend_from_slice(&data);
+        Ok(())
+    }
+    fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
+        let frame = wire::Frame::Replace {
+            p: p as u32,
+            slot,
+            data,
+        };
+        self.post(p, &frame)
+    }
+
+    fn compute(&mut self, p: ProcId, ops: u64) {
+        let frame = wire::Frame::Compute { p: p as u32, ops };
+        let _ = self.post(p, &frame);
+    }
+    fn local<R, F>(&mut self, p: ProcId, f: F) -> Result<R>
+    where
+        R: Send + 'static,
+        F: FnOnce(&Base, &mut Ops) -> R + Send + 'static,
+    {
+        let out = self
+            .local_request::<R, F>(p, f)
+            .recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| anyhow!("processor {p}: worker process died during local"))?;
+        Ok(*out.downcast::<R>().expect("local closure result type"))
+    }
+    fn compute_slot(
+        &mut self,
+        p: ProcId,
+        inputs: &[Slot],
+        consume: bool,
+        f: SlotComputation,
+    ) -> Result<Slot> {
+        let out = self.fresh_slot(p);
+        let (tx, rx) = channel();
+        let take = wire::Frame::TakeInputs {
+            p: p as u32,
+            slots: inputs.to_vec(),
+            consume,
+        };
+        self.post_with_reply(p, &take, Pending::Inputs(tx))?;
+        let payloads = rx
+            .recv_timeout(self.cfg.reply_timeout)
+            .map_err(|_| anyhow!("processor {p}: worker process died during compute_slot"))?;
+        let views: Vec<&[u32]> = payloads.iter().map(|v| v.as_slice()).collect();
+        let t0 = Instant::now();
+        let mut ops = Ops::default();
+        let produced = f(&views, &self.base, &mut ops);
+        let busy_ns = t0.elapsed().as_nanos() as u64;
+        let store = wire::Frame::StoreOutput {
+            p: p as u32,
+            slot: out,
+            ops: ops.get(),
+            busy_ns,
+            data: produced,
+        };
+        self.post(p, &store)?;
+        Ok(out)
+    }
+
+    fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
+        self.route_send(src, dst, HostPayload::Owned(data))
+    }
+    fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        self.route_send(
+            src,
+            dst,
+            HostPayload::FromSlot {
+                slot,
+                range: None,
+                free_after: false,
+            },
+        )
+    }
+    fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
+        self.route_send(
+            src,
+            dst,
+            HostPayload::FromSlot {
+                slot,
+                range: None,
+                free_after: true,
+            },
+        )
+    }
+    fn send_range(
+        &mut self,
+        src: ProcId,
+        dst: ProcId,
+        slot: Slot,
+        range: std::ops::Range<usize>,
+    ) -> Result<Slot> {
+        self.route_send(
+            src,
+            dst,
+            HostPayload::FromSlot {
+                slot,
+                range: Some(range),
+                free_after: false,
+            },
+        )
+    }
+    fn barrier(&mut self, procs: &[ProcId]) -> Result<()> {
+        if procs.len() <= 1 {
+            return Ok(());
+        }
+        // Collect every participant's clock, join host-side, release
+        // everyone with the joined clock. A worker's queue naturally
+        // blocks between its BarrierClock reply and the release — that
+        // IS the rendezvous.
+        let mut waits = Vec::with_capacity(procs.len());
+        let mut dead = 0usize;
+        for &p in procs {
+            let (tx, rx) = channel();
+            let frame = wire::Frame::BarrierCollect { p: p as u32 };
+            match self.post_with_reply(p, &frame, Pending::Barrier(tx)) {
+                Ok(()) => waits.push((p, rx)),
+                Err(_) => dead += 1,
+            }
+        }
+        let mut joined = Clock::default();
+        let mut arrived = Vec::with_capacity(waits.len());
+        for (p, rx) in waits {
+            match rx.recv_timeout(self.cfg.reply_timeout) {
+                Ok(c) => {
+                    joined = joined.join(&c);
+                    arrived.push(p);
+                }
+                Err(_) => dead += 1,
+            }
+        }
+        for p in arrived {
+            let frame = wire::Frame::BarrierRelease {
+                p: p as u32,
+                clock: joined,
+            };
+            if self.post(p, &frame).is_err() {
+                dead += 1;
+            }
+        }
+        if dead > 0 {
+            bail!("barrier: {dead} worker process(es) dead");
+        }
+        Ok(())
+    }
+
+    fn proc_view(&self, p: ProcId) -> Result<ProcView> {
+        let s = self.snapshot(p)?;
+        Ok(ProcView {
+            clock: s.clock,
+            mem_used: s.mem_used,
+            mem_peak: s.mem_peak,
+        })
+    }
+    fn critical(&self) -> Clock {
+        self.snapshot_all()
+            .iter()
+            .fold(Clock::default(), |acc, s| acc.join(&s.clock))
+    }
+    fn stats(&self) -> MachineStats {
+        let mut st = MachineStats::default();
+        for s in self.snapshot_all() {
+            st.total_ops += s.total_ops;
+            st.total_words += s.sent_words;
+            st.total_msgs += s.sent_msgs;
+        }
+        st
+    }
+    fn mem_peak_max(&self) -> u64 {
+        self.snapshot_all().iter().map(|s| s.mem_peak).max().unwrap_or(0)
+    }
+    fn mem_peak_total(&self) -> u64 {
+        self.snapshot_all().iter().map(|s| s.mem_peak).sum()
+    }
+    fn mem_used_total(&self) -> u64 {
+        self.snapshot_all().iter().map(|s| s.mem_used).sum()
+    }
+    fn purge(&mut self, p: ProcId) {
+        let frame = wire::Frame::Purge { p: p as u32 };
+        let _ = self.post(p, &frame);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side: the `copmul --socket-worker` process.
+// ---------------------------------------------------------------------
+
+/// Outgoing edge of one worker-side processor, indexed by global
+/// destination.
+enum NetTx {
+    /// Self, or an edge this processor never sends on.
+    None,
+    /// Destination lives in this process: a plain channel.
+    Local(Sender<NetMsg>),
+    /// Destination lives in another worker process: pre-framed
+    /// `Frame::Net` bytes to that group's peer-writer thread.
+    Remote(Sender<Vec<u8>>),
+}
+
+/// Decoded command for one worker-side processor (the threaded
+/// engine's `Cmd`, minus closures — those ran host-side).
+enum WCmd {
+    Alloc { slot: Slot, data: Vec<u32> },
+    Free { slot: Slot },
+    Replace { slot: Slot, data: Vec<u32> },
+    Read { slot: Slot },
+    Compute { ops: u64 },
+    LocalSync { ops: u64, busy_ns: u64 },
+    TakeInputs { slots: Vec<Slot>, consume: bool },
+    StoreOutput { slot: Slot, ops: u64, busy_ns: u64, data: Vec<u32> },
+    SendOwned { dst: usize, weight: u64, data: Vec<u32> },
+    SendSlot {
+        dst: usize,
+        weight: u64,
+        slot: Slot,
+        range: Option<(u64, u64)>,
+        free_after: bool,
+    },
+    Forward { src: usize, dst: usize, weight: u64 },
+    Recv { src: usize, slot: Slot },
+    BarrierCollect,
+    BarrierRelease { clock: Clock },
+    Purge,
+    Query,
+}
+
+/// Map a command frame to `(global processor id, command)`.
+fn to_wcmd(frame: wire::Frame) -> Option<(usize, WCmd)> {
+    Some(match frame {
+        wire::Frame::Alloc { p, slot, data } => (p as usize, WCmd::Alloc { slot, data }),
+        wire::Frame::Free { p, slot } => (p as usize, WCmd::Free { slot }),
+        wire::Frame::Replace { p, slot, data } => (p as usize, WCmd::Replace { slot, data }),
+        wire::Frame::Read { p, slot } => (p as usize, WCmd::Read { slot }),
+        wire::Frame::Compute { p, ops } => (p as usize, WCmd::Compute { ops }),
+        wire::Frame::LocalSync { p, ops, busy_ns } => {
+            (p as usize, WCmd::LocalSync { ops, busy_ns })
+        }
+        wire::Frame::TakeInputs { p, slots, consume } => {
+            (p as usize, WCmd::TakeInputs { slots, consume })
+        }
+        wire::Frame::StoreOutput {
+            p,
+            slot,
+            ops,
+            busy_ns,
+            data,
+        } => (
+            p as usize,
+            WCmd::StoreOutput {
+                slot,
+                ops,
+                busy_ns,
+                data,
+            },
+        ),
+        wire::Frame::SendOwned { p, dst, weight, data } => (
+            p as usize,
+            WCmd::SendOwned {
+                dst: dst as usize,
+                weight,
+                data,
+            },
+        ),
+        wire::Frame::SendSlot {
+            p,
+            dst,
+            weight,
+            slot,
+            range,
+            free_after,
+        } => (
+            p as usize,
+            WCmd::SendSlot {
+                dst: dst as usize,
+                weight,
+                slot,
+                range,
+                free_after,
+            },
+        ),
+        wire::Frame::Forward { p, src, dst, weight } => (
+            p as usize,
+            WCmd::Forward {
+                src: src as usize,
+                dst: dst as usize,
+                weight,
+            },
+        ),
+        wire::Frame::Recv { p, src, slot } => (
+            p as usize,
+            WCmd::Recv {
+                src: src as usize,
+                slot,
+            },
+        ),
+        wire::Frame::BarrierCollect { p } => (p as usize, WCmd::BarrierCollect),
+        wire::Frame::BarrierRelease { p, clock } => (p as usize, WCmd::BarrierRelease { clock }),
+        wire::Frame::Purge { p } => (p as usize, WCmd::Purge),
+        wire::Frame::Query { p } => (p as usize, WCmd::Query),
+        _ => return None,
+    })
+}
+
+/// One worker-side processor: the same per-processor arena, ledgers,
+/// and clock as the threaded engine's `Worker`, with wire replies and
+/// a mixed local/remote network fabric.
+struct WorkerProc {
+    pid: usize,
+    base: Base,
+    mem_cap: u64,
+    arena: Vec<Option<Arc<Vec<u32>>>>,
+    clock: Clock,
+    mem_used: u64,
+    mem_peak: u64,
+    total_ops: u64,
+    sent_words: u64,
+    sent_msgs: u64,
+    busy: Duration,
+    error: Option<String>,
+    net_tx: Vec<NetTx>,
+    net_rx: Vec<Option<Receiver<NetMsg>>>,
+    reply_tx: Sender<Vec<u8>>,
+}
+
+impl WorkerProc {
+    fn fail(&mut self, msg: String) {
+        if self.error.is_none() {
+            self.error = Some(msg);
+        }
+    }
+
+    fn charge_alloc(&mut self, words: u64) {
+        if self.mem_used + words > self.mem_cap {
+            self.fail(format!(
+                "processor {}: local memory exceeded (used {} + {} > cap {})",
+                self.pid, self.mem_used, words, self.mem_cap
+            ));
+        }
+        self.mem_used += words;
+        self.mem_peak = self.mem_peak.max(self.mem_used);
+    }
+
+    fn store(&mut self, slot: Slot, data: Vec<u32>) {
+        self.store_shared(slot, Arc::new(data));
+    }
+
+    fn store_shared(&mut self, slot: Slot, data: Arc<Vec<u32>>) {
+        self.charge_alloc(data.len() as u64);
+        let idx = slot as usize;
+        if idx >= self.arena.len() {
+            self.arena.resize_with(idx + 1, || None);
+        }
+        debug_assert!(self.arena[idx].is_none(), "slot {slot} already in use");
+        self.arena[idx] = Some(data);
+    }
+
+    fn take(&mut self, slot: Slot) -> Arc<Vec<u32>> {
+        let data = self
+            .arena
+            .get_mut(slot as usize)
+            .and_then(Option::take)
+            .unwrap_or_else(|| panic!("processor {}: free of unknown slot {slot}", self.pid));
+        self.mem_used -= data.len() as u64;
+        while matches!(self.arena.last(), Some(None)) {
+            self.arena.pop();
+        }
+        data
+    }
+
+    fn get(&self, slot: Slot) -> &Arc<Vec<u32>> {
+        self.arena
+            .get(slot as usize)
+            .and_then(Option::as_ref)
+            .unwrap_or_else(|| panic!("processor {}: read of unknown slot {slot}", self.pid))
+    }
+
+    fn snapshot(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            clock: self.clock,
+            mem_used: self.mem_used,
+            mem_peak: self.mem_peak,
+            total_ops: self.total_ops,
+            sent_words: self.sent_words,
+            sent_msgs: self.sent_msgs,
+            busy: self.busy,
+            error: self.error.clone(),
+        }
+    }
+
+    fn reply(&self, frame: &wire::Frame) {
+        let _ = self.reply_tx.send(wire::frame_bytes(frame));
+    }
+
+    fn send_net(&mut self, dst: usize, data: Arc<Vec<u32>>, snapshot: Clock) {
+        match &self.net_tx[dst] {
+            NetTx::None => {}
+            NetTx::Local(tx) => {
+                let _ = tx.send((data, snapshot));
+            }
+            NetTx::Remote(tx) => {
+                let frame = wire::Frame::Net {
+                    src: self.pid as u32,
+                    dst: dst as u32,
+                    clock: snapshot,
+                    payload: (*data).clone(),
+                };
+                let _ = tx.send(wire::frame_bytes(&frame));
+            }
+        }
+    }
+
+    fn recv_net(&mut self, src: usize) -> Option<NetMsg> {
+        self.net_rx[src].as_ref().and_then(|rx| rx.recv().ok())
+    }
+
+    /// Charge a message leaving this processor, then put it on the
+    /// wire — the exact charging sequence of the threaded engine.
+    fn charged_send(&mut self, dst: usize, weight: u64, data: Arc<Vec<u32>>) {
+        let words = data.len() as u64 * weight;
+        self.clock.words += words;
+        self.clock.msgs += 1;
+        self.sent_words += words;
+        self.sent_msgs += 1;
+        let snapshot = self.clock;
+        self.send_net(dst, data, snapshot);
+    }
+
+    fn run(mut self, rx: Receiver<WCmd>) {
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                WCmd::Alloc { slot, data } => self.store(slot, data),
+                WCmd::Free { slot } => {
+                    self.take(slot);
+                }
+                WCmd::Replace { slot, data } => {
+                    let old = self.take(slot);
+                    drop(old);
+                    self.store(slot, data);
+                }
+                WCmd::Read { slot } => {
+                    let payload = self.get(slot).as_slice().to_vec();
+                    let frame = wire::Frame::Data {
+                        p: self.pid as u32,
+                        payload,
+                    };
+                    self.reply(&frame);
+                }
+                WCmd::Compute { ops } => {
+                    self.clock.ops += ops;
+                    self.total_ops += ops;
+                }
+                WCmd::LocalSync { ops, busy_ns } => {
+                    self.busy += Duration::from_nanos(busy_ns);
+                    self.clock.ops += ops;
+                    self.total_ops += ops;
+                    self.reply(&wire::Frame::Ack { p: self.pid as u32 });
+                }
+                WCmd::TakeInputs { slots, consume } => {
+                    // Same ledger order as the threaded engine's
+                    // ComputeSlot: consumed inputs are freed before
+                    // the (host-side) digit work runs.
+                    let payloads: Vec<Vec<u32>> = if consume {
+                        slots.iter().map(|&s| payload_into_vec(self.take(s))).collect()
+                    } else {
+                        slots.iter().map(|&s| self.get(s).as_slice().to_vec()).collect()
+                    };
+                    let frame = wire::Frame::Inputs {
+                        p: self.pid as u32,
+                        payloads,
+                    };
+                    self.reply(&frame);
+                }
+                WCmd::StoreOutput {
+                    slot,
+                    ops,
+                    busy_ns,
+                    data,
+                } => {
+                    self.busy += Duration::from_nanos(busy_ns);
+                    self.clock.ops += ops;
+                    self.total_ops += ops;
+                    self.store(slot, data);
+                }
+                WCmd::SendOwned { dst, weight, data } => {
+                    self.charged_send(dst, weight, Arc::new(data));
+                }
+                WCmd::SendSlot {
+                    dst,
+                    weight,
+                    slot,
+                    range,
+                    free_after,
+                } => {
+                    let data: Arc<Vec<u32>> = if free_after {
+                        let d = self.take(slot);
+                        match range {
+                            Some((a, b)) => Arc::new(d[a as usize..b as usize].to_vec()),
+                            None => d,
+                        }
+                    } else {
+                        let d = self.get(slot);
+                        match range {
+                            Some((a, b)) => Arc::new(d[a as usize..b as usize].to_vec()),
+                            None => Arc::clone(d),
+                        }
+                    };
+                    self.charged_send(dst, weight, data);
+                }
+                WCmd::Forward { src, dst, weight } => match self.recv_net(src) {
+                    Some((data, snapshot)) => {
+                        // Join the inbound hop, then charge the
+                        // outbound link — same order as both other
+                        // engines.
+                        self.clock = self.clock.join(&snapshot);
+                        self.charged_send(dst, weight, data);
+                    }
+                    None => self.fail(format!(
+                        "processor {}: peer {src} hung up mid-relay",
+                        self.pid
+                    )),
+                },
+                WCmd::Recv { src, slot } => match self.recv_net(src) {
+                    Some((data, snapshot)) => {
+                        self.store_shared(slot, data);
+                        self.clock = self.clock.join(&snapshot);
+                    }
+                    None => self.fail(format!(
+                        "processor {}: peer {src} hung up mid-message",
+                        self.pid
+                    )),
+                },
+                WCmd::BarrierCollect => {
+                    let frame = wire::Frame::BarrierClock {
+                        p: self.pid as u32,
+                        clock: self.clock,
+                    };
+                    self.reply(&frame);
+                    // The queue now blocks until the host's
+                    // BarrierRelease arrives — that is the rendezvous.
+                }
+                WCmd::BarrierRelease { clock } => self.clock = clock,
+                WCmd::Purge => {
+                    self.arena.clear();
+                    self.mem_used = 0;
+                }
+                WCmd::Query => {
+                    let frame = wire::Frame::Snapshot {
+                        p: self.pid as u32,
+                        snap: self.snapshot(),
+                    };
+                    self.reply(&frame);
+                }
+            }
+        }
+    }
+}
+
+/// Entry point for `copmul --socket-worker`: one group's OS process.
+/// Wiring comes from `COPMUL_SOCKET_{HOST,GROUP,DIR}`. Runs on the
+/// main thread until Shutdown (or coordinator death), so process exit
+/// reaps every helper thread.
+pub fn socket_worker_main() -> Result<()> {
+    let host_addr = std::env::var("COPMUL_SOCKET_HOST")
+        .map_err(|_| anyhow!("COPMUL_SOCKET_HOST not set"))?;
+    let group: usize = std::env::var("COPMUL_SOCKET_GROUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| anyhow!("COPMUL_SOCKET_GROUP missing or invalid"))?;
+    let dir = PathBuf::from(
+        std::env::var("COPMUL_SOCKET_DIR").map_err(|_| anyhow!("COPMUL_SOCKET_DIR not set"))?,
+    );
+    let mut host = Stream::connect(&host_addr)?;
+    host.set_read_timeout(Some(Duration::from_secs(10)))?;
+    wire::write_frame(&mut host, &wire::Frame::Hello { group: group as u32 })?;
+    let (procs, groups, mem_cap, base, bounds) = match wire::read_frame(&mut host)? {
+        wire::Frame::Setup {
+            procs,
+            groups,
+            mem_cap,
+            base_log2,
+            bounds,
+        } => (
+            procs as usize,
+            groups as usize,
+            mem_cap,
+            Base::new(base_log2 as u32),
+            bounds.iter().map(|&b| b as usize).collect::<Vec<_>>(),
+        ),
+        other => bail!("expected Setup, got {other:?}"),
+    };
+    ensure!(
+        group < groups && bounds.len() == groups + 1,
+        "inconsistent Setup for group {group}"
+    );
+    let transport = if host_addr.starts_with("unix:") {
+        SocketTransport::Unix
+    } else {
+        SocketTransport::Tcp
+    };
+    let (listener, my_addr) = Listener::bind(transport, &dir, &format!("peer{group}"))?;
+    wire::write_frame(&mut host, &wire::Frame::Listening { addr: my_addr })?;
+    let addrs = match wire::read_frame(&mut host)? {
+        wire::Frame::Go { addrs } => addrs,
+        other => bail!("expected Go, got {other:?}"),
+    };
+    ensure!(addrs.len() == groups, "expected {groups} peer addresses");
+    // Peer mesh: connect to every lower group, accept from every
+    // higher one — a fixed direction per pair, so the handshake cannot
+    // deadlock.
+    let mut peers: Vec<Option<Stream>> = (0..groups).map(|_| None).collect();
+    for (h, addr) in addrs.iter().enumerate().take(group) {
+        let mut s = Stream::connect(addr)?;
+        wire::write_frame(&mut s, &wire::Frame::PeerHello { group: group as u32 })?;
+        peers[h] = Some(s);
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    for _ in group + 1..groups {
+        let s = listener.accept_deadline(deadline)?;
+        s.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let mut s = s;
+        match wire::read_frame(&mut s)? {
+            wire::Frame::PeerHello { group: h } => {
+                let h = h as usize;
+                ensure!(
+                    h > group && h < groups && peers[h].is_none(),
+                    "bad peer hello (group {h})"
+                );
+                s.set_read_timeout(None)?;
+                peers[h] = Some(s);
+            }
+            other => bail!("expected PeerHello, got {other:?}"),
+        }
+    }
+    wire::write_frame(&mut host, &wire::Frame::Ready)?;
+    host.set_read_timeout(None)?;
+    run_worker(host, peers, group, procs, mem_cap, base, &bounds)
+}
+
+/// Steady-state service loop of one worker process.
+fn run_worker(
+    host: Stream,
+    peers: Vec<Option<Stream>>,
+    group: usize,
+    procs: usize,
+    mem_cap: u64,
+    base: Base,
+    bounds: &[usize],
+) -> Result<()> {
+    let lo = bounds[group];
+    let hi = bounds[group + 1];
+    let locals = hi - lo;
+
+    // Reply path to the host: processors enqueue pre-framed bytes, one
+    // writer thread owns the stream's write half.
+    let (reply_tx, reply_rx) = channel::<Vec<u8>>();
+    let mut host_w = host.try_clone()?;
+    let host_writer = std::thread::spawn(move || {
+        while let Ok(buf) = reply_rx.recv() {
+            if host_w.write_all(&buf).and_then(|_| host_w.flush()).is_err() {
+                return;
+            }
+        }
+    });
+
+    // One channel per (global source -> local destination) ordered
+    // pair — the threaded engine's mesh, restricted to the rows this
+    // process owns.
+    let mut net_rx: NetRxMesh = (0..locals).map(|_| (0..procs).map(|_| None).collect()).collect();
+    let mut to_local: NetTxMesh =
+        (0..procs).map(|_| (0..locals).map(|_| None).collect()).collect();
+    for di in 0..locals {
+        let d = lo + di;
+        for s in 0..procs {
+            if s == d {
+                continue;
+            }
+            let (tx, rx) = channel();
+            net_rx[di][s] = Some(rx);
+            to_local[s][di] = Some(tx);
+        }
+    }
+
+    // Peer links: a writer thread per peer (outbound Net frames) and a
+    // reader thread per peer that demuxes inbound Net frames onto the
+    // local mesh rows owned by that peer's processors.
+    let mut peer_tx: Vec<Option<Sender<Vec<u8>>>> = (0..peers.len()).map(|_| None).collect();
+    let mut peer_threads = Vec::new();
+    for (h, slot) in peers.into_iter().enumerate() {
+        let Some(s) = slot else { continue };
+        let (tx, rx) = channel::<Vec<u8>>();
+        peer_tx[h] = Some(tx);
+        let mut w = s.try_clone()?;
+        peer_threads.push(std::thread::spawn(move || {
+            while let Ok(buf) = rx.recv() {
+                if w.write_all(&buf).and_then(|_| w.flush()).is_err() {
+                    return;
+                }
+            }
+        }));
+        let h_lo = bounds[h];
+        let h_hi = bounds[h + 1];
+        let demux: NetTxMesh = (h_lo..h_hi).map(|s| std::mem::take(&mut to_local[s])).collect();
+        let mut rs = s;
+        peer_threads.push(std::thread::spawn(move || {
+            loop {
+                match wire::read_frame(&mut rs) {
+                    Ok(wire::Frame::Net {
+                        src,
+                        dst,
+                        clock,
+                        payload,
+                    }) => {
+                        let si = (src as usize).wrapping_sub(h_lo);
+                        let di = (dst as usize).wrapping_sub(lo);
+                        let tx = demux.get(si).and_then(|row| row.get(di)).and_then(Option::as_ref);
+                        match tx {
+                            Some(tx) => {
+                                let _ = tx.send((Arc::new(payload), clock));
+                            }
+                            None => break,
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            // Dropping the demux senders fails any local processor
+            // still blocked on a message from this (now dead) peer.
+        }));
+    }
+
+    // Spawn the processor command loops.
+    let mut cmd_txs = Vec::with_capacity(locals);
+    let mut proc_handles = Vec::with_capacity(locals);
+    for (di, rx_row) in net_rx.iter_mut().enumerate() {
+        let pid = lo + di;
+        let net_tx_row: Vec<NetTx> = (0..procs)
+            .map(|dst| {
+                if dst == pid {
+                    return NetTx::None;
+                }
+                let dg = group_of_bounds(bounds, dst);
+                if dg == group {
+                    match to_local[pid][dst - lo].take() {
+                        Some(tx) => NetTx::Local(tx),
+                        None => NetTx::None,
+                    }
+                } else {
+                    match &peer_tx[dg] {
+                        Some(tx) => NetTx::Remote(tx.clone()),
+                        None => NetTx::None,
+                    }
+                }
+            })
+            .collect();
+        let proc = WorkerProc {
+            pid,
+            base,
+            mem_cap,
+            arena: Vec::new(),
+            clock: Clock::default(),
+            mem_used: 0,
+            mem_peak: 0,
+            total_ops: 0,
+            sent_words: 0,
+            sent_msgs: 0,
+            busy: Duration::ZERO,
+            error: None,
+            net_tx: net_tx_row,
+            net_rx: std::mem::take(rx_row),
+            reply_tx: reply_tx.clone(),
+        };
+        let (ctx, crx) = channel::<WCmd>();
+        cmd_txs.push(ctx);
+        proc_handles.push(std::thread::spawn(move || proc.run(crx)));
+    }
+
+    // Command pump: the process's main loop. EOF or Shutdown ends it.
+    let mut host_r = host;
+    loop {
+        let frame = match wire::read_frame(&mut host_r) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        if matches!(frame, wire::Frame::Shutdown) {
+            break;
+        }
+        let Some((p, cmd)) = to_wcmd(frame) else { break };
+        if p < lo || p >= hi {
+            break;
+        }
+        if cmd_txs[p - lo].send(cmd).is_err() {
+            break;
+        }
+    }
+    drop(cmd_txs);
+    for h in proc_handles {
+        let _ = h.join();
+    }
+    drop(reply_tx);
+    let _ = host_writer.join();
+    // Peer threads are reaped by process exit.
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::wire::{frame_bytes, read_frame, write_frame, Frame, MAGIC, MAX_FRAME, VERSION};
+    use super::*;
+
+    /// One instance of every frame variant, with non-trivial fields.
+    fn corpus() -> Vec<Frame> {
+        vec![
+            Frame::Hello { group: 1 },
+            Frame::Setup {
+                procs: 8,
+                groups: 2,
+                mem_cap: 1 << 40,
+                base_log2: 16,
+                bounds: vec![0, 4, 8],
+            },
+            Frame::Listening {
+                addr: "unix:/tmp/copmul-sock-1/peer0.sock".into(),
+            },
+            Frame::Go {
+                addrs: vec!["unix:/tmp/a.sock".into(), "tcp:127.0.0.1:4100".into()],
+            },
+            Frame::Ready,
+            Frame::Shutdown,
+            Frame::Alloc {
+                p: 3,
+                slot: 7,
+                data: vec![1, 2, 3],
+            },
+            Frame::Free { p: 3, slot: 7 },
+            Frame::Replace {
+                p: 0,
+                slot: 2,
+                data: vec![9],
+            },
+            Frame::Read { p: 1, slot: 4 },
+            Frame::Compute { p: 2, ops: 99 },
+            Frame::LocalSync {
+                p: 2,
+                ops: 5,
+                busy_ns: 1234,
+            },
+            Frame::TakeInputs {
+                p: 6,
+                slots: vec![1, 2, 3],
+                consume: true,
+            },
+            Frame::StoreOutput {
+                p: 6,
+                slot: 4,
+                ops: 12,
+                busy_ns: 88,
+                data: vec![5, 6],
+            },
+            Frame::SendOwned {
+                p: 0,
+                dst: 5,
+                weight: 2,
+                data: vec![7, 8],
+            },
+            Frame::SendSlot {
+                p: 0,
+                dst: 5,
+                weight: 1,
+                slot: 9,
+                range: Some((2, 6)),
+                free_after: true,
+            },
+            Frame::SendSlot {
+                p: 1,
+                dst: 2,
+                weight: 1,
+                slot: 3,
+                range: None,
+                free_after: false,
+            },
+            Frame::Forward {
+                p: 4,
+                src: 0,
+                dst: 5,
+                weight: 3,
+            },
+            Frame::Recv { p: 5, src: 4, slot: 11 },
+            Frame::BarrierCollect { p: 7 },
+            Frame::BarrierRelease {
+                p: 7,
+                clock: Clock {
+                    ops: 1,
+                    words: 2,
+                    msgs: 3,
+                },
+            },
+            Frame::Purge { p: 7 },
+            Frame::Query { p: 7 },
+            Frame::Data {
+                p: 1,
+                payload: vec![4, 5, 6],
+            },
+            Frame::Ack { p: 1 },
+            Frame::Inputs {
+                p: 2,
+                payloads: vec![vec![1], vec![], vec![2, 3]],
+            },
+            Frame::Snapshot {
+                p: 3,
+                snap: WorkerSnapshot {
+                    clock: Clock {
+                        ops: 10,
+                        words: 20,
+                        msgs: 30,
+                    },
+                    mem_used: 40,
+                    mem_peak: 50,
+                    total_ops: 60,
+                    sent_words: 70,
+                    sent_msgs: 80,
+                    busy: Duration::from_nanos(90),
+                    error: Some("processor 3: local memory exceeded".into()),
+                },
+            },
+            Frame::BarrierClock {
+                p: 4,
+                clock: Clock {
+                    ops: 9,
+                    words: 8,
+                    msgs: 7,
+                },
+            },
+            Frame::PeerHello { group: 0 },
+            Frame::Net {
+                src: 2,
+                dst: 6,
+                clock: Clock {
+                    ops: 1,
+                    words: 1,
+                    msgs: 1,
+                },
+                payload: vec![0xFFFF, 0],
+            },
+        ]
+    }
+
+    #[test]
+    fn every_variant_roundtrips() {
+        for f in corpus() {
+            let bytes = f.encode();
+            assert_eq!(Frame::decode(&bytes).unwrap(), f, "variant {f:?}");
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_offset_is_an_error() {
+        for f in corpus() {
+            let bytes = f.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Frame::decode(&bytes[..cut]).is_err(),
+                    "prefix of {} bytes of {f:?} decoded",
+                    cut
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_version_opcode_and_trailing_garbage_are_rejected() {
+        let good = Frame::Ready.encode();
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(Frame::decode(&bad).is_err(), "magic");
+        let mut bad = good.clone();
+        bad[4] = VERSION + 1;
+        assert!(Frame::decode(&bad).is_err(), "version");
+        let mut bad = good.clone();
+        bad[5] = 0x7F;
+        assert!(Frame::decode(&bad).is_err(), "opcode");
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(Frame::decode(&bad).is_err(), "trailing garbage");
+        assert_eq!(Frame::decode(&good).unwrap(), Frame::Ready);
+    }
+
+    #[test]
+    fn hostile_length_fields_are_rejected_before_allocating() {
+        // An Alloc frame claiming u32::MAX digits with an empty body:
+        // the shared cursor's remaining-bytes cap must reject it
+        // without sizing a buffer from the claimed count.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.push(VERSION);
+        bytes.push(0x10); // Alloc
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // p
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // slot
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // digit count
+        assert!(Frame::decode(&bytes).is_err());
+        // Same for a TakeInputs slot count and an Inputs payload count.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.push(VERSION);
+        bytes.push(0x16); // TakeInputs
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::decode(&bytes).is_err());
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.push(VERSION);
+        bytes.push(0x22); // Inputs
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn bad_bool_bytes_are_rejected() {
+        let f = Frame::SendSlot {
+            p: 0,
+            dst: 1,
+            weight: 1,
+            slot: 2,
+            range: None,
+            free_after: false,
+        };
+        let mut bytes = f.encode();
+        let n = bytes.len();
+        bytes[n - 1] = 7; // free_after must be 0 or 1
+        assert!(Frame::decode(&bytes).is_err());
+        bytes[n - 1] = 1;
+        assert!(matches!(
+            Frame::decode(&bytes).unwrap(),
+            Frame::SendSlot { free_after: true, .. }
+        ));
+    }
+
+    #[test]
+    fn stream_framing_roundtrips_and_caps_length() {
+        let mut buf = Vec::new();
+        for f in corpus() {
+            write_frame(&mut buf, &f).unwrap();
+        }
+        let mut r = std::io::Cursor::new(buf);
+        for f in corpus() {
+            assert_eq!(read_frame(&mut r).unwrap(), f);
+        }
+        // A hostile length prefix past MAX_FRAME fails before the body
+        // buffer is allocated.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&((MAX_FRAME + 1) as u32).to_le_bytes());
+        evil.extend_from_slice(&[0; 16]);
+        let mut r = std::io::Cursor::new(evil);
+        assert!(read_frame(&mut r).is_err());
+        // frame_bytes is exactly what read_frame consumes.
+        let f = Frame::Query { p: 3 };
+        let mut r = std::io::Cursor::new(frame_bytes(&f));
+        assert_eq!(read_frame(&mut r).unwrap(), f);
+    }
+
+    #[test]
+    fn group_bounds_partition_every_processor() {
+        for procs in 1..=17 {
+            for groups in 1..=procs {
+                let b = group_bounds(procs, groups);
+                assert_eq!(b.len(), groups + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(b[groups], procs);
+                for g in 0..groups {
+                    assert!(b[g] < b[g + 1], "group {g} empty for {procs}/{groups}");
+                }
+                for p in 0..procs {
+                    let g = group_of_bounds(&b, p);
+                    assert!(b[g] <= p && p < b[g + 1]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_bin_resolution_prefers_explicit_config() {
+        let cfg = SocketConfig {
+            worker_bin: Some(PathBuf::from("/nonexistent/copmul")),
+            ..SocketConfig::default()
+        };
+        assert_eq!(
+            resolve_worker_bin(&cfg),
+            Some(PathBuf::from("/nonexistent/copmul"))
+        );
+    }
+}

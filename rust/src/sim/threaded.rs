@@ -154,7 +154,7 @@ enum Cmd {
 }
 
 /// Point-in-time view of one worker, returned by `Query`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct WorkerSnapshot {
     pub clock: Clock,
     pub mem_used: u64,

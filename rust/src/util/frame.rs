@@ -1,0 +1,179 @@
+//! Wire-frame plumbing shared by every socket-facing codec: the
+//! bounds-checked little-endian [`FrameCursor`] that both the serving
+//! daemon's `Request::{encode,decode}` frame (`coordinator::daemon`)
+//! and the socket engine's command/reply/net frames (`sim::socket`)
+//! parse with.
+//!
+//! Every read is bounds-checked against the frame buffer *before* any
+//! memory is reserved, so a hostile length field on the wire can make a
+//! decode fail but never make it allocate: [`FrameCursor::digits`] caps
+//! the claimed element count against the remaining bytes first — a
+//! `u32::MAX` length costs the attacker a frame rejection, not 16 GiB
+//! of reservation on the server (regression-tested below and in
+//! `tests/wire_fuzz.rs`).
+
+use crate::error::{anyhow, ensure, Result};
+
+/// Bounds-checked little-endian reader over one frame buffer.
+pub struct FrameCursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> FrameCursor<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        FrameCursor { buf, at: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    /// Consume the next `n` bytes.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .ok_or_else(|| anyhow!("frame length overflow"))?;
+        let s = self.buf.get(self.at..end).ok_or_else(|| {
+            anyhow!("truncated frame: need {end} bytes, have {}", self.buf.len())
+        })?;
+        self.at = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read `len` little-endian u32 digits. The claimed count is capped
+    /// against the remaining buffer BEFORE the output vector is sized:
+    /// `len` comes straight off the wire, and a hostile value must cost
+    /// a rejection, not an attacker-controlled allocation.
+    pub fn digits(&mut self, len: usize) -> Result<Vec<u32>> {
+        ensure!(
+            len <= self.remaining() / 4,
+            "digit count {len} exceeds the {} bytes left in the frame",
+            self.remaining()
+        );
+        let bytes = self.take(len * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Read a `u32` length-prefixed UTF-8 string (same cap discipline
+    /// as [`FrameCursor::digits`]).
+    pub fn str_lp(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        ensure!(
+            len <= self.remaining(),
+            "string length {len} exceeds the {} bytes left in the frame",
+            self.remaining()
+        );
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| anyhow!("bad frame string: {e}"))
+    }
+
+    /// Assert the whole buffer was consumed (rejects trailing garbage).
+    pub fn expect_end(&self) -> Result<()> {
+        ensure!(
+            self.at == self.buf.len(),
+            "trailing garbage: frame ends at {}, buffer has {}",
+            self.at,
+            self.buf.len()
+        );
+        Ok(())
+    }
+}
+
+/// Append a `u32` length-prefixed UTF-8 string (the writer half of
+/// [`FrameCursor::str_lp`]).
+pub fn push_str_lp(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append `digits.len()` little-endian u32 digits with a `u32` count
+/// prefix (the writer half of a counted [`FrameCursor::digits`] read).
+pub fn push_digits_lp(out: &mut Vec<u8>, digits: &[u32]) {
+    out.extend_from_slice(&(digits.len() as u32).to_le_bytes());
+    for d in digits {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_are_bounds_checked_and_ordered() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0xAABBCCDDu32.to_le_bytes());
+        buf.push(7);
+        buf.extend_from_slice(&42u64.to_le_bytes());
+        let mut f = FrameCursor::new(&buf);
+        assert_eq!(f.u32().unwrap(), 0xAABBCCDD);
+        assert_eq!(f.u8().unwrap(), 7);
+        assert_eq!(f.u64().unwrap(), 42);
+        f.expect_end().unwrap();
+        assert!(f.u8().is_err(), "reading past the end must fail");
+    }
+
+    #[test]
+    fn hostile_digit_count_is_rejected_before_allocating() {
+        // Regression test for the length sanity cap: a frame claiming
+        // u32::MAX digits over a 12-byte body must be rejected by the
+        // remaining-bytes cap up front — this test would OOM (or page
+        // in gigabytes) if `digits` sized its output from the claimed
+        // count instead.
+        let buf = [0u8; 12];
+        let mut f = FrameCursor::new(&buf);
+        let err = f.digits(u32::MAX as usize).unwrap_err();
+        assert!(
+            err.to_string().contains("exceeds"),
+            "want the cap error, got: {err}"
+        );
+        // usize::MAX would overflow a naive len*4; the cap rejects it
+        // before any multiply.
+        assert!(f.digits(usize::MAX).is_err());
+        // The cursor is still usable at its old position.
+        assert_eq!(f.digits(3).unwrap(), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn string_roundtrip_and_hostile_length() {
+        let mut buf = Vec::new();
+        push_str_lp(&mut buf, "unix:/tmp/x.sock");
+        let mut f = FrameCursor::new(&buf);
+        assert_eq!(f.str_lp().unwrap(), "unix:/tmp/x.sock");
+        f.expect_end().unwrap();
+
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut f = FrameCursor::new(&bad);
+        assert!(f.str_lp().is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_detected() {
+        let mut buf = Vec::new();
+        push_digits_lp(&mut buf, &[1, 2]);
+        buf.push(0xFF);
+        let mut f = FrameCursor::new(&buf);
+        let n = f.u32().unwrap() as usize;
+        assert_eq!(f.digits(n).unwrap(), vec![1, 2]);
+        assert!(f.expect_end().is_err());
+    }
+}

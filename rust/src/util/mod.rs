@@ -6,6 +6,7 @@
 //! `proptest`, `criterion`) are replaced by the minimal implementations in
 //! this module.
 
+pub mod frame;
 pub mod json;
 pub mod prop;
 pub mod rng;

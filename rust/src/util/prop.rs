@@ -226,6 +226,39 @@ mod tests {
     }
 
     #[test]
+    fn shrinker_respawn_count_is_linear_in_steps() {
+        // Models the socket-engine differential leg, where every
+        // property evaluation boots a worker-process fleet (here: bumps
+        // a counter). The greedy shrinker evaluates at most one
+        // candidate sweep per step plus one final non-advancing sweep,
+        // so a seeded failure that minimizes to the smallest (n, P) in
+        // `steps` steps respawns O(steps) fleets — not the exponential
+        // blowup a branching search over the candidate tree would cost.
+        let respawns = std::cell::Cell::new(0usize);
+        let mut f = |_rng: &mut Rng, c: &(usize, usize)| -> CaseResult {
+            respawns.set(respawns.get() + 1);
+            if c.0 >= 10 && c.1 >= 2 {
+                Err(format!("socket leg diverged at {c:?}"))
+            } else {
+                Ok(())
+            }
+        };
+        let (small, _, steps) =
+            shrink_failure(0x50C, (96usize, 8usize), "seed failure".into(), shrink_np, &mut f);
+        assert_eq!(small, (10, 2), "must minimize to the smallest failing (n, P)");
+        // shrink_np proposes at most 3 candidates per shape; each of the
+        // `steps` advancing rounds stops at its first failing candidate,
+        // and the one terminal round runs the full sweep.
+        let bound = 3 * (steps + 1);
+        assert!(
+            respawns.get() <= bound,
+            "{} fleet respawns over {steps} shrink steps (bound {bound}): \
+             the shrinker is re-running cases superlinearly",
+            respawns.get()
+        );
+    }
+
+    #[test]
     fn shrinker_terminates_on_non_shrinking_hooks() {
         // A pathological hook that proposes the same case forever must
         // hit the step ceiling, not loop.

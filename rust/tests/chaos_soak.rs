@@ -1,16 +1,22 @@
 //! Chaos/soak suite: a seeded corpus of jobs driven through
-//! [`FaultyMachine`]-wrapped schedulers — cost-model AND threaded
-//! engines — under escalating fault rates.
+//! [`FaultyMachine`]-wrapped schedulers — cost-model, threaded, AND
+//! socket engines — under escalating fault rates, plus a kill-chaos
+//! leg that SIGKILLs a real socket worker process mid-run.
 //!
 //! Invariants (ISSUE 3 acceptance criteria):
 //!
 //! 1. **Liveness** — every admitted job eventually completes within its
-//!    retry budget, on both engines, at every tested rate.
+//!    retry budget, on every engine, at every tested rate.
 //! 2. **Correctness** — every completed product is verified against the
 //!    sequential bignum reference.
 //! 3. **Zero-fault cost identity** — a job whose shard saw zero
 //!    injected faults during its successful attempt reports a cost
 //!    triple bit-identical to a dedicated fault-free machine.
+//! 4. **Kill-chaos (sockets)** — a worker process killed at a seeded
+//!    command index surfaces as per-call `Err`s (never a hang: every
+//!    reply wait is bounded), the scheduler quarantines the dead
+//!    processors and completes every job on the survivors, and
+//!    teardown reports the loss instead of masking it.
 //!
 //! The corpus (sizes, processor requests, scheme mix) is seeded, so a
 //! failure names a reproducible fleet; the exact interleaving of jobs
@@ -28,12 +34,30 @@ use copmul::bignum::core::normalized_len;
 use copmul::bignum::{mul, Base, Ops};
 use copmul::config::EngineKind;
 use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
-use copmul::sim::{FaultConfig, Machine, Seq};
+use copmul::sim::{
+    FaultConfig, Machine, MachineApi, Seq, SocketConfig, SocketMachine, TopologyKind,
+};
 use copmul::util::prop::cases;
 use copmul::util::Rng;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 fn base() -> Base {
     Base::new(16)
+}
+
+/// Socket wiring for this test binary: the compiled-in `copmul` worker
+/// path (Cargo builds the bin alongside every integration test) and a
+/// short reply timeout so "Err, not hang" is observable within the
+/// test budget; two worker groups give the kill legs a clean live/dead
+/// split.
+fn test_socket_cfg() -> SocketConfig {
+    SocketConfig {
+        groups: 2,
+        reply_timeout: Duration::from_secs(5),
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_copmul"))),
+        ..Default::default()
+    }
 }
 
 fn reference_product(a: &[u32], b: &[u32]) -> Vec<u32> {
@@ -68,9 +92,10 @@ fn soak(engine: EngineKind, rate: f64, fault_seed: u64, jobs: usize) -> SoakRepo
         // invariant into a capacity race. The quarantine policy has its
         // own deterministic tests in coordinator::scheduler.
         quarantine_after: 0,
+        socket: test_socket_cfg(),
         ..Default::default()
     };
-    let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+    let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
     let mut rng = Rng::new(0x50AC ^ fault_seed);
     let mut pending = Vec::new();
     let mut want = Vec::new();
@@ -178,6 +203,160 @@ fn chaos_soak_threaded_engine() {
     escalating(EngineKind::Threads);
 }
 
+/// The full escalating soak over real worker processes: the injected
+/// (FaultyMachine-level) faults compose with the socket transport, and
+/// the zero-fault cost identity holds against the cost-model reference
+/// — the rate-0 control leg is the "zero-fault socket soak cost
+/// identity" acceptance check.
+#[test]
+fn chaos_soak_socket_engine() {
+    escalating(EngineKind::Sockets);
+}
+
+/// A worker process killed at a seeded command index turns every call
+/// touching its processors into a prompt `Err` — never a hang — while
+/// the surviving group keeps answering, and teardown reports the loss.
+#[test]
+fn kill_chaos_armed_kill_errors_instead_of_hanging() {
+    let mut m = SocketMachine::with_config(
+        4,
+        u64::MAX / 2,
+        base(),
+        TopologyKind::FullyConnected.build(4),
+        test_socket_cfg(),
+    )
+    .expect("socket fleet start");
+    let mut slots = Vec::new();
+    for p in 0..4 {
+        slots.push(m.alloc(p, vec![1, 2, 3]).unwrap());
+    }
+    // Two groups over 4 processors: group 1 owns processors 2..4. Arm
+    // its death a few commands ahead, then keep issuing operations
+    // against the doomed processors until the kill lands.
+    m.arm_kill(1, 3);
+    let t0 = Instant::now();
+    let mut died_at = None;
+    for i in 0..64 {
+        if m.read(3, slots[3]).is_err() {
+            died_at = Some(i);
+            break;
+        }
+    }
+    let died_at = died_at.expect("no call errored after the armed kill");
+    // Bounded failure: at most one reply wait can ride the timeout; a
+    // hang would blow far past this ceiling.
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "kill took {:?} to surface (op {died_at}) — reply waits are not bounded",
+        t0.elapsed()
+    );
+    // The dead group now fails fast (enqueue is refused, no timeout),
+    // and the live group still answers.
+    let t1 = Instant::now();
+    assert!(m.read(2, slots[2]).is_err(), "dead group accepted a read");
+    assert!(
+        t1.elapsed() < Duration::from_secs(2),
+        "dead-group failure rode a timeout instead of failing fast"
+    );
+    assert_eq!(m.read(0, slots[0]).unwrap(), vec![1, 2, 3]);
+    assert_eq!(m.read(1, slots[1]).unwrap(), vec![1, 2, 3]);
+    // Teardown must report the real process death, not mask it.
+    let err = m.finish().expect_err("finish must fail after a kill");
+    assert!(
+        err.to_string().contains("unreachable"),
+        "finish error must name the lost processors: {err}"
+    );
+}
+
+/// Scheduler recovery from a real SIGKILL: with group 1's worker dead,
+/// the job holding the live shard finishes untouched, the job that
+/// landed on the dead shard fails its attempt with a worker-death error
+/// (not a hang), its processors are quarantined, and the retry — plus
+/// every later job — completes on the survivors with verified products.
+#[test]
+fn kill_chaos_scheduler_quarantines_dead_worker_and_recovers() {
+    let cfg = SchedulerConfig {
+        procs: 8,
+        runners: 2,
+        engine: EngineKind::Sockets,
+        socket: test_socket_cfg(),
+        max_attempts: 5,
+        quarantine_after: 1,
+        ..Default::default()
+    };
+    let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
+    let mut rng = Rng::new(0x417);
+
+    // Healthy control: the fleet works end to end before the kill.
+    let a = rng.digits(128, 16);
+    let b = rng.digits(128, 16);
+    let want = reference_product(&a, &b);
+    let mut spec = JobSpec::new(0, a, b);
+    spec.procs = 4;
+    spec.algo = Some(Algorithm::Copsim);
+    assert_eq!(sched.submit_blocking(spec).unwrap().product, want);
+
+    // SIGKILL group 1's worker (processors 4..8). The pids accessor
+    // exposes the real OS processes backing the fleet.
+    assert!(sched.socket_worker_pids().len() == 2);
+    sched.kill_socket_worker(1).unwrap();
+
+    // A long job first: it acquires the lowest free processors {0..3}
+    // (acquisition is lowest-ids-first) and holds them, so the second
+    // job's only free shard is the dead {4..7} — the kill is hit
+    // deterministically, not by racing.
+    let a = rng.digits(2048, 16);
+    let b = rng.digits(2048, 16);
+    let want_long = reference_product(&a, &b);
+    let mut spec = JobSpec::new(1, a, b);
+    spec.procs = 4;
+    spec.algo = Some(Algorithm::Copsim);
+    let long_rx = sched.submit(spec).unwrap();
+
+    let a = rng.digits(128, 16);
+    let b = rng.digits(128, 16);
+    let want_hit = reference_product(&a, &b);
+    let mut spec = JobSpec::new(2, a, b);
+    spec.procs = 4;
+    spec.algo = Some(Algorithm::Copsim);
+    let hit_rx = sched.submit(spec).unwrap();
+
+    let long_res = long_rx.recv().unwrap().expect("live-shard job must survive the kill");
+    assert_eq!(long_res.product, want_long);
+    let hit_res = hit_rx.recv().unwrap().expect("dead-shard job must recover by retry");
+    assert_eq!(hit_res.product, want_hit);
+
+    // Recovery happened through the crash path: a failed attempt and a
+    // quarantine of (only) group 1's processors.
+    assert!(
+        hit_res.attempts > 1 || long_res.attempts > 1,
+        "no job ever touched the dead shard — the kill was not exercised"
+    );
+    let q = sched.quarantined_proc_ids();
+    assert!(!q.is_empty(), "dead processors were never quarantined");
+    assert!(
+        q.iter().all(|&p| p >= 4),
+        "live processors quarantined alongside the dead group: {q:?}"
+    );
+
+    // Post-recovery soak: the degraded fleet keeps serving correctly.
+    for id in 3..8u64 {
+        let a = rng.digits(64, 16);
+        let b = rng.digits(64, 16);
+        let want = reference_product(&a, &b);
+        let mut spec = JobSpec::new(id, a, b);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        assert_eq!(sched.submit_blocking(spec).unwrap().product, want);
+    }
+    assert_eq!(sched.stats.failed.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // Teardown reports the dead worker instead of masking it.
+    assert!(
+        sched.shutdown().is_err(),
+        "shutdown must surface the killed worker at teardown"
+    );
+}
+
 /// Determinism of the seeded plan itself: two identical single-runner
 /// soaks inject the identical fault sequence and produce identical
 /// per-job costs (single runner = one deterministic schedule).
@@ -193,7 +372,7 @@ fn chaos_soak_single_runner_is_reproducible() {
             quarantine_after: 0,
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0xD0);
         let mut out = Vec::new();
         for id in 0..10u64 {

@@ -1,11 +1,20 @@
 //! Cross-engine differential test harness.
 //!
 //! A seeded corpus of random `(n, P, base, algorithm)` cases runs every
-//! multiplication three ways — the sequential `bignum::mul` reference,
-//! the cost-model [`Machine`], and the real-threads
-//! [`ThreadedMachine`] — asserting bit-identical products and identical
-//! `(compute, bandwidth, latency)` cost triples; failing cases are
-//! minimized by `util::prop::check_shrink` (smaller n, then smaller P).
+//! multiplication four ways — the sequential `bignum::mul` reference,
+//! the cost-model [`Machine`], the real-threads [`ThreadedMachine`],
+//! and the real-network [`SocketMachine`] (worker OS processes over
+//! Unix-domain sockets) — asserting bit-identical products and
+//! identical `(compute, bandwidth, latency)` cost triples; failing
+//! cases are minimized by `util::prop::check_shrink` (smaller n, then
+//! smaller P).
+//!
+//! `COPMUL_ENGINE_MATRIX` gates the engine set: unset, the suite runs
+//! sim + threads and adds the socket leg whenever the `copmul` worker
+//! binary exists (Cargo always builds it for integration tests);
+//! naming `sockets` in the comma-separated list makes its absence a
+//! hard failure (so CI cannot silently skip the network leg), and
+//! omitting it skips the socket leg entirely.
 //! An adversarial suite pins the same invariants on extreme operand
 //! shapes (n = 1, all-zero, all-max, unequal lengths, smallest legal
 //! P). Two scheduler suites drive concurrent jobs over shards of one
@@ -31,12 +40,70 @@ use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
 use copmul::prop_assert;
 use copmul::prop_assert_eq;
 use copmul::sim::{
-    Clock, DistInt, FaultConfig, FaultKind, Machine, MachineApi, Seq, ThreadedMachine,
-    TopologyKind,
+    Clock, DistInt, FaultConfig, FaultKind, Machine, MachineApi, Seq, SocketConfig, SocketMachine,
+    ThreadedMachine, TopologyKind,
 };
 use copmul::theory::TimeModel;
 use copmul::util::prop::{cases, check_shrink};
 use copmul::util::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+/// Socket-engine wiring for this test binary: Cargo builds the
+/// `copmul` bin alongside every integration test and hands us its path
+/// at compile time, so worker resolution never depends on the ambient
+/// environment.
+fn socket_cfg() -> SocketConfig {
+    SocketConfig {
+        worker_bin: Some(PathBuf::from(env!("CARGO_BIN_EXE_copmul"))),
+        ..Default::default()
+    }
+}
+
+/// The engine set under test, from `COPMUL_ENGINE_MATRIX`
+/// (comma-separated `sim,threads,sockets`). Unset: sim + threads, plus
+/// sockets when the compiled-in worker binary exists on disk (it
+/// always should — a missing file means a broken build layout, which
+/// is reported once and skipped rather than failed). Naming `sockets`
+/// explicitly turns that skip into a hard failure.
+fn engine_matrix() -> &'static [EngineKind] {
+    static MATRIX: OnceLock<Vec<EngineKind>> = OnceLock::new();
+    MATRIX.get_or_init(|| match std::env::var("COPMUL_ENGINE_MATRIX") {
+        Ok(s) => s
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                let k: EngineKind = t
+                    .parse()
+                    .unwrap_or_else(|e| panic!("COPMUL_ENGINE_MATRIX: {e}"));
+                assert!(
+                    k != EngineKind::Sockets || Path::new(env!("CARGO_BIN_EXE_copmul")).is_file(),
+                    "COPMUL_ENGINE_MATRIX demands sockets but the copmul worker binary \
+                     is missing at {}",
+                    env!("CARGO_BIN_EXE_copmul")
+                );
+                k
+            })
+            .collect(),
+        Err(_) => {
+            let mut v = vec![EngineKind::Sim, EngineKind::Threads];
+            if Path::new(env!("CARGO_BIN_EXE_copmul")).is_file() {
+                v.push(EngineKind::Sockets);
+            } else {
+                eprintln!(
+                    "engine_differential: socket leg skipped (worker binary missing at {})",
+                    env!("CARGO_BIN_EXE_copmul")
+                );
+            }
+            v
+        }
+    })
+}
+
+fn sockets_enabled() -> bool {
+    engine_matrix().contains(&EngineKind::Sockets)
+}
 
 /// Network topology the randomized corpus runs under, from
 /// `COPMUL_TOPOLOGY` (the CI `differential` job sweeps
@@ -214,6 +281,38 @@ fn differential_case(rng: &mut Rng, shape: &Shape) -> Result<(), String> {
         sim_cost,
         thr_cost
     );
+
+    if sockets_enabled() {
+        let mut sock = SocketMachine::with_config(
+            shape.p,
+            shape.cap,
+            shape.base,
+            kind.build(shape.p),
+            socket_cfg(),
+        )
+        .map_err(|e| format!("socket engine start: {e}"))?;
+        let (sock_prod, sock_cost) = run_on(&mut sock, shape, &a, &b, &leaf)?;
+        sock.finish()
+            .map_err(|e| format!("socket engine error: {e}"))?;
+        prop_assert!(
+            sock_prod == reference,
+            "socket product diverges from the reference at {:?} n={} p={} base=2^{}",
+            shape.entry,
+            shape.n,
+            shape.p,
+            shape.base.log2
+        );
+        prop_assert!(
+            sock_cost == sim_cost,
+            "socket cost triple diverges at {:?} n={} p={} base=2^{}: sim {} vs sockets {}",
+            shape.entry,
+            shape.n,
+            shape.p,
+            shape.base.log2,
+            sim_cost,
+            sock_cost
+        );
+    }
     Ok(())
 }
 
@@ -232,7 +331,7 @@ fn differential_reference_vs_both_engines() {
 }
 
 /// Adversarial operand shapes, asserted against the bignum reference on
-/// BOTH engines through the full `execute_on` padding path: n = 1,
+/// every engine through the full `execute_on` padding path: n = 1,
 /// all-zero and all-max-digit operands, wildly unequal lengths, and the
 /// smallest legal P for each algorithm (1 = the leaf base case, and the
 /// smallest parallel shape: 4 = 4^1 = 4·3^0).
@@ -286,6 +385,26 @@ fn differential_adversarial_operands() {
                 report.critical,
                 "{what} algo {algo:?} p={procs}: engines disagree on cost"
             );
+
+            if sockets_enabled() {
+                let mut sock = SocketMachine::with_config(
+                    procs,
+                    u64::MAX / 2,
+                    base,
+                    TopologyKind::FullyConnected.build(procs),
+                    socket_cfg(),
+                )
+                .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (sockets start): {e}"));
+                let (sock_prod, _) = execute_on(&mut sock, &tm, &spec, &seq, &leaf)
+                    .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (sockets): {e}"));
+                let sock_report = sock.finish().unwrap();
+                assert_eq!(&sock_prod, &want, "{what} algo {algo:?} p={procs} (sockets)");
+                assert_eq!(
+                    sim.critical(),
+                    sock_report.critical,
+                    "{what} algo {algo:?} p={procs}: socket engine disagrees on cost"
+                );
+            }
         }
     }
 }
@@ -305,14 +424,15 @@ fn differential_scheduler_sharded_vs_single_job() {
         (16, Some(Algorithm::Copsim)),
     ];
     let jobs_per_engine = (cases(48) / 4).clamp(8, 64) as usize;
-    for engine in [EngineKind::Sim, EngineKind::Threads] {
+    for &engine in engine_matrix() {
         let cfg = SchedulerConfig {
             procs: 16,
             runners: 4,
             engine,
+            socket: socket_cfg(),
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0xD1FF);
         let mut pending = Vec::new();
         for id in 0..jobs_per_engine as u64 {
@@ -378,11 +498,12 @@ fn differential_scheduler_sharded_vs_single_job() {
 #[test]
 fn differential_faulty_scheduler_zero_fault_jobs_match_dedicated() {
     let jobs = (cases(48) / 6).clamp(6, 24) as usize;
-    for engine in [EngineKind::Sim, EngineKind::Threads] {
+    for &engine in engine_matrix() {
         let cfg = SchedulerConfig {
             procs: 16,
             runners: 4,
             engine,
+            socket: socket_cfg(),
             // Stall/DupMsg only: faults inflate costs but never kill an
             // attempt, so every job finishes on attempt 1 and the
             // faults_survived counter cleanly splits the fleet into
@@ -393,7 +514,7 @@ fn differential_faulty_scheduler_zero_fault_jobs_match_dedicated() {
             ])),
             ..Default::default()
         };
-        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf));
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
         let mut rng = Rng::new(0xFD1F);
         let mut pending = Vec::new();
         for id in 0..jobs as u64 {

@@ -51,7 +51,7 @@ fn workload(procs: usize) -> Workload {
 fn daemon(engine: EngineKind, cfg: DaemonConfig) -> Daemon {
     let mut cfg = cfg;
     cfg.sched.engine = engine;
-    Daemon::start(cfg, leaf_ref(SchoolLeaf))
+    Daemon::start(cfg, leaf_ref(SchoolLeaf)).unwrap()
 }
 
 fn jobs_for_tier() -> u64 {

@@ -1,0 +1,366 @@
+//! Wire-frame fuzz wall for the two length-prefixed codecs: the
+//! serving daemon's [`Request`] frame (`"COPM"`) and the socket
+//! engine's [`wire::Frame`] (`"COPW"`). Both decode through the shared
+//! bounds-checked [`FrameCursor`], and this suite pins the shared
+//! hardening on each:
+//!
+//! * truncation at EVERY byte offset decodes to `Err` — never a panic,
+//!   an over-read, or a silently shorter value;
+//! * bad magic, unsupported versions, and unknown opcodes are rejected;
+//! * trailing garbage fails the frame (`expect_end`);
+//! * hostile length fields (a count far beyond the bytes actually
+//!   present) are refused by the [`FrameCursor::digits`] cap *before*
+//!   any allocation, so a 40-byte frame claiming 2^32 digits cannot
+//!   balloon memory;
+//! * the stream-level length prefix is validated against
+//!   [`wire::MAX_FRAME`] before the body buffer is allocated.
+//!
+//! Seeded mutation fuzzing rides on `util::prop` so a failure names a
+//! replayable case; byte-offset sweeps are exhaustive, not sampled.
+
+use copmul::algorithms::Algorithm;
+use copmul::coordinator::Request;
+use copmul::sim::socket::wire;
+use copmul::sim::threaded::WorkerSnapshot;
+use copmul::sim::Clock;
+use copmul::util::frame::FrameCursor;
+use copmul::util::prop::{cases, check};
+use std::time::Duration;
+
+fn sample_request() -> Request {
+    Request {
+        a: vec![1, 2, 3, 0xFFFF],
+        b: vec![9, 8, 7],
+        procs: 4,
+        algo: Some(Algorithm::Copk),
+        mem_cap: Some(1 << 20),
+        deadline: Some(Duration::from_millis(250)),
+    }
+}
+
+/// Every socket frame variant, so the exhaustive sweeps cover each
+/// opcode's field layout (including the Option/bool/nested encodings).
+fn frame_corpus() -> Vec<wire::Frame> {
+    let clock = Clock {
+        ops: 7,
+        words: 11,
+        msgs: 13,
+    };
+    let snap = WorkerSnapshot {
+        clock,
+        mem_used: 64,
+        mem_peak: 128,
+        total_ops: 99,
+        sent_words: 55,
+        sent_msgs: 5,
+        busy: Duration::from_micros(1234),
+        error: Some("boom".into()),
+    };
+    vec![
+        wire::Frame::Hello { group: 1 },
+        wire::Frame::Setup {
+            procs: 8,
+            groups: 2,
+            mem_cap: u64::MAX / 2,
+            base_log2: 16,
+            bounds: vec![0, 4, 8],
+        },
+        wire::Frame::Listening {
+            addr: "/tmp/sock-0".into(),
+        },
+        wire::Frame::Go {
+            addrs: vec!["a".into(), "bc".into()],
+        },
+        wire::Frame::Ready,
+        wire::Frame::Shutdown,
+        wire::Frame::Alloc {
+            p: 3,
+            slot: 9,
+            data: vec![1, 2, 3],
+        },
+        wire::Frame::Free { p: 3, slot: 9 },
+        wire::Frame::Replace {
+            p: 0,
+            slot: 1,
+            data: vec![],
+        },
+        wire::Frame::Read { p: 2, slot: 4 },
+        wire::Frame::Compute { p: 1, ops: 1000 },
+        wire::Frame::LocalSync {
+            p: 1,
+            ops: 10,
+            busy_ns: 500,
+        },
+        wire::Frame::TakeInputs {
+            p: 2,
+            slots: vec![1, 2, 3],
+            consume: true,
+        },
+        wire::Frame::StoreOutput {
+            p: 2,
+            slot: 7,
+            ops: 42,
+            busy_ns: 99,
+            data: vec![5, 6],
+        },
+        wire::Frame::SendOwned {
+            p: 0,
+            dst: 3,
+            weight: 2,
+            data: vec![8],
+        },
+        wire::Frame::SendSlot {
+            p: 0,
+            dst: 3,
+            weight: 1,
+            slot: 5,
+            range: Some((2, 6)),
+            free_after: true,
+        },
+        wire::Frame::SendSlot {
+            p: 1,
+            dst: 2,
+            weight: 1,
+            slot: 5,
+            range: None,
+            free_after: false,
+        },
+        wire::Frame::Forward {
+            p: 1,
+            src: 0,
+            dst: 3,
+            weight: 4,
+        },
+        wire::Frame::Recv {
+            p: 3,
+            src: 0,
+            slot: 12,
+        },
+        wire::Frame::BarrierCollect { p: 0 },
+        wire::Frame::BarrierRelease { p: 0, clock },
+        wire::Frame::Purge { p: 1 },
+        wire::Frame::Query { p: 2 },
+        wire::Frame::Data {
+            p: 1,
+            payload: vec![3, 1, 4],
+        },
+        wire::Frame::Ack { p: 0 },
+        wire::Frame::Inputs {
+            p: 2,
+            payloads: vec![vec![1], vec![], vec![2, 3]],
+        },
+        wire::Frame::Snapshot { p: 3, snap },
+        wire::Frame::BarrierClock { p: 1, clock },
+        wire::Frame::PeerHello { group: 0 },
+        wire::Frame::Net {
+            src: 0,
+            dst: 3,
+            clock,
+            payload: vec![7, 7, 7],
+        },
+    ]
+}
+
+// ------------------------------------------------------ Request (COPM)
+
+#[test]
+fn request_roundtrips_and_every_truncation_errs() {
+    let req = sample_request();
+    let bytes = req.encode();
+    assert_eq!(Request::decode(&bytes).unwrap(), req);
+    // The header pins both operand lengths, so every proper prefix is
+    // a truncation and must fail cleanly.
+    for cut in 0..bytes.len() {
+        assert!(
+            Request::decode(&bytes[..cut]).is_err(),
+            "request truncated to {cut}/{} bytes must not decode",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn request_rejects_bad_magic_version_tag_and_trailing_garbage() {
+    let good = sample_request().encode();
+
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xFF;
+    assert!(Request::decode(&bad_magic).is_err(), "magic must be checked");
+
+    let mut bad_version = good.clone();
+    bad_version[4] = Request::VERSION + 1;
+    assert!(Request::decode(&bad_version).is_err(), "version must be checked");
+
+    let mut bad_algo = good.clone();
+    bad_algo[5] = 3; // tags are 0 hybrid | 1 copsim | 2 copk
+    assert!(Request::decode(&bad_algo).is_err(), "algo tag must be checked");
+
+    for extra in [1usize, 4, 64] {
+        let mut trailing = good.clone();
+        trailing.resize(good.len() + extra, 0xAB);
+        assert!(
+            Request::decode(&trailing).is_err(),
+            "{extra} byte(s) of trailing garbage must fail the frame"
+        );
+    }
+}
+
+#[test]
+fn request_rejects_hostile_length_fields_before_allocation() {
+    // Header layout: magic(4) version(1) algo(1) reserved(2) procs(4)
+    // mem_cap(8) deadline(8), then a_len at 28..32 and b_len at 32..36.
+    let good = sample_request().encode();
+    for (name, off) in [("a_len", 28usize), ("b_len", 32usize)] {
+        for hostile in [u32::MAX, u32::MAX / 4 + 1, 1 << 30] {
+            let mut bytes = good.clone();
+            bytes[off..off + 4].copy_from_slice(&hostile.to_le_bytes());
+            // FrameCursor::digits caps the count against the bytes
+            // actually remaining BEFORE reserving, so this errs without
+            // a multi-gigabyte allocation attempt.
+            assert!(
+                Request::decode(&bytes).is_err(),
+                "{name} = {hostile} must be rejected"
+            );
+        }
+    }
+}
+
+#[test]
+fn request_seeded_mutation_fuzz_never_panics() {
+    let good = sample_request().encode();
+    check("request-mutation-fuzz", cases(200), |rng| {
+        let mut bytes = good.clone();
+        for _ in 0..=rng.below(4) {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes[i] ^= rng.below(255) as u8 + 1;
+        }
+        // Any outcome is fine except a panic/abort; a successful decode
+        // must re-encode to a frame that decodes to the same value.
+        if let Ok(req) = Request::decode(&bytes) {
+            let re = req.encode();
+            match Request::decode(&re) {
+                Ok(again) if again == req => {}
+                Ok(_) => return Err("re-decode changed the request".into()),
+                Err(e) => return Err(format!("re-encode of an accepted frame failed: {e}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------- socket wire (COPW)
+
+#[test]
+fn socket_frames_roundtrip_and_every_truncation_errs() {
+    for frame in frame_corpus() {
+        let body = frame.encode();
+        assert_eq!(
+            wire::Frame::decode(&body).unwrap(),
+            frame,
+            "roundtrip failed for {frame:?}"
+        );
+        for cut in 0..body.len() {
+            assert!(
+                wire::Frame::decode(&body[..cut]).is_err(),
+                "{frame:?} truncated to {cut}/{} bytes must not decode",
+                body.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn socket_frames_reject_bad_magic_version_opcode_and_trailing_garbage() {
+    for frame in frame_corpus() {
+        let body = frame.encode();
+
+        let mut bad_magic = body.clone();
+        bad_magic[0] ^= 0xFF;
+        assert!(wire::Frame::decode(&bad_magic).is_err(), "{frame:?}: magic");
+
+        let mut bad_version = body.clone();
+        bad_version[4] = wire::VERSION + 1;
+        assert!(wire::Frame::decode(&bad_version).is_err(), "{frame:?}: version");
+
+        let mut trailing = body.clone();
+        trailing.push(0xEE);
+        assert!(wire::Frame::decode(&trailing).is_err(), "{frame:?}: trailing");
+    }
+    // Unknown opcode (byte 5), on the shortest valid header.
+    let mut body = wire::Frame::Ready.encode();
+    body[5] = 0x7F;
+    assert!(wire::Frame::decode(&body).is_err(), "unknown opcode must be rejected");
+}
+
+#[test]
+fn socket_frames_reject_hostile_digit_counts() {
+    // Alloc's layout: magic(4) version(1) op(1) p(4) slot(8), then the
+    // length-prefixed digit vector's count at 18..22.
+    let frame = wire::Frame::Alloc {
+        p: 0,
+        slot: 1,
+        data: vec![1, 2, 3],
+    };
+    let good = frame.encode();
+    for hostile in [u32::MAX, 1 << 30, 1 << 26] {
+        let mut bytes = good.clone();
+        bytes[18..22].copy_from_slice(&hostile.to_le_bytes());
+        assert!(
+            wire::Frame::decode(&bytes).is_err(),
+            "digit count {hostile} over a {}-byte body must be rejected",
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn socket_frame_seeded_mutation_fuzz_never_panics() {
+    let corpus: Vec<Vec<u8>> = frame_corpus().iter().map(wire::Frame::encode).collect();
+    check("wire-mutation-fuzz", cases(200), |rng| {
+        let body = &corpus[rng.below(corpus.len() as u64) as usize];
+        let mut bytes = body.clone();
+        for _ in 0..=rng.below(4) {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes[i] ^= rng.below(255) as u8 + 1;
+        }
+        let _ = wire::Frame::decode(&bytes); // must not panic
+        Ok(())
+    });
+}
+
+#[test]
+fn stream_length_prefix_is_capped_before_allocation() {
+    // A hostile length prefix alone — no body — must be refused by the
+    // MAX_FRAME check, not answered with a huge buffer reservation.
+    for hostile in [u32::MAX, (wire::MAX_FRAME as u32) + 1] {
+        let bytes = hostile.to_le_bytes();
+        let mut r = &bytes[..];
+        assert!(
+            wire::read_frame(&mut r).is_err(),
+            "length prefix {hostile} must be rejected"
+        );
+    }
+    // The stream writer/reader pair roundtrips every corpus frame.
+    for frame in frame_corpus() {
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, &frame).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(wire::read_frame(&mut r).unwrap(), frame);
+        assert!(r.is_empty(), "reader must consume exactly one frame");
+    }
+}
+
+#[test]
+fn frame_cursor_digit_cap_regression() {
+    // The shared cursor rejects a count that exceeds the bytes present
+    // BEFORE allocating (the hostile-length hardening both codecs lean
+    // on). 8 bytes = at most 2 digits.
+    let buf = [0u8; 8];
+    let mut f = FrameCursor::new(&buf);
+    assert!(f.digits(3).is_err(), "3 digits from 8 bytes must fail");
+    let mut f = FrameCursor::new(&buf);
+    assert!(f.digits(usize::MAX).is_err(), "absurd count must fail");
+    let mut f = FrameCursor::new(&buf);
+    assert_eq!(f.digits(2).unwrap(), vec![0, 0]);
+    assert!(f.expect_end().is_ok());
+}
