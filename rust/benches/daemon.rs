@@ -69,6 +69,7 @@ fn main() {
                 base_log2: 16,
                 procs: 4,
                 algo: Some(copmul::algorithms::Algorithm::Copsim),
+                exec_mode: copmul::algorithms::ExecPolicy::Dfs,
             },
             verify: false,
             collect: false,

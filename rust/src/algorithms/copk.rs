@@ -288,6 +288,94 @@ pub fn copk<M: MachineApi>(
     recompose_karatsuba(m, seq, c0, cp, sign, c2, w)
 }
 
+/// COPK with up to `levels` memory-hungry breadth-first levels
+/// (`ExecMode::Bfs`). Only the *stepping* regime changes: each DFS
+/// step copies every operand half to the re-ranked sequence ONCE and
+/// forks the DIFF operands as free same-layout clones (charged memory
+/// only), halving the step's charged copy rounds (8 → 4; saving
+/// ≥ n/P words per processor, `theory::copk_bfs_step`). The MI regime
+/// is mode-invariant: COPK_MI's splits already move every digit
+/// exactly once and its DIFF replicas carry data the receiving half
+/// genuinely lacks, so there is no redundant round for surplus memory
+/// to elide (DESIGN.md decision 15). Products and T are bit-identical
+/// to [`copk`]; `levels = 0` IS [`copk`].
+pub fn copk_bfs<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &LeafRef,
+    levels: u32,
+) -> Result<DistInt> {
+    let p = seq.len();
+    assert!(
+        p == 1 || is_copk_procs(p as u64),
+        "COPK requires |P| = 4·3^i (got {p})"
+    );
+    let n = a.total_width() as u64;
+    let mcap = m.mem_cap();
+
+    let mi_ok = (n as f64) <= mcap as f64 * pow_log3_2(p as f64) / 10.0;
+    if p == 1 || mi_ok {
+        return copk_mi(m, seq, a, b, leaf);
+    }
+    if levels == 0 {
+        return copk(m, seq, a, b, leaf);
+    }
+
+    let w = a.chunk_width;
+    ensure!(
+        w >= 2 && w % 2 == 0,
+        "COPK BFS cannot halve chunk width {w}: memory constraints violated (n={n}, P={p}, M={mcap})"
+    );
+
+    // --- Clone-elided depth-first step --------------------------------
+    let pt = seq.interleave_halves();
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+    let half_w = w / 2;
+    let lo_half = seq.lower_half();
+    let hi_half = seq.upper_half();
+    let mid = Seq(seq.ids()[p / 4..3 * p / 4].to_vec());
+
+    // Step 3: C0 = A0 x B0; the DIFF's operands fork off as free
+    // same-layout clones before the recursion consumes the copies.
+    let a0c = a0.copy_to(m, &pt, half_w)?;
+    let b0c = b0.copy_to(m, &pt, half_w)?;
+    let a0d = a0c.copy_to(m, &pt, half_w)?; // clone for the diff: zero words/msgs
+    let b0d = b0c.copy_to(m, &pt, half_w)?; // clone for the diff: zero words/msgs
+    a0.free(m);
+    b0.free(m);
+    let c0 = copk_bfs(m, &pt, a0c, b0c, leaf, levels - 1)?;
+    let c0 = c0.repartition(m, &lo_half, 2 * w)?;
+
+    // Step 4: C2 = A1 x B1.
+    let a1c = a1.copy_to(m, &pt, half_w)?;
+    let b1c = b1.copy_to(m, &pt, half_w)?;
+    let a1d = a1c.copy_to(m, &pt, half_w)?;
+    let b1d = b1c.copy_to(m, &pt, half_w)?;
+    a1.free(m);
+    b1.free(m);
+    let c2 = copk_bfs(m, &pt, a1c, b1c, leaf, levels - 1)?;
+    let c2 = c2.repartition(m, &hi_half, 2 * w)?;
+
+    // Steps 5-6: the differences, on the cloned operands, preserving
+    // the DFS step's operand order (A' = |A0 - A1|, B' = |B1 - B0|).
+    let (adiff, fa) = diff(m, &pt, &a0d, &a1d)?;
+    a0d.free(m);
+    a1d.free(m);
+    let (bdiff, fb) = diff(m, &pt, &b1d, &b0d)?;
+    b1d.free(m);
+    b0d.free(m);
+    let sign = fa * fb;
+
+    // Step 7: C' = A' x B'.
+    let cp = copk_bfs(m, &pt, adiff, bdiff, leaf, levels - 1)?;
+    let cp = cp.repartition(m, &mid, 2 * w)?;
+
+    recompose_karatsuba(m, seq, c0, cp, sign, c2, w)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -141,6 +141,149 @@ pub fn copsim_mi<M: MachineApi>(
     recompose(m, seq, c0, c1, c2, c3, w)
 }
 
+/// COPSIM_MI with the BFS fused operand distribution
+/// (`ExecMode::Bfs` in the MI regime): when the machine has at least
+/// twice the Theorem 11 footprint (`n ≤ M√P/24`, checked per level),
+/// each operand half is copied *directly* from its original layout to
+/// both groups that need it, replacing the repartition-then-replicate
+/// pair of [`copsim_mi`]. Destination layouts — and therefore products,
+/// recursion structure, and every processor's local op sequence — are
+/// identical; only the sender charges change: the per-level maximum
+/// drops from `4w` (even-low processors pay two 2w replicates) to `3w`
+/// words, giving `BW ≤ 13n/√P + 6log₂²P` (`theory::copsim_bfs_mi`)
+/// at unchanged T and L.
+///
+/// The gate is level-invariant (`n` and `√P` halve together down the
+/// MI recursion), so a failed gate fails at every deeper level and the
+/// fallback to [`copsim_mi`] is total, not partial.
+pub(crate) fn copsim_mi_fused<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &LeafRef,
+    levels: u32,
+) -> Result<DistInt> {
+    let p = seq.len();
+    assert!(is_pow4(p), "COPSIM_MI requires |P| = 4^k (got {p})");
+    if p == 1 {
+        return leaf_multiply(m, seq.at(0), a, b, leaf);
+    }
+    let n = a.total_width() as u64;
+    let fused_ok = levels > 0 && (n as f64) <= m.mem_cap() as f64 * (p as f64).sqrt() / 24.0;
+    if !fused_ok {
+        return copsim_mi(m, seq, a, b, leaf);
+    }
+    assert_eq!(a.total_width(), b.total_width());
+    let w = a.chunk_width;
+    assert!(w.is_power_of_two(), "chunk width must be a power of two");
+
+    let [g0, g1, g2, g3] = seq.copsim_groups();
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+    let w2 = 2 * w;
+
+    // Fused phase 1: both copies of each half leave from the ORIGINAL
+    // half layout (every source chunk already sits on a processor of
+    // one destination group, so one of the two copies is half-free),
+    // then the source is deleted — no replicate round.
+    let a0_g0 = a0.copy_to(m, &g0, w2)?;
+    let a0_g1 = a0.copy_to(m, &g1, w2)?;
+    a0.free(m);
+    let b0_g0 = b0.copy_to(m, &g0, w2)?;
+    let b0_g2 = b0.copy_to(m, &g2, w2)?;
+    b0.free(m);
+    let a1_g2 = a1.copy_to(m, &g2, w2)?;
+    let a1_g3 = a1.copy_to(m, &g3, w2)?;
+    a1.free(m);
+    let b1_g3 = b1.copy_to(m, &g3, w2)?;
+    let b1_g1 = b1.copy_to(m, &g1, w2)?;
+    b1.free(m);
+
+    let c0 = copsim_mi_fused(m, &g0, a0_g0, b0_g0, leaf, levels - 1)?;
+    let c1 = copsim_mi_fused(m, &g1, a0_g1, b1_g1, leaf, levels - 1)?;
+    let c2 = copsim_mi_fused(m, &g2, a1_g2, b0_g2, leaf, levels - 1)?;
+    let c3 = copsim_mi_fused(m, &g3, a1_g3, b1_g3, leaf, levels - 1)?;
+
+    recompose(m, seq, c0, c1, c2, c3, w)
+}
+
+/// COPSIM with up to `levels` memory-hungry breadth-first levels
+/// (`ExecMode::Bfs`). In the MI regime this is [`copsim_mi_fused`]; in
+/// the stepping regime each DFS step copies every operand half to the
+/// re-ranked sequence ONCE and forks its second use as a same-layout
+/// clone — charged memory only (`repartition_same_layout_is_free`) —
+/// halving the step's charged copy rounds (8 → 4, saving ≥ n/P words
+/// on every processor; `theory::copsim_bfs_step`). Products and T are
+/// bit-identical to [`copsim`]; `levels = 0` IS [`copsim`].
+pub fn copsim_bfs<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &LeafRef,
+    levels: u32,
+) -> Result<DistInt> {
+    let p = seq.len();
+    assert!(is_pow4(p), "COPSIM requires |P| = 4^k (got {p})");
+    let n = a.total_width() as u64;
+    let mcap = m.mem_cap();
+
+    let mi_ok = (n as f64) <= mcap as f64 * (p as f64).sqrt() / 12.0;
+    if p == 1 || mi_ok {
+        return copsim_mi_fused(m, seq, a, b, leaf, levels);
+    }
+    if levels == 0 {
+        return copsim(m, seq, a, b, leaf);
+    }
+
+    let w = a.chunk_width;
+    ensure!(
+        w >= 2 && w % 2 == 0,
+        "COPSIM BFS cannot halve chunk width {w}: M ≥ 80n/P / M ≥ 24√P violated (n={n}, P={p}, M={mcap})"
+    );
+
+    // --- Clone-elided depth-first step --------------------------------
+    let pt = seq.interleave_halves();
+    let (a0, a1) = a.split_half();
+    let (b0, b1) = b.split_half();
+    let half_w = w / 2;
+    let lo_half = seq.lower_half();
+    let hi_half = seq.upper_half();
+    let mid = Seq(seq.ids()[p / 4..3 * p / 4].to_vec());
+
+    // C0 = A0 x B0. Each half is copied once; the second user's operand
+    // is a free same-layout clone taken before the recursion dirties it.
+    let a0c = a0.copy_to(m, &pt, half_w)?;
+    let b0c = b0.copy_to(m, &pt, half_w)?;
+    let a0c2 = a0c.copy_to(m, &pt, half_w)?; // clone for C1: zero words/msgs
+    let b0c2 = b0c.copy_to(m, &pt, half_w)?; // clone for C2: zero words/msgs
+    a0.free(m);
+    b0.free(m);
+    let c0 = copsim_bfs(m, &pt, a0c, b0c, leaf, levels - 1)?;
+    let c0 = c0.repartition(m, &lo_half, 2 * w)?;
+
+    // C1 = A0 x B1.
+    let b1c = b1.copy_to(m, &pt, half_w)?;
+    let b1c2 = b1c.copy_to(m, &pt, half_w)?; // clone for C3
+    b1.free(m);
+    let c1 = copsim_bfs(m, &pt, a0c2, b1c, leaf, levels - 1)?;
+    let c1 = c1.repartition(m, &mid, 2 * w)?;
+
+    // C2 = A1 x B0.
+    let a1c = a1.copy_to(m, &pt, half_w)?;
+    let a1c2 = a1c.copy_to(m, &pt, half_w)?; // clone for C3
+    a1.free(m);
+    let c2 = copsim_bfs(m, &pt, a1c, b0c2, leaf, levels - 1)?;
+    let c2 = c2.repartition(m, &mid, 2 * w)?;
+
+    // C3 = A1 x B1, entirely from clones.
+    let c3 = copsim_bfs(m, &pt, a1c2, b1c2, leaf, levels - 1)?;
+    let c3 = c3.repartition(m, &hi_half, 2 * w)?;
+
+    recompose(m, seq, c0, c1, c2, c3, w)
+}
+
 /// COPSIM in the main execution mode (§5.2): depth-first steps until the
 /// subproblem satisfies the MI memory requirement `n ≤ M√P/12`, then
 /// [`copsim_mi`]. The machine's per-processor capacity `M` is taken from

@@ -1,0 +1,318 @@
+//! Memory-adaptive execution modes: the BFS/DFS tradeoff made explicit.
+//!
+//! The paper's analyses fix a per-processor memory footprint (Theorems
+//! 11/12/14/15), but the memory-independent-lower-bound line in the
+//! related work (arXiv 1202.3177; CAPS' BFS/DFS interleaving for
+//! Strassen, arXiv 1202.3173) shows that when a processor's memory `M`
+//! exceeds the MI minimum, the surplus can be traded for bandwidth:
+//! replicate operands, take breadth-first steps, and skip repartition
+//! rounds.
+//!
+//! This module defines the per-job mode vocabulary and the dispatcher:
+//!
+//! * [`ExecMode`] — the *resolved* mode a run executes under.
+//!   `Dfs` is exactly today's entry points ([`copsim`]/[`copk`]);
+//!   `Bfs { levels }` lets up to `levels` top recursion levels run the
+//!   memory-hungry variants ([`copsim_bfs`]/[`copk_bfs`]).
+//! * [`ExecPolicy`] — how a job *requests* a mode (`--exec-mode=` on
+//!   the CLI, `JobSpec::exec_mode`, the daemon wire tag): a fixed mode,
+//!   or `Auto`, resolved against the shard's memory by
+//!   [`theory::best_mode`] at execution time.
+//!
+//! The modes change *which* communication rounds are charged, never the
+//! values computed: products are bit-identical across modes and
+//! engines, and T is mode-invariant (every processor performs the same
+//! local digit operations in the same per-processor order; the elided
+//! rounds only remove max-plus join edges that never carry the
+//! critical ops chain). See DESIGN.md "Memory-adaptive execution".
+
+use super::copk::{copk, copk_bfs};
+use super::copsim::{copsim, copsim_bfs};
+use super::hybrid::Algorithm;
+use super::leaf::LeafRef;
+use crate::error::{bail, Result};
+use crate::sim::{DistInt, MachineApi, Seq};
+use crate::theory;
+
+/// The resolved per-job execution mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The paper-default schedule: depth-first steps while memory is
+    /// tight, then the plain MI recursion. Identical to the pre-mode
+    /// entry points by construction.
+    Dfs,
+    /// Memory-hungry schedule: up to `levels` top recursion levels
+    /// spend surplus memory to elide repartition rounds (fused operand
+    /// distribution in the MI regime, clone-elided copies in the
+    /// stepping regime). `levels = 0` is exactly [`ExecMode::Dfs`].
+    Bfs { levels: u32 },
+}
+
+impl std::fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecMode::Dfs => write!(f, "dfs"),
+            ExecMode::Bfs { levels } => write!(f, "bfs({levels})"),
+        }
+    }
+}
+
+/// How a job requests its execution mode. `Dfs` is the default
+/// everywhere (CLI, `JobSpec`, wire frames) so existing invocations and
+/// blessed cost tables are unchanged byte-for-byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecPolicy {
+    /// Always the paper-default DFS schedule.
+    #[default]
+    Dfs,
+    /// Pick the cheapest mode that fits the machine's per-processor
+    /// memory ([`theory::best_mode`]).
+    Auto,
+    /// Request BFS; the affordable level count is resolved from memory
+    /// ([`theory::bfs_levels`]), and a shard that cannot afford any
+    /// level is rejected distinctly at admission (`RejectKind`).
+    Bfs,
+}
+
+impl ExecPolicy {
+    /// Parse a `--exec-mode=` value.
+    pub fn parse(s: &str) -> Result<ExecPolicy> {
+        match s {
+            "dfs" => Ok(ExecPolicy::Dfs),
+            "auto" => Ok(ExecPolicy::Auto),
+            "bfs" => Ok(ExecPolicy::Bfs),
+            _ => bail!("unknown exec mode '{s}' (expected auto|dfs|bfs)"),
+        }
+    }
+
+    /// Wire tag for the daemon's `Request` frame (the u16 field that
+    /// was reserved-zero before schema-aware decoding: 0 decodes to
+    /// `Dfs`, so pre-mode frames keep their meaning).
+    pub fn tag(self) -> u16 {
+        match self {
+            ExecPolicy::Dfs => 0,
+            ExecPolicy::Auto => 1,
+            ExecPolicy::Bfs => 2,
+        }
+    }
+
+    /// Inverse of [`ExecPolicy::tag`].
+    pub fn from_tag(t: u16) -> Result<ExecPolicy> {
+        match t {
+            0 => Ok(ExecPolicy::Dfs),
+            1 => Ok(ExecPolicy::Auto),
+            2 => Ok(ExecPolicy::Bfs),
+            _ => bail!("bad exec-mode tag {t}"),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecPolicy::Dfs => write!(f, "dfs"),
+            ExecPolicy::Auto => write!(f, "auto"),
+            ExecPolicy::Bfs => write!(f, "bfs"),
+        }
+    }
+}
+
+/// Resolve a policy to a concrete mode for `algo` on `(n, p)` with
+/// per-processor memory `mem`. Deterministic in its arguments, so every
+/// engine resolves the same mode for the same job and shard.
+pub fn resolve_mode(policy: ExecPolicy, algo: Algorithm, n: u64, p: u64, mem: u64) -> ExecMode {
+    match policy {
+        ExecPolicy::Dfs => ExecMode::Dfs,
+        ExecPolicy::Auto => theory::best_mode(algo, n, p, mem),
+        ExecPolicy::Bfs => ExecMode::Bfs {
+            levels: theory::bfs_levels(algo, n, p, mem),
+        },
+    }
+}
+
+/// Run `algo` under `mode`. Consumes `a`, `b` like the underlying entry
+/// points; `ExecMode::Dfs` dispatches to exactly the pre-mode code
+/// paths (zero-diff by construction).
+pub fn mul_with_mode<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &LeafRef,
+    algo: Algorithm,
+    mode: ExecMode,
+) -> Result<DistInt> {
+    match (algo, mode) {
+        (Algorithm::Copsim, ExecMode::Dfs) => copsim(m, seq, a, b, leaf),
+        (Algorithm::Copsim, ExecMode::Bfs { levels }) => copsim_bfs(m, seq, a, b, leaf, levels),
+        (Algorithm::Copk, ExecMode::Dfs) => copk(m, seq, a, b, leaf),
+        (Algorithm::Copk, ExecMode::Bfs { levels }) => copk_bfs(m, seq, a, b, leaf, levels),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+    use crate::bignum::{mul, Base, Ops};
+    use crate::sim::{Clock, Machine};
+    use crate::util::Rng;
+
+    /// Run one (algo, mode) cell on a capped machine, verify the
+    /// product against the sequential reference, and return the
+    /// critical-path cost triple.
+    fn run_mode(algo: Algorithm, mode: ExecMode, p: usize, n: usize, cap: u64, seed: u64) -> Clock {
+        let mut rng = Rng::new(seed);
+        let mut m = Machine::new(p, cap, Base::new(16));
+        let seq = Seq::range(p);
+        let a = rng.digits(n, 16);
+        let b = rng.digits(n, 16);
+        let da = DistInt::scatter(&mut m, &seq, &a, n / p).unwrap();
+        let db = DistInt::scatter(&mut m, &seq, &b, n / p).unwrap();
+        let leaf = leaf_ref(SchoolLeaf);
+        let c = mul_with_mode(&mut m, &seq, da, db, &leaf, algo, mode)
+            .unwrap_or_else(|e| panic!("{algo} {mode} p={p} n={n} cap={cap}: {e}"));
+        let cd = c.gather(&m).unwrap();
+        let mut ops = Ops::default();
+        let want = mul::mul_school(&a, &b, Base::new(16), &mut ops);
+        assert_eq!(cd, want, "product mismatch {algo} {mode} p={p} n={n}");
+        assert!(m.mem_peak_max() <= cap, "{algo} {mode}: peak over cap");
+        m.critical()
+    }
+
+    #[test]
+    fn exec_policy_parses_and_round_trips() {
+        assert_eq!(ExecPolicy::parse("auto").unwrap(), ExecPolicy::Auto);
+        assert_eq!(ExecPolicy::parse("dfs").unwrap(), ExecPolicy::Dfs);
+        assert_eq!(ExecPolicy::parse("bfs").unwrap(), ExecPolicy::Bfs);
+        assert!(ExecPolicy::parse("breadth").is_err());
+        for p in [ExecPolicy::Dfs, ExecPolicy::Auto, ExecPolicy::Bfs] {
+            assert_eq!(ExecPolicy::from_tag(p.tag()).unwrap(), p);
+        }
+        assert!(ExecPolicy::from_tag(7).is_err());
+        assert_eq!(ExecPolicy::default(), ExecPolicy::Dfs);
+    }
+
+    /// Acceptance cell (COPSIM, roomy): shard M = 2x the MI footprint.
+    /// The fused distribution must cut charged BW strictly below DFS at
+    /// bit-equal T, within the predicted `theory::copsim_bfs_mi` bound.
+    #[test]
+    fn copsim_bfs_roomy_cuts_bw_at_equal_t() {
+        let (p, n) = (16usize, 1024usize);
+        let mi_need = crate::theory::thm11_copsim_mi_mem(n as u64, p as u64);
+        let cap = 2 * mi_need; // the acceptance qualifier: M >= 2x MI
+        let mode = crate::theory::best_mode(Algorithm::Copsim, n as u64, p as u64, cap);
+        assert_eq!(mode, ExecMode::Bfs { levels: 2 }, "auto must pick full-depth BFS");
+        let dfs = run_mode(Algorithm::Copsim, ExecMode::Dfs, p, n, cap, 0xE0);
+        let bfs = run_mode(Algorithm::Copsim, mode, p, n, cap, 0xE0);
+        assert_eq!(bfs.ops, dfs.ops, "T must be mode-invariant");
+        assert!(bfs.words < dfs.words, "BFS BW {} !< DFS BW {}", bfs.words, dfs.words);
+        assert!(bfs.msgs <= dfs.msgs, "BFS L {} > DFS L {}", bfs.msgs, dfs.msgs);
+        // Predicted ordering matches the charged ordering.
+        let (bp, bm) = crate::theory::exec_mode_bounds(Algorithm::Copsim, n as u64, p as u64, cap, mode);
+        let (dp, _) = crate::theory::exec_mode_bounds(Algorithm::Copsim, n as u64, p as u64, cap, ExecMode::Dfs);
+        assert!(bp.words < dp.words, "predicted BW not lower");
+        assert_eq!(bp.ops, dp.ops, "predicted T not mode-invariant");
+        assert!(bm <= cap, "predicted footprint must fit the cell");
+        // Charged BW within the predicted bound (same 25% polylog slack
+        // as the Theorem 11 gate in copsim.rs).
+        assert!(
+            bfs.words <= bp.words + bp.words / 4,
+            "BW {} > 1.25x predicted {}",
+            bfs.words,
+            bp.words
+        );
+    }
+
+    /// COPSIM stepping regime: clone-elided DFS steps at a cap below
+    /// the MI requirement but above `copsim_bfs_step_mem`.
+    #[test]
+    fn copsim_bfs_stepping_cuts_bw_at_equal_t() {
+        let (p, n) = (256usize, 4096usize);
+        let cap = 2048u64; // 128n/P: < 12n/sqrt(P) = 3072, >= 96n/P = 1536
+        assert!(cap < crate::theory::thm11_copsim_mi_mem(n as u64, p as u64));
+        let mode = crate::theory::best_mode(Algorithm::Copsim, n as u64, p as u64, cap);
+        assert_eq!(mode, ExecMode::Bfs { levels: 1 }, "auto must elide the one DFS step");
+        let dfs = run_mode(Algorithm::Copsim, ExecMode::Dfs, p, n, cap, 0xE1);
+        let bfs = run_mode(Algorithm::Copsim, mode, p, n, cap, 0xE1);
+        assert_eq!(bfs.ops, dfs.ops, "T must be mode-invariant");
+        assert!(bfs.words < dfs.words, "BFS BW {} !< DFS BW {}", bfs.words, dfs.words);
+        assert!(bfs.msgs <= dfs.msgs);
+        let (bp, _) = crate::theory::exec_mode_bounds(Algorithm::Copsim, n as u64, p as u64, cap, mode);
+        let (dp, _) = crate::theory::exec_mode_bounds(Algorithm::Copsim, n as u64, p as u64, cap, ExecMode::Dfs);
+        assert!(bp.words < dp.words && bp.ops == dp.ops);
+        assert!(bfs.words <= bp.words, "BW {} > predicted {}", bfs.words, bp.words);
+    }
+
+    /// Acceptance cell (COPK): stepping regime at `copk_bfs_step_mem`.
+    #[test]
+    fn copk_bfs_stepping_cuts_bw_at_equal_t() {
+        let (p, n) = (108usize, 5184usize);
+        let cap = crate::theory::copk_bfs_step_mem(n as u64, p as u64); // 48n/P = 2304
+        assert!(cap < crate::theory::thm14_copk_mi_mem(n as u64, p as u64));
+        let mode = crate::theory::best_mode(Algorithm::Copk, n as u64, p as u64, cap);
+        assert_eq!(mode, ExecMode::Bfs { levels: 1 }, "auto must elide the one DFS step");
+        let dfs = run_mode(Algorithm::Copk, ExecMode::Dfs, p, n, cap, 0xE2);
+        let bfs = run_mode(Algorithm::Copk, mode, p, n, cap, 0xE2);
+        assert_eq!(bfs.ops, dfs.ops, "T must be mode-invariant");
+        assert!(bfs.words < dfs.words, "BFS BW {} !< DFS BW {}", bfs.words, dfs.words);
+        assert!(bfs.msgs <= dfs.msgs);
+        let (bp, _) = crate::theory::exec_mode_bounds(Algorithm::Copk, n as u64, p as u64, cap, mode);
+        let (dp, _) = crate::theory::exec_mode_bounds(Algorithm::Copk, n as u64, p as u64, cap, ExecMode::Dfs);
+        assert!(bp.words < dp.words && bp.ops == dp.ops);
+        assert!(bfs.words <= bp.words, "BW {} > predicted {}", bfs.words, bp.words);
+    }
+
+    /// COPK's MI regime has no redundant round to elide (decision 15):
+    /// with roomy memory, BFS and DFS are the *same* schedule, and the
+    /// cost triple must be bit-identical.
+    #[test]
+    fn copk_bfs_roomy_is_mode_invariant() {
+        let (p, n) = (12usize, 384usize);
+        let cap = u64::MAX / 4;
+        assert_eq!(
+            crate::theory::best_mode(Algorithm::Copk, n as u64, p as u64, cap),
+            ExecMode::Dfs,
+            "auto must not claim a BFS win COPK-MI cannot deliver"
+        );
+        let dfs = run_mode(Algorithm::Copk, ExecMode::Dfs, p, n, cap, 0xE3);
+        let bfs = run_mode(Algorithm::Copk, ExecMode::Bfs { levels: 8 }, p, n, cap, 0xE3);
+        assert_eq!(bfs, dfs, "COPK-MI must be mode-invariant");
+    }
+
+    /// `Bfs { levels: 0 }` is exactly DFS — the zero-diff invariant the
+    /// scheduler's downgrade path relies on.
+    #[test]
+    fn bfs_zero_levels_is_exactly_dfs() {
+        for &(algo, p, n, cap) in &[
+            (Algorithm::Copsim, 16usize, 256usize, u64::MAX / 4),
+            (Algorithm::Copsim, 64, 4096, 80 * 4096 / 64),
+            (Algorithm::Copk, 12, 384, u64::MAX / 4),
+        ] {
+            let dfs = run_mode(algo, ExecMode::Dfs, p, n, cap, 0xE4);
+            let bfs0 = run_mode(algo, ExecMode::Bfs { levels: 0 }, p, n, cap, 0xE4);
+            assert_eq!(bfs0, dfs, "{algo} p={p} n={n}: Bfs{{0}} diverged from Dfs");
+        }
+    }
+
+    #[test]
+    fn resolve_mode_honors_policy_and_memory() {
+        let (n, p) = (1024u64, 16u64);
+        let roomy = 2 * crate::theory::thm11_copsim_mi_mem(n, p);
+        let tight = crate::theory::thm11_copsim_mi_mem(n, p);
+        // Dfs policy never upgrades.
+        assert_eq!(resolve_mode(ExecPolicy::Dfs, Algorithm::Copsim, n, p, roomy), ExecMode::Dfs);
+        // Auto picks BFS only when the footprint fits.
+        assert_eq!(
+            resolve_mode(ExecPolicy::Auto, Algorithm::Copsim, n, p, roomy),
+            ExecMode::Bfs { levels: 2 }
+        );
+        assert_eq!(resolve_mode(ExecPolicy::Auto, Algorithm::Copsim, n, p, tight), ExecMode::Dfs);
+        // Explicit Bfs degrades to zero affordable levels (the scheduler
+        // surfaces this as a distinct rejection at admission).
+        assert_eq!(
+            resolve_mode(ExecPolicy::Bfs, Algorithm::Copsim, n, p, tight),
+            ExecMode::Bfs { levels: 0 }
+        );
+    }
+}

@@ -21,6 +21,7 @@
 
 use super::copk::copk;
 use super::copsim::{copsim, is_pow4};
+use super::exec::{mul_with_mode, resolve_mode, ExecMode, ExecPolicy};
 use super::leaf::LeafRef;
 use crate::error::{bail, Result};
 use crate::sim::{DistInt, MachineApi, Seq};
@@ -103,6 +104,28 @@ pub fn hybrid_mul<M: MachineApi>(
         Algorithm::Copk => copk(m, seq, a, b, leaf)?,
     };
     Ok((c, algo))
+}
+
+/// [`hybrid_mul`] with an execution-mode policy: the scheme is chosen
+/// as before, then the policy resolves against the machine's
+/// per-processor memory ([`resolve_mode`]). Returns the product, the
+/// scheme, and the *resolved* mode (what the run actually executed).
+/// `ExecPolicy::Dfs` is bit-identical to [`hybrid_mul`].
+pub fn hybrid_mul_with_mode<M: MachineApi>(
+    m: &mut M,
+    seq: &Seq,
+    a: DistInt,
+    b: DistInt,
+    leaf: &LeafRef,
+    tm: &TimeModel,
+    policy: ExecPolicy,
+) -> Result<(DistInt, Algorithm, ExecMode)> {
+    let n = a.total_width() as u64;
+    let p = seq.len() as u64;
+    let algo = choose_algorithm(n, p, m.mem_cap(), tm)?;
+    let mode = resolve_mode(policy, algo, n, p, m.mem_cap());
+    let c = mul_with_mode(m, seq, a, b, leaf, algo, mode)?;
+    Ok((c, algo, mode))
 }
 
 #[cfg(test)]

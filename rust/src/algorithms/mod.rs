@@ -9,6 +9,9 @@
 //!   the special `|P| = 4` base case) and the main DFS mode.
 //! * [`hybrid`] — §7 hybridization: cost-model-driven choice between the
 //!   two schemes (and the classical sequential crossover at the leaves).
+//! * [`exec`] — memory-adaptive execution modes: the CAPS-style BFS/DFS
+//!   tradeoff (`ExecMode`), spending surplus per-processor memory to
+//!   elide repartition rounds at unchanged T and bit-identical products.
 //!
 //! All entry points consume their [`DistInt`] inputs (the paper's
 //! processors delete input digits as soon as they are no longer needed)
@@ -17,12 +20,14 @@
 
 pub mod copk;
 pub mod copsim;
+pub mod exec;
 pub mod hybrid;
 pub mod leaf;
 
-pub use copk::{copk, copk_mi};
-pub use copsim::{copsim, copsim_mi};
-pub use hybrid::{choose_algorithm, hybrid_mul, Algorithm};
+pub use copk::{copk, copk_bfs, copk_mi};
+pub use copsim::{copsim, copsim_bfs, copsim_mi};
+pub use exec::{mul_with_mode, resolve_mode, ExecMode, ExecPolicy};
+pub use hybrid::{choose_algorithm, hybrid_mul, hybrid_mul_with_mode, Algorithm};
 pub use leaf::{leaf_ref, LeafMultiplier, LeafRef, SchoolLeaf, SkimLeaf, SlimLeaf};
 
 use crate::error::Result;

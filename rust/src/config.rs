@@ -2,7 +2,7 @@
 //! minimal config-file format (same `key = value` lines, `#` comments)
 //! — serde/toml are not available in this offline build.
 
-use crate::algorithms::Algorithm;
+use crate::algorithms::{Algorithm, ExecPolicy};
 use crate::bignum::Base;
 use crate::error::{bail, Context, Result};
 use crate::sim::TopologyKind;
@@ -85,6 +85,9 @@ pub struct RunConfig {
     pub base_log2: u32,
     /// Forced algorithm; None = hybrid dispatch.
     pub algo: Option<Algorithm>,
+    /// Execution-mode policy: DFS (paper default), auto (spend surplus
+    /// memory on BFS when it cuts BW), or explicit BFS.
+    pub exec_mode: ExecPolicy,
     pub leaf: LeafKind,
     /// Execution engine: cost-model simulator or real threads.
     pub engine: EngineKind,
@@ -105,6 +108,7 @@ impl Default for RunConfig {
             mem_cap: None,
             base_log2: 16,
             algo: None,
+            exec_mode: ExecPolicy::Dfs,
             leaf: LeafKind::Skim,
             engine: EngineKind::Sim,
             topology: TopologyKind::FullyConnected,
@@ -144,9 +148,13 @@ impl RunConfig {
             }
             "leaf" => self.leaf = value.parse()?,
             // Accepted both as `engine=threads` and as the CLI flag
-            // spelling `--engine=threads` (likewise `topology`).
+            // spelling `--engine=threads` (likewise `topology` and
+            // `exec-mode`).
             "engine" | "--engine" => self.engine = value.parse()?,
             "topology" | "--topology" => self.topology = value.parse()?,
+            "exec-mode" | "exec_mode" | "--exec-mode" => {
+                self.exec_mode = ExecPolicy::parse(value)?
+            }
             "seed" => self.seed = value.parse().context("seed")?,
             "artifacts" | "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "workers" => self.workers = value.parse().context("workers")?,
@@ -265,6 +273,19 @@ mod tests {
         c.apply_args(&["--topology=fully-connected".into()]).unwrap();
         assert_eq!(c.topology, TopologyKind::FullyConnected);
         assert!(c.set("topology", "hypercube").is_err());
+    }
+
+    #[test]
+    fn exec_mode_flag_parses_both_spellings() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.exec_mode, ExecPolicy::Dfs);
+        c.apply_args(&["exec-mode=auto".into()]).unwrap();
+        assert_eq!(c.exec_mode, ExecPolicy::Auto);
+        c.apply_args(&["--exec-mode=bfs".into()]).unwrap();
+        assert_eq!(c.exec_mode, ExecPolicy::Bfs);
+        c.apply_args(&["exec_mode=dfs".into()]).unwrap();
+        assert_eq!(c.exec_mode, ExecPolicy::Dfs);
+        assert!(c.set("exec-mode", "breadth").is_err());
     }
 
     #[test]

@@ -48,6 +48,71 @@ impl BatchExecutor for XlaRuntime {
     }
 }
 
+/// Pure-Rust [`BatchExecutor`]: one batched artifact shape whose rows
+/// are multiplied with the schoolbook reference in base 256 (the
+/// artifact digit contract). This is the daemon's fallback executor for
+/// small-job coalescing when no PJRT runtime is loaded — the batching
+/// *policy* (queueing, linger, flush, row routing) is identical to the
+/// XLA path, only the kernel is host arithmetic. Infallible by
+/// construction: `execute_batch` never errors.
+pub struct SchoolBatchRuntime {
+    batch: usize,
+    k: usize,
+    /// Batched executions performed (observability for tests/soaks).
+    pub executions: AtomicU64,
+}
+
+impl SchoolBatchRuntime {
+    /// An executor with one `batch × k` bucket (base-256 digits).
+    pub fn new(batch: usize, k: usize) -> Self {
+        assert!(batch >= 1 && k >= 1, "degenerate batch shape");
+        SchoolBatchRuntime {
+            batch,
+            k,
+            executions: AtomicU64::new(0),
+        }
+    }
+}
+
+impl BatchExecutor for SchoolBatchRuntime {
+    fn artifacts(&self, entry: &str) -> Vec<ArtifactInfo> {
+        vec![ArtifactInfo {
+            file: std::path::PathBuf::from("host://school"),
+            entry: entry.to_string(),
+            batch: self.batch,
+            k: self.k,
+            base_log2: 8,
+        }]
+    }
+
+    fn execute_batch(&self, info: &ArtifactInfo, a: &[i32], b: &[i32]) -> Result<Vec<i32>> {
+        debug_assert_eq!(a.len(), info.batch * info.k);
+        debug_assert_eq!(b.len(), info.batch * info.k);
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        let base = Base::new(8);
+        let mut out = vec![0i32; info.batch * 2 * info.k];
+        for row in 0..info.batch {
+            let ra: Vec<u32> = a[row * info.k..(row + 1) * info.k]
+                .iter()
+                .map(|&d| d as u32)
+                .collect();
+            let rb: Vec<u32> = b[row * info.k..(row + 1) * info.k]
+                .iter()
+                .map(|&d| d as u32)
+                .collect();
+            if ra.iter().all(|&d| d == 0) && rb.iter().all(|&d| d == 0) {
+                continue; // padding row of a partial batch
+            }
+            let mut ops = Ops::default();
+            let prod = crate::bignum::mul::mul_school(&ra, &rb, base, &mut ops);
+            for (i, &d) in prod.iter().take(2 * info.k).enumerate() {
+                out[row * 2 * info.k + i] = d as i32;
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// Result slot a waiting request parks on.
 struct Cell {
     out: Mutex<Option<Vec<u32>>>,

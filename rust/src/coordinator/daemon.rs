@@ -69,17 +69,21 @@
 //! machines and asserts zero-fault triples stay bit-identical at every
 //! offered load.
 
+use super::batcher::{BatchExecutor, BatchingXlaLeaf, SchoolBatchRuntime};
 use super::job::{JobResult, JobSpec};
 use super::scheduler::{RejectKind, Scheduler, SchedulerConfig};
-use crate::algorithms::leaf::LeafRef;
-use crate::algorithms::Algorithm;
+use crate::algorithms::leaf::{LeafMultiplier, LeafRef};
+use crate::algorithms::{Algorithm, ExecMode, ExecPolicy};
 use crate::bignum::{Base, Ops};
 use crate::error::{anyhow, bail, ensure, Error, Result};
 use crate::metrics::{fmt_u64, latency_summary, percentile};
+use crate::sim::Clock;
 use crate::util::frame::FrameCursor;
 use crate::util::Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 // ------------------------------------------------------------- arrivals
@@ -193,6 +197,10 @@ pub struct Request {
     pub mem_cap: Option<u64>,
     /// Relative deadline; `None` falls back to the daemon default.
     pub deadline: Option<Duration>,
+    /// Execution-mode policy (DFS default / auto / BFS). Rides the
+    /// frame's previously-reserved `u16` — old frames carry 0 there,
+    /// which decodes to `Dfs`, so version 1 stays wire-compatible.
+    pub exec_mode: ExecPolicy,
 }
 
 /// Sentinel for "no value" in the fixed-width frame fields.
@@ -208,9 +216,9 @@ impl Request {
     ///
     /// ```text
     /// u32 magic  u8 version  u8 algo(0 hybrid|1 copsim|2 copk)
-    /// u16 reserved  u32 procs  u64 mem_cap(MAX=none)
-    /// u64 deadline_µs(MAX=none)  u32 a_len  u32 b_len
-    /// a_len×u32 digits  b_len×u32 digits
+    /// u16 exec_mode(0 dfs|1 auto|2 bfs)  u32 procs
+    /// u64 mem_cap(MAX=none)  u64 deadline_µs(MAX=none)
+    /// u32 a_len  u32 b_len  a_len×u32 digits  b_len×u32 digits
     /// ```
     ///
     /// The in-process API never serializes; this is the socket contract
@@ -224,7 +232,7 @@ impl Request {
             Some(Algorithm::Copsim) => 1,
             Some(Algorithm::Copk) => 2,
         });
-        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(&self.exec_mode.tag().to_le_bytes());
         out.extend_from_slice(&(self.procs as u32).to_le_bytes());
         out.extend_from_slice(&self.mem_cap.unwrap_or(FRAME_NONE).to_le_bytes());
         let dl = self
@@ -263,7 +271,8 @@ impl Request {
             2 => Some(Algorithm::Copk),
             x => bail!("bad algo tag {x} (0 hybrid, 1 copsim, 2 copk)"),
         };
-        f.take(2)?; // reserved
+        let mode_tag = u16::from_le_bytes(f.take(2)?.try_into().expect("two bytes"));
+        let exec_mode = ExecPolicy::from_tag(mode_tag)?;
         let procs = f.u32()? as usize;
         let mem_cap = match f.u64()? {
             FRAME_NONE => None,
@@ -285,6 +294,7 @@ impl Request {
             algo,
             mem_cap,
             deadline,
+            exec_mode,
         })
     }
 }
@@ -303,6 +313,9 @@ pub enum ShedReason {
     Unfittable,
     /// The job's own `mem_cap` is the binding constraint.
     JobCap,
+    /// The job demanded `exec-mode=bfs` but no BFS level fits its
+    /// memory cap (request `auto` to fall back to DFS instead).
+    BfsCap,
 }
 
 /// Outcome of [`Daemon::submit`]: admitted with a reply channel, or
@@ -332,6 +345,24 @@ pub struct DaemonConfig {
     /// neither blind (0 would never shed until a completion lands) nor
     /// trigger-happy at cold start.
     pub init_service_us: u64,
+    /// Small-job coalescing: requests whose operand width (digits per
+    /// side) is at most this threshold bypass the simulated machine
+    /// entirely and run on the dynamic batcher (`coordinator::batcher`),
+    /// which coalesces concurrent products into batched kernel
+    /// executions. `0` (the default) disables the path — every request
+    /// goes through the scheduler unchanged. Batched results carry a
+    /// **zero cost triple** and `mem_peak = 0`: no machine ran, so
+    /// there is no paper cost to report (the product is still verified
+    /// by the soak suites).
+    pub batch_threshold: usize,
+    /// Worker threads draining the batch queue (used only when
+    /// `batch_threshold > 0`). At least 2, so concurrent requests can
+    /// actually coalesce instead of serializing on one flusher.
+    pub batch_runners: usize,
+    /// Executor behind the batch path; `None` falls back to the
+    /// pure-Rust [`SchoolBatchRuntime`] (always available — the PJRT
+    /// runtime needs compiled artifacts).
+    pub batch_executor: Option<Arc<dyn BatchExecutor>>,
 }
 
 impl Default for DaemonConfig {
@@ -341,6 +372,9 @@ impl Default for DaemonConfig {
             default_deadline: None,
             shed_headroom: 1.0,
             init_service_us: 200,
+            batch_threshold: 0,
+            batch_runners: 2,
+            batch_executor: None,
         }
     }
 }
@@ -360,8 +394,41 @@ pub struct DaemonStats {
     /// Rejected as unfittable (machine-wide or the job's own cap) —
     /// malformed work, not load.
     pub rejected_unfittable: AtomicU64,
+    /// Small jobs completed on the batch path (no machine ran; their
+    /// results carry zero cost triples). Folded into the serving
+    /// report's `completed`, so the accounting identity holds with
+    /// batching on.
+    pub batched_completed: AtomicU64,
+    /// Batch-path jobs whose execution panicked (a broken executor) —
+    /// folded into the report's `failed`.
+    pub batched_failed: AtomicU64,
     /// EWMA of completed jobs' end-to-end wall time, µs (α = 1/8).
     pub ewma_service_us: AtomicU64,
+}
+
+/// One queued small job on the batch path: id, operands, reply
+/// channel, and the submission instant (wall spans submit→complete,
+/// matching the scheduler path).
+type BatchJob = (u64, Vec<u32>, Vec<u32>, Sender<Result<JobResult>>, Instant);
+
+/// The small-job coalescing lane (`DaemonConfig::batch_threshold`): a
+/// bounded queue drained by a couple of worker threads that push every
+/// product through one shared [`BatchingXlaLeaf`] — concurrent small
+/// requests coalesce into batched kernel executions instead of each
+/// paying a machine build + scatter + gather. Dropping it closes the
+/// queue and joins the workers.
+struct BatchPath {
+    tx: Option<SyncSender<BatchJob>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Drop for BatchPath {
+    fn drop(&mut self) {
+        self.tx.take();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 /// The always-on serving daemon: a long-lived [`Scheduler`] plus the
@@ -372,7 +439,8 @@ pub struct Daemon {
     sched: Scheduler,
     cfg: DaemonConfig,
     next_id: AtomicU64,
-    pub stats: DaemonStats,
+    batch: Option<BatchPath>,
+    pub stats: Arc<DaemonStats>,
 }
 
 impl Daemon {
@@ -381,14 +449,82 @@ impl Daemon {
     /// finish their wiring handshake).
     pub fn start(cfg: DaemonConfig, leaf: LeafRef) -> Result<Daemon> {
         let sched = Scheduler::start(cfg.sched.clone(), leaf)?;
-        let stats = DaemonStats::default();
+        let stats = Arc::new(DaemonStats::default());
         stats
             .ewma_service_us
             .store(cfg.init_service_us.max(1), Ordering::Relaxed);
+        let batch = (cfg.batch_threshold > 0).then(|| {
+            let executor = cfg
+                .batch_executor
+                .clone()
+                .unwrap_or_else(|| Arc::new(SchoolBatchRuntime::new(8, 256)));
+            let batcher = Arc::new(BatchingXlaLeaf::with_executor(executor, "school"));
+            let (tx, rx) = sync_channel::<BatchJob>(cfg.sched.max_queue.max(1));
+            let rx = Arc::new(Mutex::new(rx));
+            let base = cfg.sched.base;
+            let engine = cfg.sched.engine;
+            let workers = (0..cfg.batch_runners.max(2))
+                .map(|_| {
+                    let rx = Arc::clone(&rx);
+                    let batcher = Arc::clone(&batcher);
+                    let stats = Arc::clone(&stats);
+                    std::thread::spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok((id, a, b, reply, submitted_at)) = msg else {
+                            break;
+                        };
+                        // The batcher's flush path panics on a broken
+                        // executor; contain that to the one job so a
+                        // bad batch cannot take the worker down.
+                        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            let mut ops = Ops::default();
+                            let mut prod = batcher.mul(&a, &b, base, &mut ops);
+                            let keep = crate::bignum::core::normalized_len(&prod).max(1);
+                            prod.truncate(keep);
+                            prod
+                        }));
+                        let res = match out {
+                            Ok(product) => {
+                                stats.batched_completed.fetch_add(1, Ordering::Relaxed);
+                                Ok(JobResult {
+                                    id,
+                                    product,
+                                    // No parallel scheme ran — the lane is a
+                                    // sequential batched leaf. Report the
+                                    // DFS default and a zero cost triple.
+                                    algo: Algorithm::Copsim,
+                                    exec_mode: ExecMode::Dfs,
+                                    engine,
+                                    cost: Clock::default(),
+                                    mem_peak: 0,
+                                    wall: submitted_at.elapsed(),
+                                    shard: None,
+                                    attempts: 1,
+                                    faults_survived: 0,
+                                })
+                            }
+                            Err(_) => {
+                                stats.batched_failed.fetch_add(1, Ordering::Relaxed);
+                                Err(anyhow!("job {id}: batched execution panicked"))
+                            }
+                        };
+                        let _ = reply.send(res);
+                    })
+                })
+                .collect();
+            BatchPath {
+                tx: Some(tx),
+                workers,
+            }
+        });
         Ok(Daemon {
             sched,
             cfg,
             next_id: AtomicU64::new(0),
+            batch,
             stats,
         })
     }
@@ -435,6 +571,33 @@ impl Daemon {
     pub fn submit(&self, req: Request) -> Submission {
         self.stats.offered.fetch_add(1, Ordering::Relaxed);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        // Small-job lane: below the threshold the request skips the
+        // simulated machine entirely and coalesces on the batcher. The
+        // lane's queue bound is the same `max_queue`, shed as
+        // QueueFull; deadlines don't apply (there is no queue-wait
+        // problem a sub-threshold schoolbook product can have).
+        if let Some(bp) = &self.batch {
+            if req.a.len().max(req.b.len()) <= self.cfg.batch_threshold {
+                let (reply_tx, reply_rx) = channel();
+                let job = (id, req.a, req.b, reply_tx, Instant::now());
+                return match bp.tx.as_ref().expect("batch path live").try_send(job) {
+                    Ok(()) => {
+                        self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                        Submission::Admitted(reply_rx)
+                    }
+                    Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                        self.stats.shed_queue_full.fetch_add(1, Ordering::Relaxed);
+                        Submission::Shed {
+                            reason: ShedReason::QueueFull,
+                            error: anyhow!(
+                                "job {id} shed: batch queue full ({} slots)",
+                                self.cfg.sched.max_queue.max(1)
+                            ),
+                        }
+                    }
+                };
+            }
+        }
         let deadline = req.deadline.or(self.cfg.default_deadline);
         if let (Some(dl), true) = (deadline, self.cfg.shed_headroom > 0.0) {
             let est = self.estimated_queue_delay();
@@ -455,6 +618,7 @@ impl Daemon {
         spec.algo = req.algo;
         spec.mem_cap = req.mem_cap;
         spec.deadline = deadline;
+        spec.exec_mode = req.exec_mode;
         match self.sched.try_submit(spec) {
             Ok(rx) => {
                 self.stats.admitted.fetch_add(1, Ordering::Relaxed);
@@ -474,6 +638,10 @@ impl Daemon {
                         self.stats.rejected_unfittable.fetch_add(1, Ordering::Relaxed);
                         ShedReason::JobCap
                     }
+                    RejectKind::BfsUnfittable => {
+                        self.stats.rejected_unfittable.fetch_add(1, Ordering::Relaxed);
+                        ShedReason::BfsCap
+                    }
                 };
                 Submission::Shed {
                     reason,
@@ -483,8 +651,10 @@ impl Daemon {
         }
     }
 
-    /// Drain in-flight jobs and tear down the scheduler.
-    pub fn shutdown(self) -> Result<()> {
+    /// Drain in-flight jobs and tear down the scheduler (closing the
+    /// batch lane first, so queued small jobs finish their replies).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.batch.take();
         self.sched.shutdown()
     }
 }
@@ -508,6 +678,8 @@ pub struct Workload {
     /// Requested processors per job.
     pub procs: usize,
     pub algo: Option<Algorithm>,
+    /// Execution-mode policy stamped on every request (`Dfs` default).
+    pub exec_mode: ExecPolicy,
 }
 
 impl Default for Workload {
@@ -518,6 +690,7 @@ impl Default for Workload {
             base_log2: 16,
             procs: 4,
             algo: Some(Algorithm::Copsim),
+            exec_mode: ExecPolicy::Dfs,
         }
     }
 }
@@ -537,6 +710,7 @@ impl Workload {
             algo: self.algo,
             mem_cap: None,
             deadline: None,
+            exec_mode: self.exec_mode,
         }
     }
 
@@ -548,6 +722,7 @@ impl Workload {
         let mut spec = JobSpec::new(id, req.a, req.b);
         spec.procs = req.procs;
         spec.algo = req.algo;
+        spec.exec_mode = req.exec_mode;
         spec
     }
 }
@@ -670,10 +845,14 @@ struct Counters {
 fn snapshot(d: &Daemon) -> Counters {
     let s = &d.stats;
     let ss = &d.scheduler().stats;
+    // The batch lane bypasses the scheduler, so its completions and
+    // failures fold in here to keep the accounting identity
+    // offered == completed + failed + shed + rejected.
     Counters {
         offered: s.offered.load(Ordering::Relaxed),
-        completed: ss.completed.load(Ordering::Relaxed),
-        failed: ss.failed.load(Ordering::Relaxed),
+        completed: ss.completed.load(Ordering::Relaxed)
+            + s.batched_completed.load(Ordering::Relaxed),
+        failed: ss.failed.load(Ordering::Relaxed) + s.batched_failed.load(Ordering::Relaxed),
         shed_slo: s.shed_slo.load(Ordering::Relaxed),
         shed_queue_full: s.shed_queue_full.load(Ordering::Relaxed),
         shed_expired: ss.shed_expired.load(Ordering::Relaxed),
@@ -822,6 +1001,7 @@ mod tests {
             algo: Some(Algorithm::Copk),
             mem_cap: Some(4096),
             deadline: Some(Duration::from_millis(250)),
+            exec_mode: ExecPolicy::Bfs,
         };
         let buf = req.encode();
         assert_eq!(Request::decode(&buf).unwrap(), req);
@@ -833,6 +1013,14 @@ mod tests {
             ..req.clone()
         };
         assert_eq!(Request::decode(&bare.encode()).unwrap(), bare);
+        // Every exec-mode policy survives the previously-reserved u16.
+        for pol in [ExecPolicy::Dfs, ExecPolicy::Auto, ExecPolicy::Bfs] {
+            let r = Request {
+                exec_mode: pol,
+                ..req.clone()
+            };
+            assert_eq!(Request::decode(&r.encode()).unwrap().exec_mode, pol);
+        }
         // Corrupt magic, truncation, and trailing garbage all reject.
         let mut bad = buf.clone();
         bad[0] ^= 0xFF;
@@ -841,6 +1029,12 @@ mod tests {
         let mut long = buf.clone();
         long.push(0);
         assert!(Request::decode(&long).is_err(), "trailing garbage");
+        // An unknown exec-mode tag (the reserved u16 at offset 6)
+        // rejects rather than silently downgrading.
+        let mut badmode = buf.clone();
+        badmode[6] = 0xFF;
+        let err = Request::decode(&badmode).unwrap_err().to_string();
+        assert!(err.contains("exec-mode"), "want exec-mode error, got: {err}");
     }
 
     #[test]
@@ -980,6 +1174,71 @@ mod tests {
         assert_eq!(rep.results.len(), 16);
         assert!(rep.summary().contains("p50="), "got: {}", rep.summary());
         assert!(rep.check_shed_budget(0.0).is_ok());
+        daemon.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batch_lane_coalesces_small_jobs_and_balances() {
+        // Threshold above the workload width: every submission routes
+        // through the batch lane, never touching the scheduler queue.
+        let daemon = Daemon::start(
+            DaemonConfig {
+                sched: SchedulerConfig {
+                    procs: 4,
+                    runners: 1,
+                    ..Default::default()
+                },
+                batch_threshold: 64,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        )
+        .unwrap();
+        let load = OpenLoop {
+            arrivals: ArrivalGen::poisson(11, 50_000.0).unwrap(),
+            jobs: 24,
+            workload: Workload {
+                n: 32,
+                ..Workload::default()
+            },
+            verify: true,
+            collect: true,
+        };
+        let rep = run_open_loop(&daemon, &load).unwrap();
+        assert_eq!(rep.offered, 24);
+        assert_eq!(
+            rep.completed + rep.failed + rep.shed_total() + rep.rejected_unfittable,
+            rep.offered,
+            "batched jobs must fold into the same accounting identity"
+        );
+        assert_eq!(rep.completed, 24);
+        assert_eq!(
+            daemon.stats.batched_completed.load(Ordering::Relaxed),
+            24,
+            "all jobs sit under the threshold, so all must batch"
+        );
+        assert_eq!(
+            daemon.scheduler().stats.completed.load(Ordering::Relaxed),
+            0,
+            "the scheduler must never see a batched job"
+        );
+        // Batched results bypass the machine model: zero cost triple.
+        for res in &rep.results {
+            assert_eq!(res.cost, Clock::default());
+            assert_eq!(res.mem_peak, 0);
+            assert_eq!(res.exec_mode, ExecMode::Dfs);
+        }
+        // Above-threshold jobs still take the scheduler path.
+        let big = Workload {
+            n: 128,
+            ..Workload::default()
+        };
+        let Submission::Admitted(rx) = daemon.submit(big.request(99)) else {
+            panic!("above-threshold job must take the scheduler path");
+        };
+        let res = rx.recv().unwrap().unwrap();
+        assert!(res.cost.ops > 0, "scheduler path must charge real cost");
+        assert_eq!(daemon.stats.batched_completed.load(Ordering::Relaxed), 24);
         daemon.shutdown().unwrap();
     }
 }

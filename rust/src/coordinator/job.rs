@@ -1,6 +1,6 @@
 //! Job types and input normalization.
 
-use crate::algorithms::Algorithm;
+use crate::algorithms::{Algorithm, ExecMode, ExecPolicy};
 use crate::config::EngineKind;
 use crate::sim::{Clock, ProcId, TopologyKind};
 use crate::util::{copk_bfs_levels, is_copk_procs, next_pow2};
@@ -34,6 +34,12 @@ pub struct JobSpec {
     /// serving daemon's SLO path — see `coordinator::daemon`). `None`
     /// (the default) never expires.
     pub deadline: Option<Duration>,
+    /// Execution-mode policy (`--exec-mode=`): `Dfs` (the default, the
+    /// paper schedule — bit-identical to pre-mode builds), `Auto`
+    /// (spend surplus shard memory on the BFS variants whenever
+    /// `theory::best_mode` predicts a BW win), or `Bfs` (request BFS;
+    /// the scheduler rejects it distinctly when no level fits).
+    pub exec_mode: ExecPolicy,
 }
 
 impl JobSpec {
@@ -48,6 +54,7 @@ impl JobSpec {
             engine: EngineKind::Sim,
             topology: TopologyKind::FullyConnected,
             deadline: None,
+            exec_mode: ExecPolicy::Dfs,
         }
     }
 
@@ -85,6 +92,9 @@ pub struct JobResult {
     pub product: Vec<u32>,
     /// Scheme that ran.
     pub algo: Algorithm,
+    /// Execution mode the run resolved to (`Dfs`, or `Bfs { levels }`
+    /// when the policy and the machine's memory allowed it).
+    pub exec_mode: ExecMode,
     /// Engine that executed the machine model.
     pub engine: EngineKind,
     /// Critical-path cost (identical across engines by construction).

@@ -30,7 +30,7 @@ pub mod job;
 pub mod router;
 pub mod scheduler;
 
-pub use batcher::{BatchExecutor, BatchingXlaLeaf};
+pub use batcher::{BatchExecutor, BatchingXlaLeaf, SchoolBatchRuntime};
 pub use daemon::{
     run_open_loop, ArrivalGen, ArrivalKind, Daemon, DaemonConfig, DaemonStats, OpenLoop, Request,
     ServingReport, ShedReason, Submission, Workload,

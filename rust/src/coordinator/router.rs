@@ -2,7 +2,7 @@
 
 use super::job::{JobResult, JobSpec};
 use crate::algorithms::leaf::{LeafMultiplier, LeafRef};
-use crate::algorithms::{copk, copsim, hybrid, Algorithm};
+use crate::algorithms::{hybrid, mul_with_mode, resolve_mode, Algorithm, ExecMode};
 use crate::bignum::core::normalized_len;
 use crate::bignum::Base;
 use crate::config::EngineKind;
@@ -165,7 +165,7 @@ pub fn execute_on<M: MachineApi>(
     spec: &JobSpec,
     seq: &Seq,
     leaf: &LeafRef,
-) -> Result<(Vec<u32>, Algorithm)> {
+) -> Result<(Vec<u32>, Algorithm, ExecMode)> {
     let p = seq.len();
     let n = spec.padded_width_for(p);
     let w = n / p;
@@ -177,17 +177,22 @@ pub fn execute_on<M: MachineApi>(
     let da = DistInt::scatter(machine, seq, &a, w)?;
     let db = DistInt::scatter(machine, seq, &b, w)?;
 
-    let (c, algo) = match spec.algo {
-        Some(Algorithm::Copsim) => (copsim(machine, seq, da, db, leaf)?, Algorithm::Copsim),
-        Some(Algorithm::Copk) => (copk(machine, seq, da, db, leaf)?, Algorithm::Copk),
-        None => hybrid::hybrid_mul(machine, seq, da, db, leaf, time_model)?,
+    // The mode is resolved HERE, at execution time, from data every
+    // engine sees identically — (policy, n, p, mem_cap) — so the
+    // three-way differential stays bit-for-bit across engines.
+    let (c, algo, mode) = match spec.algo {
+        Some(algo) => {
+            let mode = resolve_mode(spec.exec_mode, algo, n as u64, p as u64, machine.mem_cap());
+            (mul_with_mode(machine, seq, da, db, leaf, algo, mode)?, algo, mode)
+        }
+        None => hybrid::hybrid_mul_with_mode(machine, seq, da, db, leaf, time_model, spec.exec_mode)?,
     };
 
     let mut product = c.gather(machine)?;
     c.free(machine);
     let keep = normalized_len(&product).max(1);
     product.truncate(keep);
-    Ok((product, algo))
+    Ok((product, algo, mode))
 }
 
 /// Execute one job on a fresh machine of the engine (and network
@@ -200,11 +205,12 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
     match spec.engine {
         EngineKind::Sim => {
             let mut machine = Machine::with_topology(spec.procs, mem_cap, cfg.base, topo);
-            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
+            let (product, algo, mode) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             Ok(JobResult {
                 id: spec.id,
                 product,
                 algo,
+                exec_mode: mode,
                 engine: spec.engine,
                 cost: machine.critical(),
                 mem_peak: machine.mem_peak_max(),
@@ -216,12 +222,13 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
         }
         EngineKind::Threads => {
             let mut machine = ThreadedMachine::with_topology(spec.procs, mem_cap, cfg.base, topo);
-            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
+            let (product, algo, mode) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             let report = machine.finish()?;
             Ok(JobResult {
                 id: spec.id,
                 product,
                 algo,
+                exec_mode: mode,
                 engine: spec.engine,
                 cost: report.critical,
                 mem_peak: report.mem_peak_max,
@@ -233,12 +240,13 @@ fn run_job(cfg: &CoordinatorConfig, spec: &JobSpec, leaf: &LeafRef) -> Result<Jo
         }
         EngineKind::Sockets => {
             let mut machine = SocketMachine::with_topology(spec.procs, mem_cap, cfg.base, topo)?;
-            let (product, algo) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
+            let (product, algo, mode) = execute_on(&mut machine, &cfg.time_model, spec, &seq, leaf)?;
             let report = machine.finish()?;
             Ok(JobResult {
                 id: spec.id,
                 product,
                 algo,
+                exec_mode: mode,
                 engine: spec.engine,
                 cost: report.critical,
                 mem_peak: report.mem_peak_max,

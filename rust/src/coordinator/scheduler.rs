@@ -93,7 +93,7 @@ use super::job::{JobResult, JobSpec};
 use super::router::execute_on;
 use crate::algorithms::copsim::is_pow4;
 use crate::algorithms::leaf::LeafRef;
-use crate::algorithms::Algorithm;
+use crate::algorithms::{hybrid, Algorithm, ExecPolicy};
 use crate::bignum::{Base, Ops};
 use crate::config::EngineKind;
 use crate::error::{anyhow, bail, Context, Error, Result};
@@ -103,6 +103,7 @@ use crate::sim::{
 };
 use crate::theory::{self, TimeModel};
 use crate::util::is_copk_procs;
+use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -234,6 +235,77 @@ impl PendingPayload {
     }
 }
 
+/// Per-job memory ledger: mirrors the shared machine's per-processor
+/// slot accounting for ONE job's slots, so a job carrying its own
+/// `JobSpec::mem_cap` (tighter than the machine-wide cap) is enforced
+/// *mid-run* on the shared machine — not just at admission. This is
+/// what makes the memory-adaptive execution modes safe on shards: a
+/// BFS schedule's replicated operands charge this ledger, so a mode
+/// that would blow the job's cap errors (and retries up the shard
+/// ladder) instead of silently borrowing machine-wide headroom.
+///
+/// Slot sizes are tracked exactly for every op the algorithms issue;
+/// the one estimate is `compute_slot` output, charged as the sum of
+/// its *consumed* inputs — exact for the only algorithm-level caller
+/// (`leaf_multiply`: inputs `2w`, output `2w`, consume = true).
+struct JobLedger {
+    /// The job's effective per-processor cap in words.
+    cap: u64,
+    /// Live slot sizes, keyed by owning processor and slot id.
+    sizes: HashMap<(ProcId, Slot), u64>,
+    /// Words currently resident per shard processor.
+    used: HashMap<ProcId, u64>,
+    /// High-water mark of `used` over the job, max across processors.
+    peak: u64,
+}
+
+impl JobLedger {
+    fn new(cap: u64) -> Self {
+        JobLedger {
+            cap,
+            sizes: HashMap::new(),
+            used: HashMap::new(),
+            peak: 0,
+        }
+    }
+
+    /// Would `add` more words on `p` exceed the job's own cap?
+    fn check(&self, p: ProcId, add: u64) -> Result<()> {
+        let used = self.used.get(&p).copied().unwrap_or(0);
+        if used.saturating_add(add) > self.cap {
+            bail!(
+                "processor {p}: job mem_cap exceeded ({used} + {add} > {} words \
+                 — the job's own cap; the machine-wide ledger may have room)",
+                self.cap
+            );
+        }
+        Ok(())
+    }
+
+    fn charge(&mut self, p: ProcId, slot: Slot, size: u64) {
+        self.sizes.insert((p, slot), size);
+        let u = self.used.entry(p).or_insert(0);
+        *u += size;
+        self.peak = self.peak.max(*u);
+    }
+
+    fn release(&mut self, p: ProcId, slot: Slot) {
+        let size = self.sizes.remove(&(p, slot)).unwrap_or(0);
+        if let Some(u) = self.used.get_mut(&p) {
+            *u = u.saturating_sub(size);
+        }
+    }
+
+    fn size_of(&self, p: ProcId, slot: Slot) -> u64 {
+        self.sizes.get(&(p, slot)).copied().unwrap_or(0)
+    }
+
+    fn purge(&mut self, p: ProcId) {
+        self.sizes.retain(|&(q, _), _| q != p);
+        self.used.insert(p, 0);
+    }
+}
+
 /// A job's handle onto the shared machine: every [`MachineApi`] call
 /// locks the machine for exactly that call. Runners hold one each; the
 /// shard discipline (disjoint `Seq`s) is what keeps jobs independent,
@@ -241,6 +313,14 @@ impl PendingPayload {
 /// the threaded engine its consistent global program order.
 struct ShardView {
     machine: Arc<Mutex<EngineMachine>>,
+    /// Present exactly when the job's own `mem_cap` is *tighter* than
+    /// the machine-wide cap; `None` leaves every call a transparent
+    /// forward (the pre-ledger behavior, bit for bit). When present,
+    /// [`MachineApi::mem_cap`] reports the job's cap — so the
+    /// algorithms' MI gates and the execution-mode resolution see the
+    /// same memory bound a dedicated machine built at the job's cap
+    /// would report.
+    ledger: Option<JobLedger>,
 }
 
 impl ShardView {
@@ -255,6 +335,9 @@ impl MachineApi for ShardView {
         on_engine!(g, m => MachineApi::n_procs(m))
     }
     fn mem_cap(&self) -> u64 {
+        if let Some(l) = &self.ledger {
+            return l.cap;
+        }
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::mem_cap(m))
     }
@@ -268,10 +351,23 @@ impl MachineApi for ShardView {
     }
 
     fn alloc(&mut self, p: ProcId, data: Vec<u32>) -> Result<Slot> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::alloc(m, p, data))
+        let size = data.len() as u64;
+        if let Some(l) = &self.ledger {
+            l.check(p, size)?;
+        }
+        let slot = {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::alloc(m, p, data))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            l.charge(p, slot, size);
+        }
+        Ok(slot)
     }
     fn free(&mut self, p: ProcId, slot: Slot) {
+        if let Some(l) = &mut self.ledger {
+            l.release(p, slot);
+        }
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::free(m, p, slot))
     }
@@ -325,8 +421,19 @@ impl MachineApi for ShardView {
         pending.wait_into(p, buf)
     }
     fn replace(&mut self, p: ProcId, slot: Slot, data: Vec<u32>) -> Result<()> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::replace(m, p, slot, data))
+        let size = data.len() as u64;
+        if let Some(l) = &self.ledger {
+            l.check(p, size.saturating_sub(l.size_of(p, slot)))?;
+        }
+        {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::replace(m, p, slot, data))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            l.release(p, slot);
+            l.charge(p, slot, size);
+        }
+        Ok(())
     }
 
     fn compute(&mut self, p: ProcId, ops: u64) {
@@ -374,21 +481,74 @@ impl MachineApi for ShardView {
         consume: bool,
         f: SlotComputation,
     ) -> Result<Slot> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::compute_slot(m, p, inputs, consume, f))
+        // Output charged as the sum of the inputs (exact for the leaf
+        // multiplier, the only algorithm-level caller); a consuming
+        // call frees as the output materializes, so the net check is
+        // the difference.
+        let out_est = if let Some(l) = &self.ledger {
+            let sum: u64 = inputs.iter().map(|&s| l.size_of(p, s)).sum();
+            l.check(p, if consume { 0 } else { sum })?;
+            sum
+        } else {
+            0
+        };
+        let slot = {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::compute_slot(m, p, inputs, consume, f))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            if consume {
+                for &s in inputs {
+                    l.release(p, s);
+                }
+            }
+            l.charge(p, slot, out_est);
+        }
+        Ok(slot)
     }
 
     fn send(&mut self, src: ProcId, dst: ProcId, data: Vec<u32>) -> Result<Slot> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::send(m, src, dst, data))
+        let size = data.len() as u64;
+        if let Some(l) = &self.ledger {
+            l.check(dst, size)?;
+        }
+        let slot = {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::send(m, src, dst, data))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            l.charge(dst, slot, size);
+        }
+        Ok(slot)
     }
     fn send_copy(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::send_copy(m, src, dst, slot))
+        let size = self.ledger.as_ref().map_or(0, |l| l.size_of(src, slot));
+        if let Some(l) = &self.ledger {
+            l.check(dst, size)?;
+        }
+        let out = {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::send_copy(m, src, dst, slot))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            l.charge(dst, out, size);
+        }
+        Ok(out)
     }
     fn send_move(&mut self, src: ProcId, dst: ProcId, slot: Slot) -> Result<Slot> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::send_move(m, src, dst, slot))
+        let size = self.ledger.as_ref().map_or(0, |l| l.size_of(src, slot));
+        if let Some(l) = &self.ledger {
+            l.check(dst, size)?;
+        }
+        let out = {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::send_move(m, src, dst, slot))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            l.release(src, slot);
+            l.charge(dst, out, size);
+        }
+        Ok(out)
     }
     fn send_range(
         &mut self,
@@ -397,8 +557,18 @@ impl MachineApi for ShardView {
         slot: Slot,
         range: Range<usize>,
     ) -> Result<Slot> {
-        let mut g = self.lock();
-        on_engine!(g, m => MachineApi::send_range(m, src, dst, slot, range))
+        let size = range.len() as u64;
+        if let Some(l) = &self.ledger {
+            l.check(dst, size)?;
+        }
+        let out = {
+            let mut g = self.lock();
+            on_engine!(g, m => MachineApi::send_range(m, src, dst, slot, range))
+        }?;
+        if let Some(l) = &mut self.ledger {
+            l.charge(dst, out, size);
+        }
+        Ok(out)
     }
     fn barrier(&mut self, procs: &[ProcId]) -> Result<()> {
         let mut g = self.lock();
@@ -457,6 +627,9 @@ impl MachineApi for ShardView {
         on_engine!(g, m => MachineApi::mem_used_total(m))
     }
     fn purge(&mut self, p: ProcId) {
+        if let Some(l) = &mut self.ledger {
+            l.purge(p);
+        }
         let mut g = self.lock();
         on_engine!(g, m => MachineApi::purge(m, p))
     }
@@ -712,6 +885,11 @@ pub enum RejectKind {
     /// the machine-wide cap alone would admit it, but every accepted
     /// shape's MI footprint exceeds the job's cap.
     JobCapUnfittable,
+    /// The job explicitly requested `ExecPolicy::Bfs`, but no BFS
+    /// level fits its effective memory cap on the planned shard.
+    /// `ExecPolicy::Auto` jobs are never rejected for this — they
+    /// downgrade to DFS silently at mode resolution.
+    BfsUnfittable,
 }
 
 /// A typed admission rejection: the kind plus the human-readable error
@@ -944,6 +1122,30 @@ impl Scheduler {
                 });
             }
         };
+        // Explicit-BFS admission: the job *demands* the memory-hungry
+        // schedule, so turn it away (distinctly) when no BFS level fits
+        // the planned shard under its effective cap. `Auto` never hits
+        // this — it resolves to DFS at execution time instead.
+        if spec.exec_mode == ExecPolicy::Bfs {
+            let n = spec.padded_width_for(shard_size) as u64;
+            let p = shard_size as u64;
+            let algo = match spec.algo {
+                Some(a) => Some(a),
+                None => hybrid::choose_algorithm(n, p, cap, &self.cfg.time_model).ok(),
+            };
+            let levels = algo.map_or(0, |a| theory::bfs_levels(a, n, p, cap));
+            if levels == 0 {
+                let e = anyhow!(
+                    "job {} requested exec-mode=bfs but no BFS level fits its \
+                     cap of {} words/proc on a {}-processor shard (n = {n} \
+                     padded); request exec-mode=auto to fall back to DFS",
+                    spec.id,
+                    cap,
+                    shard_size
+                );
+                return Err(self.rejected(RejectKind::BfsUnfittable, e));
+            }
+        }
         self.stats.admitted.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = channel();
         self.tx
@@ -1132,8 +1334,13 @@ fn run_sharded(
     shard: &[ProcId],
     leaf: &LeafRef,
 ) -> Result<JobResult> {
+    // The job ledger engages only when the job's own cap is tighter
+    // than the machine's — otherwise every call forwards untouched and
+    // sharded execution stays bit-identical to the pre-ledger path.
+    let cap = effective_cap(spec, cfg.mem_cap);
     let mut view = ShardView {
         machine: Arc::clone(shared),
+        ledger: (cap < cfg.mem_cap).then(|| JobLedger::new(cap)),
     };
     // Uniform clock baseline: max-plus clock evolution commutes with a
     // uniform shift, so everything after this barrier is exactly a
@@ -1142,7 +1349,7 @@ fn run_sharded(
     view.barrier(shard)?;
     let baseline = view.proc_view(shard[0])?.clock;
     let seq = Seq(shard.to_vec());
-    let (product, algo) = execute_on(&mut view, &cfg.time_model, spec, &seq, leaf)?;
+    let (product, algo, mode) = execute_on(&mut view, &cfg.time_model, spec, &seq, leaf)?;
     let mut end = Clock::default();
     let mut mem_peak = 0u64;
     for &p in shard {
@@ -1150,10 +1357,17 @@ fn run_sharded(
         end = end.join(&v.clock);
         mem_peak = mem_peak.max(v.mem_peak);
     }
+    // A capped job's ledger knows its OWN high-water mark — report
+    // that instead of the shared machine's lifetime peak (which may
+    // include earlier jobs on the same shard).
+    if let Some(l) = &view.ledger {
+        mem_peak = l.peak;
+    }
     Ok(JobResult {
         id: spec.id,
         product,
         algo,
+        exec_mode: mode,
         engine: cfg.engine,
         cost: end.since(&baseline),
         mem_peak,
@@ -1168,6 +1382,7 @@ fn run_sharded(
 mod tests {
     use super::*;
     use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+    use crate::algorithms::ExecMode;
     use crate::bignum::mul;
     use crate::util::Rng;
 
@@ -1359,6 +1574,148 @@ mod tests {
         let rej = sched.try_submit(spec).unwrap_err();
         assert_eq!(rej.kind, RejectKind::Unfittable);
         sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn job_ledger_charges_checks_and_peaks() {
+        let mut l = JobLedger::new(100);
+        assert!(l.check(0, 60).is_ok());
+        l.charge(0, 1, 60);
+        assert_eq!(l.peak, 60);
+        // Over the cap: the check names the job's own cap.
+        let e = l.check(0, 50).unwrap_err().to_string();
+        assert!(e.contains("job mem_cap exceeded"), "got: {e}");
+        // Another processor has its own budget.
+        assert!(l.check(1, 100).is_ok());
+        l.charge(1, 1, 100);
+        assert_eq!(l.peak, 100);
+        // Release frees the headroom; peak is a high-water mark.
+        l.release(0, 1);
+        assert!(l.check(0, 100).is_ok());
+        assert_eq!(l.peak, 100);
+        l.purge(1);
+        assert!(l.check(1, 100).is_ok());
+    }
+
+    #[test]
+    fn explicit_bfs_rejected_distinctly_when_no_level_fits() {
+        // COPSIM n = 1024 on a 4-processor shard: the MI footprint
+        // 12n/√4 = 6144 fits an 8192-word cap (DFS runs fine), but the
+        // fused-BFS gate needs 24n/√4 = 12288 — no BFS level fits.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 4,
+                mem_cap: 8192,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        )
+        .unwrap();
+        let mut spec = JobSpec::new(0, vec![1; 1024], vec![1; 1024]);
+        spec.algo = Some(Algorithm::Copsim);
+        spec.exec_mode = ExecPolicy::Bfs;
+        let rej = sched.try_submit(spec.clone()).unwrap_err();
+        assert_eq!(rej.kind, RejectKind::BfsUnfittable);
+        assert!(
+            rej.error.to_string().contains("exec-mode=bfs"),
+            "distinct message, got: {}",
+            rej.error
+        );
+        // The same job under Auto is admitted and silently downgrades
+        // to the DFS schedule at mode resolution.
+        spec.id = 1;
+        spec.exec_mode = ExecPolicy::Auto;
+        let res = sched.submit_blocking(spec).unwrap();
+        assert_eq!(res.exec_mode, ExecMode::Dfs);
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn auto_mode_spends_memory_to_cut_bandwidth() {
+        // The roomy COPSIM cell: P = 16, n = 1024, cap = 8192 — over 2×
+        // the MI footprint (12n/√16 = 3072) and past the fused gate
+        // (24n/√16 = 6144). Auto must resolve Bfs{2} (log₄ 16 levels),
+        // keep the product and T identical to DFS, and charge strictly
+        // fewer words.
+        let cfg = SchedulerConfig {
+            procs: 16,
+            mem_cap: 8192,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
+        let mut rng = Rng::new(0xBF5);
+        let a = rng.digits(1024, 16);
+        let b = rng.digits(1024, 16);
+        let want = reference_product(&a, &b);
+        let mut dfs = JobSpec::new(0, a.clone(), b.clone());
+        dfs.procs = 16;
+        dfs.algo = Some(Algorithm::Copsim);
+        let mut auto = dfs.clone();
+        auto.id = 1;
+        auto.exec_mode = ExecPolicy::Auto;
+        let dfs_res = sched.submit_blocking(dfs).unwrap();
+        let auto_res = sched.submit_blocking(auto.clone()).unwrap();
+        sched.shutdown().unwrap();
+        assert_eq!(dfs_res.exec_mode, ExecMode::Dfs);
+        assert_eq!(auto_res.exec_mode, ExecMode::Bfs { levels: 2 });
+        assert_eq!(dfs_res.product, want);
+        assert_eq!(auto_res.product, want);
+        // Same local op schedule, strictly less communication.
+        assert_eq!(auto_res.cost.ops, dfs_res.cost.ops, "T must not move");
+        assert!(
+            auto_res.cost.words < dfs_res.cost.words,
+            "BFS must charge strictly fewer words ({} vs {})",
+            auto_res.cost.words,
+            dfs_res.cost.words
+        );
+        // And the sharded BFS triple equals a dedicated capped machine.
+        let mut solo = Machine::new(16, cfg.mem_cap, cfg.base);
+        let seq = Seq::range(16);
+        let leaf = leaf_ref(SchoolLeaf);
+        execute_on(&mut solo, &cfg.time_model, &auto, &seq, &leaf).unwrap();
+        assert_eq!(auto_res.cost, solo.critical(), "BFS cost identity");
+    }
+
+    #[test]
+    fn job_own_cap_gates_mode_resolution_like_a_dedicated_machine() {
+        // Machine cap is roomy (would give Bfs{2}); the job's OWN cap
+        // of 4096 sits between the MI footprint (3072) and the fused
+        // gate (6144), so the ledgered shard must report 4096 and Auto
+        // must resolve Dfs — exactly what a dedicated 4096-cap machine
+        // would do.
+        let sched = Scheduler::start(
+            SchedulerConfig {
+                procs: 16,
+                mem_cap: 1 << 20,
+                ..Default::default()
+            },
+            leaf_ref(SchoolLeaf),
+        )
+        .unwrap();
+        let mut rng = Rng::new(0xCA9);
+        let a = rng.digits(1024, 16);
+        let b = rng.digits(1024, 16);
+        let want = reference_product(&a, &b);
+        let mut spec = JobSpec::new(0, a, b);
+        spec.procs = 16;
+        spec.algo = Some(Algorithm::Copsim);
+        spec.exec_mode = ExecPolicy::Auto;
+        spec.mem_cap = Some(4096);
+        let res = sched.submit_blocking(spec).unwrap();
+        sched.shutdown().unwrap();
+        assert_eq!(res.product, want);
+        assert_eq!(
+            res.exec_mode,
+            ExecMode::Dfs,
+            "the job's own cap must gate the upgrade"
+        );
+        // The ledger reports the job's own high-water mark, within cap.
+        assert!(res.mem_peak > 0, "ledgered peak must be recorded");
+        assert!(
+            res.mem_peak <= 4096,
+            "peak {} must respect the job's own cap",
+            res.mem_peak
+        );
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod engines;
 pub mod primitives;
 pub mod scheduler;
 pub mod serving;
+pub mod strong_scaling;
 pub mod systems;
 pub mod topologies;
 
@@ -206,6 +207,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "serving daemon: latency vs offered load + zero-fault cost identity",
             run: serving::e19_serving,
         },
+        Experiment {
+            id: "E20",
+            paper_ref: "§4/CAPS BFS-DFS tradeoff",
+            title: "strong scaling at fixed per-proc memory: cliff, MI range, BFS range",
+            run: strong_scaling::e20_strong_scaling,
+        },
     ]
 }
 
@@ -230,10 +237,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 19);
+        assert_eq!(reg.len(), 20);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 19);
+        assert_eq!(ids.len(), 20);
     }
 
     #[test]

@@ -57,6 +57,7 @@ fn workload() -> Workload {
         base_log2: 16,
         procs: 4,
         algo: Some(crate::algorithms::Algorithm::Copsim),
+        exec_mode: crate::algorithms::ExecPolicy::Dfs,
     }
 }
 

@@ -1,0 +1,394 @@
+//! E20 — strong scaling under a fixed per-processor memory budget,
+//! with memory-adaptive BFS/DFS execution (ISSUE 9).
+//!
+//! Classic strong scaling (E10) grants every cell the memory the
+//! theorems assume (`M = Θ(n/P)` with the theorem's own constant).
+//! This experiment asks the operational question instead: with `n`
+//! **fixed** and every processor owning the **same** `M` words, what
+//! happens as `P` grows?
+//!
+//! * **Memory-bound cliff** — below a critical `P`, no schedule fits:
+//!   the MI footprint `12n/√P` exceeds `M` and the stepping fallback
+//!   needs `80n/P`, which is even larger at small `P`. Those cells are
+//!   *infeasible*, reported as the cliff edge rather than silently
+//!   skipped.
+//! * **Perfect-scaling range** — once `12n/√P ≤ M`, the MI schedule
+//!   runs and per-processor bandwidth tracks `Θ(n/√P)`: the normalized
+//!   column `BW·√P/n` stays flat across the range.
+//! * **BFS range** — once the surplus reaches the fused-distribution
+//!   gate (`24n/√P ≤ M`), `--exec-mode=auto` spends it: the
+//!   breadth-first variants elide repartition rounds and charged BW
+//!   drops strictly below DFS at bit-equal `T` (`theory::best_mode`).
+//!
+//! Every feasible cell is executed on the cost-model simulator and the
+//! threaded engine (plus the socket engine when a worker binary
+//! resolves), on every topology, in both modes; products and cost
+//! triples are asserted bit-identical across engines before a row is
+//! reported. The second table pins the measured-vs-predicted BW story
+//! per (algorithm, regime): BFS strictly beats DFS exactly where
+//! `theory::bfs_levels` says the memory allows it, and COPK's MI
+//! regime is mode-invariant (DESIGN.md decision 15).
+
+use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
+use crate::algorithms::{mul_with_mode, Algorithm, ExecMode};
+use crate::bignum::Base;
+use crate::config::EngineKind;
+use crate::error::{ensure, Result};
+use crate::metrics::{fmt_f64, fmt_u64, Table};
+use crate::sim::{
+    socket_available, Clock, DistInt, Machine, MachineApi, Seq, SocketMachine, ThreadedMachine,
+    TopologyKind,
+};
+use crate::theory;
+use crate::util::Rng;
+
+/// The fixed-(n, M) COPSIM sweep: P ladder crossing the cliff, the
+/// perfect-scaling range, and the BFS range (module docs).
+const SWEEP_N: usize = 1024;
+const SWEEP_CAP: u64 = 2048;
+const SWEEP_P: [usize; 4] = [4, 16, 64, 256];
+
+fn leaf_for(algo: Algorithm) -> LeafRef {
+    match algo {
+        Algorithm::Copsim => leaf_ref(SchoolLeaf),
+        Algorithm::Copk => leaf_ref(SkimLeaf),
+    }
+}
+
+fn run_on<M: MachineApi>(
+    m: &mut M,
+    algo: Algorithm,
+    mode: ExecMode,
+    seq: &Seq,
+    a: &[u32],
+    b: &[u32],
+    leaf: &LeafRef,
+) -> Result<Vec<u32>> {
+    let w = a.len() / seq.len();
+    let da = DistInt::scatter(m, seq, a, w)?;
+    let db = DistInt::scatter(m, seq, b, w)?;
+    let c = mul_with_mode(m, seq, da, db, leaf, algo, mode)?;
+    let product = c.gather(m)?;
+    c.free(m);
+    Ok(product)
+}
+
+/// One (algo, mode, n, P, M, topology) cell on one engine.
+fn measure(
+    algo: Algorithm,
+    mode: ExecMode,
+    n: usize,
+    p: usize,
+    cap: u64,
+    kind: TopologyKind,
+    engine: EngineKind,
+    seed: u64,
+) -> Result<(Vec<u32>, Clock)> {
+    let base = Base::new(16);
+    let leaf = leaf_for(algo);
+    let mut rng = Rng::new(seed);
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let seq = Seq::range(p);
+    let topo = kind.build(p);
+    match engine {
+        EngineKind::Sim => {
+            let mut m = Machine::with_topology(p, cap, base, topo);
+            let prod = run_on(&mut m, algo, mode, &seq, &a, &b, &leaf)?;
+            Ok((prod, m.critical()))
+        }
+        EngineKind::Threads => {
+            let mut m = ThreadedMachine::with_topology(p, cap, base, topo);
+            let prod = run_on(&mut m, algo, mode, &seq, &a, &b, &leaf)?;
+            let report = m.finish()?;
+            Ok((prod, report.critical))
+        }
+        EngineKind::Sockets => {
+            let mut m = SocketMachine::with_topology(p, cap, base, topo)?;
+            let prod = run_on(&mut m, algo, mode, &seq, &a, &b, &leaf)?;
+            let report = m.finish()?;
+            Ok((prod, report.critical))
+        }
+    }
+}
+
+/// Run one cell on every available engine, assert products and cost
+/// triples bit-identical, and return the shared triple.
+pub fn cross_engine_cell(
+    algo: Algorithm,
+    mode: ExecMode,
+    n: usize,
+    p: usize,
+    cap: u64,
+    kind: TopologyKind,
+    seed: u64,
+) -> Result<Clock> {
+    let (sim_prod, sim_cost) = measure(algo, mode, n, p, cap, kind, EngineKind::Sim, seed)?;
+    let (thr_prod, thr_cost) = measure(algo, mode, n, p, cap, kind, EngineKind::Threads, seed)?;
+    ensure!(
+        sim_prod == thr_prod && sim_cost == thr_cost,
+        "engines disagree at {algo} {mode} n={n} P={p} {kind}: \
+         sim {sim_cost} vs threads {thr_cost}"
+    );
+    if socket_available() {
+        let (sock_prod, sock_cost) =
+            measure(algo, mode, n, p, cap, kind, EngineKind::Sockets, seed)?;
+        ensure!(
+            sim_prod == sock_prod && sim_cost == sock_cost,
+            "socket engine disagrees at {algo} {mode} n={n} P={p} {kind}: \
+             sim {sim_cost} vs sockets {sock_cost}"
+        );
+    }
+    Ok(sim_cost)
+}
+
+/// One strong-scaling data point for the JSON artifact (`perf`'s
+/// `strong_scaling[]` section mirrors these fields).
+#[derive(Clone, Debug)]
+pub struct ScalingCell {
+    pub algo: Algorithm,
+    pub topology: TopologyKind,
+    pub p: usize,
+    pub n: usize,
+    pub mem_cap: u64,
+    /// `None` = the cell is memory-bound (no schedule fits the cap).
+    pub mode: Option<ExecMode>,
+    pub dfs_bw: Option<u64>,
+    pub auto_bw: Option<u64>,
+    pub predicted_bw: Option<u64>,
+    pub ops: Option<u64>,
+}
+
+/// The sweep behind both the E20 table and the bench artifact: every
+/// feasible (P, topology) cell of the fixed-(n, M) ladder, in DFS and
+/// auto modes, cross-checked on all engines.
+pub fn sweep_cells(seed: u64) -> Result<Vec<ScalingCell>> {
+    let algo = Algorithm::Copsim;
+    let mut out = Vec::new();
+    for &p in &SWEEP_P {
+        let (n64, p64) = (SWEEP_N as u64, p as u64);
+        let (_, dfs_mem) = theory::exec_mode_bounds(algo, n64, p64, SWEEP_CAP, ExecMode::Dfs);
+        let auto_mode = theory::best_mode(algo, n64, p64, SWEEP_CAP);
+        for kind in TopologyKind::ALL {
+            if dfs_mem > SWEEP_CAP {
+                // The memory-bound cliff: no schedule fits this cell.
+                out.push(ScalingCell {
+                    algo,
+                    topology: kind,
+                    p,
+                    n: SWEEP_N,
+                    mem_cap: SWEEP_CAP,
+                    mode: None,
+                    dfs_bw: None,
+                    auto_bw: None,
+                    predicted_bw: None,
+                    ops: None,
+                });
+                continue;
+            }
+            let dfs = cross_engine_cell(algo, ExecMode::Dfs, SWEEP_N, p, SWEEP_CAP, kind, seed)?;
+            let auto = cross_engine_cell(algo, auto_mode, SWEEP_N, p, SWEEP_CAP, kind, seed)?;
+            ensure!(
+                auto.ops == dfs.ops,
+                "T must be mode-invariant at P={p} {kind}: auto {} vs dfs {}",
+                auto.ops,
+                dfs.ops
+            );
+            if auto_mode != ExecMode::Dfs {
+                ensure!(
+                    auto.words < dfs.words,
+                    "BFS must charge strictly fewer words at P={p} {kind}: \
+                     {} !< {}",
+                    auto.words,
+                    dfs.words
+                );
+            }
+            let (bound, _) = theory::exec_mode_bounds(algo, n64, p64, SWEEP_CAP, auto_mode);
+            let predicted = theory::predicted_for_topology(bound, kind.build(p).as_ref());
+            out.push(ScalingCell {
+                algo,
+                topology: kind,
+                p,
+                n: SWEEP_N,
+                mem_cap: SWEEP_CAP,
+                mode: Some(auto_mode),
+                dfs_bw: Some(dfs.words),
+                auto_bw: Some(auto.words),
+                predicted_bw: Some(predicted.words),
+                ops: Some(auto.ops),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// The per-regime mode-economics cells of the second table:
+/// (algo, P, n, cap, label). Caps are the verified cells of
+/// `algorithms::exec` — roomy (fused MI), stepping (clone-elided
+/// steps), and COPK's mode-invariant MI regime.
+const MODE_CELLS: &[(Algorithm, usize, usize, u64, &str)] = &[
+    (Algorithm::Copsim, 16, 1024, 8192, "roomy (fused MI)"),
+    (Algorithm::Copsim, 256, 4096, 2048, "stepping (elided clones)"),
+    (Algorithm::Copk, 108, 5184, 2304, "stepping (elided clones)"),
+    (Algorithm::Copk, 12, 384, u64::MAX / 4, "MI (mode-invariant)"),
+];
+
+pub fn e20_strong_scaling() -> Result<Vec<Table>> {
+    let seed = 0xE20;
+    let mut t1 = Table::new(
+        "E20: strong scaling at fixed n and fixed per-processor memory \
+         (COPSIM, n = 1024, M = 2048 words/proc; every feasible cell \
+         cross-checked on all engines, auto mode; `memory-bound` rows \
+         are the cliff where no schedule fits; BW·√P/n flat = perfect \
+         scaling)",
+        &[
+            "P",
+            "topology",
+            "mode",
+            "T",
+            "BW (dfs)",
+            "BW (auto)",
+            "pred BW",
+            "BW ratio",
+            "BW·√P/n",
+        ],
+    );
+    for cell in sweep_cells(seed)? {
+        match cell.mode {
+            None => t1.row(vec![
+                cell.p.to_string(),
+                cell.topology.to_string(),
+                "memory-bound".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+            Some(mode) => {
+                let (bw, dfs_bw, pred) = (
+                    cell.auto_bw.unwrap(),
+                    cell.dfs_bw.unwrap(),
+                    cell.predicted_bw.unwrap(),
+                );
+                t1.row(vec![
+                    cell.p.to_string(),
+                    cell.topology.to_string(),
+                    mode.to_string(),
+                    fmt_u64(cell.ops.unwrap()),
+                    fmt_u64(dfs_bw),
+                    fmt_u64(bw),
+                    fmt_u64(pred),
+                    fmt_f64(bw as f64 / pred.max(1) as f64),
+                    fmt_f64(bw as f64 * (cell.p as f64).sqrt() / cell.n as f64),
+                ]);
+            }
+        }
+    }
+
+    let mut t2 = Table::new(
+        "E20: measured vs predicted BW per execution mode (fully \
+         connected; BFS strictly beats DFS exactly where theory says \
+         the memory allows it, at bit-equal T; COPK's MI regime is \
+         mode-invariant — decision 15)",
+        &[
+            "algo",
+            "regime",
+            "P",
+            "n",
+            "M",
+            "mode",
+            "T",
+            "BW (dfs)",
+            "BW (bfs)",
+            "pred dfs",
+            "pred bfs",
+        ],
+    );
+    for &(algo, p, n, cap, label) in MODE_CELLS {
+        let (n64, p64) = (n as u64, p as u64);
+        let mode = theory::best_mode(algo, n64, p64, cap);
+        let kind = TopologyKind::FullyConnected;
+        let dfs = cross_engine_cell(algo, ExecMode::Dfs, n, p, cap, kind, seed)?;
+        let bfs = cross_engine_cell(algo, mode, n, p, cap, kind, seed)?;
+        ensure!(bfs.ops == dfs.ops, "{algo} {label}: T moved across modes");
+        let (dp, _) = theory::exec_mode_bounds(algo, n64, p64, cap, ExecMode::Dfs);
+        let (bp, bfs_mem) = theory::exec_mode_bounds(algo, n64, p64, cap, mode);
+        if mode == ExecMode::Dfs {
+            ensure!(bfs == dfs, "{algo} {label}: DFS resolution must be invariant");
+        } else {
+            ensure!(bfs_mem <= cap, "{algo} {label}: selected mode must fit");
+            ensure!(
+                bfs.words < dfs.words && bp.words < dp.words,
+                "{algo} {label}: BFS must beat DFS measured and predicted"
+            );
+        }
+        t2.row(vec![
+            algo.to_string(),
+            label.into(),
+            p.to_string(),
+            fmt_u64(n as u64),
+            if cap > (1 << 40) {
+                "unbounded".into()
+            } else {
+                fmt_u64(cap)
+            },
+            mode.to_string(),
+            fmt_u64(bfs.ops),
+            fmt_u64(dfs.words),
+            fmt_u64(bfs.words),
+            fmt_u64(dp.words),
+            fmt_u64(bp.words),
+        ]);
+    }
+    Ok(vec![t1, t2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_has_a_cliff_a_scaling_range_and_a_bfs_range() {
+        // Mode selection is pure theory — no machines needed to pin the
+        // sweep's three ranges.
+        let (n, cap) = (SWEEP_N as u64, SWEEP_CAP);
+        let (_, m4) = theory::exec_mode_bounds(Algorithm::Copsim, n, 4, cap, ExecMode::Dfs);
+        let (_, m16) = theory::exec_mode_bounds(Algorithm::Copsim, n, 16, cap, ExecMode::Dfs);
+        assert!(m4 > cap && m16 > cap, "P = 4, 16 must be memory-bound");
+        assert_eq!(theory::best_mode(Algorithm::Copsim, n, 64, cap), ExecMode::Dfs);
+        assert_eq!(
+            theory::best_mode(Algorithm::Copsim, n, 256, cap),
+            ExecMode::Bfs { levels: 4 }
+        );
+    }
+
+    #[test]
+    fn small_cells_agree_across_engines_in_both_modes() {
+        for kind in TopologyKind::ALL {
+            let dfs = cross_engine_cell(
+                Algorithm::Copsim,
+                ExecMode::Dfs,
+                1024,
+                16,
+                8192,
+                kind,
+                0x720,
+            )
+            .unwrap();
+            let bfs = cross_engine_cell(
+                Algorithm::Copsim,
+                ExecMode::Bfs { levels: 2 },
+                1024,
+                16,
+                8192,
+                kind,
+                0x720,
+            )
+            .unwrap();
+            assert_eq!(bfs.ops, dfs.ops, "{kind}: T moved");
+            assert!(bfs.words < dfs.words, "{kind}: BFS must cut BW");
+        }
+    }
+}

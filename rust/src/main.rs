@@ -4,10 +4,10 @@
 //!
 //! ```text
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
-//! copmul experiment <id|all> [--csv]           run paper experiments E1-E19
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E20
 //! copmul serve [key=value ...]                 fixed-batch coordinator workload
 //! copmul daemon [--rate=R ...]                 always-on serving, open-loop load
-//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_8.json
+//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_9.json
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
 //! ```
@@ -15,8 +15,9 @@
 //! Common `key=value` options: `n`, `procs`, `mem`, `algo`
 //! (copsim|copk|hybrid), `leaf` (slim|skim|school|hybrid|xla|xla-batched),
 //! `engine` (sim|threads|sockets; also spelled `--engine=...`), `topology`
-//! (fully-connected|torus|hier; also `--topology=...`), `seed`,
-//! `workers`, `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
+//! (fully-connected|torus|hier; also `--topology=...`), `exec-mode`
+//! (dfs|auto|bfs; also `--exec-mode=...`), `seed`, `workers`,
+//! `artifacts`, `alpha_ns`, `beta_ns`, `gamma_ns`.
 //! `serve` additionally takes `--jobs=N` (request count), `--shards=K`
 //! (run the sharded scheduler: ONE shared machine of `procs` processors
 //! carved into up to `K` concurrent shards, instead of one dedicated
@@ -79,7 +80,7 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E19|all> [--csv] [key=value ...]
+  copmul experiment <E1..E20|all> [--csv] [key=value ...]
   copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [--daemon] [key=value ...]
   copmul daemon [--jobs=N] [--rate=R] [--arrival=A] [--deadline-ms=D] [key=value ...]
   copmul bench [--json] [--out=PATH] [--smoke] [seed=N]
@@ -88,7 +89,13 @@ USAGE:
 
 KEYS: n procs mem algo(copsim|copk|hybrid) leaf(slim|skim|school|hybrid|xla|xla-batched)
       --engine=(sim|threads|sockets) --topology=(fully-connected|torus|hier)
-      seed workers artifacts alpha_ns beta_ns gamma_ns
+      --exec-mode=(dfs|auto|bfs) seed workers artifacts alpha_ns beta_ns gamma_ns
+
+EXEC MODES: dfs = the paper-default schedule (DFS steps, then the MI
+            recursion; bit-identical to pre-mode builds); auto = spend
+            surplus per-processor memory on breadth-first variants when
+            the predicted bandwidth is strictly lower (E20); bfs =
+            demand BFS — rejected distinctly when no level fits memory.
 
 ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
          threads = one OS thread per simulated processor (wall-clock speedup);
@@ -102,10 +109,11 @@ TOPOLOGIES: fully-connected (the paper's implicit network; default),
             hier (two-level clusters over a half-bandwidth backbone).
 
 BENCH:   wall-clock harness (engine grid, kernel-ladder table, per-base
-         leaf-width sweep, open-loop serving curve). --json writes the
-         BENCH_8.json artifact (--out overrides the path); --smoke runs
-         the CI-sized grid. COPMUL_KERNEL=(reference|packed64|generic|simd)
-         pins the dispatched rung. Cost triples shown are layout-invariant;
+         leaf-width sweep, open-loop serving curve, strong-scaling sweep).
+         --json writes the BENCH_9.json artifact (--out overrides the
+         path); --smoke runs the CI-sized grid.
+         COPMUL_KERNEL=(reference|packed64|generic|simd) pins the
+         dispatched rung. Cost triples shown are layout-invariant;
          wall-clock is the quantity the perf PRs move.
 
 SERVE:   fixed batch, closed-loop (submits everything, waits for all).
@@ -138,7 +146,10 @@ DAEMON:  always-on serving under seeded open-loop load: arrivals follow
          --shards=K      concurrent shards of the shared machine (default 4)
          --queue=N       admission bound, queued+running (default 1024)
          --fault-rate=R --fault-seed=S   as in serve
-         --smoke [--json --out=PATH]     CI serving curve -> BENCH_8.json
+         --batch-threshold=W  coalesce jobs of <= W digits on the batch
+                         lane (bypasses the machine model; batched
+                         results carry zero cost triples); 0 = off
+         --smoke [--json --out=PATH]     CI serving curve -> BENCH_9.json
 ";
 
 /// Build the leaf backend the config names.
@@ -184,11 +195,13 @@ fn cmd_mul(args: &[String]) -> Result<()> {
     spec.procs = cfg.procs;
     spec.mem_cap = cfg.mem_cap;
     spec.algo = cfg.algo;
+    spec.exec_mode = cfg.exec_mode;
     spec.engine = cfg.engine;
     spec.topology = cfg.topology;
     let res = coord.submit_blocking(spec)?;
     println!("product  = {}", to_hex(&res.product, base));
     println!("scheme   = {}", res.algo);
+    println!("mode     = {}", res.exec_mode);
     println!("engine   = {}", res.engine);
     println!("topology = {}", cfg.topology);
     println!(
@@ -316,6 +329,7 @@ fn serve_per_job(cfg: &RunConfig, jobs: usize) -> Result<()> {
         spec.procs = cfg.procs;
         spec.mem_cap = cfg.mem_cap;
         spec.algo = cfg.algo;
+        spec.exec_mode = cfg.exec_mode;
         spec.engine = cfg.engine;
         spec.topology = cfg.topology;
         pending.push(coord.submit(spec));
@@ -404,6 +418,7 @@ fn serve_sharded(
         let mut spec = JobSpec::new(id, a, b);
         spec.procs = per_job;
         spec.algo = cfg.algo;
+        spec.exec_mode = cfg.exec_mode;
         pending.push(sched.submit(spec)?);
     }
     // Collect tolerantly: a failed job must not abort the loop before
@@ -483,9 +498,10 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
     let mut queue = 1024usize;
     let mut fault_rate = 0f64;
     let mut fault_seed: Option<u64> = None;
+    let mut batch_threshold = 0usize;
     let mut smoke = false;
     let mut json = false;
-    let mut out = "BENCH_8.json".to_string();
+    let mut out = "BENCH_9.json".to_string();
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("--jobs=").or_else(|| a.strip_prefix("jobs=")) {
@@ -515,6 +531,8 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
             fault_rate = v.parse().context("fault-rate")?;
         } else if let Some(v) = a.strip_prefix("--fault-seed=") {
             fault_seed = Some(v.parse().context("fault-seed")?);
+        } else if let Some(v) = a.strip_prefix("--batch-threshold=") {
+            batch_threshold = v.parse().context("batch-threshold")?;
         } else if a == "--smoke" {
             smoke = true;
         } else if a == "--json" {
@@ -529,7 +547,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
 
     if smoke {
         // CI serving curve: both engines, Poisson + bursty legs,
-        // emitted in the BENCH_8.json `serving` section.
+        // emitted in the BENCH_9.json `serving` section.
         let bench_cfg = copmul::perf::BenchConfig {
             smoke: true,
             seed: cfg.seed,
@@ -602,6 +620,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
                 ..Default::default()
             },
             default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
+            batch_threshold,
             ..Default::default()
         },
         leaf,
@@ -620,6 +639,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
             base_log2: cfg.base_log2,
             procs: per_job,
             algo: cfg.algo,
+            exec_mode: cfg.exec_mode,
         },
         verify,
         collect: false,
@@ -680,7 +700,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
 fn cmd_bench(args: &[String]) -> Result<()> {
     let mut cfg = copmul::perf::BenchConfig::default();
     let mut json = false;
-    let mut out = "BENCH_8.json".to_string();
+    let mut out = "BENCH_9.json".to_string();
     for a in args {
         if a == "--json" {
             json = true;

@@ -1,8 +1,8 @@
 //! `copmul bench` — the wall-clock measurement harness behind the
 //! repo's `BENCH_*.json` perf trajectory.
 //!
-//! Five sections, all recorded per run into one JSON artifact
-//! (`BENCH_8.json` by default; CI's `perf-smoke` and `serve-soak` jobs
+//! Six sections, all recorded per run into one JSON artifact
+//! (`BENCH_9.json` by default; CI's `perf-smoke` and `serve-soak` jobs
 //! upload it and `BENCH_HISTORY.md` tracks the dated in-tree trail):
 //!
 //! * **engine grid** — end-to-end wall-clock of both execution engines
@@ -28,9 +28,14 @@
 //!   worker processes over Unix-domain sockets, cross-checked for
 //!   product and cost-triple identity against the simulator. Empty
 //!   when no worker binary is resolvable on the host.
+//! * **strong_scaling** — the E20 fixed-(n, M) sweep: per (P, topology)
+//!   cell, the auto-selected execution mode with DFS / auto / predicted
+//!   charged bandwidth, including the memory-bound cliff rows where no
+//!   schedule fits the cap (PR 9's memory-adaptive BFS/DFS execution).
 
 use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
-use crate::algorithms::{copk_mi, copsim_mi, Algorithm};
+use crate::algorithms::{copk_mi, copsim_mi, Algorithm, ExecPolicy};
+use crate::experiments::strong_scaling::{sweep_cells, ScalingCell};
 use crate::bignum::{self, arch, Base, Ops};
 use crate::config::EngineKind;
 use crate::coordinator::{
@@ -151,6 +156,9 @@ pub struct BenchReport {
     pub serving: Vec<ServingCell>,
     /// Empty when no worker binary resolves on this host.
     pub socket: Vec<SocketCell>,
+    /// The E20 fixed-(n, M) strong-scaling sweep (memory-adaptive
+    /// execution modes); infeasible cells are the memory-bound cliff.
+    pub strong_scaling: Vec<ScalingCell>,
 }
 
 /// Run one multiplication end to end on an engine (mirrors the E15
@@ -402,6 +410,7 @@ pub fn serving_curve(cfg: &BenchConfig, report: &mut BenchReport) -> Result<()> 
         base_log2: 16,
         procs: 4,
         algo: Some(Algorithm::Copsim),
+        exec_mode: ExecPolicy::Dfs,
     };
     for (engine, name) in [(EngineKind::Sim, "sim"), (EngineKind::Threads, "threads")] {
         let daemon = Daemon::start(
@@ -471,6 +480,10 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     leaf_sweep(cfg, &mut report);
     serving_curve(cfg, &mut report)?;
     socket_grid(cfg, &mut report)?;
+    // The E20 sweep cross-checks every feasible cell on all available
+    // engines before recording it, so the section doubles as a
+    // mode-differential wall in the perf job.
+    report.strong_scaling = sweep_cells(cfg.seed)?;
     Ok(report)
 }
 
@@ -573,7 +586,28 @@ impl BenchReport {
                 format!("{:.2}", wall_ms / c.predicted_ms.max(1e-9)),
             ]);
         }
-        vec![t1, t2, t3, t4, t5]
+        let mut t6 = Table::new(
+            "strong scaling at fixed per-proc memory (E20 sweep; \
+             `memory-bound` rows are the cliff, BW in charged words)",
+            &[
+                "algo", "topology", "P", "n", "M", "mode", "T", "BW dfs", "BW auto", "pred BW",
+            ],
+        );
+        for c in &self.strong_scaling {
+            t6.row(vec![
+                c.algo.to_string(),
+                c.topology.to_string(),
+                c.p.to_string(),
+                c.n.to_string(),
+                fmt_u64(c.mem_cap),
+                c.mode.map_or("memory-bound".into(), |m| m.to_string()),
+                c.ops.map_or("-".into(), fmt_u64),
+                c.dfs_bw.map_or("-".into(), fmt_u64),
+                c.auto_bw.map_or("-".into(), fmt_u64),
+                c.predicted_bw.map_or("-".into(), fmt_u64),
+            ]);
+        }
+        vec![t1, t2, t3, t4, t5, t6]
     }
 
     /// Serialize to the `BENCH_*.json` schema (hand-rolled — no serde
@@ -581,7 +615,7 @@ impl BenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(4096);
         s.push_str(&format!(
-            "{{\n  \"bench\": 8,\n  \"kernel_selected\": \"{}\",\n  \
+            "{{\n  \"bench\": 9,\n  \"kernel_selected\": \"{}\",\n  \
              \"simd_isa\": \"{}\",\n  \"engine_grid\": [\n",
             self.kernel_selected, self.simd_isa
         ));
@@ -670,6 +704,28 @@ impl BenchReport {
                 if i + 1 < self.socket.len() { "," } else { "" },
             ));
         }
+        s.push_str("  ],\n  \"strong_scaling\": [\n");
+        for (i, c) in self.strong_scaling.iter().enumerate() {
+            // Infeasible (memory-bound) cells record zeros with the
+            // sentinel mode string; `feasible` disambiguates.
+            s.push_str(&format!(
+                "    {{\"algo\": \"{}\", \"topology\": \"{}\", \"p\": {}, \"n\": {}, \
+                 \"mem_cap\": {}, \"feasible\": {}, \"mode\": \"{}\", \"ops\": {}, \
+                 \"dfs_words\": {}, \"auto_words\": {}, \"pred_words\": {}}}{}\n",
+                c.algo,
+                c.topology,
+                c.p,
+                c.n,
+                c.mem_cap,
+                c.mode.is_some(),
+                c.mode.map_or("memory-bound".into(), |m| m.to_string()),
+                c.ops.unwrap_or(0),
+                c.dfs_bw.unwrap_or(0),
+                c.auto_bw.unwrap_or(0),
+                c.predicted_bw.unwrap_or(0),
+                if i + 1 < self.strong_scaling.len() { "," } else { "" },
+            ));
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -729,6 +785,33 @@ mod tests {
             },
             predicted_ms: 0.5,
         });
+        // One feasible and one memory-bound synthetic strong-scaling
+        // cell pin the section's JSON/table rendering (the live sweep
+        // runs in `copmul bench` and the strong-scaling CI job).
+        report.strong_scaling.push(ScalingCell {
+            algo: Algorithm::Copsim,
+            topology: crate::sim::TopologyKind::FullyConnected,
+            p: 256,
+            n: 1024,
+            mem_cap: 2048,
+            mode: Some(crate::algorithms::ExecMode::Bfs { levels: 4 }),
+            dfs_bw: Some(9000),
+            auto_bw: Some(7000),
+            predicted_bw: Some(8000),
+            ops: Some(123_456),
+        });
+        report.strong_scaling.push(ScalingCell {
+            algo: Algorithm::Copsim,
+            topology: crate::sim::TopologyKind::Torus,
+            p: 4,
+            n: 1024,
+            mem_cap: 2048,
+            mode: None,
+            dfs_bw: None,
+            auto_bw: None,
+            predicted_bw: None,
+            ops: None,
+        });
         assert!(!report.kernels.is_empty());
         assert!(!report.leaf_sweep.is_empty());
         // Every available ladder rung shows up in the kernel table, and
@@ -744,7 +827,7 @@ mod tests {
             assert!(report.leaf_sweep.iter().any(|c| c.scheme == scheme));
         }
         let j = Json::parse(&report.to_json()).expect("BENCH json must parse");
-        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(8));
+        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(9));
         assert!(j.get("kernel_selected").and_then(Json::as_str).is_some());
         assert!(j.get("kernels").and_then(Json::as_arr).is_some());
         assert!(j.get("leaf_width_sweep").and_then(Json::as_arr).is_some());
@@ -754,7 +837,15 @@ mod tests {
         let socket = j.get("socket").and_then(Json::as_arr).expect("socket arr");
         assert_eq!(socket.len(), 1);
         assert_eq!(socket[0].get("wall_us").and_then(Json::as_u64), Some(1500));
-        assert_eq!(report.tables().len(), 5, "socket table renders");
+        let ss = j
+            .get("strong_scaling")
+            .and_then(Json::as_arr)
+            .expect("strong_scaling arr");
+        assert_eq!(ss.len(), 2);
+        assert_eq!(ss[0].get("auto_words").and_then(Json::as_u64), Some(7000));
+        assert_eq!(ss[0].get("mode").and_then(Json::as_str), Some("bfs(4)"));
+        assert_eq!(ss[1].get("mode").and_then(Json::as_str), Some("memory-bound"));
+        assert_eq!(report.tables().len(), 6, "strong-scaling table renders");
     }
 
     #[test]

@@ -11,9 +11,10 @@
 //! measured/lower ratio being bounded by a constant over sweeps is the
 //! reproduction of "asymptotically optimal".
 
+use crate::algorithms::{Algorithm, ExecMode};
 use crate::sim::topology::Topology;
 use crate::sim::Clock;
-use crate::util::{pow_log2_3, pow_log3_2};
+use crate::util::{div_ceil, exact_log2, pow_log2_3, pow_log3_2};
 
 const LOG2_3: f64 = 1.584962500721156; // log2(3)
 
@@ -134,6 +135,159 @@ pub fn thm15_copk(n: u64, p: u64, m: u64) -> Clock {
         1708.0 * pow_log2_3(nf / mf) * mf / pf,
         8728.0 * pow_log2_3(nf) * l * l / (pf * pow_log2_3(mf)),
     )
+}
+
+// ------------------------------------------------- execution modes (BFS)
+//
+// The memory-adaptive BFS variants (algorithms::exec; arXiv 1202.3177's
+// memory-independent lower bounds and CAPS' BFS/DFS interleaving,
+// 1202.3173) trade surplus per-processor memory for bandwidth. T and L
+// keep the paper's constants in every mode — the variants only remove
+// charged communication rounds, never local work — so each BFS bound
+// below is its DFS twin with a strictly smaller BW term and a larger
+// memory requirement.
+
+/// COPSIM_MI under the fused operand distribution (BFS, roomy regime):
+/// the per-level maximum sender charge drops from `4w` (a
+/// repartition-then-replicate pair) to `3w` (two direct copies from the
+/// original half layout), so the geometric level sum `4n/√P` becomes
+/// `3n/√P`: `BW ≤ 13n/√P + 6log₂²P`; T and L as Theorem 11.
+pub fn copsim_bfs_mi(n: u64, p: u64) -> Clock {
+    let (nf, pf, l) = (n as f64, p as f64, lg(p));
+    clock(
+        38.0 * nf * nf / pf + 3.0 * l * l,
+        13.0 * nf / pf.sqrt() + 6.0 * l * l,
+        3.0 * l * l,
+    )
+}
+
+/// Memory requirement of the fused MI mode: both operand copies of a
+/// level coexist with their source, doubling the Theorem 11 footprint.
+/// (`n ≤ M√P/24`, the per-level gate in `copsim_mi_fused`.)
+pub fn copsim_bfs_mi_mem(n: u64, p: u64) -> u64 {
+    2 * thm11_copsim_mi_mem(n, p)
+}
+
+/// COPSIM stepping regime with clone-elided DFS steps (BFS): each
+/// step's 8 charged operand copies become 4 charged copies plus 4 free
+/// same-layout clones, saving at least `n/P` charged words on every
+/// processor at the top step alone: `BW ≤ 3530n²/(MP) − n/P`;
+/// T and L as Theorem 12.
+pub fn copsim_bfs_step(n: u64, p: u64, m: u64) -> Clock {
+    let c = thm12_copsim(n, p, m);
+    Clock {
+        words: c.words.saturating_sub(n / p),
+        ..c
+    }
+}
+
+/// Per-processor memory requirement of clone-elided COPSIM steps:
+/// Theorem 12's `80n/P` plus the live clones, bounded by `96n/P`.
+pub fn copsim_bfs_step_mem(n: u64, p: u64) -> u64 {
+    div_ceil(96 * n, p)
+}
+
+/// COPK stepping regime with clone-elided DFS steps (BFS): the step's
+/// 8 charged copies (C0, C2, and four DIFF operands) become 4, saving
+/// at least `n/P` charged words per processor: `BW ≤ Thm 15 − n/P`.
+/// The COPK MI regime is mode-invariant (its splits move every digit
+/// once; DESIGN.md decision 15), so there is no roomy COPK entry here.
+pub fn copk_bfs_step(n: u64, p: u64, m: u64) -> Clock {
+    let c = thm15_copk(n, p, m);
+    Clock {
+        words: c.words.saturating_sub(n / p),
+        ..c
+    }
+}
+
+/// Per-processor memory requirement of clone-elided COPK steps:
+/// Theorem 15's `40n/P` plus the live clones, bounded by `48n/P`.
+pub fn copk_bfs_step_mem(n: u64, p: u64) -> u64 {
+    div_ceil(48 * n, p)
+}
+
+/// Number of depth-first steps `algo` takes on `(n, P)` before the MI
+/// condition holds with per-processor memory `mem` (0 = starts in the
+/// MI regime). Mirrors the `mi_ok` gates in `copsim`/`copk` exactly.
+pub fn dfs_steps(algo: Algorithm, n: u64, p: u64, mem: u64) -> u32 {
+    if p <= 1 {
+        return 0;
+    }
+    let thresh = match algo {
+        Algorithm::Copsim => mem as f64 * (p as f64).sqrt() / 12.0,
+        Algorithm::Copk => mem as f64 * pow_log3_2(p as f64) / 10.0,
+    };
+    let mut nf = n as f64;
+    let mut k = 0;
+    while nf > thresh && k < 64 {
+        nf /= 2.0;
+        k += 1;
+    }
+    k
+}
+
+/// Maximum number of BFS levels `algo` can afford on `(n, P)` with
+/// per-processor memory `mem` — 0 when BFS buys nothing (COPK's MI
+/// regime) or the BFS footprint does not fit.
+pub fn bfs_levels(algo: Algorithm, n: u64, p: u64, mem: u64) -> u32 {
+    if p <= 1 {
+        return 0;
+    }
+    let steps = dfs_steps(algo, n, p, mem);
+    match algo {
+        Algorithm::Copsim => {
+            if steps == 0 {
+                // MI regime: the fused gate n <= M*sqrt(P)/24 is
+                // level-invariant, so either every level fuses or none.
+                if mem >= copsim_bfs_mi_mem(n, p) {
+                    exact_log2(p) / 2 // log4 P split levels
+                } else {
+                    0
+                }
+            } else if mem >= copsim_bfs_step_mem(n, p) {
+                steps
+            } else {
+                0
+            }
+        }
+        Algorithm::Copk => {
+            if steps > 0 && mem >= copk_bfs_step_mem(n, p) {
+                steps
+            } else {
+                0
+            }
+        }
+    }
+}
+
+/// The cheapest fitting execution mode: BFS wherever it strictly
+/// lowers the predicted BW and its footprint fits `mem`, DFS otherwise.
+pub fn best_mode(algo: Algorithm, n: u64, p: u64, mem: u64) -> ExecMode {
+    match bfs_levels(algo, n, p, mem) {
+        0 => ExecMode::Dfs,
+        levels => ExecMode::Bfs { levels },
+    }
+}
+
+/// Predicted `(T, BW, L)` bound and per-processor memory requirement
+/// of running `algo` on `(n, P)` with memory `mem` under `mode`.
+/// `Bfs { levels: 0 }` is DFS (the scheduler's downgrade invariant).
+pub fn exec_mode_bounds(algo: Algorithm, n: u64, p: u64, mem: u64, mode: ExecMode) -> (Clock, u64) {
+    let bfs = matches!(mode, ExecMode::Bfs { levels } if levels > 0);
+    let stepping = dfs_steps(algo, n, p, mem) > 0;
+    match algo {
+        Algorithm::Copsim => match (stepping, bfs) {
+            (false, false) => (thm11_copsim_mi(n, p), thm11_copsim_mi_mem(n, p)),
+            (false, true) => (copsim_bfs_mi(n, p), copsim_bfs_mi_mem(n, p)),
+            (true, false) => (thm12_copsim(n, p, mem), div_ceil(80 * n, p)),
+            (true, true) => (copsim_bfs_step(n, p, mem), copsim_bfs_step_mem(n, p)),
+        },
+        Algorithm::Copk => match (stepping, bfs) {
+            (false, _) => (thm14_copk_mi(n, p), thm14_copk_mi_mem(n, p)),
+            (true, false) => (thm15_copk(n, p, mem), div_ceil(40 * n, p)),
+            (true, true) => (copk_bfs_step(n, p, mem), copk_bfs_step_mem(n, p)),
+        },
+    }
 }
 
 // ---------------------------------------------------------------- lower
@@ -289,5 +443,93 @@ mod tests {
         let tm = TimeModel::default();
         let c = Clock { ops: 1000, words: 10, msgs: 2 };
         assert!((tm.time_ns(&c) - (1000.0 + 2000.0 + 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dfs_steps_mirror_the_mi_gates() {
+        // Roomy: starts in the MI regime.
+        assert_eq!(dfs_steps(Algorithm::Copsim, 1024, 16, 1 << 20), 0);
+        assert_eq!(dfs_steps(Algorithm::Copk, 5184, 108, 1 << 20), 0);
+        // The test cells used across the suite.
+        assert_eq!(dfs_steps(Algorithm::Copsim, 4096, 256, 2048), 1);
+        assert_eq!(dfs_steps(Algorithm::Copsim, 4096, 256, 80 * 4096 / 256), 2);
+        assert_eq!(dfs_steps(Algorithm::Copk, 5184, 108, 2304), 1);
+        // (108, 10368) at 40n/P: one step reaches n' = 5184 <= M*P^(log3 2)/10.
+        assert_eq!(dfs_steps(Algorithm::Copk, 10368, 108, 40 * 10368 / 108), 1);
+    }
+
+    #[test]
+    fn best_mode_picks_bfs_only_when_it_pays() {
+        // COPSIM roomy at 2x the MI footprint: full-depth fused BFS.
+        let mi = thm11_copsim_mi_mem(1024, 16);
+        assert_eq!(
+            best_mode(Algorithm::Copsim, 1024, 16, 2 * mi),
+            ExecMode::Bfs { levels: 2 }
+        );
+        // At exactly the MI footprint the fused copies don't fit: DFS.
+        assert_eq!(best_mode(Algorithm::Copsim, 1024, 16, mi), ExecMode::Dfs);
+        // Stepping with clone headroom: elide the steps.
+        assert_eq!(
+            best_mode(Algorithm::Copsim, 4096, 256, 2048),
+            ExecMode::Bfs { levels: 1 }
+        );
+        // Stepping at Theorem 12's bare 80n/P: no clone headroom, DFS.
+        assert_eq!(best_mode(Algorithm::Copsim, 4096, 256, 80 * 4096 / 256), ExecMode::Dfs);
+        // COPK MI regime is mode-invariant: never claim a BFS win.
+        assert_eq!(best_mode(Algorithm::Copk, 5184, 108, 1 << 20), ExecMode::Dfs);
+        // COPK stepping with clone headroom.
+        assert_eq!(
+            best_mode(Algorithm::Copk, 5184, 108, copk_bfs_step_mem(5184, 108)),
+            ExecMode::Bfs { levels: 1 }
+        );
+        assert_eq!(best_mode(Algorithm::Copk, 5184, 108, 40 * 5184 / 108), ExecMode::Dfs);
+        // Single processor: nothing to communicate.
+        assert_eq!(best_mode(Algorithm::Copsim, 1024, 1, 1 << 30), ExecMode::Dfs);
+    }
+
+    #[test]
+    fn bfs_bounds_cut_bw_at_equal_t_and_cost_memory() {
+        // Roomy COPSIM: BW strictly lower, T/L identical, M doubled.
+        let dfs = thm11_copsim_mi(1 << 12, 64);
+        let bfs = copsim_bfs_mi(1 << 12, 64);
+        assert_eq!(bfs.ops, dfs.ops);
+        assert_eq!(bfs.msgs, dfs.msgs);
+        assert!(bfs.words < dfs.words);
+        assert_eq!(copsim_bfs_mi_mem(1 << 12, 64), 2 * thm11_copsim_mi_mem(1 << 12, 64));
+        // Stepping COPSIM and COPK: same shape.
+        let (n, p, m) = (4096u64, 256u64, 2048u64);
+        let dfs = thm12_copsim(n, p, m);
+        let bfs = copsim_bfs_step(n, p, m);
+        assert_eq!(bfs.ops, dfs.ops);
+        assert_eq!(bfs.msgs, dfs.msgs);
+        assert!(bfs.words < dfs.words);
+        assert!(copsim_bfs_step_mem(n, p) > div_ceil(80 * n, p));
+        let (n, p, m) = (5184u64, 108u64, 2304u64);
+        let dfs = thm15_copk(n, p, m);
+        let bfs = copk_bfs_step(n, p, m);
+        assert_eq!(bfs.ops, dfs.ops);
+        assert_eq!(bfs.msgs, dfs.msgs);
+        assert!(bfs.words < dfs.words);
+        assert!(copk_bfs_step_mem(n, p) > div_ceil(40 * n, p));
+    }
+
+    #[test]
+    fn exec_mode_bounds_consistent_with_selectors() {
+        // Bfs{0} is DFS in the bound table too.
+        let (n, p, mem) = (4096u64, 256u64, 2048u64);
+        let (d, dm) = exec_mode_bounds(Algorithm::Copsim, n, p, mem, ExecMode::Dfs);
+        let (z, zm) = exec_mode_bounds(Algorithm::Copsim, n, p, mem, ExecMode::Bfs { levels: 0 });
+        assert_eq!((d, dm), (z, zm));
+        // best_mode's pick always fits the memory it was given.
+        for &(algo, n, p, mem) in &[
+            (Algorithm::Copsim, 1024u64, 16u64, 6144u64),
+            (Algorithm::Copsim, 4096, 256, 2048),
+            (Algorithm::Copk, 5184, 108, 2304),
+            (Algorithm::Copk, 5184, 108, 1 << 20),
+        ] {
+            let mode = best_mode(algo, n, p, mem);
+            let (_, need) = exec_mode_bounds(algo, n, p, mem, mode);
+            assert!(need <= mem, "{algo:?} {mode}: footprint {need} > mem {mem}");
+        }
     }
 }

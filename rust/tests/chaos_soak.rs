@@ -29,7 +29,7 @@
 //! the fast default; the CI `chaos` job runs 200 cases in release mode.
 
 use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
-use copmul::algorithms::Algorithm;
+use copmul::algorithms::{Algorithm, ExecMode, ExecPolicy};
 use copmul::bignum::core::normalized_len;
 use copmul::bignum::{mul, Base, Ops};
 use copmul::config::EngineKind;
@@ -392,4 +392,60 @@ fn chaos_soak_single_runner_is_reproducible() {
     let (b, ib) = run();
     assert_eq!(a, b, "single-runner soak must replay bit-identically");
     assert_eq!(ia, ib, "injected fault counts must replay");
+}
+
+/// Replay determinism under the BFS schedule (ISSUE 9 satellite 6):
+/// the fault injector indexes operations, and the breadth-first
+/// variants charge a *different* operation sequence than DFS — elided
+/// repartition rounds shift every subsequent op index. Two identical
+/// seeded soaks running `ExecPolicy::Bfs` on a machine cap that makes
+/// BFS actually resolve (fused-MI regime) must still inject the
+/// identical fault sequence and report identical per-job costs; a
+/// nondeterministic op-index walk under the BFS schedule would diverge
+/// here at a nonzero injection rate.
+#[test]
+fn chaos_soak_bfs_schedule_is_reproducible() {
+    let run = || {
+        let cfg = SchedulerConfig {
+            procs: 8,
+            runners: 1,
+            engine: EngineKind::Sim,
+            // 2048 words/proc clears the COPSIM fused-distribution gate
+            // 24n/√P = 1536 at (n = 128, P = 4), so the BFS policy
+            // resolves to Bfs { levels: 1 } — a genuinely different
+            // schedule from the DFS soak above.
+            mem_cap: 2048,
+            fault: Some(FaultConfig::new(0xBEE, 1e-3)),
+            max_attempts: 5,
+            quarantine_after: 0,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
+        let mut rng = Rng::new(0xD0);
+        let mut out = Vec::new();
+        for id in 0..10u64 {
+            let a = rng.digits(128, 16);
+            let b = rng.digits(128, 16);
+            let want = reference_product(&a, &b);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            spec.algo = Some(Algorithm::Copsim);
+            spec.exec_mode = ExecPolicy::Bfs;
+            let res = sched.submit_blocking(spec).unwrap();
+            assert_eq!(res.product, want, "job {id}: BFS product under faults");
+            assert_eq!(
+                res.exec_mode,
+                ExecMode::Bfs { levels: 1 },
+                "job {id}: the cap must make BFS resolve, or this test is vacuous"
+            );
+            out.push((res.product, res.cost, res.attempts, res.faults_survived));
+        }
+        let injected = sched.faults_injected();
+        sched.shutdown().unwrap();
+        (out, injected)
+    };
+    let (a, ia) = run();
+    let (b, ib) = run();
+    assert_eq!(a, b, "BFS-schedule soak must replay bit-identically");
+    assert_eq!(ia, ib, "injected fault counts must replay under BFS");
 }

@@ -23,6 +23,14 @@
 //! same identity must hold for every job whose shard saw zero injected
 //! faults.
 //!
+//! `COPMUL_EXEC_MODE` adds the execution-mode axis: unset (or `dfs`)
+//! the corpus runs the pre-mode code paths with bit-identical DFS cost
+//! triples; `auto`/`bfs` resolve the memory-adaptive BFS variants where
+//! the case's cap affords them, and the cross-engine identities must
+//! hold there unchanged. A deterministic suite additionally pins the
+//! BFS-beats-DFS bandwidth win (at bit-equal T and products) on every
+//! engine at the verified roomy/stepping cells.
+//!
 //! Case counts scale with `COPMUL_PROP_CASES` (see `util::prop::cases`):
 //! the in-repo defaults keep tier-1's debug-mode run fast; the dedicated
 //! CI `differential` job runs release-mode at `COPMUL_PROP_CASES=200`
@@ -33,7 +41,10 @@
 //! fully-connected network.
 
 use copmul::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf};
-use copmul::algorithms::{copk_mi, copsim, copsim_mi, hybrid, Algorithm};
+use copmul::algorithms::{
+    copk_mi, copsim, copsim_mi, hybrid, mul_with_mode, resolve_mode, Algorithm, ExecMode,
+    ExecPolicy,
+};
 use copmul::bignum::{mul, Base, Ops};
 use copmul::config::EngineKind;
 use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
@@ -103,6 +114,20 @@ fn engine_matrix() -> &'static [EngineKind] {
 
 fn sockets_enabled() -> bool {
     engine_matrix().contains(&EngineKind::Sockets)
+}
+
+/// Execution-mode policy the randomized corpus runs under, from
+/// `COPMUL_EXEC_MODE` (`dfs` | `auto` | `bfs`). The default is `dfs`,
+/// which leaves every corpus case on exactly the pre-mode code paths —
+/// the DFS cost triples stay bit-identical to the pre-PR suite. The CI
+/// `strong-scaling` job re-runs the corpus at `auto` and `bfs`, where
+/// memory-roomy cases resolve to the breadth-first variants; engine
+/// equivalence (products AND cost triples) must hold there too.
+fn corpus_exec_policy() -> ExecPolicy {
+    match std::env::var("COPMUL_EXEC_MODE") {
+        Ok(s) => ExecPolicy::parse(&s).unwrap_or_else(|e| panic!("COPMUL_EXEC_MODE: {e}")),
+        Err(_) => ExecPolicy::Dfs,
+    }
 }
 
 /// Network topology the randomized corpus runs under, from
@@ -216,9 +241,17 @@ fn shrink_shape(s: &Shape) -> Vec<Shape> {
 }
 
 /// Run one case on any engine, returning (product, cost triple).
+///
+/// Under the default `ExecPolicy::Dfs` this dispatches to exactly the
+/// pre-mode entry points (bit-identical triples to the pre-PR corpus);
+/// any other policy resolves a concrete [`ExecMode`] against the
+/// machine's memory cap — deterministically in (policy, algo, n, p,
+/// cap), so every engine resolves the same mode — and runs the
+/// mode-dispatched paths.
 fn run_on<M: MachineApi>(
     m: &mut M,
     shape: &Shape,
+    policy: ExecPolicy,
     a: &[u32],
     b: &[u32],
     leaf: &LeafRef,
@@ -227,12 +260,33 @@ fn run_on<M: MachineApi>(
     let w = shape.n / shape.p;
     let da = DistInt::scatter(m, &seq, a, w).map_err(|e| e.to_string())?;
     let db = DistInt::scatter(m, &seq, b, w).map_err(|e| e.to_string())?;
-    let c = match shape.entry {
-        Entry::CopsimMain => copsim(m, &seq, da, db, leaf),
-        Entry::CopsimMi => copsim_mi(m, &seq, da, db, leaf),
-        Entry::CopkMi => copk_mi(m, &seq, da, db, leaf),
-        Entry::Hybrid => {
-            hybrid::hybrid_mul(m, &seq, da, db, leaf, &TimeModel::default()).map(|(c, _)| c)
+    let c = if policy == ExecPolicy::Dfs {
+        match shape.entry {
+            Entry::CopsimMain => copsim(m, &seq, da, db, leaf),
+            Entry::CopsimMi => copsim_mi(m, &seq, da, db, leaf),
+            Entry::CopkMi => copk_mi(m, &seq, da, db, leaf),
+            Entry::Hybrid => {
+                hybrid::hybrid_mul(m, &seq, da, db, leaf, &TimeModel::default()).map(|(c, _)| c)
+            }
+        }
+    } else {
+        let (n64, p64) = (shape.n as u64, shape.p as u64);
+        match shape.entry {
+            // The MI entries run the MI regime of the mode dispatcher
+            // (their caps are memory-independent); CopsimMain's tight
+            // cap resolves back to stepping DFS under every policy.
+            Entry::CopsimMain | Entry::CopsimMi => {
+                let mode = resolve_mode(policy, Algorithm::Copsim, n64, p64, m.mem_cap());
+                mul_with_mode(m, &seq, da, db, leaf, Algorithm::Copsim, mode)
+            }
+            Entry::CopkMi => {
+                let mode = resolve_mode(policy, Algorithm::Copk, n64, p64, m.mem_cap());
+                mul_with_mode(m, &seq, da, db, leaf, Algorithm::Copk, mode)
+            }
+            Entry::Hybrid => {
+                hybrid::hybrid_mul_with_mode(m, &seq, da, db, leaf, &TimeModel::default(), policy)
+                    .map(|(c, _, _)| c)
+            }
         }
     }
     .map_err(|e| format!("{:?} failed: {e}", shape.entry))?;
@@ -252,12 +306,13 @@ fn differential_case(rng: &mut Rng, shape: &Shape) -> Result<(), String> {
     let reference = mul::mul_school(&a, &b, shape.base, &mut ops);
 
     let kind = corpus_topology();
+    let policy = corpus_exec_policy();
     let mut sim = Machine::with_topology(shape.p, shape.cap, shape.base, kind.build(shape.p));
-    let (sim_prod, sim_cost) = run_on(&mut sim, shape, &a, &b, &leaf)?;
+    let (sim_prod, sim_cost) = run_on(&mut sim, shape, policy, &a, &b, &leaf)?;
 
     let mut thr =
         ThreadedMachine::with_topology(shape.p, shape.cap, shape.base, kind.build(shape.p));
-    let (thr_prod, thr_cost) = run_on(&mut thr, shape, &a, &b, &leaf)?;
+    let (thr_prod, thr_cost) = run_on(&mut thr, shape, policy, &a, &b, &leaf)?;
     thr.finish()
         .map_err(|e| format!("threaded engine error: {e}"))?;
 
@@ -291,7 +346,7 @@ fn differential_case(rng: &mut Rng, shape: &Shape) -> Result<(), String> {
             socket_cfg(),
         )
         .map_err(|e| format!("socket engine start: {e}"))?;
-        let (sock_prod, sock_cost) = run_on(&mut sock, shape, &a, &b, &leaf)?;
+        let (sock_prod, sock_cost) = run_on(&mut sock, shape, policy, &a, &b, &leaf)?;
         sock.finish()
             .map_err(|e| format!("socket engine error: {e}"))?;
         prop_assert!(
@@ -328,6 +383,111 @@ fn differential_reference_vs_both_engines() {
         shrink_shape,
         differential_case,
     );
+}
+
+/// Run one (algo, mode) cell on one engine: base 2^16, schoolbook leaf,
+/// fully-connected network, explicit per-processor memory cap.
+fn run_mode_cell(
+    engine: EngineKind,
+    algo: Algorithm,
+    mode: ExecMode,
+    p: usize,
+    cap: u64,
+    a: &[u32],
+    b: &[u32],
+) -> (Vec<u32>, Clock) {
+    fn go<M: MachineApi>(
+        m: &mut M,
+        algo: Algorithm,
+        mode: ExecMode,
+        p: usize,
+        a: &[u32],
+        b: &[u32],
+    ) -> Vec<u32> {
+        let leaf = leaf_ref(SchoolLeaf);
+        let seq = Seq::range(p);
+        let w = a.len() / p;
+        let da = DistInt::scatter(m, &seq, a, w).unwrap();
+        let db = DistInt::scatter(m, &seq, b, w).unwrap();
+        let c = mul_with_mode(m, &seq, da, db, &leaf, algo, mode)
+            .unwrap_or_else(|e| panic!("{algo} {mode} p={p}: {e}"));
+        let prod = c.gather(m).unwrap();
+        c.free(m);
+        prod
+    }
+    let base = Base::new(16);
+    let topo = TopologyKind::FullyConnected;
+    match engine {
+        EngineKind::Sim => {
+            let mut m = Machine::with_topology(p, cap, base, topo.build(p));
+            let prod = go(&mut m, algo, mode, p, a, b);
+            (prod, m.critical())
+        }
+        EngineKind::Threads => {
+            let mut m = ThreadedMachine::with_topology(p, cap, base, topo.build(p));
+            let prod = go(&mut m, algo, mode, p, a, b);
+            (prod, m.finish().unwrap().critical)
+        }
+        EngineKind::Sockets => {
+            let mut m =
+                SocketMachine::with_config(p, cap, base, topo.build(p), socket_cfg()).unwrap();
+            let prod = go(&mut m, algo, mode, p, a, b);
+            (prod, m.finish().unwrap().critical)
+        }
+    }
+}
+
+/// The exec-mode axis, pinned deterministically on every engine in the
+/// matrix: at the verified roomy (COPSIM fused-MI) and stepping (COPK
+/// clone-elided) cells, the auto-resolved BFS mode must charge strictly
+/// fewer words than DFS at bit-equal T, with products equal to the
+/// sequential reference and all engines bit-identical per mode.
+#[test]
+fn differential_exec_modes_cut_bw_identically_across_engines() {
+    // (algo, p, n, cap, expected mode) — the cells `algorithms::exec`
+    // verifies on the simulator, here re-verified across engines.
+    let cells: &[(Algorithm, usize, usize, u64, ExecMode)] = &[
+        (Algorithm::Copsim, 16, 1024, 8192, ExecMode::Bfs { levels: 2 }),
+        (Algorithm::Copk, 108, 5184, 2304, ExecMode::Bfs { levels: 1 }),
+    ];
+    let base = Base::new(16);
+    for &(algo, p, n, cap, expect) in cells {
+        let mode = resolve_mode(ExecPolicy::Auto, algo, n as u64, p as u64, cap);
+        assert_eq!(mode, expect, "{algo} p={p} n={n} cap={cap}: mode resolution moved");
+        let mut rng = Rng::new(0xE0D1FF ^ n as u64);
+        let a = rng.digits(n, base.log2);
+        let b = rng.digits(n, base.log2);
+        let mut ops = Ops::default();
+        let reference = mul::mul_school(&a, &b, base, &mut ops);
+
+        let mut per_mode: Vec<(ExecMode, Clock)> = Vec::new();
+        for run_mode in [ExecMode::Dfs, mode] {
+            let mut agreed: Option<(Vec<u32>, Clock)> = None;
+            for &engine in engine_matrix() {
+                let (prod, cost) = run_mode_cell(engine, algo, run_mode, p, cap, &a, &b);
+                assert_eq!(
+                    prod, reference,
+                    "{algo} {run_mode} p={p} ({engine}): product diverges from reference"
+                );
+                match &agreed {
+                    None => agreed = Some((prod, cost)),
+                    Some((_, c0)) => assert_eq!(
+                        cost, *c0,
+                        "{algo} {run_mode} p={p} ({engine}): cost triple diverges"
+                    ),
+                }
+            }
+            per_mode.push((run_mode, agreed.unwrap().1));
+        }
+        let (dfs_cost, bfs_cost) = (per_mode[0].1, per_mode[1].1);
+        assert_eq!(bfs_cost.ops, dfs_cost.ops, "{algo} p={p}: T must be mode-invariant");
+        assert!(
+            bfs_cost.words < dfs_cost.words,
+            "{algo} p={p}: BFS must charge strictly fewer words ({} !< {})",
+            bfs_cost.words,
+            dfs_cost.words
+        );
+    }
 }
 
 /// Adversarial operand shapes, asserted against the bignum reference on
@@ -371,12 +531,12 @@ fn differential_adversarial_operands() {
             let seq = Seq::range(procs);
 
             let mut sim = Machine::unbounded(procs, base);
-            let (sim_prod, _) = execute_on(&mut sim, &tm, &spec, &seq, &leaf)
+            let (sim_prod, _, _) = execute_on(&mut sim, &tm, &spec, &seq, &leaf)
                 .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (sim): {e}"));
             assert_eq!(&sim_prod, &want, "{what} algo {algo:?} p={procs} (sim)");
 
             let mut thr = ThreadedMachine::unbounded(procs, base);
-            let (thr_prod, _) = execute_on(&mut thr, &tm, &spec, &seq, &leaf)
+            let (thr_prod, _, _) = execute_on(&mut thr, &tm, &spec, &seq, &leaf)
                 .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (threads): {e}"));
             let report = thr.finish().unwrap();
             assert_eq!(&thr_prod, &want, "{what} algo {algo:?} p={procs} (threads)");
@@ -395,7 +555,7 @@ fn differential_adversarial_operands() {
                     socket_cfg(),
                 )
                 .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (sockets start): {e}"));
-                let (sock_prod, _) = execute_on(&mut sock, &tm, &spec, &seq, &leaf)
+                let (sock_prod, _, _) = execute_on(&mut sock, &tm, &spec, &seq, &leaf)
                     .unwrap_or_else(|e| panic!("{what} algo {algo:?} p={procs} (sockets): {e}"));
                 let sock_report = sock.finish().unwrap();
                 assert_eq!(&sock_prod, &want, "{what} algo {algo:?} p={procs} (sockets)");
@@ -462,7 +622,7 @@ fn differential_scheduler_sharded_vs_single_job() {
             let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
             let seq = Seq::range(shard.len());
             let leaf = leaf_ref(SchoolLeaf);
-            let (product, _algo) =
+            let (product, _algo, _mode) =
                 execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
             assert_eq!(
                 res.product, product,

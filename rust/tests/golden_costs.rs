@@ -29,9 +29,17 @@
 //! pin the leaf kind too: SchoolLeaf cells are leaf-width-independent
 //! and must never move; Slim/Skim-leaf cells are exactly the ones that
 //! feel a future leaf-width change.
+//!
+//! A second table, `tests/golden/cost_table_bfs.tsv`, pins the
+//! exec-mode axis: memory-capped cells run under both the DFS policy
+//! and `auto` (which resolves the breadth-first variants where the cap
+//! affords them), with the resolved mode recorded per line. The main
+//! DFS table above stays byte-untouched — `ExecPolicy::Dfs` dispatches
+//! to exactly the pre-mode code paths — and this file is blessed the
+//! same way (`COPMUL_BLESS=1`, auto-written when absent).
 
 use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf, SkimLeaf, SlimLeaf};
-use copmul::algorithms::Algorithm;
+use copmul::algorithms::{Algorithm, ExecPolicy};
 use copmul::coordinator::{execute_on, JobSpec};
 use copmul::bignum::Base;
 use copmul::sim::Machine;
@@ -142,6 +150,56 @@ fn golden_path() -> PathBuf {
         .join("cost_table.tsv")
 }
 
+/// The exec-mode grid: memory-capped cells where the auto policy's
+/// resolution is interesting — roomy (fused MI), stepping (clone-
+/// elided), and one MI-regime COPK cell that must resolve back to DFS.
+/// Each capped shape appears under both policies so the table shows the
+/// BFS bandwidth win next to its DFS baseline.
+const GRID_BFS: &[(usize, usize, Algorithm, u64, ExecPolicy)] = &[
+    (1024, 16, Algorithm::Copsim, 8192, ExecPolicy::Dfs),
+    (1024, 16, Algorithm::Copsim, 8192, ExecPolicy::Auto),
+    (4096, 256, Algorithm::Copsim, 2048, ExecPolicy::Dfs),
+    (4096, 256, Algorithm::Copsim, 2048, ExecPolicy::Auto),
+    (5184, 108, Algorithm::Copk, 2304, ExecPolicy::Dfs),
+    (5184, 108, Algorithm::Copk, 2304, ExecPolicy::Auto),
+    (384, 12, Algorithm::Copk, 1 << 20, ExecPolicy::Auto),
+];
+
+/// One exec-mode grid cell -> its table line, with the resolved mode
+/// recorded (resolution happens inside `execute_on` against the
+/// machine's cap, exactly as on the scheduler path).
+fn measure_mode(n: usize, p: usize, algo: Algorithm, cap: u64, policy: ExecPolicy) -> String {
+    let base = Base::new(16);
+    let mut rng = Rng::new(0x601D ^ (n as u64) ^ ((p as u64) << 32));
+    let a = rng.digits(n, 16);
+    let b = rng.digits(n, 16);
+    let mut spec = JobSpec::new(0, a, b);
+    spec.procs = p;
+    spec.algo = Some(algo);
+    spec.exec_mode = policy;
+    let mut m = Machine::new(p, cap, base);
+    let seq = Seq::range(p);
+    let leaf = leaf_ref(SchoolLeaf);
+    let (_, _, mode) = execute_on(&mut m, &TimeModel::default(), &spec, &seq, &leaf)
+        .unwrap_or_else(|e| panic!("golden bfs cell n={n} p={p} {algo} {policy}: {e}"));
+    let c = m.critical();
+    format!(
+        "n={n}\tp={p}\talgo={}\tcap={cap}\tpolicy={policy}\tmode={mode}\tT={}\tBW={}\tL={}\tM={}",
+        algo_name(Some(algo)),
+        c.ops,
+        c.words,
+        c.msgs,
+        m.mem_peak_max()
+    )
+}
+
+fn golden_bfs_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("cost_table_bfs.tsv")
+}
+
 /// `--topology=fully-connected` must be a zero-diff spelling of the
 /// default: every golden cell re-measured under the explicit topology
 /// produces the exact line the committed table pins.
@@ -198,5 +256,85 @@ fn golden_cost_table_is_stable() {
                 path.display()
             );
         }
+    }
+}
+
+/// The exec-mode golden table. Same bless protocol as the main table;
+/// the main table is untouched by this grid (its specs stay on the
+/// default DFS policy with unbounded machines).
+#[test]
+fn golden_bfs_cost_table_is_stable() {
+    let lines: Vec<String> = GRID_BFS
+        .iter()
+        .map(|&(n, p, algo, cap, policy)| measure_mode(n, p, algo, cap, policy))
+        .collect();
+    let current = format!(
+        "# Golden exec-mode (T, BW, L, M) table — cost-model engine, memory-capped\n\
+         # cells under dfs/auto policies with the resolved mode per line.\n\
+         # Regenerate ONLY for intentional cost changes:\n\
+         #   COPMUL_BLESS=1 cargo test --test golden_costs\n\
+         # then review and commit the diff (see tests/golden_costs.rs).\n{}\n",
+        lines.join("\n")
+    );
+    let path = golden_bfs_path();
+    let bless = std::env::var("COPMUL_BLESS").is_ok();
+    match std::fs::read_to_string(&path) {
+        Ok(stored) if !bless => {
+            if stored != current {
+                for (want, got) in stored.lines().zip(current.lines()) {
+                    if want != got {
+                        eprintln!("golden bfs mismatch:\n  stored:   {want}\n  measured: {got}");
+                    }
+                }
+                panic!(
+                    "exec-mode cost outputs changed for pinned cells.\n\
+                     If intentional, regenerate with COPMUL_BLESS=1 (instructions in \
+                     {} and tests/golden_costs.rs).",
+                    path.display()
+                );
+            }
+        }
+        _ => {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, &current).unwrap();
+            eprintln!(
+                "golden exec-mode cost table written to {} — commit it to arm the gate",
+                path.display()
+            );
+        }
+    }
+}
+
+/// Structural invariants of the exec-mode grid, independent of blessed
+/// values: every auto cell that resolves away from DFS must beat its
+/// adjacent DFS baseline on charged words at equal T.
+#[test]
+fn golden_bfs_grid_auto_beats_dfs_where_resolved() {
+    for pair in GRID_BFS.chunks(2) {
+        let [(n, p, algo, cap, pol_a), (n2, p2, algo2, cap2, pol_b)] = pair else {
+            continue; // the trailing MI-regime singleton
+        };
+        if !(n == n2 && p == p2 && algo == algo2 && cap == cap2) {
+            continue;
+        }
+        assert_eq!((*pol_a, *pol_b), (ExecPolicy::Dfs, ExecPolicy::Auto));
+        let dfs_line = measure_mode(*n, *p, *algo, *cap, *pol_a);
+        let auto_line = measure_mode(*n, *p, *algo, *cap, *pol_b);
+        let field = |line: &str, key: &str| -> u64 {
+            line.split('\t')
+                .find_map(|f| f.strip_prefix(&format!("{key}=")).map(str::to_string))
+                .unwrap_or_else(|| panic!("missing {key} in {line}"))
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(
+            field(&dfs_line, "T"),
+            field(&auto_line, "T"),
+            "T must be mode-invariant at n={n} p={p}"
+        );
+        assert!(
+            field(&auto_line, "BW") < field(&dfs_line, "BW"),
+            "auto must charge strictly fewer words at n={n} p={p}:\n  {dfs_line}\n  {auto_line}"
+        );
     }
 }

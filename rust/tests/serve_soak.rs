@@ -20,6 +20,10 @@
 //!    cost triple bit-identical to a dedicated fault-free run
 //!    (the paper's per-multiplication bounds are per-job invariants
 //!    even under open-loop serving load).
+//! 5. **Batching leg** (ISSUE 9) — with the small-job coalescing lane
+//!    on (`batch_threshold > 0`), a mixed small/large load still
+//!    balances the accounting identity exactly: batched completions
+//!    fold into `completed`, and every product verifies.
 //!
 //! Scale with `COPMUL_PROP_CASES` (`util::prop::cases`): tier-1 keeps
 //! the fast default; the CI `serve-soak` job raises it in release mode.
@@ -27,7 +31,7 @@
 use std::time::Duration;
 
 use copmul::algorithms::leaf::{leaf_ref, SchoolLeaf};
-use copmul::algorithms::Algorithm;
+use copmul::algorithms::{Algorithm, ExecPolicy};
 use copmul::config::EngineKind;
 use copmul::coordinator::{
     execute_on, run_open_loop, ArrivalGen, Daemon, DaemonConfig, OpenLoop, SchedulerConfig,
@@ -45,6 +49,7 @@ fn workload(procs: usize) -> Workload {
         base_log2: 16,
         procs,
         algo: Some(Algorithm::Copsim),
+        exec_mode: ExecPolicy::Dfs,
     }
 }
 
@@ -284,4 +289,85 @@ fn chaos_under_open_loop_load_keeps_cost_identity() {
             "at rate 2e-4 most jobs see no faults; identity leg must not be vacuous"
         );
     }
+}
+
+/// Invariant 5: small-job coalescing on — a small-n run rides the
+/// batch lane, a large-n run rides the scheduler, and both legs keep
+/// the exact accounting balance with verified products.
+#[test]
+fn batching_lane_keeps_accounting_balance() {
+    use std::sync::atomic::Ordering;
+    let d = daemon(
+        EngineKind::Sim,
+        DaemonConfig {
+            sched: SchedulerConfig {
+                procs: 8,
+                runners: 2,
+                max_queue: 4096,
+                ..Default::default()
+            },
+            // Between the two workload widths below: n = 64 coalesces,
+            // n = 128 takes the scheduler path.
+            batch_threshold: 96,
+            ..Default::default()
+        },
+    );
+    let balance = |rep: &copmul::coordinator::ServingReport| {
+        assert_eq!(
+            rep.completed
+                + rep.failed
+                + rep.shed_slo
+                + rep.shed_queue_full
+                + rep.shed_expired
+                + rep.rejected_unfittable,
+            rep.offered,
+            "accounting must balance with batching on"
+        );
+    };
+    let jobs = jobs_for_tier();
+    let small = run_open_loop(
+        &d,
+        &OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED ^ 6, 50_000.0).unwrap(),
+            jobs,
+            workload: Workload {
+                n: 64,
+                ..workload(4)
+            },
+            verify: true,
+            collect: false,
+        },
+    )
+    .unwrap();
+    balance(&small);
+    assert_eq!(small.completed, small.offered, "nothing sheds under the threshold");
+    assert_eq!(
+        d.stats.batched_completed.load(Ordering::Relaxed),
+        jobs,
+        "every under-threshold job must take the batch lane"
+    );
+    let large = run_open_loop(
+        &d,
+        &OpenLoop {
+            arrivals: ArrivalGen::poisson(SEED ^ 7, 50_000.0).unwrap(),
+            jobs,
+            workload: workload(4),
+            verify: true,
+            collect: false,
+        },
+    )
+    .unwrap();
+    balance(&large);
+    assert_eq!(large.completed, large.offered);
+    assert_eq!(
+        d.stats.batched_completed.load(Ordering::Relaxed),
+        jobs,
+        "over-threshold jobs must not batch"
+    );
+    assert_eq!(
+        d.scheduler().stats.completed.load(Ordering::Relaxed),
+        jobs,
+        "over-threshold jobs all run on the scheduler"
+    );
+    d.shutdown().unwrap();
 }

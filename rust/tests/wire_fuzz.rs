@@ -18,7 +18,7 @@
 //! Seeded mutation fuzzing rides on `util::prop` so a failure names a
 //! replayable case; byte-offset sweeps are exhaustive, not sampled.
 
-use copmul::algorithms::Algorithm;
+use copmul::algorithms::{Algorithm, ExecPolicy};
 use copmul::coordinator::Request;
 use copmul::sim::socket::wire;
 use copmul::sim::threaded::WorkerSnapshot;
@@ -35,6 +35,7 @@ fn sample_request() -> Request {
         algo: Some(Algorithm::Copk),
         mem_cap: Some(1 << 20),
         deadline: Some(Duration::from_millis(250)),
+        exec_mode: ExecPolicy::Auto,
     }
 }
 
@@ -207,7 +208,7 @@ fn request_rejects_bad_magic_version_tag_and_trailing_garbage() {
 
 #[test]
 fn request_rejects_hostile_length_fields_before_allocation() {
-    // Header layout: magic(4) version(1) algo(1) reserved(2) procs(4)
+    // Header layout: magic(4) version(1) algo(1) exec_mode(2) procs(4)
     // mem_cap(8) deadline(8), then a_len at 28..32 and b_len at 32..36.
     let good = sample_request().encode();
     for (name, off) in [("a_len", 28usize), ("b_len", 32usize)] {
