@@ -80,7 +80,7 @@ use crate::metrics::{fmt_u64, latency_summary, percentile};
 use crate::sim::Clock;
 use crate::util::frame::FrameCursor;
 use crate::util::Rng;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -549,7 +549,16 @@ impl Daemon {
         let waiting = self.sched.stats.in_flight.load(Ordering::Relaxed);
         let ewma = self.stats.ewma_service_us.load(Ordering::Relaxed);
         let runners = self.sched.config().runners.max(1) as u64;
-        Duration::from_micros(waiting.saturating_mul(ewma) / runners)
+        let est = waiting.saturating_mul(ewma) / runners;
+        // Degraded mode: with only `live` of `total` processors in
+        // service the same backlog drains proportionally slower, so the
+        // estimate (and the SLO rung behind it) scales by total/live —
+        // a degraded machine sheds honestly instead of queueing jobs to
+        // expiry. At full health this is exactly the undegraded
+        // estimate, so the zero-fault path is unchanged.
+        let total = self.sched.config().procs.max(1) as u64;
+        let live = self.sched.live_procs().max(1) as u64;
+        Duration::from_micros(est.saturating_mul(total) / live)
     }
 
     /// Fold a completed job's end-to-end wall into the service EWMA
@@ -759,6 +768,15 @@ pub struct ServingReport {
     pub shed_expired: u64,
     pub rejected_unfittable: u64,
     pub retries: u64,
+    /// Quarantine events during the run (processors pulled from
+    /// service; monotone-counter delta).
+    pub quarantined: u64,
+    /// Processors re-admitted to the pool by probation during the run.
+    pub dequarantined: u64,
+    /// Probation canary probes executed during the run.
+    pub probes_sent: u64,
+    /// Socket worker-process groups respawned during the run.
+    pub respawns: u64,
     pub wall: Duration,
     /// Completed jobs' end-to-end latency, µs, ascending.
     pub lat_us: Vec<u64>,
@@ -810,11 +828,12 @@ impl ServingReport {
         Ok(())
     }
 
-    /// Two-line human summary (never panics on an all-shed run).
+    /// Two-line human summary (never panics on an all-shed run), plus a
+    /// recovery line whenever the self-healing machinery fired.
     pub fn summary(&self) -> String {
         let mut lat = self.lat_us.clone();
         let head = latency_summary(self.offered as usize, self.wall, &mut lat);
-        format!(
+        let mut out = format!(
             "{head}\n  p999={}µs goodput={:.1} jobs/s | shed: {} slo-early, {} queue-full, \
              {} deadline-expired | {} unfittable, {} failed, {} retried",
             fmt_u64(self.percentile_us(0.999)),
@@ -825,7 +844,14 @@ impl ServingReport {
             self.rejected_unfittable,
             self.failed,
             self.retries,
-        )
+        );
+        if self.quarantined + self.dequarantined + self.probes_sent + self.respawns > 0 {
+            out.push_str(&format!(
+                "\n  recovery: {} quarantined, {} probed back, {} probes, {} respawns",
+                self.quarantined, self.dequarantined, self.probes_sent, self.respawns
+            ));
+        }
+        out
     }
 }
 
@@ -840,6 +866,10 @@ struct Counters {
     shed_expired: u64,
     rejected_unfittable: u64,
     retries: u64,
+    quarantined: u64,
+    dequarantined: u64,
+    probes_sent: u64,
+    respawns: u64,
 }
 
 fn snapshot(d: &Daemon) -> Counters {
@@ -858,6 +888,10 @@ fn snapshot(d: &Daemon) -> Counters {
         shed_expired: ss.shed_expired.load(Ordering::Relaxed),
         rejected_unfittable: s.rejected_unfittable.load(Ordering::Relaxed),
         retries: ss.retries.load(Ordering::Relaxed),
+        quarantined: ss.procs_quarantined.load(Ordering::Relaxed),
+        dequarantined: ss.procs_dequarantined.load(Ordering::Relaxed),
+        probes_sent: ss.probes_sent.load(Ordering::Relaxed),
+        respawns: ss.respawns.load(Ordering::Relaxed),
     }
 }
 
@@ -881,8 +915,19 @@ pub fn run_open_loop(daemon: &Daemon, load: &OpenLoop) -> Result<ServingReport> 
     let base = daemon.base();
     let collect = load.collect;
     let (tx, rx) = channel::<(u64, Option<Vec<u32>>, Receiver<Result<JobResult>>)>();
+    let stop_probation = AtomicBool::new(false);
     let t0 = Instant::now();
     let (mut lat_us, results, verify_err) = std::thread::scope(|s| {
+        // Probation pump: periodically walk quarantined processors back
+        // into service while the run is live. With an empty quarantine
+        // ledger `probe_quarantined` returns without touching the
+        // machine, so fault-free runs execute zero probe machinery.
+        let prober = s.spawn(|| {
+            while !stop_probation.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(10));
+                daemon.scheduler().probe_quarantined();
+            }
+        });
         let collector = s.spawn(move || {
             let mut lat = Vec::new();
             let mut out = Vec::new();
@@ -928,7 +973,10 @@ pub fn run_open_loop(daemon: &Daemon, load: &OpenLoop) -> Result<ServingReport> 
             }
         }
         drop(tx);
-        collector.join().expect("collector thread panicked")
+        let joined = collector.join().expect("collector thread panicked");
+        stop_probation.store(true, Ordering::Relaxed);
+        prober.join().expect("probation thread panicked");
+        joined
     });
     let wall = t0.elapsed();
     if let Some(msg) = verify_err {
@@ -945,6 +993,10 @@ pub fn run_open_loop(daemon: &Daemon, load: &OpenLoop) -> Result<ServingReport> 
         shed_expired: after.shed_expired - before.shed_expired,
         rejected_unfittable: after.rejected_unfittable - before.rejected_unfittable,
         retries: after.retries - before.retries,
+        quarantined: after.quarantined - before.quarantined,
+        dequarantined: after.dequarantined - before.dequarantined,
+        probes_sent: after.probes_sent - before.probes_sent,
+        respawns: after.respawns - before.respawns,
         wall,
         lat_us,
         results,

@@ -15,14 +15,18 @@
 //!   machine per job.
 //! * [`scheduler`] — sharded multi-job scheduling: one shared machine
 //!   (either engine) carved into per-job shards sized by the paper's
-//!   memory requirements, with admission control and work-stealing of
-//!   freed shards.
+//!   memory requirements, with admission control, work-stealing of
+//!   freed shards, and self-healing capacity: quarantined processors
+//!   are probed back into service by verified canary multiplies
+//!   (probation), and dead socket worker groups are respawned.
 //! * [`batcher`] — dynamic batcher: concurrent leaf products from
 //!   different workers are coalesced into one batched artifact
 //!   execution (padding the batch dimension), amortizing PJRT dispatch.
 //! * [`daemon`] — always-on serving: a persistent scheduler under
 //!   seeded open-loop arrivals (Poisson/bursty) with per-job deadlines
-//!   and SLO-aware early shedding; the layer behind `copmul daemon`.
+//!   and SLO-aware early shedding — scaled by the live processor count
+//!   when the machine is degraded, with the recovery story reported
+//!   first-class; the layer behind `copmul daemon`.
 
 pub mod batcher;
 pub mod daemon;

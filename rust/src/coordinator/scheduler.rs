@@ -82,6 +82,26 @@
 //!   capacity fail with a "machine degraded" error instead of waiting
 //!   forever.
 //!
+//! Quarantine is **probation**, not a death sentence
+//! ([`Scheduler::probe_quarantined`]): each cycle health-probes every
+//! quarantined processor with a tiny canary multiply on a dedicated
+//! one-processor shard, and `cfg.probation_successes` consecutive
+//! passes re-admit the processor to the free pool with its strike
+//! ledger reset. Probes run with injection suppressed (they judge the
+//! machine, not the fault plan — the same escape hatch as the
+//! safe-mode final attempt) and verify the canary's product, so a
+//! genuinely dead worker keeps failing them. On the socket engine a
+//! probation cycle first respawns dead worker-process groups
+//! ([`crate::sim::SocketMachine::respawn_group`]) so the canaries have
+//! live processes to land on. Canaries are **cost-invisible to
+//! clients**: a probe touches only its own quarantined processor's
+//! clock, and every client job barriers its shard to a uniform
+//! baseline at acquisition — max-plus clock evolution commutes with
+//! the uniform shift, so client cost triples are bit-identical whether
+//! or not probes ever ran (asserted in `tests/chaos_soak.rs`). With an
+//! empty quarantine ledger the cycle is a no-op, so zero-fault runs
+//! never execute probe machinery at all.
+//!
 //! Each shard's fault-plan op indices are rewound at acquisition
 //! ([`FaultyMachine::reset_op_index`]), so a job's fault pattern depends
 //! on the seed, its shard, and its own operation stream — not on queue
@@ -658,6 +678,9 @@ struct PoolState {
     /// Consecutive job-killing failures per processor; any success on
     /// the processor resets it.
     strikes: Vec<u32>,
+    /// Consecutive probation-probe passes per processor; reaching
+    /// `SchedulerConfig::probation_successes` de-quarantines it.
+    probe_streak: Vec<u32>,
 }
 
 struct Pool {
@@ -677,6 +700,7 @@ impl Pool {
                 next_ticket: 0,
                 serving: 0,
                 strikes: vec![0; total],
+                probe_streak: vec![0; total],
             }),
             freed: Condvar::new(),
         }
@@ -763,6 +787,34 @@ impl Pool {
         drop(st);
         self.freed.notify_all();
     }
+
+    /// Record one probation-probe outcome for a quarantined processor.
+    /// `k` consecutive passes de-quarantine it: the strike ledger and
+    /// streak reset, the processor rejoins the free pool, and waiters
+    /// are woken (a degraded-blocked acquire may now fit). Returns true
+    /// when the processor was re-admitted by this call.
+    fn record_probe(&self, p: ProcId, ok: bool, k: u32, stats: &SchedulerStats) -> bool {
+        let mut st = self.state.lock().unwrap();
+        if !st.quarantined.contains(&p) {
+            return false; // no longer quarantined — nothing to record
+        }
+        if !ok {
+            st.probe_streak[p] = 0;
+            return false;
+        }
+        st.probe_streak[p] = st.probe_streak[p].saturating_add(1);
+        if st.probe_streak[p] < k {
+            return false;
+        }
+        st.quarantined.retain(|&q| q != p);
+        st.probe_streak[p] = 0;
+        st.strikes[p] = 0;
+        st.free.push(p);
+        stats.procs_dequarantined.fetch_add(1, Ordering::Relaxed);
+        drop(st);
+        self.freed.notify_all();
+        true
+    }
 }
 
 // -------------------------------------------------------- the scheduler
@@ -813,6 +865,10 @@ pub struct SchedulerConfig {
     /// Quarantine a processor after this many *consecutive* job-killing
     /// failures (0 disables quarantine).
     pub quarantine_after: u32,
+    /// Consecutive probation-probe passes required before a quarantined
+    /// processor is re-admitted to the free pool (clamped to >= 1; see
+    /// [`Scheduler::probe_quarantined`]).
+    pub probation_successes: u32,
     /// Socket-engine wiring (`engine == EngineKind::Sockets` only):
     /// worker-process grouping, transport, reply timeout, worker
     /// binary. Ignored by the other engines.
@@ -833,6 +889,7 @@ impl Default for SchedulerConfig {
             fault: None,
             max_attempts: 3,
             quarantine_after: 4,
+            probation_successes: 2,
             socket: SocketConfig::default(),
         }
     }
@@ -858,8 +915,17 @@ pub struct SchedulerStats {
     /// nor `failed` — shedding is the admission policy working, not a
     /// job failing).
     pub shed_expired: AtomicU64,
-    /// Processors pulled from service by the quarantine policy.
+    /// Quarantine *events*: processors pulled from service by the
+    /// quarantine policy, counted monotonically (de-quarantine does not
+    /// decrement — the live count is [`Scheduler::quarantined_procs`]).
     pub procs_quarantined: AtomicU64,
+    /// Processors re-admitted to the free pool by probation (monotone).
+    pub procs_dequarantined: AtomicU64,
+    /// Probation canary probes executed.
+    pub probes_sent: AtomicU64,
+    /// Socket worker-process groups successfully respawned by
+    /// probation cycles.
+    pub respawns: AtomicU64,
     /// High-water mark of concurrently running jobs.
     pub peak_concurrent: AtomicU64,
     /// Sum of per-job end-to-end wall times (they overlap under
@@ -911,6 +977,8 @@ pub struct Scheduler {
     pool: Arc<Pool>,
     tx: Option<Sender<Queued>>,
     runners: Vec<JoinHandle<()>>,
+    /// Kept for probation canaries (runners hold their own clones).
+    leaf: LeafRef,
     pub stats: Arc<SchedulerStats>,
 }
 
@@ -1006,6 +1074,7 @@ impl Scheduler {
             pool,
             tx: Some(tx),
             runners,
+            leaf,
             stats,
         })
     }
@@ -1022,8 +1091,21 @@ impl Scheduler {
         on_engine!(g, m => m.total_injected())
     }
 
-    /// Live (non-quarantined) processors are `cfg.procs` minus this.
+    /// Processors *currently* quarantined — the live ledger, so
+    /// de-quarantine decrements it. Live (non-quarantined) processors
+    /// are `cfg.procs` minus this. (Historically this read the
+    /// monotone event counter, which skewed from
+    /// [`Scheduler::quarantined_proc_ids`] the moment probation
+    /// re-admitted anything; the event counter is now
+    /// [`Scheduler::total_quarantine_events`].)
     pub fn quarantined_procs(&self) -> u64 {
+        self.pool.state.lock().unwrap().quarantined.len() as u64
+    }
+
+    /// Monotone count of quarantine events over the scheduler's life
+    /// (a processor quarantined, probed back, and quarantined again
+    /// counts twice).
+    pub fn total_quarantine_events(&self) -> u64 {
         self.stats.procs_quarantined.load(Ordering::Relaxed)
     }
 
@@ -1035,6 +1117,13 @@ impl Scheduler {
         let mut q = st.quarantined.clone();
         q.sort_unstable();
         q
+    }
+
+    /// Processors currently in service: the machine size minus the
+    /// live quarantine ledger. The daemon's degraded-mode shed estimate
+    /// scales by `total / live`.
+    pub fn live_procs(&self) -> usize {
+        self.cfg.procs.saturating_sub(self.quarantined_procs() as usize)
     }
 
     /// Socket engine only: OS pids of the live worker processes by
@@ -1057,6 +1146,78 @@ impl Scheduler {
         match &*guard {
             EngineMachine::Sockets(m) => m.inner().kill_worker(group),
             _ => bail!("kill_socket_worker: scheduler is not on the socket engine"),
+        }
+    }
+
+    /// One probation cycle (module docs, "Fault recovery"): health-probe
+    /// every quarantined processor with a canary multiply on a dedicated
+    /// one-processor shard; [`SchedulerConfig::probation_successes`]
+    /// consecutive passes re-admit the processor. On the socket engine,
+    /// dead worker-process groups are respawned first so the canaries
+    /// have live processes to land on. Probes run with injection
+    /// suppressed (they judge the machine, not the fault plan) and
+    /// verify the canary product digit for digit. Returns the number of
+    /// processors de-quarantined this cycle; a no-op (and no probe ever
+    /// runs) while the quarantine ledger is empty.
+    pub fn probe_quarantined(&self) -> usize {
+        let ids = self.quarantined_proc_ids();
+        if ids.is_empty() {
+            return 0;
+        }
+        // Socket engine: a quarantined processor usually means its
+        // whole worker-process group died — respawn dead groups so the
+        // canaries have somewhere to run. A failed respawn is not
+        // terminal: the probe fails and the next cycle retries with the
+        // machine's jittered backoff.
+        {
+            let mut g = self.shared.lock().unwrap();
+            if let EngineMachine::Sockets(m) = &mut *g {
+                for group in m.inner().dead_groups() {
+                    if m.inner_mut().respawn_group(group).is_ok() {
+                        self.stats.respawns.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        let k = self.cfg.probation_successes.max(1);
+        let mut readmitted = 0;
+        for p in ids {
+            // Heal + purge first, so the probe judges the processor as
+            // the next client job would find it; suppress injection for
+            // the probe's duration (the safe-mode escape hatch).
+            {
+                let mut g = self.shared.lock().unwrap();
+                on_engine!(g, m => {
+                    m.heal(p);
+                    MachineApi::purge(m, p);
+                    m.set_suppressed(p, true);
+                });
+            }
+            self.stats.probes_sent.fetch_add(1, Ordering::Relaxed);
+            let ok = self.run_canary(p);
+            {
+                let mut g = self.shared.lock().unwrap();
+                on_engine!(g, m => m.set_suppressed(p, false));
+            }
+            if self.pool.record_probe(p, ok, k, &self.stats) {
+                readmitted += 1;
+            }
+        }
+        readmitted
+    }
+
+    /// Run the canary multiply on the one-processor shard `[p]` and
+    /// verify its product. Any error — dead worker, timeout, wrong
+    /// digits — fails the probe. The canary never touches the job
+    /// queue or the completed/failed counters: probation is machine
+    /// maintenance, not serving traffic.
+    fn run_canary(&self, p: ProcId) -> bool {
+        let mut spec = JobSpec::new(u64::MAX, CANARY_A.to_vec(), CANARY_B.to_vec());
+        spec.procs = 1;
+        spec.algo = Some(Algorithm::Copsim);
+        match run_sharded(&self.shared, &self.cfg, &spec, &[p], &self.leaf) {
+            Ok(r) => r.product == canary_product(self.cfg.base),
+            Err(_) => false,
         }
     }
 
@@ -1225,6 +1386,21 @@ fn shard_fault_count(shared: &Arc<Mutex<EngineMachine>>, shard: &[ProcId]) -> u6
 /// backoff must agree on this rule — see `Scheduler::submit`).
 fn effective_cap(spec: &JobSpec, machine_cap: u64) -> u64 {
     spec.mem_cap.unwrap_or(u64::MAX / 2).min(machine_cap)
+}
+
+/// Fixed probation-canary operands: digits valid in every machine base
+/// (all < 4), small enough that a probe is microseconds of work.
+const CANARY_A: [u32; 8] = [1, 2, 3, 1, 2, 3, 1, 2];
+const CANARY_B: [u32; 8] = [3, 2, 1, 3, 2, 1, 3, 2];
+
+/// The canary's expected product in `base`, normalized exactly like a
+/// [`JobResult::product`].
+fn canary_product(base: Base) -> Vec<u32> {
+    let mut ops = Ops::default();
+    let mut prod = crate::bignum::mul::mul_school(&CANARY_A, &CANARY_B, base, &mut ops);
+    let keep = crate::bignum::core::normalized_len(&prod).max(1);
+    prod.truncate(keep);
+    prod
 }
 
 /// Execute one job with the scheduler's recovery policy (module docs,
@@ -1774,6 +1950,7 @@ mod tests {
         {
             let mut view = ShardView {
                 machine: Arc::clone(&sched.shared),
+                ledger: None,
             };
             for p in 0..4 {
                 view.purge(p);
@@ -1943,6 +2120,61 @@ mod tests {
         );
         assert_eq!(sched.quarantined_procs(), 3);
         assert_eq!(sched.stats.failed.load(Ordering::Relaxed), 1);
+        sched.shutdown().unwrap();
+    }
+
+    #[test]
+    fn probation_dequarantines_and_counters_agree() {
+        // Crash-always plan with quarantine_after = 1: the first 4-wide
+        // job's failed attempts pull three of the four processors (never
+        // below one live) and the job dies degraded. Probation must then
+        // walk them back: K = 2 cycles of passing canaries re-admit all
+        // three, the live ledger returns to zero, and the monotone event
+        // counter keeps the history.
+        use crate::sim::{FaultConfig, FaultKind};
+        let cfg = SchedulerConfig {
+            procs: 4,
+            runners: 1,
+            fault: Some(FaultConfig::new(0xDE6, 1.0).only(&[FaultKind::Crash])),
+            max_attempts: 3,
+            quarantine_after: 1,
+            probation_successes: 2,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
+        let mut spec = JobSpec::new(0, vec![1; 32], vec![2; 32]);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        sched.submit_blocking(spec.clone()).unwrap_err();
+        // The skew the accounting fix closes: live ledger and event
+        // counter agree while nothing has recovered yet...
+        assert_eq!(sched.quarantined_procs(), 3);
+        assert_eq!(sched.total_quarantine_events(), 3);
+        assert_eq!(
+            sched.quarantined_proc_ids().len() as u64,
+            sched.quarantined_procs()
+        );
+        // First cycle: streak 1 of 2, nothing re-admitted yet.
+        assert_eq!(sched.probe_quarantined(), 0);
+        assert_eq!(sched.quarantined_procs(), 3);
+        // Second cycle reaches the streak: all three return.
+        assert_eq!(sched.probe_quarantined(), 3);
+        assert_eq!(sched.quarantined_procs(), 0);
+        assert!(sched.quarantined_proc_ids().is_empty());
+        // ...and after the full quarantine -> probation -> recovery
+        // cycle the live count reflects recovery while the monotone
+        // event counter does not move.
+        assert_eq!(sched.total_quarantine_events(), 3);
+        assert_eq!(sched.stats.procs_dequarantined.load(Ordering::Relaxed), 3);
+        assert_eq!(sched.stats.probes_sent.load(Ordering::Relaxed), 6);
+        // An empty ledger makes further cycles a strict no-op.
+        assert_eq!(sched.probe_quarantined(), 0);
+        assert_eq!(sched.stats.probes_sent.load(Ordering::Relaxed), 6);
+        // The recovered machine serves again (safe-mode final attempt
+        // beats the still-armed crash plan on a 1-wide job).
+        spec.id = 1;
+        spec.procs = 1;
+        sched.submit_blocking(spec).unwrap();
         sched.shutdown().unwrap();
     }
 

@@ -14,6 +14,7 @@ pub mod algorithms;
 pub mod chaos;
 pub mod engines;
 pub mod primitives;
+pub mod rolling_chaos;
 pub mod scheduler;
 pub mod serving;
 pub mod strong_scaling;
@@ -213,6 +214,12 @@ pub fn registry() -> Vec<Experiment> {
             title: "strong scaling at fixed per-proc memory: cliff, MI range, BFS range",
             run: strong_scaling::e20_strong_scaling,
         },
+        Experiment {
+            id: "E21",
+            paper_ref: "strong scaling under faults",
+            title: "rolling-kill soak: respawn + probation keep goodput within bound",
+            run: rolling_chaos::e21_rolling_chaos,
+        },
     ]
 }
 
@@ -237,10 +244,10 @@ mod tests {
     #[test]
     fn registry_ids_unique_and_complete() {
         let reg = registry();
-        assert_eq!(reg.len(), 20);
+        assert_eq!(reg.len(), 21);
         let mut ids: Vec<_> = reg.iter().map(|e| e.id).collect();
         ids.dedup();
-        assert_eq!(ids.len(), 20);
+        assert_eq!(ids.len(), 21);
     }
 
     #[test]

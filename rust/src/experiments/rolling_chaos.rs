@@ -1,0 +1,361 @@
+//! E21 — rolling-kill soak: self-healing capacity under sustained
+//! processor loss, on the in-process engines (FaultyMachine crash +
+//! heal + probation) and the socket engine (real SIGKILL + respawn).
+//!
+//! The same seeded open-loop workload runs twice per engine:
+//!
+//! * **clean** — faults off, kills off. The reference goodput, and a
+//!   standing guard that the probation machinery is a strict no-op on
+//!   a healthy machine (zero probes, zero quarantines — the zero-fault
+//!   cost-identity invariant's serving-side face; the bit-exact half
+//!   lives in `tests/chaos_soak.rs`).
+//! * **chaos** — in-process: a seeded always-on `Crash` plan keeps
+//!   killing shard processors, the quarantine policy pulls them, and
+//!   the daemon's probation pump heals + canary-probes them back.
+//!   Sockets: worker-process groups are SIGKILL'd on a schedule while
+//!   jobs run; the pump respawns the dead groups
+//!   ([`SocketMachine::respawn_group`]) and probation re-admits their
+//!   processors.
+//!
+//! Reported per engine: both goodputs, their ratio, and the recovery
+//! counters `{kills, quarantine events, de-quarantined, probes,
+//! respawns}`. The experiment *asserts* the self-healing claims: every
+//! chaos leg must de-quarantine capacity back (in-process) or respawn
+//! the killed groups (sockets), the ledger must drain to empty once
+//! the storm stops, and steady-state goodput must stay within
+//! [`RECOVERY_FACTOR`] of the clean run — capacity loss is transient,
+//! not a permanent strong-scaling downgrade (cf. ROADMAP item 1).
+//!
+//! [`SocketMachine::respawn_group`]: crate::sim::SocketMachine::respawn_group
+
+use crate::algorithms::leaf::{leaf_ref, SchoolLeaf};
+use crate::algorithms::{Algorithm, ExecPolicy};
+use crate::config::EngineKind;
+use crate::coordinator::{
+    run_open_loop, ArrivalGen, Daemon, DaemonConfig, OpenLoop, SchedulerConfig, ServingReport,
+    Workload,
+};
+use crate::error::{ensure, Result};
+use crate::metrics::Table;
+use crate::sim::{socket_available, FaultConfig, FaultKind, SocketConfig};
+use std::time::Duration;
+
+/// Documented recovery bound: chaos-leg goodput must stay within this
+/// factor of the clean run on the same engine. The bound is loose on
+/// purpose — it has to hold under debug builds and loaded CI hosts —
+/// but it is the difference between "goodput dips and recovers" and
+/// "one fault burst permanently downgrades the machine".
+pub const RECOVERY_FACTOR: f64 = 8.0;
+
+/// One (engine, clean-vs-chaos) soak outcome — the `recovery[]`
+/// section of the schema-10 bench JSON.
+#[derive(Clone, Debug)]
+pub struct RecoveryCell {
+    pub engine: &'static str,
+    pub offered: u64,
+    pub completed: u64,
+    pub shed: u64,
+    /// Kill events: worker SIGKILLs (sockets) or injected crash faults
+    /// (in-process; the plan's total).
+    pub kills: u64,
+    /// Monotone quarantine events during the chaos leg.
+    pub quarantine_events: u64,
+    /// Processors probation re-admitted during the chaos leg.
+    pub dequarantined: u64,
+    pub probes_sent: u64,
+    pub respawns: u64,
+    pub clean_goodput_per_s: f64,
+    pub chaos_goodput_per_s: f64,
+    /// `chaos / clean` goodput (the number [`RECOVERY_FACTOR`] bounds).
+    pub recovery_ratio: f64,
+}
+
+/// Soak sizing: `smoke` keeps CI's debug tier fast; the full size runs
+/// in `copmul bench` / the release `rolling-chaos` job.
+fn sizes(smoke: bool) -> (u64, f64) {
+    if smoke {
+        (48, 400.0)
+    } else {
+        (160, 800.0)
+    }
+}
+
+fn daemon_for(engine: EngineKind, fault: Option<FaultConfig>) -> Result<Daemon> {
+    Daemon::start(
+        DaemonConfig {
+            sched: SchedulerConfig {
+                procs: 16,
+                runners: 4,
+                engine,
+                max_queue: 4096,
+                fault,
+                max_attempts: 4,
+                // Quarantine fast and probe back fast: the soak is
+                // about the *churn*, not about tuning the thresholds.
+                quarantine_after: 2,
+                probation_successes: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        leaf_ref(SchoolLeaf),
+    )
+}
+
+fn open_loop(seed: u64, jobs: u64, rate: f64, procs: usize, n: usize) -> Result<OpenLoop> {
+    Ok(OpenLoop {
+        arrivals: ArrivalGen::poisson(seed ^ 0xE21, rate)?,
+        jobs,
+        workload: Workload {
+            seed: seed ^ 0x50AC,
+            n,
+            base_log2: 16,
+            procs,
+            algo: Some(Algorithm::Copsim),
+            exec_mode: ExecPolicy::Dfs,
+        },
+        verify: false,
+        collect: false,
+    })
+}
+
+/// The clean leg doubles as the no-op guard: a healthy machine must
+/// never see a probe, a quarantine, or a respawn.
+fn check_clean(engine: &str, rep: &ServingReport) -> Result<()> {
+    ensure!(rep.completed > 0, "E21 {engine}: clean run completed nothing");
+    ensure!(
+        rep.quarantined == 0 && rep.dequarantined == 0 && rep.probes_sent == 0
+            && rep.respawns == 0,
+        "E21 {engine}: probation machinery fired on a zero-fault run \
+         ({} quarantined, {} probes) — the no-op invariant is broken",
+        rep.quarantined,
+        rep.probes_sent
+    );
+    Ok(())
+}
+
+/// Drain the quarantine ledger after the storm: keep probing until
+/// empty (bounded), then assert full capacity is back. `run_open_loop`'s
+/// pump does most of this during the run; the tail covers processors
+/// quarantined by the last few jobs.
+fn drain_ledger(daemon: &Daemon, engine: &str) -> Result<()> {
+    for _ in 0..64 {
+        if daemon.scheduler().quarantined_procs() == 0 {
+            break;
+        }
+        daemon.scheduler().probe_quarantined();
+    }
+    let left = daemon.scheduler().quarantined_procs();
+    ensure!(
+        left == 0,
+        "E21 {engine}: {left} processors still quarantined after the storm \
+         stopped and 64 probation cycles — capacity loss is not reversible"
+    );
+    Ok(())
+}
+
+/// In-process leg: a seeded `Crash`-only plan rolls over the shard
+/// processors for the whole run while the daemon's probation pump
+/// heals and re-admits them.
+fn in_process_leg(engine: EngineKind, name: &'static str, smoke: bool) -> Result<RecoveryCell> {
+    let (jobs, rate) = sizes(smoke);
+    let clean = {
+        let daemon = daemon_for(engine, None)?;
+        let rep = run_open_loop(&daemon, &open_loop(11, jobs, rate, 4, 256)?)?;
+        check_clean(name, &rep)?;
+        daemon.shutdown()?;
+        rep
+    };
+    let daemon = daemon_for(
+        engine,
+        Some(FaultConfig::new(0xE21, 1e-3).only(&[FaultKind::Crash])),
+    )?;
+    let rep = run_open_loop(&daemon, &open_loop(11, jobs, rate, 4, 256)?)?;
+    drain_ledger(&daemon, name)?;
+    let kills = daemon.scheduler().faults_injected();
+    daemon.shutdown()?;
+    ensure!(rep.completed > 0, "E21 {name}: chaos run completed nothing");
+    ensure!(kills > 0, "E21 {name}: the crash plan injected nothing");
+    ensure!(
+        rep.quarantined > 0 && rep.dequarantined > 0,
+        "E21 {name}: no quarantine churn ({} quarantined, {} back) — the soak \
+         exercised nothing",
+        rep.quarantined,
+        rep.dequarantined
+    );
+    Ok(cell(name, kills, &clean, rep))
+}
+
+/// Socket leg: real SIGKILLs on a deterministic schedule (kill a
+/// group, give the pump a beat to respawn + probe, kill the next),
+/// while the open-loop workload runs from this thread.
+fn socket_leg(smoke: bool) -> Result<RecoveryCell> {
+    let (jobs, rate) = {
+        let (j, r) = sizes(smoke);
+        (j / 2, r / 2.0) // socket jobs are process-crossing; keep the soak bounded
+    };
+    let clean = {
+        let daemon = daemon_for(EngineKind::Sockets, None)?;
+        let rep = run_open_loop(&daemon, &open_loop(13, jobs, rate, 2, 128)?)?;
+        check_clean("sockets", &rep)?;
+        daemon.shutdown()?;
+        rep
+    };
+    let daemon = daemon_for(EngineKind::Sockets, None)?;
+    let groups = daemon.scheduler().socket_worker_pids().len();
+    ensure!(groups >= 2, "E21 sockets: expected >= 2 worker groups, got {groups}");
+    let mut kills = 0u64;
+    let rep = std::thread::scope(|scope| -> Result<ServingReport> {
+        let sched = daemon.scheduler();
+        let killer = scope.spawn(move || -> u64 {
+            let mut killed = 0;
+            // Rolling schedule: one group at a time, never the whole
+            // fleet at once — the liveness wall (chaos_soak) covers
+            // the all-dead edge; this soak measures recovery.
+            for (delay_ms, g) in [(120u64, 1usize), (350, 0), (600, 1)] {
+                std::thread::sleep(Duration::from_millis(delay_ms));
+                if sched.kill_socket_worker(g % groups).is_ok() {
+                    killed += 1;
+                }
+            }
+            killed
+        });
+        let rep = run_open_loop(&daemon, &open_loop(13, jobs, rate, 2, 128)?);
+        kills = killer.join().expect("E21 kill thread panicked");
+        rep
+    })?;
+    drain_ledger(&daemon, "sockets")?;
+    ensure!(
+        daemon.scheduler().socket_worker_pids().iter().all(Option::is_some),
+        "E21 sockets: a worker group is still dead after the drain"
+    );
+    daemon.shutdown()?;
+    ensure!(kills > 0, "E21 sockets: the kill schedule killed nothing");
+    ensure!(
+        rep.respawns > 0,
+        "E21 sockets: {kills} kills but zero respawns — the elastic pool never fired"
+    );
+    Ok(cell("sockets", kills, &clean, rep))
+}
+
+fn cell(
+    engine: &'static str,
+    kills: u64,
+    clean: &ServingReport,
+    rep: ServingReport,
+) -> RecoveryCell {
+    let clean_gp = clean.goodput_per_s();
+    RecoveryCell {
+        engine,
+        offered: rep.offered,
+        completed: rep.completed,
+        shed: rep.shed_total(),
+        kills,
+        quarantine_events: rep.quarantined,
+        dequarantined: rep.dequarantined,
+        probes_sent: rep.probes_sent,
+        respawns: rep.respawns,
+        clean_goodput_per_s: clean_gp,
+        chaos_goodput_per_s: rep.goodput_per_s(),
+        recovery_ratio: rep.goodput_per_s() / clean_gp.max(1e-9),
+    }
+}
+
+/// The full soak: both in-process engines, plus the socket engine when
+/// a worker binary resolves. Feeds both `copmul experiment E21` and
+/// the bench report's `recovery[]` section.
+pub fn soak_cells(smoke: bool) -> Result<Vec<RecoveryCell>> {
+    let mut cells = vec![
+        in_process_leg(EngineKind::Sim, "sim", smoke)?,
+        in_process_leg(EngineKind::Threads, "threads", smoke)?,
+    ];
+    if socket_available() {
+        cells.push(socket_leg(smoke)?);
+    }
+    for c in &cells {
+        ensure!(
+            c.recovery_ratio >= 1.0 / RECOVERY_FACTOR,
+            "E21 {}: chaos goodput {:.1}/s is below clean {:.1}/s by more than \
+             the documented {RECOVERY_FACTOR}x recovery bound",
+            c.engine,
+            c.chaos_goodput_per_s,
+            c.clean_goodput_per_s
+        );
+    }
+    Ok(cells)
+}
+
+pub fn e21_rolling_chaos() -> Result<Vec<Table>> {
+    let smoke = std::env::var("COPMUL_E21_FULL").as_deref() != Ok("1");
+    let cells = soak_cells(smoke)?;
+    let sock_note = if socket_available() {
+        "socket leg: real SIGKILL + respawn"
+    } else {
+        "socket leg skipped: no worker binary"
+    };
+    let mut t = Table::new(
+        format!(
+            "E21: rolling-kill soak — goodput under sustained processor loss vs \
+             the clean run (bound: within {RECOVERY_FACTOR}x; {sock_note})"
+        ),
+        &[
+            "engine",
+            "offered",
+            "done",
+            "shed",
+            "kills",
+            "quarantined",
+            "probed back",
+            "probes",
+            "respawns",
+            "clean gp/s",
+            "chaos gp/s",
+            "ratio",
+        ],
+    );
+    for c in &cells {
+        t.row(vec![
+            c.engine.into(),
+            c.offered.to_string(),
+            c.completed.to_string(),
+            c.shed.to_string(),
+            c.kills.to_string(),
+            c.quarantine_events.to_string(),
+            c.dequarantined.to_string(),
+            c.probes_sent.to_string(),
+            c.respawns.to_string(),
+            format!("{:.1}", c.clean_goodput_per_s),
+            format!("{:.1}", c.chaos_goodput_per_s),
+            format!("{:.2}", c.recovery_ratio),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_leg_recovers_capacity() {
+        // One smoke-sized in-process leg end to end: crash churn,
+        // probation re-admission, ledger drained, goodput within the
+        // bound. (Threads + sockets run via `copmul experiment E21`
+        // and the rolling-chaos CI job.)
+        let c = in_process_leg(EngineKind::Sim, "sim", true).unwrap();
+        assert!(c.completed > 0);
+        assert!(c.quarantine_events > 0, "no quarantine churn");
+        assert!(c.dequarantined > 0, "probation never re-admitted");
+        assert!(c.probes_sent >= c.dequarantined);
+        assert!(c.recovery_ratio >= 1.0 / RECOVERY_FACTOR);
+    }
+
+    #[test]
+    fn clean_leg_is_a_probation_no_op() {
+        let daemon = daemon_for(EngineKind::Sim, None).unwrap();
+        let rep = run_open_loop(&daemon, &open_loop(11, 16, 800.0, 4, 128).unwrap()).unwrap();
+        check_clean("sim", &rep).unwrap();
+        assert_eq!(daemon.scheduler().total_quarantine_events(), 0);
+        daemon.shutdown().unwrap();
+    }
+}

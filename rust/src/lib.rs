@@ -51,18 +51,24 @@
 //!   machine carved into per-job shards sized by the paper's memory
 //!   requirements, with admission control, work-stealing, and fault
 //!   recovery — per-job retries with shard-size backoff, safe-mode
-//!   final attempts, processor quarantine), a dynamic batcher
-//!   dispatching leaf products to the XLA runtime, and an always-on
-//!   serving daemon ([`coordinator::Daemon`] — seeded open-loop
-//!   arrivals, per-job deadlines, SLO-aware early shedding).
-//! * [`experiments`] — one module per paper result (E1–E19), each printing
+//!   final attempts, processor quarantine with probation-based
+//!   de-quarantine via verified canary probes, and socket worker
+//!   respawn), a dynamic batcher dispatching leaf products to the XLA
+//!   runtime, and an always-on serving daemon ([`coordinator::Daemon`]
+//!   — seeded open-loop arrivals, per-job deadlines, SLO-aware early
+//!   shedding scaled to the live processor count when the machine is
+//!   degraded).
+//! * [`experiments`] — one module per paper result (E1–E21), each printing
 //!   a `paper bound | measured | ratio` table; E15 compares the
 //!   cost-model and threaded execution engines, E16 measures the sharded
 //!   scheduler's throughput and per-job cost inflation, E17 measures
 //!   throughput and cost inflation under injected faults, E18 measures
 //!   vs per-topology predictions on both engines, E19 measures the
 //!   serving daemon's latency/goodput vs offered open-loop load and the
-//!   zero-fault per-job cost identity under that load.
+//!   zero-fault per-job cost identity under that load, E20 measures
+//!   strong scaling at fixed per-processor memory across the BFS/DFS
+//!   execution modes, and E21 measures goodput recovery under a
+//!   rolling-kill soak (worker respawn + probation de-quarantine).
 //!
 //! See `rust/DESIGN.md` for the architecture notes (including the
 //! three-backend execution-engine split) and the experiment index.

@@ -4,10 +4,10 @@
 //!
 //! ```text
 //! copmul mul <a_hex> <b_hex> [key=value ...]   multiply two hex integers
-//! copmul experiment <id|all> [--csv]           run paper experiments E1-E20
+//! copmul experiment <id|all> [--csv]           run paper experiments E1-E21
 //! copmul serve [key=value ...]                 fixed-batch coordinator workload
 //! copmul daemon [--rate=R ...]                 always-on serving, open-loop load
-//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_9.json
+//! copmul bench [--json] [--smoke]              wall-clock bench -> BENCH_10.json
 //! copmul info [artifacts=DIR]                  runtime + artifact info
 //! copmul selftest                              quick end-to-end check
 //! ```
@@ -35,7 +35,7 @@ use copmul::error::{bail, Context, Error, Result};
 use copmul::experiments;
 use copmul::metrics::fmt_u64;
 use copmul::runtime::{XlaLeaf, XlaRuntime};
-use copmul::sim::FaultConfig;
+use copmul::sim::{FaultConfig, SocketConfig};
 use copmul::util::Rng;
 use std::sync::Arc;
 
@@ -80,7 +80,7 @@ copmul — communication-optimal parallel integer multiplication (COPSIM/COPK)
 
 USAGE:
   copmul mul <a_hex> <b_hex> [key=value ...]
-  copmul experiment <E1..E20|all> [--csv] [key=value ...]
+  copmul experiment <E1..E21|all> [--csv] [key=value ...]
   copmul serve [--jobs=N] [--shards=K] [--fault-rate=R] [--daemon] [key=value ...]
   copmul daemon [--jobs=N] [--rate=R] [--arrival=A] [--deadline-ms=D] [key=value ...]
   copmul bench [--json] [--out=PATH] [--smoke] [seed=N]
@@ -101,7 +101,9 @@ ENGINES: sim = deterministic cost-model simulator (critical-path clocks);
          threads = one OS thread per simulated processor (wall-clock speedup);
          sockets = one OS worker process per group of simulated processors,
          commands and messages over Unix-domain sockets (COPMUL_SOCKET_TCP=1
-         for TCP loopback; COPMUL_SOCKET_GROUPS sets the process count).
+         for TCP loopback; COPMUL_SOCKET_GROUPS sets the process count;
+         COPMUL_SOCKET_TIMEOUT_MS bounds each reply wait, default 30000;
+         COPMUL_SOCKET_HEARTBEAT_MS turns on host-side liveness probing).
          The internal `copmul --socket-worker` entry is exec'd by the host.
 
 TOPOLOGIES: fully-connected (the paper's implicit network; default),
@@ -109,8 +111,9 @@ TOPOLOGIES: fully-connected (the paper's implicit network; default),
             hier (two-level clusters over a half-bandwidth backbone).
 
 BENCH:   wall-clock harness (engine grid, kernel-ladder table, per-base
-         leaf-width sweep, open-loop serving curve, strong-scaling sweep).
-         --json writes the BENCH_9.json artifact (--out overrides the
+         leaf-width sweep, open-loop serving curve, strong-scaling sweep,
+         self-healing rolling-kill soak).
+         --json writes the BENCH_10.json artifact (--out overrides the
          path); --smoke runs the CI-sized grid.
          COPMUL_KERNEL=(reference|packed64|generic|simd) pins the
          dispatched rung. Cost triples shown are layout-invariant;
@@ -126,6 +129,9 @@ SERVE:   fixed batch, closed-loop (submits everything, waits for all).
                     probability R from seed S (default 0 / 42); failed jobs
                     are retried with shard-size backoff and the run reports
                     injected faults, retries and quarantined processors
+         --socket-timeout-ms=T (sharded only; sockets engine) bound on any
+                    single socket reply wait (default 30000; must be > 0;
+                    COPMUL_SOCKET_TIMEOUT_MS sets the same knob)
          --daemon   forward to `copmul daemon` (open-loop serving)
 
 DAEMON:  always-on serving under seeded open-loop load: arrivals follow
@@ -146,10 +152,11 @@ DAEMON:  always-on serving under seeded open-loop load: arrivals follow
          --shards=K      concurrent shards of the shared machine (default 4)
          --queue=N       admission bound, queued+running (default 1024)
          --fault-rate=R --fault-seed=S   as in serve
+         --socket-timeout-ms=T           as in serve
          --batch-threshold=W  coalesce jobs of <= W digits on the batch
                          lane (bypasses the machine model; batched
                          results carry zero cost triples); 0 = off
-         --smoke [--json --out=PATH]     CI serving curve -> BENCH_9.json
+         --smoke [--json --out=PATH]     CI serving curve -> BENCH_10.json
 ";
 
 /// Build the leaf backend the config names.
@@ -246,6 +253,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let mut shards: Option<usize> = None;
     let mut fault_rate = 0f64;
     let mut fault_seed: Option<u64> = None;
+    let mut socket_timeout_ms: Option<u64> = None;
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("jobs=").or_else(|| a.strip_prefix("--jobs=")) {
@@ -265,6 +273,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .or_else(|| a.strip_prefix("--fault-seed="))
         {
             fault_seed = Some(v.parse().context("fault-seed")?);
+        } else if let Some(v) = a
+            .strip_prefix("socket-timeout-ms=")
+            .or_else(|| a.strip_prefix("--socket-timeout-ms="))
+        {
+            socket_timeout_ms = Some(v.parse().context("socket-timeout-ms")?);
         } else {
             rest.push(a.clone());
         }
@@ -274,15 +287,43 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         bail!("--jobs must be >= 1");
     }
     let fault = validate_fault_flags(fault_rate, fault_seed)?;
+    let socket = socket_config(socket_timeout_ms)?;
     match shards {
-        Some(k) => serve_sharded(&cfg, jobs, k, fault),
+        Some(k) => serve_sharded(&cfg, jobs, k, fault, socket),
         None => {
             if fault.is_some() {
                 bail!("--fault-rate requires the sharded scheduler (--shards=K)");
             }
+            if socket_timeout_ms.is_some() {
+                bail!(
+                    "--socket-timeout-ms requires the sharded scheduler (--shards=K); \
+                     for the per-job coordinator set COPMUL_SOCKET_TIMEOUT_MS instead"
+                );
+            }
             serve_per_job(&cfg, jobs)
         }
     }
+}
+
+/// Shared `--socket-timeout-ms` handling for `serve` and `daemon`:
+/// build the scheduler's [`SocketConfig`] with the override applied. A
+/// zero timeout would fail every socket reply wait instantly, so it is
+/// rejected here with the knob's name ([`SocketMachine::with_config`]
+/// backstops the env-var path with the same rule).
+///
+/// [`SocketMachine::with_config`]: copmul::sim::SocketMachine::with_config
+fn socket_config(timeout_ms: Option<u64>) -> Result<SocketConfig> {
+    let mut socket = SocketConfig::default();
+    match timeout_ms {
+        Some(0) => bail!(
+            "--socket-timeout-ms must be positive: a 0 timeout would fail every \
+             socket reply wait instantly (default 30000; COPMUL_SOCKET_TIMEOUT_MS \
+             sets the same knob)"
+        ),
+        Some(ms) => socket.reply_timeout = std::time::Duration::from_millis(ms),
+        None => {}
+    }
+    Ok(socket)
 }
 
 /// Shared `--fault-rate`/`--fault-seed` validation for `serve` and
@@ -355,6 +396,7 @@ fn serve_sharded(
     jobs: usize,
     shards: usize,
     fault: Option<FaultConfig>,
+    socket: SocketConfig,
 ) -> Result<()> {
     if shards == 0 {
         bail!("--shards must be >= 1");
@@ -400,10 +442,11 @@ fn serve_sharded(
             runners: shards,
             max_queue: jobs.max(1024),
             fault,
+            socket,
             ..Default::default()
         },
         leaf,
-    );
+    )?;
     println!(
         "serving {jobs} jobs on a shared {}-processor machine \
          ({shards} shards x {per_job} procs, n={}, leaf={:?}, engine={}, topology={})",
@@ -498,10 +541,11 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
     let mut queue = 1024usize;
     let mut fault_rate = 0f64;
     let mut fault_seed: Option<u64> = None;
+    let mut socket_timeout_ms: Option<u64> = None;
     let mut batch_threshold = 0usize;
     let mut smoke = false;
     let mut json = false;
-    let mut out = "BENCH_9.json".to_string();
+    let mut out = "BENCH_10.json".to_string();
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("--jobs=").or_else(|| a.strip_prefix("jobs=")) {
@@ -531,6 +575,8 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
             fault_rate = v.parse().context("fault-rate")?;
         } else if let Some(v) = a.strip_prefix("--fault-seed=") {
             fault_seed = Some(v.parse().context("fault-seed")?);
+        } else if let Some(v) = a.strip_prefix("--socket-timeout-ms=") {
+            socket_timeout_ms = Some(v.parse().context("socket-timeout-ms")?);
         } else if let Some(v) = a.strip_prefix("--batch-threshold=") {
             batch_threshold = v.parse().context("batch-threshold")?;
         } else if a == "--smoke" {
@@ -547,7 +593,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
 
     if smoke {
         // CI serving curve: both engines, Poisson + bursty legs,
-        // emitted in the BENCH_9.json `serving` section.
+        // emitted in the BENCH_10.json `serving` section.
         let bench_cfg = copmul::perf::BenchConfig {
             smoke: true,
             seed: cfg.seed,
@@ -617,6 +663,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
                 runners: shards,
                 max_queue: queue,
                 fault,
+                socket: socket_config(socket_timeout_ms)?,
                 ..Default::default()
             },
             default_deadline: (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms)),
@@ -700,7 +747,7 @@ fn cmd_daemon(args: &[String]) -> Result<()> {
 fn cmd_bench(args: &[String]) -> Result<()> {
     let mut cfg = copmul::perf::BenchConfig::default();
     let mut json = false;
-    let mut out = "BENCH_9.json".to_string();
+    let mut out = "BENCH_10.json".to_string();
     for a in args {
         if a == "--json" {
             json = true;

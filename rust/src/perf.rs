@@ -1,8 +1,8 @@
 //! `copmul bench` — the wall-clock measurement harness behind the
 //! repo's `BENCH_*.json` perf trajectory.
 //!
-//! Six sections, all recorded per run into one JSON artifact
-//! (`BENCH_9.json` by default; CI's `perf-smoke` and `serve-soak` jobs
+//! Seven sections, all recorded per run into one JSON artifact
+//! (`BENCH_10.json` by default; CI's `perf-smoke` and `serve-soak` jobs
 //! upload it and `BENCH_HISTORY.md` tracks the dated in-tree trail):
 //!
 //! * **engine grid** — end-to-end wall-clock of both execution engines
@@ -32,9 +32,18 @@
 //!   cell, the auto-selected execution mode with DFS / auto / predicted
 //!   charged bandwidth, including the memory-bound cliff rows where no
 //!   schedule fits the cap (PR 9's memory-adaptive BFS/DFS execution).
+//! * **recovery** — the E21 rolling-kill soak: goodput under sustained
+//!   processor loss vs the clean run per engine, with the self-healing
+//!   counters (quarantine events, probation re-admissions, probes,
+//!   socket worker respawns). The soak's own assertions (capacity
+//!   re-admitted, goodput within [`RECOVERY_FACTOR`]) gate the bench —
+//!   a report is only written when the machine actually self-healed.
+//!
+//! [`RECOVERY_FACTOR`]: crate::experiments::rolling_chaos::RECOVERY_FACTOR
 
 use crate::algorithms::leaf::{leaf_ref, LeafRef, SchoolLeaf, SkimLeaf};
 use crate::algorithms::{copk_mi, copsim_mi, Algorithm, ExecPolicy};
+use crate::experiments::rolling_chaos::{soak_cells, RecoveryCell};
 use crate::experiments::strong_scaling::{sweep_cells, ScalingCell};
 use crate::bignum::{self, arch, Base, Ops};
 use crate::config::EngineKind;
@@ -159,6 +168,10 @@ pub struct BenchReport {
     /// The E20 fixed-(n, M) strong-scaling sweep (memory-adaptive
     /// execution modes); infeasible cells are the memory-bound cliff.
     pub strong_scaling: Vec<ScalingCell>,
+    /// The E21 rolling-kill soak: goodput under sustained processor
+    /// loss vs clean, plus the self-healing counters (socket leg
+    /// present only when a worker binary resolves).
+    pub recovery: Vec<RecoveryCell>,
 }
 
 /// Run one multiplication end to end on an engine (mirrors the E15
@@ -484,6 +497,9 @@ pub fn run(cfg: &BenchConfig) -> Result<BenchReport> {
     // engines before recording it, so the section doubles as a
     // mode-differential wall in the perf job.
     report.strong_scaling = sweep_cells(cfg.seed)?;
+    // E21: the soak asserts capacity re-admission and the goodput
+    // bound internally — reaching this line means the machine healed.
+    report.recovery = soak_cells(cfg.smoke)?;
     Ok(report)
 }
 
@@ -607,7 +623,39 @@ impl BenchReport {
                 c.predicted_bw.map_or("-".into(), fmt_u64),
             ]);
         }
-        vec![t1, t2, t3, t4, t5, t6]
+        let mut t7 = Table::new(
+            "self-healing soak (E21: rolling kills; goodput ratio vs clean run, \
+             socket leg only with a worker binary)",
+            &[
+                "engine",
+                "offered",
+                "done",
+                "kills",
+                "quarantined",
+                "probed back",
+                "probes",
+                "respawns",
+                "clean gp/s",
+                "chaos gp/s",
+                "ratio",
+            ],
+        );
+        for c in &self.recovery {
+            t7.row(vec![
+                c.engine.into(),
+                c.offered.to_string(),
+                c.completed.to_string(),
+                c.kills.to_string(),
+                c.quarantine_events.to_string(),
+                c.dequarantined.to_string(),
+                c.probes_sent.to_string(),
+                c.respawns.to_string(),
+                format!("{:.1}", c.clean_goodput_per_s),
+                format!("{:.1}", c.chaos_goodput_per_s),
+                format!("{:.2}", c.recovery_ratio),
+            ]);
+        }
+        vec![t1, t2, t3, t4, t5, t6, t7]
     }
 
     /// Serialize to the `BENCH_*.json` schema (hand-rolled — no serde
@@ -615,7 +663,7 @@ impl BenchReport {
     pub fn to_json(&self) -> String {
         let mut s = String::with_capacity(4096);
         s.push_str(&format!(
-            "{{\n  \"bench\": 9,\n  \"kernel_selected\": \"{}\",\n  \
+            "{{\n  \"bench\": 10,\n  \"kernel_selected\": \"{}\",\n  \
              \"simd_isa\": \"{}\",\n  \"engine_grid\": [\n",
             self.kernel_selected, self.simd_isa
         ));
@@ -726,6 +774,28 @@ impl BenchReport {
                 if i + 1 < self.strong_scaling.len() { "," } else { "" },
             ));
         }
+        s.push_str("  ],\n  \"recovery\": [\n");
+        for (i, c) in self.recovery.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"engine\": \"{}\", \"offered\": {}, \"completed\": {}, \"shed\": {}, \
+                 \"kills\": {}, \"quarantine_events\": {}, \"dequarantined\": {}, \
+                 \"probes_sent\": {}, \"respawns\": {}, \"clean_goodput_per_s\": {:.1}, \
+                 \"chaos_goodput_per_s\": {:.1}, \"recovery_ratio\": {:.3}}}{}\n",
+                c.engine,
+                c.offered,
+                c.completed,
+                c.shed,
+                c.kills,
+                c.quarantine_events,
+                c.dequarantined,
+                c.probes_sent,
+                c.respawns,
+                c.clean_goodput_per_s,
+                c.chaos_goodput_per_s,
+                c.recovery_ratio,
+                if i + 1 < self.recovery.len() { "," } else { "" },
+            ));
+        }
         s.push_str("  ]\n}\n");
         s
     }
@@ -812,6 +882,23 @@ mod tests {
             predicted_bw: None,
             ops: None,
         });
+        // A synthetic recovery cell pins the E21 section's JSON/table
+        // rendering (the live soak runs in `copmul bench` and the
+        // rolling-chaos CI job).
+        report.recovery.push(RecoveryCell {
+            engine: "sockets",
+            offered: 80,
+            completed: 74,
+            shed: 4,
+            kills: 3,
+            quarantine_events: 24,
+            dequarantined: 24,
+            probes_sent: 52,
+            respawns: 3,
+            clean_goodput_per_s: 400.0,
+            chaos_goodput_per_s: 160.0,
+            recovery_ratio: 0.4,
+        });
         assert!(!report.kernels.is_empty());
         assert!(!report.leaf_sweep.is_empty());
         // Every available ladder rung shows up in the kernel table, and
@@ -827,7 +914,7 @@ mod tests {
             assert!(report.leaf_sweep.iter().any(|c| c.scheme == scheme));
         }
         let j = Json::parse(&report.to_json()).expect("BENCH json must parse");
-        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(9));
+        assert_eq!(j.get("bench").and_then(Json::as_u64), Some(10));
         assert!(j.get("kernel_selected").and_then(Json::as_str).is_some());
         assert!(j.get("kernels").and_then(Json::as_arr).is_some());
         assert!(j.get("leaf_width_sweep").and_then(Json::as_arr).is_some());
@@ -845,7 +932,11 @@ mod tests {
         assert_eq!(ss[0].get("auto_words").and_then(Json::as_u64), Some(7000));
         assert_eq!(ss[0].get("mode").and_then(Json::as_str), Some("bfs(4)"));
         assert_eq!(ss[1].get("mode").and_then(Json::as_str), Some("memory-bound"));
-        assert_eq!(report.tables().len(), 6, "strong-scaling table renders");
+        let rec = j.get("recovery").and_then(Json::as_arr).expect("recovery arr");
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec[0].get("respawns").and_then(Json::as_u64), Some(3));
+        assert_eq!(rec[0].get("engine").and_then(Json::as_str), Some("sockets"));
+        assert_eq!(report.tables().len(), 7, "recovery table renders");
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! critical-path accounting per §2.2), the real-threads executor
 //! ([`ThreadedMachine`], one OS thread per processor), and the
 //! real-network executor ([`SocketMachine`], one OS process per group
-//! of processors over length-prefixed socket frames) — plus
+//! of processors over length-prefixed socket frames, with optional
+//! heartbeat liveness and dead-group respawn for self-healing fleets)
+//! — plus
 //! [`FaultyMachine`], a deterministic seeded fault-injection wrapper
 //! over any engine (the chaos/soak layer). Above the engines,
 //! [`collectives`] provides the shared tree-structured communication

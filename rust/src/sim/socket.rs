@@ -43,6 +43,22 @@
 //! `tests/chaos_soak.rs`) — backstopped by
 //! [`SocketConfig::reply_timeout`] so a vanished worker can never hang
 //! the coordinator.
+//!
+//! ## Self-healing
+//!
+//! Capacity loss is reversible: an optional heartbeat pump
+//! ([`SocketConfig::heartbeat_interval`]) catches wedged-but-connected
+//! workers that reader-EOF never would, and
+//! [`SocketMachine::respawn_group`] replaces a dead worker process
+//! outright — same handshake on the original host listener, live
+//! workers told to dial the fresh peer listener (`Reconnect` frames),
+//! jittered exponential backoff between attempts
+//! ([`SocketConfig::respawn_backoff`]). Worker-side, mesh channels and
+//! writer threads are permanent per remote group; only the stream gets
+//! swapped, so in-flight jobs on *other* groups never notice. The
+//! respawned group returns with empty arenas and zeroed clocks — the
+//! scheduler's probation canary re-validates it before client work
+//! lands there.
 
 use super::api::{MachineApi, ProcView, SlotComputation};
 use super::machine::{MachineStats, ProcId, Slot};
@@ -105,6 +121,13 @@ pub mod wire {
         Go { addrs: Vec<String> },
         Ready,
         Shutdown,
+        /// Host-side liveness probe. The worker's command pump answers
+        /// with [`Frame::HeartbeatAck`] directly (process-level, ahead
+        /// of the per-processor queues, so a busy proc cannot delay it).
+        Heartbeat { seq: u64 },
+        /// Tell a live worker to dial a respawned peer group at `addr`
+        /// and swap the fresh stream into its mesh (respawn handshake).
+        Reconnect { group: u32, addr: String },
         // -- commands (host -> worker) --------------------------------
         Alloc { p: u32, slot: u64, data: Vec<u32> },
         Free { p: u32, slot: u64 },
@@ -139,6 +162,7 @@ pub mod wire {
         Inputs { p: u32, payloads: Vec<Vec<u32>> },
         Snapshot { p: u32, snap: WorkerSnapshot },
         BarrierClock { p: u32, clock: Clock },
+        HeartbeatAck { seq: u64 },
         // -- peer data plane (worker <-> worker) ----------------------
         PeerHello { group: u32 },
         Net { src: u32, dst: u32, clock: Clock, payload: Vec<u32> },
@@ -186,6 +210,8 @@ pub mod wire {
                 Frame::Go { .. } => 0x04,
                 Frame::Ready => 0x05,
                 Frame::Shutdown => 0x06,
+                Frame::Heartbeat { .. } => 0x07,
+                Frame::Reconnect { .. } => 0x08,
                 Frame::Alloc { .. } => 0x10,
                 Frame::Free { .. } => 0x11,
                 Frame::Replace { .. } => 0x12,
@@ -207,6 +233,7 @@ pub mod wire {
                 Frame::Inputs { .. } => 0x22,
                 Frame::Snapshot { .. } => 0x23,
                 Frame::BarrierClock { .. } => 0x24,
+                Frame::HeartbeatAck { .. } => 0x25,
                 Frame::PeerHello { .. } => 0x30,
                 Frame::Net { .. } => 0x31,
             }
@@ -243,6 +270,13 @@ pub mod wire {
                     }
                 }
                 Frame::Ready | Frame::Shutdown => {}
+                Frame::Heartbeat { seq } | Frame::HeartbeatAck { seq } => {
+                    push_u64(&mut out, *seq);
+                }
+                Frame::Reconnect { group, addr } => {
+                    push_u32(&mut out, *group);
+                    push_str_lp(&mut out, addr);
+                }
                 Frame::Alloc { p, slot, data } | Frame::Replace { p, slot, data } => {
                     push_u32(&mut out, *p);
                     push_u64(&mut out, *slot);
@@ -413,6 +447,12 @@ pub mod wire {
                 }
                 0x05 => Frame::Ready,
                 0x06 => Frame::Shutdown,
+                0x07 => Frame::Heartbeat { seq: f.u64()? },
+                0x08 => {
+                    let group = f.u32()?;
+                    let addr = f.str_lp()?;
+                    Frame::Reconnect { group, addr }
+                }
                 0x10 | 0x12 => {
                     let p = f.u32()?;
                     let slot = f.u64()?;
@@ -525,6 +565,7 @@ pub mod wire {
                     }
                 }
                 0x1E => Frame::Purge { p: f.u32()? },
+                0x25 => Frame::HeartbeatAck { seq: f.u64()? },
                 0x1F => Frame::Query { p: f.u32()? },
                 0x20 => {
                     let p = f.u32()?;
@@ -802,7 +843,18 @@ pub struct SocketConfig {
     pub transport: SocketTransport,
     /// Upper bound on any single reply wait, so a killed worker fails
     /// the call instead of hanging it (env: `COPMUL_SOCKET_TIMEOUT_MS`).
+    /// Must be positive; `with_config` rejects zero.
     pub reply_timeout: Duration,
+    /// Liveness-probe cadence on the control plane: the host sends a
+    /// `Heartbeat` frame per link per tick and marks a group dead after
+    /// three unanswered ticks. `Duration::ZERO` (the default) disables
+    /// the pump — reader-EOF detection still covers process death.
+    /// Env: `COPMUL_SOCKET_HEARTBEAT_MS`.
+    pub heartbeat_interval: Duration,
+    /// Base delay of the jittered exponential backoff between
+    /// [`SocketMachine::respawn_group`] attempts (doubles per retry).
+    /// Env: `COPMUL_SOCKET_RESPAWN_BACKOFF_MS`.
+    pub respawn_backoff: Duration,
     /// Worker executable; `None` resolves via `COPMUL_WORKER_BIN`,
     /// then the current executable and its sibling directories.
     pub worker_bin: Option<PathBuf>,
@@ -819,15 +871,22 @@ impl Default for SocketConfig {
         } else {
             SocketTransport::Unix
         };
-        let reply_timeout = std::env::var("COPMUL_SOCKET_TIMEOUT_MS")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .map(Duration::from_millis)
-            .unwrap_or(Duration::from_secs(30));
+        let ms_env = |name: &str| {
+            std::env::var(name)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .map(Duration::from_millis)
+        };
+        let reply_timeout = ms_env("COPMUL_SOCKET_TIMEOUT_MS").unwrap_or(Duration::from_secs(30));
+        let heartbeat_interval = ms_env("COPMUL_SOCKET_HEARTBEAT_MS").unwrap_or(Duration::ZERO);
+        let respawn_backoff =
+            ms_env("COPMUL_SOCKET_RESPAWN_BACKOFF_MS").unwrap_or(Duration::from_millis(50));
         SocketConfig {
             groups,
             transport,
             reply_timeout,
+            heartbeat_interval,
+            respawn_backoff,
             worker_bin: None,
         }
     }
@@ -992,9 +1051,13 @@ fn reader_loop(
     range: std::ops::Range<usize>,
     pending: PendingQueues,
     dead: Arc<AtomicBool>,
+    hb_acked: Arc<AtomicU64>,
 ) {
     loop {
         match wire::read_frame(&mut stream) {
+            Ok(wire::Frame::HeartbeatAck { seq }) => {
+                hb_acked.fetch_max(seq, Ordering::SeqCst);
+            }
             Ok(frame) => {
                 if !fulfill(frame, &range, &pending) {
                     break;
@@ -1006,6 +1069,101 @@ fn reader_loop(
     // EOF (worker exit or kill) or a corrupt link: the group is gone.
     dead.store(true, Ordering::SeqCst);
     drain_pending(&pending, &range);
+}
+
+/// Host-side heartbeat bookkeeping for one group link, shared with the
+/// pump thread (the machine swaps an entry on respawn).
+struct HbSlot {
+    tx: Sender<Vec<u8>>,
+    dead: Arc<AtomicBool>,
+    /// Last heartbeat seq sent / last ack seen on this link.
+    sent: Arc<AtomicU64>,
+    acked: Arc<AtomicU64>,
+    range: std::ops::Range<usize>,
+}
+
+type HbSlots = Arc<Mutex<Vec<HbSlot>>>;
+
+/// Number of unanswered heartbeat ticks before a link is declared dead.
+const HB_GRACE_TICKS: u64 = 3;
+
+/// The heartbeat pump: one thread per machine, ticking every
+/// `interval`. A link whose acks lag `HB_GRACE_TICKS` behind its sends
+/// is marked dead and its pending calls drained — the liveness backstop
+/// for a worker that is connected but wedged (reader EOF never fires).
+fn heartbeat_pump(slots: HbSlots, pending: PendingQueues, interval: Duration, stop: Arc<AtomicBool>) {
+    let mut seq = 0u64;
+    'pump: loop {
+        // Sleep in small slices so stop requests are honored promptly.
+        let wake = Instant::now() + interval;
+        while Instant::now() < wake {
+            if stop.load(Ordering::SeqCst) {
+                break 'pump;
+            }
+            std::thread::sleep(Duration::from_millis(5).min(interval));
+        }
+        seq += 1;
+        for slot in slots.lock().unwrap().iter() {
+            if slot.dead.load(Ordering::SeqCst) {
+                continue;
+            }
+            let sent = slot.sent.load(Ordering::SeqCst);
+            let acked = slot.acked.load(Ordering::SeqCst);
+            if sent > 0 && sent.saturating_sub(acked) >= HB_GRACE_TICKS {
+                slot.dead.store(true, Ordering::SeqCst);
+                drain_pending(&pending, &slot.range);
+                continue;
+            }
+            slot.sent.store(seq, Ordering::SeqCst);
+            let _ = slot
+                .tx
+                .send(wire::frame_bytes(&wire::Frame::Heartbeat { seq }));
+        }
+    }
+}
+
+/// Spawn the writer + reader threads for one freshly-handshaken group
+/// stream and return its link plus heartbeat slot.
+fn spawn_link(
+    s: Stream,
+    range: std::ops::Range<usize>,
+    pending: &PendingQueues,
+) -> Result<(GroupLink, HbSlot)> {
+    s.set_read_timeout(None)?;
+    let dead = Arc::new(AtomicBool::new(false));
+    let sent = Arc::new(AtomicU64::new(0));
+    let acked = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = channel::<Vec<u8>>();
+    let wstream = s.try_clone()?;
+    let writer = {
+        let dead = Arc::clone(&dead);
+        let range = range.clone();
+        let pending = Arc::clone(pending);
+        std::thread::spawn(move || writer_loop(wstream, rx, dead, range, pending))
+    };
+    let reader = {
+        let dead = Arc::clone(&dead);
+        let pending = Arc::clone(pending);
+        let range = range.clone();
+        let acked = Arc::clone(&acked);
+        std::thread::spawn(move || reader_loop(s, range, pending, dead, acked))
+    };
+    let hb = HbSlot {
+        tx: tx.clone(),
+        dead: Arc::clone(&dead),
+        sent,
+        acked,
+        range,
+    };
+    Ok((
+        GroupLink {
+            tx: Some(tx),
+            dead,
+            writer: Some(writer),
+            reader: Some(reader),
+        },
+        hb,
+    ))
 }
 
 /// The real-network execution engine (see module docs).
@@ -1029,6 +1187,16 @@ pub struct SocketMachine {
     kill_plan: Mutex<Option<(usize, u64)>>,
     dir: PathBuf,
     started: Instant,
+    /// The host accept socket, kept open past boot so respawned
+    /// workers can re-handshake on the same address.
+    listener: Listener,
+    host_addr: String,
+    /// Current peer-listener address per group (refreshed on respawn).
+    peer_addrs: Vec<String>,
+    hb_slots: HbSlots,
+    hb_stop: Option<Arc<AtomicBool>>,
+    hb_handle: Option<JoinHandle<()>>,
+    respawns: AtomicU64,
 }
 
 impl SocketMachine {
@@ -1061,6 +1229,11 @@ impl SocketMachine {
         cfg: SocketConfig,
     ) -> Result<Self> {
         assert!(p >= 1, "need at least one processor");
+        ensure!(
+            cfg.reply_timeout > Duration::ZERO,
+            "socket reply timeout must be positive (a 0 timeout would fail every reply wait \
+             instantly); set --socket-timeout-ms / COPMUL_SOCKET_TIMEOUT_MS to a positive value"
+        );
         let dir = scratch_dir()?;
         let mut children: Vec<Option<Child>> = Vec::new();
         match SocketMachine::boot(p, mem_cap, base, topo, cfg, &dir, &mut children) {
@@ -1149,7 +1322,9 @@ impl SocketMachine {
                 other => bail!("expected Listening from worker {g}, got {other:?}"),
             }
         }
-        let go = wire::Frame::Go { addrs: peer_addrs };
+        let go = wire::Frame::Go {
+            addrs: peer_addrs.clone(),
+        };
         for s in &mut streams {
             wire::write_frame(s, &go)?;
         }
@@ -1163,30 +1338,26 @@ impl SocketMachine {
         let pending: PendingQueues =
             Arc::new((0..procs).map(|_| Mutex::new(VecDeque::new())).collect());
         let mut links = Vec::with_capacity(groups);
+        let mut hb = Vec::with_capacity(groups);
         for (g, s) in streams.into_iter().enumerate() {
-            s.set_read_timeout(None)?;
-            let range = bounds[g]..bounds[g + 1];
-            let dead = Arc::new(AtomicBool::new(false));
-            let (tx, rx) = channel::<Vec<u8>>();
-            let wstream = s.try_clone()?;
-            let writer = {
-                let dead = Arc::clone(&dead);
-                let range = range.clone();
-                let pending = Arc::clone(&pending);
-                std::thread::spawn(move || writer_loop(wstream, rx, dead, range, pending))
-            };
-            let reader = {
-                let dead = Arc::clone(&dead);
-                let pending = Arc::clone(&pending);
-                std::thread::spawn(move || reader_loop(s, range, pending, dead))
-            };
-            links.push(GroupLink {
-                tx: Some(tx),
-                dead,
-                writer: Some(writer),
-                reader: Some(reader),
-            });
+            let (link, slot) = spawn_link(s, bounds[g]..bounds[g + 1], &pending)?;
+            links.push(link);
+            hb.push(slot);
         }
+        let hb_slots: HbSlots = Arc::new(Mutex::new(hb));
+        let (hb_stop, hb_handle) = if cfg.heartbeat_interval > Duration::ZERO {
+            let stop = Arc::new(AtomicBool::new(false));
+            let handle = {
+                let slots = Arc::clone(&hb_slots);
+                let pending = Arc::clone(&pending);
+                let interval = cfg.heartbeat_interval;
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || heartbeat_pump(slots, pending, interval, stop))
+            };
+            (Some(stop), Some(handle))
+        } else {
+            (None, None)
+        };
         Ok(SocketMachine {
             base,
             mem_cap,
@@ -1202,6 +1373,13 @@ impl SocketMachine {
             kill_plan: Mutex::new(None),
             dir: dir.to_path_buf(),
             started: Instant::now(),
+            listener,
+            host_addr,
+            peer_addrs,
+            hb_slots,
+            hb_stop,
+            hb_handle,
+            respawns: AtomicU64::new(0),
         })
     }
 
@@ -1308,6 +1486,166 @@ impl SocketMachine {
     pub fn arm_kill(&self, g: usize, after_cmds: u64) {
         let at = self.cmds_issued.load(Ordering::SeqCst) + after_cmds.max(1);
         *self.kill_plan.lock().unwrap() = Some((g, at));
+    }
+
+    /// Groups whose control links are currently dead.
+    pub fn dead_groups(&self) -> Vec<usize> {
+        (0..self.links.len())
+            .filter(|&g| self.links[g].dead.load(Ordering::SeqCst))
+            .collect()
+    }
+
+    /// Successful [`SocketMachine::respawn_group`] calls so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Re-spawn a dead group's worker process and splice it back into
+    /// the machine: replay the Hello/Setup/Listening/Go/Ready handshake
+    /// on the original host listener, tell every live worker to dial
+    /// the fresh peer listener (`Reconnect` frames; the rejoining
+    /// worker accepts one `PeerHello` per live peer), and stand up new
+    /// writer/reader threads with a fresh liveness flag. The group's
+    /// processors come back with empty arenas and zeroed clocks — the
+    /// scheduler's probation canary re-validates them before any client
+    /// job lands there. Retries with jittered exponential backoff
+    /// ([`SocketConfig::respawn_backoff`], doubling per attempt).
+    pub fn respawn_group(&mut self, g: usize) -> Result<()> {
+        ensure!(g < self.links.len(), "group {g}: no such worker group");
+        ensure!(
+            self.links[g].dead.load(Ordering::SeqCst),
+            "group {g}: worker is alive (respawn only replaces dead groups)"
+        );
+        // Reap whatever is left of the old process so a wedged-but-live
+        // worker cannot race its replacement.
+        if let Some(mut c) = self
+            .children
+            .lock()
+            .unwrap()
+            .get_mut(g)
+            .and_then(Option::take)
+        {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        let mut delay = self.cfg.respawn_backoff.max(Duration::from_millis(1));
+        const ATTEMPTS: u32 = 4;
+        let mut last = None;
+        for attempt in 0..ATTEMPTS {
+            match self.try_respawn(g) {
+                Ok(()) => {
+                    self.respawns.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 < ATTEMPTS {
+                // Jitter in [0.5, 1.5) from a deterministic hash of
+                // (group, attempt) — no wall clock or OS randomness, so
+                // chaos schedules stay replayable.
+                let jitter = 50 + (g as u64 * 7 + attempt as u64 * 13) % 101;
+                std::thread::sleep(delay.mul_f64(jitter as f64 / 100.0));
+                delay *= 2;
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("group {g}: respawn failed")))
+    }
+
+    /// One respawn attempt: spawn, handshake, splice. Any failure reaps
+    /// the half-born child and leaves the group dead.
+    fn try_respawn(&mut self, g: usize) -> Result<()> {
+        let bin = resolve_worker_bin(&self.cfg).ok_or_else(|| {
+            anyhow!("cannot locate the copmul worker binary (set COPMUL_WORKER_BIN)")
+        })?;
+        let live: Vec<usize> = (0..self.links.len())
+            .filter(|&h| h != g && !self.links[h].dead.load(Ordering::SeqCst))
+            .collect();
+        let mut child = Command::new(&bin)
+            .arg("--socket-worker")
+            .env("COPMUL_SOCKET_HOST", &self.host_addr)
+            .env("COPMUL_SOCKET_GROUP", g.to_string())
+            .env("COPMUL_SOCKET_DIR", &self.dir)
+            .env("COPMUL_SOCKET_REJOIN", live.len().to_string())
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .map_err(|e| anyhow!("respawning socket worker {g} ({}): {e}", bin.display()))?;
+        let handshake = (|| -> Result<Stream> {
+            let deadline = Instant::now() + Duration::from_secs(10);
+            let mut s = self.listener.accept_deadline(deadline)?;
+            s.set_read_timeout(Some(Duration::from_secs(10)))?;
+            match wire::read_frame(&mut s)? {
+                wire::Frame::Hello { group } if group as usize == g => {}
+                other => bail!("expected Hello({g}) during respawn, got {other:?}"),
+            }
+            let setup = wire::Frame::Setup {
+                procs: self.procs as u32,
+                groups: self.links.len() as u32,
+                mem_cap: self.mem_cap,
+                base_log2: self.base.log2 as u8,
+                bounds: self.bounds.iter().map(|&b| b as u32).collect(),
+            };
+            wire::write_frame(&mut s, &setup)?;
+            let addr = match wire::read_frame(&mut s)? {
+                wire::Frame::Listening { addr } => addr,
+                other => bail!("expected Listening from respawned worker {g}, got {other:?}"),
+            };
+            self.peer_addrs[g] = addr.clone();
+            // Live workers dial the fresh peer listener; the rejoining
+            // worker accepts exactly `live.len()` PeerHellos before
+            // reporting Ready.
+            for &h in &live {
+                if let Some(tx) = self.links[h].tx.as_ref() {
+                    let _ = tx.send(wire::frame_bytes(&wire::Frame::Reconnect {
+                        group: g as u32,
+                        addr: addr.clone(),
+                    }));
+                }
+            }
+            wire::write_frame(
+                &mut s,
+                &wire::Frame::Go {
+                    addrs: self.peer_addrs.clone(),
+                },
+            )?;
+            match wire::read_frame(&mut s)? {
+                wire::Frame::Ready => {}
+                other => bail!("expected Ready from respawned worker {g}, got {other:?}"),
+            }
+            Ok(s)
+        })();
+        let range = self.bounds[g]..self.bounds[g + 1];
+        let spliced = handshake.and_then(|s| {
+            drain_pending(&self.pending, &range);
+            spawn_link(s, range.clone(), &self.pending)
+        });
+        match spliced {
+            Ok((link, hb)) => {
+                for p in range {
+                    self.next_slot[p] = 1;
+                }
+                self.links[g] = link;
+                self.hb_slots.lock().unwrap()[g] = hb;
+                self.children.lock().unwrap()[g] = Some(child);
+                Ok(())
+            }
+            Err(e) => {
+                let _ = child.kill();
+                let _ = child.wait();
+                Err(e)
+            }
+        }
+    }
+
+    /// Stop the heartbeat pump (finish/Drop teardown).
+    fn stop_heartbeat(&mut self) {
+        if let Some(stop) = self.hb_stop.take() {
+            stop.store(true, Ordering::SeqCst);
+        }
+        if let Some(h) = self.hb_handle.take() {
+            let _ = h.join();
+        }
     }
 
     // ----- two-phase (enqueue now, await later) variants --------------
@@ -1454,6 +1792,7 @@ impl SocketMachine {
     /// Consumes the engine's usefulness: further [`MachineApi`] calls
     /// error or no-op.
     pub fn finish(&mut self) -> Result<ThreadedReport> {
+        self.stop_heartbeat();
         let expected = self.procs;
         // Snapshot first: it synchronizes every queue, so all replies
         // are home before the links close.
@@ -1511,6 +1850,7 @@ impl SocketMachine {
 
 impl Drop for SocketMachine {
     fn drop(&mut self) {
+        self.stop_heartbeat();
         // Kill first so blocked reader threads see EOF immediately.
         {
             let mut kids = self.children.lock().unwrap();
@@ -1931,6 +2271,11 @@ struct WorkerProc {
     error: Option<String>,
     net_tx: Vec<NetTx>,
     net_rx: Vec<Option<Receiver<NetMsg>>>,
+    /// Liveness flag of the peer group owning each global source
+    /// (`None` for in-process sources). Remote mesh channels stay open
+    /// across peer death so a respawned peer can reuse them; a blocked
+    /// recv polls this flag instead of waiting on channel disconnect.
+    down_of: Vec<Option<Arc<AtomicBool>>>,
     reply_tx: Sender<Vec<u8>>,
 }
 
@@ -2022,7 +2367,21 @@ impl WorkerProc {
     }
 
     fn recv_net(&mut self, src: usize) -> Option<NetMsg> {
-        self.net_rx[src].as_ref().and_then(|rx| rx.recv().ok())
+        let rx = self.net_rx[src].as_ref()?;
+        let down = self.down_of[src].as_ref();
+        loop {
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(m) => return Some(m),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    // Queued messages always win over the down flag: a
+                    // delivered payload outlives its sender's death.
+                    if down.map(|d| d.load(Ordering::SeqCst)).unwrap_or(false) {
+                        return None;
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return None,
+            }
+        }
     }
 
     /// Charge a message leaving this processor, then put it on the
@@ -2209,38 +2568,78 @@ pub fn socket_worker_main() -> Result<()> {
     } else {
         SocketTransport::Tcp
     };
-    let (listener, my_addr) = Listener::bind(transport, &dir, &format!("peer{group}"))?;
+    // A respawned worker binds a fresh (pid-unique) listener path —
+    // the dead predecessor's socket file may still exist.
+    let (listener, my_addr) = Listener::bind(
+        transport,
+        &dir,
+        &format!("peer{group}-{}", std::process::id()),
+    )?;
     wire::write_frame(&mut host, &wire::Frame::Listening { addr: my_addr })?;
     let addrs = match wire::read_frame(&mut host)? {
         wire::Frame::Go { addrs } => addrs,
         other => bail!("expected Go, got {other:?}"),
     };
     ensure!(addrs.len() == groups, "expected {groups} peer addresses");
-    // Peer mesh: connect to every lower group, accept from every
-    // higher one — a fixed direction per pair, so the handshake cannot
-    // deadlock.
+    // `COPMUL_SOCKET_REJOIN=<live peers>` marks a respawn handshake:
+    // every live peer dials us (the host told them to via Reconnect),
+    // so accept that many hellos instead of the boot-time mesh build.
+    let rejoin: Option<usize> = std::env::var("COPMUL_SOCKET_REJOIN")
+        .ok()
+        .and_then(|v| v.parse().ok());
     let mut peers: Vec<Option<Stream>> = (0..groups).map(|_| None).collect();
-    for (h, addr) in addrs.iter().enumerate().take(group) {
-        let mut s = Stream::connect(addr)?;
-        wire::write_frame(&mut s, &wire::Frame::PeerHello { group: group as u32 })?;
-        peers[h] = Some(s);
-    }
-    let deadline = Instant::now() + Duration::from_secs(10);
-    for _ in group + 1..groups {
-        let s = listener.accept_deadline(deadline)?;
-        s.set_read_timeout(Some(Duration::from_secs(10)))?;
-        let mut s = s;
-        match wire::read_frame(&mut s)? {
-            wire::Frame::PeerHello { group: h } => {
-                let h = h as usize;
-                ensure!(
-                    h > group && h < groups && peers[h].is_none(),
-                    "bad peer hello (group {h})"
-                );
-                s.set_read_timeout(None)?;
+    match rejoin {
+        None => {
+            // Boot-time peer mesh: connect to every lower group, accept
+            // from every higher one — a fixed direction per pair, so
+            // the handshake cannot deadlock.
+            for (h, addr) in addrs.iter().enumerate().take(group) {
+                let mut s = Stream::connect(addr)?;
+                wire::write_frame(&mut s, &wire::Frame::PeerHello { group: group as u32 })?;
                 peers[h] = Some(s);
             }
-            other => bail!("expected PeerHello, got {other:?}"),
+            let deadline = Instant::now() + Duration::from_secs(10);
+            for _ in group + 1..groups {
+                let s = listener.accept_deadline(deadline)?;
+                s.set_read_timeout(Some(Duration::from_secs(10)))?;
+                let mut s = s;
+                match wire::read_frame(&mut s)? {
+                    wire::Frame::PeerHello { group: h } => {
+                        let h = h as usize;
+                        ensure!(
+                            h > group && h < groups && peers[h].is_none(),
+                            "bad peer hello (group {h})"
+                        );
+                        s.set_read_timeout(None)?;
+                        peers[h] = Some(s);
+                    }
+                    other => bail!("expected PeerHello, got {other:?}"),
+                }
+            }
+        }
+        Some(expected) => {
+            ensure!(
+                expected < groups,
+                "rejoin peer count {expected} exceeds group count {groups}"
+            );
+            let deadline = Instant::now() + Duration::from_secs(10);
+            for _ in 0..expected {
+                let s = listener.accept_deadline(deadline)?;
+                s.set_read_timeout(Some(Duration::from_secs(10)))?;
+                let mut s = s;
+                match wire::read_frame(&mut s)? {
+                    wire::Frame::PeerHello { group: h } => {
+                        let h = h as usize;
+                        ensure!(
+                            h != group && h < groups && peers[h].is_none(),
+                            "bad rejoin peer hello (group {h})"
+                        );
+                        s.set_read_timeout(None)?;
+                        peers[h] = Some(s);
+                    }
+                    other => bail!("expected PeerHello, got {other:?}"),
+                }
+            }
         }
     }
     wire::write_frame(&mut host, &wire::Frame::Ready)?;
@@ -2248,10 +2647,68 @@ pub fn socket_worker_main() -> Result<()> {
     run_worker(host, peers, group, procs, mem_cap, base, &bounds)
 }
 
+/// Worker-side endpoint of one remote peer group, respawn-tolerant:
+/// the writer thread and mesh channels are permanent; only the stream
+/// inside `slot` (and its reader thread) is replaced on reconnect.
+struct PeerLink {
+    /// Outbound pre-framed `Net` bytes to the persistent writer thread.
+    tx: Sender<Vec<u8>>,
+    /// The live stream, if any. Writer discards frames while `None`
+    /// (their job is doomed anyway and retries after respawn).
+    slot: Arc<Mutex<Option<Stream>>>,
+    /// What blocked receivers poll ([`WorkerProc::recv_net`]).
+    down: Arc<AtomicBool>,
+    /// Bumped per reconnect so a stale reader's teardown is ignored.
+    epoch: Arc<AtomicU64>,
+    /// Inbound demux: `[src - h_lo][local dst]` senders, Arc'd so each
+    /// reconnect's fresh reader thread gets the same rows.
+    demux: Arc<Vec<Vec<Option<Sender<NetMsg>>>>>,
+    /// First global processor of the peer group.
+    h_lo: usize,
+}
+
+/// Spawn the reader thread for one (re)connected peer stream: demux
+/// inbound `Net` frames onto the local mesh; on EOF mark the peer down
+/// unless a newer reconnect has already superseded this reader.
+fn spawn_peer_reader(mut rs: Stream, link_epoch: u64, link: &PeerLink, lo: usize) {
+    let demux = Arc::clone(&link.demux);
+    let down = Arc::clone(&link.down);
+    let epoch = Arc::clone(&link.epoch);
+    let slot = Arc::clone(&link.slot);
+    let h_lo = link.h_lo;
+    std::thread::spawn(move || {
+        loop {
+            match wire::read_frame(&mut rs) {
+                Ok(wire::Frame::Net {
+                    src,
+                    dst,
+                    clock,
+                    payload,
+                }) => {
+                    let si = (src as usize).wrapping_sub(h_lo);
+                    let di = (dst as usize).wrapping_sub(lo);
+                    let tx = demux.get(si).and_then(|row| row.get(di)).and_then(Option::as_ref);
+                    match tx {
+                        Some(tx) => {
+                            let _ = tx.send((Arc::new(payload), clock));
+                        }
+                        None => break,
+                    }
+                }
+                _ => break,
+            }
+        }
+        if epoch.load(Ordering::SeqCst) == link_epoch {
+            down.store(true, Ordering::SeqCst);
+            *slot.lock().unwrap() = None;
+        }
+    });
+}
+
 /// Steady-state service loop of one worker process.
 fn run_worker(
     host: Stream,
-    peers: Vec<Option<Stream>>,
+    mut peers: Vec<Option<Stream>>,
     group: usize,
     procs: usize,
     mem_cap: u64,
@@ -2261,6 +2718,7 @@ fn run_worker(
     let lo = bounds[group];
     let hi = bounds[group + 1];
     let locals = hi - lo;
+    let groups = bounds.len() - 1;
 
     // Reply path to the host: processors enqueue pre-framed bytes, one
     // writer thread owns the stream's write half.
@@ -2292,52 +2750,55 @@ fn run_worker(
         }
     }
 
-    // Peer links: a writer thread per peer (outbound Net frames) and a
-    // reader thread per peer that demuxes inbound Net frames onto the
-    // local mesh rows owned by that peer's processors.
-    let mut peer_tx: Vec<Option<Sender<Vec<u8>>>> = (0..peers.len()).map(|_| None).collect();
-    let mut peer_threads = Vec::new();
-    for (h, slot) in peers.into_iter().enumerate() {
-        let Some(s) = slot else { continue };
-        let (tx, rx) = channel::<Vec<u8>>();
-        peer_tx[h] = Some(tx);
-        let mut w = s.try_clone()?;
-        peer_threads.push(std::thread::spawn(move || {
-            while let Ok(buf) = rx.recv() {
-                if w.write_all(&buf).and_then(|_| w.flush()).is_err() {
-                    return;
-                }
-            }
-        }));
+    // Peer links: one per remote group, stream or not. The writer
+    // thread and the demux rows are permanent (so mesh channels survive
+    // a peer death); only the stream in `slot` comes and goes. Remote
+    // demux rows CLONE the `to_local` senders — the masters stay alive
+    // in `to_local`, so a reconnect's fresh reader reuses them.
+    let mut peer_links: Vec<Option<PeerLink>> = Vec::with_capacity(groups);
+    let mut writer_threads = Vec::new();
+    for h in 0..groups {
+        if h == group {
+            peer_links.push(None);
+            continue;
+        }
         let h_lo = bounds[h];
         let h_hi = bounds[h + 1];
-        let demux: NetTxMesh = (h_lo..h_hi).map(|s| std::mem::take(&mut to_local[s])).collect();
-        let mut rs = s;
-        peer_threads.push(std::thread::spawn(move || {
-            loop {
-                match wire::read_frame(&mut rs) {
-                    Ok(wire::Frame::Net {
-                        src,
-                        dst,
-                        clock,
-                        payload,
-                    }) => {
-                        let si = (src as usize).wrapping_sub(h_lo);
-                        let di = (dst as usize).wrapping_sub(lo);
-                        let tx = demux.get(si).and_then(|row| row.get(di)).and_then(Option::as_ref);
-                        match tx {
-                            Some(tx) => {
-                                let _ = tx.send((Arc::new(payload), clock));
-                            }
-                            None => break,
+        let demux: Vec<Vec<Option<Sender<NetMsg>>>> =
+            (h_lo..h_hi).map(|s| to_local[s].clone()).collect();
+        let (tx, rx) = channel::<Vec<u8>>();
+        let slot = Arc::new(Mutex::new(None::<Stream>));
+        let down = Arc::new(AtomicBool::new(true));
+        {
+            let slot = Arc::clone(&slot);
+            let down = Arc::clone(&down);
+            writer_threads.push(std::thread::spawn(move || {
+                while let Ok(buf) = rx.recv() {
+                    let mut guard = slot.lock().unwrap();
+                    if let Some(s) = guard.as_mut() {
+                        if s.write_all(&buf).and_then(|_| s.flush()).is_err() {
+                            *guard = None;
+                            down.store(true, Ordering::SeqCst);
                         }
                     }
-                    _ => break,
                 }
-            }
-            // Dropping the demux senders fails any local processor
-            // still blocked on a message from this (now dead) peer.
-        }));
+            }));
+        }
+        let link = PeerLink {
+            tx,
+            slot,
+            down,
+            epoch: Arc::new(AtomicU64::new(0)),
+            demux: Arc::new(demux),
+            h_lo,
+        };
+        if let Some(s) = peers[h].take() {
+            let rs = s.try_clone()?;
+            *link.slot.lock().unwrap() = Some(s);
+            link.down.store(false, Ordering::SeqCst);
+            spawn_peer_reader(rs, 0, &link, lo);
+        }
+        peer_links.push(Some(link));
     }
 
     // Spawn the processor command loops.
@@ -2357,10 +2818,20 @@ fn run_worker(
                         None => NetTx::None,
                     }
                 } else {
-                    match &peer_tx[dg] {
-                        Some(tx) => NetTx::Remote(tx.clone()),
+                    match &peer_links[dg] {
+                        Some(link) => NetTx::Remote(link.tx.clone()),
                         None => NetTx::None,
                     }
+                }
+            })
+            .collect();
+        let down_of: Vec<Option<Arc<AtomicBool>>> = (0..procs)
+            .map(|src| {
+                let sg = group_of_bounds(bounds, src);
+                if sg == group {
+                    None
+                } else {
+                    peer_links[sg].as_ref().map(|l| Arc::clone(&l.down))
                 }
             })
             .collect();
@@ -2379,6 +2850,7 @@ fn run_worker(
             error: None,
             net_tx: net_tx_row,
             net_rx: std::mem::take(rx_row),
+            down_of,
             reply_tx: reply_tx.clone(),
         };
         let (ctx, crx) = channel::<WCmd>();
@@ -2387,21 +2859,50 @@ fn run_worker(
     }
 
     // Command pump: the process's main loop. EOF or Shutdown ends it.
+    // Heartbeats are acked here (process-level liveness, ahead of any
+    // per-processor queue); Reconnect splices a respawned peer's fresh
+    // stream into the permanent link without touching the mesh.
     let mut host_r = host;
     loop {
         let frame = match wire::read_frame(&mut host_r) {
             Ok(f) => f,
             Err(_) => break,
         };
-        if matches!(frame, wire::Frame::Shutdown) {
-            break;
-        }
-        let Some((p, cmd)) = to_wcmd(frame) else { break };
-        if p < lo || p >= hi {
-            break;
-        }
-        if cmd_txs[p - lo].send(cmd).is_err() {
-            break;
+        match frame {
+            wire::Frame::Shutdown => break,
+            wire::Frame::Heartbeat { seq } => {
+                let _ = reply_tx.send(wire::frame_bytes(&wire::Frame::HeartbeatAck { seq }));
+            }
+            wire::Frame::Reconnect { group: h, addr } => {
+                let Some(link) = peer_links.get(h as usize).and_then(Option::as_ref) else {
+                    break;
+                };
+                // Dial the respawned peer. A failed dial leaves the
+                // link down; the host's next respawn attempt sends a
+                // fresh Reconnect.
+                if let Ok(mut s) = Stream::connect(&addr) {
+                    let hello = wire::Frame::PeerHello {
+                        group: group as u32,
+                    };
+                    if wire::write_frame(&mut s, &hello).is_ok() {
+                        if let Ok(rs) = s.try_clone() {
+                            let e = link.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+                            *link.slot.lock().unwrap() = Some(s);
+                            link.down.store(false, Ordering::SeqCst);
+                            spawn_peer_reader(rs, e, link, lo);
+                        }
+                    }
+                }
+            }
+            frame => {
+                let Some((p, cmd)) = to_wcmd(frame) else { break };
+                if p < lo || p >= hi {
+                    break;
+                }
+                if cmd_txs[p - lo].send(cmd).is_err() {
+                    break;
+                }
+            }
         }
     }
     drop(cmd_txs);
@@ -2410,6 +2911,7 @@ fn run_worker(
     }
     drop(reply_tx);
     let _ = host_writer.join();
+    drop(writer_threads);
     // Peer threads are reaped by process exit.
     Ok(())
 }
@@ -2541,6 +3043,12 @@ mod tests {
                     words: 8,
                     msgs: 7,
                 },
+            },
+            Frame::Heartbeat { seq: 7 },
+            Frame::HeartbeatAck { seq: u64::MAX },
+            Frame::Reconnect {
+                group: 1,
+                addr: "unix:/tmp/copmul-sock-1/peer1-4242.sock".into(),
             },
             Frame::PeerHello { group: 0 },
             Frame::Net {

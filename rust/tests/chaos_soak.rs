@@ -17,6 +17,13 @@
 //!    reply wait is bounded), the scheduler quarantines the dead
 //!    processors and completes every job on the survivors, and
 //!    teardown reports the loss instead of masking it.
+//! 5. **Self-healing (ISSUE 10)** — under a *rolling* kill schedule the
+//!    live ledger never covers the whole machine (liveness wall),
+//!    probation + respawn restore full capacity after every storm, the
+//!    probe/de-quarantine schedule replays bit-identically from the
+//!    same seed, and probe traffic never perturbs a client job's cost
+//!    triple (the zero-fault differential — and with it the DFS golden
+//!    table in `tests/golden_costs.rs` — stays byte-untouched).
 //!
 //! The corpus (sizes, processor requests, scheme mix) is seeded, so a
 //! failure names a reproducible fleet; the exact interleaving of jobs
@@ -35,7 +42,7 @@ use copmul::bignum::{mul, Base, Ops};
 use copmul::config::EngineKind;
 use copmul::coordinator::{execute_on, JobSpec, Scheduler, SchedulerConfig};
 use copmul::sim::{
-    FaultConfig, Machine, MachineApi, Seq, SocketConfig, SocketMachine, TopologyKind,
+    FaultConfig, FaultKind, Machine, MachineApi, Seq, SocketConfig, SocketMachine, TopologyKind,
 };
 use copmul::util::prop::cases;
 use copmul::util::Rng;
@@ -355,6 +362,222 @@ fn kill_chaos_scheduler_quarantines_dead_worker_and_recovers() {
         sched.shutdown().is_err(),
         "shutdown must surface the killed worker at teardown"
     );
+}
+
+/// Rolling-kill liveness wall (ISSUE 10): alternate SIGKILLs over the
+/// two worker groups with full probation recovery between storms. At
+/// every sampled point the live ledger keeps at least one processor in
+/// service (here: the whole surviving group), probation + respawn
+/// restore ALL capacity within a bounded number of cycles, and after
+/// the final storm the fleet tears down clean — every worker process
+/// is live again, so `shutdown` has no loss to report.
+#[test]
+fn rolling_kill_liveness_wall_and_full_recovery() {
+    let cfg = SchedulerConfig {
+        procs: 8,
+        runners: 2,
+        engine: EngineKind::Sockets,
+        socket: test_socket_cfg(),
+        max_attempts: 5,
+        quarantine_after: 1,
+        probation_successes: 1,
+        ..Default::default()
+    };
+    let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
+    let mut rng = Rng::new(0x11FE);
+    let rounds = (cases(48) / 24).clamp(2, 4) as usize;
+    for round in 0..rounds {
+        let dead_group = round % 2;
+        sched.kill_socket_worker(dead_group).unwrap();
+        // Long job first: it pins the lowest free shard, forcing the
+        // short job onto the other group — one of the two hits the
+        // dead shard deterministically whichever group died.
+        let a = rng.digits(2048, 16);
+        let b = rng.digits(2048, 16);
+        let want_long = reference_product(&a, &b);
+        let mut spec = JobSpec::new(round as u64 * 2, a, b);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        let long_rx = sched.submit(spec).unwrap();
+        let a = rng.digits(128, 16);
+        let b = rng.digits(128, 16);
+        let want_hit = reference_product(&a, &b);
+        let mut spec = JobSpec::new(round as u64 * 2 + 1, a, b);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        let hit_rx = sched.submit(spec).unwrap();
+        assert_eq!(
+            long_rx.recv().unwrap().expect("job lost in round").product,
+            want_long,
+            "round {round}: long job product"
+        );
+        assert_eq!(
+            hit_rx.recv().unwrap().expect("job lost in round").product,
+            want_hit,
+            "round {round}: dead-shard job product"
+        );
+        // The storm quarantined the dead group — and ONLY the dead
+        // group: the liveness wall holds (the surviving group's four
+        // processors stay in service; never below 1 live proc).
+        let q = sched.quarantined_proc_ids();
+        assert!(!q.is_empty(), "round {round}: kill never quarantined");
+        assert!(
+            sched.live_procs() >= 4,
+            "round {round}: live ledger fell to {} — the wall is breached",
+            sched.live_procs()
+        );
+        // Recovery: probation respawns the dead group and probes every
+        // quarantined processor back within a bounded cycle budget.
+        let mut cycles = 0;
+        while sched.quarantined_procs() > 0 {
+            sched.probe_quarantined();
+            cycles += 1;
+            assert!(
+                cycles <= 64,
+                "round {round}: probation failed to drain the ledger"
+            );
+        }
+        assert_eq!(sched.live_procs(), 8, "round {round}: capacity not restored");
+        assert!(
+            sched.socket_worker_pids().iter().all(Option::is_some),
+            "round {round}: a worker group is still dead after recovery"
+        );
+        // Post-recovery: the re-admitted shard serves verified work.
+        let a = rng.digits(64, 16);
+        let b = rng.digits(64, 16);
+        let want = reference_product(&a, &b);
+        let mut spec = JobSpec::new(1000 + round as u64, a, b);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        assert_eq!(sched.submit_blocking(spec).unwrap().product, want);
+    }
+    assert!(
+        sched.stats.respawns.load(std::sync::atomic::Ordering::Relaxed) >= rounds as u64,
+        "fewer respawns than kill rounds"
+    );
+    // Every worker is alive again, so teardown is clean — the inverse
+    // of the kill test's must-report-the-loss assertion.
+    sched.shutdown().expect("healed fleet must tear down clean");
+}
+
+/// Probation replay-determinism (ISSUE 10): a single-runner scheduler
+/// with a seeded crash-only plan, probed to a drained ledger after
+/// every job, produces a bit-identical trace twice — quarantine ids,
+/// probe cycle re-admission counts, per-job costs and attempts, and
+/// the monotone counters all replay. `max_attempts = 2` with
+/// `quarantine_after = 1` caps quarantines at one shard per job, so
+/// the drain loop (this thread) is the only prober and the schedule
+/// is fully deterministic.
+#[test]
+fn probation_schedule_is_reproducible() {
+    let run = || {
+        let cfg = SchedulerConfig {
+            procs: 8,
+            runners: 1,
+            engine: EngineKind::Sim,
+            fault: Some(FaultConfig::new(0x9E6, 4e-3).only(&[FaultKind::Crash])),
+            max_attempts: 2,
+            quarantine_after: 1,
+            probation_successes: 2,
+            ..Default::default()
+        };
+        let sched = Scheduler::start(cfg, leaf_ref(SchoolLeaf)).unwrap();
+        let mut rng = Rng::new(0x9E6D);
+        let mut trace: Vec<String> = Vec::new();
+        for id in 0..8u64 {
+            let a = rng.digits(128, 16);
+            let b = rng.digits(128, 16);
+            let mut spec = JobSpec::new(id, a, b);
+            spec.procs = 4;
+            spec.algo = Some(Algorithm::Copsim);
+            let res = sched.submit_blocking(spec).unwrap();
+            trace.push(format!(
+                "job {id}: attempts={} cost={} q={:?}",
+                res.attempts,
+                res.cost,
+                sched.quarantined_proc_ids()
+            ));
+            let mut cycles = 0;
+            while sched.quarantined_procs() > 0 {
+                let back = sched.probe_quarantined();
+                trace.push(format!("job {id}: probe cycle {cycles} readmitted {back}"));
+                cycles += 1;
+                assert!(cycles <= 32, "probation failed to drain after job {id}");
+            }
+        }
+        let events = sched.total_quarantine_events();
+        let probes = sched.stats.probes_sent.load(std::sync::atomic::Ordering::Relaxed);
+        let back = sched
+            .stats
+            .procs_dequarantined
+            .load(std::sync::atomic::Ordering::Relaxed);
+        assert!(events > 0, "crash plan never quarantined — vacuous replay");
+        assert_eq!(events, back, "drained ledger: every event probed back");
+        sched.shutdown().unwrap();
+        (trace, events, probes, back)
+    };
+    let (ta, ea, pa, ba) = run();
+    let (tb, eb, pb, bb) = run();
+    assert_eq!(ta, tb, "probe/de-quarantine schedule must replay bit-identically");
+    assert_eq!((ea, pa, ba), (eb, pb, bb), "recovery counters must replay");
+}
+
+/// Probe cost-invisibility (ISSUE 10, decision 16): aggressive probe
+/// cycles between client jobs never perturb a zero-fault job's cost
+/// triple — each one stays bit-identical to a dedicated fault-free
+/// machine, exactly as in the no-probation soak above. This is the
+/// zero-fault differential the probation machinery must leave
+/// byte-untouched (the DFS golden table of `tests/golden_costs.rs`
+/// pins the same property on the dedicated-machine side).
+#[test]
+fn probation_probes_never_perturb_zero_fault_costs() {
+    let cfg = SchedulerConfig {
+        procs: 8,
+        runners: 1,
+        engine: EngineKind::Sim,
+        fault: Some(FaultConfig::new(0xF00D, 2e-3).only(&[FaultKind::Crash])),
+        max_attempts: 2,
+        quarantine_after: 1,
+        probation_successes: 2,
+        ..Default::default()
+    };
+    let sched = Scheduler::start(cfg.clone(), leaf_ref(SchoolLeaf)).unwrap();
+    let mut rng = Rng::new(0x1D);
+    let mut identity_checked = 0;
+    for id in 0..10u64 {
+        let a = rng.digits(128, 16);
+        let b = rng.digits(128, 16);
+        let want = reference_product(&a, &b);
+        let mut spec = JobSpec::new(id, a, b);
+        spec.procs = 4;
+        spec.algo = Some(Algorithm::Copsim);
+        let res = sched.submit_blocking(spec.clone()).unwrap();
+        assert_eq!(res.product, want, "job {id} product under probation churn");
+        // The daemon pump's worst case: probe storms between jobs
+        // (no-ops whenever the ledger is empty).
+        for _ in 0..4 {
+            sched.probe_quarantined();
+        }
+        if res.faults_survived == 0 {
+            let shard = res.shard.clone().expect("scheduler results carry shards");
+            let mut solo = Machine::new(shard.len(), cfg.mem_cap, cfg.base);
+            let seq = Seq::range(shard.len());
+            let leaf = leaf_ref(SchoolLeaf);
+            execute_on(&mut solo, &cfg.time_model, &spec, &seq, &leaf).unwrap();
+            assert_eq!(
+                res.cost,
+                solo.critical(),
+                "job {id}: probe traffic perturbed a zero-fault cost triple"
+            );
+            identity_checked += 1;
+        }
+    }
+    assert!(identity_checked > 0, "no zero-fault job to check — vacuous");
+    assert!(
+        sched.stats.probes_sent.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "no probe ever ran between jobs — vacuous"
+    );
+    sched.shutdown().unwrap();
 }
 
 /// Determinism of the seeded plan itself: two identical single-runner

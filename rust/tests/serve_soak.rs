@@ -359,6 +359,14 @@ fn batching_lane_keeps_accounting_balance() {
     .unwrap();
     balance(&large);
     assert_eq!(large.completed, large.offered);
+    // Fault-free serving must report a silent recovery story: the
+    // probation pump runs, but with an empty quarantine ledger every
+    // cycle is a strict no-op (ISSUE 10 degraded-mode counters).
+    assert_eq!(
+        (large.quarantined, large.dequarantined, large.probes_sent, large.respawns),
+        (0, 0, 0, 0),
+        "recovery counters must stay zero on a healthy machine"
+    );
     assert_eq!(
         d.stats.batched_completed.load(Ordering::Relaxed),
         jobs,

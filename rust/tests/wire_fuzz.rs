@@ -74,6 +74,16 @@ fn frame_corpus() -> Vec<wire::Frame> {
         },
         wire::Frame::Ready,
         wire::Frame::Shutdown,
+        // Self-healing control plane (ISSUE 10): liveness pings and the
+        // respawn splice ride the same codec, so every wall below —
+        // truncation sweep, opcode/garbage rejection, mutation fuzz,
+        // stream prefix — covers them too.
+        wire::Frame::Heartbeat { seq: 42 },
+        wire::Frame::HeartbeatAck { seq: u64::MAX },
+        wire::Frame::Reconnect {
+            group: 3,
+            addr: "/tmp/copw-respawn-3".into(),
+        },
         wire::Frame::Alloc {
             p: 3,
             slot: 9,
